@@ -1,0 +1,55 @@
+//! The designer's view (paper §5.1, Figure 3): given a fixed collection
+//! of n vectors, how should it be split into q classes of k vectors?
+//! Sweeps k at constant n = k·q and prints error rate, relative
+//! complexity, and memory use side by side — reproducing the paper's
+//! observation that the trade-off is "more about complexity vs.
+//! precision of the answer than about error rate".
+//!
+//! Run: `cargo run --release --example design_tradeoff`
+
+use amsearch::eval::{class_selection_trials, PatternModel, TrialConfig};
+use amsearch::memory::StorageRule;
+use amsearch::metrics::CostModel;
+
+fn main() {
+    let d = 128usize;
+    let c = 8.0f64;
+    let n = 16_384usize;
+    let trials = 4_000;
+
+    println!("fixed n = {n}, d = {d}, c = {c}  (paper Figure 3 setup)\n");
+    println!(
+        "{:>6} {:>6} {:>12} {:>12} {:>14} {:>12}",
+        "k", "q", "error_rate", "rel_cost", "candidates", "memory_MB"
+    );
+    for k in [64usize, 128, 256, 512, 1024, 2048, 4096, 8192] {
+        let q = n / k;
+        let cfg = TrialConfig {
+            d,
+            k,
+            q,
+            model: PatternModel::Sparse { ones: c },
+            alpha: None,
+            rule: StorageRule::Sum,
+        };
+        let r = class_selection_trials(cfg, trials, 4, 42);
+        let model =
+            CostModel { effective_dim: c as u64, q: q as u64, k: k as u64, n: n as u64 };
+        println!(
+            "{:>6} {:>6} {:>12.4} {:>12.4} {:>14} {:>12.1}",
+            k,
+            q,
+            r.error_rate(),
+            model.relative(1),
+            k, // candidates returned to the final scan at p=1
+            (q * d * d * 4) as f64 / 1e6,
+        );
+    }
+    println!(
+        "\nreading the table: small k -> more classes (higher scoring cost,\n\
+         more memory) but a smaller candidate set; large k -> cheap scoring\n\
+         but the 'answer' is a whole class of {} candidates. Error rate stays\n\
+         the same order across the sweep — exactly the paper's point.",
+        8192
+    );
+}

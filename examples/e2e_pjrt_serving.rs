@@ -1,0 +1,154 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real workload:
+//!
+//!   Layer 1  Pallas class-score kernel (AOT, interpret mode)
+//!   Layer 2  JAX graph lowered to HLO text by `make artifacts`
+//!   Layer 3  this rust coordinator: dynamic batcher + PJRT workers
+//!
+//! Builds a 16k-vector SIFT-like index at the AOT shape (d=128, q=64),
+//! loads the `class_scores` artifact through PJRT, serves batched
+//! concurrent requests through the coordinator, and reports
+//! latency/throughput/recall — then repeats with the native backend and
+//! cross-checks that both backends return identical neighbors.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pjrt_serving`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::Recall;
+use amsearch::runtime::Backend;
+use amsearch::util::concurrent_map;
+
+struct RunReport {
+    backend: &'static str,
+    qps: f64,
+    recall: f64,
+    p50_us: f64,
+    p95_us: f64,
+    mean_batch: f64,
+    neighbors: Vec<u32>,
+}
+
+fn run_backend(
+    backend: Backend,
+    artifacts_dir: Option<PathBuf>,
+    index: Arc<AmIndex>,
+    wl: &amsearch::data::Workload,
+    passes: usize,
+) -> amsearch::Result<RunReport> {
+    let factory = EngineFactory { index, backend, artifacts_dir };
+    let config = CoordinatorConfig {
+        max_batch: 8, // matches the AOT batch size
+        max_wait_us: 300,
+        workers: 2,
+        queue_depth: 512,
+    };
+    let server = Arc::new(SearchServer::start(factory, config)?);
+    let total = wl.queries.len() * passes;
+    let started = Instant::now();
+    let results = concurrent_map(total, 16, |i| {
+        let qi = i % wl.queries.len();
+        let resp = server.search(wl.queries.get(qi).to_vec(), 0).expect("search");
+        (qi, resp.neighbor)
+    });
+    let elapsed = started.elapsed();
+    let mut recall = Recall::new();
+    let mut neighbors = vec![u32::MAX; wl.queries.len()];
+    for (qi, nb) in results {
+        recall.record(nb == wl.ground_truth[qi]);
+        neighbors[qi] = nb;
+    }
+    let m = server.metrics();
+    let report = RunReport {
+        backend: if backend == Backend::Pjrt { "pjrt" } else { "native" },
+        qps: total as f64 / elapsed.as_secs_f64(),
+        recall: recall.value(),
+        p50_us: m.latency.quantile_ns(0.5) as f64 / 1e3,
+        p95_us: m.latency.quantile_ns(0.95) as f64 / 1e3,
+        mean_batch: m.mean_batch_size(),
+        neighbors,
+    };
+    server.shutdown();
+    Ok(report)
+}
+
+fn main() -> amsearch::Result<()> {
+    println!("=== E2E: 3-layer stack on a SIFT-like serving workload ===\n");
+
+    // workload + index at the AOT artifact shape (d=128, q=64)
+    let mut rng = Rng::new(42);
+    let wl = clustered_workload(ClusteredSpec::sift_like(), 16_384, 128, &mut rng);
+    let params = IndexParams { n_classes: 64, top_p: 4, ..Default::default() };
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng)?);
+    println!(
+        "index: n={} d={} q={} k={}  bank={}MB  (top_p=4 default)",
+        index.len(),
+        index.dim(),
+        64,
+        index.len() / 64,
+        index.bank().stacked().len() * 4 / 1_000_000
+    );
+
+    let artifacts = PathBuf::from("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").exists();
+    if !have_artifacts {
+        println!("\nWARNING: artifacts/manifest.json missing — run `make artifacts`.");
+        println!("Running native backend only.\n");
+    }
+
+    let native = run_backend(Backend::Native, None, index.clone(), &wl, 4)?;
+    let mut reports = vec![&native];
+
+    let pjrt = if have_artifacts {
+        Some(run_backend(
+            Backend::Pjrt,
+            Some(artifacts),
+            index.clone(),
+            &wl,
+            4,
+        )?)
+    } else {
+        None
+    };
+    if let Some(p) = &pjrt {
+        reports.push(p);
+    }
+
+    println!(
+        "\n{:<8} {:>10} {:>10} {:>12} {:>12} {:>11}",
+        "backend", "qps", "recall@1", "p50 latency", "p95 latency", "mean batch"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>10.0} {:>10.4} {:>10.1}us {:>10.1}us {:>11.2}",
+            r.backend, r.qps, r.recall, r.p50_us, r.p95_us, r.mean_batch
+        );
+    }
+
+    if let Some(p) = &pjrt {
+        let agree = native
+            .neighbors
+            .iter()
+            .zip(&p.neighbors)
+            .filter(|(a, b)| a == b)
+            .count();
+        println!(
+            "\nbackend agreement: {agree}/{} neighbors identical",
+            native.neighbors.len()
+        );
+        assert_eq!(
+            agree,
+            native.neighbors.len(),
+            "PJRT and native backends must return identical results"
+        );
+        println!("E2E OK: Pallas->JAX->HLO->PJRT and native paths agree exactly.");
+    }
+    Ok(())
+}

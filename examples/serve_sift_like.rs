@@ -1,0 +1,83 @@
+//! Serving demo: the full coordinator (dynamic batcher + worker pool)
+//! over a SIFT-like collection with the native scorer, under concurrent
+//! client load.  Reports throughput, latency percentiles, batching
+//! efficiency, recall, and the paper's per-request cost accounting.
+//!
+//! Run: `cargo run --release --example serve_sift_like`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::Recall;
+use amsearch::runtime::Backend;
+use amsearch::util::concurrent_map;
+
+fn main() -> amsearch::Result<()> {
+    let mut rng = Rng::new(42);
+    let wl = clustered_workload(ClusteredSpec::sift_like(), 16_384, 256, &mut rng);
+    let params = IndexParams { n_classes: 64, top_p: 4, ..Default::default() };
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng)?);
+    println!(
+        "index ready: n={} d={} q={}, serving with native scorer",
+        index.len(),
+        index.dim(),
+        64
+    );
+
+    let factory = EngineFactory {
+        index: index.clone(),
+        backend: Backend::Native,
+        artifacts_dir: None,
+    };
+    let config = CoordinatorConfig {
+        max_batch: 8,
+        max_wait_us: 200,
+        workers: 2,
+        queue_depth: 512,
+    };
+    let server = Arc::new(SearchServer::start(factory, config)?);
+
+    // 16 concurrent client streams, 4 passes over the query set
+    let streams = 16usize;
+    let total = wl.queries.len() * 4;
+    let started = Instant::now();
+    let hits = concurrent_map(total, streams, |i| {
+        let qi = i % wl.queries.len();
+        let resp = server.search(wl.queries.get(qi).to_vec(), 0).expect("search");
+        resp.neighbor == wl.ground_truth[qi]
+    });
+    let elapsed = started.elapsed();
+
+    let mut recall = Recall::new();
+    for h in hits {
+        recall.record(h);
+    }
+    let m = server.metrics();
+    println!(
+        "\nserved {} requests in {:.3}s  ->  {:.0} qps ({} client streams)",
+        total,
+        elapsed.as_secs_f64(),
+        total as f64 / elapsed.as_secs_f64(),
+        streams
+    );
+    println!("recall@1 (p=4)     : {:.4}", recall.value());
+    println!("end-to-end latency : {}", m.latency.summary());
+    println!("batch service time : {}", m.service.summary());
+    println!(
+        "batching           : {} batches, mean size {:.2}",
+        m.batches,
+        m.mean_batch_size()
+    );
+    println!(
+        "paper cost model   : {:.0} ops/search = {:.3} of exhaustive (n*d = {})",
+        m.ops.per_search(),
+        m.ops.per_search() / (index.len() * index.dim()) as f64,
+        index.len() * index.dim()
+    );
+    server.shutdown();
+    Ok(())
+}

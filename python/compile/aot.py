@@ -1,0 +1,163 @@
+"""AOT compile path: lower L2 graphs to HLO text + manifest for rust.
+
+HLO *text* (NOT ``lowered.compile()`` / ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla``
+0.1.6 crate links) rejects with ``proto.id() <= INT_MAX``.  The HLO text
+parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (graph, shape-config) pair plus
+``manifest.json`` describing every artifact's operand/result shapes, which
+``rust/src/runtime/artifacts.rs`` consumes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default shape configurations built by `make artifacts`.  Each entry
+# yields a class_scores and a class_distances artifact.  Keep this list
+# small: the rust runtime compiles each at startup.
+#   d: vector dimension, q: number of classes, b: AOT batch size,
+#   k: class size for the candidate-scan graph.
+DEFAULT_CONFIGS = (
+    {"d": 128, "q": 64, "b": 8, "k": 256},   # quickstart / SIFT-like n=16k
+    {"d": 64, "q": 32, "b": 8, "k": 512},    # dense-synthetic n=16k
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_class_scores(d: int, q: int, b: int) -> str:
+    lowered = jax.jit(model.class_scores_fn).lower(_spec((q, d, d)), _spec((b, d)))
+    return to_hlo_text(lowered)
+
+
+def lower_class_distances(d: int, k: int, b: int) -> str:
+    lowered = jax.jit(model.class_distances_fn).lower(_spec((k, d)), _spec((b, d)))
+    return to_hlo_text(lowered)
+
+
+def lower_build_bank(d: int, q: int, k: int) -> str:
+    lowered = jax.jit(model.build_bank_fn).lower(_spec((q, k, d)))
+    return to_hlo_text(lowered)
+
+
+def build_artifacts(configs, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for cfg in configs:
+        d, q, b, k = cfg["d"], cfg["q"], cfg["b"], cfg["k"]
+
+        name = f"class_scores_d{d}_q{q}_b{b}"
+        text = lower_class_scores(d, q, b)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "kind": "class_scores",
+            "file": path,
+            "d": d, "q": q, "b": b,
+            "inputs": [
+                {"shape": [q, d, d], "dtype": "f32"},
+                {"shape": [b, d], "dtype": "f32"},
+            ],
+            "outputs": [{"shape": [b, q], "dtype": "f32"}],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+
+        name = f"class_distances_d{d}_k{k}_b{b}"
+        text = lower_class_distances(d, k, b)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "kind": "class_distances",
+            "file": path,
+            "d": d, "k": k, "b": b,
+            "inputs": [
+                {"shape": [k, d], "dtype": "f32"},
+                {"shape": [b, d], "dtype": "f32"},
+            ],
+            "outputs": [{"shape": [b, k], "dtype": "f32"}],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+
+        name = f"build_bank_d{d}_q{q}_k{k}"
+        text = lower_build_bank(d, q, k)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "kind": "build_bank",
+            "file": path,
+            "d": d, "q": q, "k": k, "b": 1,
+            "inputs": [{"shape": [q, k, d], "dtype": "f32"}],
+            "outputs": [{"shape": [q, d, d], "dtype": "f32"}],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        print(f"  lowered config d={d} q={q} b={b} k={k}")
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def parse_configs(spec: str):
+    """Parse 'd=128,q=64,b=8,k=256;d=64,...' into config dicts."""
+    configs = []
+    for part in spec.split(";"):
+        cfg = {}
+        for kv in part.split(","):
+            key, val = kv.split("=")
+            cfg[key.strip()] = int(val)
+        for key in ("d", "q", "b", "k"):
+            if key not in cfg:
+                raise ValueError(f"config {part!r} missing {key}")
+        configs.append(cfg)
+    return configs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=None,
+                    help="semicolon-separated d=..,q=..,b=..,k=.. tuples")
+    args = ap.parse_args()
+    configs = parse_configs(args.configs) if args.configs else DEFAULT_CONFIGS
+    manifest = build_artifacts(configs, args.out_dir)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: batched associative-memory construction.
+
+The paper's build-time compute is the sum-of-outer-products memory
+
+    W_i = sum_mu x^mu (x^mu)^T        X: [q, k, d] -> W: [q, d, d]
+
+per class i.  As a contraction this is one [d, k] x [k, d] matmul per
+class (X_i^T @ X_i) — MXU-shaped, f32-accumulated.  The grid tiles the
+class axis; each step stages a [TQ, k, d] member slab into VMEM and
+emits a [TQ, d, d] weight slab.  For the default build shapes
+(k=256, d=128, TQ=2) the member slab is 256 KiB and the output 128 KiB.
+
+``interpret=True`` for the same reason as class_score.py: the CPU PJRT
+plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 2
+
+
+def _build_kernel(x_ref, w_ref):
+    """One grid step: memories for a [TQ] tile of classes.
+
+    x_ref: [TQ, k, d] VMEM slab of class members
+    w_ref: [TQ, d, d] output weight slab
+    """
+    x = x_ref[...]
+    tq, _k, _d = x.shape
+    # one X^T X matmul per class in the tile; MXU with f32 accumulation
+    for i in range(tq):  # static unroll: tq is a compile-time constant
+        xi = x[i]
+        w_ref[i, :, :] = jax.lax.dot_general(
+            xi,
+            xi,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(w_ref.dtype)
+
+
+def _pick_tile(n: int, pref: int) -> int:
+    t = min(pref, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tq",))
+def build_bank(members: jax.Array, *, tq: int = DEFAULT_TQ) -> jax.Array:
+    """Build all q class memories from stacked members.
+
+    Args:
+      members: [q, k, d] float32 class member matrix.
+      tq: preferred class-tile size.
+
+    Returns:
+      [q, d, d] float32 stacked memories, W[i] = members[i]^T members[i].
+    """
+    q, k, d = members.shape
+    tq = _pick_tile(q, tq)
+    return pl.pallas_call(
+        _build_kernel,
+        grid=(q // tq,),
+        in_specs=[pl.BlockSpec((tq, k, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tq, d, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d, d), jnp.float32),
+        interpret=True,
+    )(members.astype(jnp.float32))

@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: batched associative-memory class scoring.
+
+The paper's hot spot is polling every class memory with the query:
+
+    scores[b, i] = x_b^T W_i x_b      W: [q, d, d], X: [B, d] -> S: [B, q]
+
+This is a batched symmetric bilinear form.  On TPU it is MXU-shaped: for a
+tile of TQ memories and TB queries we compute one [TQ*d, d] x [d, TB]
+matmul (the W_i @ x_b matvecs for the whole tile, fused into a single
+systolic-array pass) followed by a VPU multiply-reduce against the queries.
+
+The HBM<->VMEM schedule is expressed with BlockSpecs over a (q/TQ, B/TB)
+grid: each grid step stages a [TQ, d, d] slab of memories and a [TB, d]
+slab of queries into VMEM.  With the default d=128, TQ=8, TB=8 the W slab
+is 512 KiB and the intermediates ~8 KiB, leaving ample VMEM headroom for
+the implicit double buffering of the pallas pipeline.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO ops
+that both the python tests and the rust runtime can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  TQ*d*d*4 bytes must fit comfortably in VMEM
+# (d=128 -> 512 KiB, d=256 -> 2 MiB).  Both are clamped to the actual
+# (q, B) at call time.
+DEFAULT_TQ = 8
+DEFAULT_TB = 8
+
+
+def _score_kernel(w_ref, x_ref, o_ref):
+    """One grid step: scores for a [TQ] x [TB] tile of (class, query) pairs.
+
+    w_ref: [TQ, d, d] VMEM slab of memories
+    x_ref: [TB, d]    VMEM slab of queries
+    o_ref: [TB, TQ]   output tile
+    """
+    w = w_ref[...]
+    x = x_ref[...]
+    tq, d, _ = w.shape
+    # All TQ matvecs W_i @ x_b as ONE [TQ*d, d] x [d, TB] matmul: this is
+    # the MXU pass.  preferred_element_type pins f32 accumulation.
+    wx = jax.lax.dot_general(
+        w.reshape(tq * d, d),
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [TQ*d, TB]
+    wx = wx.reshape(tq, d, x.shape[0])
+    # VPU reduce: s[i, b] = sum_l x[b, l] * (W_i x_b)[l]
+    s = jnp.sum(wx * x.T[None, :, :], axis=1)  # [TQ, TB]
+    o_ref[...] = s.T.astype(o_ref.dtype)
+
+
+def _pick_tile(n: int, pref: int) -> int:
+    """Largest divisor of ``n`` that is <= pref (so the grid tiles exactly)."""
+    t = min(pref, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tb"))
+def class_scores(w: jax.Array, x: jax.Array, *, tq: int = DEFAULT_TQ,
+                 tb: int = DEFAULT_TB) -> jax.Array:
+    """Score every class memory against every query.
+
+    Args:
+      w: [q, d, d] float32 stacked class memories (symmetric, but symmetry
+         is not assumed).
+      x: [B, d] float32 queries.
+      tq/tb: preferred tile sizes along classes / batch.
+
+    Returns:
+      [B, q] float32 scores, scores[b, i] = x_b^T W_i x_b.
+    """
+    q, d, d2 = w.shape
+    b, dx = x.shape
+    if d != d2 or d != dx:
+        raise ValueError(f"shape mismatch: w={w.shape} x={x.shape}")
+    tq = _pick_tile(q, tq)
+    tb = _pick_tile(b, tb)
+    grid = (q // tq, b // tb)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tb, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tq), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((b, q), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(w.astype(jnp.float32), x.astype(jnp.float32))

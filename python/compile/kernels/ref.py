@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Layer-1 kernels and Layer-2 graphs.
+
+These are the correctness ground truth: slow, obvious, no tiling.  Every
+pallas kernel and exported graph is pytest-checked against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def class_scores_ref(w, x):
+    """scores[b, i] = x_b^T W_i x_b, the naive einsum."""
+    return jnp.einsum("bl,qlm,bm->bq", x, w, x)
+
+
+def class_scores_expanded_ref(vectors_per_class, x):
+    """Score from raw class members: sum_mu <x, x_mu>^2.
+
+    vectors_per_class: [q, k, d]; x: [B, d] -> [B, q].
+    Identity check that the memory matrix loses nothing for scoring.
+    """
+    dots = jnp.einsum("bd,qkd->bqk", x, vectors_per_class)
+    return jnp.sum(dots * dots, axis=-1)
+
+
+def class_distances_ref(v, x):
+    """Squared L2 distances, naive: D[b, j] = ||x_b - v_j||^2."""
+    diff = x[:, None, :] - v[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def build_memory_ref(vectors):
+    """Sum-of-outer-products memory: W = sum_mu x_mu x_mu^T.  [k,d]->[d,d]."""
+    return jnp.einsum("kl,km->lm", vectors, vectors)

@@ -1,0 +1,52 @@
+"""Layer-2 JAX graphs exported to the rust runtime.
+
+Two computations per shape configuration, both shipped as HLO text:
+
+* ``class_scores``:   (W[q,d,d], X[B,d]) -> S[B,q]  — polls every class
+  memory with every query via the L1 pallas kernel (the paper's score
+  s(X^i, x0) = x0^T W_i x0).
+* ``class_distances``: (V[k,d], X[B,d]) -> D[B,k]  — the in-class
+  exhaustive candidate scan as a fused ||x||^2 - 2 x.v + ||v||^2 GEMM.
+  XLA fuses this into a single matmul + elementwise epilogue; no custom
+  kernel is warranted (its roofline IS the GEMM).
+
+Top-p selection and final argmin run in rust: they are O(q log p) /
+O(k) and dominated by the scans above; keeping them out of the graph
+lets the coordinator vary p per request without recompiling.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.bank_build import build_bank
+from .kernels.class_score import class_scores
+
+
+def class_scores_fn(w, x):
+    """Exported: batched bilinear class scores via the pallas kernel."""
+    return (class_scores(w, x),)
+
+
+def build_bank_fn(members):
+    """Exported: stacked memory construction via the pallas kernel.
+
+    (members[q,k,d]) -> W[q,d,d] with W_i = members_i^T members_i.
+    Build-path computation: used by `amsearch` when rebuilding banks
+    offline; additive, so shards of members can be built separately and
+    summed.
+    """
+    return (build_bank(members),)
+
+
+def class_distances_fn(v, x):
+    """Exported: squared-L2 candidate scan, one GEMM + epilogue.
+
+    D[b, j] = ||x_b||^2 - 2 <x_b, v_j> + ||v_j||^2
+    """
+    x = x.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)      # [B, 1]
+    v2 = jnp.sum(v * v, axis=1)[None, :]            # [1, k]
+    cross = x @ v.T                                 # [B, k] — the GEMM
+    return (x2 - 2.0 * cross + v2,)

@@ -1,0 +1,73 @@
+"""AOT path: HLO text emission, manifest contents, config parsing."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_parse_configs():
+    cfgs = aot.parse_configs("d=16,q=4,b=2,k=8;d=8,q=2,b=1,k=4")
+    assert cfgs == [
+        {"d": 16, "q": 4, "b": 2, "k": 8},
+        {"d": 8, "q": 2, "b": 1, "k": 4},
+    ]
+
+
+def test_parse_configs_missing_key():
+    with pytest.raises(ValueError):
+        aot.parse_configs("d=16,q=4,b=2")
+
+
+def test_lower_class_scores_is_hlo_text():
+    text = aot.lower_class_scores(d=8, q=4, b=2)
+    assert "HloModule" in text
+    assert "f32[4,8,8]" in text
+    assert "f32[2,8]" in text
+    # return_tuple=True => root is a tuple of the single output
+    assert "f32[2,4]" in text
+
+
+def test_lower_class_distances_is_hlo_text():
+    text = aot.lower_class_distances(d=8, k=16, b=2)
+    assert "HloModule" in text
+    assert "f32[16,8]" in text
+    assert "f32[2,16]" in text
+
+
+def test_build_artifacts_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build_artifacts(
+        [{"d": 8, "q": 4, "b": 2, "k": 8}], out)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    assert len(arts) == 3
+    kinds = {a["kind"] for a in arts}
+    assert kinds == {"class_scores", "class_distances", "build_bank"}
+    for a in arts:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            assert "HloModule" in f.read()
+        assert len(a["sha256"]) == 64
+    # manifest.json round-trips
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+
+
+def test_scores_artifact_shapes_in_manifest(tmp_path):
+    out = str(tmp_path / "a2")
+    manifest = aot.build_artifacts([{"d": 8, "q": 4, "b": 2, "k": 8}], out)
+    scores = [a for a in manifest["artifacts"] if a["kind"] == "class_scores"][0]
+    assert scores["inputs"][0]["shape"] == [4, 8, 8]
+    assert scores["inputs"][1]["shape"] == [2, 8]
+    assert scores["outputs"][0]["shape"] == [2, 4]
+    dists = [a for a in manifest["artifacts"] if a["kind"] == "class_distances"][0]
+    assert dists["inputs"][0]["shape"] == [8, 8]
+    assert dists["outputs"][0]["shape"] == [2, 8]
+    bank = [a for a in manifest["artifacts"] if a["kind"] == "build_bank"][0]
+    assert bank["inputs"][0]["shape"] == [4, 8, 8]
+    assert bank["outputs"][0]["shape"] == [4, 8, 8]

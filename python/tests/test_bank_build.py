@@ -1,0 +1,85 @@
+"""Pallas bank-build kernel vs reference: W_i = X_i^T X_i."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bank_build import build_bank, _pick_tile
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("q,k,d", [
+    (1, 1, 4),
+    (2, 8, 16),
+    (3, 5, 7),       # odd everything
+    (8, 32, 32),
+    (5, 16, 24),     # q not a multiple of TQ
+])
+@pytest.mark.parametrize("kind", ["normal", "pm1", "sparse01"])
+def test_build_matches_ref(q, k, d, kind):
+    rng = np.random.default_rng(q * 100 + k + d)
+    if kind == "normal":
+        m = rng.standard_normal((q, k, d)).astype(np.float32)
+    elif kind == "pm1":
+        m = rng.choice([-1.0, 1.0], size=(q, k, d)).astype(np.float32)
+    else:
+        m = (rng.random((q, k, d)) < 0.1).astype(np.float32)
+    got = np.asarray(build_bank(jnp.asarray(m)))
+    want = np.stack([np.asarray(ref.build_memory_ref(jnp.asarray(mi))) for mi in m])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_built_bank_scores_consistently():
+    """build_bank composed with class_scores == expanded-members oracle."""
+    from compile.kernels.class_score import class_scores
+    rng = np.random.default_rng(1)
+    q, k, d, b = 4, 12, 16, 3
+    m = rng.choice([-1.0, 1.0], size=(q, k, d)).astype(np.float32)
+    x = rng.choice([-1.0, 1.0], size=(b, d)).astype(np.float32)
+    w = build_bank(jnp.asarray(m))
+    got = np.asarray(class_scores(w, jnp.asarray(x)))
+    want = np.asarray(ref.class_scores_expanded_ref(jnp.asarray(m), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_bank_is_symmetric_psd_diag():
+    rng = np.random.default_rng(2)
+    m = rng.standard_normal((2, 6, 8)).astype(np.float32)
+    w = np.asarray(build_bank(jnp.asarray(m)))
+    for wi in w:
+        np.testing.assert_allclose(wi, wi.T, rtol=1e-5, atol=1e-5)
+        assert np.all(np.diag(wi) >= -1e-5)  # diag = sum of squares
+
+
+def test_additivity_shards():
+    """Banks are additive: building in shards and summing == full build."""
+    rng = np.random.default_rng(3)
+    q, k, d = 2, 10, 8
+    m = rng.standard_normal((q, k, d)).astype(np.float32)
+    full = np.asarray(build_bank(jnp.asarray(m)))
+    part1 = np.asarray(build_bank(jnp.asarray(m[:, :4, :])))
+    part2 = np.asarray(build_bank(jnp.asarray(m[:, 4:, :])))
+    np.testing.assert_allclose(full, part1 + part2, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.integers(1, 8),
+    k=st.integers(1, 24),
+    d=st.sampled_from([2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_build_hypothesis(q, k, d, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((q, k, d)).astype(np.float32)
+    got = np.asarray(build_bank(jnp.asarray(m)))
+    want = np.einsum("qkl,qkm->qlm", m, m)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+    assert got.shape == (q, d, d)
+
+
+def test_pick_tile_divides():
+    for n in range(1, 20):
+        t = _pick_tile(n, 2)
+        assert n % t == 0

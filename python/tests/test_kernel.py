@@ -1,0 +1,147 @@
+"""Pallas class-score kernel vs pure-jnp reference — the CORE correctness
+signal for Layer 1.
+
+Covers fixed shape grids, the expanded-members identity, degenerate tiles,
+dtype promotion, and a hypothesis sweep over (d, q, B) and value
+distributions.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.class_score import class_scores, _pick_tile
+from compile.kernels import ref
+
+
+def _rand(shape, rng, kind="normal"):
+    if kind == "normal":
+        return rng.standard_normal(shape).astype(np.float32)
+    if kind == "pm1":
+        return rng.choice([-1.0, 1.0], size=shape).astype(np.float32)
+    if kind == "sparse01":
+        return (rng.random(shape) < 0.06).astype(np.float32)
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("q,d,b", [
+    (1, 4, 1),
+    (2, 8, 3),
+    (8, 16, 8),
+    (10, 32, 5),     # q not a multiple of default TQ
+    (64, 128, 8),    # the AOT quickstart shape
+    (7, 64, 2),      # prime q
+])
+@pytest.mark.parametrize("kind", ["normal", "pm1", "sparse01"])
+def test_kernel_matches_ref(q, d, b, kind):
+    rng = np.random.default_rng(q * 1000 + d + b)
+    w = _rand((q, d, d), rng, kind)
+    # symmetrize like a real memory (kernel must not rely on it, but this
+    # is the production distribution)
+    w = w + np.swapaxes(w, 1, 2)
+    x = _rand((b, d), rng, kind)
+    got = class_scores(jnp.asarray(w), jnp.asarray(x))
+    want = ref.class_scores_ref(jnp.asarray(w), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_asymmetric_memory():
+    """Kernel must compute x^T W x exactly, without assuming symmetry."""
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((4, 16, 16)).astype(np.float32)
+    x = rng.standard_normal((2, 16)).astype(np.float32)
+    got = np.asarray(class_scores(jnp.asarray(w), jnp.asarray(x)))
+    want = np.einsum("bl,qlm,bm->bq", x, w, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_equals_expanded_members():
+    """x^T (sum_mu x_mu x_mu^T) x == sum_mu <x, x_mu>^2 — the associative
+    memory loses nothing for class scoring."""
+    rng = np.random.default_rng(1)
+    q, k, d, b = 6, 10, 24, 4
+    members = rng.choice([-1.0, 1.0], size=(q, k, d)).astype(np.float32)
+    w = np.einsum("qkl,qkm->qlm", members, members)
+    x = rng.choice([-1.0, 1.0], size=(b, d)).astype(np.float32)
+    got = np.asarray(class_scores(jnp.asarray(w), jnp.asarray(x)))
+    want = np.asarray(ref.class_scores_expanded_ref(
+        jnp.asarray(members), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_kernel_query_in_class_dominates():
+    """Sanity on the paper's mechanism: the class containing the query
+    scores highest (overwhelmingly, for d >> per-class crosstalk)."""
+    rng = np.random.default_rng(2)
+    q, k, d = 8, 4, 256
+    members = rng.choice([-1.0, 1.0], size=(q, k, d)).astype(np.float32)
+    w = np.einsum("qkl,qkm->qlm", members, members)
+    x = members[3, 0][None, :]  # query = a stored pattern of class 3
+    s = np.asarray(class_scores(jnp.asarray(w), jnp.asarray(x)))[0]
+    assert int(np.argmax(s)) == 3
+
+
+def test_pick_tile():
+    assert _pick_tile(64, 8) == 8
+    assert _pick_tile(10, 8) == 5
+    assert _pick_tile(7, 8) == 7
+    assert _pick_tile(1, 8) == 1
+    assert _pick_tile(12, 8) == 6
+    for n in range(1, 40):
+        t = _pick_tile(n, 8)
+        assert n % t == 0 and 1 <= t <= 8
+
+
+def test_kernel_shape_mismatch_raises():
+    w = jnp.zeros((2, 8, 8))
+    x = jnp.zeros((1, 9))
+    with pytest.raises(ValueError):
+        class_scores(w, x)
+
+
+def test_kernel_explicit_tiles():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((12, 16, 16)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((6, 16)).astype(np.float32))
+    want = np.asarray(ref.class_scores_ref(w, x))
+    for tq in (1, 2, 3, 4, 6, 12):
+        for tb in (1, 2, 3, 6):
+            got = np.asarray(class_scores(w, x, tq=tq, tb=tb))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    q=st.integers(1, 24),
+    d=st.sampled_from([4, 8, 16, 32, 48, 64]),
+    b=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(["normal", "pm1", "sparse01"]),
+)
+def test_kernel_hypothesis_sweep(q, d, b, seed, kind):
+    rng = np.random.default_rng(seed)
+    w = _rand((q, d, d), rng, kind)
+    x = _rand((b, d), rng, kind)
+    got = np.asarray(class_scores(jnp.asarray(w), jnp.asarray(x)))
+    want = np.asarray(ref.class_scores_ref(jnp.asarray(w), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_kernel_bf16_inputs_promote():
+    """bf16 operands are accepted and accumulated in f32."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_normal((4, 32, 32)), dtype=jnp.bfloat16)
+    x = jnp.asarray(rng.standard_normal((2, 32)), dtype=jnp.bfloat16)
+    got = class_scores(w, x)
+    assert got.dtype == jnp.float32
+    want = ref.class_scores_ref(w.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-1)
+
+
+def test_kernel_zero_memory():
+    got = class_scores(jnp.zeros((3, 8, 8)), jnp.ones((2, 8)))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((2, 3)))

@@ -1,0 +1,77 @@
+"""Layer-2 graph contracts: shapes, numerics vs references, fusion sanity."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_class_scores_fn_matches_ref():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((8, 32, 32)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    (got,) = model.class_scores_fn(w, x)
+    want = ref.class_scores_ref(w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_class_distances_fn_matches_ref():
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.standard_normal((50, 24)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((7, 24)).astype(np.float32))
+    (got,) = model.class_distances_fn(v, x)
+    want = ref.class_distances_ref(v, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_class_distances_self_is_zero():
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.standard_normal((5, 16)).astype(np.float32))
+    (d,) = model.class_distances_fn(v, v)
+    diag = np.diag(np.asarray(d))
+    np.testing.assert_allclose(diag, np.zeros(5), atol=1e-3)
+
+
+def test_class_distances_argmin_is_true_nn():
+    rng = np.random.default_rng(3)
+    v = rng.standard_normal((200, 32)).astype(np.float32)
+    x = rng.standard_normal((10, 32)).astype(np.float32)
+    (d,) = model.class_distances_fn(jnp.asarray(v), jnp.asarray(x))
+    got = np.argmin(np.asarray(d), axis=1)
+    want = np.argmin(((x[:, None, :] - v[None, :, :]) ** 2).sum(-1), axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 64),
+    d=st.sampled_from([2, 8, 17, 32]),
+    b=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_class_distances_hypothesis(k, d, b, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    (got,) = model.class_distances_fn(v, x)
+    want = ref.class_distances_ref(v, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    assert got.shape == (b, k)
+
+
+def test_class_distances_lowered_has_single_dot():
+    """Fusion sanity: the candidate scan lowers to exactly one dot
+    (the GEMM); the rest is elementwise epilogue."""
+    spec = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    xspec = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    lowered = jax.jit(model.class_distances_fn).lower(spec, xspec)
+    hlo = lowered.compiler_ir("hlo").as_hlo_text()
+    n_dots = hlo.count(" dot(")
+    assert n_dots == 1, f"expected 1 dot, got {n_dots}:\n{hlo}"

@@ -1,0 +1,120 @@
+//! Coordinator benchmarks: serving throughput and the batching overhead
+//! relative to calling the engine directly (the coordinator must not be
+//! the bottleneck — DESIGN.md §8 budgets it < 10% of query cost at B=8).
+
+#[path = "harness_common.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use amsearch::coordinator::{CoordinatorConfig, Engine, EngineFactory, SearchServer};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::runtime::Backend;
+use amsearch::util::concurrent_map;
+use harness::{bench, budget, section};
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let wl = synthetic::dense_workload(128, 16_384, 64, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 64, top_p: 2, ..Default::default() };
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+
+    section("engine direct (no coordinator) — the service-time floor");
+    let engine = Engine::native(index.clone()).unwrap();
+    let mut qi = 0usize;
+    let m_direct1 = bench("engine.serve_batch B=1", budget(), || {
+        let q = wl.queries.get(qi % 64);
+        std::hint::black_box(engine.serve_batch(&[(q, 2usize)]).unwrap());
+        qi += 1;
+    });
+    m_direct1.report();
+    let queries8: Vec<(&[f32], usize)> =
+        (0..8).map(|i| (wl.queries.get(i), 2usize)).collect();
+    let m_direct8 = bench("engine.serve_batch B=8", budget(), || {
+        std::hint::black_box(engine.serve_batch(&queries8).unwrap());
+    });
+    m_direct8.report();
+    println!(
+        "  per-request at B=8: {} (batch amortization {:.2}x)",
+        format_ns(m_direct8.mean_ns / 8.0),
+        m_direct1.mean_ns / (m_direct8.mean_ns / 8.0)
+    );
+
+    section("full coordinator: throughput under concurrent load");
+    for &(workers, max_batch, clients) in
+        &[(1usize, 1usize, 4usize), (1, 8, 16), (2, 8, 16)]
+    {
+        let factory = EngineFactory {
+            index: index.clone(),
+            backend: Backend::Native,
+            artifacts_dir: None,
+        };
+        let config = CoordinatorConfig {
+            max_batch,
+            max_wait_us: 200,
+            workers,
+            queue_depth: 256,
+        };
+        let server = Arc::new(SearchServer::start(factory, config).unwrap());
+        let total = 2_000usize;
+        let t = Instant::now();
+        concurrent_map(total, clients, |i| {
+            let q = wl.queries.get(i % 64).to_vec();
+            server.search(q, 0).unwrap()
+        });
+        let secs = t.elapsed().as_secs_f64();
+        let m = server.metrics();
+        println!(
+            "workers={workers} max_batch={max_batch} clients={clients}: \
+             {:>8.0} qps  mean_batch={:.2}  p50={} p95={}",
+            total as f64 / secs,
+            m.mean_batch_size(),
+            format_ns(m.latency.quantile_ns(0.5) as f64),
+            format_ns(m.latency.quantile_ns(0.95) as f64),
+        );
+        server.shutdown();
+    }
+
+    section("coordinator overhead vs direct engine call");
+    {
+        let factory = EngineFactory {
+            index: index.clone(),
+            backend: Backend::Native,
+            artifacts_dir: None,
+        };
+        let config = CoordinatorConfig {
+            max_batch: 1,
+            max_wait_us: 0,
+            workers: 1,
+            queue_depth: 16,
+        };
+        let server = Arc::new(SearchServer::start(factory, config).unwrap());
+        let mut qj = 0usize;
+        let m_coord = bench("coordinator round-trip B=1", budget(), || {
+            let q = wl.queries.get(qj % 64).to_vec();
+            std::hint::black_box(server.search(q, 0).unwrap());
+            qj += 1;
+        });
+        m_coord.report();
+        let overhead = m_coord.mean_ns - m_direct1.mean_ns;
+        println!(
+            "  overhead per request: {} ({:.1}% of service time)",
+            format_ns(overhead.max(0.0)),
+            100.0 * overhead.max(0.0) / m_direct1.mean_ns
+        );
+        server.shutdown();
+    }
+}
+
+fn format_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.1}us", ns / 1e3)
+    } else {
+        format!("{:.2}ms", ns / 1e6)
+    }
+}

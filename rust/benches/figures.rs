@@ -1,0 +1,35 @@
+//! Figure-harness benchmarks: times each paper-figure driver at reduced
+//! scale.  This is both a perf-regression guard for the Monte-Carlo
+//! machinery and the `cargo bench` entry point that exercises every
+//! table/figure code path (full-scale data comes from `amsearch eval`).
+
+#[path = "harness_common.rs"]
+mod harness;
+
+use amsearch::eval::{run_figure, EvalOptions, ALL_FIGURES};
+use harness::section;
+
+fn main() {
+    let scale = std::env::var("AMSEARCH_FIG_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.02);
+    let opts = EvalOptions { scale, seed: 42 };
+    section(&format!("paper figure harnesses at scale={scale}"));
+    for id in ALL_FIGURES {
+        let t = std::time::Instant::now();
+        match run_figure(id, &opts) {
+            Ok(fig) => {
+                let points: usize = fig.series.iter().map(|s| s.points.len()).sum();
+                println!(
+                    "{:<24} {:>2} series {:>4} points   {:>9.2}s",
+                    fig.id,
+                    fig.series.len(),
+                    points,
+                    t.elapsed().as_secs_f64()
+                );
+            }
+            Err(e) => println!("{id:<24} ERROR: {e}"),
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Minimal benchmarking harness shared by all bench targets (the offline
+//! build has no criterion).  Criterion-style: warmup, then timed
+//! iterations until a wall-clock budget is spent, reporting mean /
+//! p50 / p95 per-iteration time and optional throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+pub struct Measurement {
+    /// Benchmark id.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Median ns/iter.
+    pub p50_ns: f64,
+    /// p95 ns/iter.
+    pub p95_ns: f64,
+}
+
+impl Measurement {
+    /// Pretty one-line report, criterion-like.
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+
+    /// Report with an ops-derived throughput column.
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) {
+        let per_sec = per_iter / (self.mean_ns / 1e9);
+        println!(
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  {:>14.3} {unit}/s",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            per_sec,
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` repeatedly for ~`budget` after one warmup call.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> Measurement {
+    f(); // warmup + lazy init
+    let mut samples: Vec<u64> = Vec::new();
+    let started = Instant::now();
+    while started.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as u64);
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let iters = samples.len() as u64;
+    let mean_ns = samples.iter().sum::<u64>() as f64 / iters as f64;
+    let p50_ns = samples[samples.len() / 2] as f64;
+    let p95_ns = samples[(samples.len() * 95 / 100).min(samples.len() - 1)] as f64;
+    Measurement { name: name.to_string(), iters, mean_ns, p50_ns, p95_ns }
+}
+
+/// Standard per-bench budget, overridable via `AMSEARCH_BENCH_MS`.
+pub fn budget() -> Duration {
+    let ms = std::env::var("AMSEARCH_BENCH_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(400);
+    Duration::from_millis(ms)
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,109 @@
+//! The paper's headline claim, as wall-clock: end-to-end AM-index query
+//! vs exhaustive search, across database sizes and poll depths.  Prints
+//! measured speedup next to the cost-model prediction
+//! `(d²q + pkd) / (nd)` — shapes should agree within ~2x.
+
+#[path = "harness_common.rs"]
+mod harness;
+
+use amsearch::baseline::Exhaustive;
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel, SparseSpec};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::{CostModel, OpsCounter};
+use amsearch::search::Metric;
+use harness::{bench, budget, section};
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    section("dense d=128: AM query vs exhaustive (wall-clock)");
+    for &(n, q) in &[(16_384usize, 64usize), (65_536, 128)] {
+        let wl = synthetic::dense_workload(128, n, 16, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+        let k = n / q;
+
+        let mut qi = 0usize;
+        let m_ex = bench(&format!("exhaustive n={n}"), budget(), || {
+            let mut ops = OpsCounter::new();
+            let r = ex.query(wl.queries.get(qi % 16), &mut ops);
+            std::hint::black_box(r);
+            qi += 1;
+        });
+        m_ex.report();
+
+        for p in [1usize, 4] {
+            let mut qj = 0usize;
+            let m_am = bench(&format!("am n={n} q={q} p={p}"), budget(), || {
+                let mut ops = OpsCounter::new();
+                let r = index.query(wl.queries.get(qj % 16), p, &mut ops);
+                std::hint::black_box(r);
+                qj += 1;
+            });
+            m_am.report();
+            let model = CostModel {
+                effective_dim: 128,
+                q: q as u64,
+                k: k as u64,
+                n: n as u64,
+            };
+            println!(
+                "  -> measured speedup {:.2}x | cost model predicts {:.2}x",
+                m_ex.mean_ns / m_am.mean_ns,
+                1.0 / model.relative(p as u64)
+            );
+        }
+    }
+
+    section("sparse d=128 c=8: the paper's strongest regime");
+    {
+        let (n, q) = (65_536usize, 64usize);
+        let wl = synthetic::sparse_workload(
+            SparseSpec { dim: 128, ones: 8.0 },
+            n,
+            16,
+            QueryModel::Exact,
+            &mut rng,
+        );
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+        let mut qi = 0usize;
+        let m_ex = bench("exhaustive (sparse)", budget(), || {
+            let mut ops = OpsCounter::new();
+            std::hint::black_box(ex.query(wl.queries.get(qi % 16), &mut ops));
+            qi += 1;
+        });
+        m_ex.report();
+        let mut qj = 0usize;
+        let m_am = bench("am p=1 (sparse, c² scoring)", budget(), || {
+            let mut ops = OpsCounter::new();
+            std::hint::black_box(index.query(wl.queries.get(qj % 16), 1, &mut ops));
+            qj += 1;
+        });
+        m_am.report();
+        let model =
+            CostModel { effective_dim: 8, q: q as u64, k: (n / q) as u64, n: n as u64 };
+        println!(
+            "  -> measured speedup {:.2}x | cost model predicts {:.2}x",
+            m_ex.mean_ns / m_am.mean_ns,
+            1.0 / model.relative(1)
+        );
+    }
+
+    section("index build cost (amortized once per corpus)");
+    for &(n, q) in &[(16_384usize, 64usize)] {
+        let wl = synthetic::dense_workload(128, n, 1, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let t = std::time::Instant::now();
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        println!(
+            "build n={n} q={q} d=128: {:.2}s ({} classes, {} MB bank)",
+            t.elapsed().as_secs_f64(),
+            index.bank().n_classes(),
+            index.bank().stacked().len() * 4 / 1_000_000
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Scoring-path benchmarks: the `d²·q` bilinear form (dense) and the
+//! `c²·q` support path (sparse) across realistic shapes, with effective
+//! memory bandwidth so the result can be compared against the machine's
+//! roofline (the scorer is bandwidth-bound: each f32 of the `[q,d,d]`
+//! bank is read once per batch).
+
+#[path = "harness_common.rs"]
+mod harness;
+
+use amsearch::data::rng::Rng;
+use amsearch::memory::score::{score_batch, score_batch_support};
+use harness::{bench, budget, section};
+
+fn random_bank(rng: &mut Rng, q: usize, d: usize) -> Vec<f32> {
+    (0..q * d * d).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    section("dense bilinear scoring: scores = x^T W_i x  (native scorer)");
+    for &(d, q, b) in &[
+        (64usize, 32usize, 1usize),
+        (64, 32, 8),
+        (128, 64, 1),
+        (128, 64, 8),
+        (128, 256, 8),
+        (960, 20, 4),
+    ] {
+        let bank = random_bank(&mut rng, q, d);
+        let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let m = bench(
+            &format!("score_batch d={d} q={q} B={b}"),
+            budget(),
+            || {
+                let s = score_batch(&bank, &queries, d, q);
+                std::hint::black_box(s);
+            },
+        );
+        // bytes touched per iteration: the whole bank once (batch-fused)
+        let gb = (q * d * d * 4) as f64 / 1e9;
+        m.report_throughput("GB(bank)", gb);
+    }
+
+    section("sparse support scoring: c²·q path");
+    for &(d, q, c, b) in
+        &[(128usize, 64usize, 8usize, 8usize), (369, 40, 33, 8), (128, 256, 8, 8)]
+    {
+        let bank = random_bank(&mut rng, q, d);
+        let supports: Vec<Vec<u32>> = (0..b)
+            .map(|_| {
+                let mut s: Vec<u32> =
+                    (0..c).map(|_| rng.below(d as u64) as u32).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        let m = bench(
+            &format!("score_support d={d} q={q} c={c} B={b}"),
+            budget(),
+            || {
+                let s = score_batch_support(&bank, &supports, d, q);
+                std::hint::black_box(s);
+            },
+        );
+        m.report_throughput("score", (q * b) as f64);
+    }
+
+    section("speedup check: support path vs dense path on sparse queries");
+    {
+        let (d, q, c, b) = (369usize, 40usize, 33usize, 8usize);
+        let bank = random_bank(&mut rng, q, d);
+        let mut dense_queries = vec![0f32; b * d];
+        let mut supports = Vec::new();
+        for bi in 0..b {
+            let mut s = Vec::new();
+            for _ in 0..c {
+                let j = rng.below(d as u64) as usize;
+                if dense_queries[bi * d + j] == 0.0 {
+                    dense_queries[bi * d + j] = 1.0;
+                    s.push(j as u32);
+                }
+            }
+            s.sort_unstable();
+            supports.push(s);
+        }
+        let md = bench("dense path (d²q)", budget(), || {
+            std::hint::black_box(score_batch(&bank, &dense_queries, d, q));
+        });
+        let ms = bench("support path (c²q)", budget(), || {
+            std::hint::black_box(score_batch_support(&bank, &supports, d, q));
+        });
+        md.report();
+        ms.report();
+        println!(
+            "support-path speedup: {:.1}x (cost model predicts ~{:.1}x)",
+            md.mean_ns / ms.mean_ns,
+            (d * d) as f64 / (c * c) as f64
+        );
+    }
+}

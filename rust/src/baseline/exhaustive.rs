@@ -1,0 +1,102 @@
+//! Exhaustive (brute-force) nearest neighbor search — the reference both
+//! for correctness (ground truth) and for the paper's relative-complexity
+//! axis (cost `n·d`, or `n·c` for sparse data).
+
+use crate::data::dataset::Dataset;
+use crate::metrics::OpsCounter;
+use crate::search::Metric;
+
+/// Brute-force searcher.
+#[derive(Debug, Clone)]
+pub struct Exhaustive {
+    data: Dataset,
+    metric: Metric,
+    binary_sparse: bool,
+}
+
+impl Exhaustive {
+    /// Wrap a database.
+    pub fn new(data: Dataset, metric: Metric) -> Self {
+        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        Exhaustive { data, metric, binary_sparse }
+    }
+
+    /// Database size.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the database is empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reference cost per search for the relative-complexity axis:
+    /// `n·d` dense, `n·c` sparse (c = query support size).
+    pub fn reference_ops(&self, x: &[f32]) -> u64 {
+        let eff = if self.binary_sparse {
+            x.iter().filter(|&&v| v != 0.0).count()
+        } else {
+            self.data.dim()
+        };
+        (self.data.len() * eff) as u64
+    }
+
+    /// Exact nearest neighbor of `x`. Ties resolve to the smaller id.
+    pub fn query(&self, x: &[f32], ops: &mut OpsCounter) -> (u32, f32) {
+        let mut best = f32::INFINITY;
+        let mut best_id = u32::MAX;
+        for (i, v) in self.data.iter().enumerate() {
+            let dist = self.metric.distance(x, v);
+            if dist < best {
+                best = dist;
+                best_id = i as u32;
+            }
+        }
+        ops.scan_ops += self.reference_ops(x);
+        ops.searches += 1;
+        (best_id, best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synthetic;
+
+    #[test]
+    fn finds_exact_match() {
+        let mut rng = Rng::new(1);
+        let ds = synthetic::dense_patterns(16, 50, &mut rng);
+        let ex = Exhaustive::new(ds.clone(), Metric::SqL2);
+        let mut ops = OpsCounter::new();
+        let (id, dist) = ex.query(ds.get(17), &mut ops);
+        assert_eq!(id, 17);
+        assert_eq!(dist, 0.0);
+        assert_eq!(ops.scan_ops, 50 * 16);
+    }
+
+    #[test]
+    fn sparse_reference_cost_uses_support() {
+        let mut rng = Rng::new(2);
+        let ds = synthetic::sparse_patterns(
+            synthetic::SparseSpec { dim: 64, ones: 6.0 },
+            30,
+            &mut rng,
+        );
+        let ex = Exhaustive::new(ds.clone(), Metric::SqL2);
+        let q = ds.get(0);
+        let c = q.iter().filter(|&&v| v != 0.0).count() as u64;
+        assert_eq!(ex.reference_ops(q), 30 * c);
+    }
+
+    #[test]
+    fn ties_resolve_to_smaller_id() {
+        let ds = Dataset::from_flat(2, vec![1., 0., 1., 0., 0., 0.]).unwrap();
+        let ex = Exhaustive::new(ds, Metric::SqL2);
+        let mut ops = OpsCounter::new();
+        let (id, _) = ex.query(&[1., 0.], &mut ops);
+        assert_eq!(id, 0);
+    }
+}

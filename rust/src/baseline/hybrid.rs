@@ -1,0 +1,136 @@
+//! Hybrid AM→RS method (§5.2): associative memories first identify which
+//! part of the collection should be investigated, then the selected parts
+//! are searched with their own per-class RS anchor structures instead of
+//! exhaustively.
+//!
+//! Query cost: `d²·q` (AM scoring) + per polled class `r_c·d` (anchor
+//! search) + attached scan — strictly less scan work than plain AM at the
+//! same `p` when classes are large.
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::Result;
+use crate::index::{AmIndex, IndexParams};
+use crate::metrics::OpsCounter;
+use crate::search::{top_p_largest, TopK};
+
+use super::rs_anchors::RsAnchors;
+
+/// Hybrid index: an [`AmIndex`] whose classes each carry an RS substructure.
+#[derive(Debug, Clone)]
+pub struct HybridIndex {
+    am: AmIndex,
+    /// Per-class RS structures (over the class's own members).
+    class_rs: Vec<RsAnchors>,
+    /// Map from within-class candidate ids back to database ids.
+    class_members: Vec<Vec<u32>>,
+    /// Anchors polled inside each selected class.
+    anchors_per_class: usize,
+}
+
+impl HybridIndex {
+    /// Build: AM index, then one RS structure per class with
+    /// `r = max(1, ceil(sqrt(k_i)))·anchor_factor` anchors.
+    pub fn build(
+        data: Dataset,
+        params: IndexParams,
+        anchor_factor: f64,
+        anchors_per_class: usize,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let am = AmIndex::build(data, params, rng)?;
+        let mut class_rs = Vec::with_capacity(params.n_classes);
+        let mut class_members = Vec::with_capacity(params.n_classes);
+        for ci in 0..params.n_classes {
+            let members = am.partition().members(ci).to_vec();
+            let sub = am.data().gather(&members);
+            let r = (((members.len() as f64).sqrt() * anchor_factor).ceil() as usize)
+                .clamp(1, members.len().max(1));
+            let rs = RsAnchors::build(sub, r, params.metric, rng)?;
+            class_rs.push(rs);
+            class_members.push(members);
+        }
+        Ok(HybridIndex { am, class_rs, class_members, anchors_per_class })
+    }
+
+    /// The underlying AM index.
+    pub fn am(&self) -> &AmIndex {
+        &self.am
+    }
+
+    /// Query: AM scores -> top-`p` classes -> RS search inside each.
+    pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> (u32, f32) {
+        let scores = self.am.score_classes(x, ops);
+        let polled = top_p_largest(&scores, p);
+        let mut best = TopK::new(1);
+        for &ci in &polled {
+            let (local_id, dist, _) =
+                self.class_rs[ci as usize].query(x, self.anchors_per_class, ops);
+            if local_id != u32::MAX {
+                let global = self.class_members[ci as usize][local_id as usize];
+                best.push(dist, global);
+            }
+        }
+        // the per-class RS queries already bumped `searches`; collapse to 1
+        ops.searches = ops.searches.saturating_sub(polled.len() as u64 - 1);
+        let top = best.into_sorted();
+        let (dist, id) = top[0];
+        (id, dist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clustered::{clustered_workload, ClusteredSpec};
+
+    #[test]
+    fn full_poll_full_anchors_is_exact() {
+        let mut rng = Rng::new(1);
+        let spec = ClusteredSpec { dim: 12, n_clusters: 4, ..ClusteredSpec::sift_like() };
+        let wl = clustered_workload(spec, 300, 20, &mut rng);
+        let params = IndexParams { n_classes: 3, ..Default::default() };
+        // anchor_factor big enough that r == k (anchors = all members)
+        let hy = HybridIndex::build(wl.base.clone(), params, 100.0, 100, &mut rng)
+            .unwrap();
+        let mut ops = OpsCounter::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let (id, _) = hy.query(wl.queries.get(qi), 3, &mut ops);
+            assert_eq!(id, gt, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn hybrid_scans_fewer_candidates_than_plain_am() {
+        let mut rng = Rng::new(2);
+        let spec = ClusteredSpec { dim: 16, n_clusters: 8, ..ClusteredSpec::sift_like() };
+        let wl = clustered_workload(spec, 800, 20, &mut rng);
+        let params = IndexParams { n_classes: 4, ..Default::default() };
+        let hy =
+            HybridIndex::build(wl.base.clone(), params, 1.0, 3, &mut rng).unwrap();
+        let mut ops_h = OpsCounter::new();
+        let mut ops_a = OpsCounter::new();
+        for qi in 0..wl.queries.len() {
+            hy.query(wl.queries.get(qi), 2, &mut ops_h);
+            hy.am().query(wl.queries.get(qi), 2, &mut ops_a);
+        }
+        assert!(
+            ops_h.scan_ops < ops_a.scan_ops,
+            "hybrid scan {} !< plain {}",
+            ops_h.scan_ops,
+            ops_a.scan_ops
+        );
+    }
+
+    #[test]
+    fn searches_counted_once_per_query() {
+        let mut rng = Rng::new(3);
+        let spec = ClusteredSpec { dim: 8, n_clusters: 2, ..ClusteredSpec::sift_like() };
+        let wl = clustered_workload(spec, 100, 1, &mut rng);
+        let params = IndexParams { n_classes: 2, ..Default::default() };
+        let hy = HybridIndex::build(wl.base.clone(), params, 1.0, 2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        hy.query(wl.queries.get(0), 2, &mut ops);
+        assert_eq!(ops.searches, 1);
+    }
+}

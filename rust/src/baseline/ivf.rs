@@ -1,0 +1,176 @@
+//! IVF-flat baseline: k-means coarse quantizer + inverted lists — the
+//! modern counterpart of the paper's Random-Sampling anchors (same
+//! probe-then-scan structure, learned centroids instead of sampled
+//! anchors).  Included so the trade-off curves can situate the paper's
+//! method against what practitioners deploy today.
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::Result;
+use crate::metrics::OpsCounter;
+use crate::search::{top_p_largest, Metric};
+
+use super::kmeans::{kmeans, KMeans};
+
+/// IVF-flat index.
+#[derive(Debug, Clone)]
+pub struct IvfFlat {
+    data: Dataset,
+    metric: Metric,
+    centroids: Vec<f32>,
+    /// Inverted lists: vectors attached to each centroid.
+    lists: Vec<Vec<u32>>,
+    dim: usize,
+    k: usize,
+    binary_sparse: bool,
+}
+
+impl IvfFlat {
+    /// Build with `n_lists` centroids (`train_iters` Lloyd iterations).
+    pub fn build(
+        data: Dataset,
+        n_lists: usize,
+        train_iters: usize,
+        metric: Metric,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let KMeans { centroids, assignments, dim, k, .. } =
+            kmeans(&data, n_lists, train_iters, rng)?;
+        let mut lists = vec![Vec::new(); k];
+        for (v, &a) in assignments.iter().enumerate() {
+            lists[a as usize].push(v as u32);
+        }
+        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        Ok(IvfFlat { data, metric, centroids, lists, dim, k, binary_sparse })
+    }
+
+    /// Number of inverted lists.
+    pub fn n_lists(&self) -> usize {
+        self.k
+    }
+
+    /// Sizes of the inverted lists.
+    pub fn list_sizes(&self) -> Vec<usize> {
+        self.lists.iter().map(|l| l.len()).collect()
+    }
+
+    fn per_elem(&self, x: &[f32]) -> usize {
+        if self.binary_sparse {
+            x.iter().filter(|&&v| v != 0.0).count()
+        } else {
+            self.dim
+        }
+    }
+
+    /// Query with `nprobe` lists.
+    pub fn query(&self, x: &[f32], nprobe: usize, ops: &mut OpsCounter) -> (u32, f32, usize) {
+        let per = self.per_elem(x);
+        let cent_scores: Vec<f32> = (0..self.k)
+            .map(|c| {
+                -self
+                    .metric
+                    .distance(x, &self.centroids[c * self.dim..(c + 1) * self.dim])
+            })
+            .collect();
+        ops.aux_ops += (self.k * per) as u64;
+        let probed = top_p_largest(&cent_scores, nprobe.max(1));
+        let mut best = f32::INFINITY;
+        let mut best_id = u32::MAX;
+        let mut candidates = 0usize;
+        for &c in &probed {
+            for &vid in &self.lists[c as usize] {
+                let dist = self.metric.distance(x, self.data.get(vid as usize));
+                candidates += 1;
+                if dist < best || (dist == best && vid < best_id) {
+                    best = dist;
+                    best_id = vid;
+                }
+            }
+        }
+        ops.scan_ops += (candidates * per) as u64;
+        ops.searches += 1;
+        (best_id, best, candidates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clustered::{clustered_workload, ClusteredSpec};
+
+    fn wl(seed: u64) -> crate::data::Workload {
+        let spec = ClusteredSpec {
+            dim: 16,
+            n_clusters: 8,
+            center_scale: 3.0,
+            noise_scale: 0.3,
+            size_skew: 0.0,
+            query_jitter: 0.3,
+        };
+        clustered_workload(spec, 800, 60, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn lists_cover_everything() {
+        let wl = wl(1);
+        let mut rng = Rng::new(2);
+        let ivf = IvfFlat::build(wl.base.clone(), 10, 20, Metric::SqL2, &mut rng).unwrap();
+        assert_eq!(ivf.list_sizes().iter().sum::<usize>(), 800);
+    }
+
+    #[test]
+    fn full_probe_is_exact() {
+        let wl = wl(3);
+        let mut rng = Rng::new(4);
+        let ivf = IvfFlat::build(wl.base.clone(), 8, 20, Metric::SqL2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let (id, _, cands) = ivf.query(wl.queries.get(qi), 8, &mut ops);
+            assert_eq!(id, gt, "query {qi}");
+            assert_eq!(cands, 800);
+        }
+    }
+
+    #[test]
+    fn small_nprobe_good_recall_on_clustered() {
+        let wl = wl(5);
+        let mut rng = Rng::new(6);
+        let ivf = IvfFlat::build(wl.base.clone(), 16, 25, Metric::SqL2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let mut hits = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let (id, _, _) = ivf.query(wl.queries.get(qi), 2, &mut ops);
+            if id == gt {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "hits={hits}/60");
+        // and the scan touched far fewer than n per query on average
+        assert!(ops.scan_ops / ops.searches < (800 * 16 / 2) as u64);
+    }
+
+    #[test]
+    fn ivf_beats_random_anchors_on_clustered() {
+        use crate::baseline::RsAnchors;
+        // same number of lists/anchors and probes: learned centroids
+        // should match or beat sampled anchors in recall
+        let wl = wl(7);
+        let mut rng = Rng::new(8);
+        let ivf = IvfFlat::build(wl.base.clone(), 16, 25, Metric::SqL2, &mut rng).unwrap();
+        let rs = RsAnchors::build(wl.base.clone(), 16, Metric::SqL2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let (mut ivf_hits, mut rs_hits) = (0, 0);
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            if ivf.query(wl.queries.get(qi), 1, &mut ops).0 == gt {
+                ivf_hits += 1;
+            }
+            if rs.query(wl.queries.get(qi), 1, &mut ops).0 == gt {
+                rs_hits += 1;
+            }
+        }
+        assert!(
+            ivf_hits + 3 >= rs_hits,
+            "ivf={ivf_hits} rs={rs_hits} / 60"
+        );
+    }
+}

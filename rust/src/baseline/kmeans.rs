@@ -1,0 +1,205 @@
+//! Lloyd's k-means with k-means++ seeding — the coarse-quantizer
+//! substrate for the IVF baseline (what modern ANN systems use where the
+//! paper's RS baseline uses random anchors).
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+use crate::search::distance::sq_l2;
+use crate::util::par::parallel_map;
+
+/// k-means result.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    /// Flat row-major `[k * d]` centroids.
+    pub centroids: Vec<f32>,
+    /// Per-vector nearest centroid.
+    pub assignments: Vec<u32>,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Dimensionality.
+    pub dim: usize,
+    /// Number of centroids.
+    pub k: usize,
+}
+
+/// k-means++ initial centers.
+fn init_plus_plus(data: &Dataset, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let n = data.len();
+    let d = data.dim();
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n as u64) as usize;
+    centroids.extend_from_slice(data.get(first));
+    let mut dist2: Vec<f64> = (0..n)
+        .map(|i| sq_l2(data.get(i), data.get(first)) as f64)
+        .collect();
+    for _ in 1..k {
+        let total: f64 = dist2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n as u64) as usize
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut idx = 0usize;
+            for (i, &w) in dist2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+                idx = i;
+            }
+            idx
+        };
+        let c = data.get(pick).to_vec();
+        for i in 0..n {
+            let nd = sq_l2(data.get(i), &c) as f64;
+            if nd < dist2[i] {
+                dist2[i] = nd;
+            }
+        }
+        centroids.extend_from_slice(&c);
+    }
+    centroids
+}
+
+/// Run Lloyd's algorithm for at most `max_iters` iterations (stops early
+/// when assignments are stable).
+pub fn kmeans(data: &Dataset, k: usize, max_iters: usize, rng: &mut Rng) -> Result<KMeans> {
+    let n = data.len();
+    let d = data.dim();
+    if k == 0 || k > n {
+        return Err(Error::Config(format!("need 1 <= k={k} <= n={n}")));
+    }
+    let mut centroids = init_plus_plus(data, k, rng);
+    let mut assignments = vec![u32::MAX; n];
+    let mut iterations = 0usize;
+    for it in 0..max_iters.max(1) {
+        iterations = it + 1;
+        // assignment step (parallel over vectors)
+        let new_assign: Vec<u32> = parallel_map(n, |i| {
+            let x = data.get(i);
+            let mut best = f32::INFINITY;
+            let mut best_c = 0u32;
+            for c in 0..k {
+                let dist = sq_l2(x, &centroids[c * d..(c + 1) * d]);
+                if dist < best {
+                    best = dist;
+                    best_c = c as u32;
+                }
+            }
+            best_c
+        });
+        let stable = new_assign == assignments;
+        assignments = new_assign;
+        if stable {
+            break;
+        }
+        // update step
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for (i, &a) in assignments.iter().enumerate() {
+            let x = data.get(i);
+            let s = &mut sums[a as usize * d..(a as usize + 1) * d];
+            for (acc, &v) in s.iter_mut().zip(x) {
+                *acc += v as f64;
+            }
+            counts[a as usize] += 1;
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // empty cluster: re-seed on a random vector
+                let pick = rng.below(n as u64) as usize;
+                centroids[c * d..(c + 1) * d].copy_from_slice(data.get(pick));
+            } else {
+                for j in 0..d {
+                    centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    let inertia: f64 = (0..n)
+        .map(|i| {
+            let a = assignments[i] as usize;
+            sq_l2(data.get(i), &centroids[a * d..(a + 1) * d]) as f64
+        })
+        .sum();
+    Ok(KMeans { centroids, assignments, inertia, iterations, dim: d, k })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clustered::{clustered_base, ClusteredSpec};
+
+    fn toy(rng: &mut Rng) -> Dataset {
+        let spec = ClusteredSpec {
+            dim: 8,
+            n_clusters: 4,
+            center_scale: 6.0,
+            noise_scale: 0.2,
+            size_skew: 0.0,
+            query_jitter: 0.1,
+        };
+        clustered_base(spec, 400, rng)
+    }
+
+    #[test]
+    fn finds_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let ds = toy(&mut rng);
+        let km = kmeans(&ds, 4, 50, &mut rng).unwrap();
+        // well-separated data: within-cluster variance tiny vs naive 1-mean
+        let one = kmeans(&ds, 1, 10, &mut Rng::new(2)).unwrap();
+        assert!(km.inertia < one.inertia * 0.05, "km={} one={}", km.inertia, one.inertia);
+        // every cluster non-empty and sizes ≈ 100
+        let mut counts = [0usize; 4];
+        for &a in &km.assignments {
+            counts[a as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 50, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn more_k_never_increases_inertia_much() {
+        let mut rng = Rng::new(3);
+        let ds = toy(&mut rng);
+        let k4 = kmeans(&ds, 4, 50, &mut Rng::new(4)).unwrap();
+        let k8 = kmeans(&ds, 8, 50, &mut Rng::new(4)).unwrap();
+        assert!(k8.inertia <= k4.inertia * 1.05);
+    }
+
+    #[test]
+    fn assignments_are_nearest_centroid() {
+        let mut rng = Rng::new(5);
+        let ds = toy(&mut rng);
+        let km = kmeans(&ds, 4, 50, &mut rng).unwrap();
+        let d = ds.dim();
+        for i in 0..ds.len() {
+            let a = km.assignments[i] as usize;
+            let da = sq_l2(ds.get(i), &km.centroids[a * d..(a + 1) * d]);
+            for c in 0..km.k {
+                let dc = sq_l2(ds.get(i), &km.centroids[c * d..(c + 1) * d]);
+                assert!(da <= dc + 1e-4, "vector {i}: {a} vs {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = toy(&mut Rng::new(6));
+        let a = kmeans(&ds, 3, 20, &mut Rng::new(7)).unwrap();
+        let b = kmeans(&ds, 3, 20, &mut Rng::new(7)).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let ds = toy(&mut Rng::new(8));
+        assert!(kmeans(&ds, 0, 10, &mut Rng::new(9)).is_err());
+        assert!(kmeans(&ds, 401, 10, &mut Rng::new(9)).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Baselines the paper compares against — exhaustive search, Random
+//! Sampling anchors (PySparNN/Annoy-style), the AM→RS hybrid — plus an
+//! IVF-flat (k-means) index situating the method against modern practice.
+
+pub mod exhaustive;
+pub mod hybrid;
+pub mod ivf;
+pub mod kmeans;
+pub mod rs_anchors;
+
+pub use exhaustive::Exhaustive;
+pub use hybrid::HybridIndex;
+pub use ivf::IvfFlat;
+pub use rs_anchors::RsAnchors;

@@ -1,0 +1,211 @@
+//! Random Sampling (RS) baseline — §5.2's comparison methodology, as used
+//! by PySparNN and (in spirit) Annoy.
+//!
+//! Build: sample `r` anchor points from the collection; attach every
+//! vector to its nearest anchor.  Query: find the top-`p` nearest anchors
+//! (cost `r·d`), then exhaustively scan the vectors attached to them
+//! (cost `Σ attached · d`).
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+use crate::metrics::OpsCounter;
+use crate::search::{top_p_largest, Metric};
+use crate::util::par::parallel_map;
+
+/// RS anchor-tree (one level).
+#[derive(Debug, Clone)]
+pub struct RsAnchors {
+    data: Dataset,
+    metric: Metric,
+    /// Database ids of the anchors.
+    anchors: Vec<u32>,
+    /// `attached[a]` = ids of vectors whose nearest anchor is `a`.
+    attached: Vec<Vec<u32>>,
+    binary_sparse: bool,
+}
+
+impl RsAnchors {
+    /// Build with `r` anchors sampled without replacement.
+    pub fn build(data: Dataset, r: usize, metric: Metric, rng: &mut Rng) -> Result<Self> {
+        let n = data.len();
+        if r == 0 || r > n {
+            return Err(Error::Config(format!("need 1 <= r={r} <= n={n}")));
+        }
+        let anchors: Vec<u32> =
+            rng.sample_distinct(n, r).into_iter().map(|i| i as u32).collect();
+        // attach every vector to its nearest anchor (parallel)
+        let assignments: Vec<usize> = parallel_map(n, |v| {
+            let x = data.get(v);
+            let mut best = f32::INFINITY;
+            let mut best_a = 0usize;
+            for (ai, &aid) in anchors.iter().enumerate() {
+                let dist = metric.distance(x, data.get(aid as usize));
+                if dist < best {
+                    best = dist;
+                    best_a = ai;
+                }
+            }
+            best_a
+        });
+        let mut attached = vec![Vec::new(); r];
+        for (v, &a) in assignments.iter().enumerate() {
+            attached[a].push(v as u32);
+        }
+        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        Ok(RsAnchors { data, metric, anchors, attached, binary_sparse })
+    }
+
+    /// Number of anchors.
+    pub fn n_anchors(&self) -> usize {
+        self.anchors.len()
+    }
+
+    /// Sizes of the attachment lists.
+    pub fn attached_sizes(&self) -> Vec<usize> {
+        self.attached.iter().map(|a| a.len()).collect()
+    }
+
+    /// Effective per-element cost (d dense, c sparse).
+    fn per_elem(&self, x: &[f32]) -> usize {
+        if self.binary_sparse {
+            x.iter().filter(|&&v| v != 0.0).count()
+        } else {
+            self.data.dim()
+        }
+    }
+
+    /// All anchors ranked nearest-first for `x` (cost `r·d`, counted as
+    /// aux).  Used by the incremental p-sweep in the eval harness.
+    pub fn ranked_anchors(&self, x: &[f32], ops: &mut OpsCounter) -> Vec<u32> {
+        let per = self.per_elem(x);
+        let dists: Vec<f32> = self
+            .anchors
+            .iter()
+            .map(|&aid| -self.metric.distance(x, self.data.get(aid as usize)))
+            .collect();
+        ops.aux_ops += (self.anchors.len() * per) as u64;
+        top_p_largest(&dists, dists.len())
+    }
+
+    /// Members attached to anchor rank slot `a` (anchor index, not id).
+    pub fn attached(&self, a: usize) -> &[u32] {
+        &self.attached[a]
+    }
+
+    /// Database vector by id (for incremental scans).
+    pub fn vector(&self, id: u32) -> &[f32] {
+        self.data.get(id as usize)
+    }
+
+    /// Metric in use.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Effective per-candidate scan cost (d dense / c sparse).
+    pub fn per_candidate(&self, x: &[f32]) -> usize {
+        self.per_elem(x)
+    }
+
+    /// Query: nearest `p` anchors, scan their attachments.
+    pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> (u32, f32, usize) {
+        let per = self.per_elem(x);
+        // anchor search: r * d ops (aux term)
+        let anchor_dists: Vec<f32> = self
+            .anchors
+            .iter()
+            .map(|&aid| -self.metric.distance(x, self.data.get(aid as usize)))
+            .collect();
+        ops.aux_ops += (self.anchors.len() * per) as u64;
+        let polled = top_p_largest(&anchor_dists, p);
+        let mut best = f32::INFINITY;
+        let mut best_id = u32::MAX;
+        let mut candidates = 0usize;
+        for &a in &polled {
+            for &vid in &self.attached[a as usize] {
+                let dist = self.metric.distance(x, self.data.get(vid as usize));
+                candidates += 1;
+                if dist < best || (dist == best && vid < best_id) {
+                    best = dist;
+                    best_id = vid;
+                }
+            }
+        }
+        ops.scan_ops += (candidates * per) as u64;
+        ops.searches += 1;
+        (best_id, best, candidates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clustered::{clustered_workload, ClusteredSpec};
+    use crate::data::synthetic;
+
+    #[test]
+    fn attachment_is_exact_cover() {
+        let mut rng = Rng::new(1);
+        let ds = synthetic::dense_patterns(16, 200, &mut rng);
+        let rs = RsAnchors::build(ds, 10, Metric::SqL2, &mut rng).unwrap();
+        let total: usize = rs.attached_sizes().iter().sum();
+        assert_eq!(total, 200);
+        let mut seen = vec![false; 200];
+        for a in &rs.attached {
+            for &v in a {
+                assert!(!seen[v as usize]);
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn full_poll_finds_exact_nn() {
+        let mut rng = Rng::new(2);
+        let ds = synthetic::dense_patterns(16, 100, &mut rng);
+        let rs = RsAnchors::build(ds.clone(), 8, Metric::SqL2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let (id, dist, cands) = rs.query(ds.get(42), 8, &mut ops);
+        assert_eq!(id, 42);
+        assert_eq!(dist, 0.0);
+        assert_eq!(cands, 100);
+    }
+
+    #[test]
+    fn clustered_data_good_recall_at_small_p() {
+        let mut rng = Rng::new(3);
+        let spec = ClusteredSpec { dim: 16, n_clusters: 8, ..ClusteredSpec::sift_like() };
+        let wl = clustered_workload(spec, 600, 40, &mut rng);
+        let rs = RsAnchors::build(wl.base.clone(), 24, Metric::SqL2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let mut hits = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let (id, _, _) = rs.query(wl.queries.get(qi), 4, &mut ops);
+            if id == gt {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 28, "hits={hits}/40");
+    }
+
+    #[test]
+    fn ops_accounting() {
+        let mut rng = Rng::new(4);
+        let ds = synthetic::dense_patterns(8, 50, &mut rng);
+        let rs = RsAnchors::build(ds.clone(), 5, Metric::SqL2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let (_, _, cands) = rs.query(ds.get(0), 2, &mut ops);
+        assert_eq!(ops.aux_ops, 5 * 8);
+        assert_eq!(ops.scan_ops, (cands * 8) as u64);
+    }
+
+    #[test]
+    fn rejects_bad_r() {
+        let mut rng = Rng::new(5);
+        let ds = synthetic::dense_patterns(8, 10, &mut rng);
+        assert!(RsAnchors::build(ds.clone(), 0, Metric::SqL2, &mut rng).is_err());
+        assert!(RsAnchors::build(ds, 11, Metric::SqL2, &mut rng).is_err());
+    }
+}

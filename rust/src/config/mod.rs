@@ -1,0 +1,406 @@
+//! Configuration system: JSON files + programmatic overrides.
+//!
+//! One [`AppConfig`] drives the launcher (`amsearch` CLI): dataset
+//! selection/generation, index hyper-parameters, scoring backend, and
+//! coordinator tuning.  Every field has a sane default so a bare
+//! `amsearch serve` works out of the box.  The file format is JSON
+//! (parsed by the in-tree `util::json`; the offline build has no
+//! serde/toml):
+//!
+//! ```json
+//! {
+//!   "dataset": {"kind": "sift_like", "n": 16384, "n_queries": 256},
+//!   "index":   {"n_classes": 64, "top_p": 2, "allocation": "random"},
+//!   "serve":   {"max_batch": 8, "workers": 2},
+//!   "backend": {"kind": "native", "artifacts_dir": "artifacts"}
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::index::IndexParams;
+use crate::memory::StorageRule;
+use crate::partition::Allocation;
+use crate::runtime::Backend;
+use crate::search::Metric;
+use crate::util::json::Json;
+
+/// Which workload generator to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Paper §3: sparse 0/1 i.i.d. patterns.
+    SparseSynthetic,
+    /// Paper §4: dense ±1 i.i.d. patterns.
+    DenseSynthetic,
+    /// SIFT1M-like clustered surrogate (128-d).
+    SiftLike,
+    /// GIST1M-like clustered surrogate (960-d).
+    GistLike,
+    /// MNIST-like surrogate (784-d).
+    MnistLike,
+    /// Santander-like sparse binary surrogate (369-d).
+    SantanderLike,
+    /// Load fvecs files from `data_dir`.
+    Fvecs,
+}
+
+impl std::str::FromStr for DatasetKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sparse_synthetic" => Ok(DatasetKind::SparseSynthetic),
+            "dense_synthetic" => Ok(DatasetKind::DenseSynthetic),
+            "sift_like" => Ok(DatasetKind::SiftLike),
+            "gist_like" => Ok(DatasetKind::GistLike),
+            "mnist_like" => Ok(DatasetKind::MnistLike),
+            "santander_like" => Ok(DatasetKind::SantanderLike),
+            "fvecs" => Ok(DatasetKind::Fvecs),
+            other => Err(Error::Config(format!("unknown dataset kind '{other}'"))),
+        }
+    }
+}
+
+/// Dataset section.
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    /// Generator / loader selector.
+    pub kind: DatasetKind,
+    /// Database size (generators).
+    pub n: usize,
+    /// Number of queries.
+    pub n_queries: usize,
+    /// Dimension (sparse/dense synthetic only; surrogates fix their own).
+    pub dim: usize,
+    /// Expected ones per sparse pattern (`c`).
+    pub sparse_ones: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Directory holding fvecs files (`base.fvecs`, `query.fvecs`).
+    pub data_dir: Option<PathBuf>,
+    /// Apply §5.2 centering + unit-sphere projection.
+    pub normalize: bool,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            kind: DatasetKind::SiftLike,
+            n: 16384,
+            n_queries: 256,
+            dim: 128,
+            sparse_ones: 8.0,
+            seed: 42,
+            data_dir: None,
+            normalize: false,
+        }
+    }
+}
+
+/// Index section (mirrors [`IndexParams`]).
+#[derive(Debug, Clone)]
+pub struct IndexConfig {
+    /// Number of classes `q`.
+    pub n_classes: usize,
+    /// Default poll depth `p`.
+    pub top_p: usize,
+    /// Storage rule.
+    pub rule: StorageRule,
+    /// Allocation strategy.
+    pub allocation: Allocation,
+    /// Scan metric.
+    pub metric: Metric,
+    /// Greedy class-size cap factor.
+    pub greedy_cap_factor: Option<f64>,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            n_classes: 64,
+            top_p: 1,
+            rule: StorageRule::Sum,
+            allocation: Allocation::Random,
+            metric: Metric::SqL2,
+            greedy_cap_factor: None,
+        }
+    }
+}
+
+impl IndexConfig {
+    /// Convert to runtime [`IndexParams`].
+    pub fn to_params(&self) -> IndexParams {
+        IndexParams {
+            n_classes: self.n_classes,
+            top_p: self.top_p,
+            rule: self.rule,
+            allocation: self.allocation,
+            metric: self.metric,
+            greedy_cap_factor: self.greedy_cap_factor,
+        }
+    }
+}
+
+/// Coordinator section.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max dynamic batch size.
+    pub max_batch: usize,
+    /// Batcher deadline in microseconds.
+    pub max_wait_us: u64,
+    /// Worker threads.
+    pub workers: usize,
+    /// Request queue bound.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, max_wait_us: 200, workers: 2, queue_depth: 1024 }
+    }
+}
+
+impl ServeConfig {
+    /// Convert to the coordinator's config struct.
+    pub fn to_coordinator(&self) -> crate::coordinator::CoordinatorConfig {
+        crate::coordinator::CoordinatorConfig {
+            max_batch: self.max_batch,
+            max_wait_us: self.max_wait_us,
+            workers: self.workers,
+            queue_depth: self.queue_depth,
+        }
+    }
+}
+
+/// Backend section.
+#[derive(Debug, Clone)]
+pub struct BackendConfig {
+    /// native | pjrt.
+    pub kind: Backend,
+    /// AOT artifacts directory.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig { kind: Backend::Native, artifacts_dir: PathBuf::from("artifacts") }
+    }
+}
+
+/// Top-level application configuration.
+#[derive(Debug, Clone, Default)]
+pub struct AppConfig {
+    /// Dataset selection.
+    pub dataset: DatasetConfig,
+    /// Index hyper-parameters.
+    pub index: IndexConfig,
+    /// Serving parameters.
+    pub serve: ServeConfig,
+    /// Scoring backend.
+    pub backend: BackendConfig,
+}
+
+fn get_usize(obj: &Json, key: &str, default: usize) -> Result<usize> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| Error::Config(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_u64(obj: &Json, key: &str, default: u64) -> Result<u64> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| Error::Config(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_f64(obj: &Json, key: &str, default: f64) -> Result<f64> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| Error::Config(format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_bool(obj: &Json, key: &str, default: bool) -> Result<bool> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("'{key}' must be a boolean"))),
+    }
+}
+
+fn get_parsed<T: std::str::FromStr<Err = Error>>(
+    obj: &Json,
+    key: &str,
+    default: T,
+) -> Result<T> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| Error::Config(format!("'{key}' must be a string")))?
+            .parse::<T>(),
+    }
+}
+
+impl AppConfig {
+    /// Load from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_json(&text)
+    }
+
+    /// Parse from JSON text (missing fields take defaults).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
+        let empty = Json::Obj(Default::default());
+        let mut cfg = AppConfig::default();
+
+        let ds = root.get("dataset").unwrap_or(&empty);
+        cfg.dataset.kind = get_parsed(ds, "kind", cfg.dataset.kind.clone_kind())?;
+        cfg.dataset.n = get_usize(ds, "n", cfg.dataset.n)?;
+        cfg.dataset.n_queries = get_usize(ds, "n_queries", cfg.dataset.n_queries)?;
+        cfg.dataset.dim = get_usize(ds, "dim", cfg.dataset.dim)?;
+        cfg.dataset.sparse_ones = get_f64(ds, "sparse_ones", cfg.dataset.sparse_ones)?;
+        cfg.dataset.seed = get_u64(ds, "seed", cfg.dataset.seed)?;
+        cfg.dataset.normalize = get_bool(ds, "normalize", cfg.dataset.normalize)?;
+        if let Some(v) = ds.get("data_dir") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'data_dir' must be a string".into()))?;
+            cfg.dataset.data_dir = Some(PathBuf::from(s));
+        }
+
+        let ix = root.get("index").unwrap_or(&empty);
+        cfg.index.n_classes = get_usize(ix, "n_classes", cfg.index.n_classes)?;
+        cfg.index.top_p = get_usize(ix, "top_p", cfg.index.top_p)?;
+        cfg.index.rule = get_parsed(ix, "rule", cfg.index.rule)?;
+        cfg.index.allocation = get_parsed(ix, "allocation", cfg.index.allocation)?;
+        cfg.index.metric = get_parsed(ix, "metric", cfg.index.metric)?;
+        if let Some(v) = ix.get("greedy_cap_factor") {
+            cfg.index.greedy_cap_factor = Some(
+                v.as_f64()
+                    .ok_or_else(|| Error::Config("'greedy_cap_factor' must be a number".into()))?,
+            );
+        }
+
+        let sv = root.get("serve").unwrap_or(&empty);
+        cfg.serve.max_batch = get_usize(sv, "max_batch", cfg.serve.max_batch)?;
+        cfg.serve.max_wait_us = get_u64(sv, "max_wait_us", cfg.serve.max_wait_us)?;
+        cfg.serve.workers = get_usize(sv, "workers", cfg.serve.workers)?;
+        cfg.serve.queue_depth = get_usize(sv, "queue_depth", cfg.serve.queue_depth)?;
+
+        let be = root.get("backend").unwrap_or(&empty);
+        cfg.backend.kind = get_parsed(be, "kind", cfg.backend.kind)?;
+        if let Some(v) = be.get("artifacts_dir") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'artifacts_dir' must be a string".into()))?;
+            cfg.backend.artifacts_dir = PathBuf::from(s);
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.dataset.n == 0 {
+            return Err(Error::Config("dataset.n must be > 0".into()));
+        }
+        if self.index.n_classes > self.dataset.n {
+            return Err(Error::Config(format!(
+                "index.n_classes {} > dataset.n {}",
+                self.index.n_classes, self.dataset.n
+            )));
+        }
+        if self.serve.max_batch == 0 || self.serve.workers == 0 {
+            return Err(Error::Config("serve.max_batch/workers must be > 0".into()));
+        }
+        if self.dataset.kind == DatasetKind::Fvecs && self.dataset.data_dir.is_none() {
+            return Err(Error::Config("dataset.kind=fvecs requires data_dir".into()));
+        }
+        Ok(())
+    }
+}
+
+impl DatasetKind {
+    fn clone_kind(self) -> DatasetKind {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        AppConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_json_parses() {
+        let cfg = AppConfig::from_json(
+            r#"{
+                "dataset": {"kind": "dense_synthetic", "n": 4096, "dim": 64,
+                             "seed": 7, "normalize": true},
+                "index": {"n_classes": 32, "top_p": 4, "rule": "max",
+                           "allocation": "greedy", "metric": "neg_dot",
+                           "greedy_cap_factor": 2.0},
+                "serve": {"max_batch": 16, "workers": 4},
+                "backend": {"kind": "pjrt", "artifacts_dir": "a/b"}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset.kind, DatasetKind::DenseSynthetic);
+        assert_eq!(cfg.dataset.n, 4096);
+        assert!(cfg.dataset.normalize);
+        assert_eq!(cfg.index.n_classes, 32);
+        assert_eq!(cfg.index.rule, StorageRule::Max);
+        assert_eq!(cfg.index.allocation, Allocation::Greedy);
+        assert_eq!(cfg.index.metric, Metric::NegDot);
+        assert_eq!(cfg.index.greedy_cap_factor, Some(2.0));
+        assert_eq!(cfg.serve.max_batch, 16);
+        assert_eq!(cfg.backend.kind, Backend::Pjrt);
+        assert_eq!(cfg.backend.artifacts_dir, PathBuf::from("a/b"));
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg =
+            AppConfig::from_json(r#"{"index": {"n_classes": 10}}"#).unwrap();
+        assert_eq!(cfg.index.n_classes, 10);
+        assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.dataset.kind, DatasetKind::SiftLike);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(AppConfig::from_json(r#"{"dataset": {"n": 0}}"#).is_err());
+        assert!(AppConfig::from_json(
+            r#"{"dataset": {"n": 10}, "index": {"n_classes": 20}}"#
+        )
+        .is_err());
+        assert!(AppConfig::from_json(r#"{"dataset": {"kind": "fvecs"}}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"index": {"rule": "median"}}"#).is_err());
+        assert!(AppConfig::from_json("{ not json").is_err());
+    }
+
+    #[test]
+    fn to_params_matches() {
+        let cfg =
+            AppConfig::from_json(r#"{"index": {"n_classes": 12, "top_p": 3}}"#).unwrap();
+        let p = cfg.index.to_params();
+        assert_eq!(p.n_classes, 12);
+        assert_eq!(p.top_p, 3);
+    }
+}

@@ -1,0 +1,146 @@
+//! Dynamic batcher: groups incoming requests into batches of at most
+//! `max_batch`, waiting at most `max_wait` for stragglers — the standard
+//! serving trade-off between batch efficiency (the AOT scorer runs a
+//! fixed batch) and tail latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+use super::protocol::SearchRequest;
+
+/// Run the batching loop: read requests from `rx`, emit batches on `tx`.
+/// Returns when `rx` disconnects (all pending requests flushed) or `tx`
+/// disconnects.
+pub fn run_batcher(
+    rx: Receiver<SearchRequest>,
+    tx: SyncSender<Vec<SearchRequest>>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    loop {
+        // block for the first request of the next batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // producers gone, nothing pending
+        };
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = tx.send(batch);
+                    return;
+                }
+            }
+        }
+        if tx.send(batch).is_err() {
+            return; // workers gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> (SearchRequest, mpsc::Receiver<super::super::SearchResponse>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (
+            SearchRequest {
+                id,
+                vector: vec![0.0; 4],
+                top_p: 1,
+                enqueued: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let h = std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, 3, Duration::from_millis(50))
+        });
+        let mut keep = Vec::new();
+        for i in 0..7 {
+            let (r, rx) = req(i);
+            keep.push(rx);
+            in_tx.send(r).unwrap();
+        }
+        drop(in_tx);
+        let mut sizes = Vec::new();
+        let mut ids = Vec::new();
+        while let Ok(batch) = out_rx.recv() {
+            sizes.push(batch.len());
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        h.join().unwrap();
+        assert_eq!(ids, (0..7).collect::<Vec<u64>>()); // order preserved
+        assert!(sizes.iter().all(|&s| s <= 3));
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_deadline() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, 8, Duration::from_millis(10))
+        });
+        let (r, _keep) = req(0);
+        in_tx.send(r).unwrap();
+        // no further traffic: the single request must come out anyway
+        let batch = out_rx
+            .recv_timeout(Duration::from_millis(500))
+            .expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 0);
+        drop(in_tx);
+    }
+
+    #[test]
+    fn no_requests_lost_or_duplicated_under_load() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(8);
+        std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, 4, Duration::from_micros(200))
+        });
+        let n = 500u64;
+        let sender = std::thread::spawn(move || {
+            let mut keep = Vec::new();
+            for i in 0..n {
+                let (r, rx) = req(i);
+                keep.push(rx);
+                in_tx.send(r).unwrap();
+                if i % 97 == 0 {
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+            }
+            keep
+        });
+        let mut seen = Vec::new();
+        while seen.len() < n as usize {
+            let batch = out_rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("batches keep flowing");
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        let _keep = sender.join().unwrap();
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), n as usize, "lost/duplicated requests");
+        assert_eq!(seen, (0..n).collect::<Vec<u64>>(), "order broken");
+    }
+}

@@ -1,0 +1,271 @@
+//! The per-worker search engine: an [`AmIndex`] plus a pluggable
+//! [`ClassScorer`] backend (native or PJRT).
+//!
+//! The engine is deliberately *not* `Send`: the PJRT client is
+//! `Rc`-based, so each worker thread constructs its own engine via an
+//! [`EngineFactory`] and keeps it thread-local for its lifetime.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::index::AmIndex;
+use crate::metrics::OpsCounter;
+use crate::runtime::{
+    Backend, ClassScorer, Manifest, NativeScorer, PjrtDistances, PjrtScorer,
+};
+use crate::search::top_p_largest;
+
+use super::protocol::SearchResponse;
+
+/// A ready-to-serve engine (one per worker thread).
+pub struct Engine {
+    index: Arc<AmIndex>,
+    scorer: Box<dyn ClassScorer>,
+    /// Optional PJRT candidate scanner (the AOT `class_distances` GEMM).
+    /// When present and every class fits its capacity, the scan stage
+    /// also runs through the compiled artifact; otherwise the native
+    /// scan is used.
+    scanner: Option<PjrtDistances>,
+    /// Per-class member matrices (flat row-major), precomputed so the
+    /// PJRT scan needs no per-query gather.
+    class_members: Vec<Vec<f32>>,
+}
+
+impl Engine {
+    /// Build with the native scorer.
+    pub fn native(index: Arc<AmIndex>) -> Result<Self> {
+        let scorer = NativeScorer::new(
+            index.bank().stacked().to_vec(),
+            index.dim(),
+            index.params().n_classes,
+        )?;
+        Ok(Engine { index, scorer: Box::new(scorer), scanner: None, class_members: Vec::new() })
+    }
+
+    /// Build with the PJRT scorer (and, when an artifact matches, the
+    /// PJRT candidate scanner) from an artifacts directory.
+    pub fn pjrt(index: Arc<AmIndex>, artifacts_dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = crate::runtime::cpu_client()?;
+        let scorer = PjrtScorer::from_manifest(
+            &client,
+            &manifest,
+            index.bank().stacked(),
+            index.dim(),
+            index.params().n_classes,
+        )?;
+        // candidate-scan artifact: usable when the largest class fits
+        let max_class = (0..index.params().n_classes)
+            .map(|i| index.partition().members(i).len())
+            .max()
+            .unwrap_or(0);
+        let mut scanner = None;
+        let mut class_members = Vec::new();
+        for entry in manifest.entries() {
+            if entry.kind == "class_distances"
+                && entry.d == index.dim()
+                && entry.k.is_some_and(|k| k >= max_class)
+            {
+                if let Ok(d) = PjrtDistances::from_manifest(
+                    &client,
+                    &manifest,
+                    index.dim(),
+                    entry.k.expect("checked"),
+                ) {
+                    scanner = Some(d);
+                    class_members = (0..index.params().n_classes)
+                        .map(|i| {
+                            index
+                                .data()
+                                .gather(index.partition().members(i))
+                                .as_flat()
+                                .to_vec()
+                        })
+                        .collect();
+                    break;
+                }
+            }
+        }
+        Ok(Engine { index, scorer: Box::new(scorer), scanner, class_members })
+    }
+
+    /// True when the candidate scan also runs through PJRT.
+    pub fn has_pjrt_scan(&self) -> bool {
+        self.scanner.is_some()
+    }
+
+    /// PJRT candidate scan over the polled classes for one query.
+    fn scan_pjrt(
+        &self,
+        scanner: &PjrtDistances,
+        x: &[f32],
+        polled: &[u32],
+        ops: &mut OpsCounter,
+    ) -> Result<(u32, f32, usize)> {
+        let d = self.index.dim();
+        let mut best = f32::INFINITY;
+        let mut best_id = u32::MAX;
+        let mut candidates = 0usize;
+        for &ci in polled {
+            let members = &self.class_members[ci as usize];
+            let n_members = members.len() / d;
+            if n_members == 0 {
+                continue;
+            }
+            let dists = scanner.distances(members, n_members, x)?;
+            candidates += n_members;
+            for (j, &dist) in dists.iter().enumerate() {
+                let vid = self.index.partition().members(ci as usize)[j];
+                if dist < best || (dist == best && vid < best_id) {
+                    best = dist;
+                    best_id = vid;
+                }
+            }
+        }
+        ops.scan_ops += (candidates * d) as u64;
+        Ok((best_id, best, candidates))
+    }
+
+    /// The scorer backend in use.
+    pub fn backend(&self) -> &'static str {
+        self.scorer.backend()
+    }
+
+    /// The index served by this engine.
+    pub fn index(&self) -> &AmIndex {
+        &self.index
+    }
+
+    /// Serve one batch: score all queries in one scorer call, then finish
+    /// each request (top-p select + candidate scan) individually.
+    ///
+    /// `queries` is a slice of (vector, top_p) pairs; returns one
+    /// response skeleton per query (id/service time filled by caller).
+    pub fn serve_batch(&self, queries: &[(&[f32], usize)]) -> Result<Vec<SearchResponse>> {
+        let d = self.index.dim();
+        let q = self.index.params().n_classes;
+        let mut flat = Vec::with_capacity(queries.len() * d);
+        for (v, _) in queries {
+            flat.extend_from_slice(v);
+        }
+        let scores = self.scorer.score(&flat)?;
+        let mut out = Vec::with_capacity(queries.len());
+        for (bi, (v, top_p)) in queries.iter().enumerate() {
+            let mut ops = OpsCounter::new();
+            // account scoring cost per the paper's model (d²q dense)
+            ops.score_ops += (d * d * q) as u64;
+            let p = if *top_p == 0 { self.index.params().top_p } else { *top_p };
+            let p = p.min(q);
+            let resp = if let Some(scanner) = &self.scanner {
+                // all-PJRT request path: top-p select in rust, scan GEMM
+                // through the AOT artifact
+                let polled = top_p_largest(&scores[bi * q..(bi + 1) * q], p);
+                let (id, distance, candidates) =
+                    self.scan_pjrt(scanner, v, &polled, &mut ops)?;
+                ops.searches += 1;
+                SearchResponse {
+                    id: 0,
+                    neighbor: id,
+                    distance,
+                    polled,
+                    candidates,
+                    ops: ops.total(),
+                    service_ns: 0,
+                }
+            } else {
+                let r = self.index.finish_query(
+                    v,
+                    &scores[bi * q..(bi + 1) * q],
+                    p,
+                    &mut ops,
+                );
+                SearchResponse {
+                    id: 0,
+                    neighbor: r.id,
+                    distance: r.distance,
+                    polled: r.polled,
+                    candidates: r.candidates,
+                    ops: ops.total(),
+                    service_ns: 0,
+                }
+            };
+            out.push(resp);
+        }
+        Ok(out)
+    }
+}
+
+/// How worker threads construct their engines.
+#[derive(Debug, Clone)]
+pub struct EngineFactory {
+    /// Shared immutable index.
+    pub index: Arc<AmIndex>,
+    /// Scoring backend.
+    pub backend: Backend,
+    /// Artifacts directory (PJRT backend only).
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl EngineFactory {
+    /// Construct an engine on the calling thread.
+    pub fn build(&self) -> Result<Engine> {
+        match self.backend {
+            Backend::Native => Engine::native(self.index.clone()),
+            Backend::Pjrt => {
+                let dir = self.artifacts_dir.clone().unwrap_or_else(|| "artifacts".into());
+                Engine::pjrt(self.index.clone(), &dir)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synthetic::{self, QueryModel};
+    use crate::index::IndexParams;
+
+    fn test_index() -> (Arc<AmIndex>, crate::data::Workload) {
+        let mut rng = Rng::new(1);
+        let wl = synthetic::dense_workload(32, 256, 10, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 8, ..Default::default() };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        (Arc::new(idx), wl)
+    }
+
+    #[test]
+    fn native_engine_serves_batch() {
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx.clone()).unwrap();
+        assert_eq!(engine.backend(), "native");
+        let queries: Vec<(&[f32], usize)> =
+            (0..4).map(|i| (wl.queries.get(i), 8usize)).collect();
+        let rs = engine.serve_batch(&queries).unwrap();
+        assert_eq!(rs.len(), 4);
+        for (i, r) in rs.iter().enumerate() {
+            // p = q = full scan: exact answer guaranteed
+            assert_eq!(r.neighbor, wl.ground_truth[i]);
+            assert_eq!(r.candidates, 256);
+            assert!(r.ops > 0);
+        }
+    }
+
+    #[test]
+    fn zero_top_p_uses_index_default() {
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx.clone()).unwrap();
+        let rs = engine.serve_batch(&[(wl.queries.get(0), 0usize)]).unwrap();
+        // default top_p = 1 -> exactly one class polled
+        assert_eq!(rs[0].polled.len(), 1);
+    }
+
+    #[test]
+    fn factory_builds_native() {
+        let (idx, _) = test_index();
+        let f = EngineFactory { index: idx, backend: Backend::Native, artifacts_dir: None };
+        let e = f.build().unwrap();
+        assert_eq!(e.backend(), "native");
+    }
+}

@@ -1,0 +1,15 @@
+//! Layer-3 coordinator: the serving system around the index.
+//!
+//! * [`protocol`] — request/response types + config
+//! * [`batcher`] — dynamic batching (size + deadline)
+//! * [`engine`] — per-worker index + scorer (native or PJRT)
+//! * [`server`] — async front door, worker pool, metrics
+
+pub mod batcher;
+pub mod engine;
+pub mod protocol;
+pub mod server;
+
+pub use engine::{Engine, EngineFactory};
+pub use protocol::{CoordinatorConfig, SearchRequest, SearchResponse};
+pub use server::{SearchServer, ServerMetrics};

@@ -1,0 +1,103 @@
+//! Request/response types flowing through the coordinator.
+//!
+//! The offline build has no async runtime; the coordinator is built on
+//! std threads and channels.  Each request carries a rendezvous
+//! (`SyncSender` of capacity 1) on which exactly one response is
+//! delivered.
+
+use std::sync::mpsc::SyncSender;
+
+/// A nearest-neighbor search request.
+#[derive(Debug)]
+pub struct SearchRequest {
+    /// Monotonic request id (assigned by the server).
+    pub id: u64,
+    /// Query vector (dim must match the index).
+    pub vector: Vec<f32>,
+    /// Number of classes to poll (`p`); 0 = the index default.
+    pub top_p: usize,
+    /// Enqueue timestamp (for end-to-end latency).
+    pub enqueued: std::time::Instant,
+    /// Completion channel (capacity 1; dropped on worker failure, which
+    /// surfaces as a recv error to the caller).
+    pub resp: SyncSender<SearchResponse>,
+}
+
+/// The answer to one search request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Database id of the best candidate found.
+    pub neighbor: u32,
+    /// Its distance under the index metric.
+    pub distance: f32,
+    /// Classes that were polled, best first.
+    pub polled: Vec<u32>,
+    /// Number of candidates scanned.
+    pub candidates: usize,
+    /// Elementary operations spent on this request (paper cost model).
+    pub ops: u64,
+    /// Service time (scoring + scan) attributed to this request.
+    pub service_ns: u64,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    /// Maximum dynamic batch size (should match the AOT batch for the
+    /// PJRT backend).
+    pub max_batch: usize,
+    /// Maximum time the batcher waits to fill a batch.
+    pub max_wait_us: u64,
+    /// Number of worker threads (each owns a scorer).
+    pub workers: usize,
+    /// Bound of the request queue (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_batch: 8, max_wait_us: 200, workers: 2, queue_depth: 1024 }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Validate the configuration.
+    pub fn validate(&self) -> crate::error::Result<()> {
+        use crate::error::Error;
+        if self.max_batch == 0 {
+            return Err(Error::Config("max_batch must be > 0".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be > 0".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("queue_depth must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        CoordinatorConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = CoordinatorConfig::default();
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+        c = CoordinatorConfig::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        c = CoordinatorConfig::default();
+        c.queue_depth = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! The search server: front door + dynamic batcher + worker pool, all on
+//! std threads (the offline build has no async runtime; channels provide
+//! identical structure).
+//!
+//! Topology (vLLM-router-like, scaled to this system):
+//!
+//! ```text
+//! clients --> sync_channel (bounded, backpressure) --> batcher thread
+//!         --> batch channel --> N worker threads (each owns an Engine;
+//!             PJRT clients are Rc-based and must stay on one thread)
+//!         --> per-request rendezvous channel --> clients
+//! ```
+//!
+//! Metrics (latency histograms, ops counters) are aggregated centrally
+//! behind a mutex touched once per *batch*, not per request.
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics::{LatencyHistogram, OpsCounter};
+
+use super::batcher::run_batcher;
+use super::engine::EngineFactory;
+use super::protocol::{CoordinatorConfig, SearchRequest, SearchResponse};
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    /// End-to-end request latency (enqueue -> response ready).
+    pub latency: LatencyHistogram,
+    /// Scorer+scan batch service time.
+    pub service: LatencyHistogram,
+    /// Aggregated paper-model operation counts.
+    pub ops: OpsCounter,
+    /// Batches executed.
+    pub batches: u64,
+    /// Requests served.
+    pub requests: u64,
+}
+
+impl ServerMetrics {
+    /// Mean requests per batch (batching efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Handle to a running search server.  `search` blocks the calling
+/// thread; use one client thread per in-flight request (see the serve
+/// command / benches for the load-generation pattern).
+pub struct SearchServer {
+    tx: Mutex<Option<SyncSender<SearchRequest>>>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    next_id: std::sync::atomic::AtomicU64,
+    dim: usize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SearchServer {
+    /// Start the server: one batcher thread + `config.workers` engine
+    /// threads built from `factory`.
+    pub fn start(factory: EngineFactory, config: CoordinatorConfig) -> Result<Self> {
+        config.validate()?;
+        let dim = factory.index.dim();
+        let (req_tx, req_rx) = mpsc::sync_channel::<SearchRequest>(config.queue_depth);
+        let (batch_tx, batch_rx) =
+            mpsc::sync_channel::<Vec<SearchRequest>>(config.workers * 2);
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+
+        let max_batch = config.max_batch;
+        let max_wait = Duration::from_micros(config.max_wait_us);
+        let batcher = std::thread::Builder::new()
+            .name("amsearch-batcher".into())
+            .spawn(move || run_batcher(req_rx, batch_tx, max_batch, max_wait))
+            .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
+
+        // single consumer side shared by worker threads
+        let batch_rx: Arc<Mutex<Receiver<Vec<SearchRequest>>>> =
+            Arc::new(Mutex::new(batch_rx));
+        let mut workers = Vec::with_capacity(config.workers);
+        for wi in 0..config.workers {
+            let factory = factory.clone();
+            let batch_rx = batch_rx.clone();
+            let metrics = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("amsearch-worker-{wi}"))
+                .spawn(move || {
+                    let engine = match factory.build() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            eprintln!("worker {wi}: engine build failed: {e}");
+                            return;
+                        }
+                    };
+                    loop {
+                        // take one batch under the lock, release before work
+                        let batch = {
+                            let rx = batch_rx.lock().expect("poisoned");
+                            match rx.recv() {
+                                Ok(b) => b,
+                                Err(_) => return,
+                            }
+                        };
+                        serve_one_batch(&engine, batch, &metrics);
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
+            workers.push(handle);
+        }
+
+        Ok(SearchServer {
+            tx: Mutex::new(Some(req_tx)),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            dim,
+            workers: Mutex::new(workers),
+            batcher: Mutex::new(Some(batcher)),
+        })
+    }
+
+    /// Submit a query and block until its response arrives.
+    pub fn search(&self, vector: Vec<f32>, top_p: usize) -> Result<SearchResponse> {
+        if vector.len() != self.dim {
+            return Err(Error::Shape(format!(
+                "query dim {} != index dim {}",
+                vector.len(),
+                self.dim
+            )));
+        }
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        let req = SearchRequest {
+            id,
+            vector,
+            top_p,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        {
+            let guard = self.tx.lock().expect("poisoned");
+            let tx = guard
+                .as_ref()
+                .ok_or_else(|| Error::Coordinator("server shutting down".into()))?;
+            tx.send(req)
+                .map_err(|_| Error::Coordinator("server shutting down".into()))?;
+        }
+        resp_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped request".into()))
+    }
+
+    /// Snapshot the metrics.
+    pub fn metrics(&self) -> ServerMetrics {
+        let m = self.metrics.lock().expect("poisoned");
+        ServerMetrics {
+            latency: m.latency.clone(),
+            service: m.service.clone(),
+            ops: m.ops,
+            batches: m.batches,
+            requests: m.requests,
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain, join threads.
+    pub fn shutdown(&self) {
+        // drop the sender -> batcher drains & exits -> workers exit
+        *self.tx.lock().expect("poisoned") = None;
+        if let Some(b) = self.batcher.lock().expect("poisoned").take() {
+            let _ = b.join();
+        }
+        let mut workers = self.workers.lock().expect("poisoned");
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for SearchServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Execute one batch on an engine and complete every request.
+fn serve_one_batch(
+    engine: &super::engine::Engine,
+    batch: Vec<SearchRequest>,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+) {
+    let started = Instant::now();
+    let queries: Vec<(&[f32], usize)> =
+        batch.iter().map(|r| (r.vector.as_slice(), r.top_p)).collect();
+    match engine.serve_batch(&queries) {
+        Ok(mut responses) => {
+            let service_ns = started.elapsed().as_nanos() as u64;
+            let per_req_ns = service_ns / batch.len().max(1) as u64;
+            let mut agg_ops = OpsCounter::new();
+            let mut latency = LatencyHistogram::new();
+            let mut completed = Vec::with_capacity(batch.len());
+            for (req, resp) in batch.into_iter().zip(responses.drain(..)) {
+                let mut resp = resp;
+                resp.id = req.id;
+                resp.service_ns = per_req_ns;
+                agg_ops.score_ops += resp.ops;
+                agg_ops.searches += 1;
+                latency.record(req.enqueued.elapsed());
+                completed.push((req.resp, resp));
+            }
+            // metrics BEFORE completing requests: a client must never
+            // observe its response while its own request is uncounted
+            {
+                let mut m = metrics.lock().expect("poisoned");
+                m.batches += 1;
+                m.requests += agg_ops.searches;
+                m.ops.merge(&agg_ops);
+                m.service.record_ns(service_ns);
+                m.latency.merge(&latency);
+            }
+            for (tx, resp) in completed {
+                let _ = tx.send(resp); // receiver may have timed out
+            }
+        }
+        Err(e) => {
+            eprintln!("batch failed: {e}; dropping {} requests", batch.len());
+            // dropping the rendezvous senders surfaces the error to clients
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Clustered real-data surrogates (SIFT1M / GIST1M stand-ins).
+//!
+//! The TEXMEX corpora are not redistributable inside this environment, so
+//! figs 11–12 run on seeded Gaussian-mixture surrogates that preserve what
+//! the methods under test actually exploit: clusterability (both RS
+//! anchors and greedy-allocated associative memories win by matching
+//! partition structure to data structure), the `d ≪ n` regime, and
+//! anisotropic local geometry.  The real files drop in via `data::io` if
+//! present (see DESIGN.md §6).
+
+use super::dataset::{Dataset, Workload};
+use super::rng::Rng;
+use crate::util::par::parallel_map;
+
+/// Parameters of the Gaussian-mixture surrogate.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusteredSpec {
+    /// Vector dimension (128 for SIFT-like, 960 for GIST-like).
+    pub dim: usize,
+    /// Number of mixture components.
+    pub n_clusters: usize,
+    /// Cluster center scale (inter-cluster separation).
+    pub center_scale: f64,
+    /// Within-cluster noise scale.
+    pub noise_scale: f64,
+    /// Zipf exponent for cluster sizes (0 = uniform; ~0.8 heavy-tailed).
+    pub size_skew: f64,
+    /// Noise added to a base vector to form a query (relative to
+    /// `noise_scale`; small values keep the seed vector the likely NN
+    /// without making the task trivial).
+    pub query_jitter: f64,
+}
+
+impl ClusteredSpec {
+    /// SIFT1M-like: 128-d, moderately clustered.
+    pub fn sift_like() -> Self {
+        ClusteredSpec {
+            dim: 128,
+            n_clusters: 256,
+            center_scale: 1.0,
+            noise_scale: 0.35,
+            size_skew: 0.8,
+            query_jitter: 0.25,
+        }
+    }
+
+    /// GIST1M-like: 960-d global descriptors, smoother cluster structure.
+    pub fn gist_like() -> Self {
+        ClusteredSpec {
+            dim: 960,
+            n_clusters: 128,
+            center_scale: 1.0,
+            noise_scale: 0.45,
+            size_skew: 0.6,
+            query_jitter: 0.25,
+        }
+    }
+}
+
+/// Zipf-like cluster-size allocation: sizes ∝ (rank+1)^-skew, normalized
+/// to sum exactly to `n`.
+fn cluster_sizes(n: usize, n_clusters: usize, skew: f64) -> Vec<usize> {
+    let weights: Vec<f64> = (0..n_clusters)
+        .map(|r| 1.0 / ((r + 1) as f64).powf(skew))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut sizes: Vec<usize> = weights
+        .iter()
+        .map(|w| ((w / total) * n as f64).floor() as usize)
+        .collect();
+    let mut assigned: usize = sizes.iter().sum();
+    let mut r = 0;
+    while assigned < n {
+        sizes[r % n_clusters] += 1;
+        assigned += 1;
+        r += 1;
+    }
+    sizes
+}
+
+/// Generate the base set of a clustered workload.
+pub fn clustered_base(spec: ClusteredSpec, n: usize, rng: &mut Rng) -> Dataset {
+    let d = spec.dim;
+    // centers
+    let mut centers = Vec::with_capacity(spec.n_clusters * d);
+    for _ in 0..spec.n_clusters * d {
+        centers.push(rng.normal() * spec.center_scale);
+    }
+    // anisotropy: per-cluster per-axis scales in [0.5, 1.5]
+    let mut scales = Vec::with_capacity(spec.n_clusters * d);
+    for _ in 0..spec.n_clusters * d {
+        scales.push(0.5 + rng.uniform());
+    }
+    let sizes = cluster_sizes(n, spec.n_clusters, spec.size_skew);
+    let mut data = Vec::with_capacity(n * d);
+    for (ci, &sz) in sizes.iter().enumerate() {
+        let center = &centers[ci * d..(ci + 1) * d];
+        let scale = &scales[ci * d..(ci + 1) * d];
+        for _ in 0..sz {
+            for j in 0..d {
+                data.push(
+                    (center[j] + rng.normal() * spec.noise_scale * scale[j]) as f32,
+                );
+            }
+        }
+    }
+    Dataset::from_flat(d, data).expect("consistent by construction")
+}
+
+/// Brute-force exact nearest neighbors (squared L2), parallel over
+/// queries.  This defines ground truth for recall@1.
+pub fn exact_ground_truth(base: &Dataset, queries: &Dataset) -> Vec<u32> {
+    let dim = base.dim();
+    parallel_map(queries.len(), |qi| {
+        let q = queries.get(qi);
+        let mut best = f32::INFINITY;
+        let mut best_i = 0u32;
+        for (i, v) in base.iter().enumerate() {
+            let mut dist = 0f32;
+            for j in 0..dim {
+                let t = q[j] - v[j];
+                dist += t * t;
+            }
+            if dist < best {
+                best = dist;
+                best_i = i as u32;
+            }
+        }
+        best_i
+    })
+}
+
+/// Full clustered workload: queries are jittered copies of random base
+/// vectors; ground truth is recomputed exactly (the jittered query's NN is
+/// *not* always its seed).
+pub fn clustered_workload(
+    spec: ClusteredSpec,
+    n: usize,
+    n_queries: usize,
+    rng: &mut Rng,
+) -> Workload {
+    let base = clustered_base(spec, n, rng);
+    let d = spec.dim;
+    let mut queries = Dataset::empty(d);
+    for _ in 0..n_queries {
+        let seed = rng.below(n as u64) as usize;
+        let sv = base.get(seed);
+        let q: Vec<f32> = sv
+            .iter()
+            .map(|&x| x + (rng.normal() * spec.noise_scale * spec.query_jitter) as f32)
+            .collect();
+        queries.push(&q).expect("dims match");
+    }
+    let ground_truth = exact_ground_truth(&base, &queries);
+    Workload { base, queries, ground_truth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_sum_to_n() {
+        for &(n, c, s) in &[(1000, 16, 0.8), (997, 10, 0.0), (50, 50, 1.2)] {
+            let sizes = cluster_sizes(n, c, s);
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            assert_eq!(sizes.len(), c);
+        }
+    }
+
+    #[test]
+    fn skew_makes_head_heavier() {
+        let sizes = cluster_sizes(10_000, 20, 0.9);
+        assert!(sizes[0] > sizes[19] * 2, "sizes={sizes:?}");
+    }
+
+    #[test]
+    fn base_has_cluster_structure() {
+        let mut rng = Rng::new(1);
+        let spec = ClusteredSpec {
+            dim: 16,
+            n_clusters: 4,
+            center_scale: 5.0,
+            noise_scale: 0.1,
+            size_skew: 0.0,
+            query_jitter: 0.1,
+        };
+        let ds = clustered_base(spec, 400, &mut rng);
+        assert_eq!(ds.len(), 400);
+        // within-cluster distance (consecutive rows share a cluster:
+        // sizes are uniform=100) vs across-cluster distance
+        let d_in = sq(ds.get(0), ds.get(1));
+        let d_out = sq(ds.get(0), ds.get(399));
+        assert!(d_out > 10.0 * d_in, "d_in={d_in} d_out={d_out}");
+    }
+
+    fn sq(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn ground_truth_is_argmin() {
+        let mut rng = Rng::new(2);
+        let spec = ClusteredSpec::sift_like();
+        let spec = ClusteredSpec { dim: 8, n_clusters: 3, ..spec };
+        let wl = clustered_workload(spec, 200, 20, &mut rng);
+        wl.validate().unwrap();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let q = wl.queries.get(qi);
+            let d_gt = sq(q, wl.base.get(gt as usize));
+            for i in 0..wl.base.len() {
+                assert!(d_gt <= sq(q, wl.base.get(i)) + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = ClusteredSpec { dim: 8, n_clusters: 3, ..ClusteredSpec::sift_like() };
+        let a = clustered_workload(spec, 100, 5, &mut Rng::new(7));
+        let b = clustered_workload(spec, 100, 5, &mut Rng::new(7));
+        assert_eq!(a.base.as_flat(), b.base.as_flat());
+        assert_eq!(a.ground_truth, b.ground_truth);
+    }
+}

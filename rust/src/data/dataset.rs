@@ -1,0 +1,284 @@
+//! Core dataset container and preprocessing.
+//!
+//! Vectors are stored row-major in a flat `Vec<f32>`; this is the layout
+//! every scorer, memory builder, and the PJRT runtime consume directly
+//! (no conversion on the hot path).
+
+use crate::error::{Error, Result};
+
+/// A collection of `n` vectors of dimension `d`, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    /// Create from flat row-major data.
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> Result<Self> {
+        if dim == 0 {
+            return Err(Error::Shape("dim must be > 0".into()));
+        }
+        if data.len() % dim != 0 {
+            return Err(Error::Shape(format!(
+                "data length {} not a multiple of dim {}",
+                data.len(),
+                dim
+            )));
+        }
+        Ok(Dataset { dim, data })
+    }
+
+    /// An empty dataset of the given dimensionality.
+    pub fn empty(dim: usize) -> Self {
+        Dataset { dim, data: Vec::new() }
+    }
+
+    /// Number of vectors.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True when no vectors are stored.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow vector `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The flat row-major buffer.
+    pub fn as_flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Append one vector.
+    pub fn push(&mut self, v: &[f32]) -> Result<()> {
+        if v.len() != self.dim {
+            return Err(Error::Shape(format!(
+                "vector has dim {}, dataset dim {}",
+                v.len(),
+                self.dim
+            )));
+        }
+        self.data.extend_from_slice(v);
+        Ok(())
+    }
+
+    /// Iterate over vectors.
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim)
+    }
+
+    /// Gather a sub-dataset by indices (used to materialize classes).
+    pub fn gather(&self, indices: &[u32]) -> Dataset {
+        let mut data = Vec::with_capacity(indices.len() * self.dim);
+        for &i in indices {
+            data.extend_from_slice(self.get(i as usize));
+        }
+        Dataset { dim: self.dim, data }
+    }
+
+    /// Per-coordinate mean over all vectors.
+    pub fn mean(&self) -> Vec<f32> {
+        let n = self.len().max(1) as f64;
+        let mut acc = vec![0f64; self.dim];
+        for v in self.iter() {
+            for (a, &x) in acc.iter_mut().zip(v) {
+                *a += x as f64;
+            }
+        }
+        acc.into_iter().map(|a| (a / n) as f32).collect()
+    }
+
+    /// The paper's §5.2 preprocessing for non-sparse real data: center,
+    /// then project every vector onto the unit hypersphere.
+    /// Returns the mean that was subtracted (to apply to queries).
+    pub fn center_and_normalize(&mut self) -> Vec<f32> {
+        let mean = self.mean();
+        let dim = self.dim;
+        for row in self.data.chunks_exact_mut(dim) {
+            let mut norm2 = 0f64;
+            for (x, m) in row.iter_mut().zip(&mean) {
+                *x -= *m;
+                norm2 += (*x as f64) * (*x as f64);
+            }
+            let norm = norm2.sqrt();
+            if norm > 1e-12 {
+                let inv = (1.0 / norm) as f32;
+                for x in row.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+        mean
+    }
+
+    /// Apply a previously computed preprocessing transform to a query.
+    pub fn preprocess_query(query: &[f32], mean: &[f32]) -> Vec<f32> {
+        let mut v: Vec<f32> = query.iter().zip(mean).map(|(x, m)| x - m).collect();
+        let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            let inv = (1.0 / norm) as f32;
+            for x in v.iter_mut() {
+                *x *= inv;
+            }
+        }
+        v
+    }
+
+    /// Indices of non-zero coordinates of vector `i` (sparse support).
+    pub fn support(&self, i: usize) -> Vec<u32> {
+        self.get(i)
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(j, _)| j as u32)
+            .collect()
+    }
+}
+
+/// A dataset plus its query set and (optionally) ground-truth NN ids —
+/// the unit every experiment consumes.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Database vectors.
+    pub base: Dataset,
+    /// Query vectors.
+    pub queries: Dataset,
+    /// For each query, the index in `base` of its exact nearest neighbor
+    /// (computed by brute force when the generator doesn't know it).
+    pub ground_truth: Vec<u32>,
+}
+
+impl Workload {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.base.dim() != self.queries.dim() {
+            return Err(Error::Shape(format!(
+                "base dim {} != query dim {}",
+                self.base.dim(),
+                self.queries.dim()
+            )));
+        }
+        if self.ground_truth.len() != self.queries.len() {
+            return Err(Error::Shape(format!(
+                "{} ground-truth entries for {} queries",
+                self.ground_truth.len(),
+                self.queries.len()
+            )));
+        }
+        if let Some(&g) = self.ground_truth.iter().max() {
+            if g as usize >= self.base.len() {
+                return Err(Error::Data(format!(
+                    "ground-truth id {} out of range (n={})",
+                    g,
+                    self.base.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_flat_validates() {
+        assert!(Dataset::from_flat(3, vec![0.0; 9]).is_ok());
+        assert!(Dataset::from_flat(3, vec![0.0; 10]).is_err());
+        assert!(Dataset::from_flat(0, vec![]).is_err());
+    }
+
+    #[test]
+    fn get_and_iter() {
+        let ds = Dataset::from_flat(2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.get(1), &[3., 4.]);
+        let rows: Vec<_> = ds.iter().collect();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2], &[5., 6.]);
+    }
+
+    #[test]
+    fn push_checks_dim() {
+        let mut ds = Dataset::empty(3);
+        assert!(ds.push(&[1., 2., 3.]).is_ok());
+        assert!(ds.push(&[1., 2.]).is_err());
+        assert_eq!(ds.len(), 1);
+    }
+
+    #[test]
+    fn gather_subset() {
+        let ds = Dataset::from_flat(2, vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap();
+        let sub = ds.gather(&[3, 1]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.get(0), &[3., 3.]);
+        assert_eq!(sub.get(1), &[1., 1.]);
+    }
+
+    #[test]
+    fn mean_is_columnwise() {
+        let ds = Dataset::from_flat(2, vec![0., 10., 2., 20.]).unwrap();
+        assert_eq!(ds.mean(), vec![1., 15.]);
+    }
+
+    #[test]
+    fn center_and_normalize_unit_norm() {
+        let mut ds =
+            Dataset::from_flat(3, vec![1., 2., 3., 4., 6., 8., -1., 0., 1.]).unwrap();
+        let mean = ds.center_and_normalize();
+        assert_eq!(mean.len(), 3);
+        for v in ds.iter() {
+            let norm: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-5, "norm={norm}");
+        }
+    }
+
+    #[test]
+    fn preprocess_query_matches_dataset_transform() {
+        let rows = vec![1., 2., 3., 4., 6., 8., -1., 0., 1.];
+        let mut ds = Dataset::from_flat(3, rows.clone()).unwrap();
+        let mean = ds.center_and_normalize();
+        let q = Dataset::preprocess_query(&rows[3..6], &mean);
+        let expect = ds.get(1);
+        for (a, b) in q.iter().zip(expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_vector_survives_normalize() {
+        let mut ds = Dataset::from_flat(2, vec![5., 5., 5., 5.]).unwrap();
+        ds.center_and_normalize(); // both rows become zero after centering
+        for v in ds.iter() {
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn support_lists_nonzeros() {
+        let ds = Dataset::from_flat(4, vec![0., 1., 0., 2.]).unwrap();
+        assert_eq!(ds.support(0), vec![1, 3]);
+    }
+
+    #[test]
+    fn workload_validate() {
+        let base = Dataset::from_flat(2, vec![0.; 8]).unwrap();
+        let queries = Dataset::from_flat(2, vec![0.; 4]).unwrap();
+        let wl = Workload { base: base.clone(), queries: queries.clone(), ground_truth: vec![0, 3] };
+        assert!(wl.validate().is_ok());
+        let bad = Workload { base, queries, ground_truth: vec![0, 4] };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! TEXMEX / IDX dataset file formats.
+//!
+//! `fvecs`/`bvecs`/`ivecs` are the formats of the SIFT1M/GIST1M corpora
+//! (each vector is a little-endian i32 dimension followed by the
+//! components); IDX is the raw MNIST format.  When real corpora are
+//! available (e.g. under `$DATA_DIR`), the eval harness uses them instead
+//! of the surrogates.
+
+use crate::error::{Error, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::dataset::Dataset;
+
+/// Read a `.fvecs` file (f32 components).
+pub fn read_fvecs(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut dim: Option<usize> = None;
+    let mut data = Vec::new();
+    loop {
+        let mut head = [0u8; 4];
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(head);
+        if d <= 0 {
+            return Err(Error::Data(format!("fvecs: bad dim {d}")));
+        }
+        let d = d as usize;
+        match dim {
+            None => dim = Some(d),
+            Some(d0) if d0 != d => {
+                return Err(Error::Data(format!("fvecs: dim {d} != first dim {d0}")))
+            }
+            _ => {}
+        }
+        let mut buf = vec![0u8; d * 4];
+        r.read_exact(&mut buf)?;
+        for c in buf.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+    }
+    let dim = dim.ok_or_else(|| Error::Data("fvecs: empty file".into()))?;
+    Dataset::from_flat(dim, data)
+}
+
+/// Write a `.fvecs` file.
+pub fn write_fvecs(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for v in ds.iter() {
+        w.write_all(&(ds.dim() as i32).to_le_bytes())?;
+        for &x in v {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.bvecs` file (u8 components, e.g. SIFT descriptors).
+pub fn read_bvecs(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut dim: Option<usize> = None;
+    let mut data = Vec::new();
+    loop {
+        let mut head = [0u8; 4];
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(head);
+        if d <= 0 {
+            return Err(Error::Data(format!("bvecs: bad dim {d}")));
+        }
+        let d = d as usize;
+        match dim {
+            None => dim = Some(d),
+            Some(d0) if d0 != d => {
+                return Err(Error::Data(format!("bvecs: dim {d} != first dim {d0}")))
+            }
+            _ => {}
+        }
+        let mut buf = vec![0u8; d];
+        r.read_exact(&mut buf)?;
+        data.extend(buf.into_iter().map(|b| b as f32));
+    }
+    let dim = dim.ok_or_else(|| Error::Data("bvecs: empty file".into()))?;
+    Dataset::from_flat(dim, data)
+}
+
+/// Read an `.ivecs` file (i32 components — ground-truth NN lists).
+pub fn read_ivecs(path: &Path) -> Result<Vec<Vec<i32>>> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    loop {
+        let mut head = [0u8; 4];
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(head);
+        if d < 0 {
+            return Err(Error::Data(format!("ivecs: bad dim {d}")));
+        }
+        let mut buf = vec![0u8; d as usize * 4];
+        r.read_exact(&mut buf)?;
+        out.push(
+            buf.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+/// Write an `.ivecs` file.
+pub fn write_ivecs(path: &Path, rows: &[Vec<i32>]) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for &x in row {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read MNIST IDX image file (magic 0x00000803) into a Dataset of
+/// 784-d vectors with values in [0, 255].
+pub fn read_idx_images(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut head = [0u8; 16];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_be_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != 0x0000_0803 {
+        return Err(Error::Data(format!("idx: bad magic {magic:#x}")));
+    }
+    let n = u32::from_be_bytes([head[4], head[5], head[6], head[7]]) as usize;
+    let rows = u32::from_be_bytes([head[8], head[9], head[10], head[11]]) as usize;
+    let cols = u32::from_be_bytes([head[12], head[13], head[14], head[15]]) as usize;
+    let mut buf = vec![0u8; n * rows * cols];
+    r.read_exact(&mut buf)?;
+    let data: Vec<f32> = buf.into_iter().map(|b| b as f32).collect();
+    Dataset::from_flat(rows * cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("amsearch_io_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let mut rng = Rng::new(1);
+        let data: Vec<f32> = (0..60).map(|_| rng.normal() as f32).collect();
+        let ds = Dataset::from_flat(6, data).unwrap();
+        let p = tmp("rt.fvecs");
+        write_fvecs(&p, &ds).unwrap();
+        let back = read_fvecs(&p).unwrap();
+        assert_eq!(ds, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1, 2, 3], vec![7, 8, 9]];
+        let p = tmp("rt.ivecs");
+        write_ivecs(&p, &rows).unwrap();
+        let back = read_ivecs(&p).unwrap();
+        assert_eq!(rows, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bvecs_reads_bytes() {
+        let p = tmp("x.bvecs");
+        // two 4-d u8 vectors
+        let mut bytes = Vec::new();
+        for v in [[1u8, 2, 3, 4], [250, 251, 252, 253]] {
+            bytes.extend(4i32.to_le_bytes());
+            bytes.extend(v);
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let ds = read_bvecs(&p).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.get(1), &[250.0, 251.0, 252.0, 253.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fvecs_rejects_mixed_dims() {
+        let p = tmp("bad.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(2i32.to_le_bytes());
+        bytes.extend(1f32.to_le_bytes());
+        bytes.extend(2f32.to_le_bytes());
+        bytes.extend(3i32.to_le_bytes());
+        bytes.extend(1f32.to_le_bytes());
+        bytes.extend(2f32.to_le_bytes());
+        bytes.extend(3f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_fvecs(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn idx_reads_mnist_layout() {
+        let p = tmp("img.idx");
+        let mut bytes = Vec::new();
+        bytes.extend(0x0000_0803u32.to_be_bytes());
+        bytes.extend(2u32.to_be_bytes()); // 2 images
+        bytes.extend(2u32.to_be_bytes()); // 2x2
+        bytes.extend(2u32.to_be_bytes());
+        bytes.extend([0u8, 128, 255, 64, 1, 2, 3, 4]);
+        std::fs::write(&p, &bytes).unwrap();
+        let ds = read_idx_images(&p).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dim(), 4);
+        assert_eq!(ds.get(0), &[0.0, 128.0, 255.0, 64.0]);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,149 @@
+//! MNIST surrogate for Figure 9 (see DESIGN.md §6 for the substitution
+//! rationale).
+//!
+//! Raw MNIST is 60k reference / 10k query grey-level images, 784 pixels.
+//! What Figure 9 exercises is: (a) very high ambient dimension relative
+//! to n, (b) strong class-cluster structure that the greedy allocation
+//! can exploit while random allocation cannot, (c) correlated (spatially
+//! smooth) coordinates.  The surrogate generates 10 smooth random
+//! prototype "digits" on a 28×28 grid and samples noisy, intensity-scaled
+//! instances of them.  Values live in [0, 255] like raw MNIST.
+
+use super::dataset::{Dataset, Workload};
+use super::clustered::exact_ground_truth;
+use super::rng::Rng;
+
+/// 28×28 images.
+pub const SIDE: usize = 28;
+/// 784 pixels.
+pub const DIM: usize = SIDE * SIDE;
+/// 10 prototype classes, like the 10 digits.
+pub const N_CLASSES: usize = 10;
+
+/// Smooth random field on the SIDE×SIDE grid: random impulses blurred by
+/// repeated 3×3 box filtering, normalized to [0, 255].
+fn smooth_prototype(rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0f32; DIM];
+    // sparse impulses
+    for _ in 0..40 {
+        let r = rng.below(SIDE as u64) as usize;
+        let c = rng.below(SIDE as u64) as usize;
+        img[r * SIDE + c] = 1.0 + rng.uniform() as f32;
+    }
+    // 3 passes of 3x3 box blur -> spatially-correlated strokes
+    for _ in 0..3 {
+        let mut out = vec![0f32; DIM];
+        for r in 0..SIDE {
+            for c in 0..SIDE {
+                let mut acc = 0f32;
+                let mut cnt = 0f32;
+                for dr in -1i32..=1 {
+                    for dc in -1i32..=1 {
+                        let rr = r as i32 + dr;
+                        let cc = c as i32 + dc;
+                        if (0..SIDE as i32).contains(&rr) && (0..SIDE as i32).contains(&cc)
+                        {
+                            acc += img[rr as usize * SIDE + cc as usize];
+                            cnt += 1.0;
+                        }
+                    }
+                }
+                out[r * SIDE + c] = acc / cnt;
+            }
+        }
+        img = out;
+    }
+    let max = img.iter().cloned().fold(1e-9f32, f32::max);
+    for x in img.iter_mut() {
+        *x = *x / max * 255.0;
+    }
+    img
+}
+
+/// Sample one image from a prototype: global intensity scale, pixel
+/// noise, clamp to [0, 255].
+fn sample_from(proto: &[f32], rng: &mut Rng) -> Vec<f32> {
+    let scale = 0.7 + 0.6 * rng.uniform() as f32; // [0.7, 1.3]
+    proto
+        .iter()
+        .map(|&p| {
+            let v = p * scale + (rng.normal() * 18.0) as f32;
+            v.clamp(0.0, 255.0)
+        })
+        .collect()
+}
+
+/// Generate an MNIST-like workload of `n` base images and `n_queries`
+/// query images (fresh samples of the same prototypes — like unseen test
+/// digits), with exact brute-force ground truth.
+pub fn mnist_like_workload(n: usize, n_queries: usize, rng: &mut Rng) -> Workload {
+    let protos: Vec<Vec<f32>> = (0..N_CLASSES).map(|_| smooth_prototype(rng)).collect();
+    let mut base = Dataset::empty(DIM);
+    for i in 0..n {
+        let proto = &protos[i % N_CLASSES];
+        base.push(&sample_from(proto, rng)).expect("dims match");
+    }
+    let mut queries = Dataset::empty(DIM);
+    for i in 0..n_queries {
+        let proto = &protos[i % N_CLASSES];
+        queries.push(&sample_from(proto, rng)).expect("dims match");
+    }
+    let ground_truth = exact_ground_truth(&base, &queries);
+    Workload { base, queries, ground_truth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_range() {
+        let mut rng = Rng::new(1);
+        let wl = mnist_like_workload(200, 20, &mut rng);
+        wl.validate().unwrap();
+        assert_eq!(wl.base.dim(), 784);
+        assert!(wl
+            .base
+            .as_flat()
+            .iter()
+            .all(|&x| (0.0..=255.0).contains(&x)));
+    }
+
+    #[test]
+    fn class_structure_exists() {
+        // Same-prototype images are closer than cross-prototype ones on
+        // average (this is what greedy allocation exploits).
+        let mut rng = Rng::new(2);
+        let wl = mnist_like_workload(100, 1, &mut rng);
+        let sq = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        // rows i and i+10 share a prototype; i and i+1 do not
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        for i in 0..50 {
+            same += sq(wl.base.get(i), wl.base.get(i + 10));
+            diff += sq(wl.base.get(i), wl.base.get(i + 1));
+        }
+        assert!(diff > 1.3 * same, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn prototypes_are_smooth() {
+        let mut rng = Rng::new(3);
+        let p = smooth_prototype(&mut rng);
+        // neighboring-pixel correlation: avg |p[i]-p[i+1]| much smaller
+        // than the dynamic range
+        let mut adj = 0.0;
+        for r in 0..SIDE {
+            for c in 0..SIDE - 1 {
+                adj += (p[r * SIDE + c] - p[r * SIDE + c + 1]).abs() as f64;
+            }
+        }
+        adj /= (SIDE * (SIDE - 1)) as f64;
+        assert!(adj < 30.0, "adjacent delta {adj} too large for smooth field");
+    }
+}

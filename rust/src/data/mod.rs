@@ -1,0 +1,14 @@
+//! Dataset substrates: deterministic RNG, the paper's synthetic pattern
+//! models, real-data surrogates, TEXMEX/IDX file I/O, and the core
+//! [`Dataset`]/[`Workload`] containers.
+
+pub mod clustered;
+pub mod dataset;
+pub mod io;
+pub mod mnist_like;
+pub mod rng;
+pub mod santander_like;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Workload};
+pub use rng::Rng;

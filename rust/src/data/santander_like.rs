@@ -1,0 +1,138 @@
+//! Santander-customer-satisfaction surrogate for Figure 10 (DESIGN.md §6).
+//!
+//! The real dataset: 76k binary sparse vectors, 369 features, ~33
+//! non-zeros per row, strongly skewed feature popularity and co-activated
+//! feature blocks (survey questions answered together).  The surrogate
+//! reproduces those three statistics, which are what drive both the c²·q
+//! sparse scoring cost and the value of greedy allocation.  Queries are
+//! the stored vectors themselves, as in the paper's §5.2 first experiment.
+
+use super::dataset::{Dataset, Workload};
+use super::rng::Rng;
+
+/// Dimension of the real dataset.
+pub const DIM: usize = 369;
+/// Average non-zeros per row in the real dataset.
+pub const AVG_NNZ: f64 = 33.0;
+/// Number of correlated feature blocks.
+const N_BLOCKS: usize = 24;
+
+/// Generate the base set: power-law feature popularity + block
+/// co-activation + Poisson row weight.
+pub fn santander_like_base(n: usize, rng: &mut Rng) -> Dataset {
+    // power-law popularity over features
+    let pop: Vec<f64> = (0..DIM).map(|j| 1.0 / ((j + 2) as f64).powf(0.9)).collect();
+    let pop_sum: f64 = pop.iter().sum();
+    // cumulative distribution for popularity-weighted sampling
+    let mut cdf = Vec::with_capacity(DIM);
+    let mut acc = 0.0;
+    for &p in &pop {
+        acc += p / pop_sum;
+        cdf.push(acc);
+    }
+    // fixed random feature blocks
+    let block_of: Vec<usize> = (0..DIM).map(|_| rng.below(N_BLOCKS as u64) as usize).collect();
+    let mut members_of_block: Vec<Vec<usize>> = vec![Vec::new(); N_BLOCKS];
+    for (j, &b) in block_of.iter().enumerate() {
+        members_of_block[b].push(j);
+    }
+
+    let sample_feature = |rng: &mut Rng, cdf: &[f64]| -> usize {
+        let u = rng.uniform();
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(DIM - 1),
+        }
+    };
+
+    let mut data = vec![0f32; n * DIM];
+    for row in 0..n {
+        let target = rng.poisson(AVG_NNZ).max(1) as usize;
+        let out = &mut data[row * DIM..(row + 1) * DIM];
+        let mut placed = 0usize;
+        let mut guard = 0usize;
+        while placed < target.min(DIM) && guard < 50 * DIM {
+            guard += 1;
+            let j = sample_feature(rng, &cdf);
+            if out[j] == 0.0 {
+                out[j] = 1.0;
+                placed += 1;
+                // co-activation: with prob 0.35 also set a same-block peer
+                if placed < target && rng.bernoulli(0.35) {
+                    let peers = &members_of_block[block_of[j]];
+                    let peer = peers[rng.below(peers.len() as u64) as usize];
+                    if out[peer] == 0.0 {
+                        out[peer] = 1.0;
+                        placed += 1;
+                    }
+                }
+            }
+        }
+    }
+    Dataset::from_flat(DIM, data).expect("consistent by construction")
+}
+
+/// Workload where queries are stored vectors themselves (§5.2: "the
+/// vectors stored in the database are the ones used to also query it").
+pub fn santander_like_workload(n: usize, n_queries: usize, rng: &mut Rng) -> Workload {
+    let base = santander_like_base(n, rng);
+    let mut queries = Dataset::empty(DIM);
+    let mut ground_truth = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        let i = rng.below(n as u64) as u32;
+        queries.push(base.get(i as usize)).expect("dims match");
+        ground_truth.push(i);
+    }
+    Workload { base, queries, ground_truth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nnz_matches_target() {
+        let mut rng = Rng::new(1);
+        let ds = santander_like_base(500, &mut rng);
+        let total: f32 = ds.as_flat().iter().sum();
+        let mean_nnz = total as f64 / 500.0;
+        assert!(
+            (mean_nnz - AVG_NNZ).abs() < 4.0,
+            "mean_nnz={mean_nnz} want≈{AVG_NNZ}"
+        );
+    }
+
+    #[test]
+    fn binary_values() {
+        let mut rng = Rng::new(2);
+        let ds = santander_like_base(50, &mut rng);
+        assert!(ds.as_flat().iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let mut rng = Rng::new(3);
+        let ds = santander_like_base(2000, &mut rng);
+        let mut counts = vec![0usize; DIM];
+        for v in ds.iter() {
+            for (j, &x) in v.iter().enumerate() {
+                if x == 1.0 {
+                    counts[j] += 1;
+                }
+            }
+        }
+        let head: usize = counts[..20].iter().sum();
+        let tail: usize = counts[DIM - 20..].iter().sum();
+        assert!(head > 4 * tail.max(1), "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn workload_queries_are_members() {
+        let mut rng = Rng::new(4);
+        let wl = santander_like_workload(100, 10, &mut rng);
+        wl.validate().unwrap();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            assert_eq!(wl.queries.get(qi), wl.base.get(gt as usize));
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! The paper's synthetic pattern models (§3, §4, §5.1).
+//!
+//! * **Sparse**: i.i.d. coordinates with `P(x=1) = c/d`, else 0.
+//! * **Dense**: i.i.d. unbiased ±1 coordinates.
+//!
+//! Query models follow §3/§4: either the query *is* a stored pattern
+//! (`Theorem 3.1 / 4.1`) or it is a corrupted version with macroscopic
+//! overlap `α` (`Corollary 3.2 / 4.2`).
+
+use super::dataset::{Dataset, Workload};
+use super::rng::Rng;
+
+/// Parameters of the sparse i.i.d. model.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseSpec {
+    /// Vector dimension `d`.
+    pub dim: usize,
+    /// Expected number of ones `c` (so `P(x_i = 1) = c/d`).
+    pub ones: f64,
+}
+
+/// Generate `n` sparse 0/1 patterns.
+pub fn sparse_patterns(spec: SparseSpec, n: usize, rng: &mut Rng) -> Dataset {
+    let p = spec.ones / spec.dim as f64;
+    let mut data = vec![0f32; n * spec.dim];
+    for x in data.iter_mut() {
+        if rng.bernoulli(p) {
+            *x = 1.0;
+        }
+    }
+    Dataset::from_flat(spec.dim, data).expect("consistent by construction")
+}
+
+/// Generate `n` dense ±1 patterns.
+pub fn dense_patterns(dim: usize, n: usize, rng: &mut Rng) -> Dataset {
+    let mut data = Vec::with_capacity(n * dim);
+    for _ in 0..n * dim {
+        data.push(if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 });
+    }
+    Dataset::from_flat(dim, data).expect("consistent by construction")
+}
+
+/// Corrupt a sparse pattern so the overlap `Σ x⁰_l x^μ_l ≈ α·c`:
+/// each 1 survives with probability α, and for every killed 1 a fresh 1
+/// is placed on a random zero coordinate (keeping ~c active bits, as in
+/// Corollary 3.2 where x⁰ has c ones).
+pub fn corrupt_sparse(pattern: &[f32], alpha: f64, rng: &mut Rng) -> Vec<f32> {
+    let mut out = pattern.to_vec();
+    let d = out.len();
+    let mut moved = 0usize;
+    for i in 0..d {
+        if out[i] == 1.0 && !rng.bernoulli(alpha) {
+            out[i] = 0.0;
+            moved += 1;
+        }
+    }
+    let mut placed = 0usize;
+    let mut guard = 0usize;
+    while placed < moved && guard < 100 * d {
+        let j = rng.below(d as u64) as usize;
+        if out[j] == 0.0 && pattern[j] == 0.0 {
+            out[j] = 1.0;
+            placed += 1;
+        }
+        guard += 1;
+    }
+    out
+}
+
+/// Corrupt a dense ±1 pattern so that `⟨x⁰, x^μ⟩ ≈ α·d`: flip each
+/// coordinate independently with probability `(1-α)/2`.
+pub fn corrupt_dense(pattern: &[f32], alpha: f64, rng: &mut Rng) -> Vec<f32> {
+    let flip_p = (1.0 - alpha) / 2.0;
+    pattern
+        .iter()
+        .map(|&x| if rng.bernoulli(flip_p) { -x } else { x })
+        .collect()
+}
+
+/// Query model for synthetic workloads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QueryModel {
+    /// The query equals a stored pattern (Thm 3.1 / 4.1).
+    Exact,
+    /// Corrupted with overlap α ∈ (0,1) (Cor 3.2 / 4.2).
+    Corrupted { alpha: f64 },
+}
+
+/// Build a full synthetic sparse workload: `n` stored patterns plus
+/// `n_queries` queries, each derived from a uniformly chosen stored
+/// pattern; ground truth is that pattern's index.
+pub fn sparse_workload(
+    spec: SparseSpec,
+    n: usize,
+    n_queries: usize,
+    model: QueryModel,
+    rng: &mut Rng,
+) -> Workload {
+    let base = sparse_patterns(spec, n, rng);
+    let mut queries = Dataset::empty(spec.dim);
+    let mut ground_truth = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        let target = rng.below(n as u64) as u32;
+        let pattern = base.get(target as usize);
+        let qv = match model {
+            QueryModel::Exact => pattern.to_vec(),
+            QueryModel::Corrupted { alpha } => corrupt_sparse(pattern, alpha, rng),
+        };
+        queries.push(&qv).expect("dims match");
+        ground_truth.push(target);
+    }
+    Workload { base, queries, ground_truth }
+}
+
+/// Build a full synthetic dense workload (see [`sparse_workload`]).
+pub fn dense_workload(
+    dim: usize,
+    n: usize,
+    n_queries: usize,
+    model: QueryModel,
+    rng: &mut Rng,
+) -> Workload {
+    let base = dense_patterns(dim, n, rng);
+    let mut queries = Dataset::empty(dim);
+    let mut ground_truth = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        let target = rng.below(n as u64) as u32;
+        let pattern = base.get(target as usize);
+        let qv = match model {
+            QueryModel::Exact => pattern.to_vec(),
+            QueryModel::Corrupted { alpha } => corrupt_dense(pattern, alpha, rng),
+        };
+        queries.push(&qv).expect("dims match");
+        ground_truth.push(target);
+    }
+    Workload { base, queries, ground_truth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_density_matches_spec() {
+        let mut rng = Rng::new(1);
+        let spec = SparseSpec { dim: 128, ones: 8.0 };
+        let ds = sparse_patterns(spec, 2000, &mut rng);
+        let total_ones: f32 = ds.as_flat().iter().sum();
+        let mean_ones = total_ones as f64 / 2000.0;
+        assert!((mean_ones - 8.0).abs() < 0.3, "mean_ones={mean_ones}");
+        assert!(ds.as_flat().iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn dense_is_pm1_and_balanced() {
+        let mut rng = Rng::new(2);
+        let ds = dense_patterns(64, 1000, &mut rng);
+        assert!(ds.as_flat().iter().all(|&x| x == 1.0 || x == -1.0));
+        let sum: f32 = ds.as_flat().iter().sum();
+        let frac = sum as f64 / (64.0 * 1000.0);
+        assert!(frac.abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn corrupt_sparse_overlap() {
+        let mut rng = Rng::new(3);
+        let spec = SparseSpec { dim: 1024, ones: 64.0 };
+        let ds = sparse_patterns(spec, 1, &mut rng);
+        let x = ds.get(0);
+        let alpha = 0.75;
+        let mut overlaps = 0.0;
+        let mut count_ones = 0.0;
+        let trials = 200;
+        for _ in 0..trials {
+            let y = corrupt_sparse(x, alpha, &mut rng);
+            overlaps += x.iter().zip(&y).map(|(a, b)| a * b).sum::<f32>() as f64;
+            count_ones += y.iter().sum::<f32>() as f64;
+        }
+        let c = x.iter().sum::<f32>() as f64;
+        let mean_overlap = overlaps / trials as f64;
+        assert!(
+            (mean_overlap - alpha * c).abs() < 0.1 * c,
+            "mean_overlap={mean_overlap} want≈{}",
+            alpha * c
+        );
+        // the corrupted query keeps ≈ c active bits
+        assert!((count_ones / trials as f64 - c).abs() < 0.05 * c);
+    }
+
+    #[test]
+    fn corrupt_dense_overlap() {
+        let mut rng = Rng::new(4);
+        let ds = dense_patterns(2048, 1, &mut rng);
+        let x = ds.get(0);
+        let alpha = 0.6;
+        let mut overlap = 0.0;
+        let trials = 100;
+        for _ in 0..trials {
+            let y = corrupt_dense(x, alpha, &mut rng);
+            overlap += x.iter().zip(&y).map(|(a, b)| a * b).sum::<f32>() as f64;
+        }
+        let mean = overlap / trials as f64 / 2048.0;
+        assert!((mean - alpha).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn exact_query_workload_has_true_copy() {
+        let mut rng = Rng::new(5);
+        let wl = dense_workload(32, 100, 20, QueryModel::Exact, &mut rng);
+        wl.validate().unwrap();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            assert_eq!(wl.queries.get(qi), wl.base.get(gt as usize));
+        }
+    }
+
+    #[test]
+    fn corrupted_workload_validates() {
+        let mut rng = Rng::new(6);
+        let wl = sparse_workload(
+            SparseSpec { dim: 64, ones: 6.0 },
+            50,
+            10,
+            QueryModel::Corrupted { alpha: 0.8 },
+            &mut rng,
+        );
+        wl.validate().unwrap();
+        assert_eq!(wl.queries.len(), 10);
+    }
+}

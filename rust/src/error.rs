@@ -1,0 +1,63 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every subsystem.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Shape or parameter mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid configuration (failed validation).
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// Dataset file I/O or format problems.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// AOT artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failures (compile/execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator/serving failures (channel closed, timeout...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = Error::Shape("w=[2,3] x=[4]".into());
+        assert_eq!(e.to_string(), "shape mismatch: w=[2,3] x=[4]");
+        let e = Error::Config("k must divide n".into());
+        assert!(e.to_string().contains("k must divide n"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,1081 @@
+//! Per-figure experiment drivers: one function per figure of the paper's
+//! evaluation section (§5), each regenerating the figure's data series.
+//!
+//! Parameters mirror the paper exactly where feasible; the real datasets
+//! of Figures 9–12 are replaced by the surrogates documented in
+//! DESIGN.md §6, and the default database sizes are scaled down so the
+//! full suite runs in CI time.  `EvalOptions::scale` restores
+//! paper-scale Monte-Carlo counts and collection sizes.
+
+use std::sync::Arc;
+
+use crate::baseline::{Exhaustive, HybridIndex, RsAnchors};
+use crate::data::clustered::{self, ClusteredSpec};
+use crate::data::dataset::{Dataset, Workload};
+use crate::data::rng::Rng;
+use crate::data::{mnist_like, santander_like};
+use crate::error::Result;
+use crate::index::{AmIndex, IndexParams};
+use crate::memory::StorageRule;
+use crate::metrics::{OpsCounter, Recall};
+use crate::partition::Allocation;
+use crate::search::Metric;
+use crate::util::par::{parallel_map, parallel_map_items};
+
+use super::report::{Figure, Series};
+use super::runner::{class_selection_trials, PatternModel, TrialConfig};
+
+/// Global evaluation options.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOptions {
+    /// Multiplier on Monte-Carlo trial counts and dataset sizes
+    /// (1.0 = CI defaults; ~10 approaches paper scale).
+    pub scale: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { scale: 1.0, seed: 42 }
+    }
+}
+
+impl EvalOptions {
+    fn trials(&self, base: usize) -> usize {
+        ((base as f64) * self.scale).round().max(50.0) as usize
+    }
+
+    fn size(&self, base: usize) -> usize {
+        ((base as f64) * self.scale).round().max(100.0) as usize
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figures 1-8: synthetic error-rate curves
+// ---------------------------------------------------------------------
+
+fn error_curve(
+    label: &str,
+    xs: impl IntoIterator<Item = (f64, TrialConfig)>,
+    trials: usize,
+    seed: u64,
+) -> Series {
+    let configs: Vec<(f64, TrialConfig)> = xs.into_iter().collect();
+    let mut series = Series::new(label);
+    let results: Vec<(f64, Recall)> = parallel_map_items(&configs, |(x, cfg)| {
+        let dbs = (trials / 2000).clamp(2, 16);
+        (*x, class_selection_trials(*cfg, trials, dbs, seed ^ (*x as u64)))
+    });
+    for (x, r) in results {
+        series.push_aux(x, r.error_rate(), r.std_error());
+    }
+    series
+}
+
+/// Figure 1: sparse, error rate vs k (q=10, d=128, c=8).
+pub fn fig1(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig1",
+        "Error rate vs k (sparse; q=10, d=128, c=8)",
+        "k",
+        "error_rate",
+    );
+    let trials = opts.trials(10_000);
+    let base = TrialConfig {
+        d: 128,
+        k: 0,
+        q: 10,
+        model: PatternModel::Sparse { ones: 8.0 },
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let ks = [16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384];
+    fig.series.push(error_curve(
+        "q=10",
+        ks.iter().map(|&k| (k as f64, TrialConfig { k, ..base })),
+        trials,
+        opts.seed,
+    ));
+    fig
+}
+
+/// Figure 2: sparse, error rate vs q for several k (d=128, c=8).
+pub fn fig2(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig2",
+        "Error rate vs q (sparse; d=128, c=8)",
+        "q",
+        "error_rate",
+    );
+    let trials = opts.trials(5_000);
+    let base = TrialConfig {
+        d: 128,
+        k: 0,
+        q: 0,
+        model: PatternModel::Sparse { ones: 8.0 },
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let qs = [2, 5, 10, 20, 50, 100];
+    for &k in &[128usize, 512, 2048, 8192] {
+        fig.series.push(error_curve(
+            &format!("k={k}"),
+            qs.iter().map(|&q| (q as f64, TrialConfig { k, q, ..base })),
+            trials,
+            opts.seed + k as u64,
+        ));
+    }
+    fig
+}
+
+/// Figure 3: sparse, error rate vs k at fixed n = k·q = 16384
+/// (d=128, c=8).
+pub fn fig3(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig3",
+        "Error rate vs k at fixed n=16384 (sparse; d=128, c=8)",
+        "k",
+        "error_rate",
+    );
+    let trials = opts.trials(10_000);
+    let n = 16384usize;
+    let base = TrialConfig {
+        d: 128,
+        k: 0,
+        q: 0,
+        model: PatternModel::Sparse { ones: 8.0 },
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let ks = [64, 128, 256, 512, 1024, 2048, 4096, 8192];
+    fig.series.push(error_curve(
+        "n=16384",
+        ks.iter().map(|&k| {
+            (k as f64, TrialConfig { k, q: n / k, ..base })
+        }),
+        trials,
+        opts.seed,
+    ));
+    fig
+}
+
+/// Figure 4: sparse, error rate vs d (q=2, c=log2(d), k=d^α/10).
+pub fn fig4(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig4",
+        "Error rate vs d (sparse; q=2, c=log2(d), k=d^a/10)",
+        "d",
+        "error_rate",
+    );
+    let trials = opts.trials(5_000);
+    for &(alpha, label) in
+        &[(1.5f64, "alpha=1.5"), (2.0, "alpha=2.0"), (2.5, "alpha=2.5")]
+    {
+        let ds: &[usize] = if alpha > 2.2 {
+            &[32, 64, 128, 256]
+        } else {
+            &[32, 64, 128, 256, 512]
+        };
+        let cfgs = ds.iter().map(|&d| {
+            let k = (((d as f64).powf(alpha)) / 10.0).round().max(2.0) as usize;
+            (
+                d as f64,
+                TrialConfig {
+                    d,
+                    k,
+                    q: 2,
+                    model: PatternModel::Sparse { ones: (d as f64).log2() },
+                    alpha: None,
+                    rule: StorageRule::Sum,
+                },
+            )
+        });
+        fig.series.push(error_curve(label, cfgs, trials, opts.seed + alpha as u64));
+    }
+    fig
+}
+
+/// Figure 5: dense, error rate vs k (q=10, d=64).
+pub fn fig5(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig5",
+        "Error rate vs k (dense; q=10, d=64)",
+        "k",
+        "error_rate",
+    );
+    let trials = opts.trials(2_000);
+    let base = TrialConfig {
+        d: 64,
+        k: 0,
+        q: 10,
+        model: PatternModel::Dense,
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let ks = [16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+    fig.series.push(error_curve(
+        "q=10",
+        ks.iter().map(|&k| (k as f64, TrialConfig { k, ..base })),
+        trials,
+        opts.seed,
+    ));
+    fig
+}
+
+/// Figure 6: dense, error rate vs q for several k (d=64).
+pub fn fig6(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig6",
+        "Error rate vs q (dense; d=64)",
+        "q",
+        "error_rate",
+    );
+    let trials = opts.trials(2_000);
+    let base = TrialConfig {
+        d: 64,
+        k: 0,
+        q: 0,
+        model: PatternModel::Dense,
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let qs = [2, 5, 10, 20, 50];
+    for &k in &[64usize, 256, 1024, 4096] {
+        fig.series.push(error_curve(
+            &format!("k={k}"),
+            qs.iter().map(|&q| (q as f64, TrialConfig { k, q, ..base })),
+            trials,
+            opts.seed + k as u64,
+        ));
+    }
+    fig
+}
+
+/// Figure 7: dense, error rate vs k at fixed n=16384 (d=64).
+pub fn fig7(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig7",
+        "Error rate vs k at fixed n=16384 (dense; d=64)",
+        "k",
+        "error_rate",
+    );
+    let trials = opts.trials(2_000);
+    let n = 16384usize;
+    let base = TrialConfig {
+        d: 64,
+        k: 0,
+        q: 0,
+        model: PatternModel::Dense,
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let ks = [64, 128, 256, 512, 1024, 2048, 4096, 8192];
+    fig.series.push(error_curve(
+        "n=16384",
+        ks.iter().map(|&k| (k as f64, TrialConfig { k, q: n / k, ..base })),
+        trials,
+        opts.seed,
+    ));
+    fig
+}
+
+/// Figure 8: dense, error rate vs d (q=2, k=d^α).
+pub fn fig8(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig8",
+        "Error rate vs d (dense; q=2, k=d^a)",
+        "d",
+        "error_rate",
+    );
+    let trials = opts.trials(2_000);
+    for &(alpha, label) in
+        &[(1.5f64, "alpha=1.5"), (2.0, "alpha=2.0"), (2.5, "alpha=2.5")]
+    {
+        let ds: &[usize] = if alpha > 2.2 {
+            &[16, 24, 32, 48, 64]
+        } else {
+            &[16, 24, 32, 48, 64, 96, 128]
+        };
+        let cfgs = ds.iter().map(|&d| {
+            let k = ((d as f64).powf(alpha)).round().max(2.0) as usize;
+            (
+                d as f64,
+                TrialConfig {
+                    d,
+                    k,
+                    q: 2,
+                    model: PatternModel::Dense,
+                    alpha: None,
+                    rule: StorageRule::Sum,
+                },
+            )
+        });
+        fig.series.push(error_curve(label, cfgs, trials, opts.seed + alpha as u64));
+    }
+    fig
+}
+
+// ---------------------------------------------------------------------
+// Figures 9-12: recall@1 vs relative complexity on real-data surrogates
+// ---------------------------------------------------------------------
+
+/// Sweep poll depth p and emit (relative complexity, recall@1) points for
+/// an AM index on a workload.
+///
+/// The class ranking is independent of p, so each query is processed
+/// once: classes are scanned in rank order and (hit, cumulative-ops) are
+/// recorded at every p in the sweep — a |p_sweep|-fold saving that makes
+/// the paper-scale figures tractable on one core.
+fn am_tradeoff_curve(
+    label: &str,
+    wl: &Workload,
+    params: IndexParams,
+    p_sweep: &[usize],
+    seed: u64,
+) -> Result<Series> {
+    let mut rng = Rng::new(seed);
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng)?);
+    let reference = Exhaustive::new(wl.base.clone(), params.metric);
+    let ps: Vec<usize> =
+        p_sweep.iter().cloned().filter(|&p| p <= params.n_classes).collect();
+    // per query: (hit@p, ops@p) for every p in ps, plus the reference cost
+    let per_query: Vec<(Vec<(bool, u64)>, u64)> =
+        parallel_map(wl.queries.len(), |qi| {
+            let x = wl.queries.get(qi);
+            let mut ops = OpsCounter::new();
+            let ranked = index.ranked_classes(x, &mut ops);
+            let score_ops = ops.score_ops;
+            let per_cand = if index.uses_sparse_scoring() {
+                x.iter().filter(|&&v| v != 0.0).count()
+            } else {
+                index.dim()
+            } as u64;
+            let metric = params.metric;
+            let mut best = f32::INFINITY;
+            let mut best_id = u32::MAX;
+            let mut scanned = 0u64;
+            let mut out = Vec::with_capacity(ps.len());
+            let mut next_p = 0usize;
+            for (rank, &ci) in ranked.iter().enumerate() {
+                for &vid in index.partition().members(ci as usize) {
+                    let dist = metric.distance(x, index.data().get(vid as usize));
+                    scanned += 1;
+                    if dist < best || (dist == best && vid < best_id) {
+                        best = dist;
+                        best_id = vid;
+                    }
+                }
+                while next_p < ps.len() && ps[next_p] == rank + 1 {
+                    out.push((
+                        best_id == wl.ground_truth[qi],
+                        score_ops + scanned * per_cand,
+                    ));
+                    next_p += 1;
+                }
+                if next_p == ps.len() {
+                    break;
+                }
+            }
+            (out, reference.reference_ops(x))
+        });
+    let mut series = Series::new(label);
+    for (pi, _p) in ps.iter().enumerate() {
+        let mut recall = Recall::new();
+        let mut total_ops = 0u64;
+        let mut total_ref = 0u64;
+        for (rows, reference_ops) in &per_query {
+            recall.record(rows[pi].0);
+            total_ops += rows[pi].1;
+            total_ref += reference_ops;
+        }
+        let rel = total_ops as f64 / total_ref.max(1) as f64;
+        series.push_aux(rel, recall.value(), recall.std_error());
+    }
+    Ok(series)
+}
+
+/// Same trade-off sweep for the RS baseline (p = anchors polled).
+fn rs_tradeoff_curve(
+    label: &str,
+    wl: &Workload,
+    r: usize,
+    p_sweep: &[usize],
+    metric: Metric,
+    seed: u64,
+) -> Result<Series> {
+    let mut rng = Rng::new(seed);
+    let r = r.min(wl.base.len()); // scaled-down runs clamp the anchor count
+    let rs = RsAnchors::build(wl.base.clone(), r, metric, &mut rng)?;
+    let reference = Exhaustive::new(wl.base.clone(), metric);
+    let ps: Vec<usize> = p_sweep.iter().cloned().filter(|&p| p <= r).collect();
+    // one pass per query: rank anchors once, scan attachments in rank
+    // order, snapshot (hit, cumulative ops) at every p in the sweep
+    let per_query: Vec<(Vec<(bool, u64)>, u64)> =
+        parallel_map(wl.queries.len(), |qi| {
+            let x = wl.queries.get(qi);
+            let mut ops = OpsCounter::new();
+            let ranked = rs.ranked_anchors(x, &mut ops);
+            let anchor_ops = ops.aux_ops;
+            let per_cand = rs.per_candidate(x) as u64;
+            let metric = rs.metric();
+            let mut best = f32::INFINITY;
+            let mut best_id = u32::MAX;
+            let mut scanned = 0u64;
+            let mut rows = Vec::with_capacity(ps.len());
+            let mut next_p = 0usize;
+            for (rank, &a) in ranked.iter().enumerate() {
+                for &vid in rs.attached(a as usize) {
+                    let dist = metric.distance(x, rs.vector(vid));
+                    scanned += 1;
+                    if dist < best || (dist == best && vid < best_id) {
+                        best = dist;
+                        best_id = vid;
+                    }
+                }
+                while next_p < ps.len() && ps[next_p] == rank + 1 {
+                    rows.push((
+                        best_id == wl.ground_truth[qi],
+                        anchor_ops + scanned * per_cand,
+                    ));
+                    next_p += 1;
+                }
+                if next_p == ps.len() {
+                    break;
+                }
+            }
+            (rows, reference.reference_ops(x))
+        });
+    let mut series = Series::new(label);
+    for (pi, _p) in ps.iter().enumerate() {
+        let mut recall = Recall::new();
+        let mut total_ops = 0u64;
+        let mut total_ref = 0u64;
+        for (rows, reference_ops) in &per_query {
+            recall.record(rows[pi].0);
+            total_ops += rows[pi].1;
+            total_ref += reference_ops;
+        }
+        series.push_aux(
+            total_ops as f64 / total_ref.max(1) as f64,
+            recall.value(),
+            recall.std_error(),
+        );
+    }
+    Ok(series)
+}
+
+/// Hybrid AM->RS trade-off sweep.
+fn hybrid_tradeoff_curve(
+    label: &str,
+    wl: &Workload,
+    params: IndexParams,
+    anchors_per_class: usize,
+    p_sweep: &[usize],
+    seed: u64,
+) -> Result<Series> {
+    let mut rng = Rng::new(seed);
+    let hy = HybridIndex::build(wl.base.clone(), params, 1.0, anchors_per_class, &mut rng)?;
+    let reference = Exhaustive::new(wl.base.clone(), params.metric);
+    let mut series = Series::new(label);
+    for &p in p_sweep {
+        if p > params.n_classes {
+            continue;
+        }
+        let results: Vec<(bool, u64, u64)> = parallel_map(wl.queries.len(), |qi| {
+            let x = wl.queries.get(qi);
+            let mut ops = OpsCounter::new();
+            let (id, _) = hy.query(x, p, &mut ops);
+            (id == wl.ground_truth[qi], ops.total(), reference.reference_ops(x))
+        });
+        let mut recall = Recall::new();
+        let mut total_ops = 0u64;
+        let mut total_ref = 0u64;
+        for (hit, ops, reference_ops) in results {
+            recall.record(hit);
+            total_ops += ops;
+            total_ref += reference_ops;
+        }
+        series.push_aux(
+            total_ops as f64 / total_ref.max(1) as f64,
+            recall.value(),
+            recall.std_error(),
+        );
+    }
+    Ok(series)
+}
+
+fn p_sweep_for(q: usize) -> Vec<usize> {
+    let mut ps = vec![1usize, 2, 4, 8, 16, 32, 64, 128];
+    ps.retain(|&p| p <= q);
+    if ps.last() != Some(&q) {
+        ps.push(q);
+    }
+    ps
+}
+
+/// Figure 9: recall@1 vs relative complexity on the MNIST surrogate,
+/// greedy vs random allocation vs RS.
+pub fn fig9(opts: &EvalOptions) -> Result<Figure> {
+    let mut fig = Figure::new(
+        "fig9",
+        "Recall@1 vs relative complexity (MNIST-like surrogate)",
+        "relative_complexity",
+        "recall_at_1",
+    );
+    let n = opts.size(3_000);
+    let n_queries = opts.size(300);
+    let mut rng = Rng::new(opts.seed);
+    let mut wl = mnist_like::mnist_like_workload(n, n_queries, &mut rng);
+    // paper §5.2 preprocessing for non-sparse data
+    let mean = wl.base.center_and_normalize();
+    let mut queries = Dataset::empty(wl.queries.dim());
+    for qi in 0..wl.queries.len() {
+        queries
+            .push(&Dataset::preprocess_query(wl.queries.get(qi), &mean))
+            .expect("dims");
+    }
+    wl.queries = queries;
+    wl.ground_truth = clustered::exact_ground_truth(&wl.base, &wl.queries);
+
+    for &k in &[200usize, 500, 1000] {
+        let q = (n / k).max(2);
+        let params = IndexParams {
+            n_classes: q,
+            allocation: Allocation::Greedy,
+            greedy_cap_factor: Some(4.0),
+            ..Default::default()
+        };
+        fig.series.push(am_tradeoff_curve(
+            &format!("am_greedy_k={k}"),
+            &wl,
+            params,
+            &p_sweep_for(q),
+            opts.seed + k as u64,
+        )?);
+        let params = IndexParams {
+            n_classes: q,
+            allocation: Allocation::Random,
+            ..Default::default()
+        };
+        fig.series.push(am_tradeoff_curve(
+            &format!("am_random_k={k}"),
+            &wl,
+            params,
+            &p_sweep_for(q),
+            opts.seed + 7 * k as u64,
+        )?);
+    }
+    for &r in &[20usize, 50, 100] {
+        fig.series.push(rs_tradeoff_curve(
+            &format!("rs_r={r}"),
+            &wl,
+            r,
+            &p_sweep_for(r),
+            Metric::SqL2,
+            opts.seed + 13 * r as u64,
+        )?);
+    }
+    Ok(fig)
+}
+
+/// Figure 10: recall@1 vs relative complexity on the Santander-like
+/// sparse binary surrogate (queries = stored vectors).
+pub fn fig10(opts: &EvalOptions) -> Result<Figure> {
+    let mut fig = Figure::new(
+        "fig10",
+        "Recall@1 vs relative complexity (Santander-like surrogate)",
+        "relative_complexity",
+        "recall_at_1",
+    );
+    let n = opts.size(20_000);
+    let n_queries = opts.size(1_000);
+    let mut rng = Rng::new(opts.seed);
+    let wl = santander_like::santander_like_workload(n, n_queries, &mut rng);
+    for &k in &[250usize, 500, 1000] {
+        let q = (n / k).max(2);
+        let params = IndexParams {
+            n_classes: q,
+            allocation: Allocation::Greedy,
+            greedy_cap_factor: Some(4.0),
+            ..Default::default()
+        };
+        fig.series.push(am_tradeoff_curve(
+            &format!("am_greedy_k={k}"),
+            &wl,
+            params,
+            &p_sweep_for(q),
+            opts.seed + k as u64,
+        )?);
+    }
+    for &r in &[50usize, 140, 400] {
+        fig.series.push(rs_tradeoff_curve(
+            &format!("rs_r={r}"),
+            &wl,
+            r,
+            &p_sweep_for(r),
+            Metric::SqL2,
+            opts.seed + 13 * r as u64,
+        )?);
+    }
+    Ok(fig)
+}
+
+/// Figure 11: recall@1 vs relative complexity on the SIFT1M-like
+/// surrogate, including the AM->RS hybrid.
+pub fn fig11(opts: &EvalOptions) -> Result<Figure> {
+    let mut fig = Figure::new(
+        "fig11",
+        "Recall@1 vs relative complexity (SIFT1M-like surrogate)",
+        "relative_complexity",
+        "recall_at_1",
+    );
+    let n = opts.size(100_000);
+    let n_queries = opts.size(1_000);
+    let mut rng = Rng::new(opts.seed);
+    let wl = clustered::clustered_workload(ClusteredSpec::sift_like(), n, n_queries, &mut rng);
+
+    for &k in &[500usize, 1000, 2000] {
+        let q = (n / k).max(2);
+        let params =
+            IndexParams { n_classes: q, allocation: Allocation::Random, ..Default::default() };
+        fig.series.push(am_tradeoff_curve(
+            &format!("am_random_k={k}"),
+            &wl,
+            params,
+            &p_sweep_for(q),
+            opts.seed + k as u64,
+        )?);
+    }
+    for &r in &[100usize, 316, 1000] {
+        fig.series.push(rs_tradeoff_curve(
+            &format!("rs_r={r}"),
+            &wl,
+            r,
+            &p_sweep_for(r),
+            Metric::SqL2,
+            opts.seed + 13 * r as u64,
+        )?);
+    }
+    // hybrid: AM (k=2000) classes searched with per-class RS anchors
+    let q = (n / 2000).max(2);
+    let params =
+        IndexParams { n_classes: q, allocation: Allocation::Random, ..Default::default() };
+    fig.series.push(hybrid_tradeoff_curve(
+        "hybrid_am_rs_k=2000",
+        &wl,
+        params,
+        4,
+        &p_sweep_for(q),
+        opts.seed + 999,
+    )?);
+    // modern-practice reference: IVF-flat (k-means coarse quantizer)
+    fig.series.push(ivf_tradeoff_curve(
+        "ivf_flat_r=316",
+        &wl,
+        316,
+        &p_sweep_for(316),
+        opts.seed + 1717,
+    )?);
+    Ok(fig)
+}
+
+/// IVF-flat trade-off sweep (same incremental structure as RS).
+fn ivf_tradeoff_curve(
+    label: &str,
+    wl: &Workload,
+    n_lists: usize,
+    p_sweep: &[usize],
+    seed: u64,
+) -> Result<Series> {
+    use crate::baseline::IvfFlat;
+    let mut rng = Rng::new(seed);
+    let n_lists = n_lists.min(wl.base.len());
+    let ivf = IvfFlat::build(wl.base.clone(), n_lists, 10, Metric::SqL2, &mut rng)?;
+    let reference = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+    let ps: Vec<usize> =
+        p_sweep.iter().cloned().filter(|&p| p <= n_lists).collect();
+    let per_query: Vec<(Vec<(bool, u64)>, u64)> =
+        parallel_map(wl.queries.len(), |qi| {
+            let x = wl.queries.get(qi);
+            let mut rows = Vec::with_capacity(ps.len());
+            for &p in &ps {
+                let mut ops = OpsCounter::new();
+                let (id, _, _) = ivf.query(x, p, &mut ops);
+                rows.push((id == wl.ground_truth[qi], ops.total()));
+            }
+            (rows, reference.reference_ops(x))
+        });
+    let mut series = Series::new(label);
+    for (pi, _p) in ps.iter().enumerate() {
+        let mut recall = Recall::new();
+        let mut total_ops = 0u64;
+        let mut total_ref = 0u64;
+        for (rows, reference_ops) in &per_query {
+            recall.record(rows[pi].0);
+            total_ops += rows[pi].1;
+            total_ref += reference_ops;
+        }
+        series.push_aux(
+            total_ops as f64 / total_ref.max(1) as f64,
+            recall.value(),
+            recall.std_error(),
+        );
+    }
+    Ok(series)
+}
+
+/// Figure 12: recall@1 vs relative complexity on the GIST1M-like
+/// surrogate (960-d).
+pub fn fig12(opts: &EvalOptions) -> Result<Figure> {
+    let mut fig = Figure::new(
+        "fig12",
+        "Recall@1 vs relative complexity (GIST1M-like surrogate)",
+        "relative_complexity",
+        "recall_at_1",
+    );
+    let n = opts.size(20_000);
+    let n_queries = opts.size(500);
+    let mut rng = Rng::new(opts.seed);
+    let wl = clustered::clustered_workload(ClusteredSpec::gist_like(), n, n_queries, &mut rng);
+    for &k in &[1000usize, 2000, 4000] {
+        let q = (n / k).max(2);
+        let params =
+            IndexParams { n_classes: q, allocation: Allocation::Random, ..Default::default() };
+        fig.series.push(am_tradeoff_curve(
+            &format!("am_random_k={k}"),
+            &wl,
+            params,
+            &p_sweep_for(q),
+            opts.seed + k as u64,
+        )?);
+    }
+    for &r in &[45usize, 141, 450] {
+        fig.series.push(rs_tradeoff_curve(
+            &format!("rs_r={r}"),
+            &wl,
+            r,
+            &p_sweep_for(r),
+            Metric::SqL2,
+            opts.seed + 13 * r as u64,
+        )?);
+    }
+    Ok(fig)
+}
+
+/// Ablation (§5.1.1 remark): sum rule vs max (cooccurrence) rule on the
+/// Figure-1 sparse setup.
+pub fn ablation_rule(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "ablation_rule",
+        "Sum rule vs cooccurrence (max) rule (sparse; q=10, d=128, c=8)",
+        "k",
+        "error_rate",
+    );
+    let trials = opts.trials(5_000);
+    let ks = [64usize, 256, 1024, 4096];
+    for &(rule, label) in
+        &[(StorageRule::Sum, "sum_rule"), (StorageRule::Max, "max_rule")]
+    {
+        let cfgs = ks.iter().map(|&k| {
+            (
+                k as f64,
+                TrialConfig {
+                    d: 128,
+                    k,
+                    q: 10,
+                    model: PatternModel::Sparse { ones: 8.0 },
+                    alpha: None,
+                    rule,
+                },
+            )
+        });
+        fig.series.push(error_curve(label, cfgs, trials, opts.seed));
+    }
+    fig
+}
+
+/// Ablation (Cor 3.2/4.2): corrupted queries, error rate vs overlap α.
+pub fn ablation_corruption(opts: &EvalOptions) -> Figure {
+    let mut fig = Figure::new(
+        "ablation_corruption",
+        "Error rate vs query overlap alpha (Cor 3.2 / 4.2 regimes)",
+        "alpha",
+        "error_rate",
+    );
+    let trials = opts.trials(4_000);
+    let alphas = [0.2f64, 0.4, 0.6, 0.8, 1.0];
+    let sparse = TrialConfig {
+        d: 128,
+        k: 1024,
+        q: 10,
+        model: PatternModel::Sparse { ones: 8.0 },
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let cfgs = alphas.iter().map(|&a| {
+        (a, TrialConfig { alpha: if a >= 1.0 { None } else { Some(a) }, ..sparse })
+    });
+    fig.series.push(error_curve("sparse_k=1024", cfgs, trials, opts.seed));
+    let dense = TrialConfig {
+        d: 64,
+        k: 512,
+        q: 10,
+        model: PatternModel::Dense,
+        alpha: None,
+        rule: StorageRule::Sum,
+    };
+    let cfgs = alphas.iter().map(|&a| {
+        (a, TrialConfig { alpha: if a >= 1.0 { None } else { Some(a) }, ..dense })
+    });
+    fig.series.push(error_curve("dense_k=512", cfgs, trials, opts.seed + 1));
+    fig
+}
+
+/// Ablation (conclusion / future work): two-level hierarchical cascade vs
+/// flat index — recall and scoring cost at matched scan budgets.
+pub fn ablation_hierarchical(opts: &EvalOptions) -> Result<Figure> {
+    use crate::index::HierarchicalIndex;
+    let mut fig = Figure::new(
+        "ablation_hierarchical",
+        "Flat vs two-level cascade (dense d=64, n=16384, q=64)",
+        "scoring_ops",
+        "recall_at_1",
+    );
+    let n = opts.size(16_384);
+    let n_queries = opts.trials(400).min(n);
+    let mut rng = Rng::new(opts.seed);
+    let wl = crate::data::synthetic::dense_workload(
+        64,
+        n,
+        n_queries,
+        crate::data::synthetic::QueryModel::Corrupted { alpha: 0.9 },
+        &mut rng,
+    );
+    let q = 64.min(n / 4);
+    let params = IndexParams { n_classes: q, ..Default::default() };
+
+    // flat index at p = 1, 2, 4
+    let flat = AmIndex::build(wl.base.clone(), params, &mut rng)?;
+    let mut series = Series::new("flat");
+    for p in [1usize, 2, 4] {
+        let results: Vec<(bool, u64)> = parallel_map(wl.queries.len(), |qi| {
+            let mut ops = OpsCounter::new();
+            let r = flat.query(wl.queries.get(qi), p, &mut ops);
+            (r.id == wl.ground_truth[qi], ops.score_ops)
+        });
+        let mut recall = Recall::new();
+        let mut score_ops = 0u64;
+        for (hit, ops) in results {
+            recall.record(hit);
+            score_ops += ops;
+        }
+        series.push_aux(
+            score_ops as f64 / wl.queries.len() as f64,
+            recall.value(),
+            recall.std_error(),
+        );
+    }
+    fig.series.push(series);
+
+    // cascade with s = 8 super-classes at p1 = 1, 2, 4 (p2 matched)
+    let h = HierarchicalIndex::build(wl.base.clone(), params, 8.min(q), &mut rng)?;
+    let mut series = Series::new("cascade_s=8");
+    for (p1, p2) in [(1usize, 1usize), (2, 2), (4, 4)] {
+        let results: Vec<(bool, u64)> = parallel_map(wl.queries.len(), |qi| {
+            let mut ops = OpsCounter::new();
+            let r = h.query(wl.queries.get(qi), p1, p2, &mut ops);
+            (r.id == wl.ground_truth[qi], ops.score_ops)
+        });
+        let mut recall = Recall::new();
+        let mut score_ops = 0u64;
+        for (hit, ops) in results {
+            recall.record(hit);
+            score_ops += ops;
+        }
+        series.push_aux(
+            score_ops as f64 / wl.queries.len() as f64,
+            recall.value(),
+            recall.std_error(),
+        );
+    }
+    fig.series.push(series);
+    Ok(fig)
+}
+
+/// Ablation (Remark 4.3): higher-order scores `Σ ⟨x,x^μ⟩^{2m}` — argmax
+/// error rate vs class size k for m = 1, 2, 3 (dense patterns, q=2).
+pub fn ablation_higher_order(opts: &EvalOptions) -> Result<Figure> {
+    use crate::memory::HigherOrderScorer;
+    let mut fig = Figure::new(
+        "ablation_higher_order",
+        "Higher-order scores (Remark 4.3): error vs k for order 2m (dense d=24, q=2)",
+        "k",
+        "error_rate",
+    );
+    let d = 24usize;
+    let q = 2usize;
+    let trials = opts.trials(300);
+    let ks = [64usize, 256, 1024, 4096, 16384];
+    for &m in &[1u32, 2, 3] {
+        let mut series = Series::new(format!("order_2m={}", 2 * m));
+        let points: Vec<(f64, Recall)> = parallel_map_items(&ks, |&k| {
+            let mut recall = Recall::new();
+            let dbs = 3usize;
+            for db in 0..dbs {
+                let mut rng =
+                    Rng::new(opts.seed ^ (k as u64) ^ ((db as u64) << 32) ^ m as u64);
+                let classes: Vec<crate::data::Dataset> = (0..q)
+                    .map(|_| crate::data::synthetic::dense_patterns(d, k, &mut rng))
+                    .collect();
+                let scorer = HigherOrderScorer::new(classes.clone(), m);
+                for t in 0..(trials / dbs).max(10) {
+                    let target = t % q;
+                    let x = classes[target].get(t % k).to_vec();
+                    let scores = scorer.score_all(&x);
+                    let win = (0..q)
+                        .all(|i| i == target || scores[i] < scores[target]);
+                    recall.record(win);
+                }
+            }
+            (k as f64, recall)
+        });
+        for (k, r) in points {
+            series.push_aux(k, r.error_rate(), r.std_error());
+        }
+        fig.series.push(series);
+    }
+    Ok(fig)
+}
+
+/// Ablation (conclusion / "smart pooling"): Hopfield-readout retrieval
+/// vs in-class scan — success rate of the pooled (scan-free) path and
+/// total cost, as the per-class load k/d varies.
+pub fn ablation_pooling(opts: &EvalOptions) -> Result<Figure> {
+    use crate::index::PoolingIndex;
+    let mut fig = Figure::new(
+        "ablation_pooling",
+        "Smart pooling (Hopfield readout) vs scan (dense d=256, q=8, alpha=0.9)",
+        "k",
+        "rate",
+    );
+    let d = 256usize;
+    let q = 8usize;
+    let n_queries = opts.trials(300);
+    let mut pooled_series = Series::new("pooled_fraction");
+    let mut recall_series = Series::new("recall_at_1");
+    let mut cost_series = Series::new("relative_cost_vs_scan");
+    for &k in &[8usize, 16, 32, 64, 128] {
+        let mut rng = Rng::new(opts.seed ^ k as u64);
+        let wl = crate::data::synthetic::dense_workload(
+            d,
+            k * q,
+            n_queries,
+            crate::data::synthetic::QueryModel::Corrupted { alpha: 0.9 },
+            &mut rng,
+        );
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng)?;
+        let pool = PoolingIndex::new(index.clone());
+        let mut pooled = Recall::new();
+        let mut recall = Recall::new();
+        let mut ops_pool = OpsCounter::new();
+        let mut ops_scan = OpsCounter::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = pool.query(wl.queries.get(qi), 1, &mut ops_pool);
+            pooled.record(r.pooled);
+            recall.record(r.result.id == gt);
+            index.query(wl.queries.get(qi), 1, &mut ops_scan);
+        }
+        pooled_series.push(k as f64, pooled.value());
+        recall_series.push(k as f64, recall.value());
+        cost_series.push(
+            k as f64,
+            ops_pool.total() as f64 / ops_scan.total().max(1) as f64,
+        );
+    }
+    fig.series.push(pooled_series);
+    fig.series.push(recall_series);
+    fig.series.push(cost_series);
+    Ok(fig)
+}
+
+/// Run one figure by id ("1".."12", "ablation_rule", "ablation_corruption").
+pub fn run_figure(id: &str, opts: &EvalOptions) -> Result<Figure> {
+    match id {
+        "1" | "fig1" => Ok(fig1(opts)),
+        "2" | "fig2" => Ok(fig2(opts)),
+        "3" | "fig3" => Ok(fig3(opts)),
+        "4" | "fig4" => Ok(fig4(opts)),
+        "5" | "fig5" => Ok(fig5(opts)),
+        "6" | "fig6" => Ok(fig6(opts)),
+        "7" | "fig7" => Ok(fig7(opts)),
+        "8" | "fig8" => Ok(fig8(opts)),
+        "9" | "fig9" => fig9(opts),
+        "10" | "fig10" => fig10(opts),
+        "11" | "fig11" => fig11(opts),
+        "12" | "fig12" => fig12(opts),
+        "ablation_rule" => Ok(ablation_rule(opts)),
+        "ablation_corruption" => Ok(ablation_corruption(opts)),
+        "ablation_hierarchical" => ablation_hierarchical(opts),
+        "ablation_higher_order" => ablation_higher_order(opts),
+        "ablation_pooling" => ablation_pooling(opts),
+        other => Err(crate::error::Error::Config(format!("unknown figure '{other}'"))),
+    }
+}
+
+/// All figure ids in order.
+pub const ALL_FIGURES: &[&str] = &[
+    "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12",
+    "ablation_rule", "ablation_corruption", "ablation_hierarchical",
+    "ablation_higher_order", "ablation_pooling",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> EvalOptions {
+        EvalOptions { scale: 0.02, seed: 7 }
+    }
+
+    #[test]
+    fn fig1_has_monotonic_tendency() {
+        let fig = fig1(&tiny());
+        let pts = &fig.series[0].points;
+        assert_eq!(pts.len(), 11);
+        // error at the largest k should exceed error at the smallest
+        assert!(pts.last().unwrap().1 >= pts.first().unwrap().1);
+    }
+
+    #[test]
+    fn fig9_runs_small() {
+        let fig = fig9(&tiny()).unwrap();
+        assert!(!fig.series.is_empty());
+        for s in &fig.series {
+            for &(x, y, _) in &s.points {
+                assert!(x > 0.0, "complexity must be positive");
+                assert!((0.0..=1.0).contains(&y), "recall in [0,1]");
+            }
+        }
+    }
+
+    #[test]
+    fn recall_monotone_in_p_for_am_curve() {
+        let fig = fig10(&EvalOptions { scale: 0.02, seed: 9 }).unwrap();
+        let am = fig
+            .series
+            .iter()
+            .find(|s| s.label.starts_with("am_"))
+            .expect("am series");
+        // points are generated with increasing p -> recall must not drop
+        for w in am.points.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "recall not monotone: {:?}", am.points);
+        }
+    }
+
+    #[test]
+    fn run_figure_rejects_unknown() {
+        assert!(run_figure("nope", &tiny()).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness: regenerates every table/figure of the paper's §5
+//! (see DESIGN.md §5 for the experiment index).
+
+pub mod figures;
+pub mod report;
+pub mod runner;
+
+pub use figures::{run_figure, EvalOptions, ALL_FIGURES};
+pub use report::{Figure, Series};
+pub use runner::{class_selection_trials, PatternModel, TrialConfig};

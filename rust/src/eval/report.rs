@@ -1,0 +1,135 @@
+//! CSV emission for the figure harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A labelled data series (one curve of a figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Curve label (legend entry).
+    pub label: String,
+    /// (x, y) points plus an optional auxiliary column (e.g. std error).
+    pub points: Vec<(f64, f64, Option<f64>)>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new(label: impl Into<String>) -> Self {
+        Series { label: label.into(), points: Vec::new() }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y, None));
+    }
+
+    /// Append a point with an auxiliary value.
+    pub fn push_aux(&mut self, x: f64, y: f64, aux: f64) {
+        self.points.push((x, y, Some(aux)));
+    }
+}
+
+/// A figure: id, axis names, series.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    /// e.g. "fig1".
+    pub id: String,
+    /// Plot title (matches the paper caption).
+    pub title: String,
+    /// X axis name.
+    pub x_label: String,
+    /// Y axis name.
+    pub y_label: String,
+    /// Data series.
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    /// New empty figure.
+    pub fn new(
+        id: impl Into<String>,
+        title: impl Into<String>,
+        x_label: impl Into<String>,
+        y_label: impl Into<String>,
+    ) -> Self {
+        Figure {
+            id: id.into(),
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    /// Write `<out_dir>/<id>.csv` with columns `series,x,y,aux`.
+    pub fn write_csv(&self, out_dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = out_dir.join(format!("{}.csv", self.id));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "# {}", self.title)?;
+        writeln!(f, "# x: {}, y: {}", self.x_label, self.y_label)?;
+        writeln!(f, "series,{},{},aux", self.x_label, self.y_label)?;
+        for s in &self.series {
+            for &(x, y, aux) in &s.points {
+                match aux {
+                    Some(a) => writeln!(f, "{},{},{},{}", s.label, x, y, a)?,
+                    None => writeln!(f, "{},{},{},", s.label, x, y)?,
+                }
+            }
+        }
+        f.flush()?;
+        Ok(path)
+    }
+
+    /// Render an ASCII summary table (printed by the eval CLI).
+    pub fn ascii_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.id, self.title));
+        out.push_str(&format!(
+            "{:>24} {:>14} {:>14}\n",
+            "series", self.x_label, self.y_label
+        ));
+        for s in &self.series {
+            for &(x, y, _) in &s.points {
+                out.push_str(&format!("{:>24} {:>14.6} {:>14.6}\n", s.label, x, y));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir()
+            .join(format!("amsearch_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut fig = Figure::new("figtest", "Title", "k", "error_rate");
+        let mut s = Series::new("q=10");
+        s.push(64.0, 0.01);
+        s.push_aux(128.0, 0.02, 0.001);
+        fig.series.push(s);
+        let path = fig.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("series,k,error_rate,aux"));
+        assert!(text.contains("q=10,64,0.01,"));
+        assert!(text.contains("q=10,128,0.02,0.001"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ascii_table_contains_points() {
+        let mut fig = Figure::new("f", "T", "x", "y");
+        let mut s = Series::new("a");
+        s.push(1.0, 2.0);
+        fig.series.push(s);
+        let t = fig.ascii_table();
+        assert!(t.contains("f — T"));
+        assert!(t.contains("1.0"));
+    }
+}

@@ -1,0 +1,316 @@
+//! Monte-Carlo machinery for the synthetic experiments (Figures 1–8).
+//!
+//! Each trial asks: does the class containing the query's true match
+//! achieve the (strictly) highest score?  The error event mirrors the
+//! theorems' union bound `P(∃ i ≥ 2 : s(X^i) ≥ s(X^1))` — ties count as
+//! errors.
+//!
+//! To keep very large `n = k·q` affordable, databases are built
+//! *streaming*: patterns are generated, folded into the class memories,
+//! and discarded; only one designated representative pattern per class is
+//! retained as a query target (any stored pattern is statistically
+//! equivalent under the i.i.d. model).
+
+use crate::data::rng::Rng;
+use crate::data::synthetic::{corrupt_dense, corrupt_sparse};
+use crate::memory::{CooccurrenceMemory, OuterProductMemory, StorageRule};
+use crate::metrics::Recall;
+use crate::util::par::parallel_map;
+
+/// Pattern model for a synthetic error-rate experiment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PatternModel {
+    /// Sparse 0/1, `P(x=1) = ones/d`.
+    Sparse {
+        /// Expected number of ones `c`.
+        ones: f64,
+    },
+    /// Dense unbiased ±1.
+    Dense,
+}
+
+/// One synthetic experiment configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TrialConfig {
+    /// Dimension `d`.
+    pub d: usize,
+    /// Class size `k`.
+    pub k: usize,
+    /// Number of classes `q`.
+    pub q: usize,
+    /// Pattern model.
+    pub model: PatternModel,
+    /// Query corruption: None = exact query (Thm 3.1/4.1),
+    /// Some(alpha) = overlap α (Cor 3.2/4.2).
+    pub alpha: Option<f64>,
+    /// Storage rule (sum = analyzed, max = §5.1.1 ablation).
+    pub rule: StorageRule,
+}
+
+/// Stacked memories plus a sample of representative stored patterns per
+/// class.  Exact-query trials must probe *distinct* stored patterns —
+/// probing one representative repeatedly would collapse the effective
+/// Monte-Carlo sample to q per database.
+struct TrialBank {
+    stacked: Vec<f32>,
+    /// reps[class][j]: the first `reps_per_class` stored patterns.
+    reps: Vec<Vec<Vec<f32>>>,
+    d: usize,
+    q: usize,
+}
+
+fn gen_pattern(cfg: &TrialConfig, rng: &mut Rng) -> Vec<f32> {
+    match cfg.model {
+        PatternModel::Sparse { ones } => {
+            let p = ones / cfg.d as f64;
+            (0..cfg.d)
+                .map(|_| if rng.bernoulli(p) { 1.0 } else { 0.0 })
+                .collect()
+        }
+        PatternModel::Dense => (0..cfg.d)
+            .map(|_| if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 })
+            .collect(),
+    }
+}
+
+fn build_bank(cfg: &TrialConfig, reps_per_class: usize, rng: &mut Rng) -> TrialBank {
+    let (d, k, q) = (cfg.d, cfg.k, cfg.q);
+    let keep = reps_per_class.clamp(1, k);
+    let mut stacked = Vec::with_capacity(q * d * d);
+    let mut reps = Vec::with_capacity(q);
+    for _ in 0..q {
+        let mut class_reps = Vec::with_capacity(keep);
+        match cfg.rule {
+            StorageRule::Sum => {
+                let mut mem = OuterProductMemory::new(d);
+                for j in 0..k {
+                    let x = gen_pattern(cfg, rng);
+                    mem.add(&x);
+                    if j < keep {
+                        class_reps.push(x);
+                    }
+                }
+                stacked.extend_from_slice(mem.weights());
+            }
+            StorageRule::Max => {
+                let mut mem = CooccurrenceMemory::new(d);
+                for j in 0..k {
+                    let x = gen_pattern(cfg, rng);
+                    mem.add(&x);
+                    if j < keep {
+                        class_reps.push(x);
+                    }
+                }
+                stacked.extend(mem.weights());
+            }
+        }
+        reps.push(class_reps);
+    }
+    TrialBank { stacked, reps, d, q }
+}
+
+impl TrialBank {
+    /// Score of class `i` for query `x` (support path for binary data).
+    fn score(&self, i: usize, x: &[f32], support: Option<&[u32]>) -> f32 {
+        let w = &self.stacked[i * self.d * self.d..(i + 1) * self.d * self.d];
+        if let Some(sup) = support {
+            let mut total = 0f32;
+            for &l in sup {
+                let row = &w[l as usize * self.d..(l as usize + 1) * self.d];
+                for &m in sup {
+                    total += row[m as usize];
+                }
+            }
+            total
+        } else {
+            let mut total = 0f32;
+            for (l, &xl) in x.iter().enumerate() {
+                if xl == 0.0 {
+                    continue;
+                }
+                let row = &w[l * self.d..(l + 1) * self.d];
+                let mut acc = 0f32;
+                for (wm, &xm) in row.iter().zip(x) {
+                    acc += wm * xm;
+                }
+                total += xl * acc;
+            }
+            total
+        }
+    }
+
+    /// True when the target class strictly beats every other class.
+    fn target_wins(&self, target: usize, x: &[f32], sparse: bool) -> bool {
+        let support: Option<Vec<u32>> = if sparse {
+            Some(
+                x.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(i, _)| i as u32)
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let s_target = self.score(target, x, support.as_deref());
+        for i in 0..self.q {
+            if i != target && self.score(i, x, support.as_deref()) >= s_target {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Run `trials` Monte-Carlo trials of `cfg` and return the argmax-class
+/// accuracy accumulator (error rate = `1 - value`).
+///
+/// Trials are spread over `databases` independently generated databases
+/// (rayon-parallel); within a database, targets cycle over classes.
+pub fn class_selection_trials(
+    cfg: TrialConfig,
+    trials: usize,
+    databases: usize,
+    seed: u64,
+) -> Recall {
+    let databases = databases.max(1);
+    let per_db = trials.div_ceil(databases);
+    let sparse = matches!(cfg.model, PatternModel::Sparse { .. });
+    // distinct (class, stored-pattern) probes per database, so the
+    // effective sample size really is `trials`
+    let reps_per_class = per_db.div_ceil(cfg.q).clamp(1, cfg.k.min(256));
+    let results: Vec<Recall> = parallel_map(databases, |db| {
+        let mut rng = Rng::new(seed ^ (db as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let bank = build_bank(&cfg, reps_per_class, &mut rng);
+        let mut recall = Recall::new();
+        for t in 0..per_db {
+            let target = t % cfg.q;
+            let rep_idx = (t / cfg.q) % bank.reps[target].len();
+            let rep = &bank.reps[target][rep_idx];
+            let query: Vec<f32> = match cfg.alpha {
+                None => rep.clone(),
+                Some(a) => {
+                    if sparse {
+                        corrupt_sparse(rep, a, &mut rng)
+                    } else {
+                        corrupt_dense(rep, a, &mut rng)
+                    }
+                }
+            };
+            recall.record(bank.target_wins(target, &query, sparse));
+        }
+        recall
+    });
+    let mut total = Recall::new();
+    for r in &results {
+        total.merge(r);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_good_regime_low_error() {
+        // d=128, c=8, k=256 (d < k < d²), q=4: theory says near-0 error
+        let cfg = TrialConfig {
+            d: 128,
+            k: 256,
+            q: 4,
+            model: PatternModel::Sparse { ones: 8.0 },
+            alpha: None,
+            rule: StorageRule::Sum,
+        };
+        let r = class_selection_trials(cfg, 200, 4, 1);
+        assert!(r.error_rate() < 0.15, "error={}", r.error_rate());
+    }
+
+    #[test]
+    fn sparse_error_increases_with_k() {
+        let base = TrialConfig {
+            d: 64,
+            k: 64,
+            q: 8,
+            model: PatternModel::Sparse { ones: 6.0 },
+            alpha: None,
+            rule: StorageRule::Sum,
+        };
+        let small_k = class_selection_trials(base, 400, 4, 2).error_rate();
+        let big = TrialConfig { k: 4096, ..base };
+        let big_k = class_selection_trials(big, 400, 4, 2).error_rate();
+        assert!(
+            big_k > small_k + 0.05,
+            "error(k=64)={small_k} error(k=4096)={big_k}"
+        );
+    }
+
+    #[test]
+    fn dense_good_regime_low_error() {
+        // d=64, k=128 in (d, d²), q=4
+        let cfg = TrialConfig {
+            d: 64,
+            k: 128,
+            q: 4,
+            model: PatternModel::Dense,
+            alpha: None,
+            rule: StorageRule::Sum,
+        };
+        let r = class_selection_trials(cfg, 200, 4, 3);
+        assert!(r.error_rate() < 0.2, "error={}", r.error_rate());
+    }
+
+    #[test]
+    fn corruption_hurts() {
+        let cfg = TrialConfig {
+            d: 64,
+            k: 512,
+            q: 8,
+            model: PatternModel::Dense,
+            alpha: None,
+            rule: StorageRule::Sum,
+        };
+        let exact = class_selection_trials(cfg, 300, 3, 4).error_rate();
+        let corrupted = class_selection_trials(
+            TrialConfig { alpha: Some(0.5), ..cfg },
+            300,
+            3,
+            4,
+        )
+        .error_rate();
+        assert!(
+            corrupted >= exact,
+            "exact={exact} corrupted={corrupted}"
+        );
+    }
+
+    #[test]
+    fn max_rule_runs() {
+        let cfg = TrialConfig {
+            d: 64,
+            k: 32,
+            q: 4,
+            model: PatternModel::Sparse { ones: 6.0 },
+            alpha: None,
+            rule: StorageRule::Max,
+        };
+        let r = class_selection_trials(cfg, 100, 2, 5);
+        assert_eq!(r.total(), 100);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = TrialConfig {
+            d: 32,
+            k: 16,
+            q: 4,
+            model: PatternModel::Dense,
+            alpha: None,
+            rule: StorageRule::Sum,
+        };
+        let a = class_selection_trials(cfg, 100, 2, 9).error_rate();
+        let b = class_selection_trials(cfg, 100, 2, 9).error_rate();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,640 @@
+//! The associative-memory ANN index — the paper's system.
+//!
+//! Build: allocate the database into `q` classes (random / greedy /
+//! round-robin), build one sum- or max-rule memory per class, stack them
+//! into a [`MemoryBank`].
+//!
+//! Query: score all `q` memories with the bilinear form (natively here;
+//! the PJRT path in [`crate::runtime`] produces identical scores), keep
+//! the top-`p` classes, exhaustively scan their members, return the best
+//! candidate.  Every step feeds the paper's [`OpsCounter`] cost model.
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::Result;
+use crate::memory::{score as mem_score, MemoryBank};
+use crate::metrics::OpsCounter;
+use crate::partition::{greedy_alloc, random_alloc, roundrobin, Allocation, Partition};
+use crate::search::top_p_largest;
+
+use super::params::IndexParams;
+
+/// Result of a single query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResult {
+    /// Database id of the best candidate found.
+    pub id: u32,
+    /// Its distance under the index metric.
+    pub distance: f32,
+    /// The classes that were polled, best score first.
+    pub polled: Vec<u32>,
+    /// Number of candidate vectors scanned.
+    pub candidates: usize,
+}
+
+/// Built associative-memory index.
+#[derive(Debug, Clone)]
+pub struct AmIndex {
+    params: IndexParams,
+    partition: Partition,
+    bank: MemoryBank,
+    /// Owned copy of the database (the candidate scan needs raw vectors).
+    data: Dataset,
+    /// True when every stored vector is binary 0/1 (enables the paper's
+    /// c²-cost sparse scoring).
+    binary_sparse: bool,
+}
+
+impl AmIndex {
+    /// Build the index over `data`.
+    pub fn build(data: Dataset, params: IndexParams, rng: &mut Rng) -> Result<Self> {
+        params.validate(data.len())?;
+        let q = params.n_classes;
+        let partition = match params.allocation {
+            Allocation::Random => random_alloc::allocate(data.len(), q, rng)?,
+            Allocation::RoundRobin => roundrobin::allocate(data.len(), q)?,
+            Allocation::Greedy => {
+                let cap = params
+                    .greedy_cap_factor
+                    .map(|f| ((data.len() as f64 / q as f64) * f).ceil() as usize);
+                greedy_alloc::allocate(
+                    &data,
+                    q,
+                    greedy_alloc::GreedyOptions { max_size: cap },
+                    rng,
+                )?
+            }
+        };
+        let member_bufs: Vec<Dataset> = (0..q)
+            .map(|i| data.gather(partition.members(i)))
+            .collect();
+        let member_refs: Vec<&[f32]> =
+            member_bufs.iter().map(|d| d.as_flat()).collect();
+        let bank = MemoryBank::build(data.dim(), &member_refs, params.rule)?;
+        let binary_sparse = data
+            .as_flat()
+            .iter()
+            .all(|&x| x == 0.0 || x == 1.0);
+        Ok(AmIndex { params, partition, bank, data, binary_sparse })
+    }
+
+    /// Reassemble an index from persisted parts (see [`super::persist`]).
+    pub fn from_parts(
+        params: IndexParams,
+        assignments: Vec<u32>,
+        stacked: Vec<f32>,
+        counts: Vec<usize>,
+        data: Dataset,
+    ) -> Result<Self> {
+        params.validate(data.len())?;
+        let partition = Partition::from_assignments(assignments, params.n_classes)?;
+        partition.validate()?;
+        let bank = crate::memory::MemoryBank::from_parts(
+            data.dim(),
+            stacked,
+            counts,
+            params.rule,
+        )?;
+        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        Ok(AmIndex { params, partition, bank, data, binary_sparse })
+    }
+
+    /// Online insert: add a vector to the index without rebuilding.
+    ///
+    /// The class is chosen per the index's allocation strategy: greedy
+    /// indices use the paper's normalized-score rule; random /
+    /// round-robin indices place the vector in the currently smallest
+    /// class (keeping the equal-size model).  Returns the new vector id.
+    pub fn insert(&mut self, x: &[f32]) -> Result<u32> {
+        if x.len() != self.dim() {
+            return Err(crate::error::Error::Shape(format!(
+                "vector dim {} != index dim {}",
+                x.len(),
+                self.dim()
+            )));
+        }
+        let class = match self.params.allocation {
+            Allocation::Greedy => {
+                let scores = self.bank.score_query(x);
+                let mut best = 0usize;
+                let mut best_score = f64::NEG_INFINITY;
+                for (i, &s) in scores.iter().enumerate() {
+                    let norm = s as f64 / self.bank.count(i).max(1) as f64;
+                    if norm > best_score {
+                        best_score = norm;
+                        best = i;
+                    }
+                }
+                best
+            }
+            _ => {
+                // smallest class first (preserves the equal-size model)
+                (0..self.params.n_classes)
+                    .min_by_key(|&i| self.partition.members(i).len())
+                    .expect("q >= 1")
+            }
+        };
+        if self.binary_sparse && !x.iter().all(|&v| v == 0.0 || v == 1.0) {
+            self.binary_sparse = false; // sparse fast path no longer valid
+        }
+        self.bank.add_to_class(class, x);
+        let id = self.partition.push(class as u32)?;
+        self.data.push(x)?;
+        Ok(id)
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    /// Database size `n`.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the index holds no vectors.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Index parameters.
+    pub fn params(&self) -> &IndexParams {
+        &self.params
+    }
+
+    /// The class partition.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// The stacked memory bank (the PJRT scorer's `[q,d,d]` operand).
+    pub fn bank(&self) -> &MemoryBank {
+        &self.bank
+    }
+
+    /// The stored database.
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// True when the sparse (support-based, c²-cost) scoring path is used.
+    pub fn uses_sparse_scoring(&self) -> bool {
+        self.binary_sparse
+    }
+
+    /// Score every class against `x` (native path), with cost accounting.
+    pub fn score_classes(&self, x: &[f32], ops: &mut OpsCounter) -> Vec<f32> {
+        let d = self.dim();
+        let q = self.params.n_classes;
+        if self.binary_sparse {
+            let support: Vec<u32> = x
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, _)| i as u32)
+                .collect();
+            ops.score_ops += (support.len() * support.len() * q) as u64;
+            self.bank.score_query_support(&support)
+        } else {
+            ops.score_ops += (d * d * q) as u64;
+            self.bank.score_query(x)
+        }
+    }
+
+    /// Batched native scoring (mirrors the AOT `class_scores` artifact).
+    pub fn score_classes_batch(&self, queries: &[f32], ops: &mut OpsCounter) -> Vec<f32> {
+        let d = self.dim();
+        let q = self.params.n_classes;
+        let batch = queries.len() / d;
+        ops.score_ops += (d * d * q * batch) as u64;
+        mem_score::score_batch(self.bank.stacked(), queries, d, q)
+    }
+
+    /// Rank all classes by score, best first (used by the recall@p
+    /// evaluation and by `query`).
+    pub fn ranked_classes(&self, x: &[f32], ops: &mut OpsCounter) -> Vec<u32> {
+        let scores = self.score_classes(x, ops);
+        top_p_largest(&scores, scores.len())
+    }
+
+    /// Finish a query given precomputed class scores: select top-`p`
+    /// classes, scan their members, return the best candidate.
+    pub fn finish_query(
+        &self,
+        x: &[f32],
+        scores: &[f32],
+        p: usize,
+        ops: &mut OpsCounter,
+    ) -> QueryResult {
+        let polled = top_p_largest(scores, p);
+        let (id, distance, candidates) = self.scan_classes(x, &polled, ops);
+        ops.searches += 1;
+        QueryResult { id, distance, polled, candidates }
+    }
+
+    /// Exhaustive scan over the members of the given classes.
+    fn scan_classes(
+        &self,
+        x: &[f32],
+        classes: &[u32],
+        ops: &mut OpsCounter,
+    ) -> (u32, f32, usize) {
+        let metric = self.params.metric;
+        let mut best = f32::INFINITY;
+        let mut best_id = u32::MAX;
+        let mut candidates = 0usize;
+        // sparse scan cost is c per candidate (§5.2: pkc), dense is d
+        let per_candidate = if self.binary_sparse {
+            x.iter().filter(|&&v| v != 0.0).count()
+        } else {
+            self.dim()
+        };
+        for &ci in classes {
+            for &vid in self.partition.members(ci as usize) {
+                let dist = metric.distance(x, self.data.get(vid as usize));
+                candidates += 1;
+                if dist < best || (dist == best && vid < best_id) {
+                    best = dist;
+                    best_id = vid;
+                }
+            }
+        }
+        ops.scan_ops += (candidates * per_candidate) as u64;
+        (best_id, best, candidates)
+    }
+
+    /// Full query: score, poll top-`p`, scan, with cost accounting.
+    pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> QueryResult {
+        let scores = self.score_classes(x, ops);
+        self.finish_query(x, &scores, p, ops)
+    }
+
+    /// Query with the index's default poll depth.
+    pub fn query_default(&self, x: &[f32], ops: &mut OpsCounter) -> QueryResult {
+        self.query(x, self.params.top_p, ops)
+    }
+
+    /// Adaptive query: the poll depth is chosen per query from the score
+    /// distribution (paper conclusion: "improving the method further").
+    pub fn query_adaptive(
+        &self,
+        x: &[f32],
+        policy: &crate::search::AdaptivePolicy,
+        ops: &mut OpsCounter,
+    ) -> QueryResult {
+        let scores = self.score_classes(x, ops);
+        let p = policy.choose_p(&scores);
+        self.finish_query(x, &scores, p, ops)
+    }
+}
+
+/// Pooling-retrieval wrapper — the paper's "smart pooling" future-work
+/// idea: in the winning class, run a Hopfield readout on the class
+/// memory (`d²` cost, independent of `k`) instead of scanning the `k`
+/// members.  A successful readout that maps to a stored vector replaces
+/// the scan; failures fall back to the exhaustive in-class scan.
+#[derive(Debug, Clone)]
+pub struct PoolingIndex {
+    index: AmIndex,
+    lookup: crate::memory::retrieval::PatternLookup,
+    /// Expected support size for the sparse winner-take-all readout
+    /// (ignored for dense data).
+    sparse_c: usize,
+}
+
+/// Result of a pooling query, annotated with the path taken.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolingResult {
+    /// The answer (same contract as [`QueryResult`]).
+    pub result: QueryResult,
+    /// True when the Hopfield readout resolved the query (no scan).
+    pub pooled: bool,
+}
+
+impl PoolingIndex {
+    /// Wrap a built index.
+    pub fn new(index: AmIndex) -> Self {
+        let lookup = crate::memory::retrieval::PatternLookup::build(index.data());
+        let sparse_c = if index.uses_sparse_scoring() {
+            let n = index.len().max(1);
+            let total: usize = (0..n.min(256))
+                .map(|i| index.data().get(i).iter().filter(|&&v| v != 0.0).count())
+                .sum();
+            (total / n.min(256)).max(1)
+        } else {
+            0
+        };
+        PoolingIndex { index, lookup, sparse_c }
+    }
+
+    /// The wrapped index.
+    pub fn index(&self) -> &AmIndex {
+        &self.index
+    }
+
+    /// Query via readout on the top class; falls back to a top-`p` scan.
+    pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> PoolingResult {
+        use crate::memory::retrieval::{readout_dense, readout_sparse};
+        let scores = self.index.score_classes(x, ops);
+        let ranked = top_p_largest(&scores, 1);
+        let top = ranked[0] as usize;
+        let d = self.index.dim();
+        let w = self.index.bank().class_weights(top);
+        let recovered = if self.index.uses_sparse_scoring() {
+            let c = x.iter().filter(|&&v| v != 0.0).count().max(self.sparse_c);
+            readout_sparse(w, x, d, c)
+        } else {
+            readout_dense(w, x, d)
+        };
+        ops.aux_ops += (d * d) as u64; // the readout field computation
+        if let Some(id) = self.lookup.find(&recovered) {
+            // verify the recovered pattern actually lives in the top class
+            if self.index.partition().class_of(id as usize) == top as u32 {
+                let distance = self.index.params().metric.distance(x, &recovered);
+                ops.searches += 1;
+                return PoolingResult {
+                    result: QueryResult {
+                        id,
+                        distance,
+                        polled: vec![top as u32],
+                        candidates: 0,
+                    },
+                    pooled: true,
+                };
+            }
+        }
+        // fallback: standard scan
+        let result = self.index.finish_query(x, &scores, p, ops);
+        PoolingResult { result, pooled: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{self, QueryModel, SparseSpec};
+
+    fn dense_index(seed: u64, n: usize, q: usize) -> (AmIndex, crate::data::Workload) {
+        let mut rng = Rng::new(seed);
+        let wl = synthetic::dense_workload(64, n, 50, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        (idx, wl)
+    }
+
+    #[test]
+    fn build_shapes() {
+        let (idx, _) = dense_index(1, 256, 8);
+        assert_eq!(idx.len(), 256);
+        assert_eq!(idx.bank().n_classes(), 8);
+        assert_eq!(idx.bank().stacked().len(), 8 * 64 * 64);
+        assert!(!idx.uses_sparse_scoring());
+    }
+
+    #[test]
+    fn exact_query_finds_itself_with_full_poll() {
+        let (idx, wl) = dense_index(2, 128, 4);
+        let mut ops = OpsCounter::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            // p = q: scan everything; the stored copy must be found
+            let r = idx.query(wl.queries.get(qi), 4, &mut ops);
+            assert_eq!(r.id, gt);
+            assert_eq!(r.distance, 0.0);
+            assert_eq!(r.candidates, 128);
+        }
+    }
+
+    #[test]
+    fn top1_poll_mostly_correct_in_theory_regime() {
+        // d=64, k=128 -> k in (d, d²); q small: error probability low
+        let (idx, wl) = dense_index(3, 512, 4);
+        let mut ops = OpsCounter::new();
+        let mut hits = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = idx.query(wl.queries.get(qi), 1, &mut ops);
+            if r.id == gt {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 40, "hits={hits}/50");
+    }
+
+    #[test]
+    fn ops_accounting_matches_cost_model() {
+        let (idx, wl) = dense_index(4, 256, 8);
+        let mut ops = OpsCounter::new();
+        let r = idx.query(wl.queries.get(0), 2, &mut ops);
+        // dense: score = d² q
+        assert_eq!(ops.score_ops, (64 * 64 * 8) as u64);
+        // scan = candidates * d with candidates = 2 classes * 32
+        assert_eq!(r.candidates, 64);
+        assert_eq!(ops.scan_ops, (64 * 64) as u64);
+        assert_eq!(ops.searches, 1);
+    }
+
+    #[test]
+    fn sparse_index_uses_support_scoring() {
+        let mut rng = Rng::new(5);
+        let wl = synthetic::sparse_workload(
+            SparseSpec { dim: 128, ones: 8.0 },
+            200,
+            10,
+            QueryModel::Exact,
+            &mut rng,
+        );
+        let params = IndexParams { n_classes: 5, ..Default::default() };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        assert!(idx.uses_sparse_scoring());
+        let mut ops = OpsCounter::new();
+        let q0 = wl.queries.get(0);
+        let c = q0.iter().filter(|&&v| v != 0.0).count() as u64;
+        idx.query(q0, 1, &mut ops);
+        assert_eq!(ops.score_ops, c * c * 5);
+    }
+
+    #[test]
+    fn ranked_classes_puts_gt_class_first_usually() {
+        let (idx, wl) = dense_index(6, 512, 4);
+        let mut ops = OpsCounter::new();
+        let mut first = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let ranked = idx.ranked_classes(wl.queries.get(qi), &mut ops);
+            assert_eq!(ranked.len(), 4);
+            if ranked[0] == idx.partition().class_of(gt as usize) {
+                first += 1;
+            }
+        }
+        assert!(first >= 40, "first={first}/50");
+    }
+
+    #[test]
+    fn batch_scores_match_single() {
+        let (idx, wl) = dense_index(7, 128, 4);
+        let mut ops = OpsCounter::new();
+        let b = 5;
+        let mut flat = Vec::new();
+        for qi in 0..b {
+            flat.extend_from_slice(wl.queries.get(qi));
+        }
+        let batch = idx.score_classes_batch(&flat, &mut ops);
+        for qi in 0..b {
+            let single = idx.score_classes(wl.queries.get(qi), &mut ops);
+            for ci in 0..4 {
+                assert!((batch[qi * 4 + ci] - single[ci]).abs() < 1e-2);
+            }
+        }
+    }
+
+    #[test]
+    fn pooling_recovers_stored_patterns_without_scanning() {
+        // low-load regime: k=16 patterns per class in d=256 (load 0.06,
+        // well under the Hopfield one-step capacity)
+        let mut rng = Rng::new(20);
+        let wl = synthetic::dense_workload(
+            256,
+            64,
+            40,
+            QueryModel::Corrupted { alpha: 0.9 },
+            &mut rng,
+        );
+        let params = IndexParams { n_classes: 4, ..Default::default() };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let pool = PoolingIndex::new(idx);
+        let mut ops = OpsCounter::new();
+        let mut pooled_hits = 0;
+        let mut total_pooled = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = pool.query(wl.queries.get(qi), 4, &mut ops);
+            if r.pooled {
+                total_pooled += 1;
+                assert_eq!(r.result.candidates, 0, "pooled answers scan nothing");
+                if r.result.id == gt {
+                    pooled_hits += 1;
+                }
+            }
+        }
+        assert!(total_pooled >= 30, "pooling path taken {total_pooled}/40");
+        assert_eq!(pooled_hits, total_pooled, "pooled answers must be exact");
+    }
+
+    #[test]
+    fn pooling_falls_back_on_hard_queries() {
+        // overload: k=512 in d=32 — readout garbage, fallback must engage
+        let mut rng = Rng::new(21);
+        let wl = synthetic::dense_workload(32, 1024, 20, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 2, ..Default::default() };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let pool = PoolingIndex::new(idx);
+        let mut ops = OpsCounter::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = pool.query(wl.queries.get(qi), 2, &mut ops);
+            // exact query + full poll fallback: answer always right
+            // (either via an exact-match readout or the scan)
+            assert_eq!(r.result.id, gt, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn adaptive_query_spends_less_on_easy_workloads() {
+        let mut rng = Rng::new(22);
+        let wl = synthetic::dense_workload(64, 512, 60, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 8, ..Default::default() };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let policy = crate::search::AdaptivePolicy { min_p: 1, max_p: 8, mass: 0.3 };
+        let mut ops_adaptive = OpsCounter::new();
+        let mut ops_fixed = OpsCounter::new();
+        let mut hits = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = idx.query_adaptive(wl.queries.get(qi), &policy, &mut ops_adaptive);
+            if r.id == gt {
+                hits += 1;
+            }
+            idx.query(wl.queries.get(qi), 8, &mut ops_fixed);
+        }
+        assert!(hits >= 45, "hits={hits}/60");
+        assert!(
+            ops_adaptive.scan_ops < ops_fixed.scan_ops,
+            "adaptive {} !< full-poll {}",
+            ops_adaptive.scan_ops,
+            ops_fixed.scan_ops
+        );
+    }
+
+    #[test]
+    fn insert_then_query_finds_new_vector() {
+        let (mut idx, _) = dense_index(9, 128, 4);
+        let mut rng = Rng::new(99);
+        let v: Vec<f32> =
+            (0..64).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let id = idx.insert(&v).unwrap();
+        assert_eq!(id, 128);
+        assert_eq!(idx.len(), 129);
+        idx.partition().validate().unwrap();
+        let mut ops = OpsCounter::new();
+        // full poll: the inserted vector must be its own NN
+        let r = idx.query(&v, 4, &mut ops);
+        assert_eq!(r.id, id);
+        assert_eq!(r.distance, 0.0);
+    }
+
+    #[test]
+    fn insert_keeps_classes_balanced_for_random_alloc() {
+        let (mut idx, _) = dense_index(10, 120, 4);
+        let mut rng = Rng::new(100);
+        for _ in 0..40 {
+            let v: Vec<f32> =
+                (0..64).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            idx.insert(&v).unwrap();
+        }
+        let sizes = idx.partition().sizes();
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "sizes={sizes:?}");
+    }
+
+    #[test]
+    fn insert_rejects_wrong_dim() {
+        let (mut idx, _) = dense_index(11, 64, 4);
+        assert!(idx.insert(&[1.0; 63]).is_err());
+    }
+
+    #[test]
+    fn insert_updates_bank_scores_consistently() {
+        let (mut idx, _) = dense_index(12, 64, 4);
+        let mut rng = Rng::new(101);
+        let v: Vec<f32> =
+            (0..64).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let mut ops = OpsCounter::new();
+        let before = idx.score_classes(&v, &mut ops);
+        let id = idx.insert(&v).unwrap();
+        let class = idx.partition().class_of(id as usize) as usize;
+        let after = idx.score_classes(&v, &mut ops);
+        // the chosen class gains exactly <v,v>^2 = (64)^2
+        let gain = after[class] - before[class];
+        assert!((gain - 4096.0).abs() < 1.0, "gain={gain}");
+        for i in 0..4 {
+            if i != class {
+                assert!((after[i] - before[i]).abs() < 1e-2);
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_allocation_builds() {
+        let mut rng = Rng::new(8);
+        let wl = synthetic::dense_workload(32, 120, 5, QueryModel::Exact, &mut rng);
+        let params = IndexParams {
+            n_classes: 4,
+            allocation: Allocation::Greedy,
+            greedy_cap_factor: Some(1.5),
+            ..Default::default()
+        };
+        let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        idx.partition().validate().unwrap();
+        let cap = ((120.0 / 4.0) * 1.5_f64).ceil() as usize;
+        assert!(idx.partition().sizes().iter().all(|&s| s <= cap));
+    }
+}

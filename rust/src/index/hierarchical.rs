@@ -1,0 +1,282 @@
+//! Hierarchical (cascaded) partitioning — the paper's conclusion names
+//! "cascading the process using hierarchical partitioning" as the
+//! natural extension; this module implements the two-level version.
+//!
+//! Level 1 groups the `q` classes into `s` *super-classes* of `q/s`
+//! classes each and stores one associative memory per super-class (the
+//! merge of its classes' memories — the sum rule is additive, so the
+//! super-memory is exactly `Σ_classes W_i`).  A query first polls the `s`
+//! super-memories (`d²·s`), descends into the best `p₁`, polls only the
+//! classes inside them (`d²·p₁·(q/s)`), and scans the best `p₂` classes.
+//!
+//! Scoring cost drops from `d²·q` to `d²·(s + p₁·q/s)` — minimized at
+//! `s ≈ √(p₁·q)` — at the price of an extra miss opportunity; the
+//! `ablation_hierarchical` figure quantifies the trade-off.
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+use crate::memory::{MemoryBank, StorageRule};
+use crate::metrics::OpsCounter;
+use crate::search::top_p_largest;
+
+use super::am_index::{AmIndex, QueryResult};
+use super::params::IndexParams;
+
+/// Two-level cascaded index.
+#[derive(Debug, Clone)]
+pub struct HierarchicalIndex {
+    /// The flat index (level 2: per-class memories + data).
+    inner: AmIndex,
+    /// Level-1 super-class memories, stacked `[s, d, d]`.
+    super_bank: MemoryBank,
+    /// `super_of[class] = super-class index`.
+    super_of: Vec<u32>,
+    /// Classes inside each super-class.
+    classes_of: Vec<Vec<u32>>,
+}
+
+impl HierarchicalIndex {
+    /// Build: flat index first, then merge consecutive classes into `s`
+    /// super-classes.
+    pub fn build(
+        data: Dataset,
+        params: IndexParams,
+        n_super: usize,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        if params.rule != StorageRule::Sum {
+            return Err(Error::Config(
+                "hierarchical cascade requires the sum rule (memories must be additive)"
+                    .into(),
+            ));
+        }
+        let q = params.n_classes;
+        if n_super == 0 || n_super > q {
+            return Err(Error::Config(format!(
+                "need 1 <= n_super={n_super} <= q={q}"
+            )));
+        }
+        let inner = AmIndex::build(data, params, rng)?;
+        let dim = inner.dim();
+        let per = q.div_ceil(n_super);
+        let mut super_of = vec![0u32; q];
+        let mut classes_of = vec![Vec::new(); n_super];
+        for c in 0..q {
+            let s = (c / per).min(n_super - 1);
+            super_of[c] = s as u32;
+            classes_of[s].push(c as u32);
+        }
+        // super-memory = sum of member class memories (sum rule additive)
+        let sz = dim * dim;
+        let mut weights = vec![0f32; n_super * sz];
+        let mut counts = vec![0usize; n_super];
+        for c in 0..q {
+            let s = super_of[c] as usize;
+            let src = inner.bank().class_weights(c);
+            let dst = &mut weights[s * sz..(s + 1) * sz];
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+            counts[s] += inner.bank().count(c);
+        }
+        let super_bank =
+            MemoryBank::from_parts(dim, weights, counts, StorageRule::Sum)?;
+        Ok(HierarchicalIndex { inner, super_bank, super_of, classes_of })
+    }
+
+    /// The flat level-2 index.
+    pub fn inner(&self) -> &AmIndex {
+        &self.inner
+    }
+
+    /// Number of super-classes `s`.
+    pub fn n_super(&self) -> usize {
+        self.classes_of.len()
+    }
+
+    /// Super-class of class `c`.
+    pub fn super_of(&self, c: usize) -> u32 {
+        self.super_of[c]
+    }
+
+    /// Query through the cascade: poll `s` super-memories, descend into
+    /// the top `p1`, poll their classes, scan the top `p2` classes.
+    pub fn query(
+        &self,
+        x: &[f32],
+        p1: usize,
+        p2: usize,
+        ops: &mut OpsCounter,
+    ) -> QueryResult {
+        let d = self.inner.dim();
+        // level 1
+        let super_scores = self.super_bank.score_query(x);
+        ops.score_ops += (d * d * self.n_super()) as u64;
+        let top_super = top_p_largest(&super_scores, p1.max(1));
+        // level 2: only classes inside the selected super-classes
+        let mut cand_classes: Vec<u32> = Vec::new();
+        for &s in &top_super {
+            cand_classes.extend_from_slice(&self.classes_of[s as usize]);
+        }
+        let class_scores: Vec<f32> = cand_classes
+            .iter()
+            .map(|&c| {
+                let w = self.inner.bank().class_weights(c as usize);
+                let mut total = 0f32;
+                for (l, &xl) in x.iter().enumerate() {
+                    if xl == 0.0 {
+                        continue;
+                    }
+                    let row = &w[l * d..(l + 1) * d];
+                    let mut acc = 0f32;
+                    for (wm, &xm) in row.iter().zip(x) {
+                        acc += wm * xm;
+                    }
+                    total += xl * acc;
+                }
+                total
+            })
+            .collect();
+        ops.score_ops += (d * d * cand_classes.len()) as u64;
+        let order = top_p_largest(&class_scores, p2.max(1).min(cand_classes.len()));
+        let polled: Vec<u32> = order.iter().map(|&i| cand_classes[i as usize]).collect();
+        // scan
+        let metric = self.inner.params().metric;
+        let mut best = f32::INFINITY;
+        let mut best_id = u32::MAX;
+        let mut candidates = 0usize;
+        for &ci in &polled {
+            for &vid in self.inner.partition().members(ci as usize) {
+                let dist = metric.distance(x, self.inner.data().get(vid as usize));
+                candidates += 1;
+                if dist < best || (dist == best && vid < best_id) {
+                    best = dist;
+                    best_id = vid;
+                }
+            }
+        }
+        ops.scan_ops += (candidates * d) as u64;
+        ops.searches += 1;
+        QueryResult { id: best_id, distance: best, polled, candidates }
+    }
+
+    /// Scoring cost of this cascade at depth `p1` (the flat cost is
+    /// `d²·q`): `d²·(s + p1·ceil(q/s))`.
+    pub fn scoring_cost(&self, p1: usize) -> u64 {
+        let d = self.inner.dim() as u64;
+        let per = self.inner.params().n_classes.div_ceil(self.n_super()) as u64;
+        d * d * (self.n_super() as u64 + p1 as u64 * per)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{self, QueryModel};
+
+    fn workload(seed: u64) -> crate::data::Workload {
+        let mut rng = Rng::new(seed);
+        synthetic::dense_workload(64, 1024, 50, QueryModel::Exact, &mut rng)
+    }
+
+    #[test]
+    fn build_shapes() {
+        let wl = workload(1);
+        let mut rng = Rng::new(2);
+        let params = IndexParams { n_classes: 16, ..Default::default() };
+        let h = HierarchicalIndex::build(wl.base.clone(), params, 4, &mut rng).unwrap();
+        assert_eq!(h.n_super(), 4);
+        for c in 0..16 {
+            assert_eq!(h.super_of(c), (c / 4) as u32);
+        }
+    }
+
+    #[test]
+    fn super_memory_is_sum_of_members() {
+        let wl = workload(3);
+        let mut rng = Rng::new(4);
+        let params = IndexParams { n_classes: 8, ..Default::default() };
+        let h = HierarchicalIndex::build(wl.base.clone(), params, 2, &mut rng).unwrap();
+        let d = h.inner().dim();
+        for s in 0..2 {
+            let sw = h.super_bank.class_weights(s);
+            let mut sum = vec![0f32; d * d];
+            for c in (s * 4)..(s * 4 + 4) {
+                for (a, b) in sum.iter_mut().zip(h.inner().bank().class_weights(c)) {
+                    *a += b;
+                }
+            }
+            for (a, b) in sw.iter().zip(&sum) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn full_cascade_poll_is_exact() {
+        let wl = workload(5);
+        let mut rng = Rng::new(6);
+        let params = IndexParams { n_classes: 16, ..Default::default() };
+        let h = HierarchicalIndex::build(wl.base.clone(), params, 4, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = h.query(wl.queries.get(qi), 4, 16, &mut ops);
+            assert_eq!(r.id, gt, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn cascade_scores_cheaper_than_flat() {
+        let wl = workload(7);
+        let mut rng = Rng::new(8);
+        let params = IndexParams { n_classes: 64, ..Default::default() };
+        let h = HierarchicalIndex::build(wl.base.clone(), params, 8, &mut rng).unwrap();
+        // flat: d² * 64; cascade at p1=2: d² * (8 + 2*8) = d² * 24
+        let flat = (64 * 64 * 64) as u64;
+        assert!(h.scoring_cost(2) < flat);
+        let mut ops = OpsCounter::new();
+        h.query(wl.queries.get(0), 2, 2, &mut ops);
+        assert_eq!(ops.score_ops, h.scoring_cost(2));
+    }
+
+    #[test]
+    fn cascade_recall_reasonable_at_shallow_poll() {
+        let wl = workload(9);
+        let mut rng = Rng::new(10);
+        let params = IndexParams { n_classes: 16, ..Default::default() };
+        let h = HierarchicalIndex::build(wl.base.clone(), params, 4, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let mut hits = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = h.query(wl.queries.get(qi), 2, 2, &mut ops);
+            if r.id == gt {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 30, "hits={hits}/50");
+    }
+
+    #[test]
+    fn max_rule_rejected() {
+        let wl = workload(11);
+        let mut rng = Rng::new(12);
+        let params = IndexParams {
+            n_classes: 8,
+            rule: StorageRule::Max,
+            ..Default::default()
+        };
+        assert!(
+            HierarchicalIndex::build(wl.base.clone(), params, 2, &mut rng).is_err()
+        );
+    }
+
+    #[test]
+    fn bad_n_super_rejected() {
+        let wl = workload(13);
+        let mut rng = Rng::new(14);
+        let params = IndexParams { n_classes: 8, ..Default::default() };
+        assert!(HierarchicalIndex::build(wl.base.clone(), params, 0, &mut rng).is_err());
+        assert!(HierarchicalIndex::build(wl.base.clone(), params, 9, &mut rng).is_err());
+    }
+}

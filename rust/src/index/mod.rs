@@ -1,0 +1,10 @@
+//! The associative-memory ANN index (the paper's system contribution).
+
+pub mod am_index;
+pub mod hierarchical;
+pub mod params;
+pub mod persist;
+
+pub use am_index::{AmIndex, PoolingIndex, PoolingResult, QueryResult};
+pub use hierarchical::HierarchicalIndex;
+pub use params::IndexParams;

@@ -1,0 +1,104 @@
+//! Index hyper-parameters.
+
+use crate::error::{Error, Result};
+use crate::memory::StorageRule;
+use crate::partition::Allocation;
+use crate::search::Metric;
+
+/// Parameters of an associative-memory ANN index.
+#[derive(Debug, Clone, Copy)]
+pub struct IndexParams {
+    /// Number of classes `q`.
+    pub n_classes: usize,
+    /// Default number of classes polled per query (`p`, overridable per
+    /// request).
+    pub top_p: usize,
+    /// Memory storage rule (sum = paper's analyzed rule, max = [19]).
+    pub rule: StorageRule,
+    /// How vectors are allocated to classes.
+    pub allocation: Allocation,
+    /// Distance metric of the final candidate scan.
+    pub metric: Metric,
+    /// Cap on class size for greedy allocation, as a multiple of the
+    /// mean size `n/q` (None = unbounded).
+    pub greedy_cap_factor: Option<f64>,
+}
+
+impl Default for IndexParams {
+    fn default() -> Self {
+        IndexParams {
+            n_classes: 64,
+            top_p: 1,
+            rule: StorageRule::Sum,
+            allocation: Allocation::Random,
+            metric: Metric::SqL2,
+            greedy_cap_factor: None,
+        }
+    }
+}
+
+impl IndexParams {
+    /// Validate against a database of `n` vectors.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if self.n_classes == 0 {
+            return Err(Error::Config("n_classes must be > 0".into()));
+        }
+        if self.n_classes > n {
+            return Err(Error::Config(format!(
+                "n_classes {} > n {}",
+                self.n_classes, n
+            )));
+        }
+        if self.top_p == 0 || self.top_p > self.n_classes {
+            return Err(Error::Config(format!(
+                "top_p {} must be in 1..={}",
+                self.top_p, self.n_classes
+            )));
+        }
+        if let Some(f) = self.greedy_cap_factor {
+            if f < 1.0 {
+                return Err(Error::Config(format!(
+                    "greedy_cap_factor {f} must be >= 1"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        IndexParams::default().validate(1000).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad() {
+        let mut p = IndexParams::default();
+        p.n_classes = 0;
+        assert!(p.validate(10).is_err());
+        p.n_classes = 20;
+        assert!(p.validate(10).is_err());
+        p.n_classes = 4;
+        p.top_p = 5;
+        assert!(p.validate(10).is_err());
+        p.top_p = 1;
+        p.greedy_cap_factor = Some(0.5);
+        assert!(p.validate(10).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_edge_values() {
+        let p = IndexParams { n_classes: 10, top_p: 10, ..Default::default() };
+        p.validate(10).unwrap();
+        let p = IndexParams {
+            greedy_cap_factor: Some(1.0),
+            n_classes: 2,
+            ..Default::default()
+        };
+        p.validate(10).unwrap();
+    }
+}

@@ -1,0 +1,296 @@
+//! Index persistence: a versioned little-endian binary format so a built
+//! index can be served without rebuilding (allocation + memory build is
+//! the expensive part for large corpora).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8B   "AMSEARCH"
+//! version  u32  (currently 1)
+//! dim      u32
+//! n        u64  number of vectors
+//! q        u32  number of classes
+//! top_p    u32
+//! rule     u8   0 = sum, 1 = max
+//! alloc    u8   0 = random, 1 = greedy, 2 = round_robin
+//! metric   u8   0 = sq_l2, 1 = neg_dot, 2 = hamming
+//! cap      f64  greedy cap factor (NaN = none)
+//! assignments  n * u32
+//! bank         q * dim * dim * f32
+//! counts       q * u64
+//! data         n * dim * f32
+//! checksum u64  FNV-1a of everything before it
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::memory::StorageRule;
+use crate::partition::Allocation;
+use crate::search::Metric;
+
+use super::am_index::AmIndex;
+use super::params::IndexParams;
+
+const MAGIC: &[u8; 8] = b"AMSEARCH";
+const VERSION: u32 = 1;
+
+/// Incremental FNV-1a 64 (integrity checksum; not cryptographic).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+}
+
+struct CountingWriter<W: Write> {
+    inner: W,
+    hash: Fnv,
+}
+
+impl<W: Write> CountingWriter<W> {
+    fn put(&mut self, data: &[u8]) -> Result<()> {
+        self.hash.update(data);
+        self.inner.write_all(data)?;
+        Ok(())
+    }
+}
+
+/// Save an index to `path`.
+pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = CountingWriter { inner: BufWriter::new(file), hash: Fnv::new() };
+    let p = index.params();
+
+    w.put(MAGIC)?;
+    w.put(&VERSION.to_le_bytes())?;
+    w.put(&(index.dim() as u32).to_le_bytes())?;
+    w.put(&(index.len() as u64).to_le_bytes())?;
+    w.put(&(p.n_classes as u32).to_le_bytes())?;
+    w.put(&(p.top_p as u32).to_le_bytes())?;
+    w.put(&[match p.rule {
+        StorageRule::Sum => 0u8,
+        StorageRule::Max => 1,
+    }])?;
+    w.put(&[match p.allocation {
+        Allocation::Random => 0u8,
+        Allocation::Greedy => 1,
+        Allocation::RoundRobin => 2,
+    }])?;
+    w.put(&[match p.metric {
+        Metric::SqL2 => 0u8,
+        Metric::NegDot => 1,
+        Metric::Hamming => 2,
+    }])?;
+    w.put(&p.greedy_cap_factor.unwrap_or(f64::NAN).to_le_bytes())?;
+
+    for v in 0..index.len() {
+        w.put(&index.partition().class_of(v).to_le_bytes())?;
+    }
+    for &x in index.bank().stacked() {
+        w.put(&x.to_le_bytes())?;
+    }
+    for i in 0..p.n_classes {
+        w.put(&(index.bank().count(i) as u64).to_le_bytes())?;
+    }
+    for &x in index.data().as_flat() {
+        w.put(&x.to_le_bytes())?;
+    }
+    let checksum = w.hash.0;
+    w.inner.write_all(&checksum.to_le_bytes())?;
+    w.inner.flush()?;
+    Ok(())
+}
+
+struct CountingReader<R: Read> {
+    inner: R,
+    hash: Fnv,
+}
+
+impl<R: Read> CountingReader<R> {
+    fn take(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner.read_exact(buf)?;
+        self.hash.update(buf);
+        Ok(())
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.take(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.take(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.take(&mut b)?;
+        Ok(b[0])
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.take(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.take(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Load an index from `path`.
+pub fn load(path: &Path) -> Result<AmIndex> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Data(format!("cannot open {}: {e}", path.display())))?;
+    let mut r = CountingReader { inner: BufReader::new(file), hash: Fnv::new() };
+
+    let mut magic = [0u8; 8];
+    r.take(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Data("not an amsearch index file".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::Data(format!("unsupported index version {version}")));
+    }
+    let dim = r.u32()? as usize;
+    let n = r.u64()? as usize;
+    let q = r.u32()? as usize;
+    let top_p = r.u32()? as usize;
+    let rule = match r.u8()? {
+        0 => StorageRule::Sum,
+        1 => StorageRule::Max,
+        x => return Err(Error::Data(format!("bad rule byte {x}"))),
+    };
+    let allocation = match r.u8()? {
+        0 => Allocation::Random,
+        1 => Allocation::Greedy,
+        2 => Allocation::RoundRobin,
+        x => return Err(Error::Data(format!("bad allocation byte {x}"))),
+    };
+    let metric = match r.u8()? {
+        0 => Metric::SqL2,
+        1 => Metric::NegDot,
+        2 => Metric::Hamming,
+        x => return Err(Error::Data(format!("bad metric byte {x}"))),
+    };
+    let cap = r.f64()?;
+    let params = IndexParams {
+        n_classes: q,
+        top_p,
+        rule,
+        allocation,
+        metric,
+        greedy_cap_factor: if cap.is_nan() { None } else { Some(cap) },
+    };
+
+    let mut assignments = Vec::with_capacity(n);
+    for _ in 0..n {
+        assignments.push(r.u32()?);
+    }
+    let stacked = r.f32_vec(q * dim * dim)?;
+    let mut counts = Vec::with_capacity(q);
+    for _ in 0..q {
+        counts.push(r.u64()? as usize);
+    }
+    let flat = r.f32_vec(n * dim)?;
+
+    let computed = r.hash.0;
+    let mut tail = [0u8; 8];
+    r.inner.read_exact(&mut tail)?;
+    let stored = u64::from_le_bytes(tail);
+    if computed != stored {
+        return Err(Error::Data(format!(
+            "index file corrupt: checksum {computed:#x} != stored {stored:#x}"
+        )));
+    }
+
+    let data = Dataset::from_flat(dim, flat)?;
+    AmIndex::from_parts(params, assignments, stacked, counts, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synthetic::{self, QueryModel};
+    use crate::metrics::OpsCounter;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("amsearch_persist_{}_{}", std::process::id(), name))
+    }
+
+    fn build(seed: u64) -> (AmIndex, crate::data::Workload) {
+        let mut rng = Rng::new(seed);
+        let wl = synthetic::dense_workload(16, 120, 20, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 6, top_p: 2, ..Default::default() };
+        (AmIndex::build(wl.base.clone(), params, &mut rng).unwrap(), wl)
+    }
+
+    #[test]
+    fn roundtrip_preserves_queries() {
+        let (index, wl) = build(1);
+        let path = tmp("rt.amidx");
+        save(&index, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), index.len());
+        assert_eq!(loaded.dim(), index.dim());
+        assert_eq!(loaded.params().n_classes, 6);
+        assert_eq!(loaded.params().top_p, 2);
+        let mut ops = OpsCounter::new();
+        for qi in 0..wl.queries.len() {
+            let x = wl.queries.get(qi);
+            let a = index.query(x, 2, &mut ops);
+            let b = loaded.query(x, 2, &mut ops);
+            assert_eq!(a, b, "query {qi}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (index, _) = build(2);
+        let path = tmp("corrupt.amidx");
+        save(&index, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt") || err.to_string().contains("bad"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("magic.amidx");
+        std::fs::write(&path, b"NOTANIDXFILE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_is_error_not_panic() {
+        let (index, _) = build(3);
+        let path = tmp("trunc.amidx");
+        save(&index, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

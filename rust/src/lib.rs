@@ -1,0 +1,41 @@
+//! # amsearch
+//!
+//! Production reproduction of *Associative Memories to Accelerate
+//! Approximate Nearest Neighbor Search* (Gripon, Löwe, Vermet, 2016).
+//!
+//! The system partitions a vector database into `q` equal-sized classes,
+//! summarizes each class with a Hopfield-style sum-of-outer-products
+//! associative memory `W_i = Σ_μ x^μ (x^μ)^T`, and answers a query `x⁰` by
+//! polling every memory with the bilinear score `s(X^i, x⁰) = x⁰ᵀ W_i x⁰ =
+//! Σ_μ ⟨x⁰, x^μ⟩²`, then running exhaustive search only inside the top-`p`
+//! classes.  Scoring costs `d²·q` (or `c²·q` for sparse data) and the
+//! candidate scan `p·k·d`, versus `n·d` for exhaustive search.
+//!
+//! ## Architecture (three layers, python never on the request path)
+//!
+//! * **Layer 1** — Pallas kernel (`python/compile/kernels/class_score.py`)
+//!   computing the batched bilinear form on the MXU, AOT-lowered.
+//! * **Layer 2** — JAX graphs (`python/compile/model.py`) exported as HLO
+//!   text artifacts (`artifacts/*.hlo.txt` + `manifest.json`).
+//! * **Layer 3** — this crate: dataset substrates, memories, allocation,
+//!   the AM-ANN index, baselines (exhaustive / random-sampling anchors /
+//!   hybrid), a PJRT runtime that loads the AOT artifacts, an async
+//!   coordinator (router + dynamic batcher + workers), the paper's
+//!   complexity accounting, and the evaluation harness that regenerates
+//!   every figure of the paper.
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod index;
+pub mod memory;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod search;
+pub mod util;
+
+pub use error::{Error, Result};

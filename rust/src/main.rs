@@ -1,0 +1,347 @@
+//! `amsearch` — launcher CLI for the associative-memory ANN search system.
+//!
+//! ```text
+//! amsearch eval  [--figure N | --all] [--out-dir results] [--scale S] [--seed S]
+//! amsearch query [--config cfg.json] [--top-p P]
+//! amsearch serve [--config cfg.json] [--workers N] [--backend native|pjrt] [--repeat R]
+//! amsearch artifacts [--dir artifacts]
+//! ```
+//!
+//! * `eval`  — regenerate the paper's figures (CSV + console table)
+//! * `serve` — build an index per config and serve its query workload
+//!   through the coordinator, reporting latency/throughput/recall
+//! * `query` — one-shot: build index, run the config's queries, print
+//!   recall and the paper's relative-complexity accounting
+//! * `artifacts` — inspect the AOT artifact manifest
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use amsearch::config::{AppConfig, DatasetKind};
+use amsearch::coordinator::{EngineFactory, SearchServer};
+use amsearch::data::clustered::{self, ClusteredSpec};
+use amsearch::data::dataset::{Dataset, Workload};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel, SparseSpec};
+use amsearch::data::{io as data_io, mnist_like, santander_like};
+use amsearch::error::Result;
+use amsearch::eval::{run_figure, EvalOptions, ALL_FIGURES};
+use amsearch::index::AmIndex;
+use amsearch::metrics::{OpsCounter, Recall};
+use amsearch::runtime::{Backend, Manifest};
+use amsearch::util::Args;
+
+const USAGE: &str = "\
+usage: amsearch <command> [options]
+
+commands:
+  eval        regenerate paper figures   (--figure N | --all, --out-dir D,
+              --scale S, --seed S)
+  query       build index + run queries  (--config F, --top-p P,
+              --index F.amidx to load instead of building)
+  build       build index and save it     (--config F, --out F.amidx)
+  serve       serve queries through the coordinator
+              (--config F, --workers N, --backend native|pjrt, --repeat R)
+  artifacts   show the AOT manifest      (--dir D)
+";
+
+/// Materialize the configured workload.
+fn load_workload(cfg: &AppConfig) -> Result<Workload> {
+    let d = &cfg.dataset;
+    let mut rng = Rng::new(d.seed);
+    let mut wl = match d.kind {
+        DatasetKind::SparseSynthetic => synthetic::sparse_workload(
+            SparseSpec { dim: d.dim, ones: d.sparse_ones },
+            d.n,
+            d.n_queries,
+            QueryModel::Exact,
+            &mut rng,
+        ),
+        DatasetKind::DenseSynthetic => {
+            synthetic::dense_workload(d.dim, d.n, d.n_queries, QueryModel::Exact, &mut rng)
+        }
+        DatasetKind::SiftLike => clustered::clustered_workload(
+            ClusteredSpec::sift_like(),
+            d.n,
+            d.n_queries,
+            &mut rng,
+        ),
+        DatasetKind::GistLike => clustered::clustered_workload(
+            ClusteredSpec::gist_like(),
+            d.n,
+            d.n_queries,
+            &mut rng,
+        ),
+        DatasetKind::MnistLike => {
+            mnist_like::mnist_like_workload(d.n, d.n_queries, &mut rng)
+        }
+        DatasetKind::SantanderLike => {
+            santander_like::santander_like_workload(d.n, d.n_queries, &mut rng)
+        }
+        DatasetKind::Fvecs => {
+            let dir = d.data_dir.clone().expect("validated");
+            let base = data_io::read_fvecs(&dir.join("base.fvecs"))?;
+            let queries = data_io::read_fvecs(&dir.join("query.fvecs"))?;
+            let ground_truth = clustered::exact_ground_truth(&base, &queries);
+            Workload { base, queries, ground_truth }
+        }
+    };
+    if d.normalize {
+        let mean = wl.base.center_and_normalize();
+        let mut queries = Dataset::empty(wl.queries.dim());
+        for qi in 0..wl.queries.len() {
+            queries.push(&Dataset::preprocess_query(wl.queries.get(qi), &mean))?;
+        }
+        wl.queries = queries;
+        wl.ground_truth = clustered::exact_ground_truth(&wl.base, &wl.queries);
+    }
+    wl.validate()?;
+    Ok(wl)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let opts = EvalOptions {
+        scale: args.get_parse("scale", 1.0)?,
+        seed: args.get_parse("seed", 42u64)?,
+    };
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("results"));
+    let ids: Vec<String> = if args.flag("all") {
+        ALL_FIGURES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![args.get("figure").unwrap_or("1").to_string()]
+    };
+    for id in ids {
+        let started = Instant::now();
+        let fig = run_figure(&id, &opts)?;
+        let path = fig.write_csv(&out_dir)?;
+        println!("{}", fig.ascii_table());
+        println!(
+            "wrote {} ({:.1}s)\n",
+            path.display(),
+            started.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_build(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap_or("index.amidx"));
+    let wl = load_workload(cfg)?;
+    let mut rng = Rng::new(cfg.dataset.seed ^ 0xA11C);
+    let params = cfg.index.to_params();
+    let build_start = Instant::now();
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng)?;
+    println!(
+        "built index: n={} d={} q={} alloc={} rule={} in {:.2}s",
+        index.len(),
+        index.dim(),
+        params.n_classes,
+        params.allocation,
+        params.rule,
+        build_start.elapsed().as_secs_f64()
+    );
+    amsearch::index::persist::save(&index, &out)?;
+    let bytes = std::fs::metadata(&out)?.len();
+    println!("saved {} ({:.1} MB)", out.display(), bytes as f64 / 1e6);
+    Ok(())
+}
+
+fn cmd_query(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let top_p: usize = args.get_parse("top-p", 0usize)?;
+    let wl = load_workload(cfg)?;
+    let mut rng = Rng::new(cfg.dataset.seed ^ 0xA11C);
+    let params = cfg.index.to_params();
+    let index = if let Some(path) = args.get("index") {
+        println!("loading index from {path}");
+        let index = amsearch::index::persist::load(Path::new(path))?;
+        if index.dim() != wl.base.dim() {
+            return Err(amsearch::Error::Shape(format!(
+                "index dim {} != workload dim {}",
+                index.dim(),
+                wl.base.dim()
+            )));
+        }
+        index
+    } else {
+        println!(
+            "building index: n={} d={} q={} alloc={} rule={}",
+            wl.base.len(),
+            wl.base.dim(),
+            params.n_classes,
+            params.allocation,
+            params.rule
+        );
+        let build_start = Instant::now();
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng)?;
+        println!("built in {:.2}s", build_start.elapsed().as_secs_f64());
+        index
+    };
+
+    let p = if top_p == 0 { params.top_p } else { top_p };
+    let mut ops = OpsCounter::new();
+    let mut recall = Recall::new();
+    let started = Instant::now();
+    for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+        let r = index.query(wl.queries.get(qi), p, &mut ops);
+        recall.record(r.id == gt);
+    }
+    let elapsed = started.elapsed();
+    let exhaustive_ops = (wl.base.len() * wl.base.dim()) as u64;
+    println!(
+        "queries={} p={} recall@1={:.4} (+/-{:.4})",
+        recall.total(),
+        p,
+        recall.value(),
+        recall.std_error()
+    );
+    println!(
+        "ops/search={:.0} relative_complexity={:.4} (exhaustive={})",
+        ops.per_search(),
+        ops.relative_to(exhaustive_ops),
+        exhaustive_ops
+    );
+    println!(
+        "wall: total={:.3}s mean={:.1}us",
+        elapsed.as_secs_f64(),
+        elapsed.as_micros() as f64 / recall.total().max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let wl = load_workload(cfg)?;
+    let mut rng = Rng::new(cfg.dataset.seed ^ 0x5EED);
+    let params = cfg.index.to_params();
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng)?);
+    let mut serve_cfg = cfg.serve.to_coordinator();
+    if let Some(w) = args.get("workers") {
+        serve_cfg.workers = w
+            .parse()
+            .map_err(|_| amsearch::Error::Config(format!("--workers: bad value '{w}'")))?;
+    }
+    let backend_kind: Backend = match args.get("backend") {
+        Some(s) => s.parse()?,
+        None => cfg.backend.kind,
+    };
+    let repeat: usize = args.get_parse("repeat", 1usize)?.max(1);
+    let factory = EngineFactory {
+        index: index.clone(),
+        backend: backend_kind,
+        artifacts_dir: Some(cfg.backend.artifacts_dir.clone()),
+    };
+    println!(
+        "serving: n={} d={} q={} backend={} workers={} batch={}",
+        index.len(),
+        index.dim(),
+        params.n_classes,
+        backend_kind,
+        serve_cfg.workers,
+        serve_cfg.max_batch
+    );
+    let server = Arc::new(SearchServer::start(factory, serve_cfg)?);
+
+    // load generation: one client thread per concurrent stream
+    let started = Instant::now();
+    let streams = 16usize;
+    let total = wl.queries.len() * repeat;
+    let recall = {
+        let wl = &wl;
+        let results = amsearch::util::concurrent_map(streams, streams, |s| {
+            let mut r = Recall::new();
+            let mut i = s;
+            while i < total {
+                let qi = i % wl.queries.len();
+                let resp = server
+                    .search(wl.queries.get(qi).to_vec(), 0)
+                    .expect("search");
+                r.record(resp.neighbor == wl.ground_truth[qi]);
+                i += streams;
+            }
+            r
+        });
+        let mut total_r = Recall::new();
+        for r in &results {
+            total_r.merge(r);
+        }
+        total_r
+    };
+    let elapsed = started.elapsed();
+    let m = server.metrics();
+    println!(
+        "served {} requests in {:.3}s -> {:.0} qps",
+        recall.total(),
+        elapsed.as_secs_f64(),
+        recall.total() as f64 / elapsed.as_secs_f64()
+    );
+    println!("recall@1 = {:.4}", recall.value());
+    println!("latency:  {}", m.latency.summary());
+    println!("service:  {}", m.service.summary());
+    println!(
+        "batches={} mean_batch={:.2} ops/search={:.0}",
+        m.batches,
+        m.mean_batch_size(),
+        m.ops.per_search()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("manifest v{} in {}:", manifest.version, dir.display());
+    for e in manifest.entries() {
+        println!(
+            "  {:<36} kind={:<16} d={:<4} q={:<4} k={:<4} b={} file={}",
+            e.name,
+            e.kind,
+            e.d,
+            e.q.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            e.k.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            e.b,
+            e.file
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(raw, &["all", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.pos(0).is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    let cfg = match args.get("config") {
+        Some(path) => match AppConfig::from_file(Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => AppConfig::default(),
+    };
+    let result = match args.pos(0).unwrap() {
+        "eval" => cmd_eval(&args),
+        "build" => cmd_build(&cfg, &args),
+        "query" => cmd_query(&cfg, &args),
+        "serve" => cmd_serve(&cfg, &args),
+        "artifacts" => cmd_artifacts(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

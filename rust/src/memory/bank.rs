@@ -1,0 +1,328 @@
+//! A bank of class memories stacked contiguously — the unit the scorers
+//! (native and PJRT) operate on.
+//!
+//! Layout: `q` row-major `d×d` matrices back to back, i.e. exactly the
+//! `[q, d, d]` f32 operand of the AOT `class_scores` artifact.  The bank
+//! is built once at index-build time and is immutable on the query path.
+
+use crate::error::{Error, Result};
+use crate::memory::cooccurrence::CooccurrenceMemory;
+use crate::memory::outer::OuterProductMemory;
+use crate::memory::StorageRule;
+
+/// Immutable stacked class memories.
+#[derive(Debug, Clone)]
+pub struct MemoryBank {
+    dim: usize,
+    n_classes: usize,
+    /// `[q * d * d]` row-major stacked weights.
+    weights: Vec<f32>,
+    /// Patterns stored per class.
+    counts: Vec<usize>,
+    rule: StorageRule,
+}
+
+impl MemoryBank {
+    /// Build a bank from per-class pattern lists.
+    ///
+    /// `classes[i]` is the flat row-major member matrix of class `i`
+    /// (`len = k_i * dim`).
+    pub fn build(
+        dim: usize,
+        classes: &[&[f32]],
+        rule: StorageRule,
+    ) -> Result<Self> {
+        let n_classes = classes.len();
+        if n_classes == 0 {
+            return Err(Error::Config("memory bank needs >= 1 class".into()));
+        }
+        let mut weights = Vec::with_capacity(n_classes * dim * dim);
+        let mut counts = Vec::with_capacity(n_classes);
+        for members in classes {
+            if members.len() % dim != 0 {
+                return Err(Error::Shape(format!(
+                    "class member buffer len {} not a multiple of dim {dim}",
+                    members.len()
+                )));
+            }
+            match rule {
+                StorageRule::Sum => {
+                    let mut mem = OuterProductMemory::new(dim);
+                    for row in members.chunks_exact(dim) {
+                        mem.add(row);
+                    }
+                    counts.push(mem.count());
+                    weights.extend_from_slice(mem.weights());
+                }
+                StorageRule::Max => {
+                    let mut mem = CooccurrenceMemory::new(dim);
+                    for row in members.chunks_exact(dim) {
+                        mem.add(row);
+                    }
+                    counts.push(mem.count());
+                    weights.extend(mem.weights());
+                }
+            }
+        }
+        Ok(MemoryBank { dim, n_classes, weights, counts, rule })
+    }
+
+    /// Reassemble a bank from persisted parts (see `index::persist`).
+    pub fn from_parts(
+        dim: usize,
+        weights: Vec<f32>,
+        counts: Vec<usize>,
+        rule: StorageRule,
+    ) -> Result<Self> {
+        let n_classes = counts.len();
+        if n_classes == 0 {
+            return Err(Error::Config("memory bank needs >= 1 class".into()));
+        }
+        if weights.len() != n_classes * dim * dim {
+            return Err(Error::Shape(format!(
+                "weights len {} != q*d*d = {}",
+                weights.len(),
+                n_classes * dim * dim
+            )));
+        }
+        Ok(MemoryBank { dim, n_classes, weights, counts, rule })
+    }
+
+    /// Online insert: fold `x` into class `i`'s memory in place.
+    pub fn add_to_class(&mut self, i: usize, x: &[f32]) {
+        assert_eq!(x.len(), self.dim, "pattern dim mismatch");
+        let sz = self.dim * self.dim;
+        let w = &mut self.weights[i * sz..(i + 1) * sz];
+        match self.rule {
+            StorageRule::Sum => {
+                for (l, &xl) in x.iter().enumerate() {
+                    if xl == 0.0 {
+                        continue;
+                    }
+                    let row = &mut w[l * self.dim..(l + 1) * self.dim];
+                    for (wm, &xm) in row.iter_mut().zip(x) {
+                        *wm += xl * xm;
+                    }
+                }
+            }
+            StorageRule::Max => {
+                for (l, &xl) in x.iter().enumerate() {
+                    let row = &mut w[l * self.dim..(l + 1) * self.dim];
+                    for (wm, &xm) in row.iter_mut().zip(x) {
+                        let v = xl * xm;
+                        if v > *wm {
+                            *wm = v;
+                        }
+                    }
+                }
+            }
+        }
+        self.counts[i] += 1;
+    }
+
+    /// Online remove (sum rule only — the max rule is not invertible).
+    pub fn remove_from_class(&mut self, i: usize, x: &[f32]) -> Result<()> {
+        if self.rule != StorageRule::Sum {
+            return Err(Error::Config(
+                "online removal requires the sum rule (max rule is not invertible)"
+                    .into(),
+            ));
+        }
+        assert_eq!(x.len(), self.dim, "pattern dim mismatch");
+        if self.counts[i] == 0 {
+            return Err(Error::Config(format!("class {i} is empty")));
+        }
+        let sz = self.dim * self.dim;
+        let w = &mut self.weights[i * sz..(i + 1) * sz];
+        for (l, &xl) in x.iter().enumerate() {
+            if xl == 0.0 {
+                continue;
+            }
+            let row = &mut w[l * self.dim..(l + 1) * self.dim];
+            for (wm, &xm) in row.iter_mut().zip(x) {
+                *wm -= xl * xm;
+            }
+        }
+        self.counts[i] -= 1;
+        Ok(())
+    }
+
+    /// Vector dimensionality `d`.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of classes `q`.
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Storage rule used to build the bank.
+    pub fn rule(&self) -> StorageRule {
+        self.rule
+    }
+
+    /// Patterns stored in class `i`.
+    pub fn count(&self, i: usize) -> usize {
+        self.counts[i]
+    }
+
+    /// The full `[q, d, d]` stacked buffer (PJRT operand).
+    pub fn stacked(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// Weight matrix of class `i`.
+    pub fn class_weights(&self, i: usize) -> &[f32] {
+        let sz = self.dim * self.dim;
+        &self.weights[i * sz..(i + 1) * sz]
+    }
+
+    /// Score one query against every class (reference scalar path;
+    /// the optimized batched path lives in [`crate::memory::score`]).
+    pub fn score_query(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.dim, "query dim mismatch");
+        (0..self.n_classes)
+            .map(|i| {
+                let w = self.class_weights(i);
+                let mut total = 0f32;
+                for (l, &xl) in x.iter().enumerate() {
+                    if xl == 0.0 {
+                        continue;
+                    }
+                    let row = &w[l * self.dim..(l + 1) * self.dim];
+                    let mut acc = 0f32;
+                    for (wm, &xm) in row.iter().zip(x) {
+                        acc += wm * xm;
+                    }
+                    total += xl * acc;
+                }
+                total
+            })
+            .collect()
+    }
+
+    /// Support-only scores for a binary sparse query (c²·q cost path).
+    pub fn score_query_support(&self, support: &[u32]) -> Vec<f32> {
+        (0..self.n_classes)
+            .map(|i| {
+                let w = self.class_weights(i);
+                let mut total = 0f32;
+                for &l in support {
+                    let row = &w[l as usize * self.dim..(l as usize + 1) * self.dim];
+                    for &m in support {
+                        total += row[m as usize];
+                    }
+                }
+                total
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn members(rng: &mut Rng, k: usize, d: usize) -> Vec<f32> {
+        (0..k * d)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    #[test]
+    fn build_and_shapes() {
+        let mut rng = Rng::new(1);
+        let d = 8;
+        let c0 = members(&mut rng, 3, d);
+        let c1 = members(&mut rng, 5, d);
+        let bank =
+            MemoryBank::build(d, &[&c0, &c1], StorageRule::Sum).unwrap();
+        assert_eq!(bank.n_classes(), 2);
+        assert_eq!(bank.stacked().len(), 2 * d * d);
+        assert_eq!(bank.count(0), 3);
+        assert_eq!(bank.count(1), 5);
+    }
+
+    #[test]
+    fn score_query_matches_naive() {
+        let mut rng = Rng::new(2);
+        let d = 16;
+        let c0 = members(&mut rng, 4, d);
+        let c1 = members(&mut rng, 4, d);
+        let bank = MemoryBank::build(d, &[&c0, &c1], StorageRule::Sum).unwrap();
+        let x: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let scores = bank.score_query(&x);
+        for (ci, class) in [&c0, &c1].iter().enumerate() {
+            let want: f32 = class
+                .chunks_exact(d)
+                .map(|p| {
+                    let dot: f32 = p.iter().zip(&x).map(|(a, b)| a * b).sum();
+                    dot * dot
+                })
+                .sum();
+            assert!((scores[ci] - want).abs() < 1e-2, "class {ci}");
+        }
+    }
+
+    #[test]
+    fn own_class_wins_for_stored_query() {
+        let mut rng = Rng::new(3);
+        let d = 64;
+        let cls: Vec<Vec<f32>> = (0..6).map(|_| members(&mut rng, 4, d)).collect();
+        let refs: Vec<&[f32]> = cls.iter().map(|c| c.as_slice()).collect();
+        let bank = MemoryBank::build(d, &refs, StorageRule::Sum).unwrap();
+        let x = &cls[4][0..d]; // first member of class 4
+        let scores = bank.score_query(x);
+        let argmax = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 4);
+    }
+
+    #[test]
+    fn max_rule_bank_builds() {
+        let mut rng = Rng::new(4);
+        let d = 8;
+        let c0: Vec<f32> =
+            (0..3 * d).map(|_| if rng.bernoulli(0.2) { 1.0 } else { 0.0 }).collect();
+        let bank = MemoryBank::build(d, &[&c0], StorageRule::Max).unwrap();
+        assert_eq!(bank.rule(), StorageRule::Max);
+        // all weights finite (sentinel mapped to 0)
+        assert!(bank.stacked().iter().all(|w| w.is_finite()));
+    }
+
+    #[test]
+    fn support_scores_match_dense_binary() {
+        let mut rng = Rng::new(5);
+        let d = 32;
+        let c0: Vec<f32> =
+            (0..6 * d).map(|_| if rng.bernoulli(0.15) { 1.0 } else { 0.0 }).collect();
+        let c1: Vec<f32> =
+            (0..6 * d).map(|_| if rng.bernoulli(0.15) { 1.0 } else { 0.0 }).collect();
+        let bank = MemoryBank::build(d, &[&c0, &c1], StorageRule::Sum).unwrap();
+        let x: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.15) { 1.0 } else { 0.0 }).collect();
+        let support: Vec<u32> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == 1.0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let dense = bank.score_query(&x);
+        let sparse = bank.score_query_support(&support);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn empty_bank_rejected() {
+        assert!(MemoryBank::build(4, &[], StorageRule::Sum).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Cooccurrence (max-rule) associative memory — the variant of [19]
+//! (Yu, Gripon, Jiang, Jégou 2015) evaluated in the paper's §5.1.1
+//! ablation: instead of *adding* contributions from distinct messages,
+//! take the *maximum*:
+//!
+//! `W[l,m] = max_μ x^μ_l x^μ_m`
+//!
+//! For binary 0/1 patterns this is the OR of the outer products (the
+//! classic Willshaw/Gripon-Berrou storage rule).  The paper reports
+//! "small improvements in every case, even though they are not
+//! significant"; our ablation bench reproduces that comparison.
+
+/// Dense d×d max-rule memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooccurrenceMemory {
+    dim: usize,
+    w: Vec<f32>,
+    count: usize,
+}
+
+impl CooccurrenceMemory {
+    /// Empty memory of dimension `d`.
+    pub fn new(dim: usize) -> Self {
+        CooccurrenceMemory { dim, w: vec![f32::NEG_INFINITY; dim * dim], count: 0 }
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of stored patterns.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Raw weights; entries never touched by a pattern are 0 after
+    /// the first `add` normalization (see `weights`).
+    pub fn weights(&self) -> Vec<f32> {
+        self.w
+            .iter()
+            .map(|&v| if v == f32::NEG_INFINITY { 0.0 } else { v })
+            .collect()
+    }
+
+    /// Store a pattern: `W[l,m] = max(W[l,m], x_l x_m)`.
+    pub fn add(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim, "pattern dim mismatch");
+        for (l, &xl) in x.iter().enumerate() {
+            let row = &mut self.w[l * self.dim..(l + 1) * self.dim];
+            for (wm, &xm) in row.iter_mut().zip(x) {
+                let v = xl * xm;
+                if v > *wm {
+                    *wm = v;
+                }
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Bilinear score against the max-rule weights (entries never written
+    /// count as 0).
+    pub fn score(&self, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut total = 0f32;
+        for (l, &xl) in x.iter().enumerate() {
+            if xl == 0.0 {
+                continue;
+            }
+            let row = &self.w[l * self.dim..(l + 1) * self.dim];
+            let mut acc = 0f32;
+            for (wm, &xm) in row.iter().zip(x) {
+                if xm != 0.0 && *wm != f32::NEG_INFINITY {
+                    acc += *wm * xm;
+                }
+            }
+            total += xl * acc;
+        }
+        total
+    }
+
+    /// Support-only score for binary sparse queries (c² cost).
+    pub fn score_support(&self, support: &[u32]) -> f32 {
+        let mut total = 0f32;
+        for &l in support {
+            let row = &self.w[l as usize * self.dim..(l as usize + 1) * self.dim];
+            for &m in support {
+                let v = row[m as usize];
+                if v != f32::NEG_INFINITY {
+                    total += v;
+                }
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn binary_max_rule_is_or() {
+        let mut mem = CooccurrenceMemory::new(3);
+        mem.add(&[1.0, 1.0, 0.0]);
+        mem.add(&[0.0, 1.0, 1.0]);
+        let w = mem.weights();
+        // union of the two outer products, entries in {0,1}
+        let want = [
+            1.0, 1.0, 0.0, //
+            1.0, 1.0, 1.0, //
+            0.0, 1.0, 1.0,
+        ];
+        assert_eq!(w, want);
+    }
+
+    #[test]
+    fn stored_sparse_pattern_scores_c_squared() {
+        // for binary OR weights, a stored pattern with c ones scores c²
+        let mut mem = CooccurrenceMemory::new(8);
+        let x = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        mem.add(&x);
+        assert_eq!(mem.score(&x), 9.0); // c=3 -> 9
+    }
+
+    #[test]
+    fn max_rule_bounded_by_sum_rule_for_binary() {
+        use crate::memory::outer::OuterProductMemory;
+        let mut rng = Rng::new(5);
+        let d = 32;
+        let mut max_mem = CooccurrenceMemory::new(d);
+        let mut sum_mem = OuterProductMemory::new(d);
+        for _ in 0..15 {
+            let p: Vec<f32> =
+                (0..d).map(|_| if rng.bernoulli(0.15) { 1.0 } else { 0.0 }).collect();
+            max_mem.add(&p);
+            sum_mem.add(&p);
+        }
+        let x: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.15) { 1.0 } else { 0.0 }).collect();
+        assert!(max_mem.score(&x) <= sum_mem.score(&x) + 1e-4);
+    }
+
+    #[test]
+    fn score_support_matches_dense_binary() {
+        let mut rng = Rng::new(6);
+        let d = 40;
+        let mut mem = CooccurrenceMemory::new(d);
+        for _ in 0..10 {
+            let p: Vec<f32> =
+                (0..d).map(|_| if rng.bernoulli(0.2) { 1.0 } else { 0.0 }).collect();
+            mem.add(&p);
+        }
+        let x: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.2) { 1.0 } else { 0.0 }).collect();
+        let support: Vec<u32> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == 1.0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        assert!((mem.score(&x) - mem.score_support(&support)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn idempotent_storage() {
+        let mut a = CooccurrenceMemory::new(4);
+        let mut b = CooccurrenceMemory::new(4);
+        let p = [1.0f32, 0.0, 1.0, 0.0];
+        a.add(&p);
+        b.add(&p);
+        b.add(&p);
+        b.add(&p);
+        assert_eq!(a.weights(), b.weights()); // max rule saturates
+        assert_eq!(b.count(), 3);
+    }
+}

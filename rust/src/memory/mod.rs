@@ -1,0 +1,52 @@
+//! Associative memories: the paper's class summaries.
+//!
+//! * [`outer::OuterProductMemory`] — the sum rule `W = Σ x xᵀ` analyzed in
+//!   §3/§4.
+//! * [`cooccurrence::CooccurrenceMemory`] — the max rule of [19],
+//!   the §5.1.1 ablation.
+//! * [`bank::MemoryBank`] — `q` memories stacked `[q, d, d]`, the operand
+//!   of both the native and the PJRT scorer.
+//! * [`score`] — the optimized batched native scorer.
+
+pub mod bank;
+pub mod cooccurrence;
+pub mod higher_order;
+pub mod outer;
+pub mod retrieval;
+pub mod score;
+
+pub use bank::MemoryBank;
+pub use cooccurrence::CooccurrenceMemory;
+pub use higher_order::HigherOrderScorer;
+pub use outer::OuterProductMemory;
+
+/// Which storage rule a memory bank uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageRule {
+    /// Sum of outer products (the paper's analyzed rule).
+    Sum,
+    /// Cooccurrence / max rule ([19], §5.1.1 ablation).
+    Max,
+}
+
+impl std::str::FromStr for StorageRule {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sum" => Ok(StorageRule::Sum),
+            "max" => Ok(StorageRule::Max),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown storage rule '{other}' (sum|max)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for StorageRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StorageRule::Sum => write!(f, "sum"),
+            StorageRule::Max => write!(f, "max"),
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Sum-of-outer-products associative memory — the paper's core object.
+//!
+//! `W = Σ_μ x^μ (x^μ)ᵀ` stored dense row-major; the class score for a
+//! query is the bilinear form `s = xᵀ W x = Σ_μ ⟨x, x^μ⟩²`.
+
+/// Dense d×d sum-of-outer-products memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OuterProductMemory {
+    dim: usize,
+    w: Vec<f32>,
+    count: usize,
+}
+
+impl OuterProductMemory {
+    /// Empty memory of dimension `d`.
+    pub fn new(dim: usize) -> Self {
+        OuterProductMemory { dim, w: vec![0.0; dim * dim], count: 0 }
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of stored patterns.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Row-major `d*d` weight buffer (the layout the PJRT scorer stacks).
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Store a pattern: `W += x xᵀ`.
+    pub fn add(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim, "pattern dim mismatch");
+        for (l, &xl) in x.iter().enumerate() {
+            if xl == 0.0 {
+                continue; // sparse patterns touch only c rows
+            }
+            let row = &mut self.w[l * self.dim..(l + 1) * self.dim];
+            for (wm, &xm) in row.iter_mut().zip(x) {
+                *wm += xl * xm;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Remove a previously stored pattern: `W -= x xᵀ` (supports online
+    /// re-allocation; caller must guarantee the pattern was stored).
+    pub fn remove(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim, "pattern dim mismatch");
+        assert!(self.count > 0, "remove from empty memory");
+        for (l, &xl) in x.iter().enumerate() {
+            if xl == 0.0 {
+                continue;
+            }
+            let row = &mut self.w[l * self.dim..(l + 1) * self.dim];
+            for (wm, &xm) in row.iter_mut().zip(x) {
+                *wm -= xl * xm;
+            }
+        }
+        self.count -= 1;
+    }
+
+    /// Bilinear score `xᵀ W x`, the paper's s(X^i, x⁰).
+    /// Cost: d² multiply-adds (dense query).
+    pub fn score(&self, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut total = 0f32;
+        for (l, &xl) in x.iter().enumerate() {
+            if xl == 0.0 {
+                continue;
+            }
+            let row = &self.w[l * self.dim..(l + 1) * self.dim];
+            let mut acc = 0f32;
+            for (wm, &xm) in row.iter().zip(x) {
+                acc += wm * xm;
+            }
+            total += xl * acc;
+        }
+        total
+    }
+
+    /// Score from the query's support only (binary sparse queries):
+    /// `s = Σ_{l,m ∈ supp(x)} W[l,m]` — the paper's c² cost path.
+    pub fn score_support(&self, support: &[u32]) -> f32 {
+        let mut total = 0f32;
+        for &l in support {
+            let row = &self.w[l as usize * self.dim..(l as usize + 1) * self.dim];
+            for &m in support {
+                total += row[m as usize];
+            }
+        }
+        total
+    }
+
+    /// Merge another memory into this one (class union).
+    pub fn merge(&mut self, other: &OuterProductMemory) {
+        assert_eq!(self.dim, other.dim, "dim mismatch");
+        for (a, b) in self.w.iter_mut().zip(&other.w) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn naive_score(patterns: &[Vec<f32>], x: &[f32]) -> f32 {
+        patterns
+            .iter()
+            .map(|p| {
+                let d: f32 = p.iter().zip(x).map(|(a, b)| a * b).sum();
+                d * d
+            })
+            .sum()
+    }
+
+    #[test]
+    fn score_equals_sum_of_squared_dots() {
+        let mut rng = Rng::new(1);
+        let d = 24;
+        let mut mem = OuterProductMemory::new(d);
+        let patterns: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect())
+            .collect();
+        for p in &patterns {
+            mem.add(p);
+        }
+        let x: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let got = mem.score(&x);
+        let want = naive_score(&patterns, &x);
+        assert!((got - want).abs() < 1e-3, "got={got} want={want}");
+    }
+
+    #[test]
+    fn add_then_remove_is_identity() {
+        let mut rng = Rng::new(2);
+        let d = 16;
+        let mut mem = OuterProductMemory::new(d);
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        mem.add(&a);
+        let snapshot = mem.clone();
+        mem.add(&b);
+        mem.remove(&b);
+        assert_eq!(mem.count(), 1);
+        for (x, y) in mem.weights().iter().zip(snapshot.weights()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn score_support_matches_dense_for_binary() {
+        let mut rng = Rng::new(3);
+        let d = 64;
+        let mut mem = OuterProductMemory::new(d);
+        for _ in 0..20 {
+            let p: Vec<f32> =
+                (0..d).map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 }).collect();
+            mem.add(&p);
+        }
+        let x: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 }).collect();
+        let support: Vec<u32> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == 1.0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let dense = mem.score(&x);
+        let sparse = mem.score_support(&support);
+        assert!((dense - sparse).abs() < 1e-3, "dense={dense} sparse={sparse}");
+    }
+
+    #[test]
+    fn stored_pattern_scores_at_least_norm4() {
+        // s(X, x) >= <x,x>^2 when x is stored (crosstalk is nonnegative
+        // only in expectation, so check against the dominant term for a
+        // singleton class).
+        let mut mem = OuterProductMemory::new(4);
+        let x = [1.0f32, -1.0, 1.0, 1.0];
+        mem.add(&x);
+        let s = mem.score(&x);
+        assert!((s - 16.0).abs() < 1e-5); // (||x||^2)^2 = 4^2
+    }
+
+    #[test]
+    fn merge_equals_joint_build() {
+        let mut rng = Rng::new(4);
+        let d = 8;
+        let ps: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut a = OuterProductMemory::new(d);
+        let mut b = OuterProductMemory::new(d);
+        let mut joint = OuterProductMemory::new(d);
+        for (i, p) in ps.iter().enumerate() {
+            if i < 3 {
+                a.add(p);
+            } else {
+                b.add(p);
+            }
+            joint.add(p);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 6);
+        for (x, y) in a.weights().iter().zip(joint.weights()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn zero_query_scores_zero() {
+        let mut mem = OuterProductMemory::new(4);
+        mem.add(&[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(mem.score(&[0.0; 4]), 0.0);
+        assert_eq!(mem.score_support(&[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let mut mem = OuterProductMemory::new(4);
+        mem.add(&[1.0; 5]);
+    }
+}

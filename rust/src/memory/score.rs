@@ -1,0 +1,267 @@
+//! Optimized native batched scorer — the CPU mirror of the Pallas kernel.
+//!
+//! Computes `S[b, i] = x_bᵀ W_i x_b` for a `[q, d, d]` stacked bank and a
+//! `[B, d]` query batch.  The kernel is restructured the same way as the
+//! L1 pallas kernel: per class, one `W_i · x_b` mat-vec fused over the
+//! query batch (so each cache line of `W_i` is read once per batch, not
+//! once per query), then a dot against the query.  Classes are
+//! rayon-parallel: each class's `d²` weight slab is touched by exactly
+//! one thread (no false sharing).
+
+use crate::util::par::parallel_map;
+
+/// Batched bilinear scores: `S[b, i] = x_bᵀ W_i x_b`.
+///
+/// * `stacked`: `[q * d * d]` row-major class memories
+/// * `queries`: `[batch * d]` row-major query block
+///
+/// Returns `[batch * q]` row-major scores.
+pub fn score_batch(stacked: &[f32], queries: &[f32], dim: usize, q: usize) -> Vec<f32> {
+    assert_eq!(stacked.len(), q * dim * dim, "stacked bank shape");
+    assert_eq!(queries.len() % dim, 0, "query buffer shape");
+    let batch = queries.len() / dim;
+    let mut out = vec![0f32; batch * q];
+    // parallel over classes; each worker fills column i of the output
+    let cols: Vec<Vec<f32>> = parallel_map(q, |i| {
+        let w = &stacked[i * dim * dim..(i + 1) * dim * dim];
+        let mut col = vec![0f32; batch];
+        score_one_class(w, queries, dim, &mut col);
+        col
+    });
+    for (i, col) in cols.iter().enumerate() {
+        for b in 0..batch {
+            out[b * q + i] = col[b];
+        }
+    }
+    out
+}
+
+/// Dot product structured for reliable auto-vectorization: eight
+/// independent accumulator lanes over `chunks_exact(8)` (no bounds
+/// checks in the hot loop), scalar tail.
+#[inline(always)]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    // 32 scalar lanes = 4 independent 8-wide vector accumulators: enough
+    // ILP to hide FMA latency (a single accumulator chain runs at ~1/4
+    // of FMA throughput).
+    let mut lanes = [0f32; 32];
+    let ac = a.chunks_exact(32);
+    let bc = b.chunks_exact(32);
+    let (atail, btail) = (ac.remainder(), bc.remainder());
+    for (ra, rb) in ac.zip(bc) {
+        for i in 0..32 {
+            lanes[i] += ra[i] * rb[i];
+        }
+    }
+    let mut acc = 0f32;
+    for i in 0..32 {
+        acc += lanes[i];
+    }
+    // tail: 8-wide then scalar
+    let atc = atail.chunks_exact(8);
+    let btc = btail.chunks_exact(8);
+    let (at2, bt2) = (atc.remainder(), btc.remainder());
+    let mut tail_lanes = [0f32; 8];
+    for (ra, rb) in atc.zip(btc) {
+        for i in 0..8 {
+            tail_lanes[i] += ra[i] * rb[i];
+        }
+    }
+    for l in tail_lanes {
+        acc += l;
+    }
+    for (x, y) in at2.iter().zip(bt2) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Scores of every query against a single class memory.
+/// `col[b] = x_bᵀ W x_b`; one pass over `W` rows, all queries updated per
+/// row (the batch-fusion that makes this bandwidth-optimal: each cache
+/// line of `W` is touched once per batch, not once per query).
+#[inline]
+fn score_one_class(w: &[f32], queries: &[f32], dim: usize, col: &mut [f32]) {
+    let batch = col.len();
+    for (l, row) in w.chunks_exact(dim).enumerate() {
+        for b in 0..batch {
+            let x = &queries[b * dim..(b + 1) * dim];
+            let xl = x[l];
+            if xl == 0.0 {
+                continue;
+            }
+            col[b] += xl * dot8(row, x);
+        }
+    }
+}
+
+/// Support-only batched scoring for binary sparse queries: cost `c²` per
+/// (query, class), the paper's sparse fast path.
+pub fn score_batch_support(
+    stacked: &[f32],
+    supports: &[Vec<u32>],
+    dim: usize,
+    q: usize,
+) -> Vec<f32> {
+    assert_eq!(stacked.len(), q * dim * dim, "stacked bank shape");
+    let batch = supports.len();
+    let avg_c = supports.iter().map(|s| s.len()).sum::<usize>() / batch.max(1);
+    if avg_c >= 16 {
+        // large supports: class-outer, so each class's d² slab is brought
+        // into cache once and scored against the whole batch (measured
+        // ~1.4x on the Santander shape c=33, d=369)
+        let cols: Vec<Vec<f32>> = parallel_map(q, |i| {
+            let w = &stacked[i * dim * dim..(i + 1) * dim * dim];
+            let mut col = vec![0f32; batch];
+            for (b, support) in supports.iter().enumerate() {
+                let mut total = 0f32;
+                for &l in support {
+                    let row = &w[l as usize * dim..(l as usize + 1) * dim];
+                    for &m in support {
+                        total += row[m as usize];
+                    }
+                }
+                col[b] = total;
+            }
+            col
+        });
+        let mut out = vec![0f32; batch * q];
+        for (i, col) in cols.iter().enumerate() {
+            for b in 0..batch {
+                out[b * q + i] = col[b];
+            }
+        }
+        out
+    } else {
+        // tiny supports (e.g. the paper's c=8): per-query iteration wins
+        // (the touched lines fit cache either way; fewer loop-nest
+        // overheads per score)
+        let rows: Vec<Vec<f32>> = parallel_map(batch, |b| {
+            let support = &supports[b];
+            let mut row_out = vec![0f32; q];
+            for (i, slot) in row_out.iter_mut().enumerate() {
+                let w = &stacked[i * dim * dim..(i + 1) * dim * dim];
+                let mut total = 0f32;
+                for &l in support {
+                    let row = &w[l as usize * dim..(l as usize + 1) * dim];
+                    for &m in support {
+                        total += row[m as usize];
+                    }
+                }
+                *slot = total;
+            }
+            row_out
+        });
+        rows.concat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::memory::bank::MemoryBank;
+    use crate::memory::StorageRule;
+
+    fn random_bank(rng: &mut Rng, q: usize, k: usize, d: usize) -> MemoryBank {
+        let classes: Vec<Vec<f32>> = (0..q)
+            .map(|_| {
+                (0..k * d)
+                    .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = classes.iter().map(|c| c.as_slice()).collect();
+        MemoryBank::build(d, &refs, StorageRule::Sum).unwrap()
+    }
+
+    #[test]
+    fn batch_matches_scalar_path() {
+        let mut rng = Rng::new(1);
+        let (q, k, d, b) = (6, 4, 32, 5);
+        let bank = random_bank(&mut rng, q, k, d);
+        let queries: Vec<f32> = (0..b * d)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let got = score_batch(bank.stacked(), &queries, d, q);
+        for bi in 0..b {
+            let want = bank.score_query(&queries[bi * d..(bi + 1) * d]);
+            for i in 0..q {
+                assert!(
+                    (got[bi * q + i] - want[i]).abs() < 1e-2,
+                    "b={bi} i={i} got={} want={}",
+                    got[bi * q + i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_handles_odd_dims() {
+        let mut rng = Rng::new(2);
+        for d in [3, 7, 17, 33] {
+            let bank = random_bank(&mut rng, 3, 2, d);
+            let queries: Vec<f32> = (0..2 * d).map(|_| rng.normal() as f32).collect();
+            let got = score_batch(bank.stacked(), &queries, d, 3);
+            for bi in 0..2 {
+                let want = bank.score_query(&queries[bi * d..(bi + 1) * d]);
+                for i in 0..3 {
+                    assert!((got[bi * 3 + i] - want[i]).abs() < 1e-2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn support_batch_matches_dense() {
+        let mut rng = Rng::new(3);
+        let (q, d) = (4, 48);
+        let classes: Vec<Vec<f32>> = (0..q)
+            .map(|_| {
+                (0..5 * d)
+                    .map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = classes.iter().map(|c| c.as_slice()).collect();
+        let bank = MemoryBank::build(d, &refs, StorageRule::Sum).unwrap();
+        let queries: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                (0..d)
+                    .map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let supports: Vec<Vec<u32>> = queries
+            .iter()
+            .map(|x| {
+                x.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v == 1.0)
+                    .map(|(i, _)| i as u32)
+                    .collect()
+            })
+            .collect();
+        let flat: Vec<f32> = queries.concat();
+        let dense = score_batch(bank.stacked(), &flat, d, q);
+        let sparse = score_batch_support(bank.stacked(), &supports, d, q);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn single_query_single_class() {
+        let bank_w = vec![1.0f32, 0.0, 0.0, 2.0]; // W = diag(1,2), d=2
+        let queries = vec![3.0f32, 4.0];
+        let s = score_batch(&bank_w, &queries, 2, 1);
+        assert_eq!(s, vec![9.0 + 32.0]); // 1*9 + 2*16
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_stack_size_panics() {
+        score_batch(&[0.0; 10], &[0.0; 4], 2, 2);
+    }
+}

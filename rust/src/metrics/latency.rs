@@ -1,0 +1,191 @@
+//! Latency histogram with quantile estimation — the serving-side metric
+//! the coordinator reports per request class.
+//!
+//! Log-scaled fixed buckets from 100ns to ~100s: constant-time record,
+//! bounded memory, ~4% quantile resolution (plenty for p50/p95/p99
+//! dashboards).
+
+/// Number of histogram buckets.
+const BUCKETS: usize = 512;
+/// Lower edge of the first bucket (ns).
+const MIN_NS: f64 = 100.0;
+/// Upper edge of the last bucket (ns) ≈ 115 s.
+const MAX_NS: f64 = 1.15e11;
+
+/// Log-bucketed latency histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: f64,
+    max_ns: u64,
+    min_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum_ns: 0.0,
+            max_ns: 0,
+            min_ns: u64::MAX,
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        let x = (ns as f64).max(MIN_NS).min(MAX_NS);
+        let frac = (x / MIN_NS).ln() / (MAX_NS / MIN_NS).ln();
+        ((frac * (BUCKETS - 1) as f64).round() as usize).min(BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> u64 {
+        let frac = i as f64 / (BUCKETS - 1) as f64;
+        (MIN_NS * (MAX_NS / MIN_NS).powf(frac)) as u64
+    }
+
+    /// Record one duration.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64)
+    }
+
+    /// Record one duration in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket_of(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns as f64;
+        self.max_ns = self.max_ns.max(ns);
+        self.min_ns = self.min_ns.min(ns);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean latency in ns.
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.total as f64
+        }
+    }
+
+    /// Exact observed maximum (ns).
+    pub fn max_ns(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.max_ns
+        }
+    }
+
+    /// Quantile estimate (e.g. 0.5, 0.95, 0.99) in ns.
+    pub fn quantile_ns(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Merge another histogram.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.total,
+            self.mean_ns() / 1e3,
+            self.quantile_ns(0.5) as f64 / 1e3,
+            self.quantile_ns(0.95) as f64 / 1e3,
+            self.quantile_ns(0.99) as f64 / 1e3,
+            self.max_ns() as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_ordered_and_close() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000); // 1us .. 1ms uniform
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p95 = h.quantile_ns(0.95);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log-bucket resolution is ~4%; allow 10%
+        assert!((p50 as f64 - 500_000.0).abs() / 500_000.0 < 0.1, "p50={p50}");
+        assert!((p95 as f64 - 950_000.0).abs() / 950_000.0 < 0.1, "p95={p95}");
+    }
+
+    #[test]
+    fn mean_and_max_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(100);
+        h.record_ns(300);
+        assert_eq!(h.mean_ns(), 200.0);
+        assert_eq!(h.max_ns(), 300);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..10 {
+            a.record_ns(1_000);
+            b.record_ns(1_000_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert!(a.quantile_ns(0.25) < 10_000);
+        assert!(a.quantile_ns(0.75) > 100_000);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn extreme_values_clamp() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(1); // below MIN
+        h.record_ns(u64::MAX / 2); // above MAX
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_ns(0.0) >= 100);
+    }
+}

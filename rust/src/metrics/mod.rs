@@ -1,0 +1,10 @@
+//! Measurement: the paper's complexity accounting, recall/error-rate
+//! estimation, and serving latency histograms.
+
+pub mod latency;
+pub mod ops;
+pub mod recall;
+
+pub use latency::LatencyHistogram;
+pub use ops::{CostModel, OpsCounter};
+pub use recall::Recall;

@@ -1,0 +1,152 @@
+//! The paper's complexity accounting (§5.2).
+//!
+//! "the computational complexity of an exhaustive search is dn (or cn for
+//! sparse vectors).  On the other hand, the proposed method has a twofold
+//! computational cost: first the cost of computing each score, which is
+//! d²q (or c²q for sparse vectors), then the cost of exhaustively looking
+//! for the nearest neighbor in the selected p classes, which is pkd (or
+//! pkc for sparse vectors)."
+//!
+//! Counters are incremented by the index/baselines with *actual* work
+//! done (classes may have unequal sizes under greedy allocation, sparse
+//! queries have varying support), and relative complexity is reported
+//! against the exhaustive reference.
+
+/// Elementary-operation counter for one or more searches.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpsCounter {
+    /// Operations spent scoring class memories (d²q / c²q term).
+    pub score_ops: u64,
+    /// Operations spent scanning candidates (pkd / pkc term).
+    pub scan_ops: u64,
+    /// Operations spent on auxiliary structures (e.g. RS anchor search).
+    pub aux_ops: u64,
+    /// Number of searches accumulated.
+    pub searches: u64,
+}
+
+impl OpsCounter {
+    /// Fresh counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total elementary operations.
+    pub fn total(&self) -> u64 {
+        self.score_ops + self.scan_ops + self.aux_ops
+    }
+
+    /// Mean operations per search.
+    pub fn per_search(&self) -> f64 {
+        if self.searches == 0 {
+            0.0
+        } else {
+            self.total() as f64 / self.searches as f64
+        }
+    }
+
+    /// Relative complexity versus exhaustive search costing
+    /// `reference_ops` per search (dn dense / cn sparse).
+    pub fn relative_to(&self, reference_ops: u64) -> f64 {
+        if reference_ops == 0 || self.searches == 0 {
+            return 0.0;
+        }
+        self.per_search() / reference_ops as f64
+    }
+
+    /// Merge another counter (e.g. from a worker thread).
+    pub fn merge(&mut self, other: &OpsCounter) {
+        self.score_ops += other.score_ops;
+        self.scan_ops += other.scan_ops;
+        self.aux_ops += other.aux_ops;
+        self.searches += other.searches;
+    }
+}
+
+/// Closed-form cost model of the paper, used to cross-check the counters
+/// and to plot the analytic trade-off curves.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Vector dimension `d` (use `c` for sparse data).
+    pub effective_dim: u64,
+    /// Number of classes `q`.
+    pub q: u64,
+    /// Class size `k`.
+    pub k: u64,
+    /// Database size `n`.
+    pub n: u64,
+}
+
+impl CostModel {
+    /// Scoring cost: `d²·q` (or `c²·q` sparse).
+    pub fn score_cost(&self) -> u64 {
+        self.effective_dim * self.effective_dim * self.q
+    }
+
+    /// Candidate-scan cost with `p` polled classes: `p·k·d` (`p·k·c`).
+    pub fn scan_cost(&self, p: u64) -> u64 {
+        p * self.k * self.effective_dim
+    }
+
+    /// Exhaustive reference: `n·d` (`n·c`).
+    pub fn exhaustive_cost(&self) -> u64 {
+        self.n * self.effective_dim
+    }
+
+    /// Relative complexity of the method at poll depth `p`.
+    pub fn relative(&self, p: u64) -> f64 {
+        (self.score_cost() + self.scan_cost(p)) as f64 / self.exhaustive_cost() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_means() {
+        let mut c = OpsCounter::new();
+        c.score_ops = 100;
+        c.scan_ops = 50;
+        c.searches = 2;
+        assert_eq!(c.total(), 150);
+        assert_eq!(c.per_search(), 75.0);
+        assert_eq!(c.relative_to(150), 0.5);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = OpsCounter { score_ops: 1, scan_ops: 2, aux_ops: 3, searches: 1 };
+        let b = OpsCounter { score_ops: 10, scan_ops: 20, aux_ops: 30, searches: 2 };
+        a.merge(&b);
+        assert_eq!(a, OpsCounter { score_ops: 11, scan_ops: 22, aux_ops: 33, searches: 3 });
+    }
+
+    #[test]
+    fn cost_model_matches_paper_formulas() {
+        // d=128, q=64, k=256, n=16384: score = d² q, scan = p k d, ref = n d
+        let m = CostModel { effective_dim: 128, q: 64, k: 256, n: 16384 };
+        assert_eq!(m.score_cost(), 128 * 128 * 64);
+        assert_eq!(m.scan_cost(2), 2 * 256 * 128);
+        assert_eq!(m.exhaustive_cost(), 16384 * 128);
+        let rel = m.relative(1);
+        let want = (128.0 * 128.0 * 64.0 + 256.0 * 128.0) / (16384.0 * 128.0);
+        assert!((rel - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_model_uses_c() {
+        // c=8, q=10, k=512, n=5120: the sparse costs from §5.2
+        let m = CostModel { effective_dim: 8, q: 10, k: 512, n: 5120 };
+        assert_eq!(m.score_cost(), 8 * 8 * 10);
+        assert_eq!(m.scan_cost(3), 3 * 512 * 8);
+        assert_eq!(m.exhaustive_cost(), 5120 * 8);
+    }
+
+    #[test]
+    fn zero_searches_safe() {
+        let c = OpsCounter::new();
+        assert_eq!(c.per_search(), 0.0);
+        assert_eq!(c.relative_to(100), 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Recall and error-rate metrics.
+//!
+//! * Figures 1–8 plot the **error rate**: the probability that the class
+//!   containing the query's true match does *not* achieve the highest
+//!   score.
+//! * Figures 9–12 plot **recall@1**: the rate at which the true nearest
+//!   neighbor is found within the candidates of the first `p` classes.
+
+/// Streaming recall@1 accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Recall {
+    hits: u64,
+    total: u64,
+}
+
+impl Recall {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one query outcome.
+    pub fn record(&mut self, hit: bool) {
+        if hit {
+            self.hits += 1;
+        }
+        self.total += 1;
+    }
+
+    /// Number of recorded queries.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// recall@1 in [0, 1].
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total as f64
+        }
+    }
+
+    /// Error rate = 1 − recall.
+    pub fn error_rate(&self) -> f64 {
+        1.0 - self.value()
+    }
+
+    /// Standard error of the estimate (binomial).
+    pub fn std_error(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let p = self.value();
+        (p * (1.0 - p) / self.total as f64).sqrt()
+    }
+
+    /// Merge another accumulator.
+    pub fn merge(&mut self, other: &Recall) {
+        self.hits += other.hits;
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rates() {
+        let mut r = Recall::new();
+        for i in 0..10 {
+            r.record(i < 7);
+        }
+        assert_eq!(r.value(), 0.7);
+        assert!((r.error_rate() - 0.3).abs() < 1e-12);
+        assert_eq!(r.total(), 10);
+    }
+
+    #[test]
+    fn std_error_shrinks_with_n() {
+        let mut small = Recall::new();
+        let mut large = Recall::new();
+        for i in 0..10 {
+            small.record(i % 2 == 0);
+        }
+        for i in 0..1000 {
+            large.record(i % 2 == 0);
+        }
+        assert!(large.std_error() < small.std_error());
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Recall::new();
+        a.record(true);
+        let mut b = Recall::new();
+        b.record(false);
+        b.record(false);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert!((a.value() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let r = Recall::new();
+        assert_eq!(r.value(), 0.0);
+        assert_eq!(r.std_error(), 0.0);
+    }
+}

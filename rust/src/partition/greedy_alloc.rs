@@ -1,0 +1,164 @@
+//! Greedy normalized-score allocation — the paper's §5.2 strategy for
+//! real (non-i.i.d.) data.
+//!
+//! "Each class is initialized with a random vector drawn without
+//! replacement.  Then each remaining vector is assigned to the class that
+//! achieves the maximum normalized score.  Scores are divided by the
+//! number of items k currently contained in the class, as a normalization
+//! criterion."
+//!
+//! Classes end up with *different* sizes (the paper notes complexity is
+//! then estimated as an average); an optional `max_size` cap bounds the
+//! skew, which also bounds worst-case candidate-scan cost.
+
+use super::Partition;
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+use crate::memory::OuterProductMemory;
+use crate::util::par::parallel_map;
+
+/// Options for greedy allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct GreedyOptions {
+    /// Hard cap on class size (`None` = unbounded, the paper's variant).
+    pub max_size: Option<usize>,
+}
+
+impl Default for GreedyOptions {
+    fn default() -> Self {
+        GreedyOptions { max_size: None }
+    }
+}
+
+/// Greedily allocate every vector of `data` into `q` classes.
+pub fn allocate(
+    data: &Dataset,
+    q: usize,
+    opts: GreedyOptions,
+    rng: &mut Rng,
+) -> Result<Partition> {
+    let n = data.len();
+    if q == 0 || q > n {
+        return Err(Error::Config(format!("need 1 <= q={q} <= n={n}")));
+    }
+    if let Some(cap) = opts.max_size {
+        if cap * q < n {
+            return Err(Error::Config(format!(
+                "max_size {cap} * q {q} < n {n}: cannot place all vectors"
+            )));
+        }
+    }
+    let dim = data.dim();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut assignments = vec![u32::MAX; n];
+    let mut memories: Vec<OuterProductMemory> =
+        (0..q).map(|_| OuterProductMemory::new(dim)).collect();
+
+    // seed each class with one random vector (without replacement)
+    for (ci, &v) in order[..q].iter().enumerate() {
+        memories[ci].add(data.get(v as usize));
+        assignments[v as usize] = ci as u32;
+    }
+
+    // greedy pass over the remaining vectors
+    for &v in &order[q..] {
+        let x = data.get(v as usize);
+        // normalized scores, parallel over classes (each is d² work)
+        let scored: Vec<(usize, f64)> = parallel_map(memories.len(), |ci| {
+            let mem = &memories[ci];
+            if let Some(cap) = opts.max_size {
+                if mem.count() >= cap {
+                    return (ci, f64::NEG_INFINITY);
+                }
+            }
+            let s = mem.score(x) as f64 / mem.count().max(1) as f64;
+            (ci, s)
+        });
+        let (best, _) = scored
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+            .expect("q >= 1");
+        memories[best].add(x);
+        assignments[v as usize] = best as u32;
+    }
+
+    Partition::from_assignments(assignments, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::data::synthetic::SparseSpec;
+
+    #[test]
+    fn covers_all_vectors() {
+        let mut rng = Rng::new(1);
+        let ds = synthetic::dense_patterns(16, 60, &mut rng);
+        let p = allocate(&ds, 4, GreedyOptions::default(), &mut rng).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.n_vectors(), 60);
+        assert_eq!(p.n_classes(), 4);
+    }
+
+    #[test]
+    fn cap_is_respected() {
+        let mut rng = Rng::new(2);
+        let ds = synthetic::dense_patterns(8, 40, &mut rng);
+        let p = allocate(&ds, 4, GreedyOptions { max_size: Some(12) }, &mut rng)
+            .unwrap();
+        p.validate().unwrap();
+        assert!(p.sizes().iter().all(|&s| s <= 12), "sizes={:?}", p.sizes());
+    }
+
+    #[test]
+    fn infeasible_cap_rejected() {
+        let mut rng = Rng::new(3);
+        let ds = synthetic::dense_patterns(8, 40, &mut rng);
+        assert!(
+            allocate(&ds, 4, GreedyOptions { max_size: Some(5) }, &mut rng).is_err()
+        );
+    }
+
+    #[test]
+    fn groups_correlated_vectors() {
+        // two obvious clusters of sparse patterns with disjoint supports:
+        // greedy allocation with q=2 should separate them (mostly).
+        let mut rng = Rng::new(4);
+        let d = 64;
+        let mut ds = Dataset::empty(d);
+        let mut truth = Vec::new();
+        for i in 0..40 {
+            let mut v = vec![0f32; d];
+            let base = if i % 2 == 0 { 0 } else { 32 };
+            for _ in 0..6 {
+                v[base + rng.below(32) as usize] = 1.0;
+            }
+            ds.push(&v).unwrap();
+            truth.push((i % 2) as u32);
+        }
+        let p = allocate(&ds, 2, GreedyOptions::default(), &mut rng).unwrap();
+        p.validate().unwrap();
+        // count agreement up to label swap
+        let mut agree = 0;
+        for v in 0..40 {
+            if p.class_of(v) == truth[v] {
+                agree += 1;
+            }
+        }
+        let agree = agree.max(40 - agree);
+        assert!(agree >= 35, "agreement {agree}/40");
+    }
+
+    #[test]
+    fn sparse_patterns_allocate() {
+        let mut rng = Rng::new(5);
+        let ds = synthetic::sparse_patterns(SparseSpec { dim: 64, ones: 4.0 }, 30, &mut rng);
+        let p = allocate(&ds, 3, GreedyOptions::default(), &mut rng).unwrap();
+        p.validate().unwrap();
+    }
+}

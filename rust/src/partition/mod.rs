@@ -1,0 +1,182 @@
+//! Partitioning the database into classes.
+//!
+//! The paper's theory assumes a uniformly random equal-sized partition
+//! (`random_alloc`); §5.2 introduces a greedy normalized-score allocation
+//! for real (non-i.i.d.) data (`greedy_alloc`).  `roundrobin` is the
+//! deterministic control.
+
+pub mod greedy_alloc;
+pub mod random_alloc;
+pub mod roundrobin;
+
+use crate::error::{Error, Result};
+
+/// An assignment of `n` vectors to `q` classes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// `assignments[v]` = class of vector `v`.
+    assignments: Vec<u32>,
+    /// `classes[i]` = ids of vectors in class `i`.
+    classes: Vec<Vec<u32>>,
+}
+
+impl Partition {
+    /// Build from a per-vector assignment array.
+    pub fn from_assignments(assignments: Vec<u32>, n_classes: usize) -> Result<Self> {
+        if n_classes == 0 {
+            return Err(Error::Config("need >= 1 class".into()));
+        }
+        let mut classes = vec![Vec::new(); n_classes];
+        for (v, &c) in assignments.iter().enumerate() {
+            if c as usize >= n_classes {
+                return Err(Error::Config(format!(
+                    "vector {v} assigned to class {c} >= q={n_classes}"
+                )));
+            }
+            classes[c as usize].push(v as u32);
+        }
+        Ok(Partition { assignments, classes })
+    }
+
+    /// Number of classes `q`.
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Total number of vectors `n`.
+    pub fn n_vectors(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Class of vector `v`.
+    pub fn class_of(&self, v: usize) -> u32 {
+        self.assignments[v]
+    }
+
+    /// Members of class `i`.
+    pub fn members(&self, i: usize) -> &[u32] {
+        &self.classes[i]
+    }
+
+    /// Sizes of all classes.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.classes.iter().map(|c| c.len()).collect()
+    }
+
+    /// Verify the partition is an exact cover of `0..n`.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.assignments.len();
+        let total: usize = self.classes.iter().map(|c| c.len()).sum();
+        if total != n {
+            return Err(Error::Config(format!(
+                "classes cover {total} vectors, expected {n}"
+            )));
+        }
+        let mut seen = vec![false; n];
+        for (i, class) in self.classes.iter().enumerate() {
+            for &v in class {
+                if seen[v as usize] {
+                    return Err(Error::Config(format!("vector {v} in two classes")));
+                }
+                seen[v as usize] = true;
+                if self.assignments[v as usize] != i as u32 {
+                    return Err(Error::Config(format!(
+                        "vector {v}: assignment {} but listed in class {i}",
+                        self.assignments[v as usize]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Online insert: assign the next vector id to class `c`.
+    /// Returns the new vector's id.
+    pub fn push(&mut self, c: u32) -> Result<u32> {
+        if c as usize >= self.classes.len() {
+            return Err(Error::Config(format!(
+                "class {c} >= q={}",
+                self.classes.len()
+            )));
+        }
+        let id = self.assignments.len() as u32;
+        self.assignments.push(c);
+        self.classes[c as usize].push(id);
+        Ok(id)
+    }
+
+    /// Imbalance statistic: max size / mean size (1.0 = perfectly even).
+    pub fn imbalance(&self) -> f64 {
+        let sizes = self.sizes();
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        let mean = self.n_vectors() as f64 / self.n_classes() as f64;
+        if mean == 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Allocation strategy selector (config-facing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Allocation {
+    /// Uniformly random equal-sized classes (the theory's model).
+    Random,
+    /// Greedy normalized-score assignment (§5.2).
+    Greedy,
+    /// Deterministic round-robin (control).
+    RoundRobin,
+}
+
+impl std::str::FromStr for Allocation {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "random" => Ok(Allocation::Random),
+            "greedy" => Ok(Allocation::Greedy),
+            "round_robin" => Ok(Allocation::RoundRobin),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown allocation '{other}' (random|greedy|round_robin)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Allocation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Allocation::Random => write!(f, "random"),
+            Allocation::Greedy => write!(f, "greedy"),
+            Allocation::RoundRobin => write!(f, "round_robin"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_assignments_builds_classes() {
+        let p = Partition::from_assignments(vec![0, 1, 0, 1, 0], 2).unwrap();
+        assert_eq!(p.members(0), &[0, 2, 4]);
+        assert_eq!(p.members(1), &[1, 3]);
+        assert_eq!(p.sizes(), vec![3, 2]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(Partition::from_assignments(vec![0, 2], 2).is_err());
+        assert!(Partition::from_assignments(vec![], 0).is_err());
+    }
+
+    #[test]
+    fn imbalance_even_is_one() {
+        let p = Partition::from_assignments(vec![0, 1, 0, 1], 2).unwrap();
+        assert!((p.imbalance() - 1.0).abs() < 1e-9);
+        let p = Partition::from_assignments(vec![0, 0, 0, 1], 2).unwrap();
+        assert!((p.imbalance() - 1.5).abs() < 1e-9);
+    }
+}

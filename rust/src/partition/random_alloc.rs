@@ -1,0 +1,68 @@
+//! Uniformly random equal-sized partition — the model of Theorems 3.1/4.1.
+//!
+//! A random permutation of `0..n` is cut into `q` consecutive chunks of
+//! size `k = n/q` (the last chunk absorbs the remainder when `q ∤ n`).
+
+use super::Partition;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+
+/// Random equal-sized allocation of `n` vectors into `q` classes.
+pub fn allocate(n: usize, q: usize, rng: &mut Rng) -> Result<Partition> {
+    if q == 0 || q > n {
+        return Err(Error::Config(format!("need 1 <= q={q} <= n={n}")));
+    }
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let k = n / q;
+    let mut assignments = vec![0u32; n];
+    for (pos, &v) in perm.iter().enumerate() {
+        let class = (pos / k).min(q - 1) as u32;
+        assignments[v as usize] = class;
+    }
+    Partition::from_assignments(assignments, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_sizes_when_divisible() {
+        let mut rng = Rng::new(1);
+        let p = allocate(1000, 10, &mut rng).unwrap();
+        p.validate().unwrap();
+        assert!(p.sizes().iter().all(|&s| s == 100));
+    }
+
+    #[test]
+    fn remainder_goes_to_last_class() {
+        let mut rng = Rng::new(2);
+        let p = allocate(103, 10, &mut rng).unwrap();
+        p.validate().unwrap();
+        let sizes = p.sizes();
+        assert_eq!(sizes[..9], [10; 9]);
+        assert_eq!(sizes[9], 13);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = allocate(100, 4, &mut Rng::new(7)).unwrap();
+        let b = allocate(100, 4, &mut Rng::new(7)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = allocate(100, 4, &mut Rng::new(1)).unwrap();
+        let b = allocate(100, 4, &mut Rng::new(2)).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let mut rng = Rng::new(3);
+        assert!(allocate(10, 0, &mut rng).is_err());
+        assert!(allocate(10, 11, &mut rng).is_err());
+    }
+}

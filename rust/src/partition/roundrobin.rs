@@ -1,0 +1,33 @@
+//! Deterministic round-robin allocation — the no-randomness control used
+//! in tests and as a debugging baseline.
+
+use super::Partition;
+use crate::error::{Error, Result};
+
+/// Assign vector `v` to class `v % q`.
+pub fn allocate(n: usize, q: usize) -> Result<Partition> {
+    if q == 0 || q > n {
+        return Err(Error::Config(format!("need 1 <= q={q} <= n={n}")));
+    }
+    let assignments: Vec<u32> = (0..n).map(|v| (v % q) as u32).collect();
+    Partition::from_assignments(assignments, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_and_valid() {
+        let p = allocate(10, 3).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.sizes(), vec![4, 3, 3]);
+        assert_eq!(p.class_of(7), 1);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(allocate(2, 3).is_err());
+        assert!(allocate(2, 0).is_err());
+    }
+}

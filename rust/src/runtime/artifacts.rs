@@ -1,0 +1,288 @@
+//! AOT artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! `artifacts/manifest.json` lists every lowered HLO module with its
+//! operand/result shapes; the runtime selects artifacts by kind and
+//! shape, never by filename convention.  Parsed with the in-tree JSON
+//! parser (`util::json`), since the offline build has no serde.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimension sizes.
+    pub shape: Vec<usize>,
+    /// Element dtype (currently always "f32").
+    pub dtype: String,
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Unique artifact name.
+    pub name: String,
+    /// Graph kind: "class_scores" | "class_distances".
+    pub kind: String,
+    /// HLO text filename, relative to the manifest directory.
+    pub file: String,
+    /// Vector dimension d.
+    pub d: usize,
+    /// Number of classes (class_scores only).
+    pub q: Option<usize>,
+    /// Class size (class_distances only).
+    pub k: Option<usize>,
+    /// AOT batch size.
+    pub b: usize,
+    /// Operand specs.
+    pub inputs: Vec<TensorSpec>,
+    /// Result specs.
+    pub outputs: Vec<TensorSpec>,
+    /// Content hash of the HLO text.
+    pub sha256: Option<String>,
+}
+
+/// Parsed manifest plus its directory (for resolving files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+    /// Manifest schema version.
+    pub version: u32,
+}
+
+fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Artifact("tensor spec missing shape".into()))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| Error::Artifact("non-integer shape entry".into()))
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(Json::as_str)
+        .unwrap_or("f32")
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+fn parse_entry(v: &Json) -> Result<ArtifactEntry> {
+    let field_str = |key: &str| -> Result<String> {
+        v.get(key)
+            .and_then(Json::as_str)
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Artifact(format!("artifact entry missing '{key}'")))
+    };
+    let field_usize = |key: &str| -> Result<usize> {
+        v.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact(format!("artifact entry missing '{key}'")))
+    };
+    let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        v.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact(format!("artifact entry missing '{key}'")))?
+            .iter()
+            .map(parse_tensor_spec)
+            .collect()
+    };
+    Ok(ArtifactEntry {
+        name: field_str("name")?,
+        kind: field_str("kind")?,
+        file: field_str("file")?,
+        d: field_usize("d")?,
+        q: v.get("q").and_then(Json::as_usize),
+        k: v.get("k").and_then(Json::as_usize),
+        b: field_usize("b")?,
+        inputs: specs("inputs")?,
+        outputs: specs("outputs")?,
+        sha256: v.get("sha256").and_then(Json::as_str).map(|s| s.to_string()),
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir is used for file resolution).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::Artifact("manifest missing version".into()))?
+            as u32;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let entries = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries, version })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Find a `class_scores` artifact for exactly (d, q).
+    pub fn find_scores(&self, d: usize, q: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "class_scores" && e.d == d && e.q == Some(q))
+    }
+
+    /// Find a `class_distances` artifact for exactly (d, k).
+    pub fn find_distances(&self, d: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "class_distances" && e.d == d && e.k == Some(k))
+    }
+
+    /// Find a `build_bank` artifact for exactly (d, q, k).
+    pub fn find_build_bank(&self, d: usize, q: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "build_bank" && e.d == d && e.q == Some(q) && e.k == Some(k)
+        })
+    }
+
+    /// Verify the on-disk HLO of `entry` against its manifest sha256.
+    /// Returns Ok(()) for entries without a recorded hash.
+    pub fn verify(&self, entry: &ArtifactEntry) -> Result<()> {
+        let Some(expected) = &entry.sha256 else { return Ok(()) };
+        let path = self.path_of(entry);
+        let data = std::fs::read(&path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let got = crate::util::sha256::hex_digest(&data);
+        if &got != expected {
+            return Err(Error::Artifact(format!(
+                "{}: sha256 mismatch (manifest {expected}, file {got}) — \
+                 stale artifact, re-run `make artifacts`",
+                entry.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Verify every entry (used at runtime startup).
+    pub fn verify_all(&self) -> Result<()> {
+        for e in &self.entries {
+            self.verify(e)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {
+                "name": "class_scores_d8_q4_b2",
+                "kind": "class_scores",
+                "file": "class_scores_d8_q4_b2.hlo.txt",
+                "d": 8, "q": 4, "b": 2,
+                "inputs": [
+                    {"shape": [4, 8, 8], "dtype": "f32"},
+                    {"shape": [2, 8], "dtype": "f32"}
+                ],
+                "outputs": [{"shape": [2, 4], "dtype": "f32"}],
+                "sha256": "abc"
+            },
+            {
+                "name": "class_distances_d8_k16_b2",
+                "kind": "class_distances",
+                "file": "class_distances_d8_k16_b2.hlo.txt",
+                "d": 8, "k": 16, "b": 2,
+                "inputs": [
+                    {"shape": [16, 8], "dtype": "f32"},
+                    {"shape": [2, 8], "dtype": "f32"}
+                ],
+                "outputs": [{"shape": [2, 16], "dtype": "f32"}]
+            }
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let s = m.find_scores(8, 4).unwrap();
+        assert_eq!(s.b, 2);
+        assert_eq!(s.inputs[0].shape, vec![4, 8, 8]);
+        assert_eq!(s.sha256.as_deref(), Some("abc"));
+        assert!(m.find_scores(8, 5).is_none());
+        let d = m.find_distances(8, 16).unwrap();
+        assert_eq!(d.outputs[0].shape, vec![2, 16]);
+        assert!(d.sha256.is_none());
+        assert!(m.find_distances(9, 16).is_none());
+        assert_eq!(
+            m.path_of(s),
+            Path::new("/tmp/a").join("class_scores_d8_q4_b2.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let err =
+            Manifest::parse(r#"{"version": 9, "artifacts": []}"#, Path::new("/"))
+                .unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let bad = r#"{"version": 1, "artifacts": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration hook: if `make artifacts` already ran, the real
+        // manifest must parse
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find_scores(128, 64).is_some());
+            assert!(m.find_distances(128, 256).is_some());
+        }
+    }
+}

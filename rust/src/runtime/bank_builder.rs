@@ -1,0 +1,81 @@
+//! PJRT bank builder: runs the AOT `build_bank` artifact (the L1 pallas
+//! construction kernel, `W_i = X_iᵀ X_i`) to build stacked memories from
+//! class members.  Offline/rebuild path — the native
+//! [`crate::memory::MemoryBank`] remains the default; this executor
+//! exists so the whole paper pipeline (build *and* query) can run through
+//! the compiled artifacts, and is cross-checked against the native build
+//! in `rust/tests/runtime_pjrt.rs`.
+
+use crate::error::{Error, Result};
+
+use super::artifacts::Manifest;
+
+/// PJRT memory-bank builder with fixed (q, k, d) shapes.
+pub struct PjrtBankBuilder {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    dim: usize,
+    q: usize,
+    k: usize,
+}
+
+impl PjrtBankBuilder {
+    /// Compile the matching artifact.
+    pub fn from_manifest(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        dim: usize,
+        q: usize,
+        k: usize,
+    ) -> Result<Self> {
+        let entry = manifest.find_build_bank(dim, q, k).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no build_bank artifact for d={dim} q={q} k={k}; run `make artifacts`"
+            ))
+        })?;
+        manifest.verify(entry)?;
+        let path = manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(PjrtBankBuilder { exe, client: client.clone(), dim, q, k })
+    }
+
+    /// Fixed class size `k` of the artifact.
+    pub fn class_size(&self) -> usize {
+        self.k
+    }
+
+    /// Build the `[q * d * d]` stacked bank from `[q * k * d]` members.
+    /// Classes with fewer than `k` members must be zero-padded by the
+    /// caller (zero rows contribute nothing to `XᵀX`).
+    pub fn build(&self, members: &[f32]) -> Result<Vec<f32>> {
+        if members.len() != self.q * self.k * self.dim {
+            return Err(Error::Shape(format!(
+                "members len {} != q*k*d = {}",
+                members.len(),
+                self.q * self.k * self.dim
+            )));
+        }
+        let buf = self.client.buffer_from_host_buffer(
+            members,
+            &[self.q, self.k, self.dim],
+            None,
+        )?;
+        let result = self.exe.execute_b(&[&buf])?;
+        let literal = result[0][0].to_literal_sync()?;
+        let out = literal.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.q * self.dim * self.dim {
+            return Err(Error::Runtime(format!(
+                "bank shape mismatch: got {}, want {}",
+                values.len(),
+                self.q * self.dim * self.dim
+            )));
+        }
+        Ok(values)
+    }
+}

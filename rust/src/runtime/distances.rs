@@ -1,0 +1,113 @@
+//! PJRT candidate-scan executor: runs the AOT `class_distances` graph
+//! (one fused GEMM) over a class's member matrix.
+//!
+//! Class member counts vary (greedy allocation), while the artifact has a
+//! fixed `[k, d]` operand: smaller classes are zero-padded and the padded
+//! rows masked out of the reduction on the rust side.
+
+use crate::error::{Error, Result};
+
+use super::artifacts::Manifest;
+
+/// PJRT distance scanner with fixed (k, d, b) shapes.
+pub struct PjrtDistances {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    dim: usize,
+    k: usize,
+    batch: usize,
+}
+
+impl PjrtDistances {
+    /// Compile the matching artifact.
+    pub fn from_manifest(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        dim: usize,
+        k: usize,
+    ) -> Result<Self> {
+        let entry = manifest.find_distances(dim, k).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no class_distances artifact for d={dim} k={k}; run `make artifacts`"
+            ))
+        })?;
+        manifest.verify(entry)?;
+        let path = manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(PjrtDistances { exe, client: client.clone(), dim, k, batch: entry.b })
+    }
+
+    /// Fixed class capacity `k` of the artifact.
+    pub fn capacity(&self) -> usize {
+        self.k
+    }
+
+    /// Fixed batch size of the artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Squared-L2 distances from each query to each of the first
+    /// `n_members` rows of `members` (`[n_members * d]`, padded to the
+    /// artifact's `k` internally).  `queries` is `[m * d]` with `m <=
+    /// batch`.  Returns `[m * n_members]`.
+    pub fn distances(
+        &self,
+        members: &[f32],
+        n_members: usize,
+        queries: &[f32],
+    ) -> Result<Vec<f32>> {
+        if n_members == 0 || n_members > self.k {
+            return Err(Error::Shape(format!(
+                "n_members {} out of 1..={}",
+                n_members, self.k
+            )));
+        }
+        if members.len() != n_members * self.dim {
+            return Err(Error::Shape(format!(
+                "members len {} != n_members*d = {}",
+                members.len(),
+                n_members * self.dim
+            )));
+        }
+        let m = queries.len() / self.dim;
+        if m == 0 || m > self.batch || queries.len() % self.dim != 0 {
+            return Err(Error::Shape(format!(
+                "queries len {} must be 1..={} rows of d={}",
+                queries.len(),
+                self.batch,
+                self.dim
+            )));
+        }
+        let mut v = vec![0f32; self.k * self.dim];
+        v[..members.len()].copy_from_slice(members);
+        let mut x = vec![0f32; self.batch * self.dim];
+        x[..queries.len()].copy_from_slice(queries);
+        let v_buf = self.client.buffer_from_host_buffer(&v, &[self.k, self.dim], None)?;
+        let x_buf =
+            self.client.buffer_from_host_buffer(&x, &[self.batch, self.dim], None)?;
+        let result = self.exe.execute_b(&[&v_buf, &x_buf])?;
+        let literal = result[0][0].to_literal_sync()?;
+        let out = literal.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.batch * self.k {
+            return Err(Error::Runtime(format!(
+                "distances shape mismatch: got {}, want {}",
+                values.len(),
+                self.batch * self.k
+            )));
+        }
+        // strip padding: keep first n_members of each of the m rows
+        let mut trimmed = Vec::with_capacity(m * n_members);
+        for row in 0..m {
+            let start = row * self.k;
+            trimmed.extend_from_slice(&values[start..start + n_members]);
+        }
+        Ok(trimmed)
+    }
+}

@@ -1,0 +1,52 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text, see
+//! `python/compile/aot.py`) on the CPU PJRT client and executes them on
+//! the request path.  The [`scorer::NativeScorer`] mirrors the PJRT
+//! scorer exactly and serves as both cross-check and fallback.
+
+pub mod artifacts;
+pub mod bank_builder;
+pub mod distances;
+pub mod scorer;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use bank_builder::PjrtBankBuilder;
+pub use distances::PjrtDistances;
+pub use scorer::{ClassScorer, NativeScorer, PjrtScorer};
+
+use crate::error::Result;
+
+/// Create the process-wide CPU PJRT client.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}
+
+/// Which scoring backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Optimized pure-rust scorer.
+    Native,
+    /// AOT Pallas/JAX artifact via PJRT.
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown backend '{other}' (native|pjrt)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "native"),
+            Backend::Pjrt => write!(f, "pjrt"),
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Class scorers: the PJRT path (runs the AOT Pallas/JAX artifact) and
+//! the native path (optimized rust mirror).  Both implement
+//! [`ClassScorer`] so the coordinator and eval harness are
+//! backend-agnostic, and the PJRT path is cross-checked against the
+//! native one in tests.
+
+use crate::error::{Error, Result};
+use crate::memory::score as mem_score;
+
+use super::artifacts::Manifest;
+
+/// Backend-agnostic batched class scorer.
+///
+/// `queries` is `[m * d]` row-major; returns `[m * q]` scores
+/// `S[b, i] = x_bᵀ W_i x_b` for the bank the scorer was built with.
+///
+/// Deliberately NOT `Send`/`Sync`: the PJRT implementation wraps
+/// `Rc`-based client state and must stay on the thread that created it.
+/// Each coordinator worker thread builds its own scorer (see
+/// [`crate::coordinator::engine::EngineFactory`]).
+pub trait ClassScorer {
+    /// Score a batch of queries against every class.
+    fn score(&self, queries: &[f32]) -> Result<Vec<f32>>;
+    /// Vector dimension d.
+    fn dim(&self) -> usize;
+    /// Number of classes q.
+    fn n_classes(&self) -> usize;
+    /// Human-readable backend name.
+    fn backend(&self) -> &'static str;
+}
+
+/// Pure-rust scorer over an owned stacked bank.
+pub struct NativeScorer {
+    stacked: Vec<f32>,
+    dim: usize,
+    q: usize,
+}
+
+impl NativeScorer {
+    /// Wrap a `[q * d * d]` stacked bank.
+    pub fn new(stacked: Vec<f32>, dim: usize, q: usize) -> Result<Self> {
+        if stacked.len() != q * dim * dim {
+            return Err(Error::Shape(format!(
+                "stacked len {} != q*d*d = {}",
+                stacked.len(),
+                q * dim * dim
+            )));
+        }
+        Ok(NativeScorer { stacked, dim, q })
+    }
+}
+
+impl ClassScorer for NativeScorer {
+    fn score(&self, queries: &[f32]) -> Result<Vec<f32>> {
+        if queries.is_empty() || queries.len() % self.dim != 0 {
+            return Err(Error::Shape(format!(
+                "query buffer len {} not a positive multiple of d={}",
+                queries.len(),
+                self.dim
+            )));
+        }
+        Ok(mem_score::score_batch(&self.stacked, queries, self.dim, self.q))
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.q
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT scorer: loads the AOT `class_scores` HLO artifact, compiles it on
+/// the CPU PJRT client, uploads the memory bank once, and executes per
+/// batch.  Queries are padded to the artifact's fixed batch size `b`.
+pub struct PjrtScorer {
+    exe: xla::PjRtLoadedExecutable,
+    /// Bank uploaded once at construction; PJRT CPU does not donate
+    /// non-aliased inputs, so the buffer is reusable across executions.
+    w_buf: xla::PjRtBuffer,
+    client: xla::PjRtClient,
+    dim: usize,
+    q: usize,
+    batch: usize,
+}
+
+impl PjrtScorer {
+    /// Compile the matching artifact from `manifest` and upload `stacked`.
+    pub fn from_manifest(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        stacked: &[f32],
+        dim: usize,
+        q: usize,
+    ) -> Result<Self> {
+        let entry = manifest.find_scores(dim, q).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no class_scores artifact for d={dim} q={q}; \
+                 regenerate with `make artifacts` or \
+                 `python -m compile.aot --configs d={dim},q={q},b=8,k=...`"
+            ))
+        })?;
+        manifest.verify(entry)?;
+        if stacked.len() != q * dim * dim {
+            return Err(Error::Shape(format!(
+                "stacked len {} != q*d*d = {}",
+                stacked.len(),
+                q * dim * dim
+            )));
+        }
+        let path = manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let w_buf =
+            client.buffer_from_host_buffer(stacked, &[q, dim, dim], None)?;
+        Ok(PjrtScorer { exe, w_buf, client: client.clone(), dim, q, batch: entry.b })
+    }
+
+    /// The artifact's fixed batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn execute_chunk(&self, chunk: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let x_buf =
+            self.client
+                .buffer_from_host_buffer(chunk, &[self.batch, self.dim], None)?;
+        let result = self.exe.execute_b(&[&self.w_buf, &x_buf])?;
+        let literal = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = literal.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.batch * self.q {
+            return Err(Error::Runtime(format!(
+                "scores shape mismatch: got {} values, want {}",
+                values.len(),
+                self.batch * self.q
+            )));
+        }
+        Ok(values[..rows * self.q].to_vec())
+    }
+}
+
+impl ClassScorer for PjrtScorer {
+    fn score(&self, queries: &[f32]) -> Result<Vec<f32>> {
+        if queries.is_empty() || queries.len() % self.dim != 0 {
+            return Err(Error::Shape(format!(
+                "query buffer len {} not a positive multiple of d={}",
+                queries.len(),
+                self.dim
+            )));
+        }
+        let m = queries.len() / self.dim;
+        let mut out = Vec::with_capacity(m * self.q);
+        let full = self.batch * self.dim;
+        let mut offset = 0;
+        while offset < queries.len() {
+            let remaining = queries.len() - offset;
+            if remaining >= full {
+                out.extend(self.execute_chunk(
+                    &queries[offset..offset + full],
+                    self.batch,
+                )?);
+                offset += full;
+            } else {
+                // pad the tail chunk with zeros
+                let rows = remaining / self.dim;
+                let mut padded = vec![0f32; full];
+                padded[..remaining].copy_from_slice(&queries[offset..]);
+                out.extend(self.execute_chunk(&padded, rows)?);
+                offset = queries.len();
+            }
+        }
+        Ok(out)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.q
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn native_scorer_validates_shapes() {
+        assert!(NativeScorer::new(vec![0.0; 10], 2, 2).is_err());
+        let s = NativeScorer::new(vec![0.0; 8], 2, 2).unwrap();
+        assert!(s.score(&[1.0, 2.0, 3.0]).is_err());
+        assert!(s.score(&[]).is_err());
+        assert_eq!(s.backend(), "native");
+    }
+
+    #[test]
+    fn native_scorer_scores() {
+        // W0 = I, W1 = 2I (d=2)
+        let stacked = vec![1., 0., 0., 1., 2., 0., 0., 2.];
+        let s = NativeScorer::new(stacked, 2, 2).unwrap();
+        let scores = s.score(&[3.0, 4.0]).unwrap();
+        assert_eq!(scores, vec![25.0, 50.0]);
+    }
+
+    #[test]
+    fn native_scorer_multi_batch() {
+        let mut rng = Rng::new(1);
+        let (q, d) = (3, 8);
+        let stacked: Vec<f32> =
+            (0..q * d * d).map(|_| rng.normal() as f32).collect();
+        let s = NativeScorer::new(stacked.clone(), d, q).unwrap();
+        let queries: Vec<f32> = (0..5 * d).map(|_| rng.normal() as f32).collect();
+        let batch = s.score(&queries).unwrap();
+        assert_eq!(batch.len(), 5 * q);
+        // row 2 equals scoring row 2 alone
+        let single = s.score(&queries[2 * d..3 * d]).unwrap();
+        for i in 0..q {
+            assert!((batch[2 * q + i] - single[i]).abs() < 1e-4);
+        }
+    }
+}

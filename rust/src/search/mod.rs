@@ -1,0 +1,9 @@
+//! Search primitives: distance kernels and bounded top-k selection.
+
+pub mod distance;
+pub mod policy;
+pub mod topk;
+
+pub use distance::Metric;
+pub use policy::AdaptivePolicy;
+pub use topk::{top_p_largest, TopK};

@@ -1,0 +1,107 @@
+//! Adaptive polling policy — "improving the method further" (paper
+//! conclusion): instead of a fixed `p`, poll classes until the top
+//! scores account for a target fraction of the total score mass.  Easy
+//! queries (one dominant class) scan one class; ambiguous queries widen
+//! automatically.
+
+/// Adaptive poll-depth policy.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptivePolicy {
+    /// Lower bound on the poll depth.
+    pub min_p: usize,
+    /// Upper bound on the poll depth.
+    pub max_p: usize,
+    /// Target cumulative score-mass fraction in (0, 1].
+    pub mass: f64,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy { min_p: 1, max_p: 8, mass: 0.5 }
+    }
+}
+
+impl AdaptivePolicy {
+    /// Choose the poll depth for a score vector: the smallest `p` with
+    /// `Σ top-p shifted-scores ≥ mass · Σ shifted-scores`, clamped to
+    /// `[min_p, max_p]`.  Scores are shifted by their minimum so the
+    /// mass criterion is invariant to the bilinear form's offset (dense
+    /// ±1 scores can be large and nearly uniform).
+    pub fn choose_p(&self, scores: &[f32]) -> usize {
+        let q = scores.len();
+        if q == 0 {
+            return self.min_p.max(1);
+        }
+        let min = scores.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+        let mut sorted: Vec<f64> =
+            scores.iter().map(|&s| (s as f64 - min).max(0.0)).collect();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total: f64 = sorted.iter().sum();
+        if total <= 0.0 {
+            return self.min_p.clamp(1, q);
+        }
+        let target = self.mass.clamp(0.0, 1.0) * total;
+        let mut acc = 0.0;
+        let mut p = 0usize;
+        for s in &sorted {
+            acc += s;
+            p += 1;
+            if acc >= target {
+                break;
+            }
+        }
+        p.clamp(self.min_p.max(1), self.max_p.min(q).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominant_class_polls_min() {
+        let pol = AdaptivePolicy { min_p: 1, max_p: 8, mass: 0.5 };
+        // one huge score -> p = 1
+        assert_eq!(pol.choose_p(&[100.0, 1.0, 1.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn uniform_scores_poll_wide() {
+        let pol = AdaptivePolicy { min_p: 1, max_p: 8, mass: 0.5 };
+        // shifted scores all equal -> need half the classes, capped at max
+        let scores = vec![10.0f32; 16];
+        // all shifted to 0 -> total = 0 -> min_p
+        assert_eq!(pol.choose_p(&scores), 1);
+        let scores: Vec<f32> = (0..16).map(|i| 10.0 + (i % 2) as f32).collect();
+        let p = pol.choose_p(&scores);
+        assert!(p > 1 && p <= 8, "p={p}");
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let pol = AdaptivePolicy { min_p: 2, max_p: 3, mass: 0.99 };
+        assert_eq!(pol.choose_p(&[100.0, 0.0, 0.0, 0.0, 0.0]), 2); // min
+        let uniform: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(pol.choose_p(&uniform), 3); // max
+    }
+
+    #[test]
+    fn monotone_in_mass() {
+        let scores: Vec<f32> = vec![9.0, 7.0, 5.0, 3.0, 1.0, 0.5, 0.2, 0.1];
+        let mut last = 0;
+        for mass in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
+            let pol = AdaptivePolicy { min_p: 1, max_p: 8, mass };
+            let p = pol.choose_p(&scores);
+            assert!(p >= last, "mass={mass}: p={p} < {last}");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let pol = AdaptivePolicy::default();
+        assert_eq!(pol.choose_p(&[]), 1);
+        assert_eq!(pol.choose_p(&[5.0]), 1);
+        assert_eq!(pol.choose_p(&[0.0, 0.0]), 1);
+    }
+}

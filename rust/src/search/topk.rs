@@ -1,0 +1,166 @@
+//! Bounded top-k selection.
+//!
+//! `TopK` keeps the k smallest-keyed items seen so far (a bounded
+//! max-heap); used for candidate-scan results (k smallest distances) and,
+//! with negated keys, top-p class selection.
+
+/// Bounded "k smallest" selector.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    /// max-heap on key, so the root is the current worst of the best-k
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    /// New selector keeping the `k` smallest keys. `k` must be > 0.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        TopK { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Current number of kept items.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing has been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Largest kept key (the current cutoff), if full.
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() == self.k {
+            Some(self.heap[0].0)
+        } else {
+            None
+        }
+    }
+
+    /// Offer an item.
+    #[inline]
+    pub fn push(&mut self, key: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((key, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if key < self.heap[0].0 {
+            self.heap[0] = (key, id);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < n && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < n && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Consume into `(key, id)` pairs sorted ascending by key (ties by id
+    /// for determinism).
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
+}
+
+/// Select the indices of the `p` largest values (top-p classes by score),
+/// ordered from largest to smallest.  Ties broken by smaller index.
+pub fn top_p_largest(values: &[f32], p: usize) -> Vec<u32> {
+    let mut sel = TopK::new(p.min(values.len()).max(1));
+    for (i, &v) in values.iter().enumerate() {
+        sel.push(-v, i as u32); // negate: TopK keeps smallest
+    }
+    sel.into_sorted().into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, &v) in [5., 1., 9., 3., 7., 2., 8.].iter().enumerate() {
+            t.push(v, i as u32);
+        }
+        let got = t.into_sorted();
+        let keys: Vec<f32> = got.iter().map(|x| x.0).collect();
+        assert_eq!(keys, vec![1., 2., 3.]);
+        let ids: Vec<u32> = got.iter().map(|x| x.1).collect();
+        assert_eq!(ids, vec![1, 5, 3]);
+    }
+
+    #[test]
+    fn matches_full_sort_prefix() {
+        use crate::data::rng::Rng;
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200) as usize;
+            let k = 1 + rng.below(20) as usize;
+            let vals: Vec<f32> = (0..n).map(|_| (rng.uniform() * 100.0) as f32).collect();
+            let mut t = TopK::new(k);
+            for (i, &v) in vals.iter().enumerate() {
+                t.push(v, i as u32);
+            }
+            let got: Vec<f32> = t.into_sorted().iter().map(|x| x.0).collect();
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let want: Vec<f32> = sorted.into_iter().take(k).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn threshold_only_when_full() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), None);
+        t.push(5.0, 0);
+        assert_eq!(t.threshold(), None);
+        t.push(3.0, 1);
+        assert_eq!(t.threshold(), Some(5.0));
+        t.push(1.0, 2);
+        assert_eq!(t.threshold(), Some(3.0));
+    }
+
+    #[test]
+    fn top_p_largest_ordering() {
+        let scores = [0.5f32, 9.0, 3.0, 9.0, 1.0];
+        assert_eq!(top_p_largest(&scores, 3), vec![1, 3, 2]);
+        assert_eq!(top_p_largest(&scores, 1), vec![1]);
+        // p larger than len clamps
+        assert_eq!(top_p_largest(&scores, 10).len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_k_panics() {
+        TopK::new(0);
+    }
+}

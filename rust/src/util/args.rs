@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser: `--key value`, `--flag`, and positional
+//! arguments.  (The offline build has no clap.)
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = iter.next().ok_or_else(|| {
+                        Error::Config(format!("--{name} expects a value"))
+                    })?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Positional argument `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(text) => text.parse::<T>().map_err(|_| {
+                Error::Config(format!("--{key}: cannot parse '{text}'"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = Args::parse(argv("eval --figure 3 --all --scale 2.5"), &["all"]).unwrap();
+        assert_eq!(a.pos(0), Some("eval"));
+        assert_eq!(a.get("figure"), Some("3"));
+        assert!(a.flag("all"));
+        assert_eq!(a.get_parse::<f64>("scale", 1.0).unwrap(), 2.5);
+        assert_eq!(a.get_parse::<u64>("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("--k=128 --label=x=y"), &[]).unwrap();
+        assert_eq!(a.get("k"), Some("128"));
+        assert_eq!(a.get("label"), Some("x=y"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("--figure"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(argv("--n xyz"), &[]).unwrap();
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+}

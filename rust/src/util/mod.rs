@@ -1,0 +1,12 @@
+//! In-tree utility substrates (the offline build has no serde/rayon/clap,
+//! so these are built from scratch): JSON, scoped-thread parallelism,
+//! and CLI argument parsing.
+
+pub mod args;
+pub mod json;
+pub mod par;
+pub mod sha256;
+
+pub use args::Args;
+pub use json::Json;
+pub use par::{concurrent_map, parallel_map, parallel_map_items};

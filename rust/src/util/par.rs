@@ -1,0 +1,169 @@
+//! Scoped-thread data parallelism (the offline build has no rayon).
+//!
+//! [`parallel_map`] splits the index range over `min(n, cores)` scoped
+//! threads; work items should be coarse enough (≥ ~10µs) that the spawn
+//! cost amortizes — exactly the granularity of this crate's uses
+//! (per-class scoring slabs, per-query searches, per-database Monte-Carlo
+//! batches).
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Apply `f` to every index in `0..n` in parallel; results are returned
+/// in index order.  `f` must be `Sync` (called from many threads).
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let fref = &f;
+            let nref = &next;
+            let optr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = nref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = fref(i);
+                // SAFETY: each index i is claimed by exactly one thread
+                // via the atomic counter; slots are disjoint.
+                unsafe {
+                    *optr.0.add(i) = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("all slots filled")).collect()
+}
+
+/// Like [`parallel_map`] over a slice of items.
+pub fn parallel_map_items<I, T, F>(items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    parallel_map(items.len(), |i| f(&items[i]))
+}
+
+/// Like [`parallel_map`] but with an explicit thread count that ignores
+/// the core count.  Use for *latency-bound* work (e.g. clients blocking
+/// on a server channel): even on a single-core machine, `threads`
+/// concurrent requests must be in flight for batching/backpressure to be
+/// exercised.  For CPU-bound work prefer [`parallel_map`].
+pub fn concurrent_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.clamp(1, n);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let fref = &f;
+            let nref = &next;
+            let optr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = nref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = fref(i);
+                // SAFETY: each index i is claimed by exactly one thread
+                // via the atomic counter; slots are disjoint.
+                unsafe {
+                    *optr.0.add(i) = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("all slots filled")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: the pointer is only dereferenced at disjoint indices, each by a
+// single thread, within the scope that owns the Vec.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let got = parallel_map(1000, |i| i * 2);
+        let want: Vec<usize> = (0..1000).map(|i| i * 2).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn items_variant() {
+        let items = vec!["a", "bb", "ccc"];
+        assert_eq!(parallel_map_items(&items, |s| s.len()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn actually_parallel_under_contention() {
+        // all threads increment a shared atomic; total must be exact
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        parallel_map(10_000, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 10_000);
+    }
+
+    #[test]
+    fn concurrent_map_runs_all_even_on_one_core() {
+        // blocking-style rendezvous: with 4 threads, two tasks that wait
+        // for each other can both make progress regardless of core count
+        let barrier = std::sync::Barrier::new(4);
+        let got = concurrent_map(4, 4, |i| {
+            barrier.wait();
+            i * 3
+        });
+        assert_eq!(got, vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn heavy_items_balance() {
+        // uneven work: correctness only (no timing assertion)
+        let got = parallel_map(64, |i| {
+            let mut acc = 0u64;
+            for j in 0..(i * 1000) as u64 {
+                acc = acc.wrapping_add(j * j);
+            }
+            (i, acc)
+        });
+        for (i, (gi, _)) in got.iter().enumerate() {
+            assert_eq!(i, *gi);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Coordinator end-to-end tests: concurrent clients through the full
+//! batcher -> worker -> response pipeline, native and (when artifacts
+//! exist) PJRT backends.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::data::Workload;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::runtime::Backend;
+
+fn build_index(seed: u64, d: usize, n: usize, q: usize) -> (Arc<AmIndex>, Workload) {
+    let mut rng = Rng::new(seed);
+    let wl = synthetic::dense_workload(d, n, 64, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: q, top_p: 2, ..Default::default() };
+    let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    (Arc::new(idx), wl)
+}
+
+fn native_factory(index: Arc<AmIndex>) -> EngineFactory {
+    EngineFactory { index, backend: Backend::Native, artifacts_dir: None }
+}
+
+#[test]
+fn serves_concurrent_clients_correctly() {
+    let (index, wl) = build_index(1, 32, 512, 8);
+    let config = CoordinatorConfig {
+        max_batch: 8,
+        max_wait_us: 300,
+        workers: 3,
+        queue_depth: 64,
+    };
+    let server = Arc::new(SearchServer::start(native_factory(index), config).unwrap());
+
+    let n_clients = 8;
+    let per_client = 32;
+    let hits: Vec<usize> = amsearch::util::concurrent_map(n_clients, n_clients, |ci| {
+        let mut hits = 0;
+        for j in 0..per_client {
+            let qi = (ci * per_client + j) % wl.queries.len();
+            // p = q (full poll): response must be the exact stored copy
+            let resp = server.search(wl.queries.get(qi).to_vec(), 8).unwrap();
+            if resp.neighbor == wl.ground_truth[qi] {
+                hits += 1;
+            } else {
+                eprintln!("MISS ci={ci} j={j} qi={qi} got={} want={} dist={} id={} polled={:?}",
+                    resp.neighbor, wl.ground_truth[qi], resp.distance, resp.id, resp.polled);
+            }
+            assert_eq!(resp.distance, 0.0);
+            assert_eq!(resp.polled.len(), 8);
+        }
+        hits
+    });
+    let total_hits: usize = hits.iter().sum();
+    assert_eq!(total_hits, n_clients * per_client, "full poll must be exact");
+
+    let m = server.metrics();
+    assert_eq!(m.requests, (n_clients * per_client) as u64);
+    assert!(m.batches <= m.requests);
+    assert!(m.mean_batch_size() >= 1.0);
+    assert!(m.latency.count() == m.requests);
+    server.shutdown();
+}
+
+#[test]
+fn batching_actually_groups_requests() {
+    let (index, wl) = build_index(2, 32, 256, 4);
+    let config = CoordinatorConfig {
+        max_batch: 8,
+        max_wait_us: 5_000, // generous window so the batch fills
+        workers: 1,
+        queue_depth: 256,
+    };
+    let server = Arc::new(SearchServer::start(native_factory(index), config).unwrap());
+    let total = 64;
+    amsearch::util::concurrent_map(total, 16, |i| {
+        let qi = i % wl.queries.len();
+        server.search(wl.queries.get(qi).to_vec(), 1).unwrap()
+    });
+    let m = server.metrics();
+    assert_eq!(m.requests, total as u64);
+    assert!(
+        m.mean_batch_size() > 1.5,
+        "expected batching under concurrent load, got {:.2}",
+        m.mean_batch_size()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn rejects_wrong_dimension() {
+    let (index, _) = build_index(3, 32, 128, 4);
+    let server =
+        SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
+    let err = server.search(vec![0.0; 31], 1).unwrap_err();
+    assert!(err.to_string().contains("dim"));
+    server.shutdown();
+}
+
+#[test]
+fn zero_top_p_uses_index_default() {
+    let (index, wl) = build_index(4, 32, 128, 4);
+    let server =
+        SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
+    let resp = server.search(wl.queries.get(0).to_vec(), 0).unwrap();
+    assert_eq!(resp.polled.len(), 2); // index default top_p = 2
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_then_search_fails_cleanly() {
+    let (index, wl) = build_index(5, 32, 128, 4);
+    let server =
+        SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
+    server.shutdown();
+    assert!(server.search(wl.queries.get(0).to_vec(), 1).is_err());
+}
+
+#[test]
+fn ops_accounting_flows_to_metrics() {
+    let (index, wl) = build_index(6, 32, 256, 4);
+    let server =
+        SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
+    for qi in 0..10 {
+        server.search(wl.queries.get(qi).to_vec(), 1).unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.ops.searches, 10);
+    assert!(m.ops.per_search() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_backend_serves_if_artifacts_present() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    }
+    // must match an AOT config: d=128, q=64
+    let (index, wl) = build_index(7, 128, 2048, 64);
+    let factory = EngineFactory {
+        index,
+        backend: Backend::Pjrt,
+        artifacts_dir: Some(dir),
+    };
+    let config = CoordinatorConfig {
+        max_batch: 8,
+        max_wait_us: 500,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let server = Arc::new(SearchServer::start(factory, config).unwrap());
+    let hits: Vec<bool> = amsearch::util::concurrent_map(24, 8, |i| {
+        let qi = i % wl.queries.len();
+        let resp = server.search(wl.queries.get(qi).to_vec(), 64).unwrap();
+        resp.neighbor == wl.ground_truth[qi]
+    });
+    assert!(hits.iter().all(|&h| h), "full poll through PJRT must be exact");
+    server.shutdown();
+}

@@ -1,0 +1,261 @@
+//! Cross-module integration tests: data generators -> allocation ->
+//! memory bank -> index -> baselines, on realistic (small) workloads.
+
+use amsearch::baseline::{Exhaustive, HybridIndex, RsAnchors};
+use amsearch::data::clustered::{clustered_workload, exact_ground_truth, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel, SparseSpec};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::memory::StorageRule;
+use amsearch::metrics::{CostModel, OpsCounter, Recall};
+use amsearch::partition::Allocation;
+use amsearch::search::Metric;
+
+/// The paper's core promise, end to end: in the d << k << d² regime with
+/// few classes, top-1 polling finds the exact stored pattern with low
+/// error AND costs far less than exhaustive search.
+#[test]
+fn sparse_regime_accuracy_and_cost() {
+    let mut rng = Rng::new(1);
+    let d = 128;
+    // k=256: d << k << d² with d²/(32k) = 2, q e^{-2} small for q=4
+    let (k, q) = (256, 4);
+    let wl = synthetic::sparse_workload(
+        SparseSpec { dim: d, ones: 8.0 },
+        k * q,
+        200,
+        QueryModel::Exact,
+        &mut rng,
+    );
+    let params = IndexParams { n_classes: q, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    assert!(index.uses_sparse_scoring());
+
+    let mut ops = OpsCounter::new();
+    let mut recall = Recall::new();
+    for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+        let r = index.query(wl.queries.get(qi), 1, &mut ops);
+        recall.record(r.id == gt);
+    }
+    assert!(recall.value() > 0.8, "recall={}", recall.value());
+
+    // measured cost must sit within 2x of the closed-form c²q + kc model
+    let c = 8u64;
+    let model = CostModel { effective_dim: c, q: q as u64, k: k as u64, n: (k * q) as u64 };
+    let per_search = ops.per_search();
+    let predicted = (model.score_cost() + model.scan_cost(1)) as f64;
+    assert!(
+        per_search < 2.0 * predicted && per_search > 0.3 * predicted,
+        "per_search={per_search} predicted={predicted}"
+    );
+    // and be well below exhaustive search
+    assert!(ops.relative_to(model.exhaustive_cost()) < 1.0);
+}
+
+#[test]
+fn dense_corrupted_queries_still_recoverable() {
+    let mut rng = Rng::new(2);
+    let d = 64;
+    let (k, q) = (256, 6);
+    let wl = synthetic::dense_workload(
+        d,
+        k * q,
+        150,
+        QueryModel::Corrupted { alpha: 0.8 },
+        &mut rng,
+    );
+    let params =
+        IndexParams { n_classes: q, metric: Metric::SqL2, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let mut ops = OpsCounter::new();
+    let mut top1 = Recall::new();
+    let mut top3 = Recall::new();
+    for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+        let x = wl.queries.get(qi);
+        let r1 = index.query(x, 1, &mut ops);
+        // corrupted query: its exact NN is overwhelmingly the original
+        top1.record(r1.id == gt);
+        let r3 = index.query(x, 3, &mut ops);
+        top3.record(r3.id == gt);
+    }
+    assert!(top3.value() >= top1.value());
+    assert!(top1.value() > 0.5, "top1={}", top1.value());
+    assert!(top3.value() > 0.8, "top3={}", top3.value());
+}
+
+/// Recall@1 must be monotonically non-decreasing in the poll depth p and
+/// reach 1.0 at p = q for self-queries.
+#[test]
+fn recall_monotone_in_p_and_exact_at_full_poll() {
+    let mut rng = Rng::new(3);
+    let spec = ClusteredSpec { dim: 24, n_clusters: 6, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, 1200, 100, &mut rng);
+    let q = 12;
+    let params = IndexParams { n_classes: q, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let mut last = 0.0;
+    for p in [1usize, 2, 4, 8, 12] {
+        let mut ops = OpsCounter::new();
+        let mut recall = Recall::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = index.query(wl.queries.get(qi), p, &mut ops);
+            recall.record(r.id == gt);
+        }
+        assert!(
+            recall.value() >= last - 1e-9,
+            "recall dropped at p={p}: {} < {last}",
+            recall.value()
+        );
+        last = recall.value();
+        if p == q {
+            assert_eq!(recall.value(), 1.0, "full poll must find exact NN");
+        }
+    }
+}
+
+/// Greedy allocation beats random allocation on clustered data at equal
+/// poll depth (the Figure-9 effect).
+#[test]
+fn greedy_beats_random_on_clustered_data() {
+    let mut rng = Rng::new(4);
+    let spec = ClusteredSpec {
+        dim: 32,
+        n_clusters: 8,
+        center_scale: 3.0,
+        noise_scale: 0.4,
+        size_skew: 0.0,
+        query_jitter: 0.3,
+    };
+    let wl = clustered_workload(spec, 1600, 150, &mut rng);
+    let q = 8;
+    let mut recalls = Vec::new();
+    for alloc in [Allocation::Greedy, Allocation::Random] {
+        let params = IndexParams {
+            n_classes: q,
+            allocation: alloc,
+            greedy_cap_factor: Some(2.0),
+            ..Default::default()
+        };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let mut recall = Recall::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = index.query(wl.queries.get(qi), 1, &mut ops);
+            recall.record(r.id == gt);
+        }
+        recalls.push(recall.value());
+    }
+    assert!(
+        recalls[0] > recalls[1] + 0.1,
+        "greedy={} random={}",
+        recalls[0],
+        recalls[1]
+    );
+}
+
+/// The three search methods agree with brute force when configured for
+/// exact search.
+#[test]
+fn all_methods_exact_when_fully_polled() {
+    let mut rng = Rng::new(5);
+    let spec = ClusteredSpec { dim: 16, n_clusters: 4, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, 400, 50, &mut rng);
+    let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+
+    let params = IndexParams { n_classes: 4, ..Default::default() };
+    let am = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let rs = RsAnchors::build(wl.base.clone(), 10, Metric::SqL2, &mut rng).unwrap();
+    let hy = HybridIndex::build(wl.base.clone(), params, 100.0, 1000, &mut rng).unwrap();
+
+    let mut ops = OpsCounter::new();
+    for qi in 0..wl.queries.len() {
+        let x = wl.queries.get(qi);
+        let (want, _) = ex.query(x, &mut ops);
+        assert_eq!(am.query(x, 4, &mut ops).id, want, "am, query {qi}");
+        assert_eq!(rs.query(x, 10, &mut ops).0, want, "rs, query {qi}");
+        assert_eq!(hy.query(x, 4, &mut ops).0, want, "hybrid, query {qi}");
+    }
+}
+
+/// Max-rule (cooccurrence) banks work end-to-end and perform comparably
+/// to sum-rule on sparse data (the paper's §5.1.1 observation).
+#[test]
+fn max_rule_comparable_on_sparse() {
+    let mut rng = Rng::new(6);
+    let wl = synthetic::sparse_workload(
+        SparseSpec { dim: 128, ones: 8.0 },
+        2048,
+        150,
+        QueryModel::Exact,
+        &mut rng,
+    );
+    let mut values = Vec::new();
+    for rule in [StorageRule::Sum, StorageRule::Max] {
+        let params = IndexParams { n_classes: 8, rule, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        let mut recall = Recall::new();
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = index.query(wl.queries.get(qi), 1, &mut ops);
+            recall.record(r.id == gt);
+        }
+        values.push(recall.value());
+    }
+    // the paper reports the max rule gives "small improvements in every
+    // case": it must not be worse, and both must be in the same ballpark
+    assert!(
+        values[1] >= values[0] - 0.05,
+        "max rule regressed: sum={} max={}",
+        values[0],
+        values[1]
+    );
+    assert!(values[0] > 0.5 && values[1] > 0.5, "both rules must work");
+}
+
+/// fvecs round-trip through the real file format feeding a real index.
+#[test]
+fn fvecs_files_feed_the_index() {
+    let mut rng = Rng::new(7);
+    let wl = clustered_workload(
+        ClusteredSpec { dim: 16, n_clusters: 3, ..ClusteredSpec::sift_like() },
+        300,
+        20,
+        &mut rng,
+    );
+    let dir = std::env::temp_dir().join(format!("amsearch_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    amsearch::data::io::write_fvecs(&dir.join("base.fvecs"), &wl.base).unwrap();
+    let base = amsearch::data::io::read_fvecs(&dir.join("base.fvecs")).unwrap();
+    assert_eq!(base, wl.base);
+    let gt = exact_ground_truth(&base, &wl.queries);
+    assert_eq!(gt, wl.ground_truth);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Unequal class sizes (greedy, capped) still produce correct scans and
+/// sane ops accounting.
+#[test]
+fn unequal_classes_accounting() {
+    let mut rng = Rng::new(8);
+    let wl = synthetic::dense_workload(32, 500, 40, QueryModel::Exact, &mut rng);
+    let params = IndexParams {
+        n_classes: 7,
+        allocation: Allocation::Greedy,
+        greedy_cap_factor: Some(3.0),
+        ..Default::default()
+    };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    index.partition().validate().unwrap();
+    let mut ops = OpsCounter::new();
+    for qi in 0..wl.queries.len() {
+        let r = index.query(wl.queries.get(qi), 2, &mut ops);
+        // candidates = sum of the two polled classes' true sizes
+        let want: usize = r
+            .polled
+            .iter()
+            .map(|&c| index.partition().members(c as usize).len())
+            .sum();
+        assert_eq!(r.candidates, want);
+    }
+    assert_eq!(ops.searches, 40);
+}

@@ -1,0 +1,279 @@
+//! Property-based tests over randomized inputs (the offline build has no
+//! proptest crate; `cases!` runs a property over many seeded random
+//! configurations and reports the failing seed for reproduction).
+
+use amsearch::data::dataset::Dataset;
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel, SparseSpec};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::memory::{score, MemoryBank, OuterProductMemory, StorageRule};
+use amsearch::metrics::{CostModel, OpsCounter};
+use amsearch::partition::{greedy_alloc, random_alloc, roundrobin};
+use amsearch::search::{top_p_largest, TopK};
+
+/// Run `prop` for `n` seeded cases; panic with the seed on failure.
+fn cases(n: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xBEEF_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Any partition produced by any allocator is an exact cover with the
+/// right class count.
+#[test]
+fn prop_partitions_are_exact_covers() {
+    cases(40, |rng| {
+        let n = 10 + rng.below(400) as usize;
+        let q = 1 + rng.below(n as u64 / 2) as usize;
+        let p1 = random_alloc::allocate(n, q, rng).unwrap();
+        p1.validate().unwrap();
+        assert_eq!(p1.n_vectors(), n);
+        let p2 = roundrobin::allocate(n, q).unwrap();
+        p2.validate().unwrap();
+        // random equal-size: all classes within 1 of n/q except the last
+        let k = n / q;
+        for (i, s) in p1.sizes().iter().enumerate() {
+            if i + 1 < q {
+                assert_eq!(*s, k);
+            }
+        }
+    });
+}
+
+/// Greedy allocation is a cover and respects its cap for all shapes.
+#[test]
+fn prop_greedy_allocation_cover_and_cap() {
+    cases(15, |rng| {
+        let n = 20 + rng.below(150) as usize;
+        let q = 2 + rng.below(6) as usize;
+        let d = 8 + rng.below(24) as usize;
+        let ds = synthetic::dense_patterns(d, n, rng);
+        let cap = n.div_ceil(q) + rng.below(10) as usize + 1;
+        let p = greedy_alloc::allocate(
+            &ds,
+            q,
+            greedy_alloc::GreedyOptions { max_size: Some(cap) },
+            rng,
+        )
+        .unwrap();
+        p.validate().unwrap();
+        assert!(p.sizes().iter().all(|&s| s <= cap));
+    });
+}
+
+/// The memory score identity: x^T (Σ x_μ x_μ^T) x == Σ ⟨x, x_μ⟩², for
+/// arbitrary real-valued patterns.
+#[test]
+fn prop_memory_score_identity() {
+    cases(40, |rng| {
+        let d = 4 + rng.below(40) as usize;
+        let k = 1 + rng.below(20) as usize;
+        let mut mem = OuterProductMemory::new(d);
+        let patterns: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        for p in &patterns {
+            mem.add(p);
+        }
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let direct: f64 = patterns
+            .iter()
+            .map(|p| {
+                let dot: f64 =
+                    p.iter().zip(&x).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+                dot * dot
+            })
+            .sum();
+        let via_mem = mem.score(&x) as f64;
+        let scale = direct.abs().max(1.0);
+        assert!(
+            (via_mem - direct).abs() / scale < 1e-3,
+            "d={d} k={k}: mem={via_mem} direct={direct}"
+        );
+    });
+}
+
+/// The batched native scorer agrees with the scalar bank scorer on
+/// arbitrary shapes (the same property the PJRT path is tested against).
+#[test]
+fn prop_batch_scorer_matches_scalar() {
+    cases(25, |rng| {
+        let d = 3 + rng.below(40) as usize;
+        let q = 1 + rng.below(10) as usize;
+        let k = 1 + rng.below(8) as usize;
+        let b = 1 + rng.below(6) as usize;
+        let classes: Vec<Vec<f32>> = (0..q)
+            .map(|_| (0..k * d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = classes.iter().map(|c| c.as_slice()).collect();
+        let bank = MemoryBank::build(d, &refs, StorageRule::Sum).unwrap();
+        let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let batch = score::score_batch(bank.stacked(), &queries, d, q);
+        for bi in 0..b {
+            let single = bank.score_query(&queries[bi * d..(bi + 1) * d]);
+            for ci in 0..q {
+                let (a, z) = (batch[bi * q + ci], single[ci]);
+                assert!(
+                    (a - z).abs() / z.abs().max(1.0) < 1e-3,
+                    "bi={bi} ci={ci}: batch={a} single={z}"
+                );
+            }
+        }
+    });
+}
+
+/// TopK equals the prefix of a full sort for random inputs (with ties).
+#[test]
+fn prop_topk_equals_sort_prefix() {
+    cases(60, |rng| {
+        let n = 1 + rng.below(300) as usize;
+        let k = 1 + rng.below(30) as usize;
+        // coarse values force ties
+        let vals: Vec<f32> = (0..n).map(|_| rng.below(20) as f32).collect();
+        let mut t = TopK::new(k);
+        for (i, &v) in vals.iter().enumerate() {
+            t.push(v, i as u32);
+        }
+        let got: Vec<f32> = t.into_sorted().iter().map(|x| x.0).collect();
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f32> = sorted.into_iter().take(k).collect();
+        assert_eq!(got, want);
+    });
+}
+
+/// top_p_largest returns indices sorted by strictly non-increasing value.
+#[test]
+fn prop_top_p_ordering() {
+    cases(60, |rng| {
+        let n = 1 + rng.below(100) as usize;
+        let p = 1 + rng.below(20) as usize;
+        let vals: Vec<f32> = (0..n).map(|_| (rng.uniform() * 10.0) as f32).collect();
+        let got = top_p_largest(&vals, p);
+        assert_eq!(got.len(), p.min(n));
+        for w in got.windows(2) {
+            assert!(vals[w[0] as usize] >= vals[w[1] as usize]);
+        }
+        // every omitted value <= every kept value
+        if let Some(&last) = got.last() {
+            let kept: std::collections::HashSet<u32> = got.iter().cloned().collect();
+            for (i, &v) in vals.iter().enumerate() {
+                if !kept.contains(&(i as u32)) {
+                    assert!(v <= vals[last as usize] + 1e-6);
+                }
+            }
+        }
+    });
+}
+
+/// Measured ops equal the closed-form cost model exactly for equal-sized
+/// random partitions and dense data.
+#[test]
+fn prop_ops_match_cost_model() {
+    cases(12, |rng| {
+        let d = 8 + 4 * rng.below(10) as usize;
+        let q = 2 + rng.below(6) as usize;
+        let k = 8 + rng.below(24) as usize;
+        let n = q * k;
+        let wl = synthetic::dense_workload(d, n, 3, QueryModel::Exact, rng);
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, rng).unwrap();
+        let p = 1 + rng.below(q as u64) as usize;
+        let mut ops = OpsCounter::new();
+        index.query(wl.queries.get(0), p, &mut ops);
+        let model = CostModel {
+            effective_dim: d as u64,
+            q: q as u64,
+            k: k as u64,
+            n: n as u64,
+        };
+        assert_eq!(ops.score_ops, model.score_cost());
+        assert_eq!(ops.scan_ops, model.scan_cost(p as u64));
+    });
+}
+
+/// Add/remove on OuterProductMemory is an exact inverse for random
+/// pattern sequences (online re-allocation invariant).
+#[test]
+fn prop_memory_add_remove_inverse() {
+    cases(30, |rng| {
+        let d = 4 + rng.below(20) as usize;
+        let base: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut mem = OuterProductMemory::new(d);
+        for p in &base {
+            mem.add(p);
+        }
+        let snapshot = mem.clone();
+        let extra: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        for p in &extra {
+            mem.add(p);
+        }
+        for p in extra.iter().rev() {
+            mem.remove(p);
+        }
+        assert_eq!(mem.count(), snapshot.count());
+        for (a, b) in mem.weights().iter().zip(snapshot.weights()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    });
+}
+
+/// Sparse-support scoring equals dense scoring on binary data for
+/// arbitrary index configurations.
+#[test]
+fn prop_sparse_dense_scoring_agree() {
+    cases(20, |rng| {
+        let d = 16 + rng.below(64) as usize;
+        let n = 40 + rng.below(100) as usize;
+        let q = 2 + rng.below(5) as usize;
+        let spec = SparseSpec { dim: d, ones: 2.0 + rng.uniform() * 6.0 };
+        let base = synthetic::sparse_patterns(spec, n, rng);
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let index = AmIndex::build(base.clone(), params, rng).unwrap();
+        assert!(index.uses_sparse_scoring());
+        let x = base.get(rng.below(n as u64) as usize);
+        let mut ops = OpsCounter::new();
+        let via_support = index.score_classes(x, &mut ops); // support path
+        let via_dense = index.bank().score_query(x); // dense path
+        for (a, b) in via_support.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-2, "support={a} dense={b}");
+        }
+    });
+}
+
+/// Dataset gather/support/normalize survive arbitrary shapes.
+#[test]
+fn prop_dataset_invariants() {
+    cases(40, |rng| {
+        let d = 1 + rng.below(30) as usize;
+        let n = 1 + rng.below(50) as usize;
+        let data: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let ds = Dataset::from_flat(d, data).unwrap();
+        // gather of a random permutation preserves rows
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut idx);
+        let g = ds.gather(&idx);
+        for (pos, &orig) in idx.iter().enumerate() {
+            assert_eq!(g.get(pos), ds.get(orig as usize));
+        }
+        // center+normalize leaves unit or zero norms
+        let mut c = ds.clone();
+        c.center_and_normalize();
+        for v in c.iter() {
+            let norm: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(norm < 1.0 + 1e-4);
+            assert!(norm > 1.0 - 1e-4 || norm < 1e-6);
+        }
+    });
+}

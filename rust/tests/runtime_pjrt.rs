@@ -1,0 +1,259 @@
+//! PJRT runtime integration tests: load the AOT artifacts produced by
+//! `make artifacts`, execute them on the CPU PJRT client, and cross-check
+//! against the optimized native scorer and the pure-rust reference.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` has
+//! not been generated yet; `make test` always generates it first.
+
+use std::path::PathBuf;
+
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::runtime::{
+    cpu_client, ClassScorer, Manifest, NativeScorer, PjrtDistances, PjrtScorer,
+};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing; run `make artifacts`");
+        None
+    }
+}
+
+/// Build a d=128, q=64 index matching the default AOT artifact config.
+fn default_shape_index(seed: u64) -> (AmIndex, amsearch::data::Workload) {
+    let mut rng = Rng::new(seed);
+    let wl = synthetic::dense_workload(128, 4096, 32, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 64, ..Default::default() };
+    let idx = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    (idx, wl)
+}
+
+#[test]
+fn pjrt_scorer_matches_native_scorer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let (idx, wl) = default_shape_index(1);
+
+    let pjrt = PjrtScorer::from_manifest(
+        &client,
+        &manifest,
+        idx.bank().stacked(),
+        128,
+        64,
+    )
+    .unwrap();
+    assert_eq!(pjrt.backend(), "pjrt");
+    assert_eq!(pjrt.batch_size(), 8);
+    let native =
+        NativeScorer::new(idx.bank().stacked().to_vec(), 128, 64).unwrap();
+
+    // full batch (8), partial batch (3), multi-chunk (19)
+    for m in [8usize, 3, 19] {
+        let mut queries = Vec::with_capacity(m * 128);
+        for qi in 0..m {
+            queries.extend_from_slice(wl.queries.get(qi % wl.queries.len()));
+        }
+        let a = pjrt.score(&queries).unwrap();
+        let b = native.score(&queries).unwrap();
+        assert_eq!(a.len(), m * 64);
+        assert_eq!(b.len(), m * 64);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let rel = (x - y).abs() / y.abs().max(1.0);
+            assert!(rel < 1e-3, "m={m} idx={i}: pjrt={x} native={y}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_scorer_reusable_across_many_calls() {
+    // The bank buffer is uploaded once and reused: 20 consecutive
+    // executions must keep producing identical results (guards against
+    // accidental buffer donation).
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let (idx, wl) = default_shape_index(2);
+    let pjrt =
+        PjrtScorer::from_manifest(&client, &manifest, idx.bank().stacked(), 128, 64)
+            .unwrap();
+    let mut queries = Vec::new();
+    for qi in 0..8 {
+        queries.extend_from_slice(wl.queries.get(qi));
+    }
+    let first = pjrt.score(&queries).unwrap();
+    for round in 0..20 {
+        let again = pjrt.score(&queries).unwrap();
+        assert_eq!(first, again, "round {round} diverged");
+    }
+}
+
+#[test]
+fn pjrt_end_to_end_query_equals_native_query() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let (idx, wl) = default_shape_index(3);
+    let pjrt =
+        PjrtScorer::from_manifest(&client, &manifest, idx.bank().stacked(), 128, 64)
+            .unwrap();
+    let mut ops = amsearch::metrics::OpsCounter::new();
+    for qi in 0..wl.queries.len() {
+        let x = wl.queries.get(qi);
+        let scores = pjrt.score(x).unwrap();
+        let via_pjrt = idx.finish_query(x, &scores, 4, &mut ops);
+        let via_native = idx.query(x, 4, &mut ops);
+        assert_eq!(via_pjrt.id, via_native.id, "query {qi}");
+        assert_eq!(via_pjrt.polled, via_native.polled, "query {qi}");
+    }
+}
+
+#[test]
+fn pjrt_distances_match_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let dist = PjrtDistances::from_manifest(&client, &manifest, 128, 256).unwrap();
+    assert_eq!(dist.capacity(), 256);
+
+    let mut rng = Rng::new(4);
+    let members = synthetic::dense_patterns(128, 200, &mut rng); // < k: padding path
+    let queries = synthetic::dense_patterns(128, 5, &mut rng);
+    let got = dist
+        .distances(members.as_flat(), 200, queries.as_flat())
+        .unwrap();
+    assert_eq!(got.len(), 5 * 200);
+    for (bi, q) in queries.iter().enumerate() {
+        for (vi, v) in members.iter().enumerate() {
+            let want: f32 = q.iter().zip(v).map(|(a, b)| (a - b) * (a - b)).sum();
+            let g = got[bi * 200 + vi];
+            assert!(
+                (g - want).abs() / want.max(1.0) < 1e-3,
+                "b={bi} v={vi}: got={g} want={want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_distances_validate_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let dist = PjrtDistances::from_manifest(&client, &manifest, 128, 256).unwrap();
+    // too many members
+    assert!(dist
+        .distances(&vec![0f32; 300 * 128], 300, &[0f32; 128])
+        .is_err());
+    // zero members
+    assert!(dist.distances(&[], 0, &[0f32; 128]).is_err());
+    // too many query rows (> batch)
+    assert!(dist
+        .distances(&vec![0f32; 10 * 128], 10, &vec![0f32; 9 * 128])
+        .is_err());
+}
+
+#[test]
+fn pjrt_engine_with_scan_matches_native_engine() {
+    use amsearch::coordinator::Engine;
+    use std::sync::Arc;
+    let Some(dir) = artifacts_dir() else { return };
+    let (idx, wl) = default_shape_index(9);
+    let idx = Arc::new(idx);
+    let native = Engine::native(idx.clone()).unwrap();
+    let pjrt = Engine::pjrt(idx.clone(), &dir).unwrap();
+    // n=4096, q=64 -> k=64 <= 256 artifact capacity: scan goes via PJRT
+    assert!(pjrt.has_pjrt_scan(), "expected PJRT scan path to activate");
+    let queries: Vec<(&[f32], usize)> =
+        (0..8).map(|i| (wl.queries.get(i), 4usize)).collect();
+    let a = native.serve_batch(&queries).unwrap();
+    let b = pjrt.serve_batch(&queries).unwrap();
+    for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(ra.neighbor, rb.neighbor, "query {i}");
+        assert_eq!(ra.polled, rb.polled, "query {i}");
+        assert_eq!(ra.candidates, rb.candidates, "query {i}");
+        assert!(
+            (ra.distance - rb.distance).abs() / ra.distance.max(1.0) < 1e-3,
+            "query {i}: {} vs {}",
+            ra.distance,
+            rb.distance
+        );
+    }
+}
+
+#[test]
+fn pjrt_bank_builder_matches_native_build() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    // d=128, q=64, k=256: the default AOT build_bank config
+    let builder =
+        amsearch::runtime::PjrtBankBuilder::from_manifest(&client, &manifest, 128, 64, 256)
+            .unwrap();
+    assert_eq!(builder.class_size(), 256);
+    let (idx, _) = default_shape_index(8); // n=4096 e.g. k=64 per class... rebuild below
+    // assemble members in AOT layout [q, k, d], zero-padded
+    let q = 64;
+    let k = 256;
+    let d = 128;
+    let mut members = vec![0f32; q * k * d];
+    for ci in 0..q {
+        for (j, &vid) in idx.partition().members(ci).iter().enumerate().take(k) {
+            let src = idx.data().get(vid as usize);
+            members[ci * k * d + j * d..ci * k * d + (j + 1) * d].copy_from_slice(src);
+        }
+    }
+    let built = builder.build(&members).unwrap();
+    let native = idx.bank().stacked();
+    assert_eq!(built.len(), native.len());
+    for (i, (a, b)) in built.iter().zip(native).enumerate() {
+        assert!(
+            (a - b).abs() / b.abs().max(1.0) < 1e-3,
+            "idx {i}: pjrt={a} native={b}"
+        );
+    }
+}
+
+#[test]
+fn manifest_verification_catches_tampering() {
+    let Some(dir) = artifacts_dir() else { return };
+    // copy artifacts to a temp dir, tamper with one file
+    let tmp = std::env::temp_dir().join(format!("amsearch_tamper_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), tmp.join(entry.file_name())).unwrap();
+    }
+    let manifest = Manifest::load(&tmp).unwrap();
+    let scores = manifest.find_scores(128, 64).unwrap();
+    let path = manifest.path_of(scores);
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    text.push_str("\n// tampered\n");
+    std::fs::write(&path, text).unwrap();
+    let err = manifest.verify(scores).unwrap_err();
+    assert!(err.to_string().contains("sha256 mismatch"), "{err}");
+    // and the scorer constructor refuses to load it
+    let client = cpu_client().unwrap();
+    assert!(PjrtScorer::from_manifest(&client, &manifest, &vec![0f32; 64 * 128 * 128], 128, 64)
+        .is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn missing_artifact_is_actionable_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let msg = match PjrtScorer::from_manifest(&client, &manifest, &vec![0f32; 3 * 7 * 7], 7, 3)
+    {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(msg.contains("d=7"), "{msg}");
+    assert!(msg.contains("make artifacts") || msg.contains("compile.aot"), "{msg}");
+}
