@@ -1,0 +1,93 @@
+//! Class-grouped batched candidate scan vs the per-query scan, on the
+//! clustered synthetic workload (the serving-realistic case: queries
+//! concentrate on the same few classes, so the batch fusion actually
+//! shares class slabs).
+//!
+//! Stage isolation: class scores are precomputed once per batch outside
+//! the timed region, so both sides time exactly select + scan.  The
+//! `engine` section then times the full pipeline (score + select +
+//! scan) end to end through `Engine::serve_batch`.
+
+#[path = "harness_common.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use amsearch::coordinator::Engine;
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::OpsCounter;
+use harness::{bench, budget, section};
+
+fn main() {
+    let mut rng = Rng::new(31);
+    let (d, n, q, p) = (128usize, 32_768usize, 64usize, 4usize);
+    let spec = ClusteredSpec { dim: d, n_clusters: q, ..ClusteredSpec::sift_like() };
+    let n_queries = 64usize;
+    let wl = clustered_workload(spec, n, n_queries, &mut rng);
+    let params = IndexParams { n_classes: q, top_p: p, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    println!(
+        "workload: clustered n={n} d={d} q={q} k={} p={p} (queries share hot classes)",
+        n / q
+    );
+
+    section("scan stage: per-query finish_query vs class-grouped finish_batch");
+    for &b in &[1usize, 8, 32, 64] {
+        let queries: Vec<&[f32]> =
+            (0..b).map(|i| wl.queries.get(i % n_queries)).collect();
+        let ps = vec![p; b];
+        // scores precomputed outside the timed region
+        let mut throwaway = OpsCounter::new();
+        let mut flat_scores = Vec::with_capacity(b * q);
+        for x in &queries {
+            flat_scores.extend_from_slice(&index.score_classes(x, &mut throwaway));
+        }
+
+        let m_seq = bench(&format!("per-query scan      B={b:<3}"), budget(), || {
+            let mut total = 0usize;
+            for (bi, x) in queries.iter().enumerate() {
+                let mut ops = OpsCounter::new();
+                let r = index.finish_query(
+                    x,
+                    &flat_scores[bi * q..(bi + 1) * q],
+                    p,
+                    &mut ops,
+                );
+                total += r.candidates;
+            }
+            std::hint::black_box(total);
+        });
+        let m_batch = bench(&format!("class-grouped scan  B={b:<3}"), budget(), || {
+            let mut ops = vec![OpsCounter::new(); b];
+            let rs = index.finish_batch(&queries, &flat_scores, &ps, &mut ops);
+            std::hint::black_box(rs.len());
+        });
+        m_seq.report();
+        m_batch.report();
+        println!(
+            "  -> class-grouped speedup at B={b}: {:.2}x",
+            m_seq.mean_ns / m_batch.mean_ns
+        );
+    }
+
+    section("end-to-end engine pipeline (score + select + scan)");
+    let engine = Engine::native(Arc::new(index)).unwrap();
+    for &b in &[1usize, 8, 32] {
+        let queries: Vec<(&[f32], usize)> =
+            (0..b).map(|i| (wl.queries.get(i % n_queries), p)).collect();
+        let m = bench(&format!("engine.serve_batch  B={b:<3}"), budget(), || {
+            std::hint::black_box(engine.serve_batch(&queries).unwrap());
+        });
+        m.report();
+        let out = engine.serve_batch_detailed(&queries).unwrap();
+        println!(
+            "  -> per-request {:.2}us, scan fusion {:.2}x ({} polls / {} class passes)",
+            m.mean_ns / b as f64 / 1e3,
+            out.scan.fusion_factor(),
+            out.scan.polls,
+            out.scan.class_passes
+        );
+    }
+}

@@ -62,8 +62,8 @@ fn run_backend(
     let mut recall = Recall::new();
     let mut neighbors = vec![u32::MAX; wl.queries.len()];
     for (qi, nb) in results {
-        recall.record(nb == wl.ground_truth[qi]);
-        neighbors[qi] = nb;
+        recall.record(nb == Some(wl.ground_truth[qi]));
+        neighbors[qi] = nb.unwrap_or(u32::MAX);
     }
     let m = server.metrics();
     let report = RunReport {

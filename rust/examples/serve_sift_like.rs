@@ -48,7 +48,7 @@ fn main() -> amsearch::Result<()> {
     let hits = concurrent_map(total, streams, |i| {
         let qi = i % wl.queries.len();
         let resp = server.search(wl.queries.get(qi).to_vec(), 0).expect("search");
-        resp.neighbor == wl.ground_truth[qi]
+        resp.neighbor == Some(wl.ground_truth[qi])
     });
     let elapsed = started.elapsed();
 

@@ -1,12 +1,64 @@
 //! Dynamic batcher: groups incoming requests into batches of at most
 //! `max_batch`, waiting at most `max_wait` for stragglers — the standard
-//! serving trade-off between batch efficiency (the AOT scorer runs a
-//! fixed batch) and tail latency.
+//! serving trade-off between batch efficiency (the class-grouped scan
+//! and the AOT scorer both want full batches) and tail latency.
+//!
+//! Under sustained load the queue already holds a full batch when the
+//! first request is taken, so the loop drains with non-blocking
+//! `try_recv` first and only arms the deadline timer when the batch is
+//! still short — the hot path forms a batch without a single clock read
+//! or timed wait.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::time::{Duration, Instant};
 
 use super::protocol::SearchRequest;
+
+/// Outcome of one fill attempt (internal).
+enum Fill {
+    /// Batch ready (full or deadline hit); keep looping.
+    Ready,
+    /// Producer side disconnected; flush and exit.
+    Disconnected,
+}
+
+/// Drain immediately-available requests without blocking.
+fn drain_ready(
+    rx: &Receiver<SearchRequest>,
+    batch: &mut Vec<SearchRequest>,
+    max_batch: usize,
+) -> Fill {
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(r) => batch.push(r),
+            Err(TryRecvError::Empty) => return Fill::Ready,
+            Err(TryRecvError::Disconnected) => return Fill::Disconnected,
+        }
+    }
+    Fill::Ready
+}
+
+/// Wait out the batching window for stragglers.
+fn wait_for_stragglers(
+    rx: &Receiver<SearchRequest>,
+    batch: &mut Vec<SearchRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Fill {
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => return Fill::Disconnected,
+        }
+    }
+    Fill::Ready
+}
 
 /// Run the batching loop: read requests from `rx`, emit batches on `tx`.
 /// Returns when `rx` disconnects (all pending requests flushed) or `tx`
@@ -25,23 +77,17 @@ pub fn run_batcher(
         };
         let mut batch = Vec::with_capacity(max_batch);
         batch.push(first);
-        let deadline = Instant::now() + max_wait;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    let _ = tx.send(batch);
-                    return;
-                }
-            }
+        // fast path: everything already queued, no timer involved
+        let mut fill = drain_ready(&rx, &mut batch, max_batch);
+        if matches!(fill, Fill::Ready) && batch.len() < max_batch {
+            fill = wait_for_stragglers(&rx, &mut batch, max_batch, max_wait);
         }
+        let disconnected = matches!(fill, Fill::Disconnected);
         if tx.send(batch).is_err() {
             return; // workers gone
+        }
+        if disconnected {
+            return; // producers gone, final batch flushed
         }
     }
 }

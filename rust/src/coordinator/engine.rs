@@ -1,6 +1,18 @@
 //! The per-worker search engine: an [`AmIndex`] plus a pluggable
 //! [`ClassScorer`] backend (native or PJRT).
 //!
+//! Every request path is the **batched, class-grouped pipeline** —
+//! single queries are a batch of one:
+//!
+//! 1. **score** — one scorer call for the whole batch (`[B, d]` in,
+//!    `[B, q]` out);
+//! 2. **select** — top-`p` classes per query from the score matrix;
+//! 3. **scan** — the (query → polled classes) map is inverted and the
+//!    candidate scan runs class-major: each polled class's member matrix
+//!    is brought into cache once per *batch* (native:
+//!    [`AmIndex::finish_batch`]; PJRT: one `class_distances` GEMM per
+//!    class covering every query that polled it).
+//!
 //! The engine is deliberately *not* `Send`: the PJRT client is
 //! `Rc`-based, so each worker thread constructs its own engine via an
 //! [`EngineFactory`] and keeps it thread-local for its lifetime.
@@ -9,14 +21,28 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::error::Result;
-use crate::index::AmIndex;
-use crate::metrics::OpsCounter;
+use crate::index::{AmIndex, QueryResult};
+use crate::metrics::{BatchScanStats, OpsCounter};
 use crate::runtime::{
     Backend, ClassScorer, Manifest, NativeScorer, PjrtDistances, PjrtScorer,
 };
-use crate::search::top_p_largest;
+use crate::search::{invert_polled, lex_min_update, top_p_largest};
 
 use super::protocol::SearchResponse;
+
+/// Everything one executed batch produced: per-request responses plus
+/// the batch-level accounting the server aggregates per *batch*, not per
+/// request.
+#[derive(Debug)]
+pub struct BatchOutput {
+    /// One response skeleton per query (id/service time filled by the
+    /// caller).
+    pub responses: Vec<SearchResponse>,
+    /// Per-stage operation counts summed over the batch.
+    pub ops: OpsCounter,
+    /// Class-grouped scan accounting (polls vs distinct class passes).
+    pub scan: BatchScanStats,
+}
 
 /// A ready-to-serve engine (one per worker thread).
 pub struct Engine {
@@ -95,36 +121,62 @@ impl Engine {
         self.scanner.is_some()
     }
 
-    /// PJRT candidate scan over the polled classes for one query.
-    fn scan_pjrt(
+    /// Class-grouped PJRT candidate scan for a whole batch: inverts the
+    /// (query → polled classes) map and submits **one `class_distances`
+    /// GEMM per polled class per batch** (chunked by the artifact's
+    /// fixed batch size), instead of one GEMM per (query, class) pair.
+    /// Empty polled sets fall through to the `u32::MAX` internal
+    /// sentinel, which the response assembly maps to a proper
+    /// "no candidates" (`neighbor: None`) result.
+    fn scan_pjrt_batch(
         &self,
         scanner: &PjrtDistances,
-        x: &[f32],
-        polled: &[u32],
-        ops: &mut OpsCounter,
-    ) -> Result<(u32, f32, usize)> {
+        queries: &[&[f32]],
+        polled: Vec<Vec<u32>>,
+        ops: &mut [OpsCounter],
+    ) -> Result<Vec<QueryResult>> {
         let d = self.index.dim();
-        let mut best = f32::INFINITY;
-        let mut best_id = u32::MAX;
-        let mut candidates = 0usize;
-        for &ci in polled {
-            let members = &self.class_members[ci as usize];
+        let q = self.index.params().n_classes;
+        let b = queries.len();
+        let by_class = invert_polled(&polled, q);
+        let mut best: Vec<(f32, u32)> = vec![(f32::INFINITY, u32::MAX); b];
+        let mut candidates = vec![0usize; b];
+        for (ci, queriers) in by_class.iter().enumerate() {
+            if queriers.is_empty() {
+                continue;
+            }
+            let members = &self.class_members[ci];
             let n_members = members.len() / d;
             if n_members == 0 {
                 continue;
             }
-            let dists = scanner.distances(members, n_members, x)?;
-            candidates += n_members;
-            for (j, &dist) in dists.iter().enumerate() {
-                let vid = self.index.partition().members(ci as usize)[j];
-                if dist < best || (dist == best && vid < best_id) {
-                    best = dist;
-                    best_id = vid;
+            let ids = self.index.partition().members(ci);
+            let mut flat = Vec::with_capacity(queriers.len() * d);
+            for &bi in queriers {
+                flat.extend_from_slice(queries[bi as usize]);
+            }
+            let dists = scanner.distances_chunked(members, n_members, &flat)?;
+            for (row, &bi) in queriers.iter().enumerate() {
+                let e = &mut best[bi as usize];
+                let row_dists = &dists[row * n_members..(row + 1) * n_members];
+                for (j, &dist) in row_dists.iter().enumerate() {
+                    lex_min_update(e, dist, ids[j]);
                 }
+                candidates[bi as usize] += n_members;
             }
         }
-        ops.scan_ops += (candidates * d) as u64;
-        Ok((best_id, best, candidates))
+        let mut out = Vec::with_capacity(b);
+        for (bi, pol) in polled.into_iter().enumerate() {
+            ops[bi].scan_ops += (candidates[bi] * d) as u64;
+            ops[bi].searches += 1;
+            out.push(QueryResult {
+                id: best[bi].1,
+                distance: best[bi].0,
+                polled: pol,
+                candidates: candidates[bi],
+            });
+        }
+        Ok(out)
     }
 
     /// The scorer backend in use.
@@ -137,62 +189,85 @@ impl Engine {
         &self.index
     }
 
-    /// Serve one batch: score all queries in one scorer call, then finish
-    /// each request (top-p select + candidate scan) individually.
+    /// Serve one batch through the class-grouped pipeline (see the
+    /// module docs): one scoring call, batched top-p selection, then a
+    /// class-major candidate scan touching each polled class's member
+    /// matrix once for the whole batch.
     ///
     /// `queries` is a slice of (vector, top_p) pairs; returns one
     /// response skeleton per query (id/service time filled by caller).
     pub fn serve_batch(&self, queries: &[(&[f32], usize)]) -> Result<Vec<SearchResponse>> {
+        Ok(self.serve_batch_detailed(queries)?.responses)
+    }
+
+    /// [`Self::serve_batch`] plus the per-batch accounting the server
+    /// aggregates (per-stage op counts, scan fusion statistics).
+    pub fn serve_batch_detailed(&self, queries: &[(&[f32], usize)]) -> Result<BatchOutput> {
         let d = self.index.dim();
         let q = self.index.params().n_classes;
-        let mut flat = Vec::with_capacity(queries.len() * d);
+        let b = queries.len();
+        if b == 0 {
+            return Ok(BatchOutput {
+                responses: Vec::new(),
+                ops: OpsCounter::new(),
+                scan: BatchScanStats::new(),
+            });
+        }
+        // stage 1: score the whole batch in one scorer call
+        let mut flat = Vec::with_capacity(b * d);
         for (v, _) in queries {
             flat.extend_from_slice(v);
         }
         let scores = self.scorer.score(&flat)?;
-        let mut out = Vec::with_capacity(queries.len());
-        for (bi, (v, top_p)) in queries.iter().enumerate() {
-            let mut ops = OpsCounter::new();
-            // account scoring cost per the paper's model (d²q dense)
-            ops.score_ops += (d * d * q) as u64;
+        // per-query accounting; scoring cost per the paper's model
+        // (d²q dense)
+        let mut ops: Vec<OpsCounter> = vec![OpsCounter::new(); b];
+        let mut ps = Vec::with_capacity(b);
+        for (bi, (_, top_p)) in queries.iter().enumerate() {
+            ops[bi].score_ops += (d * d * q) as u64;
             let p = if *top_p == 0 { self.index.params().top_p } else { *top_p };
-            let p = p.min(q);
-            let resp = if let Some(scanner) = &self.scanner {
-                // all-PJRT request path: top-p select in rust, scan GEMM
-                // through the AOT artifact
-                let polled = top_p_largest(&scores[bi * q..(bi + 1) * q], p);
-                let (id, distance, candidates) =
-                    self.scan_pjrt(scanner, v, &polled, &mut ops)?;
-                ops.searches += 1;
-                SearchResponse {
-                    id: 0,
-                    neighbor: id,
-                    distance,
-                    polled,
-                    candidates,
-                    ops: ops.total(),
-                    service_ns: 0,
-                }
-            } else {
-                let r = self.index.finish_query(
-                    v,
-                    &scores[bi * q..(bi + 1) * q],
-                    p,
-                    &mut ops,
-                );
-                SearchResponse {
-                    id: 0,
-                    neighbor: r.id,
-                    distance: r.distance,
-                    polled: r.polled,
-                    candidates: r.candidates,
-                    ops: ops.total(),
-                    service_ns: 0,
-                }
-            };
-            out.push(resp);
+            ps.push(p.min(q));
         }
-        Ok(out)
+        let qrefs: Vec<&[f32]> = queries.iter().map(|(v, _)| *v).collect();
+        // stages 2+3: top-p selection for the whole batch, then the
+        // class-major scan (native or PJRT GEMM)
+        let results = if let Some(scanner) = &self.scanner {
+            let polled: Vec<Vec<u32>> = (0..b)
+                .map(|bi| top_p_largest(&scores[bi * q..(bi + 1) * q], ps[bi]))
+                .collect();
+            self.scan_pjrt_batch(scanner, &qrefs, polled, &mut ops)?
+        } else {
+            self.index.finish_batch(&qrefs, &scores, &ps, &mut ops)
+        };
+        // assemble responses + batch-level accounting
+        let mut agg = OpsCounter::new();
+        let mut scan = BatchScanStats { batches: 1, ..BatchScanStats::new() };
+        let mut touched = vec![false; q];
+        let mut responses = Vec::with_capacity(b);
+        for (bi, r) in results.into_iter().enumerate() {
+            scan.polls += r.polled.len() as u64;
+            for &ci in &r.polled {
+                // a pass is a member-matrix stream: polled-but-empty
+                // classes execute nothing and must not count
+                touched[ci as usize] |=
+                    !self.index.partition().members(ci as usize).is_empty();
+            }
+            agg.merge(&ops[bi]);
+            responses.push(SearchResponse {
+                id: 0,
+                // map the internal u32::MAX sentinel (no candidate
+                // scanned, or all candidates had NaN distances) to a
+                // proper "no candidates" result
+                neighbor: (r.id != u32::MAX).then_some(r.id),
+                distance: r.distance,
+                polled: r.polled,
+                candidates: r.candidates,
+                ops: ops[bi].total(),
+                service_ns: 0,
+            });
+        }
+        scan.class_passes = touched.iter().filter(|&&t| t).count() as u64;
+        Ok(BatchOutput { responses, ops: agg, scan })
     }
 }
 
@@ -246,7 +321,7 @@ mod tests {
         assert_eq!(rs.len(), 4);
         for (i, r) in rs.iter().enumerate() {
             // p = q = full scan: exact answer guaranteed
-            assert_eq!(r.neighbor, wl.ground_truth[i]);
+            assert_eq!(r.neighbor, Some(wl.ground_truth[i]));
             assert_eq!(r.candidates, 256);
             assert!(r.ops > 0);
         }
@@ -259,6 +334,71 @@ mod tests {
         let rs = engine.serve_batch(&[(wl.queries.get(0), 0usize)]).unwrap();
         // default top_p = 1 -> exactly one class polled
         assert_eq!(rs[0].polled.len(), 1);
+    }
+
+    #[test]
+    fn batch_equals_batches_of_one() {
+        // the batched pipeline IS the single-query pipeline: a batch of
+        // B must reproduce B batches of one bitwise
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx).unwrap();
+        let queries: Vec<(&[f32], usize)> = (0..6)
+            .map(|i| (wl.queries.get(i), [1usize, 2, 3, 8, 5, 8][i]))
+            .collect();
+        let batched = engine.serve_batch(&queries).unwrap();
+        for (i, query) in queries.iter().enumerate() {
+            let single = engine.serve_batch(&[*query]).unwrap();
+            assert_eq!(batched[i], single[0], "query {i}");
+        }
+    }
+
+    #[test]
+    fn batch_accounting_reports_scan_fusion() {
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx).unwrap();
+        // every query polls all 8 classes -> 32 polls over 8 passes
+        let queries: Vec<(&[f32], usize)> =
+            (0..4).map(|i| (wl.queries.get(i), 8usize)).collect();
+        let out = engine.serve_batch_detailed(&queries).unwrap();
+        assert_eq!(out.scan.batches, 1);
+        assert_eq!(out.scan.polls, 32);
+        assert_eq!(out.scan.class_passes, 8);
+        assert!((out.scan.fusion_factor() - 4.0).abs() < 1e-12);
+        assert_eq!(out.ops.searches, 4);
+        // per-stage split is preserved (not lumped into one counter)
+        assert!(out.ops.score_ops > 0);
+        assert!(out.ops.scan_ops > 0);
+        let total: u64 = out.responses.iter().map(|r| r.ops).sum();
+        assert_eq!(total, out.ops.total());
+    }
+
+    #[test]
+    fn empty_polled_classes_yield_no_candidates_response() {
+        // classes 0 and 1 empty; the probe ties all class scores at 0,
+        // so top-2 polls exactly the two empty classes -> the protocol
+        // must say "no candidates" instead of leaking the u32::MAX
+        // sentinel
+        let idx = crate::index::am_index::two_empty_classes_fixture();
+        let engine = Engine::native(Arc::new(idx)).unwrap();
+        let probe: Vec<f32> = vec![0., 0., 1.];
+        let rs = engine.serve_batch(&[(probe.as_slice(), 2usize)]).unwrap();
+        assert_eq!(rs[0].neighbor, None);
+        assert_eq!(rs[0].candidates, 0);
+        assert!(rs[0].distance.is_infinite());
+        assert_eq!(rs[0].polled, vec![0, 1]);
+        // polling wider reaches the stored vectors again
+        let rs = engine.serve_batch(&[(probe.as_slice(), 4usize)]).unwrap();
+        assert_eq!(rs[0].neighbor, Some(0));
+        assert_eq!(rs[0].candidates, 4);
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let (idx, _) = test_index();
+        let engine = Engine::native(idx).unwrap();
+        let out = engine.serve_batch_detailed(&[]).unwrap();
+        assert!(out.responses.is_empty());
+        assert_eq!(out.scan.batches, 0);
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod engine;
 pub mod protocol;
 pub mod server;
 
-pub use engine::{Engine, EngineFactory};
+pub use engine::{BatchOutput, Engine, EngineFactory};
 pub use protocol::{CoordinatorConfig, SearchRequest, SearchResponse};
 pub use server::{SearchServer, ServerMetrics};

@@ -28,9 +28,12 @@ pub struct SearchRequest {
 pub struct SearchResponse {
     /// Echo of the request id.
     pub id: u64,
-    /// Database id of the best candidate found.
-    pub neighbor: u32,
-    /// Its distance under the index metric.
+    /// Database id of the best candidate found, or `None` when no
+    /// candidate was scanned (every polled class was empty).  The old
+    /// protocol leaked the internal `u32::MAX` sentinel here.
+    pub neighbor: Option<u32>,
+    /// Its distance under the index metric (`f32::INFINITY` when
+    /// `neighbor` is `None`).
     pub distance: f32,
     /// Classes that were polled, best first.
     pub polled: Vec<u32>,

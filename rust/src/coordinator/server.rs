@@ -19,7 +19,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::metrics::{LatencyHistogram, OpsCounter};
+use crate::metrics::{BatchScanStats, LatencyHistogram, OpsCounter};
 
 use super::batcher::run_batcher;
 use super::engine::EngineFactory;
@@ -32,8 +32,12 @@ pub struct ServerMetrics {
     pub latency: LatencyHistogram,
     /// Scorer+scan batch service time.
     pub service: LatencyHistogram,
-    /// Aggregated paper-model operation counts.
+    /// Aggregated paper-model operation counts, split per stage
+    /// (score/scan/aux) as reported by the engine.
     pub ops: OpsCounter,
+    /// Class-grouped scan accounting: polls vs distinct class passes
+    /// (the batching win of the class-major candidate scan).
+    pub scan: BatchScanStats,
     /// Batches executed.
     pub batches: u64,
     /// Requests served.
@@ -165,6 +169,7 @@ impl SearchServer {
             latency: m.latency.clone(),
             service: m.service.clone(),
             ops: m.ops,
+            scan: m.scan,
             batches: m.batches,
             requests: m.requests,
         }
@@ -199,29 +204,31 @@ fn serve_one_batch(
     let started = Instant::now();
     let queries: Vec<(&[f32], usize)> =
         batch.iter().map(|r| (r.vector.as_slice(), r.top_p)).collect();
-    match engine.serve_batch(&queries) {
-        Ok(mut responses) => {
+    match engine.serve_batch_detailed(&queries) {
+        Ok(output) => {
+            let super::engine::BatchOutput { mut responses, ops, scan } = output;
             let service_ns = started.elapsed().as_nanos() as u64;
             let per_req_ns = service_ns / batch.len().max(1) as u64;
-            let mut agg_ops = OpsCounter::new();
+            let requests = batch.len() as u64;
             let mut latency = LatencyHistogram::new();
             let mut completed = Vec::with_capacity(batch.len());
             for (req, resp) in batch.into_iter().zip(responses.drain(..)) {
                 let mut resp = resp;
                 resp.id = req.id;
                 resp.service_ns = per_req_ns;
-                agg_ops.score_ops += resp.ops;
-                agg_ops.searches += 1;
                 latency.record(req.enqueued.elapsed());
                 completed.push((req.resp, resp));
             }
             // metrics BEFORE completing requests: a client must never
-            // observe its response while its own request is uncounted
+            // observe its response while its own request is uncounted.
+            // op counts merge with their per-stage split intact (the old
+            // path lumped the per-request totals into score_ops).
             {
                 let mut m = metrics.lock().expect("poisoned");
                 m.batches += 1;
-                m.requests += agg_ops.searches;
-                m.ops.merge(&agg_ops);
+                m.requests += requests;
+                m.ops.merge(&ops);
+                m.scan.merge(&scan);
                 m.service.record_ns(service_ns);
                 m.latency.merge(&latency);
             }

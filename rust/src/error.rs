@@ -1,43 +1,70 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls (the offline build has no
+//! `thiserror`); the messages are identical to the previous derive
+//! output so error-string assertions stay stable.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every subsystem.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape or parameter mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid configuration (failed validation).
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// Dataset file I/O or format problems.
-    #[error("data error: {0}")]
     Data(String),
 
     /// AOT artifact manifest / HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT runtime failures (compile/execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator/serving failures (channel closed, timeout...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O error (displayed transparently).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Config(m) => write!(f, "invalid config: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl From<crate::runtime::xla::Error> for Error {
+    fn from(e: crate::runtime::xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))
     }
 }
@@ -59,5 +86,14 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone")); // transparent display
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Config("x".into())).is_none());
     }
 }

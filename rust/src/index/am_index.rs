@@ -15,7 +15,8 @@ use crate::error::Result;
 use crate::memory::{score as mem_score, MemoryBank};
 use crate::metrics::OpsCounter;
 use crate::partition::{greedy_alloc, random_alloc, roundrobin, Allocation, Partition};
-use crate::search::top_p_largest;
+use crate::search::{distance_pruned, invert_polled, lex_min_update, top_p_largest};
+use crate::util::par::parallel_map;
 
 use super::params::IndexParams;
 
@@ -233,6 +234,111 @@ impl AmIndex {
         QueryResult { id, distance, polled, candidates }
     }
 
+    /// Finish a whole batch of queries given the batch's precomputed
+    /// class scores: select top-`p` per query, then run the candidate
+    /// scan **class-major** — the (query → polled classes) map is
+    /// inverted into (class → querying batch members) and each polled
+    /// class's member matrix is streamed exactly once for the whole
+    /// batch, scoring every query that polled it (the same batch fusion
+    /// [`crate::memory::score::score_batch`] applies to the scoring
+    /// stage).  Classes are scanned in parallel; within a class each
+    /// query keeps a fused TopK(1) accumulator `(best, best_id)` with
+    /// threshold-based early abandoning
+    /// ([`crate::search::distance_pruned`]).
+    ///
+    /// `scores` is `[B * q]` row-major; `ps[b]` is query `b`'s poll
+    /// depth; `ops[b]` receives query `b`'s scan-stage accounting.
+    ///
+    /// Guaranteed bitwise-identical to `B` independent
+    /// [`Self::finish_query`] calls: polled order, candidate counts, op
+    /// counts, best id and best distance all match exactly (the batch
+    /// restructuring changes memory access order, never arithmetic — see
+    /// `prop_finish_batch_matches_sequential`).
+    pub fn finish_batch(
+        &self,
+        queries: &[&[f32]],
+        scores: &[f32],
+        ps: &[usize],
+        ops: &mut [OpsCounter],
+    ) -> Vec<QueryResult> {
+        let q = self.params.n_classes;
+        let b = queries.len();
+        assert_eq!(scores.len(), b * q, "scores buffer must be [B * q]");
+        assert_eq!(ps.len(), b, "one poll depth per query");
+        assert_eq!(ops.len(), b, "one ops counter per query");
+        let polled: Vec<Vec<u32>> = (0..b)
+            .map(|bi| top_p_largest(&scores[bi * q..(bi + 1) * q], ps[bi]))
+            .collect();
+        // invert (query -> polled classes) into (class -> querying
+        // batch members); only classes someone polled get scanned
+        let by_class = invert_polled(&polled, q);
+        let active: Vec<usize> =
+            (0..q).filter(|&ci| !by_class[ci].is_empty()).collect();
+        let metric = self.params.metric;
+        // one pass over each polled class's member matrix, scoring every
+        // querying batch member against each streamed row; per (class,
+        // query) a fused TopK(1) accumulator with early abandoning
+        let scan_class = |ci: usize| -> Vec<(u32, (f32, u32))> {
+            let queriers = &by_class[ci];
+            // (query index, (best distance, best id))
+            let mut bests: Vec<(u32, (f32, u32))> = queriers
+                .iter()
+                .map(|&bi| (bi, (f32::INFINITY, u32::MAX)))
+                .collect();
+            for &vid in self.partition.members(ci) {
+                let v = self.data.get(vid as usize);
+                for (qi, slot) in bests.iter_mut() {
+                    let x = queries[*qi as usize];
+                    // abandon candidates that provably exceed this
+                    // query's in-class best; ties survive for the
+                    // id tie-break
+                    if let Some(dist) = distance_pruned(metric, x, v, slot.0) {
+                        lex_min_update(slot, dist, vid);
+                    }
+                }
+            }
+            bests
+        };
+        // parallel over active classes (each d²-sized slab touched by
+        // exactly one thread) — but only when the batch is big enough to
+        // amortize thread spawns; a batch of one stays spawn-free like
+        // the sequential path it replaces
+        let class_bests: Vec<Vec<(u32, (f32, u32))>> = if b <= 1 || active.len() <= 1 {
+            active.iter().map(|&ci| scan_class(ci)).collect()
+        } else {
+            parallel_map(active.len(), |i| scan_class(active[i]))
+        };
+        // fold the per-class winners per query: the same lexicographic
+        // (distance, id) min rule as the sequential scan
+        let mut best: Vec<(f32, u32)> = vec![(f32::INFINITY, u32::MAX); b];
+        for bests in &class_bests {
+            for &(bi, (dist, vid)) in bests {
+                lex_min_update(&mut best[bi as usize], dist, vid);
+            }
+        }
+        let mut out = Vec::with_capacity(b);
+        for (bi, pol) in polled.into_iter().enumerate() {
+            let candidates: usize = pol
+                .iter()
+                .map(|&ci| self.partition.members(ci as usize).len())
+                .sum();
+            let per_candidate = if self.binary_sparse {
+                queries[bi].iter().filter(|&&v| v != 0.0).count()
+            } else {
+                self.dim()
+            };
+            ops[bi].scan_ops += (candidates * per_candidate) as u64;
+            ops[bi].searches += 1;
+            out.push(QueryResult {
+                id: best[bi].1,
+                distance: best[bi].0,
+                polled: pol,
+                candidates,
+            });
+        }
+        out
+    }
+
     /// Exhaustive scan over the members of the given classes.
     fn scan_classes(
         &self,
@@ -287,6 +393,36 @@ impl AmIndex {
         let p = policy.choose_p(&scores);
         self.finish_query(x, &scores, p, ops)
     }
+}
+
+/// Test-support fixture shared by the unit/integration suites: a
+/// 4-class index over four 3-d binary vectors where classes 0 and 1 are
+/// **empty** (assignments `[2, 3, 2, 3]`).  The probe `[0, 0, 1]` is
+/// orthogonal to every stored vector, so all class scores tie at 0 and
+/// top-2 selection polls exactly the two empty classes — the
+/// "no candidates" edge case.
+#[doc(hidden)]
+pub fn two_empty_classes_fixture() -> AmIndex {
+    let d = 3;
+    let c2: Vec<f32> = vec![1., 0., 0., 1., 0., 0.];
+    let c3: Vec<f32> = vec![0., 1., 0., 0., 1., 0.];
+    let empty: Vec<f32> = Vec::new();
+    let refs: [&[f32]; 4] =
+        [empty.as_slice(), empty.as_slice(), c2.as_slice(), c3.as_slice()];
+    let bank = MemoryBank::build(d, &refs, crate::memory::StorageRule::Sum)
+        .expect("fixture bank");
+    let data =
+        Dataset::from_flat(d, vec![1., 0., 0., 0., 1., 0., 1., 0., 0., 0., 1., 0.])
+            .expect("fixture data");
+    let params = IndexParams { n_classes: 4, top_p: 2, ..Default::default() };
+    AmIndex::from_parts(
+        params,
+        vec![2, 3, 2, 3],
+        bank.stacked().to_vec(),
+        vec![0, 0, 2, 2],
+        data,
+    )
+    .expect("fixture index")
 }
 
 /// Pooling-retrieval wrapper — the paper's "smart pooling" future-work
@@ -619,6 +755,62 @@ mod tests {
             if i != class {
                 assert!((after[i] - before[i]).abs() < 1e-2);
             }
+        }
+    }
+
+    #[test]
+    fn finish_batch_matches_finish_query_dense() {
+        let (idx, wl) = dense_index(30, 256, 8);
+        let b = 6;
+        let queries: Vec<&[f32]> = (0..b).map(|i| wl.queries.get(i)).collect();
+        let ps: Vec<usize> = vec![1, 2, 3, 8, 8, 5];
+        let mut flat_scores = Vec::new();
+        let mut seq_results = Vec::new();
+        let mut seq_ops = Vec::new();
+        for (bi, x) in queries.iter().enumerate() {
+            let mut throwaway = OpsCounter::new();
+            let scores = idx.score_classes(x, &mut throwaway);
+            let mut o = OpsCounter::new();
+            seq_results.push(idx.finish_query(x, &scores, ps[bi], &mut o));
+            seq_ops.push(o);
+            flat_scores.extend_from_slice(&scores);
+        }
+        let mut batch_ops = vec![OpsCounter::new(); b];
+        let batch_results = idx.finish_batch(&queries, &flat_scores, &ps, &mut batch_ops);
+        assert_eq!(batch_results, seq_results);
+        assert_eq!(batch_ops, seq_ops);
+    }
+
+    #[test]
+    fn finish_batch_handles_empty_classes_and_empty_polls() {
+        // classes 0 and 1 are EMPTY; the probe scores every class 0, so
+        // top-2 selection polls exactly the two empty classes
+        let idx = two_empty_classes_fixture();
+        let probe: Vec<f32> = vec![0., 0., 1.];
+        let mut ops = OpsCounter::new();
+        let scores = idx.score_classes(&probe, &mut ops);
+        assert!(scores.iter().all(|&s| s == 0.0), "scores={scores:?}");
+
+        let queries: Vec<&[f32]> = vec![&probe, &probe];
+        let mut flat_scores = scores.clone();
+        flat_scores.extend_from_slice(&scores);
+        // query 0 polls the two empty classes (ties -> smallest index);
+        // query 1 polls everything (p = q edge)
+        let ps = vec![2usize, 4];
+        let mut batch_ops = vec![OpsCounter::new(); 2];
+        let results = idx.finish_batch(&queries, &flat_scores, &ps, &mut batch_ops);
+        assert_eq!(results[0].polled, vec![0, 1]);
+        assert_eq!(results[0].candidates, 0);
+        assert_eq!(results[0].id, u32::MAX);
+        assert!(results[0].distance.is_infinite());
+        assert_eq!(results[1].candidates, 4);
+        assert_eq!(results[1].polled.len(), 4);
+        // bitwise identical to the sequential path on the same scores
+        for bi in 0..2 {
+            let mut o = OpsCounter::new();
+            let seq = idx.finish_query(&probe, &scores, ps[bi], &mut o);
+            assert_eq!(results[bi], seq);
+            assert_eq!(batch_ops[bi], o);
         }
     }
 

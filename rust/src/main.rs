@@ -255,7 +255,7 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
                 let resp = server
                     .search(wl.queries.get(qi).to_vec(), 0)
                     .expect("search");
-                r.record(resp.neighbor == wl.ground_truth[qi]);
+                r.record(resp.neighbor == Some(wl.ground_truth[qi]));
                 i += streams;
             }
             r
@@ -278,10 +278,11 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     println!("latency:  {}", m.latency.summary());
     println!("service:  {}", m.service.summary());
     println!(
-        "batches={} mean_batch={:.2} ops/search={:.0}",
+        "batches={} mean_batch={:.2} ops/search={:.0} scan_fusion={:.2}",
         m.batches,
         m.mean_batch_size(),
-        m.ops.per_search()
+        m.ops.per_search(),
+        m.scan.fusion_factor()
     );
     server.shutdown();
     Ok(())

@@ -6,5 +6,5 @@ pub mod ops;
 pub mod recall;
 
 pub use latency::LatencyHistogram;
-pub use ops::{CostModel, OpsCounter};
+pub use ops::{BatchScanStats, CostModel, OpsCounter};
 pub use recall::Recall;

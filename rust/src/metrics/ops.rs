@@ -63,6 +63,47 @@ impl OpsCounter {
     }
 }
 
+/// Per-batch accounting of the class-grouped candidate scan.
+///
+/// A batch of `B` queries polls `Σ_b p_b` classes in total, but the
+/// class-major scan brings each *distinct* polled class's member matrix
+/// into cache exactly once per batch.  `polls / class_passes` is the
+/// batching fusion factor: how many per-query slab reads each physical
+/// pass replaced (1.0 = no overlap between queries, up to `B` when every
+/// query polls the same classes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchScanStats {
+    /// Class polls requested across all queries (`Σ_b p_b`).
+    pub polls: u64,
+    /// Distinct class member-matrix passes actually executed.
+    pub class_passes: u64,
+    /// Batches accumulated.
+    pub batches: u64,
+}
+
+impl BatchScanStats {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean per-query class polls a single physical class pass served.
+    pub fn fusion_factor(&self) -> f64 {
+        if self.class_passes == 0 {
+            0.0
+        } else {
+            self.polls as f64 / self.class_passes as f64
+        }
+    }
+
+    /// Merge another accumulator (e.g. from a worker thread).
+    pub fn merge(&mut self, other: &BatchScanStats) {
+        self.polls += other.polls;
+        self.class_passes += other.class_passes;
+        self.batches += other.batches;
+    }
+}
+
 /// Closed-form cost model of the paper, used to cross-check the counters
 /// and to plot the analytic trade-off curves.
 #[derive(Debug, Clone, Copy)]
@@ -148,5 +189,18 @@ mod tests {
         let c = OpsCounter::new();
         assert_eq!(c.per_search(), 0.0);
         assert_eq!(c.relative_to(100), 0.0);
+    }
+
+    #[test]
+    fn batch_scan_stats_fusion() {
+        let mut s = BatchScanStats::new();
+        assert_eq!(s.fusion_factor(), 0.0); // empty is safe
+        // 8 queries x 4 polls each served by 10 distinct class passes
+        s.merge(&BatchScanStats { polls: 32, class_passes: 10, batches: 1 });
+        assert!((s.fusion_factor() - 3.2).abs() < 1e-12);
+        s.merge(&BatchScanStats { polls: 8, class_passes: 8, batches: 1 });
+        assert_eq!(s.polls, 40);
+        assert_eq!(s.class_passes, 18);
+        assert_eq!(s.batches, 2);
     }
 }

@@ -9,6 +9,7 @@
 use crate::error::{Error, Result};
 
 use super::artifacts::Manifest;
+use super::xla;
 
 /// PJRT memory-bank builder with fixed (q, k, d) shapes.
 pub struct PjrtBankBuilder {

@@ -8,6 +8,7 @@
 use crate::error::{Error, Result};
 
 use super::artifacts::Manifest;
+use super::xla;
 
 /// PJRT distance scanner with fixed (k, d, b) shapes.
 pub struct PjrtDistances {
@@ -109,5 +110,38 @@ impl PjrtDistances {
             trimmed.extend_from_slice(&values[start..start + n_members]);
         }
         Ok(trimmed)
+    }
+
+    /// Like [`Self::distances`] but for any number of query rows:
+    /// submits `ceil(m / batch)` executions against the same member
+    /// matrix.  This is the class-major entry point of the batched
+    /// pipeline — all queries that polled one class go through here in
+    /// as few GEMMs as the artifact's fixed batch allows.
+    pub fn distances_chunked(
+        &self,
+        members: &[f32],
+        n_members: usize,
+        queries: &[f32],
+    ) -> Result<Vec<f32>> {
+        let full = self.batch * self.dim;
+        if queries.len() <= full {
+            return self.distances(members, n_members, queries);
+        }
+        if queries.len() % self.dim != 0 {
+            return Err(Error::Shape(format!(
+                "queries len {} not a multiple of d={}",
+                queries.len(),
+                self.dim
+            )));
+        }
+        let m = queries.len() / self.dim;
+        let mut out = Vec::with_capacity(m * n_members);
+        let mut offset = 0;
+        while offset < queries.len() {
+            let end = (offset + full).min(queries.len());
+            out.extend(self.distances(members, n_members, &queries[offset..end])?);
+            offset = end;
+        }
+        Ok(out)
     }
 }

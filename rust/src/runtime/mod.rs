@@ -2,11 +2,17 @@
 //! `python/compile/aot.py`) on the CPU PJRT client and executes them on
 //! the request path.  The [`scorer::NativeScorer`] mirrors the PJRT
 //! scorer exactly and serves as both cross-check and fallback.
+//!
+//! The offline build cannot vendor the `xla` crate, so [`xla`] is a
+//! local API-compatible stub that fails fast at [`cpu_client`]; the
+//! native backend is the production path until the real runtime is
+//! vendored back in.
 
 pub mod artifacts;
 pub mod bank_builder;
 pub mod distances;
 pub mod scorer;
+pub mod xla;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use bank_builder::PjrtBankBuilder;

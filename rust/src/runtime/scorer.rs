@@ -8,6 +8,7 @@ use crate::error::{Error, Result};
 use crate::memory::score as mem_score;
 
 use super::artifacts::Manifest;
+use super::xla;
 
 /// Backend-agnostic batched class scorer.
 ///

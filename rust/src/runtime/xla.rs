@@ -1,0 +1,145 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The real dependency links the XLA/PJRT C++ runtime and cannot be
+//! vendored into this offline build, so this module mirrors exactly the
+//! API surface the crate uses — [`PjRtClient`], [`PjRtLoadedExecutable`],
+//! [`PjRtBuffer`], [`Literal`], [`HloModuleProto`], [`XlaComputation`]
+//! and [`Error`] — and fails fast at the single entry point,
+//! [`PjRtClient::cpu`], with an actionable error.  Every PJRT code path
+//! (scorer, candidate scanner, bank builder) keeps compiling and stays
+//! covered by the shape/validation tests; the execution-dependent
+//! integration tests in `rust/tests/runtime_pjrt.rs` skip themselves when
+//! no artifacts are present, which is always the case without the real
+//! runtime.
+//!
+//! Swapping the real crate back in is mechanical: delete this module,
+//! add the `xla` dependency, and replace the `use super::xla;` /
+//! `use crate::runtime::xla;` imports with `use xla;`.
+
+/// Mirrors `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT runtime unavailable: this is the offline build without the \
+         `xla` crate; use the native backend (`--backend native`)"
+            .into(),
+    ))
+}
+
+/// Mirrors `xla::PjRtClient` (CPU platform).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real call creates the process-wide CPU PJRT client; the stub
+    /// fails fast so no downstream PJRT object can ever be constructed.
+    pub fn cpu() -> Result<Self, Error> {
+        unavailable()
+    }
+
+    /// Compile an XLA computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    /// Upload a host f32 buffer as a device buffer with the given shape.
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<()>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::HloModuleProto`.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::XlaComputation`.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Mirrors `xla::PjRtLoadedExecutable`.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed input buffers; returns per-device result
+    /// buffers (`result[device][output]`).
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::PjRtBuffer`.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the device buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::Literal`.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    /// Unwrap a 1-tuple literal (AOT graphs lower with `return_tuple`).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Copy out the elements.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("native"), "{msg}");
+        assert!(msg.contains("offline"), "{msg}");
+    }
+
+    #[test]
+    fn error_converts_to_crate_runtime_error() {
+        let e: crate::error::Error = Error("boom".into()).into();
+        assert!(matches!(e, crate::error::Error::Runtime(_)));
+        assert!(e.to_string().contains("boom"));
+    }
+}

@@ -29,6 +29,78 @@ pub fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// `sq_l2` with threshold-based early abandoning, used by the batched
+/// class-grouped candidate scan: the 4-lane accumulation is *identical*
+/// to [`sq_l2`] (same operations in the same order), probed every 32
+/// coordinates.  Squared differences are non-negative, so every partial
+/// lane sum is a lower bound on the final distance; a probe exceeding
+/// `bound` proves the full distance does too and the candidate can be
+/// abandoned without changing any reported value bitwise.
+///
+/// Returns `None` iff the distance is strictly greater than `bound`
+/// (ties survive, preserving the scan's `dist == best && id < best_id`
+/// tie-break), otherwise `Some(d)` with `d` bitwise identical to
+/// `sq_l2(a, b)`.
+#[inline]
+fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let mut i = 0usize;
+    while i < chunks {
+        let stop = (i + 8).min(chunks);
+        while i < stop {
+            let j = i * 4;
+            let d0 = a[j] - b[j];
+            let d1 = a[j + 1] - b[j + 1];
+            let d2 = a[j + 2] - b[j + 2];
+            let d3 = a[j + 3] - b[j + 3];
+            s0 += d0 * d0;
+            s1 += d1 * d1;
+            s2 += d2 * d2;
+            s3 += d3 * d3;
+            i += 1;
+        }
+        // probe only reads the lanes; accumulation state is untouched
+        if s0 + s1 + s2 + s3 > bound {
+            return None;
+        }
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    if s > bound {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// Metric distance with early abandoning against `bound`.
+///
+/// Contract: returns `None` iff `metric.distance(a, b) > bound`
+/// (strictly), otherwise `Some(d)` with `d` bitwise identical to
+/// [`Metric::distance`].  Squared-L2 abandons mid-accumulation; the
+/// other metrics are not monotone in their partial sums and compute
+/// fully before comparing.
+#[inline]
+pub fn distance_pruned(metric: Metric, a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    match metric {
+        Metric::SqL2 => sq_l2_pruned(a, b, bound),
+        _ => {
+            let d = metric.distance(a, b);
+            if d > bound {
+                None
+            } else {
+                Some(d)
+            }
+        }
+    }
+}
+
 /// Dot product (similarity for ±1 / normalized data).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -140,6 +212,41 @@ mod tests {
     fn hamming_counts_diffs() {
         assert_eq!(hamming(&[1., -1., 1.], &[1., 1., -1.]), 2);
         assert_eq!(hamming(&[0., 1.], &[0., 1.]), 0);
+    }
+
+    #[test]
+    fn pruned_distance_is_bitwise_identical_when_kept() {
+        use crate::data::rng::Rng;
+        let mut rng = Rng::new(77);
+        for n in [1usize, 4, 7, 16, 31, 32, 33, 64, 127, 128, 369] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let full = sq_l2(&a, &b);
+            // unbounded: always kept, bitwise equal
+            let kept = sq_l2_pruned(&a, &b, f32::INFINITY).unwrap();
+            assert_eq!(kept.to_bits(), full.to_bits(), "n={n}");
+            // bound exactly at the distance: ties survive
+            assert_eq!(sq_l2_pruned(&a, &b, full), Some(full), "n={n}");
+            // bound strictly below: abandoned
+            if full > 0.0 {
+                assert_eq!(sq_l2_pruned(&a, &b, full * 0.999), None, "n={n}");
+            }
+            for metric in [Metric::SqL2, Metric::NegDot, Metric::Hamming] {
+                let d = metric.distance(&a, &b);
+                assert_eq!(distance_pruned(metric, &a, &b, f32::INFINITY), Some(d));
+                assert_eq!(distance_pruned(metric, &a, &b, d), Some(d));
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_distance_abandons_early_on_long_vectors() {
+        // a huge difference in the first coordinates must trip the probe
+        let mut a = vec![0f32; 512];
+        let b = vec![0f32; 512];
+        a[0] = 1000.0;
+        assert_eq!(sq_l2_pruned(&a, &b, 10.0), None);
+        assert_eq!(sq_l2_pruned(&a, &b, 1e7), Some(1e6));
     }
 
     #[test]

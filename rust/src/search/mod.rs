@@ -4,6 +4,6 @@ pub mod distance;
 pub mod policy;
 pub mod topk;
 
-pub use distance::Metric;
+pub use distance::{distance_pruned, Metric};
 pub use policy::AdaptivePolicy;
-pub use topk::{top_p_largest, TopK};
+pub use topk::{invert_polled, lex_min_update, top_p_largest, TopK};

@@ -27,6 +27,10 @@ impl AdaptivePolicy {
     /// `[min_p, max_p]`.  Scores are shifted by their minimum so the
     /// mass criterion is invariant to the bilinear form's offset (dense
     /// ±1 scores can be large and nearly uniform).
+    ///
+    /// A perfectly uniform score vector (all shifted scores zero) is the
+    /// *most* ambiguous query — no class stands out at all — so the
+    /// degenerate case polls the widest, `max_p`, not `min_p`.
     pub fn choose_p(&self, scores: &[f32]) -> usize {
         let q = scores.len();
         if q == 0 {
@@ -38,7 +42,8 @@ impl AdaptivePolicy {
         sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
         let total: f64 = sorted.iter().sum();
         if total <= 0.0 {
-            return self.min_p.clamp(1, q);
+            // uniform scores: maximally ambiguous -> poll widest
+            return self.max_p.clamp(1, q);
         }
         let target = self.mass.clamp(0.0, 1.0) * total;
         let mut acc = 0.0;
@@ -68,10 +73,13 @@ mod tests {
     #[test]
     fn uniform_scores_poll_wide() {
         let pol = AdaptivePolicy { min_p: 1, max_p: 8, mass: 0.5 };
-        // shifted scores all equal -> need half the classes, capped at max
+        // perfectly uniform scores: no class stands out, the most
+        // ambiguous case -> the degenerate branch must poll max_p wide
         let scores = vec![10.0f32; 16];
-        // all shifted to 0 -> total = 0 -> min_p
-        assert_eq!(pol.choose_p(&scores), 1);
+        assert_eq!(pol.choose_p(&scores), 8);
+        // max_p wider than q clamps to q
+        let narrow = vec![3.0f32; 4];
+        assert_eq!(pol.choose_p(&narrow), 4);
         let scores: Vec<f32> = (0..16).map(|i| 10.0 + (i % 2) as f32).collect();
         let p = pol.choose_p(&scores);
         assert!(p > 1 && p <= 8, "p={p}");
@@ -101,7 +109,9 @@ mod tests {
     fn empty_and_degenerate() {
         let pol = AdaptivePolicy::default();
         assert_eq!(pol.choose_p(&[]), 1);
+        // a single class is uniform by definition: max_p clamps to q = 1
         assert_eq!(pol.choose_p(&[5.0]), 1);
-        assert_eq!(pol.choose_p(&[0.0, 0.0]), 1);
+        // two identical scores: ambiguous -> max_p clamped to q = 2
+        assert_eq!(pol.choose_p(&[0.0, 0.0]), 2);
     }
 }

@@ -1,15 +1,34 @@
 //! Bounded top-k selection.
 //!
-//! `TopK` keeps the k smallest-keyed items seen so far (a bounded
-//! max-heap); used for candidate-scan results (k smallest distances) and,
-//! with negated keys, top-p class selection.
+//! `TopK` keeps the k smallest items seen so far under the lexicographic
+//! `(key, id)` order (a bounded max-heap); used for candidate-scan
+//! results (k smallest distances), per-query accumulators in the batched
+//! class-grouped scan, and, with negated keys, top-p class selection.
+//!
+//! NaN keys sort last: they are never admitted to the heap, so a NaN
+//! distance or score can never be selected and never poisons the
+//! comparisons (`into_sorted` cannot panic on NaN).
 
-/// Bounded "k smallest" selector.
+use std::cmp::Ordering;
+
+/// Bounded "k smallest by `(key, id)`" selector.
 #[derive(Debug, Clone)]
 pub struct TopK {
     k: usize,
-    /// max-heap on key, so the root is the current worst of the best-k
+    /// max-heap on `(key, id)`, so the root is the current worst of the
+    /// best-k
     heap: Vec<(f32, u32)>,
+}
+
+/// Lexicographic `(key, id)` greater-than; keys never contain NaN inside
+/// the heap (NaN is rejected at [`TopK::push`]).
+#[inline]
+fn lex_gt(a: (f32, u32), b: (f32, u32)) -> bool {
+    match a.0.partial_cmp(&b.0) {
+        Some(Ordering::Greater) => true,
+        Some(Ordering::Equal) => a.1 > b.1,
+        _ => false,
+    }
 }
 
 impl TopK {
@@ -29,7 +48,8 @@ impl TopK {
         self.heap.is_empty()
     }
 
-    /// Largest kept key (the current cutoff), if full.
+    /// Largest kept key (the current cutoff), if full.  Used as the
+    /// pruning threshold by the batched candidate scan.
     pub fn threshold(&self) -> Option<f32> {
         if self.heap.len() == self.k {
             Some(self.heap[0].0)
@@ -38,13 +58,16 @@ impl TopK {
         }
     }
 
-    /// Offer an item.
+    /// Offer an item.  NaN keys sort last and are never kept.
     #[inline]
     pub fn push(&mut self, key: f32, id: u32) {
+        if key.is_nan() {
+            return;
+        }
         if self.heap.len() < self.k {
             self.heap.push((key, id));
             self.sift_up(self.heap.len() - 1);
-        } else if key < self.heap[0].0 {
+        } else if lex_gt(self.heap[0], (key, id)) {
             self.heap[0] = (key, id);
             self.sift_down(0);
         }
@@ -53,7 +76,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].0 > self.heap[parent].0 {
+            if lex_gt(self.heap[i], self.heap[parent]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -67,10 +90,10 @@ impl TopK {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < n && self.heap[l].0 > self.heap[largest].0 {
+            if l < n && lex_gt(self.heap[l], self.heap[largest]) {
                 largest = l;
             }
-            if r < n && self.heap[r].0 > self.heap[largest].0 {
+            if r < n && lex_gt(self.heap[r], self.heap[largest]) {
                 largest = r;
             }
             if largest == i {
@@ -81,23 +104,52 @@ impl TopK {
         }
     }
 
-    /// Consume into `(key, id)` pairs sorted ascending by key (ties by id
-    /// for determinism).
+    /// Consume into `(key, id)` pairs sorted ascending by `(key, id)`
+    /// (ties by id for determinism).  Never panics: NaN keys cannot enter
+    /// the heap, and the comparator is total regardless.
     pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
         self.heap
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         self.heap
     }
 }
 
 /// Select the indices of the `p` largest values (top-p classes by score),
 /// ordered from largest to smallest.  Ties broken by smaller index.
+/// NaN values sort last: a NaN-scored class is never selected, and fewer
+/// than `p` indices are returned when NaN leaves too few candidates.
 pub fn top_p_largest(values: &[f32], p: usize) -> Vec<u32> {
     let mut sel = TopK::new(p.min(values.len()).max(1));
     for (i, &v) in values.iter().enumerate() {
         sel.push(-v, i as u32); // negate: TopK keeps smallest
     }
     sel.into_sorted().into_iter().map(|(_, i)| i).collect()
+}
+
+/// In-place lexicographic `(key, id)` minimum update — the candidate
+/// scans' shared selection rule (strictly smaller key wins; equal keys
+/// resolve to the smaller id; NaN keys never win).  Both the native
+/// class-grouped scan and the PJRT scan fold through this exact
+/// function, which is what keeps their tie-breaking identical.
+#[inline]
+pub fn lex_min_update(best: &mut (f32, u32), key: f32, id: u32) {
+    if key < best.0 || (key == best.0 && id < best.1) {
+        *best = (key, id);
+    }
+}
+
+/// Invert a per-query polled-class map into (class → querying batch
+/// members): `result[c]` lists the batch indices whose polled set
+/// contains class `c`, in batch order.  The pivot of the class-grouped
+/// candidate scan.
+pub fn invert_polled(polled: &[Vec<u32>], n_classes: usize) -> Vec<Vec<u32>> {
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); n_classes];
+    for (bi, pol) in polled.iter().enumerate() {
+        for &ci in pol {
+            by_class[ci as usize].push(bi as u32);
+        }
+    }
+    by_class
 }
 
 #[cfg(test)]
@@ -138,6 +190,23 @@ mod tests {
     }
 
     #[test]
+    fn tie_keys_keep_smaller_ids() {
+        // exact (key, id) lexicographic selection, important for the
+        // batched scan's TopK(1) accumulators: equal keys resolve to the
+        // smaller id no matter the push order
+        let mut t = TopK::new(1);
+        t.push(2.0, 7);
+        t.push(2.0, 3);
+        t.push(2.0, 5);
+        assert_eq!(t.into_sorted(), vec![(2.0, 3)]);
+        let mut t = TopK::new(2);
+        for &(k, id) in &[(5.0f32, 9u32), (5.0, 1), (5.0, 4), (6.0, 0)] {
+            t.push(k, id);
+        }
+        assert_eq!(t.into_sorted(), vec![(5.0, 1), (5.0, 4)]);
+    }
+
+    #[test]
     fn threshold_only_when_full() {
         let mut t = TopK::new(2);
         assert_eq!(t.threshold(), None);
@@ -156,6 +225,57 @@ mod tests {
         assert_eq!(top_p_largest(&scores, 1), vec![1]);
         // p larger than len clamps
         assert_eq!(top_p_largest(&scores, 10).len(), 5);
+    }
+
+    #[test]
+    fn nan_keys_are_never_selected_and_never_panic() {
+        // regression: partial_cmp(...).unwrap() used to panic whenever a
+        // NaN distance/score entered the heap
+        let mut t = TopK::new(3);
+        for (i, &v) in [5.0f32, f32::NAN, 1.0, f32::NAN, 3.0].iter().enumerate() {
+            t.push(v, i as u32);
+        }
+        let got = t.into_sorted(); // must not panic
+        assert_eq!(got, vec![(1.0, 2), (3.0, 4), (5.0, 0)]);
+
+        // NaN-scored classes are skipped by top-p selection
+        let scores = [f32::NAN, 2.0, f32::NAN, 1.0];
+        assert_eq!(top_p_largest(&scores, 3), vec![1, 3]);
+
+        // all-NaN input selects nothing (and must not panic)
+        let all_nan = [f32::NAN; 4];
+        assert!(top_p_largest(&all_nan, 2).is_empty());
+
+        // a NaN pushed into a full heap must not evict anything
+        let mut t = TopK::new(1);
+        t.push(2.0, 0);
+        t.push(f32::NAN, 1);
+        assert_eq!(t.into_sorted(), vec![(2.0, 0)]);
+    }
+
+    #[test]
+    fn lex_min_update_matches_scan_rule() {
+        let mut best = (f32::INFINITY, u32::MAX);
+        lex_min_update(&mut best, 3.0, 7);
+        assert_eq!(best, (3.0, 7));
+        lex_min_update(&mut best, 3.0, 9); // larger id on tie: no change
+        assert_eq!(best, (3.0, 7));
+        lex_min_update(&mut best, 3.0, 2); // smaller id on tie: wins
+        assert_eq!(best, (3.0, 2));
+        lex_min_update(&mut best, f32::NAN, 0); // NaN never wins
+        assert_eq!(best, (3.0, 2));
+        lex_min_update(&mut best, 1.0, 5);
+        assert_eq!(best, (1.0, 5));
+    }
+
+    #[test]
+    fn invert_polled_builds_class_major_map() {
+        let polled = vec![vec![0u32, 2], vec![2], vec![], vec![1, 2, 0]];
+        let by_class = invert_polled(&polled, 4);
+        assert_eq!(by_class[0], vec![0, 3]);
+        assert_eq!(by_class[1], vec![3]);
+        assert_eq!(by_class[2], vec![0, 1, 3]);
+        assert!(by_class[3].is_empty());
     }
 
     #[test]

@@ -43,10 +43,10 @@ fn serves_concurrent_clients_correctly() {
             let qi = (ci * per_client + j) % wl.queries.len();
             // p = q (full poll): response must be the exact stored copy
             let resp = server.search(wl.queries.get(qi).to_vec(), 8).unwrap();
-            if resp.neighbor == wl.ground_truth[qi] {
+            if resp.neighbor == Some(wl.ground_truth[qi]) {
                 hits += 1;
             } else {
-                eprintln!("MISS ci={ci} j={j} qi={qi} got={} want={} dist={} id={} polled={:?}",
+                eprintln!("MISS ci={ci} j={j} qi={qi} got={:?} want={} dist={} id={} polled={:?}",
                     resp.neighbor, wl.ground_truth[qi], resp.distance, resp.id, resp.polled);
             }
             assert_eq!(resp.distance, 0.0);
@@ -111,6 +111,26 @@ fn zero_top_p_uses_index_default() {
 }
 
 #[test]
+fn no_candidates_surfaces_as_none_through_the_server() {
+    // classes 0 and 1 are empty; the probe ties every class score at 0
+    // so top-2 polls exactly the two empty classes -> the server must
+    // deliver a proper "no candidates" response (the old protocol leaked
+    // neighbor = u32::MAX, distance = inf)
+    let index = amsearch::index::am_index::two_empty_classes_fixture();
+    let server =
+        SearchServer::start(native_factory(Arc::new(index)), CoordinatorConfig::default())
+            .unwrap();
+    let resp = server.search(vec![0., 0., 1.], 2).unwrap();
+    assert_eq!(resp.neighbor, None);
+    assert_eq!(resp.candidates, 0);
+    assert!(resp.distance.is_infinite());
+    // a full poll still reaches the stored vectors
+    let resp = server.search(vec![0., 0., 1.], 4).unwrap();
+    assert_eq!(resp.neighbor, Some(0));
+    server.shutdown();
+}
+
+#[test]
 fn shutdown_then_search_fails_cleanly() {
     let (index, wl) = build_index(5, 32, 128, 4);
     let server =
@@ -157,7 +177,7 @@ fn pjrt_backend_serves_if_artifacts_present() {
     let hits: Vec<bool> = amsearch::util::concurrent_map(24, 8, |i| {
         let qi = i % wl.queries.len();
         let resp = server.search(wl.queries.get(qi).to_vec(), 64).unwrap();
-        resp.neighbor == wl.ground_truth[qi]
+        resp.neighbor == Some(wl.ground_truth[qi])
     });
     assert!(hits.iter().all(|&h| h), "full poll through PJRT must be exact");
     server.shutdown();

@@ -199,6 +199,79 @@ fn prop_ops_match_cost_model() {
     });
 }
 
+/// `finish_batch` over a batch of B queries is bitwise-identical to B
+/// independent `finish_query` calls — results (id, distance, polled
+/// order, candidate counts) AND per-query op accounting — across dense
+/// ±1 and sparse 0-1 workloads, random poll depths including p = q, and
+/// partitions that may contain empty classes (greedy with a tight cap).
+#[test]
+fn prop_finish_batch_matches_sequential() {
+    use amsearch::partition::Allocation;
+    cases(25, |rng| {
+        let dense = rng.bernoulli(0.5);
+        let d = 8 + rng.below(40) as usize;
+        let q = 1 + rng.below(8) as usize;
+        let n = q + rng.below(150) as usize;
+        let wl = if dense {
+            synthetic::dense_workload(d, n, 8, QueryModel::Exact, rng)
+        } else {
+            synthetic::sparse_workload(
+                SparseSpec { dim: d, ones: 4.0 },
+                n,
+                8,
+                QueryModel::Exact,
+                rng,
+            )
+        };
+        // greedy with a tight cap produces unequal class sizes — the
+        // batch path must agree there too (fully empty classes are
+        // covered by `finish_batch_handles_empty_classes_and_empty_polls`)
+        let allocation =
+            if rng.bernoulli(0.3) { Allocation::Greedy } else { Allocation::Random };
+        let params = IndexParams {
+            n_classes: q,
+            allocation,
+            greedy_cap_factor: if allocation == Allocation::Greedy {
+                Some(1.0 + rng.uniform())
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        let index = AmIndex::build(wl.base.clone(), params, rng).unwrap();
+        let b = 1 + rng.below(6) as usize;
+        let queries: Vec<&[f32]> =
+            (0..b).map(|i| wl.queries.get(i % wl.queries.len())).collect();
+        let mut ps: Vec<usize> =
+            (0..b).map(|_| 1 + rng.below(q as u64) as usize).collect();
+        ps[b - 1] = q; // always exercise the p = q edge
+
+        // the same per-query scores feed both paths (the scan-stage
+        // equivalence is what this property pins down)
+        let mut flat_scores = Vec::with_capacity(b * q);
+        let mut seq_results = Vec::new();
+        let mut seq_ops = Vec::new();
+        for (bi, x) in queries.iter().enumerate() {
+            let mut throwaway = OpsCounter::new();
+            let scores = index.score_classes(x, &mut throwaway);
+            let mut o = OpsCounter::new();
+            seq_results.push(index.finish_query(x, &scores, ps[bi], &mut o));
+            seq_ops.push(o);
+            flat_scores.extend_from_slice(&scores);
+        }
+        let mut batch_ops = vec![OpsCounter::new(); b];
+        let batch_results =
+            index.finish_batch(&queries, &flat_scores, &ps, &mut batch_ops);
+        assert_eq!(batch_results, seq_results, "results diverged");
+        assert_eq!(batch_ops, seq_ops, "op accounting diverged");
+        // f32 equality above is not approximate: require bit equality of
+        // the reported distances too
+        for (a, s) in batch_results.iter().zip(&seq_results) {
+            assert_eq!(a.distance.to_bits(), s.distance.to_bits());
+        }
+    });
+}
+
 /// Add/remove on OuterProductMemory is an exact inverse for random
 /// pattern sequences (online re-allocation invariant).
 #[test]
