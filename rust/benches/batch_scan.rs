@@ -5,10 +5,16 @@
 //!
 //! Stage isolation: class scores are precomputed once per batch outside
 //! the timed region, so both sides time exactly select + scan.  The
-//! `engine` section then times the full pipeline (score + select +
-//! scan) end to end through `Engine::serve_batch`.
+//! sweep covers the batch dimension B (at k = 1) and the new neighbor
+//! dimension k (at fixed B), so the fusion-factor win is measured per
+//! k, not assumed.  The `engine` section then times the full pipeline
+//! (score + select + scan) end to end through `Engine::serve_batch`.
+//!
+//! Set `AMSEARCH_BENCH_JSON=BENCH_batch_scan.json` to also emit the
+//! measurements as a machine-readable artifact (used by CI).
 
 #[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
 mod harness;
 
 use std::sync::Arc;
@@ -18,7 +24,7 @@ use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
 use amsearch::data::rng::Rng;
 use amsearch::index::{AmIndex, IndexParams};
 use amsearch::metrics::OpsCounter;
-use harness::{bench, budget, section};
+use harness::{bench, budget, section, write_json_if_requested, Measurement};
 
 fn main() {
     let mut rng = Rng::new(31);
@@ -32,12 +38,18 @@ fn main() {
         "workload: clustered n={n} d={d} q={q} k={} p={p} (queries share hot classes)",
         n / q
     );
+    let mut all: Vec<Measurement> = Vec::new();
 
+    // (B, k) cells: the B sweep at k=1 (the pre-k-NN comparison) plus a
+    // k sweep at B=32 (the cost of keeping more neighbors per query)
+    let cells: &[(usize, usize)] =
+        &[(1, 1), (8, 1), (32, 1), (64, 1), (32, 10), (32, 100)];
     section("scan stage: per-query finish_query vs class-grouped finish_batch");
-    for &b in &[1usize, 8, 32, 64] {
+    for &(b, k) in cells {
         let queries: Vec<&[f32]> =
             (0..b).map(|i| wl.queries.get(i % n_queries)).collect();
         let ps = vec![p; b];
+        let ks = vec![k; b];
         // scores precomputed outside the timed region
         let mut throwaway = OpsCounter::new();
         let mut flat_scores = Vec::with_capacity(b * q);
@@ -45,39 +57,44 @@ fn main() {
             flat_scores.extend_from_slice(&index.score_classes(x, &mut throwaway));
         }
 
-        let m_seq = bench(&format!("per-query scan      B={b:<3}"), budget(), || {
-            let mut total = 0usize;
-            for (bi, x) in queries.iter().enumerate() {
-                let mut ops = OpsCounter::new();
-                let r = index.finish_query(
-                    x,
-                    &flat_scores[bi * q..(bi + 1) * q],
-                    p,
-                    &mut ops,
-                );
-                total += r.candidates;
-            }
-            std::hint::black_box(total);
-        });
-        let m_batch = bench(&format!("class-grouped scan  B={b:<3}"), budget(), || {
-            let mut ops = vec![OpsCounter::new(); b];
-            let rs = index.finish_batch(&queries, &flat_scores, &ps, &mut ops);
-            std::hint::black_box(rs.len());
-        });
+        let m_seq =
+            bench(&format!("per-query scan      B={b:<3} k={k:<3}"), budget(), || {
+                let mut total = 0usize;
+                for (bi, x) in queries.iter().enumerate() {
+                    let mut ops = OpsCounter::new();
+                    let r = index.finish_query(
+                        x,
+                        &flat_scores[bi * q..(bi + 1) * q],
+                        p,
+                        k,
+                        &mut ops,
+                    );
+                    total += r.candidates;
+                }
+                std::hint::black_box(total);
+            });
+        let m_batch =
+            bench(&format!("class-grouped scan  B={b:<3} k={k:<3}"), budget(), || {
+                let mut ops = vec![OpsCounter::new(); b];
+                let rs = index.finish_batch(&queries, &flat_scores, &ps, &ks, &mut ops);
+                std::hint::black_box(rs.len());
+            });
         m_seq.report();
         m_batch.report();
         println!(
-            "  -> class-grouped speedup at B={b}: {:.2}x",
+            "  -> class-grouped speedup at B={b} k={k}: {:.2}x",
             m_seq.mean_ns / m_batch.mean_ns
         );
+        all.push(m_seq);
+        all.push(m_batch);
     }
 
     section("end-to-end engine pipeline (score + select + scan)");
     let engine = Engine::native(Arc::new(index)).unwrap();
-    for &b in &[1usize, 8, 32] {
-        let queries: Vec<(&[f32], usize)> =
-            (0..b).map(|i| (wl.queries.get(i % n_queries), p)).collect();
-        let m = bench(&format!("engine.serve_batch  B={b:<3}"), budget(), || {
+    for &(b, k) in &[(1usize, 1usize), (8, 1), (32, 1), (32, 10)] {
+        let queries: Vec<(&[f32], usize, usize)> =
+            (0..b).map(|i| (wl.queries.get(i % n_queries), p, k)).collect();
+        let m = bench(&format!("engine.serve_batch  B={b:<3} k={k:<3}"), budget(), || {
             std::hint::black_box(engine.serve_batch(&queries).unwrap());
         });
         m.report();
@@ -89,5 +106,8 @@ fn main() {
             out.scan.polls,
             out.scan.class_passes
         );
+        all.push(m);
     }
+
+    write_json_if_requested(&all);
 }

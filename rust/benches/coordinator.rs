@@ -3,6 +3,7 @@
 //! the bottleneck — DESIGN.md §8 budgets it < 10% of query cost at B=8).
 
 #[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
 mod harness;
 
 use std::sync::Arc;
@@ -27,12 +28,12 @@ fn main() {
     let mut qi = 0usize;
     let m_direct1 = bench("engine.serve_batch B=1", budget(), || {
         let q = wl.queries.get(qi % 64);
-        std::hint::black_box(engine.serve_batch(&[(q, 2usize)]).unwrap());
+        std::hint::black_box(engine.serve_batch(&[(q, 2usize, 1usize)]).unwrap());
         qi += 1;
     });
     m_direct1.report();
-    let queries8: Vec<(&[f32], usize)> =
-        (0..8).map(|i| (wl.queries.get(i), 2usize)).collect();
+    let queries8: Vec<(&[f32], usize, usize)> =
+        (0..8).map(|i| (wl.queries.get(i), 2usize, 1usize)).collect();
     let m_direct8 = bench("engine.serve_batch B=8", budget(), || {
         std::hint::black_box(engine.serve_batch(&queries8).unwrap());
     });
@@ -63,7 +64,7 @@ fn main() {
         let t = Instant::now();
         concurrent_map(total, clients, |i| {
             let q = wl.queries.get(i % 64).to_vec();
-            server.search(q, 0).unwrap()
+            server.search(q, 0, 0).unwrap()
         });
         let secs = t.elapsed().as_secs_f64();
         let m = server.metrics();
@@ -95,7 +96,7 @@ fn main() {
         let mut qj = 0usize;
         let m_coord = bench("coordinator round-trip B=1", budget(), || {
             let q = wl.queries.get(qj % 64).to_vec();
-            std::hint::black_box(server.search(q, 0).unwrap());
+            std::hint::black_box(server.search(q, 0, 0).unwrap());
             qj += 1;
         });
         m_coord.report();

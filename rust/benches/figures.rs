@@ -4,6 +4,7 @@
 //! table/figure code path (full-scale data comes from `amsearch eval`).
 
 #[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
 mod harness;
 
 use amsearch::eval::{run_figure, EvalOptions, ALL_FIGURES};

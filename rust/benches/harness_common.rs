@@ -33,6 +33,7 @@ impl Measurement {
     }
 
     /// Report with an ops-derived throughput column.
+    #[allow(dead_code)] // each bench target includes this module à la carte
     pub fn report_throughput(&self, unit: &str, per_iter: f64) {
         let per_sec = per_iter / (self.mean_ns / 1e9);
         println!(
@@ -91,4 +92,29 @@ pub fn budget() -> Duration {
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Write measurements as a JSON array (one object per measurement) to
+/// the path named by the `AMSEARCH_BENCH_JSON` env var; no-op when the
+/// variable is unset.  This is how CI captures a bench trajectory as an
+/// uploadable artifact without parsing console output.
+#[allow(dead_code)] // each bench target includes this module à la carte
+pub fn write_json_if_requested(measurements: &[Measurement]) {
+    let Ok(path) = std::env::var("AMSEARCH_BENCH_JSON") else {
+        return;
+    };
+    let mut out = String::from("[\n");
+    for (i, m) in measurements.iter().enumerate() {
+        let sep = if i + 1 == measurements.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  {{\"name\": {:?}, \"iters\": {}, \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}}}{sep}\n",
+            m.name, m.iters, m.mean_ns, m.p50_ns, m.p95_ns
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("\nwrote {} measurements to {path}", measurements.len()),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

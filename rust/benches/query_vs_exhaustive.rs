@@ -4,6 +4,7 @@
 //! `(d²q + pkd) / (nd)` — shapes should agree within ~2x.
 
 #[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
 mod harness;
 
 use amsearch::baseline::Exhaustive;

@@ -5,6 +5,7 @@
 //! bank is read once per batch).
 
 #[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
 mod harness;
 
 use amsearch::data::rng::Rng;

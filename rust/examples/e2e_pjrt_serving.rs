@@ -55,8 +55,8 @@ fn run_backend(
     let started = Instant::now();
     let results = concurrent_map(total, 16, |i| {
         let qi = i % wl.queries.len();
-        let resp = server.search(wl.queries.get(qi).to_vec(), 0).expect("search");
-        (qi, resp.neighbor)
+        let resp = server.search(wl.queries.get(qi).to_vec(), 0, 0).expect("search");
+        (qi, resp.neighbor())
     });
     let elapsed = started.elapsed();
     let mut recall = Recall::new();

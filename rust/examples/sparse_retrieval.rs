@@ -34,7 +34,7 @@ fn main() -> amsearch::Result<()> {
     let mut recall = Recall::new();
     for (qi, &gt) in wl.ground_truth.iter().enumerate() {
         let r = index.query(wl.queries.get(qi), 1, &mut ops);
-        recall.record(r.id == gt);
+        recall.record(r.id() == gt);
     }
     let model = CostModel { effective_dim: c as u64, q: q as u64, k: k as u64, n: n as u64 };
     println!("\nexact queries (Thm 3.1):");

@@ -4,7 +4,7 @@
 
 use crate::data::dataset::Dataset;
 use crate::metrics::OpsCounter;
-use crate::search::Metric;
+use crate::search::{distance_pruned, one_nn, Metric, Neighbor, TopK};
 
 /// Brute-force searcher.
 #[derive(Debug, Clone)]
@@ -17,7 +17,7 @@ pub struct Exhaustive {
 impl Exhaustive {
     /// Wrap a database.
     pub fn new(data: Dataset, metric: Metric) -> Self {
-        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        let binary_sparse = data.is_binary_sparse();
         Exhaustive { data, metric, binary_sparse }
     }
 
@@ -44,18 +44,21 @@ impl Exhaustive {
 
     /// Exact nearest neighbor of `x`. Ties resolve to the smaller id.
     pub fn query(&self, x: &[f32], ops: &mut OpsCounter) -> (u32, f32) {
-        let mut best = f32::INFINITY;
-        let mut best_id = u32::MAX;
+        one_nn(&self.query_k(x, 1, ops))
+    }
+
+    /// Exact `k` nearest neighbors of `x`, sorted ascending by
+    /// `(distance, id)` — the ground truth of every recall@k evaluation.
+    pub fn query_k(&self, x: &[f32], k: usize, ops: &mut OpsCounter) -> Vec<Neighbor> {
+        let mut acc = TopK::new(k.max(1));
         for (i, v) in self.data.iter().enumerate() {
-            let dist = self.metric.distance(x, v);
-            if dist < best {
-                best = dist;
-                best_id = i as u32;
+            if let Some(dist) = distance_pruned(self.metric, x, v, acc.bound()) {
+                acc.push(dist, i as u32);
             }
         }
         ops.scan_ops += self.reference_ops(x);
         ops.searches += 1;
-        (best_id, best)
+        acc.into_neighbors()
     }
 }
 
@@ -98,5 +101,29 @@ mod tests {
         let mut ops = OpsCounter::new();
         let (id, _) = ex.query(&[1., 0.], &mut ops);
         assert_eq!(id, 0);
+    }
+
+    #[test]
+    fn query_k_matches_full_sort() {
+        let mut rng = Rng::new(3);
+        let ds = synthetic::dense_patterns(8, 60, &mut rng);
+        let ex = Exhaustive::new(ds.clone(), Metric::SqL2);
+        let mut ops = OpsCounter::new();
+        let x = ds.get(7);
+        let got = ex.query_k(x, 5, &mut ops);
+        // reference: sort all (distance, id) pairs and take the prefix
+        let mut all: Vec<(f32, u32)> = (0..ds.len())
+            .map(|i| (Metric::SqL2.distance(x, ds.get(i)), i as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (n, &(d, id)) in got.iter().zip(&all) {
+            assert_eq!((n.id, n.distance), (id, d));
+        }
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].id, 7);
+        assert_eq!(got[0].distance, 0.0);
+        // k > n truncates
+        let all_of_them = ex.query_k(x, 100, &mut ops);
+        assert_eq!(all_of_them.len(), 60);
     }
 }

@@ -12,7 +12,7 @@ use crate::data::rng::Rng;
 use crate::error::Result;
 use crate::index::{AmIndex, IndexParams};
 use crate::metrics::OpsCounter;
-use crate::search::{top_p_largest, TopK};
+use crate::search::{one_nn, top_p_largest, Neighbor, TopK};
 
 use super::rs_anchors::RsAnchors;
 
@@ -58,24 +58,38 @@ impl HybridIndex {
         &self.am
     }
 
-    /// Query: AM scores -> top-`p` classes -> RS search inside each.
+    /// 1-NN query: AM scores -> top-`p` classes -> RS search inside each.
     pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> (u32, f32) {
+        one_nn(&self.query_k(x, p, 1, ops))
+    }
+
+    /// k-NN query: each polled class's RS substructure returns its local
+    /// top-k, which are mapped back to database ids and merged into the
+    /// global `TopK(k)`.
+    pub fn query_k(
+        &self,
+        x: &[f32],
+        p: usize,
+        k: usize,
+        ops: &mut OpsCounter,
+    ) -> Vec<Neighbor> {
         let scores = self.am.score_classes(x, ops);
         let polled = top_p_largest(&scores, p);
-        let mut best = TopK::new(1);
+        let searches_before = ops.searches;
+        let mut best = TopK::new(k.max(1));
         for &ci in &polled {
-            let (local_id, dist, _) =
-                self.class_rs[ci as usize].query(x, self.anchors_per_class, ops);
-            if local_id != u32::MAX {
-                let global = self.class_members[ci as usize][local_id as usize];
-                best.push(dist, global);
+            let (locals, _) =
+                self.class_rs[ci as usize].query_k(x, self.anchors_per_class, k, ops);
+            for n in locals {
+                let global = self.class_members[ci as usize][n.id as usize];
+                best.push(n.distance, global);
             }
         }
-        // the per-class RS queries already bumped `searches`; collapse to 1
-        ops.searches = ops.searches.saturating_sub(polled.len() as u64 - 1);
-        let top = best.into_sorted();
-        let (dist, id) = top[0];
-        (id, dist)
+        // the per-class RS queries each bumped `searches`; collapse the
+        // whole hybrid query to exactly one search (robust to an empty
+        // polled set, e.g. all-NaN scores)
+        ops.searches = searches_before + 1;
+        best.into_neighbors()
     }
 }
 
@@ -120,6 +134,27 @@ mod tests {
             ops_h.scan_ops,
             ops_a.scan_ops
         );
+    }
+
+    #[test]
+    fn full_poll_query_k_matches_exhaustive_topk() {
+        use crate::baseline::Exhaustive;
+        use crate::search::Metric;
+        let mut rng = Rng::new(4);
+        let spec = ClusteredSpec { dim: 12, n_clusters: 4, ..ClusteredSpec::sift_like() };
+        let wl = clustered_workload(spec, 300, 10, &mut rng);
+        let params = IndexParams { n_classes: 3, ..Default::default() };
+        // anchors cover every member: RS search inside a class is exact
+        let hy = HybridIndex::build(wl.base.clone(), params, 100.0, 100, &mut rng)
+            .unwrap();
+        let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+        let mut ops = OpsCounter::new();
+        for qi in 0..wl.queries.len() {
+            let x = wl.queries.get(qi);
+            let got = hy.query_k(x, 3, 4, &mut ops);
+            let want = ex.query_k(x, 4, &mut ops);
+            assert_eq!(got, want, "query {qi}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::data::dataset::Dataset;
 use crate::data::rng::Rng;
 use crate::error::Result;
 use crate::metrics::OpsCounter;
-use crate::search::{top_p_largest, Metric};
+use crate::search::{distance_pruned, one_nn, top_p_largest, Metric, Neighbor, TopK};
 
 use super::kmeans::{kmeans, KMeans};
 
@@ -40,7 +40,7 @@ impl IvfFlat {
         for (v, &a) in assignments.iter().enumerate() {
             lists[a as usize].push(v as u32);
         }
-        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        let binary_sparse = data.is_binary_sparse();
         Ok(IvfFlat { data, metric, centroids, lists, dim, k, binary_sparse })
     }
 
@@ -62,8 +62,23 @@ impl IvfFlat {
         }
     }
 
-    /// Query with `nprobe` lists.
+    /// 1-NN query with `nprobe` lists.
     pub fn query(&self, x: &[f32], nprobe: usize, ops: &mut OpsCounter) -> (u32, f32, usize) {
+        let (top, candidates) = self.query_k(x, nprobe, 1, ops);
+        let (id, dist) = one_nn(&top);
+        (id, dist, candidates)
+    }
+
+    /// k-NN query with `nprobe` lists: the probed inverted lists are
+    /// scanned into a fused `TopK(k)` accumulator.  Returns the neighbors
+    /// (ascending by `(distance, id)`) and the candidate count.
+    pub fn query_k(
+        &self,
+        x: &[f32],
+        nprobe: usize,
+        k: usize,
+        ops: &mut OpsCounter,
+    ) -> (Vec<Neighbor>, usize) {
         let per = self.per_elem(x);
         let cent_scores: Vec<f32> = (0..self.k)
             .map(|c| {
@@ -74,22 +89,21 @@ impl IvfFlat {
             .collect();
         ops.aux_ops += (self.k * per) as u64;
         let probed = top_p_largest(&cent_scores, nprobe.max(1));
-        let mut best = f32::INFINITY;
-        let mut best_id = u32::MAX;
+        let mut acc = TopK::new(k.max(1));
         let mut candidates = 0usize;
         for &c in &probed {
             for &vid in &self.lists[c as usize] {
-                let dist = self.metric.distance(x, self.data.get(vid as usize));
                 candidates += 1;
-                if dist < best || (dist == best && vid < best_id) {
-                    best = dist;
-                    best_id = vid;
+                if let Some(dist) =
+                    distance_pruned(self.metric, x, self.data.get(vid as usize), acc.bound())
+                {
+                    acc.push(dist, vid);
                 }
             }
         }
         ops.scan_ops += (candidates * per) as u64;
         ops.searches += 1;
-        (best_id, best, candidates)
+        (acc.into_neighbors(), candidates)
     }
 }
 
@@ -147,6 +161,23 @@ mod tests {
         assert!(hits >= 48, "hits={hits}/60");
         // and the scan touched far fewer than n per query on average
         assert!(ops.scan_ops / ops.searches < (800 * 16 / 2) as u64);
+    }
+
+    #[test]
+    fn full_probe_query_k_matches_exhaustive_topk() {
+        use crate::baseline::Exhaustive;
+        let wl = wl(9);
+        let mut rng = Rng::new(10);
+        let ivf = IvfFlat::build(wl.base.clone(), 8, 20, Metric::SqL2, &mut rng).unwrap();
+        let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+        let mut ops = OpsCounter::new();
+        for qi in 0..10 {
+            let x = wl.queries.get(qi);
+            let (got, cands) = ivf.query_k(x, 8, 7, &mut ops);
+            assert_eq!(cands, 800);
+            let want = ex.query_k(x, 7, &mut ops);
+            assert_eq!(got, want, "query {qi}");
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::data::dataset::Dataset;
 use crate::data::rng::Rng;
 use crate::error::{Error, Result};
 use crate::metrics::OpsCounter;
-use crate::search::{top_p_largest, Metric};
+use crate::search::{distance_pruned, one_nn, top_p_largest, Metric, Neighbor, TopK};
 use crate::util::par::parallel_map;
 
 /// RS anchor-tree (one level).
@@ -52,7 +52,7 @@ impl RsAnchors {
         for (v, &a) in assignments.iter().enumerate() {
             attached[a].push(v as u32);
         }
-        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        let binary_sparse = data.is_binary_sparse();
         Ok(RsAnchors { data, metric, anchors, attached, binary_sparse })
     }
 
@@ -108,8 +108,23 @@ impl RsAnchors {
         self.per_elem(x)
     }
 
-    /// Query: nearest `p` anchors, scan their attachments.
+    /// 1-NN query: nearest `p` anchors, scan their attachments.
     pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> (u32, f32, usize) {
+        let (top, candidates) = self.query_k(x, p, 1, ops);
+        let (id, dist) = one_nn(&top);
+        (id, dist, candidates)
+    }
+
+    /// k-NN query: nearest `p` anchors, scan their attachments into a
+    /// fused `TopK(k)` accumulator.  Returns the neighbors (ascending by
+    /// `(distance, id)`) and the candidate count.
+    pub fn query_k(
+        &self,
+        x: &[f32],
+        p: usize,
+        k: usize,
+        ops: &mut OpsCounter,
+    ) -> (Vec<Neighbor>, usize) {
         let per = self.per_elem(x);
         // anchor search: r * d ops (aux term)
         let anchor_dists: Vec<f32> = self
@@ -119,22 +134,21 @@ impl RsAnchors {
             .collect();
         ops.aux_ops += (self.anchors.len() * per) as u64;
         let polled = top_p_largest(&anchor_dists, p);
-        let mut best = f32::INFINITY;
-        let mut best_id = u32::MAX;
+        let mut acc = TopK::new(k.max(1));
         let mut candidates = 0usize;
         for &a in &polled {
             for &vid in &self.attached[a as usize] {
-                let dist = self.metric.distance(x, self.data.get(vid as usize));
                 candidates += 1;
-                if dist < best || (dist == best && vid < best_id) {
-                    best = dist;
-                    best_id = vid;
+                if let Some(dist) =
+                    distance_pruned(self.metric, x, self.data.get(vid as usize), acc.bound())
+                {
+                    acc.push(dist, vid);
                 }
             }
         }
         ops.scan_ops += (candidates * per) as u64;
         ops.searches += 1;
-        (best_id, best, candidates)
+        (acc.into_neighbors(), candidates)
     }
 }
 

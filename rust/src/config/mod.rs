@@ -104,6 +104,8 @@ pub struct IndexConfig {
     pub n_classes: usize,
     /// Default poll depth `p`.
     pub top_p: usize,
+    /// Default neighbors returned per query `k`.
+    pub top_k: usize,
     /// Storage rule.
     pub rule: StorageRule,
     /// Allocation strategy.
@@ -119,6 +121,7 @@ impl Default for IndexConfig {
         IndexConfig {
             n_classes: 64,
             top_p: 1,
+            top_k: 1,
             rule: StorageRule::Sum,
             allocation: Allocation::Random,
             metric: Metric::SqL2,
@@ -133,6 +136,7 @@ impl IndexConfig {
         IndexParams {
             n_classes: self.n_classes,
             top_p: self.top_p,
+            top_k: self.top_k,
             rule: self.rule,
             allocation: self.allocation,
             metric: self.metric,
@@ -282,6 +286,7 @@ impl AppConfig {
         let ix = root.get("index").unwrap_or(&empty);
         cfg.index.n_classes = get_usize(ix, "n_classes", cfg.index.n_classes)?;
         cfg.index.top_p = get_usize(ix, "top_p", cfg.index.top_p)?;
+        cfg.index.top_k = get_usize(ix, "top_k", cfg.index.top_k)?;
         cfg.index.rule = get_parsed(ix, "rule", cfg.index.rule)?;
         cfg.index.allocation = get_parsed(ix, "allocation", cfg.index.allocation)?;
         cfg.index.metric = get_parsed(ix, "metric", cfg.index.metric)?;
@@ -402,5 +407,13 @@ mod tests {
         let p = cfg.index.to_params();
         assert_eq!(p.n_classes, 12);
         assert_eq!(p.top_p, 3);
+        assert_eq!(p.top_k, 1); // default when unspecified
+    }
+
+    #[test]
+    fn top_k_parses_and_flows_to_params() {
+        let cfg = AppConfig::from_json(r#"{"index": {"top_k": 5}}"#).unwrap();
+        assert_eq!(cfg.index.top_k, 5);
+        assert_eq!(cfg.index.to_params().top_k, 5);
     }
 }

@@ -104,6 +104,7 @@ mod tests {
                 id,
                 vector: vec![0.0; 4],
                 top_p: 1,
+                top_k: 1,
                 enqueued: Instant::now(),
                 resp: tx,
             },

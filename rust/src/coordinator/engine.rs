@@ -26,7 +26,7 @@ use crate::metrics::{BatchScanStats, OpsCounter};
 use crate::runtime::{
     Backend, ClassScorer, Manifest, NativeScorer, PjrtDistances, PjrtScorer,
 };
-use crate::search::{invert_polled, lex_min_update, top_p_largest};
+use crate::search::{invert_polled, top_p_largest, TopK};
 
 use super::protocol::SearchResponse;
 
@@ -125,21 +125,23 @@ impl Engine {
     /// (query → polled classes) map and submits **one `class_distances`
     /// GEMM per polled class per batch** (chunked by the artifact's
     /// fixed batch size), instead of one GEMM per (query, class) pair.
-    /// Empty polled sets fall through to the `u32::MAX` internal
-    /// sentinel, which the response assembly maps to a proper
-    /// "no candidates" (`neighbor: None`) result.
+    /// Each query folds the streamed distances into its fused `TopK(k)`
+    /// accumulator; empty polled sets simply leave the accumulator empty,
+    /// which the protocol reports as `neighbors: []` ("no candidates").
     fn scan_pjrt_batch(
         &self,
         scanner: &PjrtDistances,
         queries: &[&[f32]],
         polled: Vec<Vec<u32>>,
+        ks: &[usize],
         ops: &mut [OpsCounter],
     ) -> Result<Vec<QueryResult>> {
         let d = self.index.dim();
         let q = self.index.params().n_classes;
         let b = queries.len();
         let by_class = invert_polled(&polled, q);
-        let mut best: Vec<(f32, u32)> = vec![(f32::INFINITY, u32::MAX); b];
+        let mut best: Vec<TopK> =
+            ks.iter().map(|&k| TopK::new(k.max(1))).collect();
         let mut candidates = vec![0usize; b];
         for (ci, queriers) in by_class.iter().enumerate() {
             if queriers.is_empty() {
@@ -157,21 +159,20 @@ impl Engine {
             }
             let dists = scanner.distances_chunked(members, n_members, &flat)?;
             for (row, &bi) in queriers.iter().enumerate() {
-                let e = &mut best[bi as usize];
+                let acc = &mut best[bi as usize];
                 let row_dists = &dists[row * n_members..(row + 1) * n_members];
                 for (j, &dist) in row_dists.iter().enumerate() {
-                    lex_min_update(e, dist, ids[j]);
+                    acc.push(dist, ids[j]);
                 }
                 candidates[bi as usize] += n_members;
             }
         }
         let mut out = Vec::with_capacity(b);
-        for (bi, pol) in polled.into_iter().enumerate() {
+        for ((bi, pol), acc) in polled.into_iter().enumerate().zip(best) {
             ops[bi].scan_ops += (candidates[bi] * d) as u64;
             ops[bi].searches += 1;
             out.push(QueryResult {
-                id: best[bi].1,
-                distance: best[bi].0,
+                neighbors: acc.into_neighbors(),
                 polled: pol,
                 candidates: candidates[bi],
             });
@@ -194,15 +195,23 @@ impl Engine {
     /// class-major candidate scan touching each polled class's member
     /// matrix once for the whole batch.
     ///
-    /// `queries` is a slice of (vector, top_p) pairs; returns one
-    /// response skeleton per query (id/service time filled by caller).
-    pub fn serve_batch(&self, queries: &[(&[f32], usize)]) -> Result<Vec<SearchResponse>> {
+    /// `queries` is a slice of `(vector, top_p, top_k)` triples (`0` =
+    /// the index default for either knob; `top_k` is clamped to the
+    /// database size); returns one response skeleton per query
+    /// (id/service time filled by caller).
+    pub fn serve_batch(
+        &self,
+        queries: &[(&[f32], usize, usize)],
+    ) -> Result<Vec<SearchResponse>> {
         Ok(self.serve_batch_detailed(queries)?.responses)
     }
 
     /// [`Self::serve_batch`] plus the per-batch accounting the server
     /// aggregates (per-stage op counts, scan fusion statistics).
-    pub fn serve_batch_detailed(&self, queries: &[(&[f32], usize)]) -> Result<BatchOutput> {
+    pub fn serve_batch_detailed(
+        &self,
+        queries: &[(&[f32], usize, usize)],
+    ) -> Result<BatchOutput> {
         let d = self.index.dim();
         let q = self.index.params().n_classes;
         let b = queries.len();
@@ -215,29 +224,33 @@ impl Engine {
         }
         // stage 1: score the whole batch in one scorer call
         let mut flat = Vec::with_capacity(b * d);
-        for (v, _) in queries {
+        for (v, _, _) in queries {
             flat.extend_from_slice(v);
         }
         let scores = self.scorer.score(&flat)?;
         // per-query accounting; scoring cost per the paper's model
-        // (d²q dense)
+        // (d²q dense); per-request p and k resolved against the index
+        // defaults and clamped to what exists
         let mut ops: Vec<OpsCounter> = vec![OpsCounter::new(); b];
         let mut ps = Vec::with_capacity(b);
-        for (bi, (_, top_p)) in queries.iter().enumerate() {
+        let mut ks = Vec::with_capacity(b);
+        for (bi, (_, top_p, top_k)) in queries.iter().enumerate() {
             ops[bi].score_ops += (d * d * q) as u64;
             let p = if *top_p == 0 { self.index.params().top_p } else { *top_p };
             ps.push(p.min(q));
+            let k = if *top_k == 0 { self.index.params().top_k } else { *top_k };
+            ks.push(k.min(self.index.len()).max(1));
         }
-        let qrefs: Vec<&[f32]> = queries.iter().map(|(v, _)| *v).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|(v, _, _)| *v).collect();
         // stages 2+3: top-p selection for the whole batch, then the
         // class-major scan (native or PJRT GEMM)
         let results = if let Some(scanner) = &self.scanner {
             let polled: Vec<Vec<u32>> = (0..b)
                 .map(|bi| top_p_largest(&scores[bi * q..(bi + 1) * q], ps[bi]))
                 .collect();
-            self.scan_pjrt_batch(scanner, &qrefs, polled, &mut ops)?
+            self.scan_pjrt_batch(scanner, &qrefs, polled, &ks, &mut ops)?
         } else {
-            self.index.finish_batch(&qrefs, &scores, &ps, &mut ops)
+            self.index.finish_batch(&qrefs, &scores, &ps, &ks, &mut ops)
         };
         // assemble responses + batch-level accounting
         let mut agg = OpsCounter::new();
@@ -255,11 +268,9 @@ impl Engine {
             agg.merge(&ops[bi]);
             responses.push(SearchResponse {
                 id: 0,
-                // map the internal u32::MAX sentinel (no candidate
-                // scanned, or all candidates had NaN distances) to a
-                // proper "no candidates" result
-                neighbor: (r.id != u32::MAX).then_some(r.id),
-                distance: r.distance,
+                // empty = no candidate scanned (or all candidates had
+                // NaN distances): the "no candidates" protocol
+                neighbors: r.neighbors,
                 polled: r.polled,
                 candidates: r.candidates,
                 ops: ops[bi].total(),
@@ -315,35 +326,69 @@ mod tests {
         let (idx, wl) = test_index();
         let engine = Engine::native(idx.clone()).unwrap();
         assert_eq!(engine.backend(), "native");
-        let queries: Vec<(&[f32], usize)> =
-            (0..4).map(|i| (wl.queries.get(i), 8usize)).collect();
+        let queries: Vec<(&[f32], usize, usize)> =
+            (0..4).map(|i| (wl.queries.get(i), 8usize, 1usize)).collect();
         let rs = engine.serve_batch(&queries).unwrap();
         assert_eq!(rs.len(), 4);
         for (i, r) in rs.iter().enumerate() {
             // p = q = full scan: exact answer guaranteed
-            assert_eq!(r.neighbor, Some(wl.ground_truth[i]));
+            assert_eq!(r.neighbor(), Some(wl.ground_truth[i]));
+            assert_eq!(r.neighbors.len(), 1);
             assert_eq!(r.candidates, 256);
             assert!(r.ops > 0);
         }
     }
 
     #[test]
-    fn zero_top_p_uses_index_default() {
+    fn zero_top_p_and_top_k_use_index_defaults() {
         let (idx, wl) = test_index();
         let engine = Engine::native(idx.clone()).unwrap();
-        let rs = engine.serve_batch(&[(wl.queries.get(0), 0usize)]).unwrap();
-        // default top_p = 1 -> exactly one class polled
+        let rs = engine
+            .serve_batch(&[(wl.queries.get(0), 0usize, 0usize)])
+            .unwrap();
+        // default top_p = 1 -> exactly one class polled; default
+        // top_k = 1 -> exactly one neighbor
         assert_eq!(rs[0].polled.len(), 1);
+        assert_eq!(rs[0].neighbors.len(), 1);
+    }
+
+    #[test]
+    fn top_k_returns_sorted_neighbors_and_clamps_to_n() {
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx.clone()).unwrap();
+        let rs = engine
+            .serve_batch(&[(wl.queries.get(0), 8usize, 10usize)])
+            .unwrap();
+        assert_eq!(rs[0].neighbors.len(), 10);
+        assert_eq!(rs[0].neighbors[0].id, wl.ground_truth[0]);
+        for w in rs[0].neighbors.windows(2) {
+            assert!(
+                w[0].distance < w[1].distance
+                    || (w[0].distance == w[1].distance && w[0].id < w[1].id),
+                "neighbors not (distance, id)-ascending"
+            );
+        }
+        // k > n clamps to the database size (n = 256)
+        let rs = engine
+            .serve_batch(&[(wl.queries.get(0), 8usize, 100_000usize)])
+            .unwrap();
+        assert_eq!(rs[0].neighbors.len(), 256);
     }
 
     #[test]
     fn batch_equals_batches_of_one() {
         // the batched pipeline IS the single-query pipeline: a batch of
-        // B must reproduce B batches of one bitwise
+        // B must reproduce B batches of one bitwise, at every (p, k)
         let (idx, wl) = test_index();
         let engine = Engine::native(idx).unwrap();
-        let queries: Vec<(&[f32], usize)> = (0..6)
-            .map(|i| (wl.queries.get(i), [1usize, 2, 3, 8, 5, 8][i]))
+        let queries: Vec<(&[f32], usize, usize)> = (0..6)
+            .map(|i| {
+                (
+                    wl.queries.get(i),
+                    [1usize, 2, 3, 8, 5, 8][i],
+                    [1usize, 5, 10, 1, 300, 7][i],
+                )
+            })
             .collect();
         let batched = engine.serve_batch(&queries).unwrap();
         for (i, query) in queries.iter().enumerate() {
@@ -357,8 +402,8 @@ mod tests {
         let (idx, wl) = test_index();
         let engine = Engine::native(idx).unwrap();
         // every query polls all 8 classes -> 32 polls over 8 passes
-        let queries: Vec<(&[f32], usize)> =
-            (0..4).map(|i| (wl.queries.get(i), 8usize)).collect();
+        let queries: Vec<(&[f32], usize, usize)> =
+            (0..4).map(|i| (wl.queries.get(i), 8usize, 1usize)).collect();
         let out = engine.serve_batch_detailed(&queries).unwrap();
         assert_eq!(out.scan.batches, 1);
         assert_eq!(out.scan.polls, 32);
@@ -376,20 +421,25 @@ mod tests {
     fn empty_polled_classes_yield_no_candidates_response() {
         // classes 0 and 1 empty; the probe ties all class scores at 0,
         // so top-2 polls exactly the two empty classes -> the protocol
-        // must say "no candidates" instead of leaking the u32::MAX
-        // sentinel
+        // must say "no candidates" (empty neighbors), at every k
         let idx = crate::index::am_index::two_empty_classes_fixture();
         let engine = Engine::native(Arc::new(idx)).unwrap();
         let probe: Vec<f32> = vec![0., 0., 1.];
-        let rs = engine.serve_batch(&[(probe.as_slice(), 2usize)]).unwrap();
-        assert_eq!(rs[0].neighbor, None);
-        assert_eq!(rs[0].candidates, 0);
-        assert!(rs[0].distance.is_infinite());
-        assert_eq!(rs[0].polled, vec![0, 1]);
+        for k in [1usize, 3] {
+            let rs = engine.serve_batch(&[(probe.as_slice(), 2usize, k)]).unwrap();
+            assert!(rs[0].neighbors.is_empty(), "k={k}");
+            assert_eq!(rs[0].neighbor(), None);
+            assert_eq!(rs[0].candidates, 0);
+            assert!(rs[0].distance().is_infinite());
+            assert_eq!(rs[0].polled, vec![0, 1]);
+        }
         // polling wider reaches the stored vectors again
-        let rs = engine.serve_batch(&[(probe.as_slice(), 4usize)]).unwrap();
-        assert_eq!(rs[0].neighbor, Some(0));
+        let rs = engine.serve_batch(&[(probe.as_slice(), 4usize, 1usize)]).unwrap();
+        assert_eq!(rs[0].neighbor(), Some(0));
         assert_eq!(rs[0].candidates, 4);
+        // ... and k > the 4 stored vectors returns all of them
+        let rs = engine.serve_batch(&[(probe.as_slice(), 4usize, 9usize)]).unwrap();
+        assert_eq!(rs[0].neighbors.len(), 4);
     }
 
     #[test]

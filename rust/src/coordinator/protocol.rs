@@ -7,7 +7,9 @@
 
 use std::sync::mpsc::SyncSender;
 
-/// A nearest-neighbor search request.
+use crate::search::Neighbor;
+
+/// A k-nearest-neighbor search request.
 #[derive(Debug)]
 pub struct SearchRequest {
     /// Monotonic request id (assigned by the server).
@@ -16,6 +18,9 @@ pub struct SearchRequest {
     pub vector: Vec<f32>,
     /// Number of classes to poll (`p`); 0 = the index default.
     pub top_p: usize,
+    /// Number of neighbors to return (`k`); 0 = the index default.
+    /// Clamped to the database size at the server boundary.
+    pub top_k: usize,
     /// Enqueue timestamp (for end-to-end latency).
     pub enqueued: std::time::Instant,
     /// Completion channel (capacity 1; dropped on worker failure, which
@@ -28,13 +33,12 @@ pub struct SearchRequest {
 pub struct SearchResponse {
     /// Echo of the request id.
     pub id: u64,
-    /// Database id of the best candidate found, or `None` when no
-    /// candidate was scanned (every polled class was empty).  The old
-    /// protocol leaked the internal `u32::MAX` sentinel here.
-    pub neighbor: Option<u32>,
-    /// Its distance under the index metric (`f32::INFINITY` when
-    /// `neighbor` is `None`).
-    pub distance: f32,
+    /// The `top_k` nearest candidates found, sorted ascending by
+    /// `(distance, id)`.  Empty when no candidate was scanned (every
+    /// polled class was empty); shorter than the requested `k` when fewer
+    /// candidates exist.  The pre-k-NN protocol carried a single
+    /// `neighbor: Option<u32>` here.
+    pub neighbors: Vec<Neighbor>,
     /// Classes that were polled, best first.
     pub polled: Vec<u32>,
     /// Number of candidates scanned.
@@ -43,6 +47,22 @@ pub struct SearchResponse {
     pub ops: u64,
     /// Service time (scoring + scan) attributed to this request.
     pub service_ns: u64,
+}
+
+impl SearchResponse {
+    /// Database id of the best candidate, `None` when no candidate was
+    /// scanned — the 1-NN view of the k-NN protocol.
+    pub fn neighbor(&self) -> Option<u32> {
+        self.neighbors.first().map(|n| n.id)
+    }
+
+    /// Distance of the best candidate (`f32::INFINITY` when no candidate
+    /// was scanned).
+    pub fn distance(&self) -> f32 {
+        self.neighbors
+            .first()
+            .map_or(f32::INFINITY, |n| n.distance)
+    }
 }
 
 /// Coordinator configuration.

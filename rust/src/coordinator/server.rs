@@ -63,6 +63,8 @@ pub struct SearchServer {
     metrics: Arc<Mutex<ServerMetrics>>,
     next_id: std::sync::atomic::AtomicU64,
     dim: usize,
+    /// Database size, for clamping per-request `top_k` at the boundary.
+    n_vectors: usize,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -73,6 +75,7 @@ impl SearchServer {
     pub fn start(factory: EngineFactory, config: CoordinatorConfig) -> Result<Self> {
         config.validate()?;
         let dim = factory.index.dim();
+        let n_vectors = factory.index.len();
         let (req_tx, req_rx) = mpsc::sync_channel::<SearchRequest>(config.queue_depth);
         let (batch_tx, batch_rx) =
             mpsc::sync_channel::<Vec<SearchRequest>>(config.workers * 2);
@@ -124,13 +127,24 @@ impl SearchServer {
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(0),
             dim,
+            n_vectors,
             workers: Mutex::new(workers),
             batcher: Mutex::new(Some(batcher)),
         })
     }
 
-    /// Submit a query and block until its response arrives.
-    pub fn search(&self, vector: Vec<f32>, top_p: usize) -> Result<SearchResponse> {
+    /// Submit a k-NN query and block until its response arrives.
+    ///
+    /// Boundary validation: the vector dimension must match the index;
+    /// `top_p = 0` / `top_k = 0` mean "use the index default"; `top_k`
+    /// larger than the database is clamped to it (the response simply
+    /// carries every vector, nearest first).
+    pub fn search(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+    ) -> Result<SearchResponse> {
         if vector.len() != self.dim {
             return Err(Error::Shape(format!(
                 "query dim {} != index dim {}",
@@ -138,6 +152,9 @@ impl SearchServer {
                 self.dim
             )));
         }
+        // clamp here so an absurd k never reaches the scan accumulators
+        // (0 passes through: it selects the index default downstream)
+        let top_k = top_k.min(self.n_vectors);
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -146,6 +163,7 @@ impl SearchServer {
             id,
             vector,
             top_p,
+            top_k,
             enqueued: Instant::now(),
             resp: resp_tx,
         };
@@ -202,8 +220,10 @@ fn serve_one_batch(
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) {
     let started = Instant::now();
-    let queries: Vec<(&[f32], usize)> =
-        batch.iter().map(|r| (r.vector.as_slice(), r.top_p)).collect();
+    let queries: Vec<(&[f32], usize, usize)> = batch
+        .iter()
+        .map(|r| (r.vector.as_slice(), r.top_p, r.top_k))
+        .collect();
     match engine.serve_batch_detailed(&queries) {
         Ok(output) => {
             let super::engine::BatchOutput { mut responses, ops, scan } = output;

@@ -135,6 +135,14 @@ impl Dataset {
         v
     }
 
+    /// True when every stored value is binary 0/1 — the condition for the
+    /// paper's c²-cost sparse (support-based) scoring and the `n·c` scan
+    /// cost.  Shared by every structure that gates a sparse fast path
+    /// (AM index, exhaustive baseline, IVF, RS anchors).
+    pub fn is_binary_sparse(&self) -> bool {
+        self.data.iter().all(|&x| x == 0.0 || x == 1.0)
+    }
+
     /// Indices of non-zero coordinates of vector `i` (sparse support).
     pub fn support(&self, i: usize) -> Vec<u32> {
         self.get(i)
@@ -184,6 +192,41 @@ impl Workload {
                     self.base.len()
                 )));
             }
+        }
+        Ok(())
+    }
+}
+
+/// A [`Workload`] whose vectors carry class labels — the unit of the
+/// paper's k-NN classification scenario ("classification and object
+/// retrieval").
+#[derive(Debug, Clone)]
+pub struct LabeledWorkload {
+    /// The underlying base/query/ground-truth workload.
+    pub workload: Workload,
+    /// `base_labels[i]` = class label of base vector `i`.
+    pub base_labels: Vec<u32>,
+    /// `query_labels[i]` = true class label of query `i`.
+    pub query_labels: Vec<u32>,
+}
+
+impl LabeledWorkload {
+    /// Validate internal consistency (label vectors aligned with data).
+    pub fn validate(&self) -> Result<()> {
+        self.workload.validate()?;
+        if self.base_labels.len() != self.workload.base.len() {
+            return Err(Error::Shape(format!(
+                "{} base labels for {} base vectors",
+                self.base_labels.len(),
+                self.workload.base.len()
+            )));
+        }
+        if self.query_labels.len() != self.workload.queries.len() {
+            return Err(Error::Shape(format!(
+                "{} query labels for {} queries",
+                self.query_labels.len(),
+                self.workload.queries.len()
+            )));
         }
         Ok(())
     }
@@ -270,6 +313,17 @@ mod tests {
     fn support_lists_nonzeros() {
         let ds = Dataset::from_flat(4, vec![0., 1., 0., 2.]).unwrap();
         assert_eq!(ds.support(0), vec![1, 3]);
+    }
+
+    #[test]
+    fn binary_sparse_detection() {
+        let bin = Dataset::from_flat(2, vec![0., 1., 1., 0.]).unwrap();
+        assert!(bin.is_binary_sparse());
+        let dense = Dataset::from_flat(2, vec![0., 1., 0.5, 0.]).unwrap();
+        assert!(!dense.is_binary_sparse());
+        let neg = Dataset::from_flat(2, vec![1., -1.]).unwrap();
+        assert!(!neg.is_binary_sparse());
+        assert!(Dataset::empty(3).is_binary_sparse()); // vacuously binary
     }
 
     #[test]

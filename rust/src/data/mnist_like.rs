@@ -9,8 +9,8 @@
 //! prototype "digits" on a 28×28 grid and samples noisy, intensity-scaled
 //! instances of them.  Values live in [0, 255] like raw MNIST.
 
-use super::dataset::{Dataset, Workload};
 use super::clustered::exact_ground_truth;
+use super::dataset::{Dataset, LabeledWorkload, Workload};
 use super::rng::Rng;
 
 /// 28×28 images.
@@ -77,19 +77,38 @@ fn sample_from(proto: &[f32], rng: &mut Rng) -> Vec<f32> {
 /// query images (fresh samples of the same prototypes — like unseen test
 /// digits), with exact brute-force ground truth.
 pub fn mnist_like_workload(n: usize, n_queries: usize, rng: &mut Rng) -> Workload {
+    mnist_like_labeled_workload(n, n_queries, rng).workload
+}
+
+/// Like [`mnist_like_workload`], but also returns which prototype
+/// ("digit") each base/query image was sampled from — the labels the
+/// k-NN classification scenario votes over.
+pub fn mnist_like_labeled_workload(
+    n: usize,
+    n_queries: usize,
+    rng: &mut Rng,
+) -> LabeledWorkload {
     let protos: Vec<Vec<f32>> = (0..N_CLASSES).map(|_| smooth_prototype(rng)).collect();
     let mut base = Dataset::empty(DIM);
+    let mut base_labels = Vec::with_capacity(n);
     for i in 0..n {
-        let proto = &protos[i % N_CLASSES];
-        base.push(&sample_from(proto, rng)).expect("dims match");
+        let label = i % N_CLASSES;
+        base.push(&sample_from(&protos[label], rng)).expect("dims match");
+        base_labels.push(label as u32);
     }
     let mut queries = Dataset::empty(DIM);
+    let mut query_labels = Vec::with_capacity(n_queries);
     for i in 0..n_queries {
-        let proto = &protos[i % N_CLASSES];
-        queries.push(&sample_from(proto, rng)).expect("dims match");
+        let label = i % N_CLASSES;
+        queries.push(&sample_from(&protos[label], rng)).expect("dims match");
+        query_labels.push(label as u32);
     }
     let ground_truth = exact_ground_truth(&base, &queries);
-    Workload { base, queries, ground_truth }
+    LabeledWorkload {
+        workload: Workload { base, queries, ground_truth },
+        base_labels,
+        query_labels,
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +148,20 @@ mod tests {
             diff += sq(wl.base.get(i), wl.base.get(i + 1));
         }
         assert!(diff > 1.3 * same, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn labeled_workload_is_consistent() {
+        let mut rng = Rng::new(4);
+        let lw = mnist_like_labeled_workload(120, 30, &mut rng);
+        lw.validate().unwrap();
+        assert_eq!(lw.base_labels.len(), 120);
+        assert_eq!(lw.query_labels.len(), 30);
+        assert!(lw.base_labels.iter().all(|&l| (l as usize) < N_CLASSES));
+        // labels cycle over the prototypes
+        assert_eq!(lw.base_labels[0], 0);
+        assert_eq!(lw.base_labels[10], 0);
+        assert_eq!(lw.base_labels[11], 1);
     }
 
     #[test]

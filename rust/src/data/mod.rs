@@ -10,5 +10,5 @@ pub mod rng;
 pub mod santander_like;
 pub mod synthetic;
 
-pub use dataset::{Dataset, Workload};
+pub use dataset::{Dataset, LabeledWorkload, Workload};
 pub use rng::Rng;

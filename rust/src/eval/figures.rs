@@ -862,7 +862,7 @@ pub fn ablation_hierarchical(opts: &EvalOptions) -> Result<Figure> {
         let results: Vec<(bool, u64)> = parallel_map(wl.queries.len(), |qi| {
             let mut ops = OpsCounter::new();
             let r = flat.query(wl.queries.get(qi), p, &mut ops);
-            (r.id == wl.ground_truth[qi], ops.score_ops)
+            (r.id() == wl.ground_truth[qi], ops.score_ops)
         });
         let mut recall = Recall::new();
         let mut score_ops = 0u64;
@@ -885,7 +885,7 @@ pub fn ablation_hierarchical(opts: &EvalOptions) -> Result<Figure> {
         let results: Vec<(bool, u64)> = parallel_map(wl.queries.len(), |qi| {
             let mut ops = OpsCounter::new();
             let r = h.query(wl.queries.get(qi), p1, p2, &mut ops);
-            (r.id == wl.ground_truth[qi], ops.score_ops)
+            (r.id() == wl.ground_truth[qi], ops.score_ops)
         });
         let mut recall = Recall::new();
         let mut score_ops = 0u64;
@@ -984,7 +984,7 @@ pub fn ablation_pooling(opts: &EvalOptions) -> Result<Figure> {
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = pool.query(wl.queries.get(qi), 1, &mut ops_pool);
             pooled.record(r.pooled);
-            recall.record(r.result.id == gt);
+            recall.record(r.result.id() == gt);
             index.query(wl.queries.get(qi), 1, &mut ops_scan);
         }
         pooled_series.push(k as f64, pooled.value());
@@ -1000,7 +1000,8 @@ pub fn ablation_pooling(opts: &EvalOptions) -> Result<Figure> {
     Ok(fig)
 }
 
-/// Run one figure by id ("1".."12", "ablation_rule", "ablation_corruption").
+/// Run one figure by id ("1".."12", "knn", "ablation_rule",
+/// "ablation_corruption", ...).
 pub fn run_figure(id: &str, opts: &EvalOptions) -> Result<Figure> {
     match id {
         "1" | "fig1" => Ok(fig1(opts)),
@@ -1015,6 +1016,7 @@ pub fn run_figure(id: &str, opts: &EvalOptions) -> Result<Figure> {
         "10" | "fig10" => fig10(opts),
         "11" | "fig11" => fig11(opts),
         "12" | "fig12" => fig12(opts),
+        "knn" | "eval_knn" => super::knn::run_knn_eval(opts),
         "ablation_rule" => Ok(ablation_rule(opts)),
         "ablation_corruption" => Ok(ablation_corruption(opts)),
         "ablation_hierarchical" => ablation_hierarchical(opts),
@@ -1027,7 +1029,7 @@ pub fn run_figure(id: &str, opts: &EvalOptions) -> Result<Figure> {
 /// All figure ids in order.
 pub const ALL_FIGURES: &[&str] = &[
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12",
-    "ablation_rule", "ablation_corruption", "ablation_hierarchical",
+    "knn", "ablation_rule", "ablation_corruption", "ablation_hierarchical",
     "ablation_higher_order", "ablation_pooling",
 ];
 

@@ -1,0 +1,192 @@
+//! The paper's classification scenario: k-NN majority-vote
+//! classification and recall@k evaluation over the AM index.
+//!
+//! The paper motivates the system with "classification and object
+//! retrieval" — both consume the k nearest neighbors, not just the
+//! first.  This module provides:
+//!
+//! * [`knn_classify`] — deterministic majority vote over the labels of
+//!   the returned neighbors (ties resolve to the label whose nearest
+//!   representative comes first in ascending-distance order);
+//! * [`run_knn_eval`] — the eval-runner mode: recall@k curves
+//!   (k ∈ {1, 5, 10, 100}) and k-NN classification accuracy, both as a
+//!   function of the polled-classes budget `p`, on the labeled
+//!   MNIST-like surrogate.  Ground-truth top-k comes from
+//!   [`Exhaustive::query_k`].
+
+use crate::baseline::Exhaustive;
+use crate::data::mnist_like;
+use crate::data::rng::Rng;
+use crate::error::Result;
+use crate::index::{AmIndex, IndexParams};
+use crate::metrics::{OpsCounter, Recall, RecallAtK};
+use crate::partition::Allocation;
+use crate::search::Neighbor;
+use crate::util::par::parallel_map;
+
+use super::figures::EvalOptions;
+use super::report::{Figure, Series};
+
+/// Majority-vote classification over k-NN results.
+///
+/// `neighbors` must be sorted nearest-first (the contract of every
+/// `query_k`); `labels[id]` is the class label of database vector `id`.
+/// Returns `None` when `neighbors` is empty.  Vote ties resolve to the
+/// label whose first (nearest) representative appears earliest — the
+/// deterministic "nearest wins" rule, independent of label numbering.
+pub fn knn_classify(neighbors: &[Neighbor], labels: &[u32]) -> Option<u32> {
+    // (label, votes, first rank) per distinct label, in first-seen order
+    let mut tally: Vec<(u32, usize, usize)> = Vec::new();
+    for (rank, n) in neighbors.iter().enumerate() {
+        let label = labels[n.id as usize];
+        match tally.iter_mut().find(|(l, _, _)| *l == label) {
+            Some((_, votes, _)) => *votes += 1,
+            None => tally.push((label, 1, rank)),
+        }
+    }
+    tally
+        .into_iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.2.cmp(&a.2)))
+        .map(|(label, _, _)| label)
+}
+
+/// The ks the eval sweeps (clamped to the database size at run time).
+pub const EVAL_KS: &[usize] = &[1, 5, 10, 100];
+
+/// The k-NN eval-runner mode: one figure with a `recall@k` series per
+/// k ∈ [`EVAL_KS`] and an `accuracy@k` (majority-vote classification)
+/// series per k, each swept over the polled-classes budget `p` (the x
+/// axis).  Workload: the labeled MNIST-like surrogate, greedy
+/// allocation (the regime where polling few classes is interesting).
+pub fn run_knn_eval(opts: &EvalOptions) -> Result<Figure> {
+    let n = ((2_000.0 * opts.scale).round() as usize).max(200);
+    let n_queries = ((200.0 * opts.scale).round() as usize).max(40);
+    let mut rng = Rng::new(opts.seed);
+    let lw = mnist_like::mnist_like_labeled_workload(n, n_queries, &mut rng);
+    let wl = &lw.workload;
+    let q = 20usize.min(n / 10).max(2);
+    let params = IndexParams {
+        n_classes: q,
+        allocation: Allocation::Greedy,
+        greedy_cap_factor: Some(4.0),
+        ..Default::default()
+    };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng)?;
+    let reference = Exhaustive::new(wl.base.clone(), params.metric);
+    let ks: Vec<usize> = EVAL_KS.iter().map(|&k| k.min(n)).collect();
+    let k_max = *ks.iter().max().expect("EVAL_KS non-empty");
+    // exact top-k_max ground truth, computed once per query
+    let truth: Vec<Vec<u32>> = parallel_map(wl.queries.len(), |qi| {
+        let mut ops = OpsCounter::new();
+        reference
+            .query_k(wl.queries.get(qi), k_max, &mut ops)
+            .into_iter()
+            .map(|nb| nb.id)
+            .collect()
+    });
+
+    let mut ps: Vec<usize> = vec![1, 2, 4, 8, 16];
+    ps.retain(|&p| p <= q);
+    if ps.last() != Some(&q) {
+        ps.push(q);
+    }
+
+    let mut fig = Figure::new(
+        "knn",
+        format!(
+            "k-NN serving eval (MNIST-like surrogate, n={n}, q={q}): \
+             recall@k and majority-vote accuracy vs polled classes p"
+        ),
+        "p",
+        "recall_or_accuracy",
+    );
+    let mut recall_series: Vec<Series> =
+        ks.iter().map(|k| Series::new(format!("recall@{k}"))).collect();
+    let mut acc_series: Vec<Series> =
+        ks.iter().map(|k| Series::new(format!("accuracy@{k}"))).collect();
+    for &p in &ps {
+        // one k_max query per (query, p); every k is a prefix of it
+        let answers: Vec<Vec<Neighbor>> = parallel_map(wl.queries.len(), |qi| {
+            let mut ops = OpsCounter::new();
+            index.query_k(wl.queries.get(qi), p, k_max, &mut ops).neighbors
+        });
+        for (ki, &k) in ks.iter().enumerate() {
+            let mut recall = RecallAtK::new(k);
+            let mut accuracy = Recall::new();
+            for (qi, full) in answers.iter().enumerate() {
+                let top: Vec<u32> =
+                    full.iter().take(k).map(|nb| nb.id).collect();
+                recall.record(&top, &truth[qi]);
+                let predicted = knn_classify(&full[..full.len().min(k)], &lw.base_labels);
+                accuracy.record(predicted == Some(lw.query_labels[qi]));
+            }
+            recall_series[ki].push(p as f64, recall.value());
+            acc_series[ki].push(p as f64, accuracy.value());
+        }
+    }
+    fig.series.extend(recall_series);
+    fig.series.extend(acc_series);
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nb(id: u32, distance: f32) -> Neighbor {
+        Neighbor { id, distance }
+    }
+
+    #[test]
+    fn classify_majority_wins() {
+        let labels = vec![0u32, 0, 1, 1, 1];
+        let ns = vec![nb(0, 0.1), nb(2, 0.2), nb(3, 0.3), nb(4, 0.4)];
+        assert_eq!(knn_classify(&ns, &labels), Some(1));
+    }
+
+    #[test]
+    fn classify_tie_resolves_to_nearest_first_label() {
+        let labels = vec![7u32, 3, 7, 3];
+        // 2 votes each; label 7's nearest rep (rank 0) beats label 3's
+        let ns = vec![nb(0, 0.1), nb(1, 0.2), nb(2, 0.3), nb(3, 0.4)];
+        assert_eq!(knn_classify(&ns, &labels), Some(7));
+        // reverse the ranks: label 3 now wins the tie
+        let ns = vec![nb(1, 0.1), nb(0, 0.2), nb(3, 0.3), nb(2, 0.4)];
+        assert_eq!(knn_classify(&ns, &labels), Some(3));
+    }
+
+    #[test]
+    fn classify_empty_is_none() {
+        assert_eq!(knn_classify(&[], &[1, 2, 3]), None);
+    }
+
+    #[test]
+    fn classify_k1_is_nearest_label() {
+        let labels = vec![9u32, 4];
+        assert_eq!(knn_classify(&[nb(1, 0.5)], &labels), Some(4));
+    }
+
+    #[test]
+    fn knn_eval_runs_small_and_behaves() {
+        let fig = run_knn_eval(&EvalOptions { scale: 0.05, seed: 11 }).unwrap();
+        // one recall + one accuracy series per k
+        assert_eq!(fig.series.len(), 2 * EVAL_KS.len());
+        for s in &fig.series {
+            assert!(!s.points.is_empty(), "{} empty", s.label);
+            for &(x, y, _) in &s.points {
+                assert!(x >= 1.0, "p >= 1");
+                assert!((0.0..=1.0).contains(&y), "{}: y={y} out of range", s.label);
+            }
+        }
+        // recall@k at full poll is exact: the scan covers everything, so
+        // the returned top-k IS the true top-k
+        for s in fig.series.iter().filter(|s| s.label.starts_with("recall@")) {
+            let (_, y, _) = *s.points.last().expect("has full-poll point");
+            assert!(
+                (y - 1.0).abs() < 1e-9,
+                "{} at full poll = {y}, want 1.0",
+                s.label
+            );
+        }
+    }
+}

@@ -2,9 +2,11 @@
 //! (see DESIGN.md §5 for the experiment index).
 
 pub mod figures;
+pub mod knn;
 pub mod report;
 pub mod runner;
 
 pub use figures::{run_figure, EvalOptions, ALL_FIGURES};
+pub use knn::{knn_classify, run_knn_eval};
 pub use report::{Figure, Series};
 pub use runner::{class_selection_trials, PatternModel, TrialConfig};

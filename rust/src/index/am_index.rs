@@ -6,8 +6,9 @@
 //!
 //! Query: score all `q` memories with the bilinear form (natively here;
 //! the PJRT path in [`crate::runtime`] produces identical scores), keep
-//! the top-`p` classes, exhaustively scan their members, return the best
-//! candidate.  Every step feeds the paper's [`OpsCounter`] cost model.
+//! the top-`p` classes, exhaustively scan their members with a fused
+//! `TopK(k)` accumulator, return the `k` nearest candidates.  Every step
+//! feeds the paper's [`OpsCounter`] cost model.
 
 use crate::data::dataset::Dataset;
 use crate::data::rng::Rng;
@@ -15,7 +16,7 @@ use crate::error::Result;
 use crate::memory::{score as mem_score, MemoryBank};
 use crate::metrics::OpsCounter;
 use crate::partition::{greedy_alloc, random_alloc, roundrobin, Allocation, Partition};
-use crate::search::{distance_pruned, invert_polled, lex_min_update, top_p_largest};
+use crate::search::{distance_pruned, invert_polled, top_p_largest, Neighbor, TopK};
 use crate::util::par::parallel_map;
 
 use super::params::IndexParams;
@@ -23,14 +24,34 @@ use super::params::IndexParams;
 /// Result of a single query.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QueryResult {
-    /// Database id of the best candidate found.
-    pub id: u32,
-    /// Its distance under the index metric.
-    pub distance: f32,
+    /// The k nearest candidates found, sorted ascending by
+    /// `(distance, id)`.  Empty when no candidate was scanned (every
+    /// polled class was empty); shorter than the requested `k` when fewer
+    /// candidates exist.
+    pub neighbors: Vec<Neighbor>,
     /// The classes that were polled, best score first.
     pub polled: Vec<u32>,
     /// Number of candidate vectors scanned.
     pub candidates: usize,
+}
+
+impl QueryResult {
+    /// The single best candidate, if any was scanned.
+    pub fn best(&self) -> Option<&Neighbor> {
+        self.neighbors.first()
+    }
+
+    /// Database id of the best candidate (`u32::MAX` when no candidate
+    /// was scanned — the historical sentinel, kept for the k = 1 view).
+    pub fn id(&self) -> u32 {
+        self.best().map_or(u32::MAX, |n| n.id)
+    }
+
+    /// Distance of the best candidate (`f32::INFINITY` when no candidate
+    /// was scanned).
+    pub fn distance(&self) -> f32 {
+        self.best().map_or(f32::INFINITY, |n| n.distance)
+    }
 }
 
 /// Built associative-memory index.
@@ -72,10 +93,7 @@ impl AmIndex {
         let member_refs: Vec<&[f32]> =
             member_bufs.iter().map(|d| d.as_flat()).collect();
         let bank = MemoryBank::build(data.dim(), &member_refs, params.rule)?;
-        let binary_sparse = data
-            .as_flat()
-            .iter()
-            .all(|&x| x == 0.0 || x == 1.0);
+        let binary_sparse = data.is_binary_sparse();
         Ok(AmIndex { params, partition, bank, data, binary_sparse })
     }
 
@@ -96,7 +114,7 @@ impl AmIndex {
             counts,
             params.rule,
         )?;
-        let binary_sparse = data.as_flat().iter().all(|&x| x == 0.0 || x == 1.0);
+        let binary_sparse = data.is_binary_sparse();
         Ok(AmIndex { params, partition, bank, data, binary_sparse })
     }
 
@@ -220,18 +238,19 @@ impl AmIndex {
     }
 
     /// Finish a query given precomputed class scores: select top-`p`
-    /// classes, scan their members, return the best candidate.
+    /// classes, scan their members, return the `k` nearest candidates.
     pub fn finish_query(
         &self,
         x: &[f32],
         scores: &[f32],
         p: usize,
+        k: usize,
         ops: &mut OpsCounter,
     ) -> QueryResult {
         let polled = top_p_largest(scores, p);
-        let (id, distance, candidates) = self.scan_classes(x, &polled, ops);
+        let (neighbors, candidates) = self.scan_classes(x, &polled, k, ops);
         ops.searches += 1;
-        QueryResult { id, distance, polled, candidates }
+        QueryResult { neighbors, polled, candidates }
     }
 
     /// Finish a whole batch of queries given the batch's precomputed
@@ -242,29 +261,36 @@ impl AmIndex {
     /// batch, scoring every query that polled it (the same batch fusion
     /// [`crate::memory::score::score_batch`] applies to the scoring
     /// stage).  Classes are scanned in parallel; within a class each
-    /// query keeps a fused TopK(1) accumulator `(best, best_id)` with
-    /// threshold-based early abandoning
-    /// ([`crate::search::distance_pruned`]).
+    /// query keeps a fused `TopK(k)` accumulator whose early-abandon
+    /// threshold is its current k-th best ([`TopK::bound`] feeding
+    /// [`crate::search::distance_pruned`]); per-class accumulators are
+    /// then merged into the per-query top-k.
     ///
     /// `scores` is `[B * q]` row-major; `ps[b]` is query `b`'s poll
-    /// depth; `ops[b]` receives query `b`'s scan-stage accounting.
+    /// depth; `ks[b]` its neighbor count; `ops[b]` receives query `b`'s
+    /// scan-stage accounting.
     ///
     /// Guaranteed bitwise-identical to `B` independent
-    /// [`Self::finish_query`] calls: polled order, candidate counts, op
-    /// counts, best id and best distance all match exactly (the batch
-    /// restructuring changes memory access order, never arithmetic — see
+    /// [`Self::finish_query`] calls at every `k`: polled order, candidate
+    /// counts, op counts, and each reported neighbor's id and distance
+    /// all match exactly (the batch restructuring changes memory access
+    /// order, never arithmetic — the k smallest under the total
+    /// `(distance, id)` order are invariant to candidate order, and
+    /// abandoned candidates provably cannot enter any top-k; see
     /// `prop_finish_batch_matches_sequential`).
     pub fn finish_batch(
         &self,
         queries: &[&[f32]],
         scores: &[f32],
         ps: &[usize],
+        ks: &[usize],
         ops: &mut [OpsCounter],
     ) -> Vec<QueryResult> {
         let q = self.params.n_classes;
         let b = queries.len();
         assert_eq!(scores.len(), b * q, "scores buffer must be [B * q]");
         assert_eq!(ps.len(), b, "one poll depth per query");
+        assert_eq!(ks.len(), b, "one neighbor count per query");
         assert_eq!(ops.len(), b, "one ops counter per query");
         let polled: Vec<Vec<u32>> = (0..b)
             .map(|bi| top_p_largest(&scores[bi * q..(bi + 1) * q], ps[bi]))
@@ -277,47 +303,47 @@ impl AmIndex {
         let metric = self.params.metric;
         // one pass over each polled class's member matrix, scoring every
         // querying batch member against each streamed row; per (class,
-        // query) a fused TopK(1) accumulator with early abandoning
-        let scan_class = |ci: usize| -> Vec<(u32, (f32, u32))> {
+        // query) a fused TopK(k) accumulator with early abandoning
+        let scan_class = |ci: usize| -> Vec<(u32, TopK)> {
             let queriers = &by_class[ci];
-            // (query index, (best distance, best id))
-            let mut bests: Vec<(u32, (f32, u32))> = queriers
+            let mut accs: Vec<(u32, TopK)> = queriers
                 .iter()
-                .map(|&bi| (bi, (f32::INFINITY, u32::MAX)))
+                .map(|&bi| (bi, TopK::new(ks[bi as usize].max(1))))
                 .collect();
             for &vid in self.partition.members(ci) {
                 let v = self.data.get(vid as usize);
-                for (qi, slot) in bests.iter_mut() {
+                for (qi, acc) in accs.iter_mut() {
                     let x = queries[*qi as usize];
                     // abandon candidates that provably exceed this
-                    // query's in-class best; ties survive for the
+                    // query's in-class k-th best; ties survive for the
                     // id tie-break
-                    if let Some(dist) = distance_pruned(metric, x, v, slot.0) {
-                        lex_min_update(slot, dist, vid);
+                    if let Some(dist) = distance_pruned(metric, x, v, acc.bound()) {
+                        acc.push(dist, vid);
                     }
                 }
             }
-            bests
+            accs
         };
         // parallel over active classes (each d²-sized slab touched by
         // exactly one thread) — but only when the batch is big enough to
         // amortize thread spawns; a batch of one stays spawn-free like
         // the sequential path it replaces
-        let class_bests: Vec<Vec<(u32, (f32, u32))>> = if b <= 1 || active.len() <= 1 {
+        let class_accs: Vec<Vec<(u32, TopK)>> = if b <= 1 || active.len() <= 1 {
             active.iter().map(|&ci| scan_class(ci)).collect()
         } else {
             parallel_map(active.len(), |i| scan_class(active[i]))
         };
-        // fold the per-class winners per query: the same lexicographic
-        // (distance, id) min rule as the sequential scan
-        let mut best: Vec<(f32, u32)> = vec![(f32::INFINITY, u32::MAX); b];
-        for bests in &class_bests {
-            for &(bi, (dist, vid)) in bests {
-                lex_min_update(&mut best[bi as usize], dist, vid);
+        // fold the per-class accumulators per query: the same total
+        // (distance, id) selection rule as the sequential scan
+        let mut best: Vec<TopK> =
+            ks.iter().map(|&k| TopK::new(k.max(1))).collect();
+        for accs in class_accs {
+            for (bi, acc) in accs {
+                best[bi as usize].merge(acc);
             }
         }
         let mut out = Vec::with_capacity(b);
-        for (bi, pol) in polled.into_iter().enumerate() {
+        for ((bi, pol), acc) in polled.into_iter().enumerate().zip(best) {
             let candidates: usize = pol
                 .iter()
                 .map(|&ci| self.partition.members(ci as usize).len())
@@ -330,8 +356,7 @@ impl AmIndex {
             ops[bi].scan_ops += (candidates * per_candidate) as u64;
             ops[bi].searches += 1;
             out.push(QueryResult {
-                id: best[bi].1,
-                distance: best[bi].0,
+                neighbors: acc.into_neighbors(),
                 polled: pol,
                 candidates,
             });
@@ -339,16 +364,18 @@ impl AmIndex {
         out
     }
 
-    /// Exhaustive scan over the members of the given classes.
+    /// Exhaustive top-`k` scan over the members of the given classes: a
+    /// single fused `TopK(k)` accumulator with threshold-based early
+    /// abandoning (bitwise-identical distances for every kept candidate).
     fn scan_classes(
         &self,
         x: &[f32],
         classes: &[u32],
+        k: usize,
         ops: &mut OpsCounter,
-    ) -> (u32, f32, usize) {
+    ) -> (Vec<Neighbor>, usize) {
         let metric = self.params.metric;
-        let mut best = f32::INFINITY;
-        let mut best_id = u32::MAX;
+        let mut acc = TopK::new(k.max(1));
         let mut candidates = 0usize;
         // sparse scan cost is c per candidate (§5.2: pkc), dense is d
         let per_candidate = if self.binary_sparse {
@@ -358,27 +385,39 @@ impl AmIndex {
         };
         for &ci in classes {
             for &vid in self.partition.members(ci as usize) {
-                let dist = metric.distance(x, self.data.get(vid as usize));
                 candidates += 1;
-                if dist < best || (dist == best && vid < best_id) {
-                    best = dist;
-                    best_id = vid;
+                if let Some(dist) =
+                    distance_pruned(metric, x, self.data.get(vid as usize), acc.bound())
+                {
+                    acc.push(dist, vid);
                 }
             }
         }
         ops.scan_ops += (candidates * per_candidate) as u64;
-        (best_id, best, candidates)
+        (acc.into_neighbors(), candidates)
     }
 
-    /// Full query: score, poll top-`p`, scan, with cost accounting.
+    /// Full 1-NN query: score, poll top-`p`, scan, with cost accounting.
     pub fn query(&self, x: &[f32], p: usize, ops: &mut OpsCounter) -> QueryResult {
-        let scores = self.score_classes(x, ops);
-        self.finish_query(x, &scores, p, ops)
+        self.query_k(x, p, 1, ops)
     }
 
-    /// Query with the index's default poll depth.
+    /// Full k-NN query: score, poll top-`p`, scan keeping the `k`
+    /// nearest, with cost accounting.
+    pub fn query_k(
+        &self,
+        x: &[f32],
+        p: usize,
+        k: usize,
+        ops: &mut OpsCounter,
+    ) -> QueryResult {
+        let scores = self.score_classes(x, ops);
+        self.finish_query(x, &scores, p, k, ops)
+    }
+
+    /// Query with the index's default poll depth and neighbor count.
     pub fn query_default(&self, x: &[f32], ops: &mut OpsCounter) -> QueryResult {
-        self.query(x, self.params.top_p, ops)
+        self.query_k(x, self.params.top_p, self.params.top_k, ops)
     }
 
     /// Adaptive query: the poll depth is chosen per query from the score
@@ -391,7 +430,7 @@ impl AmIndex {
     ) -> QueryResult {
         let scores = self.score_classes(x, ops);
         let p = policy.choose_p(&scores);
-        self.finish_query(x, &scores, p, ops)
+        self.finish_query(x, &scores, p, self.params.top_k, ops)
     }
 }
 
@@ -491,8 +530,7 @@ impl PoolingIndex {
                 ops.searches += 1;
                 return PoolingResult {
                     result: QueryResult {
-                        id,
-                        distance,
+                        neighbors: vec![Neighbor { id, distance }],
                         polled: vec![top as u32],
                         candidates: 0,
                     },
@@ -500,8 +538,8 @@ impl PoolingIndex {
                 };
             }
         }
-        // fallback: standard scan
-        let result = self.index.finish_query(x, &scores, p, ops);
+        // fallback: standard scan (the readout is inherently 1-NN)
+        let result = self.index.finish_query(x, &scores, p, 1, ops);
         PoolingResult { result, pooled: false }
     }
 }
@@ -535,10 +573,35 @@ mod tests {
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             // p = q: scan everything; the stored copy must be found
             let r = idx.query(wl.queries.get(qi), 4, &mut ops);
-            assert_eq!(r.id, gt);
-            assert_eq!(r.distance, 0.0);
+            assert_eq!(r.id(), gt);
+            assert_eq!(r.distance(), 0.0);
+            assert_eq!(r.neighbors.len(), 1, "k=1 returns exactly one neighbor");
             assert_eq!(r.candidates, 128);
         }
+    }
+
+    #[test]
+    fn query_k_returns_sorted_topk() {
+        let (idx, wl) = dense_index(13, 128, 4);
+        let mut ops = OpsCounter::new();
+        for qi in 0..10 {
+            let r = idx.query_k(wl.queries.get(qi), 4, 5, &mut ops);
+            assert_eq!(r.neighbors.len(), 5);
+            for w in r.neighbors.windows(2) {
+                assert!(
+                    w[0].distance < w[1].distance
+                        || (w[0].distance == w[1].distance && w[0].id < w[1].id),
+                    "neighbors not strictly (distance, id)-ascending: {:?}",
+                    r.neighbors
+                );
+            }
+            // the k=1 view of the k=5 result matches a k=1 query bitwise
+            let r1 = idx.query(wl.queries.get(qi), 4, &mut ops);
+            assert_eq!(r1.neighbors[0], r.neighbors[0]);
+        }
+        // k larger than the candidate set truncates to what exists
+        let r = idx.query_k(wl.queries.get(0), 4, 1000, &mut ops);
+        assert_eq!(r.neighbors.len(), 128);
     }
 
     #[test]
@@ -549,7 +612,7 @@ mod tests {
         let mut hits = 0;
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = idx.query(wl.queries.get(qi), 1, &mut ops);
-            if r.id == gt {
+            if r.id() == gt {
                 hits += 1;
             }
         }
@@ -645,7 +708,7 @@ mod tests {
             if r.pooled {
                 total_pooled += 1;
                 assert_eq!(r.result.candidates, 0, "pooled answers scan nothing");
-                if r.result.id == gt {
+                if r.result.id() == gt {
                     pooled_hits += 1;
                 }
             }
@@ -667,7 +730,7 @@ mod tests {
             let r = pool.query(wl.queries.get(qi), 2, &mut ops);
             // exact query + full poll fallback: answer always right
             // (either via an exact-match readout or the scan)
-            assert_eq!(r.result.id, gt, "query {qi}");
+            assert_eq!(r.result.id(), gt, "query {qi}");
         }
     }
 
@@ -683,7 +746,7 @@ mod tests {
         let mut hits = 0;
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = idx.query_adaptive(wl.queries.get(qi), &policy, &mut ops_adaptive);
-            if r.id == gt {
+            if r.id() == gt {
                 hits += 1;
             }
             idx.query(wl.queries.get(qi), 8, &mut ops_fixed);
@@ -710,8 +773,8 @@ mod tests {
         let mut ops = OpsCounter::new();
         // full poll: the inserted vector must be its own NN
         let r = idx.query(&v, 4, &mut ops);
-        assert_eq!(r.id, id);
-        assert_eq!(r.distance, 0.0);
+        assert_eq!(r.id(), id);
+        assert_eq!(r.distance(), 0.0);
     }
 
     #[test]
@@ -764,6 +827,8 @@ mod tests {
         let b = 6;
         let queries: Vec<&[f32]> = (0..b).map(|i| wl.queries.get(i)).collect();
         let ps: Vec<usize> = vec![1, 2, 3, 8, 8, 5];
+        // mixed k per query: 1 (legacy), mid-range, ≥ class size, > n
+        let ks: Vec<usize> = vec![1, 4, 1, 33, 300, 7];
         let mut flat_scores = Vec::new();
         let mut seq_results = Vec::new();
         let mut seq_ops = Vec::new();
@@ -771,12 +836,13 @@ mod tests {
             let mut throwaway = OpsCounter::new();
             let scores = idx.score_classes(x, &mut throwaway);
             let mut o = OpsCounter::new();
-            seq_results.push(idx.finish_query(x, &scores, ps[bi], &mut o));
+            seq_results.push(idx.finish_query(x, &scores, ps[bi], ks[bi], &mut o));
             seq_ops.push(o);
             flat_scores.extend_from_slice(&scores);
         }
         let mut batch_ops = vec![OpsCounter::new(); b];
-        let batch_results = idx.finish_batch(&queries, &flat_scores, &ps, &mut batch_ops);
+        let batch_results =
+            idx.finish_batch(&queries, &flat_scores, &ps, &ks, &mut batch_ops);
         assert_eq!(batch_results, seq_results);
         assert_eq!(batch_ops, seq_ops);
     }
@@ -797,18 +863,21 @@ mod tests {
         // query 0 polls the two empty classes (ties -> smallest index);
         // query 1 polls everything (p = q edge)
         let ps = vec![2usize, 4];
+        let ks = vec![3usize, 2];
         let mut batch_ops = vec![OpsCounter::new(); 2];
-        let results = idx.finish_batch(&queries, &flat_scores, &ps, &mut batch_ops);
+        let results = idx.finish_batch(&queries, &flat_scores, &ps, &ks, &mut batch_ops);
         assert_eq!(results[0].polled, vec![0, 1]);
         assert_eq!(results[0].candidates, 0);
-        assert_eq!(results[0].id, u32::MAX);
-        assert!(results[0].distance.is_infinite());
+        assert!(results[0].neighbors.is_empty(), "no candidates -> empty");
+        assert_eq!(results[0].id(), u32::MAX);
+        assert!(results[0].distance().is_infinite());
         assert_eq!(results[1].candidates, 4);
+        assert_eq!(results[1].neighbors.len(), 2);
         assert_eq!(results[1].polled.len(), 4);
         // bitwise identical to the sequential path on the same scores
         for bi in 0..2 {
             let mut o = OpsCounter::new();
-            let seq = idx.finish_query(&probe, &scores, ps[bi], &mut o);
+            let seq = idx.finish_query(&probe, &scores, ps[bi], ks[bi], &mut o);
             assert_eq!(results[bi], seq);
             assert_eq!(batch_ops[bi], o);
         }

@@ -18,7 +18,7 @@ use crate::data::rng::Rng;
 use crate::error::{Error, Result};
 use crate::memory::{MemoryBank, StorageRule};
 use crate::metrics::OpsCounter;
-use crate::search::top_p_largest;
+use crate::search::{distance_pruned, top_p_largest, TopK};
 
 use super::am_index::{AmIndex, QueryResult};
 use super::params::IndexParams;
@@ -100,13 +100,39 @@ impl HierarchicalIndex {
         self.super_of[c]
     }
 
-    /// Query through the cascade: poll `s` super-memories, descend into
-    /// the top `p1`, poll their classes, scan the top `p2` classes.
+    /// Online insert: forward to the flat index, then additively update
+    /// the affected super-class memory (the sum rule makes the
+    /// super-memory exactly `Σ_classes W_i`, so one
+    /// [`MemoryBank::add_to_class`] keeps the cascade consistent).
+    /// Returns the new vector id.
+    pub fn insert(&mut self, x: &[f32]) -> Result<u32> {
+        let id = self.inner.insert(x)?;
+        let class = self.inner.partition().class_of(id as usize) as usize;
+        let s = self.super_of[class] as usize;
+        self.super_bank.add_to_class(s, x);
+        Ok(id)
+    }
+
+    /// 1-NN query through the cascade (see [`Self::query_k`]).
     pub fn query(
         &self,
         x: &[f32],
         p1: usize,
         p2: usize,
+        ops: &mut OpsCounter,
+    ) -> QueryResult {
+        self.query_k(x, p1, p2, 1, ops)
+    }
+
+    /// k-NN query through the cascade: poll `s` super-memories, descend
+    /// into the top `p1`, poll their classes, scan the top `p2` classes
+    /// with a fused `TopK(k)` accumulator.
+    pub fn query_k(
+        &self,
+        x: &[f32],
+        p1: usize,
+        p2: usize,
+        k: usize,
         ops: &mut OpsCounter,
     ) -> QueryResult {
         let d = self.inner.dim();
@@ -141,24 +167,27 @@ impl HierarchicalIndex {
         ops.score_ops += (d * d * cand_classes.len()) as u64;
         let order = top_p_largest(&class_scores, p2.max(1).min(cand_classes.len()));
         let polled: Vec<u32> = order.iter().map(|&i| cand_classes[i as usize]).collect();
-        // scan
+        // scan: fused TopK(k) with early abandoning, the same selection
+        // rule as the flat index's candidate scan
         let metric = self.inner.params().metric;
-        let mut best = f32::INFINITY;
-        let mut best_id = u32::MAX;
+        let mut acc = TopK::new(k.max(1));
         let mut candidates = 0usize;
         for &ci in &polled {
             for &vid in self.inner.partition().members(ci as usize) {
-                let dist = metric.distance(x, self.inner.data().get(vid as usize));
                 candidates += 1;
-                if dist < best || (dist == best && vid < best_id) {
-                    best = dist;
-                    best_id = vid;
+                if let Some(dist) = distance_pruned(
+                    metric,
+                    x,
+                    self.inner.data().get(vid as usize),
+                    acc.bound(),
+                ) {
+                    acc.push(dist, vid);
                 }
             }
         }
         ops.scan_ops += (candidates * d) as u64;
         ops.searches += 1;
-        QueryResult { id: best_id, distance: best, polled, candidates }
+        QueryResult { neighbors: acc.into_neighbors(), polled, candidates }
     }
 
     /// Scoring cost of this cascade at depth `p1` (the flat cost is
@@ -222,7 +251,7 @@ mod tests {
         let mut ops = OpsCounter::new();
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = h.query(wl.queries.get(qi), 4, 16, &mut ops);
-            assert_eq!(r.id, gt, "query {qi}");
+            assert_eq!(r.id(), gt, "query {qi}");
         }
     }
 
@@ -250,11 +279,72 @@ mod tests {
         let mut hits = 0;
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = h.query(wl.queries.get(qi), 2, 2, &mut ops);
-            if r.id == gt {
+            if r.id() == gt {
                 hits += 1;
             }
         }
         assert!(hits >= 30, "hits={hits}/50");
+    }
+
+    #[test]
+    fn query_k_full_cascade_matches_flat_topk() {
+        let wl = workload(15);
+        let mut rng = Rng::new(16);
+        let params = IndexParams { n_classes: 8, ..Default::default() };
+        let h = HierarchicalIndex::build(wl.base.clone(), params, 2, &mut rng).unwrap();
+        let mut ops = OpsCounter::new();
+        for qi in 0..10 {
+            let x = wl.queries.get(qi);
+            // full cascade poll scans every vector: the top-k must match
+            // the flat index's full-poll top-k exactly
+            let hk = h.query_k(x, 2, 8, 5, &mut ops);
+            let fk = h.inner().query_k(x, 8, 5, &mut ops);
+            assert_eq!(hk.neighbors, fk.neighbors, "query {qi}");
+            assert_eq!(hk.candidates, wl.base.len());
+        }
+    }
+
+    #[test]
+    fn insert_updates_cascade_and_is_searchable() {
+        let wl = workload(17);
+        let mut rng = Rng::new(18);
+        let params = IndexParams { n_classes: 8, ..Default::default() };
+        let mut h =
+            HierarchicalIndex::build(wl.base.clone(), params, 2, &mut rng).unwrap();
+        let d = h.inner().dim();
+        let v: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let id = h.insert(&v).unwrap();
+        assert_eq!(id as usize, wl.base.len());
+        // the super-memory of the affected class is still the exact sum
+        // of its member class memories (the sum-rule invariant)
+        let sz = d * d;
+        for s in 0..2 {
+            let sw = h.super_bank.class_weights(s);
+            let mut sum = vec![0f32; sz];
+            for c in (s * 4)..(s * 4 + 4) {
+                for (a, b) in sum.iter_mut().zip(h.inner().bank().class_weights(c)) {
+                    *a += b;
+                }
+            }
+            for (a, b) in sw.iter().zip(&sum) {
+                assert!((a - b).abs() < 1e-2, "super {s}: {a} vs {b}");
+            }
+        }
+        // a full cascade poll must find the inserted vector as its own NN
+        let mut ops = OpsCounter::new();
+        let r = h.query(&v, 2, 8, &mut ops);
+        assert_eq!(r.id(), id);
+        assert_eq!(r.distance(), 0.0);
+        // repeated inserts stay consistent (partition + data + cascade)
+        for _ in 0..5 {
+            let w: Vec<f32> =
+                (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let wid = h.insert(&w).unwrap();
+            let r = h.query(&w, 2, 8, &mut ops);
+            assert_eq!(r.id(), wid);
+        }
+        h.inner().partition().validate().unwrap();
     }
 
     #[test]

@@ -13,6 +13,10 @@ pub struct IndexParams {
     /// Default number of classes polled per query (`p`, overridable per
     /// request).
     pub top_p: usize,
+    /// Default number of nearest neighbors returned per query (`k`,
+    /// overridable per request; clamped to the database size at query
+    /// time).
+    pub top_k: usize,
     /// Memory storage rule (sum = paper's analyzed rule, max = [19]).
     pub rule: StorageRule,
     /// How vectors are allocated to classes.
@@ -29,6 +33,7 @@ impl Default for IndexParams {
         IndexParams {
             n_classes: 64,
             top_p: 1,
+            top_k: 1,
             rule: StorageRule::Sum,
             allocation: Allocation::Random,
             metric: Metric::SqL2,
@@ -54,6 +59,9 @@ impl IndexParams {
                 "top_p {} must be in 1..={}",
                 self.top_p, self.n_classes
             )));
+        }
+        if self.top_k == 0 {
+            return Err(Error::Config("top_k must be > 0".into()));
         }
         if let Some(f) = self.greedy_cap_factor {
             if f < 1.0 {
@@ -87,6 +95,9 @@ mod tests {
         assert!(p.validate(10).is_err());
         p.top_p = 1;
         p.greedy_cap_factor = Some(0.5);
+        assert!(p.validate(10).is_err());
+        p.greedy_cap_factor = None;
+        p.top_k = 0;
         assert!(p.validate(10).is_err());
     }
 

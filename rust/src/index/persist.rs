@@ -6,11 +6,12 @@
 //!
 //! ```text
 //! magic    8B   "AMSEARCH"
-//! version  u32  (currently 1)
+//! version  u32  (currently 2)
 //! dim      u32
 //! n        u64  number of vectors
 //! q        u32  number of classes
 //! top_p    u32
+//! top_k    u32  (v2+; default neighbors returned per query)
 //! rule     u8   0 = sum, 1 = max
 //! alloc    u8   0 = random, 1 = greedy, 2 = round_robin
 //! metric   u8   0 = sq_l2, 1 = neg_dot, 2 = hamming
@@ -35,7 +36,7 @@ use super::am_index::AmIndex;
 use super::params::IndexParams;
 
 const MAGIC: &[u8; 8] = b"AMSEARCH";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Incremental FNV-1a 64 (integrity checksum; not cryptographic).
 struct Fnv(u64);
@@ -77,6 +78,7 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
     w.put(&(index.len() as u64).to_le_bytes())?;
     w.put(&(p.n_classes as u32).to_le_bytes())?;
     w.put(&(p.top_p as u32).to_le_bytes())?;
+    w.put(&(p.top_k as u32).to_le_bytes())?;
     w.put(&[match p.rule {
         StorageRule::Sum => 0u8,
         StorageRule::Max => 1,
@@ -164,13 +166,15 @@ pub fn load(path: &Path) -> Result<AmIndex> {
         return Err(Error::Data("not an amsearch index file".into()));
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if version == 0 || version > VERSION {
         return Err(Error::Data(format!("unsupported index version {version}")));
     }
     let dim = r.u32()? as usize;
     let n = r.u64()? as usize;
     let q = r.u32()? as usize;
     let top_p = r.u32()? as usize;
+    // v1 files predate per-request k and default to 1-NN
+    let top_k = if version >= 2 { r.u32()? as usize } else { 1 };
     let rule = match r.u8()? {
         0 => StorageRule::Sum,
         1 => StorageRule::Max,
@@ -192,6 +196,7 @@ pub fn load(path: &Path) -> Result<AmIndex> {
     let params = IndexParams {
         n_classes: q,
         top_p,
+        top_k,
         rule,
         allocation,
         metric,
@@ -237,7 +242,8 @@ mod tests {
     fn build(seed: u64) -> (AmIndex, crate::data::Workload) {
         let mut rng = Rng::new(seed);
         let wl = synthetic::dense_workload(16, 120, 20, QueryModel::Exact, &mut rng);
-        let params = IndexParams { n_classes: 6, top_p: 2, ..Default::default() };
+        let params =
+            IndexParams { n_classes: 6, top_p: 2, top_k: 3, ..Default::default() };
         (AmIndex::build(wl.base.clone(), params, &mut rng).unwrap(), wl)
     }
 
@@ -251,6 +257,7 @@ mod tests {
         assert_eq!(loaded.dim(), index.dim());
         assert_eq!(loaded.params().n_classes, 6);
         assert_eq!(loaded.params().top_p, 2);
+        assert_eq!(loaded.params().top_k, 3);
         let mut ops = OpsCounter::new();
         for qi in 0..wl.queries.len() {
             let x = wl.queries.get(qi);

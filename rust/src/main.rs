@@ -1,8 +1,8 @@
 //! `amsearch` — launcher CLI for the associative-memory ANN search system.
 //!
 //! ```text
-//! amsearch eval  [--figure N | --all] [--out-dir results] [--scale S] [--seed S]
-//! amsearch query [--config cfg.json] [--top-p P]
+//! amsearch eval  [--figure N|knn | --all] [--out-dir results] [--scale S] [--seed S]
+//! amsearch query [--config cfg.json] [--top-p P] [--top-k K]
 //! amsearch serve [--config cfg.json] [--workers N] [--backend native|pjrt] [--repeat R]
 //! amsearch artifacts [--dir artifacts]
 //! ```
@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
+use amsearch::baseline::Exhaustive;
 use amsearch::config::{AppConfig, DatasetKind};
 use amsearch::coordinator::{EngineFactory, SearchServer};
 use amsearch::data::clustered::{self, ClusteredSpec};
@@ -28,7 +29,7 @@ use amsearch::data::{io as data_io, mnist_like, santander_like};
 use amsearch::error::Result;
 use amsearch::eval::{run_figure, EvalOptions, ALL_FIGURES};
 use amsearch::index::AmIndex;
-use amsearch::metrics::{OpsCounter, Recall};
+use amsearch::metrics::{OpsCounter, Recall, RecallAtK};
 use amsearch::runtime::{Backend, Manifest};
 use amsearch::util::Args;
 
@@ -36,9 +37,9 @@ const USAGE: &str = "\
 usage: amsearch <command> [options]
 
 commands:
-  eval        regenerate paper figures   (--figure N | --all, --out-dir D,
-              --scale S, --seed S)
-  query       build index + run queries  (--config F, --top-p P,
+  eval        regenerate paper figures / eval modes
+              (--figure N|knn | --all, --out-dir D, --scale S, --seed S)
+  query       build index + run queries  (--config F, --top-p P, --top-k K,
               --index F.amidx to load instead of building)
   build       build index and save it     (--config F, --out F.amidx)
   serve       serve queries through the coordinator
@@ -149,6 +150,7 @@ fn cmd_build(cfg: &AppConfig, args: &Args) -> Result<()> {
 
 fn cmd_query(cfg: &AppConfig, args: &Args) -> Result<()> {
     let top_p: usize = args.get_parse("top-p", 0usize)?;
+    let top_k: usize = args.get_parse("top-k", 0usize)?;
     let wl = load_workload(cfg)?;
     let mut rng = Rng::new(cfg.dataset.seed ^ 0xA11C);
     let params = cfg.index.to_params();
@@ -178,23 +180,55 @@ fn cmd_query(cfg: &AppConfig, args: &Args) -> Result<()> {
         index
     };
 
-    let p = if top_p == 0 { params.top_p } else { top_p };
+    // defaults and metric come from the index actually being queried —
+    // a loaded index may carry different params than the config
+    let iparams = *index.params();
+    let p = if top_p == 0 { iparams.top_p } else { top_p };
+    let k = (if top_k == 0 { iparams.top_k } else { top_k })
+        .min(index.len())
+        .max(1);
     let mut ops = OpsCounter::new();
     let mut recall = Recall::new();
+    let mut recall_k = RecallAtK::new(k);
+    // exact top-k ground truth for recall@k (the 1-NN ids are already in
+    // the workload, so the reference is only needed at k > 1); computed
+    // BEFORE the timer so the wall-clock numbers measure only the index
+    let truth_k: Option<Vec<Vec<u32>>> = (k > 1).then(|| {
+        let reference = Exhaustive::new(wl.base.clone(), iparams.metric);
+        (0..wl.queries.len())
+            .map(|qi| {
+                let mut tops = OpsCounter::new();
+                reference
+                    .query_k(wl.queries.get(qi), k, &mut tops)
+                    .into_iter()
+                    .map(|n| n.id)
+                    .collect()
+            })
+            .collect()
+    });
     let started = Instant::now();
     for (qi, &gt) in wl.ground_truth.iter().enumerate() {
-        let r = index.query(wl.queries.get(qi), p, &mut ops);
-        recall.record(r.id == gt);
+        let x = wl.queries.get(qi);
+        let r = index.query_k(x, p, k, &mut ops);
+        recall.record(r.id() == gt);
+        if let Some(truth_k) = &truth_k {
+            let got: Vec<u32> = r.neighbors.iter().map(|n| n.id).collect();
+            recall_k.record(&got, &truth_k[qi]);
+        }
     }
     let elapsed = started.elapsed();
     let exhaustive_ops = (wl.base.len() * wl.base.dim()) as u64;
     println!(
-        "queries={} p={} recall@1={:.4} (+/-{:.4})",
+        "queries={} p={} k={} recall@1={:.4} (+/-{:.4})",
         recall.total(),
         p,
+        k,
         recall.value(),
         recall.std_error()
     );
+    if k > 1 {
+        println!("recall@{k}={:.4}", recall_k.value());
+    }
     println!(
         "ops/search={:.0} relative_complexity={:.4} (exhaustive={})",
         ops.per_search(),
@@ -253,9 +287,9 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
             while i < total {
                 let qi = i % wl.queries.len();
                 let resp = server
-                    .search(wl.queries.get(qi).to_vec(), 0)
+                    .search(wl.queries.get(qi).to_vec(), 0, 0)
                     .expect("search");
-                r.record(resp.neighbor == Some(wl.ground_truth[qi]));
+                r.record(resp.neighbor() == Some(wl.ground_truth[qi]));
                 i += streams;
             }
             r

@@ -7,4 +7,4 @@ pub mod recall;
 
 pub use latency::LatencyHistogram;
 pub use ops::{BatchScanStats, CostModel, OpsCounter};
-pub use recall::Recall;
+pub use recall::{Recall, RecallAtK};

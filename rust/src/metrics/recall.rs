@@ -5,6 +5,9 @@
 //!   score.
 //! * Figures 9–12 plot **recall@1**: the rate at which the true nearest
 //!   neighbor is found within the candidates of the first `p` classes.
+//! * The k-NN eval reports **recall@k** ([`RecallAtK`]): the fraction of
+//!   the true k nearest neighbors present in the returned k — the
+//!   standard ANN reporting axis (Andoni–Indyk–Razenshteyn 2018).
 
 /// Streaming recall@1 accumulator.
 #[derive(Debug, Clone, Copy, Default)]
@@ -62,6 +65,64 @@ impl Recall {
     }
 }
 
+/// Streaming recall@k accumulator: per query, the fraction of the exact
+/// k nearest neighbors that appear among the returned k
+/// (`|returned ∩ truth| / |truth|`, so a database smaller than k is not
+/// penalized).  At k = 1 with one returned id this is exactly [`Recall`].
+#[derive(Debug, Clone, Copy)]
+pub struct RecallAtK {
+    k: usize,
+    sum: f64,
+    total: u64,
+}
+
+impl RecallAtK {
+    /// Fresh accumulator for a given `k` (> 0).
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        RecallAtK { k, sum: 0.0, total: 0 }
+    }
+
+    /// The `k` this accumulator measures.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Record one query: `returned` are the ids the system answered
+    /// (nearest first), `truth` the exact nearest ids (nearest first).
+    /// Both are truncated to `k` before intersecting.
+    pub fn record(&mut self, returned: &[u32], truth: &[u32]) {
+        let truth = &truth[..truth.len().min(self.k)];
+        let returned = &returned[..returned.len().min(self.k)];
+        let hits = returned.iter().filter(|id| truth.contains(*id)).count();
+        if !truth.is_empty() {
+            self.sum += hits as f64 / truth.len() as f64;
+        }
+        self.total += 1;
+    }
+
+    /// Number of recorded queries.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean recall@k in [0, 1].
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Merge another accumulator (same `k`).
+    pub fn merge(&mut self, other: &RecallAtK) {
+        assert_eq!(self.k, other.k, "cannot merge recall@k of different k");
+        self.sum += other.sum;
+        self.total += other.total;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +168,55 @@ mod tests {
         let r = Recall::new();
         assert_eq!(r.value(), 0.0);
         assert_eq!(r.std_error(), 0.0);
+    }
+
+    #[test]
+    fn recall_at_k_counts_intersection() {
+        let mut r = RecallAtK::new(3);
+        r.record(&[1, 2, 3], &[1, 2, 3]); // perfect -> 1.0
+        r.record(&[1, 9, 8], &[1, 2, 3]); // one of three -> 1/3
+        r.record(&[7, 8, 9], &[1, 2, 3]); // none -> 0
+        assert_eq!(r.total(), 3);
+        assert!((r.value() - (1.0 + 1.0 / 3.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_at_k_order_independent_and_truncating() {
+        let mut r = RecallAtK::new(2);
+        // extra entries beyond k are ignored on both sides
+        r.record(&[5, 4, 999], &[4, 5, 777]);
+        assert_eq!(r.value(), 1.0);
+        // truth shorter than k (n < k): not penalized
+        let mut r = RecallAtK::new(10);
+        r.record(&[3, 1, 2], &[1, 2, 3]);
+        assert_eq!(r.value(), 1.0);
+    }
+
+    #[test]
+    fn recall_at_1_matches_hit_based_recall() {
+        let mut a = RecallAtK::new(1);
+        let mut b = Recall::new();
+        for (ret, truth) in [(4u32, 4u32), (5, 9), (1, 1), (0, 2)] {
+            a.record(&[ret], &[truth]);
+            b.record(ret == truth);
+        }
+        assert_eq!(a.value(), b.value());
+    }
+
+    #[test]
+    fn recall_at_k_merge() {
+        let mut a = RecallAtK::new(2);
+        a.record(&[1, 2], &[1, 2]);
+        let mut b = RecallAtK::new(2);
+        b.record(&[8, 9], &[1, 2]);
+        a.merge(&b);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.value(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn recall_at_k_zero_panics() {
+        RecallAtK::new(0);
     }
 }

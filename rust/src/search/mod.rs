@@ -6,4 +6,4 @@ pub mod topk;
 
 pub use distance::{distance_pruned, Metric};
 pub use policy::AdaptivePolicy;
-pub use topk::{invert_polled, lex_min_update, top_p_largest, TopK};
+pub use topk::{invert_polled, one_nn, top_p_largest, Neighbor, TopK};

@@ -1,15 +1,38 @@
 //! Bounded top-k selection.
 //!
 //! `TopK` keeps the k smallest items seen so far under the lexicographic
-//! `(key, id)` order (a bounded max-heap); used for candidate-scan
-//! results (k smallest distances), per-query accumulators in the batched
-//! class-grouped scan, and, with negated keys, top-p class selection.
+//! `(key, id)` order (a bounded max-heap); used as the fused per-query
+//! `TopK(k)` accumulator of every candidate scan (its [`TopK::bound`] is
+//! the early-abandon threshold, the current k-th best), for candidate-scan
+//! results (k smallest distances), and, with negated keys, top-p class
+//! selection.
 //!
 //! NaN keys sort last: they are never admitted to the heap, so a NaN
 //! distance or score can never be selected and never poisons the
 //! comparisons (`into_sorted` cannot panic on NaN).
 
 use std::cmp::Ordering;
+
+/// One ranked answer of a k-NN search: a database id and its distance
+/// under the index metric.  Results are reported as `Vec<Neighbor>`
+/// sorted ascending by `(distance, id)`; an empty vector means no
+/// candidate was scanned.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Database id of the candidate.
+    pub id: u32,
+    /// Its distance under the index metric (smaller is closer).
+    pub distance: f32,
+}
+
+/// The 1-NN view of a k-NN result: the best `(id, distance)` pair, or
+/// the historical `(u32::MAX, f32::INFINITY)` sentinel when no candidate
+/// was scanned.  The single place the sentinel convention lives.
+pub fn one_nn(neighbors: &[Neighbor]) -> (u32, f32) {
+    neighbors
+        .first()
+        .map_or((u32::MAX, f32::INFINITY), |n| (n.id, n.distance))
+}
 
 /// Bounded "k smallest by `(key, id)`" selector.
 #[derive(Debug, Clone)]
@@ -48,6 +71,11 @@ impl TopK {
         self.heap.is_empty()
     }
 
+    /// The selection size `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
     /// Largest kept key (the current cutoff), if full.  Used as the
     /// pruning threshold by the batched candidate scan.
     pub fn threshold(&self) -> Option<f32> {
@@ -55,6 +83,27 @@ impl TopK {
             Some(self.heap[0].0)
         } else {
             None
+        }
+    }
+
+    /// Early-abandon bound of the fused top-k scan: the current k-th best
+    /// key once `k` items are held, `+inf` before that.  A candidate whose
+    /// key provably exceeds this bound can never enter the selection (ties
+    /// survive for the id tie-break).  At k = 1 this degenerates bitwise
+    /// to the former `(best, best_id)` pair's `best`.
+    #[inline]
+    pub fn bound(&self) -> f32 {
+        self.threshold().unwrap_or(f32::INFINITY)
+    }
+
+    /// Fold another selector into this one (used to merge the per-class
+    /// accumulators of the class-major batched scan into the per-query
+    /// result).  The merge commutes with push order: the k smallest under
+    /// the total `(key, id)` order are kept no matter how candidates were
+    /// split across selectors.
+    pub fn merge(&mut self, other: TopK) {
+        for (key, id) in other.heap {
+            self.push(key, id);
         }
     }
 
@@ -112,6 +161,15 @@ impl TopK {
             .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         self.heap
     }
+
+    /// Consume into [`Neighbor`]s sorted ascending by `(distance, id)` —
+    /// the k-NN result contract of every search path.
+    pub fn into_neighbors(self) -> Vec<Neighbor> {
+        self.into_sorted()
+            .into_iter()
+            .map(|(distance, id)| Neighbor { id, distance })
+            .collect()
+    }
 }
 
 /// Select the indices of the `p` largest values (top-p classes by score),
@@ -124,18 +182,6 @@ pub fn top_p_largest(values: &[f32], p: usize) -> Vec<u32> {
         sel.push(-v, i as u32); // negate: TopK keeps smallest
     }
     sel.into_sorted().into_iter().map(|(_, i)| i).collect()
-}
-
-/// In-place lexicographic `(key, id)` minimum update — the candidate
-/// scans' shared selection rule (strictly smaller key wins; equal keys
-/// resolve to the smaller id; NaN keys never win).  Both the native
-/// class-grouped scan and the PJRT scan fold through this exact
-/// function, which is what keeps their tie-breaking identical.
-#[inline]
-pub fn lex_min_update(best: &mut (f32, u32), key: f32, id: u32) {
-    if key < best.0 || (key == best.0 && id < best.1) {
-        *best = (key, id);
-    }
 }
 
 /// Invert a per-query polled-class map into (class → querying batch
@@ -254,18 +300,21 @@ mod tests {
     }
 
     #[test]
-    fn lex_min_update_matches_scan_rule() {
-        let mut best = (f32::INFINITY, u32::MAX);
-        lex_min_update(&mut best, 3.0, 7);
-        assert_eq!(best, (3.0, 7));
-        lex_min_update(&mut best, 3.0, 9); // larger id on tie: no change
-        assert_eq!(best, (3.0, 7));
-        lex_min_update(&mut best, 3.0, 2); // smaller id on tie: wins
-        assert_eq!(best, (3.0, 2));
-        lex_min_update(&mut best, f32::NAN, 0); // NaN never wins
-        assert_eq!(best, (3.0, 2));
-        lex_min_update(&mut best, 1.0, 5);
-        assert_eq!(best, (1.0, 5));
+    fn topk1_matches_legacy_scan_rule() {
+        // the rule the pre-k-NN (best, best_id) pair implemented:
+        // strictly smaller key wins, equal keys resolve to the smaller
+        // id, NaN never wins — TopK(1) must reproduce it exactly
+        let mut t = TopK::new(1);
+        t.push(3.0, 7);
+        assert_eq!(t.clone().into_sorted(), vec![(3.0, 7)]);
+        t.push(3.0, 9); // larger id on tie: no change
+        assert_eq!(t.clone().into_sorted(), vec![(3.0, 7)]);
+        t.push(3.0, 2); // smaller id on tie: wins
+        assert_eq!(t.clone().into_sorted(), vec![(3.0, 2)]);
+        t.push(f32::NAN, 0); // NaN never wins
+        assert_eq!(t.clone().into_sorted(), vec![(3.0, 2)]);
+        t.push(1.0, 5);
+        assert_eq!(t.into_sorted(), vec![(1.0, 5)]);
     }
 
     #[test]
@@ -276,6 +325,58 @@ mod tests {
         assert_eq!(by_class[1], vec![3]);
         assert_eq!(by_class[2], vec![0, 1, 3]);
         assert!(by_class[3].is_empty());
+    }
+
+    #[test]
+    fn bound_degenerates_to_best_at_k1() {
+        let mut t = TopK::new(1);
+        assert_eq!(t.bound(), f32::INFINITY);
+        t.push(5.0, 0);
+        assert_eq!(t.bound(), 5.0);
+        t.push(2.0, 1);
+        assert_eq!(t.bound(), 2.0);
+        t.push(9.0, 2); // worse: bound unchanged
+        assert_eq!(t.bound(), 2.0);
+    }
+
+    #[test]
+    fn merge_equals_single_accumulator() {
+        use crate::data::rng::Rng;
+        let mut rng = Rng::new(17);
+        for _ in 0..30 {
+            let n = 1 + rng.below(100) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let parts = 1 + rng.below(5) as usize;
+            let vals: Vec<f32> = (0..n).map(|_| rng.below(15) as f32).collect();
+            let mut single = TopK::new(k);
+            let mut split: Vec<TopK> = (0..parts).map(|_| TopK::new(k)).collect();
+            for (i, &v) in vals.iter().enumerate() {
+                single.push(v, i as u32);
+                split[i % parts].push(v, i as u32);
+            }
+            let mut merged = TopK::new(k);
+            for part in split {
+                merged.merge(part);
+            }
+            assert_eq!(merged.into_sorted(), single.into_sorted());
+        }
+    }
+
+    #[test]
+    fn into_neighbors_sorted_ascending() {
+        let mut t = TopK::new(3);
+        for (i, &v) in [4.0f32, 1.0, 3.0, 2.0].iter().enumerate() {
+            t.push(v, i as u32);
+        }
+        let ns = t.into_neighbors();
+        assert_eq!(
+            ns,
+            vec![
+                Neighbor { id: 1, distance: 1.0 },
+                Neighbor { id: 3, distance: 2.0 },
+                Neighbor { id: 2, distance: 3.0 },
+            ]
+        );
     }
 
     #[test]

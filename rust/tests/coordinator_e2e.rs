@@ -42,14 +42,14 @@ fn serves_concurrent_clients_correctly() {
         for j in 0..per_client {
             let qi = (ci * per_client + j) % wl.queries.len();
             // p = q (full poll): response must be the exact stored copy
-            let resp = server.search(wl.queries.get(qi).to_vec(), 8).unwrap();
-            if resp.neighbor == Some(wl.ground_truth[qi]) {
+            let resp = server.search(wl.queries.get(qi).to_vec(), 8, 1).unwrap();
+            if resp.neighbor() == Some(wl.ground_truth[qi]) {
                 hits += 1;
             } else {
                 eprintln!("MISS ci={ci} j={j} qi={qi} got={:?} want={} dist={} id={} polled={:?}",
-                    resp.neighbor, wl.ground_truth[qi], resp.distance, resp.id, resp.polled);
+                    resp.neighbor(), wl.ground_truth[qi], resp.distance(), resp.id, resp.polled);
             }
-            assert_eq!(resp.distance, 0.0);
+            assert_eq!(resp.distance(), 0.0);
             assert_eq!(resp.polled.len(), 8);
         }
         hits
@@ -78,7 +78,7 @@ fn batching_actually_groups_requests() {
     let total = 64;
     amsearch::util::concurrent_map(total, 16, |i| {
         let qi = i % wl.queries.len();
-        server.search(wl.queries.get(qi).to_vec(), 1).unwrap()
+        server.search(wl.queries.get(qi).to_vec(), 1, 1).unwrap()
     });
     let m = server.metrics();
     assert_eq!(m.requests, total as u64);
@@ -95,8 +95,36 @@ fn rejects_wrong_dimension() {
     let (index, _) = build_index(3, 32, 128, 4);
     let server =
         SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
-    let err = server.search(vec![0.0; 31], 1).unwrap_err();
+    let err = server.search(vec![0.0; 31], 1, 1).unwrap_err();
     assert!(err.to_string().contains("dim"));
+    server.shutdown();
+}
+
+#[test]
+fn top_k_boundary_validation_default_and_clamp() {
+    // n = 128; the server boundary must (a) substitute the index default
+    // at top_k = 0, (b) clamp top_k > n to n, (c) return sorted
+    // neighbors for any accepted k
+    let (index, wl) = build_index(8, 32, 128, 4);
+    let server =
+        SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
+    // (a) top_k = 0 -> index default (top_k = 1)
+    let resp = server.search(wl.queries.get(0).to_vec(), 4, 0).unwrap();
+    assert_eq!(resp.neighbors.len(), 1);
+    // (b) top_k far beyond n -> clamped to n, full poll returns all 128
+    let resp = server.search(wl.queries.get(0).to_vec(), 4, 1_000_000).unwrap();
+    assert_eq!(resp.neighbors.len(), 128);
+    // (c) a mid-range k comes back sorted ascending by (distance, id)
+    let resp = server.search(wl.queries.get(1).to_vec(), 4, 9).unwrap();
+    assert_eq!(resp.neighbors.len(), 9);
+    assert_eq!(resp.neighbor(), Some(wl.ground_truth[1]));
+    for w in resp.neighbors.windows(2) {
+        assert!(
+            w[0].distance < w[1].distance
+                || (w[0].distance == w[1].distance && w[0].id < w[1].id),
+            "response neighbors not (distance, id)-ascending"
+        );
+    }
     server.shutdown();
 }
 
@@ -105,8 +133,9 @@ fn zero_top_p_uses_index_default() {
     let (index, wl) = build_index(4, 32, 128, 4);
     let server =
         SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
-    let resp = server.search(wl.queries.get(0).to_vec(), 0).unwrap();
+    let resp = server.search(wl.queries.get(0).to_vec(), 0, 0).unwrap();
     assert_eq!(resp.polled.len(), 2); // index default top_p = 2
+    assert_eq!(resp.neighbors.len(), 1); // index default top_k = 1
     server.shutdown();
 }
 
@@ -120,13 +149,17 @@ fn no_candidates_surfaces_as_none_through_the_server() {
     let server =
         SearchServer::start(native_factory(Arc::new(index)), CoordinatorConfig::default())
             .unwrap();
-    let resp = server.search(vec![0., 0., 1.], 2).unwrap();
-    assert_eq!(resp.neighbor, None);
+    let resp = server.search(vec![0., 0., 1.], 2, 1).unwrap();
+    assert!(resp.neighbors.is_empty());
+    assert_eq!(resp.neighbor(), None);
     assert_eq!(resp.candidates, 0);
-    assert!(resp.distance.is_infinite());
+    assert!(resp.distance().is_infinite());
+    // the empty-neighbors protocol holds at k > 1 too
+    let resp = server.search(vec![0., 0., 1.], 2, 3).unwrap();
+    assert!(resp.neighbors.is_empty());
     // a full poll still reaches the stored vectors
-    let resp = server.search(vec![0., 0., 1.], 4).unwrap();
-    assert_eq!(resp.neighbor, Some(0));
+    let resp = server.search(vec![0., 0., 1.], 4, 1).unwrap();
+    assert_eq!(resp.neighbor(), Some(0));
     server.shutdown();
 }
 
@@ -136,7 +169,7 @@ fn shutdown_then_search_fails_cleanly() {
     let server =
         SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
     server.shutdown();
-    assert!(server.search(wl.queries.get(0).to_vec(), 1).is_err());
+    assert!(server.search(wl.queries.get(0).to_vec(), 1, 1).is_err());
 }
 
 #[test]
@@ -145,7 +178,7 @@ fn ops_accounting_flows_to_metrics() {
     let server =
         SearchServer::start(native_factory(index), CoordinatorConfig::default()).unwrap();
     for qi in 0..10 {
-        server.search(wl.queries.get(qi).to_vec(), 1).unwrap();
+        server.search(wl.queries.get(qi).to_vec(), 1, 1).unwrap();
     }
     let m = server.metrics();
     assert_eq!(m.ops.searches, 10);
@@ -176,8 +209,8 @@ fn pjrt_backend_serves_if_artifacts_present() {
     let server = Arc::new(SearchServer::start(factory, config).unwrap());
     let hits: Vec<bool> = amsearch::util::concurrent_map(24, 8, |i| {
         let qi = i % wl.queries.len();
-        let resp = server.search(wl.queries.get(qi).to_vec(), 64).unwrap();
-        resp.neighbor == Some(wl.ground_truth[qi])
+        let resp = server.search(wl.queries.get(qi).to_vec(), 64, 1).unwrap();
+        resp.neighbor() == Some(wl.ground_truth[qi])
     });
     assert!(hits.iter().all(|&h| h), "full poll through PJRT must be exact");
     server.shutdown();

@@ -35,7 +35,7 @@ fn sparse_regime_accuracy_and_cost() {
     let mut recall = Recall::new();
     for (qi, &gt) in wl.ground_truth.iter().enumerate() {
         let r = index.query(wl.queries.get(qi), 1, &mut ops);
-        recall.record(r.id == gt);
+        recall.record(r.id() == gt);
     }
     assert!(recall.value() > 0.8, "recall={}", recall.value());
 
@@ -74,9 +74,9 @@ fn dense_corrupted_queries_still_recoverable() {
         let x = wl.queries.get(qi);
         let r1 = index.query(x, 1, &mut ops);
         // corrupted query: its exact NN is overwhelmingly the original
-        top1.record(r1.id == gt);
+        top1.record(r1.id() == gt);
         let r3 = index.query(x, 3, &mut ops);
-        top3.record(r3.id == gt);
+        top3.record(r3.id() == gt);
     }
     assert!(top3.value() >= top1.value());
     assert!(top1.value() > 0.5, "top1={}", top1.value());
@@ -99,7 +99,7 @@ fn recall_monotone_in_p_and_exact_at_full_poll() {
         let mut recall = Recall::new();
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = index.query(wl.queries.get(qi), p, &mut ops);
-            recall.record(r.id == gt);
+            recall.record(r.id() == gt);
         }
         assert!(
             recall.value() >= last - 1e-9,
@@ -141,7 +141,7 @@ fn greedy_beats_random_on_clustered_data() {
         let mut recall = Recall::new();
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = index.query(wl.queries.get(qi), 1, &mut ops);
-            recall.record(r.id == gt);
+            recall.record(r.id() == gt);
         }
         recalls.push(recall.value());
     }
@@ -171,9 +171,44 @@ fn all_methods_exact_when_fully_polled() {
     for qi in 0..wl.queries.len() {
         let x = wl.queries.get(qi);
         let (want, _) = ex.query(x, &mut ops);
-        assert_eq!(am.query(x, 4, &mut ops).id, want, "am, query {qi}");
+        assert_eq!(am.query(x, 4, &mut ops).id(), want, "am, query {qi}");
         assert_eq!(rs.query(x, 10, &mut ops).0, want, "rs, query {qi}");
         assert_eq!(hy.query(x, 4, &mut ops).0, want, "hybrid, query {qi}");
+    }
+}
+
+/// All k-NN paths agree with the exhaustive top-k when configured for
+/// exact search: the AM index at p = q, the hierarchical cascade at a
+/// full cascade poll, IVF at full probe, and the hybrid with covering
+/// anchors all report the identical neighbor list.
+#[test]
+fn all_methods_topk_agree_when_fully_polled() {
+    use amsearch::baseline::IvfFlat;
+    use amsearch::index::HierarchicalIndex;
+    let mut rng = Rng::new(9);
+    let spec = ClusteredSpec { dim: 16, n_clusters: 4, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, 400, 30, &mut rng);
+    let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+
+    let params = IndexParams { n_classes: 4, ..Default::default() };
+    let am = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let h = HierarchicalIndex::build(wl.base.clone(), params, 2, &mut rng).unwrap();
+    let ivf = IvfFlat::build(wl.base.clone(), 6, 15, Metric::SqL2, &mut rng).unwrap();
+    let hy = HybridIndex::build(wl.base.clone(), params, 100.0, 1000, &mut rng).unwrap();
+
+    let k = 10;
+    let mut ops = OpsCounter::new();
+    for qi in 0..wl.queries.len() {
+        let x = wl.queries.get(qi);
+        let want = ex.query_k(x, k, &mut ops);
+        assert_eq!(am.query_k(x, 4, k, &mut ops).neighbors, want, "am, query {qi}");
+        assert_eq!(
+            h.query_k(x, 2, 4, k, &mut ops).neighbors,
+            want,
+            "hierarchical, query {qi}"
+        );
+        assert_eq!(ivf.query_k(x, 6, k, &mut ops).0, want, "ivf, query {qi}");
+        assert_eq!(hy.query_k(x, 4, k, &mut ops), want, "hybrid, query {qi}");
     }
 }
 
@@ -197,7 +232,7 @@ fn max_rule_comparable_on_sparse() {
         let mut recall = Recall::new();
         for (qi, &gt) in wl.ground_truth.iter().enumerate() {
             let r = index.query(wl.queries.get(qi), 1, &mut ops);
-            recall.record(r.id == gt);
+            recall.record(r.id() == gt);
         }
         values.push(recall.value());
     }

@@ -200,10 +200,12 @@ fn prop_ops_match_cost_model() {
 }
 
 /// `finish_batch` over a batch of B queries is bitwise-identical to B
-/// independent `finish_query` calls — results (id, distance, polled
-/// order, candidate counts) AND per-query op accounting — across dense
-/// ±1 and sparse 0-1 workloads, random poll depths including p = q, and
-/// partitions that may contain empty classes (greedy with a tight cap).
+/// independent `finish_query` calls — results (neighbor ids, distances,
+/// polled order, candidate counts) AND per-query op accounting — across
+/// dense ±1 and sparse 0-1 workloads, random poll depths including
+/// p = q, random neighbor counts including k = 1, k ≥ class size and
+/// k > n, and partitions that may contain empty classes (greedy with a
+/// tight cap).
 #[test]
 fn prop_finish_batch_matches_sequential() {
     use amsearch::partition::Allocation;
@@ -245,6 +247,17 @@ fn prop_finish_batch_matches_sequential() {
         let mut ps: Vec<usize> =
             (0..b).map(|_| 1 + rng.below(q as u64) as usize).collect();
         ps[b - 1] = q; // always exercise the p = q edge
+        // random k per query, spanning k = 1 up to past the database
+        // size; the first query always exercises k = 1 (the legacy 1-NN
+        // pipeline) and, when the batch is big enough, the last two pin
+        // k ≥ class size and k > n
+        let mut ks: Vec<usize> =
+            (0..b).map(|_| 1 + rng.below((n + 4) as u64) as usize).collect();
+        ks[0] = 1;
+        if b >= 3 {
+            ks[b - 2] = n.div_ceil(q) + 1; // ≥ every class size
+            ks[b - 1] = n + 3; // > n: returns everything scanned
+        }
 
         // the same per-query scores feed both paths (the scan-stage
         // equivalence is what this property pins down)
@@ -255,19 +268,66 @@ fn prop_finish_batch_matches_sequential() {
             let mut throwaway = OpsCounter::new();
             let scores = index.score_classes(x, &mut throwaway);
             let mut o = OpsCounter::new();
-            seq_results.push(index.finish_query(x, &scores, ps[bi], &mut o));
+            seq_results.push(index.finish_query(x, &scores, ps[bi], ks[bi], &mut o));
             seq_ops.push(o);
             flat_scores.extend_from_slice(&scores);
         }
         let mut batch_ops = vec![OpsCounter::new(); b];
         let batch_results =
-            index.finish_batch(&queries, &flat_scores, &ps, &mut batch_ops);
+            index.finish_batch(&queries, &flat_scores, &ps, &ks, &mut batch_ops);
         assert_eq!(batch_results, seq_results, "results diverged");
         assert_eq!(batch_ops, seq_ops, "op accounting diverged");
-        // f32 equality above is not approximate: require bit equality of
-        // the reported distances too
-        for (a, s) in batch_results.iter().zip(&seq_results) {
-            assert_eq!(a.distance.to_bits(), s.distance.to_bits());
+        for (bi, (a, s)) in batch_results.iter().zip(&seq_results).enumerate() {
+            // f32 equality above is not approximate: require bit equality
+            // of every reported distance too
+            assert_eq!(a.neighbors.len(), s.neighbors.len(), "query {bi}");
+            for (an, sn) in a.neighbors.iter().zip(&s.neighbors) {
+                assert_eq!(an.id, sn.id, "query {bi}");
+                assert_eq!(
+                    an.distance.to_bits(),
+                    sn.distance.to_bits(),
+                    "query {bi}"
+                );
+            }
+            // never more neighbors than requested or than scanned
+            assert!(a.neighbors.len() <= ks[bi].min(a.candidates), "query {bi}");
+        }
+    });
+}
+
+/// At a full poll (p = q), the index's top-k equals the exhaustive
+/// baseline's top-k exactly — neighbor ids and bitwise distances — so
+/// AM ground truth and baselines stay comparable at every k.
+#[test]
+fn prop_full_poll_topk_matches_exhaustive() {
+    use amsearch::baseline::Exhaustive;
+    use amsearch::search::Metric;
+    cases(15, |rng| {
+        let dense = rng.bernoulli(0.5);
+        let d = 8 + rng.below(24) as usize;
+        let q = 1 + rng.below(6) as usize;
+        let n = q + rng.below(120) as usize;
+        let wl = if dense {
+            synthetic::dense_workload(d, n, 4, QueryModel::Exact, rng)
+        } else {
+            synthetic::sparse_workload(
+                SparseSpec { dim: d, ones: 3.0 },
+                n,
+                4,
+                QueryModel::Exact,
+                rng,
+            )
+        };
+        let params = IndexParams { n_classes: q, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, rng).unwrap();
+        let ex = Exhaustive::new(wl.base.clone(), Metric::SqL2);
+        let k = 1 + rng.below((n + 2) as u64) as usize;
+        let mut ops = OpsCounter::new();
+        for qi in 0..wl.queries.len() {
+            let x = wl.queries.get(qi);
+            let got = index.query_k(x, q, k, &mut ops).neighbors;
+            let want = ex.query_k(x, k, &mut ops);
+            assert_eq!(got, want, "query {qi} (d={d} q={q} n={n} k={k})");
         }
     });
 }

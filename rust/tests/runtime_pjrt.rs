@@ -106,9 +106,9 @@ fn pjrt_end_to_end_query_equals_native_query() {
     for qi in 0..wl.queries.len() {
         let x = wl.queries.get(qi);
         let scores = pjrt.score(x).unwrap();
-        let via_pjrt = idx.finish_query(x, &scores, 4, &mut ops);
+        let via_pjrt = idx.finish_query(x, &scores, 4, 1, &mut ops);
         let via_native = idx.query(x, 4, &mut ops);
-        assert_eq!(via_pjrt.id, via_native.id, "query {qi}");
+        assert_eq!(via_pjrt.id(), via_native.id(), "query {qi}");
         assert_eq!(via_pjrt.polled, via_native.polled, "query {qi}");
     }
 }
@@ -169,20 +169,24 @@ fn pjrt_engine_with_scan_matches_native_engine() {
     let pjrt = Engine::pjrt(idx.clone(), &dir).unwrap();
     // n=4096, q=64 -> k=64 <= 256 artifact capacity: scan goes via PJRT
     assert!(pjrt.has_pjrt_scan(), "expected PJRT scan path to activate");
-    let queries: Vec<(&[f32], usize)> =
-        (0..8).map(|i| (wl.queries.get(i), 4usize)).collect();
+    // k = 3: both backends must agree on the whole ranked neighbor list
+    let queries: Vec<(&[f32], usize, usize)> =
+        (0..8).map(|i| (wl.queries.get(i), 4usize, 3usize)).collect();
     let a = native.serve_batch(&queries).unwrap();
     let b = pjrt.serve_batch(&queries).unwrap();
     for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
-        assert_eq!(ra.neighbor, rb.neighbor, "query {i}");
         assert_eq!(ra.polled, rb.polled, "query {i}");
         assert_eq!(ra.candidates, rb.candidates, "query {i}");
-        assert!(
-            (ra.distance - rb.distance).abs() / ra.distance.max(1.0) < 1e-3,
-            "query {i}: {} vs {}",
-            ra.distance,
-            rb.distance
-        );
+        assert_eq!(ra.neighbors.len(), rb.neighbors.len(), "query {i}");
+        for (na, nb) in ra.neighbors.iter().zip(&rb.neighbors) {
+            assert_eq!(na.id, nb.id, "query {i}");
+            assert!(
+                (na.distance - nb.distance).abs() / na.distance.max(1.0) < 1e-3,
+                "query {i}: {} vs {}",
+                na.distance,
+                nb.distance
+            );
+        }
     }
 }
 
