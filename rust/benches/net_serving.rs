@@ -1,0 +1,88 @@
+//! End-to-end TCP serving benchmark: a full in-process stack (index →
+//! coordinator → TCP front door on an ephemeral localhost port) driven
+//! by the closed-loop load generator across (connections × depth)
+//! cells.  The reported latency is the *network* figure of merit —
+//! submit-to-response over a real socket, through framing, the bounded
+//! request queue, dynamic batching, and the class-grouped scan.
+//!
+//! Set `AMSEARCH_BENCH_JSON=BENCH_net_serving.json` to emit the
+//! measurements as a machine-readable artifact, and `AMSEARCH_BENCH_MS`
+//! to scale the per-cell request budget (requests = 20 × budget-ms,
+//! min 200).
+
+#[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::net::{loadgen, LoadGenConfig, NetConfig, NetServer};
+use amsearch::runtime::Backend;
+use harness::{budget, section, write_json_if_requested, Measurement};
+
+fn main() {
+    let mut rng = Rng::new(47);
+    let (d, n, q, p) = (128usize, 16_384usize, 64usize, 4usize);
+    let spec = ClusteredSpec { dim: d, n_clusters: q, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, n, 128, &mut rng);
+    let params = IndexParams { n_classes: q, top_p: p, ..Default::default() };
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+    let factory =
+        EngineFactory { index: index.clone(), backend: Backend::Native, artifacts_dir: None };
+    let server =
+        Arc::new(SearchServer::start(factory, CoordinatorConfig::default()).unwrap());
+    let net =
+        NetServer::bind(server.clone(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = net.local_addr().to_string();
+    println!("stack: clustered n={n} d={d} q={q} p={p}, TCP at {addr}");
+
+    let queries: Vec<Vec<f32>> =
+        (0..wl.queries.len()).map(|qi| wl.queries.get(qi).to_vec()).collect();
+    // scale request count with the shared time budget so CI smoke runs
+    // stay ~seconds while local runs measure properly
+    let requests = (budget().as_millis() as usize * 20).max(200);
+
+    section("closed-loop TCP serving (submit -> response over a real socket)");
+    let mut all: Vec<Measurement> = Vec::new();
+    for &(connections, depth) in &[(1usize, 1usize), (4, 8), (8, 16)] {
+        let cfg = LoadGenConfig {
+            connections,
+            depth,
+            requests,
+            top_p: 0,
+            top_k: 1,
+            connect_timeout: Duration::from_secs(10),
+        };
+        let report = loadgen::run(&addr, &queries, &cfg).unwrap();
+        let m = Measurement {
+            name: format!("tcp loadgen  conns={connections:<2} depth={depth:<3}"),
+            iters: report.requests,
+            mean_ns: report.latency.mean_ns(),
+            p50_ns: report.latency.quantile_ns(0.5) as f64,
+            p95_ns: report.latency.quantile_ns(0.95) as f64,
+        };
+        m.report();
+        println!(
+            "  -> {:.0} qps, p99 {:.2}us, errors {}",
+            report.qps(),
+            report.latency.quantile_ns(0.99) as f64 / 1e3,
+            report.errors
+        );
+        all.push(m);
+    }
+    let m = server.metrics();
+    println!(
+        "server: batches={} mean_batch={:.2} scan_fusion={:.2}",
+        m.batches,
+        m.mean_batch_size(),
+        m.scan.fusion_factor()
+    );
+    net.shutdown();
+    server.shutdown();
+    write_json_if_requested(&all);
+}

@@ -1,0 +1,69 @@
+//! Network serving demo: the full stack — index, coordinator, TCP front
+//! door — plus a pipelined client and a closed-loop load-generation
+//! burst, all in one process on an ephemeral localhost port.
+//!
+//! Run: `cargo run --release --example net_serving`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::net::{loadgen, LoadGenConfig, NetClient, NetConfig, NetServer};
+use amsearch::runtime::Backend;
+
+fn main() -> amsearch::Result<()> {
+    let mut rng = Rng::new(42);
+    let wl = clustered_workload(ClusteredSpec::sift_like(), 8_192, 128, &mut rng);
+    let params = IndexParams { n_classes: 32, top_p: 4, ..Default::default() };
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng)?);
+    let factory = EngineFactory {
+        index: index.clone(),
+        backend: Backend::Native,
+        artifacts_dir: None,
+    };
+    let server = Arc::new(SearchServer::start(factory, CoordinatorConfig::default())?);
+    let net = NetServer::bind(server.clone(), "127.0.0.1:0", NetConfig::default())?;
+    let addr = net.local_addr();
+    println!("serving n={} d={} on {addr}", index.len(), index.dim());
+
+    // --- one pipelined client connection -----------------------------
+    let mut client = NetClient::connect(addr)?;
+    client.ping()?;
+    let ids: Vec<u64> = (0..8)
+        .map(|qi| client.submit(wl.queries.get(qi), 0, 5))
+        .collect::<amsearch::Result<_>>()?;
+    println!("pipelined {} requests on one connection", ids.len());
+    let mut hits = 0;
+    for (qi, id) in ids.into_iter().enumerate() {
+        let resp = client.wait(id)?;
+        assert_eq!(resp.neighbors.len(), 5);
+        hits += usize::from(resp.neighbors[0].id == wl.ground_truth[qi]);
+    }
+    println!("top-1 hits on the pipelined burst: {hits}/8");
+
+    // --- closed-loop load burst --------------------------------------
+    let queries: Vec<Vec<f32>> =
+        (0..wl.queries.len()).map(|qi| wl.queries.get(qi).to_vec()).collect();
+    let cfg = LoadGenConfig {
+        connections: 4,
+        requests: 2_000,
+        depth: 8,
+        top_p: 0,
+        top_k: 1,
+        connect_timeout: Duration::from_secs(5),
+    };
+    let report = loadgen::run(&addr.to_string(), &queries, &cfg)?;
+    report.print();
+
+    // --- server-side view, then graceful shutdown over the wire ------
+    let stats = client.stats()?;
+    println!("server stats: {}", stats.to_string());
+    client.shutdown_server()?;
+    net.join();
+    server.shutdown();
+    println!("drained and stopped");
+    Ok(())
+}

@@ -12,7 +12,7 @@
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::time::{Duration, Instant};
 
-use super::protocol::SearchRequest;
+use super::protocol::{SearchRequest, SearchResponse};
 
 /// Outcome of one fill attempt (internal).
 enum Fill {
@@ -60,9 +60,22 @@ fn wait_for_stragglers(
     Fill::Ready
 }
 
+/// Deliver an explicit error response to every request in `batch`.
+/// Part of the serving pipeline's "exactly one response per accepted
+/// request" guarantee: a request must never be silently dropped, or a
+/// remote client whose responses funnel through a shared channel would
+/// hang forever waiting for an id that never arrives.
+fn fail_batch(batch: Vec<SearchRequest>, reason: &str) {
+    for req in batch {
+        let resp = SearchResponse::failed(req.id, reason);
+        let _ = req.resp.send(resp); // receiver may be gone; best effort
+    }
+}
+
 /// Run the batching loop: read requests from `rx`, emit batches on `tx`.
 /// Returns when `rx` disconnects (all pending requests flushed) or `tx`
-/// disconnects.
+/// disconnects (worker pool gone — every queued and future request is
+/// answered with an error response until the producers disconnect).
 pub fn run_batcher(
     rx: Receiver<SearchRequest>,
     tx: SyncSender<Vec<SearchRequest>>,
@@ -83,8 +96,15 @@ pub fn run_batcher(
             fill = wait_for_stragglers(&rx, &mut batch, max_batch, max_wait);
         }
         let disconnected = matches!(fill, Fill::Disconnected);
-        if tx.send(batch).is_err() {
-            return; // workers gone
+        if let Err(send_err) = tx.send(batch) {
+            // workers gone: error-respond this batch, then keep draining
+            // so no producer ever blocks on a queue nobody reads — every
+            // request still receives a response, just a failed one
+            fail_batch(send_err.0, "worker pool unavailable");
+            while let Ok(req) = rx.recv() {
+                fail_batch(vec![req], "worker pool unavailable");
+            }
+            return;
         }
         if disconnected {
             return; // producers gone, final batch flushed
@@ -154,6 +174,36 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 0);
         drop(in_tx);
+    }
+
+    #[test]
+    fn worker_loss_fails_requests_instead_of_dropping() {
+        // the consumer side (worker pool) is gone before any batch is
+        // sent: every request must still receive a response — an
+        // explicit error one — and the batcher must keep draining
+        // until the producers disconnect
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(1);
+        drop(out_rx); // workers dead
+        let h = std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, 4, Duration::from_millis(5))
+        });
+        let mut receivers = Vec::new();
+        for i in 0..6 {
+            let (r, rx) = req(i);
+            receivers.push(rx);
+            in_tx.send(r).unwrap();
+        }
+        drop(in_tx);
+        h.join().unwrap();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(2))
+                .unwrap_or_else(|_| panic!("request {i} got no response"));
+            assert_eq!(resp.id, i as u64);
+            let msg = resp.error.expect("must be an error response");
+            assert!(msg.contains("worker pool"), "unexpected reason: {msg}");
+        }
     }
 
     #[test]

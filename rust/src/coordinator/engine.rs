@@ -275,6 +275,7 @@ impl Engine {
                 candidates: r.candidates,
                 ops: ops[bi].total(),
                 service_ns: 0,
+                error: None,
             });
         }
         scan.class_passes = touched.iter().filter(|&&t| t).count() as u64;

@@ -47,9 +47,28 @@ pub struct SearchResponse {
     pub ops: u64,
     /// Service time (scoring + scan) attributed to this request.
     pub service_ns: u64,
+    /// Set when the request failed (engine error, worker pool gone):
+    /// the serving pipeline guarantees every accepted request receives
+    /// exactly one response — an error is *delivered*, never signalled
+    /// by silently dropping the rendezvous channel, so a remote client
+    /// whose requests funnel into a shared response channel can never
+    /// hang.  `SearchServer::search` converts this into `Err`.
+    pub error: Option<String>,
 }
 
 impl SearchResponse {
+    /// An error response for a request that could not be served.
+    pub fn failed(id: u64, message: impl Into<String>) -> Self {
+        SearchResponse {
+            id,
+            neighbors: Vec::new(),
+            polled: Vec::new(),
+            candidates: 0,
+            ops: 0,
+            service_ns: 0,
+            error: Some(message.into()),
+        }
+    }
     /// Database id of the best candidate, `None` when no candidate was
     /// scanned — the 1-NN view of the k-NN protocol.
     pub fn neighbor(&self) -> Option<u32> {

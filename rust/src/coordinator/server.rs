@@ -133,18 +133,28 @@ impl SearchServer {
         })
     }
 
-    /// Submit a k-NN query and block until its response arrives.
+    /// Submit a k-NN query without blocking for its result: the
+    /// response (success *or* explicit error — the pipeline never drops
+    /// an accepted request) is delivered on `resp` with `id` echoed in
+    /// `SearchResponse::id`.  Many submissions may share one `resp`
+    /// channel and be matched by id — this is how the TCP front door
+    /// pipelines a whole connection into a single response funnel.
+    /// `resp` must have capacity for the caller's in-flight window, so
+    /// a slow consumer can never block a worker thread.
     ///
     /// Boundary validation: the vector dimension must match the index;
     /// `top_p = 0` / `top_k = 0` mean "use the index default"; `top_k`
     /// larger than the database is clamped to it (the response simply
-    /// carries every vector, nearest first).
-    pub fn search(
+    /// carries every vector, nearest first).  Blocks only while the
+    /// bounded request queue is full (backpressure).
+    pub fn submit(
         &self,
         vector: Vec<f32>,
         top_p: usize,
         top_k: usize,
-    ) -> Result<SearchResponse> {
+        id: u64,
+        resp: SyncSender<SearchResponse>,
+    ) -> Result<()> {
         if vector.len() != self.dim {
             return Err(Error::Shape(format!(
                 "query dim {} != index dim {}",
@@ -155,29 +165,78 @@ impl SearchServer {
         // clamp here so an absurd k never reaches the scan accumulators
         // (0 passes through: it selects the index default downstream)
         let top_k = top_k.min(self.n_vectors);
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
         let req = SearchRequest {
             id,
             vector,
             top_p,
             top_k,
             enqueued: Instant::now(),
-            resp: resp_tx,
+            resp,
         };
-        {
-            let guard = self.tx.lock().expect("poisoned");
-            let tx = guard
-                .as_ref()
-                .ok_or_else(|| Error::Coordinator("server shutting down".into()))?;
-            tx.send(req)
-                .map_err(|_| Error::Coordinator("server shutting down".into()))?;
-        }
-        resp_rx
+        let guard = self.tx.lock().expect("poisoned");
+        let tx = guard
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("server shutting down".into()))?;
+        tx.send(req)
+            .map_err(|_| Error::Coordinator("server shutting down".into()))
+    }
+
+    /// Submit a k-NN query and block until its response arrives.  See
+    /// [`Self::submit`] for the boundary validation rules.
+    pub fn search(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+    ) -> Result<SearchResponse> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.submit(vector, top_p, top_k, id, resp_tx)?;
+        let resp = resp_rx
             .recv()
-            .map_err(|_| Error::Coordinator("worker dropped request".into()))
+            .map_err(|_| Error::Coordinator("worker dropped request".into()))?;
+        match resp.error {
+            Some(msg) => Err(Error::Coordinator(msg)),
+            None => Ok(resp),
+        }
+    }
+
+    /// Dimension of the served index.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of vectors in the served index.
+    pub fn n_vectors(&self) -> usize {
+        self.n_vectors
+    }
+
+    /// Snapshot the serving metrics as a JSON document — the payload of
+    /// the network STATS admin op, also reusable by load generators and
+    /// bench artifacts (latency histograms via
+    /// [`LatencyHistogram::to_json`]).
+    pub fn stats_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let m = self.metrics();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("dim".to_string(), Json::Num(self.dim as f64));
+        o.insert("n_vectors".to_string(), Json::Num(self.n_vectors as f64));
+        o.insert("requests".to_string(), Json::Num(m.requests as f64));
+        o.insert("batches".to_string(), Json::Num(m.batches as f64));
+        o.insert(
+            "mean_batch_size".to_string(),
+            Json::Num(m.mean_batch_size()),
+        );
+        o.insert("ops_per_search".to_string(), Json::Num(m.ops.per_search()));
+        o.insert(
+            "scan_fusion".to_string(),
+            Json::Num(m.scan.fusion_factor()),
+        );
+        o.insert("latency".to_string(), m.latency.to_json());
+        o.insert("service".to_string(), m.service.to_json());
+        Json::Obj(o)
     }
 
     /// Snapshot the metrics.
@@ -257,8 +316,16 @@ fn serve_one_batch(
             }
         }
         Err(e) => {
-            eprintln!("batch failed: {e}; dropping {} requests", batch.len());
-            // dropping the rendezvous senders surfaces the error to clients
+            // deliver an explicit error response to every request: the
+            // pipeline guarantees exactly one response per accepted
+            // request (a silent drop would hang remote clients whose
+            // responses funnel through a shared per-connection channel)
+            eprintln!("batch failed: {e}; failing {} requests", batch.len());
+            let reason = format!("batch execution failed: {e}");
+            for req in batch {
+                let resp = SearchResponse::failed(req.id, reason.clone());
+                let _ = req.resp.send(resp);
+            }
         }
     }
 }

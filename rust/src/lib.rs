@@ -20,9 +20,10 @@
 //! * **Layer 3** — this crate: dataset substrates, memories, allocation,
 //!   the AM-ANN index, baselines (exhaustive / random-sampling anchors /
 //!   hybrid), a PJRT runtime that loads the AOT artifacts, an async
-//!   coordinator (router + dynamic batcher + workers), the paper's
-//!   complexity accounting, and the evaluation harness that regenerates
-//!   every figure of the paper.
+//!   coordinator (router + dynamic batcher + workers), a TCP front door
+//!   (binary wire protocol, pipelined client library, closed-loop load
+//!   generator), the paper's complexity accounting, and the evaluation
+//!   harness that regenerates every figure of the paper.
 
 pub mod baseline;
 pub mod config;
@@ -33,6 +34,7 @@ pub mod eval;
 pub mod index;
 pub mod memory;
 pub mod metrics;
+pub mod net;
 pub mod partition;
 pub mod runtime;
 pub mod search;

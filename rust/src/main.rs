@@ -3,13 +3,20 @@
 //! ```text
 //! amsearch eval  [--figure N|knn | --all] [--out-dir results] [--scale S] [--seed S]
 //! amsearch query [--config cfg.json] [--top-p P] [--top-k K]
-//! amsearch serve [--config cfg.json] [--workers N] [--backend native|pjrt] [--repeat R]
+//! amsearch serve [--config cfg.json] [--workers N] [--backend native|pjrt]
+//!                [--repeat R] [--listen ADDR]
+//! amsearch loadgen --addr HOST:PORT [--connections N] [--requests R]
+//!                  [--depth D] [--top-p P] [--top-k K] [--json F] [--shutdown]
 //! amsearch artifacts [--dir artifacts]
 //! ```
 //!
 //! * `eval`  — regenerate the paper's figures (CSV + console table)
-//! * `serve` — build an index per config and serve its query workload
-//!   through the coordinator, reporting latency/throughput/recall
+//! * `serve` — build an index per config and serve it: either drive the
+//!   config's query workload in-process (default) or, with `--listen`,
+//!   open the TCP front door and serve remote clients until a SHUTDOWN
+//!   frame arrives
+//! * `loadgen` — closed-loop TCP load generator against a running
+//!   `serve --listen`, reporting throughput + latency quantiles
 //! * `query` — one-shot: build index, run the config's queries, print
 //!   recall and the paper's relative-complexity accounting
 //! * `artifacts` — inspect the AOT artifact manifest
@@ -30,8 +37,9 @@ use amsearch::error::Result;
 use amsearch::eval::{run_figure, EvalOptions, ALL_FIGURES};
 use amsearch::index::AmIndex;
 use amsearch::metrics::{OpsCounter, Recall, RecallAtK};
+use amsearch::net::{loadgen, LoadGenConfig, NetClient, NetConfig, NetServer};
 use amsearch::runtime::{Backend, Manifest};
-use amsearch::util::Args;
+use amsearch::util::{Args, Json};
 
 const USAGE: &str = "\
 usage: amsearch <command> [options]
@@ -43,7 +51,14 @@ commands:
               --index F.amidx to load instead of building)
   build       build index and save it     (--config F, --out F.amidx)
   serve       serve queries through the coordinator
-              (--config F, --workers N, --backend native|pjrt, --repeat R)
+              (--config F, --workers N, --backend native|pjrt, --repeat R,
+               --listen ADDR to open the TCP front door instead of
+               driving the config workload in-process)
+  loadgen     closed-loop TCP load generator against serve --listen
+              (--addr HOST:PORT, --connections N, --requests R, --depth D,
+               --top-p P, --top-k K, --connect-timeout-s S, --seed S,
+               --json FILE to write a BENCH JSON artifact,
+               --shutdown to stop the server afterwards)
   artifacts   show the AOT manifest      (--dir D)
 ";
 
@@ -275,6 +290,33 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     );
     let server = Arc::new(SearchServer::start(factory, serve_cfg)?);
 
+    if let Some(listen) = args.get("listen") {
+        // TCP front door: serve remote clients until a SHUTDOWN frame
+        // arrives (amsearch loadgen ... --shutdown), then drain the
+        // network layer BEFORE the coordinator so no in-flight request
+        // is ever dropped
+        let net = NetServer::bind(server.clone(), listen, NetConfig::default())?;
+        println!(
+            "listening on {} (binary AMNP v1 + JSON-lines; \
+             PING/STATS/SHUTDOWN admin ops)",
+            net.local_addr()
+        );
+        net.join();
+        let m = server.metrics();
+        println!("front door drained; served {} requests", m.requests);
+        println!("latency:  {}", m.latency.summary());
+        println!("service:  {}", m.service.summary());
+        println!(
+            "batches={} mean_batch={:.2} ops/search={:.0} scan_fusion={:.2}",
+            m.batches,
+            m.mean_batch_size(),
+            m.ops.per_search(),
+            m.scan.fusion_factor()
+        );
+        server.shutdown();
+        return Ok(());
+    }
+
     // load generation: one client thread per concurrent stream
     let started = Instant::now();
     let streams = 16usize;
@@ -322,6 +364,59 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:4077").to_string();
+    let cfg = LoadGenConfig {
+        connections: args.get_parse("connections", 4usize)?.max(1),
+        requests: args.get_parse("requests", 1000usize)?,
+        depth: args.get_parse("depth", 8usize)?.max(1),
+        top_p: args.get_parse("top-p", 0usize)?,
+        top_k: args.get_parse("top-k", 0usize)?,
+        connect_timeout: std::time::Duration::from_secs(
+            args.get_parse("connect-timeout-s", 10u64)?,
+        ),
+    };
+    // one admin connection: discover the index dimension, and reused at
+    // the end for the final stats snapshot / optional shutdown
+    let mut admin = NetClient::connect_retry(&addr, cfg.connect_timeout)?;
+    let stats = admin.stats()?;
+    let dim = stats
+        .get("dim")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| amsearch::Error::Coordinator("stats missing 'dim'".into()))?;
+    println!(
+        "server at {addr}: dim={dim} n={}",
+        stats.get("n_vectors").and_then(|v| v.as_usize()).unwrap_or(0)
+    );
+    // synthetic query pool of the right dimension (load generation does
+    // not need ground truth, only realistic request shapes)
+    let seed: u64 = args.get_parse("seed", 7u64)?;
+    let mut rng = Rng::new(seed);
+    let queries: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+
+    let report = loadgen::run(&addr, &queries, &cfg)?;
+    report.print();
+    let server_stats = admin.stats()?;
+
+    if let Some(path) = args.get("json") {
+        // one artifact: the client-side report plus the server's own
+        // metrics snapshot after the run
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("loadgen".to_string(), report.to_json());
+        o.insert("server".to_string(), server_stats);
+        let doc = Json::Obj(o).to_string();
+        std::fs::write(path, doc)?;
+        println!("wrote {path}");
+    }
+    if args.flag("shutdown") {
+        admin.shutdown_server()?;
+        println!("server shutdown acknowledged");
+    }
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
     let manifest = Manifest::load(&dir)?;
@@ -343,7 +438,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["all", "help"]) {
+    let args = match Args::parse(raw, &["all", "help", "shutdown"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -369,6 +464,7 @@ fn main() {
         "build" => cmd_build(&cfg, &args),
         "query" => cmd_query(&cfg, &args),
         "serve" => cmd_serve(&cfg, &args),
+        "loadgen" => cmd_loadgen(&args),
         "artifacts" => cmd_artifacts(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

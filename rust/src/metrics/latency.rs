@@ -115,16 +115,48 @@ impl LatencyHistogram {
         self.min_ns = self.min_ns.min(other.min_ns);
     }
 
-    /// One-line human summary.
-    pub fn summary(&self) -> String {
-        format!(
-            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+    /// The reported statistics as one tuple:
+    /// `(count, mean_ns, p50_ns, p90_ns, p99_ns, max_ns)` — the single
+    /// source for both [`Self::summary`] and [`Self::to_json`].
+    fn snapshot(&self) -> (u64, f64, u64, u64, u64, u64) {
+        (
             self.total,
-            self.mean_ns() / 1e3,
-            self.quantile_ns(0.5) as f64 / 1e3,
-            self.quantile_ns(0.95) as f64 / 1e3,
-            self.quantile_ns(0.99) as f64 / 1e3,
-            self.max_ns() as f64 / 1e3,
+            self.mean_ns(),
+            self.quantile_ns(0.5),
+            self.quantile_ns(0.9),
+            self.quantile_ns(0.99),
+            self.max_ns(),
+        )
+    }
+
+    /// The histogram as a JSON object
+    /// (`count`/`mean_ns`/`p50_ns`/`p90_ns`/`p99_ns`/`max_ns`) — reused
+    /// by the network STATS op, the load generator report, and the
+    /// bench JSON artifacts.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let (count, mean, p50, p90, p99, max) = self.snapshot();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(count as f64));
+        o.insert("mean_ns".to_string(), Json::Num(mean));
+        o.insert("p50_ns".to_string(), Json::Num(p50 as f64));
+        o.insert("p90_ns".to_string(), Json::Num(p90 as f64));
+        o.insert("p99_ns".to_string(), Json::Num(p99 as f64));
+        o.insert("max_ns".to_string(), Json::Num(max as f64));
+        Json::Obj(o)
+    }
+
+    /// One-line human summary (same statistics as [`Self::to_json`]).
+    pub fn summary(&self) -> String {
+        let (count, mean, p50, p90, p99, max) = self.snapshot();
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p90={:.1}us p99={:.1}us max={:.1}us",
+            count,
+            mean / 1e3,
+            p50 as f64 / 1e3,
+            p90 as f64 / 1e3,
+            p99 as f64 / 1e3,
+            max as f64 / 1e3,
         )
     }
 }
@@ -178,6 +210,25 @@ mod tests {
         assert_eq!(h.quantile_ns(0.5), 0);
         assert_eq!(h.mean_ns(), 0.0);
         assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn to_json_carries_all_quantiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record_ns(i * 1_000);
+        }
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(100));
+        assert_eq!(j.get("max_ns").unwrap().as_u64(), Some(100_000));
+        let p50 = j.get("p50_ns").unwrap().as_f64().unwrap();
+        let p90 = j.get("p90_ns").unwrap().as_f64().unwrap();
+        let p99 = j.get("p99_ns").unwrap().as_f64().unwrap();
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(j.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        // serializes to a parseable document (bench artifact path)
+        let text = j.to_string();
+        assert_eq!(crate::util::Json::parse(&text).unwrap(), j);
     }
 
     #[test]

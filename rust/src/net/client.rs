@@ -1,0 +1,234 @@
+//! Blocking client for the `amsearch` wire protocol, with connection
+//! reuse and request pipelining.
+//!
+//! One [`NetClient`] owns one TCP connection and is used from one
+//! thread (spawn one client per concurrent stream — the load-generator
+//! pattern).  Requests may be pipelined: [`NetClient::submit`] sends a
+//! search without waiting, [`NetClient::wait`] / [`NetClient::wait_any`]
+//! collect responses, matching them to requests by the echoed id;
+//! responses that arrive for *other* in-flight requests are buffered
+//! until claimed, so completion order never confuses the caller.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+use super::wire::{self, Frame, WireError, WireRequest, WireResponse};
+
+/// A blocking, pipelining-capable client over one TCP connection.
+pub struct NetClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+    /// Responses received but not yet claimed by `wait`/`wait_any`,
+    /// keyed by request id.
+    ready: BTreeMap<u64, std::result::Result<WireResponse, WireError>>,
+    /// Number of submitted searches not yet claimed.
+    outstanding: usize,
+}
+
+impl NetClient {
+    /// Connect to a server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Coordinator(format!("net client: connect: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| Error::Coordinator(format!("net client: clone: {e}")))?;
+        Ok(NetClient {
+            writer: stream,
+            reader: BufReader::new(read_half),
+            next_id: 1,
+            ready: BTreeMap::new(),
+            outstanding: 0,
+        })
+    }
+
+    /// Connect, retrying until `budget` elapses — for racing a server
+    /// that is still binding (CI smoke runs, load generators).
+    pub fn connect_retry(addr: &str, budget: Duration) -> Result<Self> {
+        let deadline = Instant::now() + budget;
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Coordinator(format!(
+                            "net client: no server at {addr} within {budget:?}: {e}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Set (or clear) the socket read timeout — a hung server then
+    /// surfaces as an error from `wait` instead of blocking forever.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.writer
+            .set_read_timeout(timeout)
+            .map_err(|e| Error::Coordinator(format!("net client: timeout: {e}")))
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.writer
+            .write_all(&frame.encode())
+            .map_err(|e| Error::Coordinator(format!("net client: send: {e}")))
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Number of submitted searches whose responses have not been
+    /// claimed yet (includes buffered ones).
+    pub fn in_flight(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Send a search without waiting for the result; returns the
+    /// request id to pass to [`Self::wait`].
+    pub fn submit(&mut self, vector: &[f32], top_p: usize, top_k: usize) -> Result<u64> {
+        let id = self.fresh_id();
+        self.send(&Frame::Search(WireRequest {
+            id,
+            top_p: top_p as u32,
+            top_k: top_k as u32,
+            vector: vector.to_vec(),
+        }))?;
+        self.outstanding += 1;
+        Ok(id)
+    }
+
+    /// Read one frame and file it (results and errors keyed by id).
+    fn pump(&mut self) -> Result<()> {
+        match wire::read_frame(&mut self.reader)? {
+            Frame::Result(r) => {
+                self.ready.insert(r.id, Ok(r));
+                Ok(())
+            }
+            Frame::Error(e) => {
+                self.ready.insert(e.id, Err(e));
+                Ok(())
+            }
+            other => Err(Error::Coordinator(format!(
+                "net client: unexpected frame {other:?} while awaiting results"
+            ))),
+        }
+    }
+
+    /// Block until the response for `id` arrives; responses for other
+    /// in-flight requests encountered on the way are buffered.
+    /// A server-side ERROR frame surfaces as the `Err` arm of the inner
+    /// result, carrying its stable code.
+    pub fn wait_detailed(
+        &mut self,
+        id: u64,
+    ) -> Result<std::result::Result<WireResponse, WireError>> {
+        loop {
+            if let Some(r) = self.ready.remove(&id) {
+                self.outstanding = self.outstanding.saturating_sub(1);
+                return Ok(r);
+            }
+            self.pump()?;
+        }
+    }
+
+    /// [`Self::wait_detailed`], flattening server errors into
+    /// [`Error::Coordinator`].
+    pub fn wait(&mut self, id: u64) -> Result<WireResponse> {
+        self.wait_detailed(id)?.map_err(wire_error)
+    }
+
+    /// Block until *any* in-flight response arrives and claim it —
+    /// the closed-loop load-generator primitive.
+    pub fn wait_any_detailed(
+        &mut self,
+    ) -> Result<(u64, std::result::Result<WireResponse, WireError>)> {
+        if self.outstanding == 0 {
+            return Err(Error::Coordinator("net client: nothing in flight".into()));
+        }
+        while self.ready.is_empty() {
+            self.pump()?;
+        }
+        let id = *self.ready.keys().next().expect("non-empty");
+        let r = self.ready.remove(&id).expect("present");
+        self.outstanding = self.outstanding.saturating_sub(1);
+        Ok((id, r))
+    }
+
+    /// Blocking k-NN search: submit + wait.  `top_p`/`top_k` follow the
+    /// server-boundary rules (`0` = index default).
+    pub fn search_k(
+        &mut self,
+        vector: &[f32],
+        top_p: usize,
+        top_k: usize,
+    ) -> Result<WireResponse> {
+        let id = self.submit(vector, top_p, top_k)?;
+        self.wait(id)
+    }
+
+    /// Round-trip admin request: send `req`, pump search responses into
+    /// the buffer until the matching admin reply arrives.
+    fn admin(&mut self, req: Frame, accept: fn(&Frame) -> bool) -> Result<Frame> {
+        let want_id = req.id();
+        self.send(&req)?;
+        loop {
+            let frame = wire::read_frame(&mut self.reader)?;
+            match frame {
+                Frame::Result(r) => {
+                    self.ready.insert(r.id, Ok(r));
+                }
+                Frame::Error(e) if e.id != want_id => {
+                    self.ready.insert(e.id, Err(e));
+                }
+                Frame::Error(e) => return Err(wire_error(e)),
+                f if f.id() == want_id && accept(&f) => return Ok(f),
+                f => {
+                    return Err(Error::Coordinator(format!(
+                        "net client: unexpected admin reply {f:?}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        self.admin(Frame::Ping { id }, |f| matches!(f, Frame::Pong { .. }))?;
+        Ok(())
+    }
+
+    /// Fetch the server's metrics snapshot (parsed JSON).
+    pub fn stats(&mut self) -> Result<Json> {
+        let id = self.fresh_id();
+        let reply =
+            self.admin(Frame::Stats { id }, |f| matches!(f, Frame::StatsReply { .. }))?;
+        let Frame::StatsReply { json, .. } = reply else { unreachable!() };
+        Json::parse(&json)
+    }
+
+    /// Ask the server to shut down gracefully; returns once the server
+    /// acknowledged (it then drains in-flight work and closes).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        self.admin(Frame::Shutdown { id }, |f| {
+            matches!(f, Frame::ShutdownOk { .. })
+        })?;
+        Ok(())
+    }
+}
+
+fn wire_error(e: WireError) -> Error {
+    Error::Coordinator(format!("server error (code {}): {}", e.code, e.message))
+}

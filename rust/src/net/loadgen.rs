@@ -1,0 +1,182 @@
+//! Closed-loop load generator for the TCP front door.
+//!
+//! Each of `connections` client threads keeps exactly `depth` searches
+//! pipelined on its own connection (a closed loop: a new request is
+//! issued only when a response is claimed), measuring per-request
+//! latency from submit to response arrival.  Per-connection
+//! [`LatencyHistogram`]s merge into one report with throughput and
+//! p50/p90/p99 — the end-to-end figure of merit for the serving stack,
+//! emitted as `BENCH_net_serving.json` by the CLI / CI smoke run.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics::LatencyHistogram;
+use crate::util::{concurrent_map, Json};
+
+use super::client::NetClient;
+
+/// Load-generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadGenConfig {
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Pipelined requests kept in flight per connection.
+    pub depth: usize,
+    /// Classes to poll per request (`0` = server default).
+    pub top_p: usize,
+    /// Neighbors per request (`0` = server default).
+    pub top_k: usize,
+    /// Budget for the initial connect (retried — the server may still
+    /// be binding).
+    pub connect_timeout: Duration,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            connections: 4,
+            requests: 1000,
+            depth: 8,
+            top_p: 0,
+            top_k: 0,
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What a load run measured.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// Requests completed (success or server-side error response).
+    pub requests: u64,
+    /// Responses that were error frames.
+    pub errors: u64,
+    /// Wall-clock duration of the whole run.
+    pub elapsed_s: f64,
+    /// Per-request latency (submit → response arrival), merged across
+    /// connections.
+    pub latency: LatencyHistogram,
+    /// Echo of the run shape.
+    pub connections: usize,
+    /// Echo of the run shape.
+    pub depth: usize,
+}
+
+impl LoadReport {
+    /// Completed requests per second.
+    pub fn qps(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.elapsed_s
+        }
+    }
+
+    /// The report as a JSON object (reuses
+    /// [`LatencyHistogram::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("connections".to_string(), Json::Num(self.connections as f64));
+        o.insert("depth".to_string(), Json::Num(self.depth as f64));
+        o.insert("requests".to_string(), Json::Num(self.requests as f64));
+        o.insert("errors".to_string(), Json::Num(self.errors as f64));
+        o.insert("elapsed_s".to_string(), Json::Num(self.elapsed_s));
+        o.insert("qps".to_string(), Json::Num(self.qps()));
+        o.insert("latency".to_string(), self.latency.to_json());
+        Json::Obj(o)
+    }
+
+    /// Console summary.
+    pub fn print(&self) {
+        println!(
+            "loadgen: {} requests ({} errors) over {} connections x depth {} \
+             in {:.3}s -> {:.0} qps",
+            self.requests,
+            self.errors,
+            self.connections,
+            self.depth,
+            self.elapsed_s,
+            self.qps()
+        );
+        println!("latency: {}", self.latency.summary());
+    }
+}
+
+/// Drive `addr` with a closed-loop pipelined load of `cfg.requests`
+/// searches drawn round-robin from `queries`.
+pub fn run(addr: &str, queries: &[Vec<f32>], cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if queries.is_empty() {
+        return Err(Error::Config("loadgen: empty query set".into()));
+    }
+    if cfg.connections == 0 || cfg.depth == 0 {
+        return Err(Error::Config("loadgen: connections/depth must be > 0".into()));
+    }
+    // split the request budget across connections (first r % c get +1)
+    let base = cfg.requests / cfg.connections;
+    let extra = cfg.requests % cfg.connections;
+    let started = Instant::now();
+    let results: Vec<Result<(LatencyHistogram, u64)>> =
+        concurrent_map(cfg.connections, cfg.connections, |ci| {
+            let n = base + usize::from(ci < extra);
+            run_connection(addr, queries, cfg, ci, n)
+        });
+    let elapsed_s = started.elapsed().as_secs_f64();
+    let mut latency = LatencyHistogram::new();
+    let mut errors = 0u64;
+    for r in results {
+        let (h, e) = r?; // a connection-level failure fails the run
+        latency.merge(&h);
+        errors += e;
+    }
+    Ok(LoadReport {
+        requests: latency.count(),
+        errors,
+        elapsed_s,
+        latency,
+        connections: cfg.connections,
+        depth: cfg.depth,
+    })
+}
+
+/// One connection's closed loop: keep `depth` in flight until `n`
+/// responses are claimed.
+fn run_connection(
+    addr: &str,
+    queries: &[Vec<f32>],
+    cfg: &LoadGenConfig,
+    ci: usize,
+    n: usize,
+) -> Result<(LatencyHistogram, u64)> {
+    let mut hist = LatencyHistogram::new();
+    let mut errors = 0u64;
+    if n == 0 {
+        return Ok((hist, errors));
+    }
+    let mut client = NetClient::connect_retry(addr, cfg.connect_timeout)?;
+    client.set_timeout(Some(Duration::from_secs(60)))?;
+    let mut starts: BTreeMap<u64, Instant> = BTreeMap::new();
+    let mut issued = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        while issued < n && starts.len() < cfg.depth {
+            // deterministic round-robin interleaved across connections
+            let q = &queries[(ci + issued * cfg.connections) % queries.len()];
+            let id = client.submit(q, cfg.top_p, cfg.top_k)?;
+            starts.insert(id, Instant::now());
+            issued += 1;
+        }
+        let (id, result) = client.wait_any_detailed()?;
+        if let Some(t0) = starts.remove(&id) {
+            hist.record(t0.elapsed());
+        }
+        if result.is_err() {
+            errors += 1;
+        }
+        done += 1;
+    }
+    Ok((hist, errors))
+}

@@ -1,0 +1,29 @@
+//! The network serving subsystem: a TCP front door over the
+//! coordinator, built entirely on `std::net` + threads (the offline
+//! build has no async runtime or protocol crates).
+//!
+//! * [`wire`] — versioned little-endian length-prefixed binary frames
+//!   (+ a JSON-lines debug encoding), typed validation with stable
+//!   error codes
+//! * [`server`] — accept loop, bounded connection-handler pool,
+//!   per-connection request pipelining, graceful drain
+//! * [`client`] — blocking client with connection reuse and pipelined
+//!   `search_k`/admin calls
+//! * [`loadgen`] — closed-loop multi-connection load generator
+//!   reporting throughput and latency quantiles
+//!
+//! The front door adds *transport* only: validation, defaulting, and
+//! clamping semantics are exactly the in-process
+//! [`SearchServer`](crate::coordinator::SearchServer) boundary rules,
+//! so a network response is bitwise-identical to the in-process answer
+//! for the same query (pinned by `tests/net_e2e.rs`).
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use client::NetClient;
+pub use loadgen::{LoadGenConfig, LoadReport};
+pub use server::{NetConfig, NetServer};
+pub use wire::{Frame, WireError, WireRequest, WireResponse};

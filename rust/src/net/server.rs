@@ -1,0 +1,617 @@
+//! The TCP front door: an accept loop feeding a bounded pool of
+//! connection-handler threads, layered directly on [`SearchServer`].
+//!
+//! ```text
+//! accept loop ──► bounded conn queue ──► handler pool (N threads)
+//!                                          │  per connection:
+//!                                          │   reader: decode frames,
+//!                                          │     validate, submit to the
+//!                                          │     coordinator (shared
+//!                                          │     response funnel, many
+//!                                          │     requests in flight)
+//!                                          │   writer: encode responses
+//!                                          │     as they complete,
+//!                                          │     matched by request id
+//! ```
+//!
+//! * **Pipelining** — a connection may have up to
+//!   [`NetConfig::max_inflight`] searches outstanding; responses are
+//!   written in *completion* order and matched by the client via the
+//!   echoed request id.  The reader stops pulling new frames while the
+//!   window is full, so a flooding client is throttled by TCP itself.
+//! * **Backpressure** — submissions go through the coordinator's
+//!   bounded request queue; when it is full the reader blocks, the
+//!   socket's receive buffer fills, and the client's `write` stalls.
+//! * **Graceful shutdown** — a SHUTDOWN frame (or
+//!   [`NetServer::shutdown`]) stops the accept loop and tells every
+//!   connection to stop *reading*; responses for everything already
+//!   submitted still drain through the writers before the sockets
+//!   close.  Only after [`NetServer::join`] returns should the owner
+//!   shut the underlying [`SearchServer`] down — that ordering is what
+//!   guarantees in-flight network requests are never dropped.
+//! * **Dual encoding** — the first byte of a connection selects the
+//!   protocol: `{` switches to JSON-lines (debug mode), anything else
+//!   must begin a binary `AMNP` frame.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{SearchResponse, SearchServer};
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+use super::wire::{
+    self, Frame, FrameBuffer, WireError, WireRequest, WireResponse, ERR_BAD_DIM,
+    ERR_BAD_FRAME, ERR_INTERNAL, ERR_OVERLOADED, ERR_SHUTTING_DOWN,
+};
+
+/// Network front-door configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Connection-handler pool size (concurrent connections served;
+    /// further accepted connections wait in a queue of the same size,
+    /// beyond which they are refused with an `ERR_OVERLOADED` frame).
+    pub max_connections: usize,
+    /// Maximum pipelined (in-flight) searches per connection.
+    pub max_inflight: usize,
+    /// Read-poll interval: how often blocked reads wake to check for
+    /// shutdown.
+    pub poll_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { max_connections: 64, max_inflight: 128, poll_ms: 25 }
+    }
+}
+
+impl NetConfig {
+    /// Validate the configuration.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_connections == 0 {
+            return Err(Error::Config("net.max_connections must be > 0".into()));
+        }
+        if self.max_inflight == 0 {
+            return Err(Error::Config("net.max_inflight must be > 0".into()));
+        }
+        if self.poll_ms == 0 {
+            return Err(Error::Config("net.poll_ms must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// State shared between the accept loop and every connection handler.
+struct Shared {
+    search: Arc<SearchServer>,
+    cfg: NetConfig,
+    down: AtomicBool,
+    /// Our own listen address, used to self-connect once so a blocked
+    /// `accept` wakes up and observes the shutdown flag.
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    fn begin_shutdown(&self) {
+        if !self.down.swap(true, Ordering::SeqCst) {
+            let _ = TcpStream::connect(self.addr); // wake the accept loop
+        }
+    }
+}
+
+/// Handle to a running TCP front door.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local: SocketAddr,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `search` over it.  The [`SearchServer`] must
+    /// outlive the front door and must only be shut down after
+    /// [`Self::join`] returns.
+    pub fn bind(
+        search: Arc<SearchServer>,
+        addr: impl ToSocketAddrs,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Coordinator(format!("net: bind failed: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Coordinator(format!("net: local_addr: {e}")))?;
+        let shared = Arc::new(Shared {
+            search,
+            cfg,
+            down: AtomicBool::new(false),
+            addr: local,
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("amsearch-net-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(|e| Error::Coordinator(format!("spawn accept loop: {e}")))?
+        };
+        Ok(NetServer { shared, local, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The bound address (resolves the port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// True once shutdown has begun (via [`Self::shutdown`] or a
+    /// SHUTDOWN frame from any client).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.down()
+    }
+
+    /// Block until the front door has fully drained and closed — either
+    /// because a client sent a SHUTDOWN frame or because
+    /// [`Self::shutdown`] was called from another thread.
+    pub fn join(&self) {
+        let handle = self.accept.lock().expect("poisoned").take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, stop reading new requests,
+    /// drain every in-flight response, close all connections.
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+        self.join();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept loop + handler pool (runs on the accept thread; joins the
+/// pool before returning so `NetServer::join` means "fully drained").
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let pool = shared.cfg.max_connections;
+    let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(pool);
+    let conn_rx: Arc<Mutex<Receiver<TcpStream>>> = Arc::new(Mutex::new(conn_rx));
+    let mut handlers = Vec::with_capacity(pool);
+    for hi in 0..pool {
+        let rx = conn_rx.clone();
+        let shared = shared.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("amsearch-net-conn-{hi}"))
+            .spawn(move || loop {
+                // take one connection under the lock, release before work
+                let stream = {
+                    let guard = rx.lock().expect("poisoned");
+                    match guard.recv() {
+                        Ok(s) => s,
+                        Err(_) => return,
+                    }
+                };
+                handle_connection(stream, &shared);
+            })
+            .expect("spawn connection handler");
+        handlers.push(h);
+    }
+    for conn in listener.incoming() {
+        if shared.down() {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(shared.cfg.poll_ms));
+                continue;
+            }
+        };
+        match conn_tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(mut stream)) => {
+                // refuse with a stable error code instead of an opaque
+                // reset (best effort; the client may already be gone)
+                let frame = Frame::Error(WireError {
+                    id: 0,
+                    code: ERR_OVERLOADED,
+                    message: "connection-handler pool exhausted".into(),
+                });
+                let _ = stream.write_all(&frame.encode());
+            }
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+    }
+    drop(conn_tx); // handlers finish their current connection and exit
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Serializing writer over one socket: whole frames only, so the reader
+/// thread (admin replies, validation errors) and the writer thread
+/// (search responses) can interleave safely.
+#[derive(Clone)]
+struct ConnWriter {
+    stream: Arc<Mutex<TcpStream>>,
+    json: bool,
+}
+
+impl ConnWriter {
+    /// Write one frame; errors are ignored (a vanished client must not
+    /// abort the drain — in-flight responses still need to be consumed
+    /// so the coordinator-side senders are released).
+    fn send(&self, frame: &Frame) {
+        let bytes = if self.json {
+            frame.to_json_line().into_bytes()
+        } else {
+            frame.encode()
+        };
+        if let Ok(mut s) = self.stream.lock() {
+            let _ = s.write_all(&bytes);
+        }
+    }
+}
+
+/// Pipelining window: current in-flight count + wakeup for the reader.
+type Inflight = Arc<(Mutex<usize>, Condvar)>;
+
+fn release_slot(inflight: &Inflight) {
+    let (m, cv) = &**inflight;
+    let mut n = m.lock().expect("poisoned");
+    *n = n.saturating_sub(1);
+    cv.notify_all();
+}
+
+/// One accepted connection: sniff the encoding from the first byte,
+/// then run the reader loop until EOF, fatal corruption, or shutdown.
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    // a stalled client that stops reading must not wedge a handler
+    // thread forever (writes would otherwise block once the socket
+    // buffer fills and shutdown could never join the pool); after the
+    // timeout its stream is abandoned mid-frame, which only that
+    // client observes
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(shared.cfg.poll_ms)))
+        .is_err()
+    {
+        return;
+    }
+    // mode sniff: peek (not consume) the first byte
+    let mut first = [0u8; 1];
+    loop {
+        match stream.peek(&mut first) {
+            Ok(0) => return, // closed before sending anything
+            Ok(_) => break,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shared.down() {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    let json = first[0] == b'{';
+    let write_half = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(_) => return,
+    };
+    let out = ConnWriter { stream: write_half, json };
+
+    // the shared response funnel: every in-flight search on this
+    // connection completes onto this channel; capacity == the window
+    // size, so coordinator workers can never block on a slow client
+    let (resp_tx, resp_rx) =
+        mpsc::sync_channel::<SearchResponse>(shared.cfg.max_inflight);
+    let inflight: Inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+
+    let writer = {
+        let out = out.clone();
+        let inflight = inflight.clone();
+        std::thread::Builder::new()
+            .name("amsearch-net-writer".into())
+            .spawn(move || {
+                while let Ok(resp) = resp_rx.recv() {
+                    out.send(&response_frame(resp));
+                    release_slot(&inflight);
+                }
+            })
+            .expect("spawn connection writer")
+    };
+
+    if json {
+        read_loop_json(&stream, shared, &out, &resp_tx, &inflight);
+    } else {
+        read_loop_binary(&stream, shared, &out, &resp_tx, &inflight);
+    }
+
+    // drain: dropping our funnel sender leaves only the in-flight
+    // requests' clones; once the coordinator answers them all, the
+    // writer's recv disconnects and the thread exits — every accepted
+    // request got its response frame before the socket closes
+    drop(resp_tx);
+    let _ = writer.join();
+}
+
+/// Convert a coordinator response into its wire frame.  Every error
+/// that travels the response funnel is a serving-pipeline failure
+/// (engine error, worker pool gone), so it is `ERR_INTERNAL` by
+/// construction; shutdown refusals are coded where they are *typed* —
+/// at submit time in [`dispatch_search`] — never inferred from message
+/// text.
+fn response_frame(resp: SearchResponse) -> Frame {
+    match resp.error {
+        Some(message) => Frame::Error(WireError {
+            id: resp.id,
+            code: ERR_INTERNAL,
+            message,
+        }),
+        None => Frame::Result(WireResponse {
+            id: resp.id,
+            neighbors: resp.neighbors,
+            polled: resp.polled,
+            candidates: resp.candidates as u64,
+            ops: resp.ops,
+            service_ns: resp.service_ns,
+        }),
+    }
+}
+
+/// Handle one parsed (or unparseable) client frame.  Returns `false`
+/// when the connection should stop reading (shutdown initiated).
+fn dispatch(
+    parsed: std::result::Result<Frame, WireError>,
+    shared: &Shared,
+    out: &ConnWriter,
+    resp_tx: &SyncSender<SearchResponse>,
+    inflight: &Inflight,
+) -> bool {
+    let frame = match parsed {
+        Ok(f) => f,
+        Err(we) => {
+            // recoverable: the frame/line boundary kept the stream in
+            // sync, so answer with a typed error and keep serving
+            out.send(&Frame::Error(we));
+            return true;
+        }
+    };
+    match frame {
+        Frame::Ping { id } => {
+            out.send(&Frame::Pong { id });
+            true
+        }
+        Frame::Stats { id } => {
+            let json = shared.search.stats_json().to_string();
+            out.send(&Frame::StatsReply { id, json });
+            true
+        }
+        Frame::Shutdown { id } => {
+            out.send(&Frame::ShutdownOk { id });
+            shared.begin_shutdown();
+            false
+        }
+        Frame::Search(req) => {
+            dispatch_search(req, shared, out, resp_tx, inflight);
+            true
+        }
+        other => {
+            out.send(&Frame::Error(WireError {
+                id: other.id(),
+                code: ERR_BAD_FRAME,
+                message: "frame type is not a client request".into(),
+            }));
+            true
+        }
+    }
+}
+
+fn dispatch_search(
+    req: WireRequest,
+    shared: &Shared,
+    out: &ConnWriter,
+    resp_tx: &SyncSender<SearchResponse>,
+    inflight: &Inflight,
+) {
+    if shared.down() {
+        out.send(&Frame::Error(WireError {
+            id: req.id,
+            code: ERR_SHUTTING_DOWN,
+            message: "server is shutting down".into(),
+        }));
+        return;
+    }
+    // claim a pipelining slot; the window bounds how many responses can
+    // ever queue on the funnel, which is what lets the funnel capacity
+    // guarantee non-blocking completion for coordinator workers
+    {
+        let (m, cv) = &**inflight;
+        let mut n = m.lock().expect("poisoned");
+        while *n >= shared.cfg.max_inflight {
+            let (guard, _) = cv
+                .wait_timeout(n, Duration::from_millis(shared.cfg.poll_ms))
+                .expect("poisoned");
+            n = guard;
+        }
+        *n += 1;
+    }
+    let result = shared.search.submit(
+        req.vector,
+        req.top_p as usize,
+        req.top_k as usize,
+        req.id,
+        resp_tx.clone(),
+    );
+    if let Err(e) = result {
+        release_slot(inflight);
+        let code = match &e {
+            Error::Shape(_) => ERR_BAD_DIM,
+            _ => ERR_SHUTTING_DOWN,
+        };
+        out.send(&Frame::Error(WireError {
+            id: req.id,
+            code,
+            message: e.to_string(),
+        }));
+    }
+}
+
+/// Is this io error just the poll-interval read timeout?
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+fn read_loop_binary(
+    stream: &TcpStream,
+    shared: &Shared,
+    out: &ConnWriter,
+    resp_tx: &SyncSender<SearchResponse>,
+    inflight: &Inflight,
+) {
+    let mut fb = FrameBuffer::new();
+    let mut chunk = vec![0u8; 16 * 1024];
+    loop {
+        // drain complete frames before reading more bytes
+        loop {
+            match fb.next_raw() {
+                Ok(None) => break,
+                Ok(Some(raw)) => {
+                    let parsed = wire::parse(&raw);
+                    if !dispatch(parsed, shared, out, resp_tx, inflight) {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    // stream lost sync: report once, then hang up
+                    out.send(&Frame::Error(WireError {
+                        id: 0,
+                        code: ERR_BAD_FRAME,
+                        message: e.to_string(),
+                    }));
+                    return;
+                }
+            }
+        }
+        if shared.down() {
+            return;
+        }
+        match (&*stream).read(&mut chunk) {
+            Ok(0) => return, // EOF
+            Ok(n) => fb.extend(&chunk[..n]),
+            Err(e) if is_timeout(&e) => {} // poll tick; re-check shutdown
+            Err(_) => return,
+        }
+    }
+}
+
+fn read_loop_json(
+    stream: &TcpStream,
+    shared: &Shared,
+    out: &ConnWriter,
+    resp_tx: &SyncSender<SearchResponse>,
+    inflight: &Inflight,
+) {
+    let mut lbuf: Vec<u8> = Vec::new();
+    let mut chunk = vec![0u8; 16 * 1024];
+    loop {
+        while let Some(pos) = lbuf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = lbuf.drain(..=pos).collect();
+            let text = String::from_utf8_lossy(&line);
+            let text = text.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(text)
+                .map_err(|e| WireError {
+                    id: 0,
+                    code: ERR_BAD_FRAME,
+                    message: e.to_string(),
+                })
+                .and_then(|v| Frame::from_json(&v));
+            if !dispatch(parsed, shared, out, resp_tx, inflight) {
+                return;
+            }
+        }
+        // lbuf now holds at most one incomplete line: bound it like a
+        // binary payload so a newline-free stream cannot grow server
+        // memory without limit
+        if lbuf.len() > super::wire::MAX_PAYLOAD as usize {
+            out.send(&Frame::Error(WireError {
+                id: 0,
+                code: ERR_BAD_FRAME,
+                message: "json line exceeds maximum frame size".into(),
+            }));
+            return;
+        }
+        if shared.down() {
+            return;
+        }
+        match (&*stream).read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => lbuf.extend_from_slice(&chunk[..n]),
+            Err(e) if is_timeout(&e) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        NetConfig::default().validate().unwrap();
+        assert!(NetConfig { max_connections: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(NetConfig { max_inflight: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(NetConfig { poll_ms: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn response_frame_maps_errors_to_stable_codes() {
+        let ok = SearchResponse {
+            id: 3,
+            neighbors: vec![],
+            polled: vec![1],
+            candidates: 0,
+            ops: 1,
+            service_ns: 2,
+            error: None,
+        };
+        assert!(matches!(response_frame(ok), Frame::Result(r) if r.id == 3));
+        // every funnel-delivered failure is a pipeline failure: typed
+        // ERR_INTERNAL regardless of message wording (shutdown refusals
+        // are coded at submit time, not here)
+        let internal = SearchResponse::failed(5, "batch execution failed: boom");
+        let Frame::Error(e) = response_frame(internal) else { panic!("not error") };
+        assert_eq!(e.code, ERR_INTERNAL);
+        assert_eq!(e.id, 5);
+        let worded = SearchResponse::failed(6, "engine said: shutting down the GPU");
+        let Frame::Error(e) = response_frame(worded) else { panic!("not error") };
+        assert_eq!(e.code, ERR_INTERNAL, "message text must not drive the code");
+    }
+}

@@ -1,0 +1,975 @@
+//! The `amsearch` network wire protocol: a versioned little-endian
+//! length-prefixed binary framing in the same style as the index file
+//! format (`index/persist.rs`), plus an equivalent JSON-lines encoding
+//! for debuggability (`telnet`/`nc`-friendly; reuses `util::json`).
+//!
+//! Binary frame layout (all integers little-endian):
+//!
+//! ```text
+//! magic    4B   "AMNP"
+//! version  u8   (currently 1)
+//! type     u8   frame type (see below)
+//! reserved u16  0
+//! id       u64  request id, echoed verbatim in the matching response
+//! len      u32  payload length in bytes (<= MAX_PAYLOAD)
+//! payload  len bytes
+//! ```
+//!
+//! Frame types and payloads:
+//!
+//! ```text
+//! 0x01 SEARCH       top_p u32, top_k u32, dim u32, dim * f32
+//! 0x02 RESULT       n u32, n * (id u32, distance f32),
+//!                   n_polled u32, n_polled * u32,
+//!                   candidates u64, ops u64, service_ns u64
+//! 0x03 ERROR        code u16, utf-8 message (rest of payload)
+//! 0x04 PING         (empty)
+//! 0x05 PONG         (empty)
+//! 0x06 STATS        (empty)
+//! 0x07 STATS_REPLY  utf-8 JSON document (server metrics snapshot)
+//! 0x08 SHUTDOWN     (empty)
+//! 0x09 SHUTDOWN_OK  (empty)
+//! ```
+//!
+//! Corruption handling is two-level, mirroring how a TCP stream can
+//! fail: header-level damage (bad magic/version, oversized length
+//! prefix, truncation) means the stream has lost sync and is
+//! **connection-fatal** ([`read_raw`] / [`FrameBuffer::next_raw`] return
+//! `Err`); a well-framed payload that fails structural validation is
+//! **recoverable** ([`parse`] returns a [`WireError`] carrying the
+//! frame's id and a stable error code, which the server sends back as an
+//! ERROR frame without dropping the connection).
+//!
+//! The JSON-lines mode is auto-detected by the server from the first
+//! byte of a connection (`{` cannot start a binary frame): one JSON
+//! object per `\n`-terminated line, `{"op": "search", "id": 1,
+//! "vector": [...], "top_p": 2, "top_k": 3}` in,
+//! `{"op": "result", ...}` / `{"op": "error", ...}` out.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+
+use crate::error::{Error, Result};
+use crate::search::Neighbor;
+use crate::util::json::Json;
+
+/// Frame magic ("AMsearch Net Protocol").
+pub const MAGIC: [u8; 4] = *b"AMNP";
+/// Protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Maximum payload size (16 MiB) — larger length prefixes are treated
+/// as stream corruption, not as something to allocate.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+/// Maximum `top_k` accepted at the network boundary (DoS guard for the
+/// per-request top-k accumulators; in-process callers are only clamped
+/// to the database size).
+pub const MAX_WIRE_TOP_K: u32 = 65_536;
+
+/// Frame type: k-NN search request.
+pub const FT_SEARCH: u8 = 0x01;
+/// Frame type: search result.
+pub const FT_RESULT: u8 = 0x02;
+/// Frame type: error response.
+pub const FT_ERROR: u8 = 0x03;
+/// Frame type: liveness probe.
+pub const FT_PING: u8 = 0x04;
+/// Frame type: liveness reply.
+pub const FT_PONG: u8 = 0x05;
+/// Frame type: metrics snapshot request.
+pub const FT_STATS: u8 = 0x06;
+/// Frame type: metrics snapshot reply (JSON payload).
+pub const FT_STATS_REPLY: u8 = 0x07;
+/// Frame type: graceful server shutdown request.
+pub const FT_SHUTDOWN: u8 = 0x08;
+/// Frame type: shutdown acknowledgement.
+pub const FT_SHUTDOWN_OK: u8 = 0x09;
+
+/// Error code: malformed or zero-length frame payload.
+pub const ERR_BAD_FRAME: u16 = 1;
+/// Error code: query dimension does not match the served index.
+pub const ERR_BAD_DIM: u16 = 2;
+/// Error code: `top_k` exceeds [`MAX_WIRE_TOP_K`].
+pub const ERR_BAD_K: u16 = 3;
+/// Error code: the server is draining and no longer accepts searches.
+pub const ERR_SHUTTING_DOWN: u16 = 4;
+/// Error code: internal serving failure (engine/batch error).
+pub const ERR_INTERNAL: u16 = 5;
+/// Error code: connection-handler pool exhausted.
+pub const ERR_OVERLOADED: u16 = 6;
+
+/// A k-NN search request as it travels on the wire.  Unlike the
+/// in-process `coordinator::SearchRequest` it is plain data (no
+/// rendezvous channel, no timestamps) and the id is chosen by the
+/// *client* — responses on a connection are matched by this id, so it
+/// must be unique among that connection's in-flight requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// Client-chosen request id (echoed in the response).
+    pub id: u64,
+    /// Classes to poll (`0` = index default).
+    pub top_p: u32,
+    /// Neighbors to return (`0` = index default; at most
+    /// [`MAX_WIRE_TOP_K`]).
+    pub top_k: u32,
+    /// Query vector.
+    pub vector: Vec<f32>,
+}
+
+/// A search result as it travels on the wire (the network image of
+/// `coordinator::SearchResponse`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Neighbors sorted ascending by `(distance, id)`; empty = no
+    /// candidates were scanned.
+    pub neighbors: Vec<Neighbor>,
+    /// Classes polled, best first.
+    pub polled: Vec<u32>,
+    /// Candidates scanned.
+    pub candidates: u64,
+    /// Elementary operations spent (paper cost model).
+    pub ops: u64,
+    /// Service time attributed to this request.
+    pub service_ns: u64,
+}
+
+/// An error response: the request id it answers, a stable numeric code
+/// (`ERR_*`), and a human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    /// Echo of the offending request id (0 when no id could be read).
+    pub id: u64,
+    /// Stable error code (`ERR_*`).
+    pub code: u16,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+/// One decoded protocol frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// k-NN search request.
+    Search(WireRequest),
+    /// Search result.
+    Result(WireResponse),
+    /// Error response.
+    Error(WireError),
+    /// Liveness probe.
+    Ping {
+        /// Request id.
+        id: u64,
+    },
+    /// Liveness reply.
+    Pong {
+        /// Echo of the probe id.
+        id: u64,
+    },
+    /// Metrics snapshot request.
+    Stats {
+        /// Request id.
+        id: u64,
+    },
+    /// Metrics snapshot reply.
+    StatsReply {
+        /// Echo of the request id.
+        id: u64,
+        /// Server metrics snapshot as a JSON document.
+        json: String,
+    },
+    /// Graceful shutdown request.
+    Shutdown {
+        /// Request id.
+        id: u64,
+    },
+    /// Shutdown acknowledgement (sent before the server begins
+    /// draining).
+    ShutdownOk {
+        /// Echo of the request id.
+        id: u64,
+    },
+}
+
+impl Frame {
+    /// The request id this frame carries.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Search(r) => r.id,
+            Frame::Result(r) => r.id,
+            Frame::Error(e) => e.id,
+            Frame::Ping { id }
+            | Frame::Pong { id }
+            | Frame::Stats { id }
+            | Frame::StatsReply { id, .. }
+            | Frame::Shutdown { id }
+            | Frame::ShutdownOk { id } => *id,
+        }
+    }
+
+    fn ftype(&self) -> u8 {
+        match self {
+            Frame::Search(_) => FT_SEARCH,
+            Frame::Result(_) => FT_RESULT,
+            Frame::Error(_) => FT_ERROR,
+            Frame::Ping { .. } => FT_PING,
+            Frame::Pong { .. } => FT_PONG,
+            Frame::Stats { .. } => FT_STATS,
+            Frame::StatsReply { .. } => FT_STATS_REPLY,
+            Frame::Shutdown { .. } => FT_SHUTDOWN,
+            Frame::ShutdownOk { .. } => FT_SHUTDOWN_OK,
+        }
+    }
+
+    /// Encode to a complete binary frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        match self {
+            Frame::Search(r) => {
+                payload.extend_from_slice(&r.top_p.to_le_bytes());
+                payload.extend_from_slice(&r.top_k.to_le_bytes());
+                payload.extend_from_slice(&(r.vector.len() as u32).to_le_bytes());
+                for &x in &r.vector {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Frame::Result(r) => {
+                payload.extend_from_slice(&(r.neighbors.len() as u32).to_le_bytes());
+                for n in &r.neighbors {
+                    payload.extend_from_slice(&n.id.to_le_bytes());
+                    payload.extend_from_slice(&n.distance.to_le_bytes());
+                }
+                payload.extend_from_slice(&(r.polled.len() as u32).to_le_bytes());
+                for &c in &r.polled {
+                    payload.extend_from_slice(&c.to_le_bytes());
+                }
+                payload.extend_from_slice(&r.candidates.to_le_bytes());
+                payload.extend_from_slice(&r.ops.to_le_bytes());
+                payload.extend_from_slice(&r.service_ns.to_le_bytes());
+            }
+            Frame::Error(e) => {
+                payload.extend_from_slice(&e.code.to_le_bytes());
+                payload.extend_from_slice(e.message.as_bytes());
+            }
+            Frame::StatsReply { json, .. } => payload.extend_from_slice(json.as_bytes()),
+            Frame::Ping { .. }
+            | Frame::Pong { .. }
+            | Frame::Stats { .. }
+            | Frame::Shutdown { .. }
+            | Frame::ShutdownOk { .. } => {}
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.ftype());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.id().to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+/// A frame whose header was read and whose payload bytes are intact but
+/// not yet interpreted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawFrame {
+    /// Frame type byte.
+    pub ftype: u8,
+    /// Request id from the header.
+    pub id: u64,
+    /// Raw payload bytes.
+    pub payload: Vec<u8>,
+}
+
+/// Validate a 20-byte header; returns `(ftype, id, payload_len)`.
+fn check_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u64, usize)> {
+    if h[0..4] != MAGIC {
+        return Err(Error::Data(format!(
+            "wire: bad magic {:02x}{:02x}{:02x}{:02x} (not an AMNP stream)",
+            h[0], h[1], h[2], h[3]
+        )));
+    }
+    if h[4] != VERSION {
+        return Err(Error::Data(format!("wire: unsupported version {}", h[4])));
+    }
+    let ftype = h[5];
+    let id = u64::from_le_bytes(h[8..16].try_into().expect("8 bytes"));
+    let len = u32::from_le_bytes(h[16..20].try_into().expect("4 bytes"));
+    if len > MAX_PAYLOAD {
+        return Err(Error::Data(format!(
+            "wire: oversized length prefix {len} (max {MAX_PAYLOAD})"
+        )));
+    }
+    Ok((ftype, id, len as usize))
+}
+
+/// Read exactly one frame from a blocking reader.  Errors are
+/// connection-fatal: `Error::Data` for corruption (bad magic/version,
+/// oversized length prefix), `Error::Io` for truncation / closed peer.
+pub fn read_raw<R: Read>(r: &mut R) -> Result<RawFrame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let (ftype, id, len) = check_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(RawFrame { ftype, id, payload })
+}
+
+/// Read and fully decode one frame (client side; a payload that fails
+/// structural validation is reported as `Error::Data`).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let raw = read_raw(r)?;
+    parse(&raw).map_err(|e| {
+        Error::Data(format!("wire: bad frame (code {}): {}", e.code, e.message))
+    })
+}
+
+/// Incremental frame decoder for non-blocking / timeout-polled reads:
+/// feed whatever bytes arrived, pop complete frames.  `Err` from
+/// [`FrameBuffer::next_raw`] means the stream is corrupt and the
+/// connection must be dropped.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+}
+
+impl FrameBuffer {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append bytes received from the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (incomplete frame tail).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no bytes are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Pop the next complete frame, `Ok(None)` when more bytes are
+    /// needed, `Err` when the stream is corrupt (connection-fatal).
+    pub fn next_raw(&mut self) -> Result<Option<RawFrame>> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let header: [u8; HEADER_LEN] =
+            self.buf[..HEADER_LEN].try_into().expect("length checked");
+        let (ftype, id, len) = check_header(&header)?;
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.buf.drain(..HEADER_LEN + len);
+        Ok(Some(RawFrame { ftype, id, payload }))
+    }
+}
+
+/// Little-endian payload cursor (decode helper).
+struct Cur<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Cur { bytes, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.bytes.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|b| u16::from_le_bytes(b.try_into().expect("2")))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4")))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().expect("8")))
+    }
+    fn f32(&mut self) -> Option<f32> {
+        self.take(4).map(|b| f32::from_le_bytes(b.try_into().expect("4")))
+    }
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+    fn done(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+}
+
+fn bad(id: u64, message: impl Into<String>) -> WireError {
+    WireError { id, code: ERR_BAD_FRAME, message: message.into() }
+}
+
+/// Interpret a raw frame's payload.  A structural problem is
+/// *recoverable*: the returned [`WireError`] carries the frame's id and
+/// a stable code, ready to be sent back as an ERROR frame (the length
+/// prefix was already consumed, so the stream stays in sync).
+pub fn parse(raw: &RawFrame) -> std::result::Result<Frame, WireError> {
+    let id = raw.id;
+    let mut c = Cur::new(&raw.payload);
+    match raw.ftype {
+        FT_SEARCH => {
+            if raw.payload.is_empty() {
+                return Err(bad(id, "zero-length search frame"));
+            }
+            let top_p = c.u32().ok_or_else(|| bad(id, "search: truncated top_p"))?;
+            let top_k = c.u32().ok_or_else(|| bad(id, "search: truncated top_k"))?;
+            let dim = c.u32().ok_or_else(|| bad(id, "search: truncated dim"))?;
+            if top_k > MAX_WIRE_TOP_K {
+                return Err(WireError {
+                    id,
+                    code: ERR_BAD_K,
+                    message: format!("top_k {top_k} exceeds wire limit {MAX_WIRE_TOP_K}"),
+                });
+            }
+            if dim == 0 {
+                return Err(WireError {
+                    id,
+                    code: ERR_BAD_DIM,
+                    message: "empty query vector (dim = 0)".into(),
+                });
+            }
+            // declared count must match the bytes actually present
+            // BEFORE any allocation is sized from it: an untrusted
+            // dim = u32::MAX in a tiny frame must not reserve gigabytes
+            if dim as u64 * 4 != c.remaining() as u64 {
+                return Err(bad(id, "search: dim disagrees with payload length"));
+            }
+            let mut vector = Vec::with_capacity(dim as usize);
+            for _ in 0..dim {
+                vector.push(c.f32().ok_or_else(|| bad(id, "search: truncated vector"))?);
+            }
+            Ok(Frame::Search(WireRequest { id, top_p, top_k, vector }))
+        }
+        FT_RESULT => {
+            let n = c.u32().ok_or_else(|| bad(id, "result: truncated count"))?;
+            // bound every count by the bytes present before allocating
+            if n as u64 * 8 > c.remaining() as u64 {
+                return Err(bad(id, "result: neighbor count exceeds payload"));
+            }
+            let mut neighbors = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                let nid = c.u32().ok_or_else(|| bad(id, "result: truncated neighbor"))?;
+                let distance =
+                    c.f32().ok_or_else(|| bad(id, "result: truncated neighbor"))?;
+                neighbors.push(Neighbor { id: nid, distance });
+            }
+            let np = c.u32().ok_or_else(|| bad(id, "result: truncated polled count"))?;
+            if np as u64 * 4 > c.remaining() as u64 {
+                return Err(bad(id, "result: polled count exceeds payload"));
+            }
+            let mut polled = Vec::with_capacity(np as usize);
+            for _ in 0..np {
+                polled.push(c.u32().ok_or_else(|| bad(id, "result: truncated polled"))?);
+            }
+            let candidates =
+                c.u64().ok_or_else(|| bad(id, "result: truncated candidates"))?;
+            let ops = c.u64().ok_or_else(|| bad(id, "result: truncated ops"))?;
+            let service_ns =
+                c.u64().ok_or_else(|| bad(id, "result: truncated service_ns"))?;
+            if !c.done() {
+                return Err(bad(id, "result: trailing payload bytes"));
+            }
+            Ok(Frame::Result(WireResponse {
+                id,
+                neighbors,
+                polled,
+                candidates,
+                ops,
+                service_ns,
+            }))
+        }
+        FT_ERROR => {
+            let code = c.u16().ok_or_else(|| bad(id, "error: truncated code"))?;
+            let message = String::from_utf8(raw.payload[c.pos..].to_vec())
+                .map_err(|_| bad(id, "error: message is not utf-8"))?;
+            Ok(Frame::Error(WireError { id, code, message }))
+        }
+        FT_STATS_REPLY => {
+            let json = String::from_utf8(raw.payload.clone())
+                .map_err(|_| bad(id, "stats reply is not utf-8"))?;
+            Ok(Frame::StatsReply { id, json })
+        }
+        FT_PING | FT_PONG | FT_STATS | FT_SHUTDOWN | FT_SHUTDOWN_OK => {
+            if !raw.payload.is_empty() {
+                return Err(bad(id, "unexpected payload on admin frame"));
+            }
+            Ok(match raw.ftype {
+                FT_PING => Frame::Ping { id },
+                FT_PONG => Frame::Pong { id },
+                FT_STATS => Frame::Stats { id },
+                FT_SHUTDOWN => Frame::Shutdown { id },
+                _ => Frame::ShutdownOk { id },
+            })
+        }
+        other => Err(bad(id, format!("unknown frame type {other:#04x}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON-lines encoding (debug mode)
+// ---------------------------------------------------------------------
+
+fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+impl Frame {
+    fn op(&self) -> &'static str {
+        match self {
+            Frame::Search(_) => "search",
+            Frame::Result(_) => "result",
+            Frame::Error(_) => "error",
+            Frame::Ping { .. } => "ping",
+            Frame::Pong { .. } => "pong",
+            Frame::Stats { .. } => "stats",
+            Frame::StatsReply { .. } => "stats_reply",
+            Frame::Shutdown { .. } => "shutdown",
+            Frame::ShutdownOk { .. } => "shutdown_ok",
+        }
+    }
+
+    /// Encode as a JSON object (the JSON-lines image of this frame).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("op".to_string(), jstr(self.op()));
+        m.insert("id".to_string(), jnum(self.id() as f64));
+        match self {
+            Frame::Search(r) => {
+                m.insert("top_p".to_string(), jnum(r.top_p as f64));
+                m.insert("top_k".to_string(), jnum(r.top_k as f64));
+                m.insert(
+                    "vector".to_string(),
+                    Json::Arr(r.vector.iter().map(|&x| jnum(x as f64)).collect()),
+                );
+            }
+            Frame::Result(r) => {
+                m.insert(
+                    "neighbors".to_string(),
+                    Json::Arr(
+                        r.neighbors
+                            .iter()
+                            .map(|n| {
+                                let mut nm = BTreeMap::new();
+                                nm.insert("id".to_string(), jnum(n.id as f64));
+                                nm.insert(
+                                    "distance".to_string(),
+                                    jnum(n.distance as f64),
+                                );
+                                Json::Obj(nm)
+                            })
+                            .collect(),
+                    ),
+                );
+                m.insert(
+                    "polled".to_string(),
+                    Json::Arr(r.polled.iter().map(|&c| jnum(c as f64)).collect()),
+                );
+                m.insert("candidates".to_string(), jnum(r.candidates as f64));
+                m.insert("ops".to_string(), jnum(r.ops as f64));
+                m.insert("service_ns".to_string(), jnum(r.service_ns as f64));
+            }
+            Frame::Error(e) => {
+                m.insert("code".to_string(), jnum(e.code as f64));
+                m.insert("message".to_string(), jstr(&e.message));
+            }
+            Frame::StatsReply { json, .. } => {
+                // embed the stats document itself, not a quoted string
+                let v = Json::parse(json).unwrap_or_else(|_| jstr(json));
+                m.insert("stats".to_string(), v);
+            }
+            _ => {}
+        }
+        Json::Obj(m)
+    }
+
+    /// Encode as one `\n`-terminated JSON line.
+    pub fn to_json_line(&self) -> String {
+        let mut s = self.to_json().to_string();
+        s.push('\n');
+        s
+    }
+
+    /// Decode from a parsed JSON object (one JSON-lines message).
+    pub fn from_json(v: &Json) -> std::result::Result<Frame, WireError> {
+        let id = v.get("id").and_then(|x| x.as_u64()).unwrap_or(0);
+        let op = v
+            .get("op")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| bad(id, "json: missing 'op'"))?;
+        match op {
+            "search" => {
+                let arr = v
+                    .get("vector")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| bad(id, "json search: missing 'vector'"))?;
+                let mut vector = Vec::with_capacity(arr.len());
+                for x in arr {
+                    vector.push(x.as_f64().ok_or_else(|| {
+                        bad(id, "json search: non-numeric vector element")
+                    })? as f32);
+                }
+                let top_p =
+                    v.get("top_p").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                let top_k =
+                    v.get("top_k").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                if top_k > MAX_WIRE_TOP_K {
+                    return Err(WireError {
+                        id,
+                        code: ERR_BAD_K,
+                        message: format!(
+                            "top_k {top_k} exceeds wire limit {MAX_WIRE_TOP_K}"
+                        ),
+                    });
+                }
+                if vector.is_empty() {
+                    return Err(WireError {
+                        id,
+                        code: ERR_BAD_DIM,
+                        message: "empty query vector (dim = 0)".into(),
+                    });
+                }
+                Ok(Frame::Search(WireRequest { id, top_p, top_k, vector }))
+            }
+            "result" => {
+                let mut neighbors = Vec::new();
+                if let Some(arr) = v.get("neighbors").and_then(|x| x.as_arr()) {
+                    for n in arr {
+                        let nid = n.get("id").and_then(|x| x.as_u64()).ok_or_else(
+                            || bad(id, "json result: neighbor missing 'id'"),
+                        )? as u32;
+                        let distance =
+                            n.get("distance").and_then(|x| x.as_f64()).ok_or_else(
+                                || bad(id, "json result: neighbor missing 'distance'"),
+                            )? as f32;
+                        neighbors.push(Neighbor { id: nid, distance });
+                    }
+                }
+                let mut polled = Vec::new();
+                if let Some(arr) = v.get("polled").and_then(|x| x.as_arr()) {
+                    for c in arr {
+                        polled.push(c.as_u64().ok_or_else(|| {
+                            bad(id, "json result: non-integer polled class")
+                        })? as u32);
+                    }
+                }
+                Ok(Frame::Result(WireResponse {
+                    id,
+                    neighbors,
+                    polled,
+                    candidates: v
+                        .get("candidates")
+                        .and_then(|x| x.as_u64())
+                        .unwrap_or(0),
+                    ops: v.get("ops").and_then(|x| x.as_u64()).unwrap_or(0),
+                    service_ns: v
+                        .get("service_ns")
+                        .and_then(|x| x.as_u64())
+                        .unwrap_or(0),
+                }))
+            }
+            "error" => Ok(Frame::Error(WireError {
+                id,
+                code: v.get("code").and_then(|x| x.as_u64()).unwrap_or(0) as u16,
+                message: v
+                    .get("message")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            })),
+            "ping" => Ok(Frame::Ping { id }),
+            "pong" => Ok(Frame::Pong { id }),
+            "stats" => Ok(Frame::Stats { id }),
+            "stats_reply" => Ok(Frame::StatsReply {
+                id,
+                json: v.get("stats").map(|s| s.to_string()).unwrap_or_default(),
+            }),
+            "shutdown" => Ok(Frame::Shutdown { id }),
+            "shutdown_ok" => Ok(Frame::ShutdownOk { id }),
+            other => Err(bad(id, format!("json: unknown op '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let mut cur = std::io::Cursor::new(bytes);
+        let raw = read_raw(&mut cur).unwrap();
+        parse(&raw).unwrap()
+    }
+
+    fn sample_result() -> Frame {
+        Frame::Result(WireResponse {
+            id: 9,
+            neighbors: vec![
+                Neighbor { id: 3, distance: 0.5 },
+                Neighbor { id: 7, distance: 1.25 },
+            ],
+            polled: vec![2, 0, 5],
+            candidates: 128,
+            ops: 4096,
+            service_ns: 12_345,
+        })
+    }
+
+    #[test]
+    fn header_layout_is_stable() {
+        let bytes = Frame::Ping { id: 0x0102_0304_0506_0708 }.encode();
+        assert_eq!(bytes.len(), HEADER_LEN);
+        assert_eq!(&bytes[0..4], b"AMNP");
+        assert_eq!(bytes[4], 1); // version
+        assert_eq!(bytes[5], FT_PING);
+        assert_eq!(&bytes[6..8], &[0, 0]); // reserved
+        assert_eq!(
+            u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+            0x0102_0304_0506_0708
+        );
+        assert_eq!(u32::from_le_bytes(bytes[16..20].try_into().unwrap()), 0);
+    }
+
+    #[test]
+    fn every_frame_type_roundtrips() {
+        let frames = vec![
+            Frame::Search(WireRequest {
+                id: 1,
+                top_p: 4,
+                top_k: 10,
+                vector: vec![0.5, -1.25, 3.75],
+            }),
+            sample_result(),
+            Frame::Result(WireResponse {
+                id: 10,
+                neighbors: vec![], // the "no candidates" protocol
+                polled: vec![1],
+                candidates: 0,
+                ops: 7,
+                service_ns: 0,
+            }),
+            Frame::Error(WireError {
+                id: 2,
+                code: ERR_BAD_DIM,
+                message: "query dim 3 != index dim 128".into(),
+            }),
+            Frame::Ping { id: 3 },
+            Frame::Pong { id: 4 },
+            Frame::Stats { id: 5 },
+            Frame::StatsReply { id: 6, json: r#"{"requests":10}"#.into() },
+            Frame::Shutdown { id: 7 },
+            Frame::ShutdownOk { id: 8 },
+        ];
+        for f in frames {
+            assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn distances_are_bitwise_exact() {
+        // f32 payloads travel as raw LE bits: subnormals and odd
+        // fractions must come back bit-identical
+        let f = Frame::Search(WireRequest {
+            id: 1,
+            top_p: 0,
+            top_k: 0,
+            vector: vec![f32::MIN_POSITIVE, 1.0e-40, -0.1, f32::MAX],
+        });
+        let Frame::Search(r) = roundtrip(&f) else { panic!("wrong type") };
+        let Frame::Search(orig) = f else { unreachable!() };
+        for (a, b) in orig.vector.iter().zip(&r.vector) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_fatal() {
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        bytes[0] = b'X';
+        let err = read_raw(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn bad_version_is_fatal() {
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        bytes[4] = 99;
+        let err = read_raw(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_fatal_not_allocated() {
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_raw(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+        // same through the incremental decoder
+        let mut fb = FrameBuffer::new();
+        let mut bytes2 = Frame::Ping { id: 1 }.encode();
+        bytes2[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        fb.extend(&bytes2);
+        assert!(fb.next_raw().is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_io_error() {
+        let bytes = sample_result().encode();
+        let cut = &bytes[..bytes.len() - 3];
+        assert!(read_raw(&mut std::io::Cursor::new(cut.to_vec())).is_err());
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_byte_at_a_time() {
+        let frames = [
+            Frame::Search(WireRequest { id: 1, top_p: 2, top_k: 3, vector: vec![1.0; 7] }),
+            sample_result(),
+            Frame::Ping { id: 11 },
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.encode());
+        }
+        let mut fb = FrameBuffer::new();
+        let mut got = Vec::new();
+        for b in stream {
+            fb.extend(&[b]);
+            while let Some(raw) = fb.next_raw().unwrap() {
+                got.push(parse(&raw).unwrap());
+            }
+        }
+        assert_eq!(got, frames);
+        assert!(fb.is_empty());
+    }
+
+    #[test]
+    fn zero_length_search_frame_has_stable_code() {
+        let raw = RawFrame { ftype: FT_SEARCH, id: 42, payload: vec![] };
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.code, ERR_BAD_FRAME);
+        assert_eq!(e.id, 42);
+    }
+
+    #[test]
+    fn oversized_top_k_has_stable_code() {
+        let f = Frame::Search(WireRequest {
+            id: 5,
+            top_p: 1,
+            top_k: MAX_WIRE_TOP_K + 1,
+            vector: vec![0.0; 4],
+        });
+        let mut cur = std::io::Cursor::new(f.encode());
+        let raw = read_raw(&mut cur).unwrap();
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.code, ERR_BAD_K);
+        assert_eq!(e.id, 5);
+    }
+
+    #[test]
+    fn zero_dim_search_has_stable_code() {
+        let f = Frame::Search(WireRequest { id: 6, top_p: 1, top_k: 1, vector: vec![] });
+        let mut cur = std::io::Cursor::new(f.encode());
+        let raw = read_raw(&mut cur).unwrap();
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.code, ERR_BAD_DIM);
+    }
+
+    #[test]
+    fn inconsistent_search_dim_rejected() {
+        // declared dim 8 but only 4 floats present
+        let good = Frame::Search(WireRequest {
+            id: 7,
+            top_p: 1,
+            top_k: 1,
+            vector: vec![0.0; 4],
+        });
+        let mut bytes = good.encode();
+        // payload starts at HEADER_LEN; dim field is at offset 8 in payload
+        bytes[HEADER_LEN + 8..HEADER_LEN + 12].copy_from_slice(&8u32.to_le_bytes());
+        let raw = read_raw(&mut std::io::Cursor::new(bytes)).unwrap();
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.code, ERR_BAD_FRAME);
+    }
+
+    #[test]
+    fn huge_declared_counts_rejected_before_allocation() {
+        // a tiny frame declaring dim = u32::MAX must be rejected by the
+        // length-consistency check, never sized into an allocation
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes()); // top_p
+        payload.extend_from_slice(&1u32.to_le_bytes()); // top_k
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+        payload.extend_from_slice(&0f32.to_le_bytes()); // one lone float
+        let raw = RawFrame { ftype: FT_SEARCH, id: 9, payload };
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.code, ERR_BAD_FRAME);
+        // same for the RESULT counts
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // n neighbors
+        let raw = RawFrame { ftype: FT_RESULT, id: 10, payload };
+        assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
+    }
+
+    #[test]
+    fn unknown_frame_type_recoverable() {
+        let raw = RawFrame { ftype: 0x7F, id: 1, payload: vec![] };
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.code, ERR_BAD_FRAME);
+    }
+
+    #[test]
+    fn json_lines_roundtrip() {
+        let frames = vec![
+            Frame::Search(WireRequest {
+                id: 1,
+                top_p: 2,
+                top_k: 3,
+                vector: vec![0.5, -1.5],
+            }),
+            sample_result(),
+            Frame::Error(WireError { id: 2, code: ERR_BAD_K, message: "too big".into() }),
+            Frame::Ping { id: 3 },
+            Frame::Pong { id: 4 },
+            Frame::Shutdown { id: 7 },
+            Frame::ShutdownOk { id: 8 },
+        ];
+        for f in frames {
+            let line = f.to_json_line();
+            assert!(line.ends_with('\n'));
+            let v = Json::parse(line.trim_end()).unwrap();
+            assert_eq!(Frame::from_json(&v).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn json_search_validation_mirrors_binary() {
+        let v = Json::parse(r#"{"op":"search","id":9,"vector":[]}"#).unwrap();
+        assert_eq!(Frame::from_json(&v).unwrap_err().code, ERR_BAD_DIM);
+        let v = Json::parse(
+            r#"{"op":"search","id":9,"vector":[1.0],"top_k":1000000}"#,
+        )
+        .unwrap();
+        assert_eq!(Frame::from_json(&v).unwrap_err().code, ERR_BAD_K);
+        let v = Json::parse(r#"{"op":"nope","id":1}"#).unwrap();
+        assert_eq!(Frame::from_json(&v).unwrap_err().code, ERR_BAD_FRAME);
+    }
+}

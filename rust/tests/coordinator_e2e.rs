@@ -173,6 +173,89 @@ fn shutdown_then_search_fails_cleanly() {
 }
 
 #[test]
+fn dead_worker_pool_errors_instead_of_hanging() {
+    // the PJRT backend with no artifacts makes every worker's engine
+    // build fail: the whole pool exits, the batch channel disconnects,
+    // and the batcher must answer every request with an explicit error
+    // response (the shutdown-audit guarantee: a request that cannot be
+    // served is *failed*, never silently dropped — a silent drop would
+    // hang a TCP client waiting on a shared response funnel)
+    let (index, wl) = build_index(9, 32, 128, 4);
+    let factory = EngineFactory {
+        index,
+        backend: Backend::Pjrt,
+        artifacts_dir: Some(PathBuf::from("/nonexistent/artifacts")),
+    };
+    let server = SearchServer::start(factory, CoordinatorConfig::default()).unwrap();
+    // give the workers a moment to fail and exit
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    for qi in 0..4 {
+        let err = server.search(wl.queries.get(qi).to_vec(), 1, 1).unwrap_err();
+        // the first batch can race the workers' exit ("worker dropped
+        // request"); once the batcher observes the dead pool, every
+        // later request gets the explicit error response
+        assert!(
+            err.to_string().contains("worker pool unavailable")
+                || err.to_string().contains("worker dropped request")
+                || err.to_string().contains("shutting down"),
+            "unexpected error: {err}"
+        );
+    }
+    // by now the batcher is in its fail-drain loop: the explicit error
+    // delivery (not a dropped channel) is pinned here
+    let err = server.search(wl.queries.get(0).to_vec(), 1, 1).unwrap_err();
+    assert!(
+        err.to_string().contains("worker pool unavailable"),
+        "expected explicit failure response, got: {err}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn searches_racing_shutdown_always_get_a_response() {
+    // requests queued (but maybe not yet batched) when shutdown() drops
+    // the producer side must each resolve — served or error — and the
+    // join must complete: no client thread may hang
+    let (index, wl) = build_index(10, 32, 256, 4);
+    let config = CoordinatorConfig {
+        max_batch: 4,
+        max_wait_us: 2_000,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let server = Arc::new(SearchServer::start(native_factory(index), config).unwrap());
+    let outcomes = {
+        let server = server.clone();
+        let wl = &wl;
+        std::thread::scope(|scope| {
+            let mut clients = Vec::new();
+            for ci in 0..8usize {
+                let server = server.clone();
+                clients.push(scope.spawn(move || {
+                    let mut ok = 0usize;
+                    let mut failed = 0usize;
+                    for j in 0..64usize {
+                        let qi = (ci * 64 + j) % wl.queries.len();
+                        match server.search(wl.queries.get(qi).to_vec(), 1, 1) {
+                            Ok(_) => ok += 1,
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (ok, failed)
+                }));
+            }
+            // shut down while the clients are mid-flight
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            server.shutdown();
+            clients.into_iter().map(|c| c.join().unwrap()).collect::<Vec<_>>()
+        })
+    };
+    // every single request resolved one way or the other
+    let total: usize = outcomes.iter().map(|(ok, failed)| ok + failed).sum();
+    assert_eq!(total, 8 * 64, "a request neither completed nor failed");
+}
+
+#[test]
 fn ops_accounting_flows_to_metrics() {
     let (index, wl) = build_index(6, 32, 256, 4);
     let server =

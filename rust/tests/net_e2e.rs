@@ -1,0 +1,316 @@
+//! Network serving end-to-end tests: real TCP connections on an
+//! ephemeral localhost port, pipelined concurrent clients, typed
+//! validation at the boundary, JSON-lines debug mode, graceful drain —
+//! and the core acceptance pin: a network response is bitwise-identical
+//! to the in-process `SearchServer::search` answer on the same index.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::data::Workload;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::net::{loadgen, wire, LoadGenConfig, NetClient, NetConfig, NetServer};
+use amsearch::runtime::Backend;
+use amsearch::util::Json;
+
+fn start_stack(
+    seed: u64,
+    d: usize,
+    n: usize,
+    q: usize,
+) -> (Arc<SearchServer>, NetServer, Workload) {
+    let mut rng = Rng::new(seed);
+    let wl = synthetic::dense_workload(d, n, 64, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: q, top_p: 2, ..Default::default() };
+    let idx = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+    let factory = EngineFactory { index: idx, backend: Backend::Native, artifacts_dir: None };
+    let config = CoordinatorConfig {
+        max_batch: 8,
+        max_wait_us: 300,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let server = Arc::new(SearchServer::start(factory, config).unwrap());
+    // small handler pool + fast poll: tests run many stacks in parallel
+    let net_cfg = NetConfig { max_connections: 8, max_inflight: 128, poll_ms: 10 };
+    let net = NetServer::bind(server.clone(), "127.0.0.1:0", net_cfg).unwrap();
+    (server, net, wl)
+}
+
+/// Acceptance pin: ephemeral port, >= 2 concurrent pipelined client
+/// connections, responses bitwise-identical (ids and distances) to the
+/// in-process answer for the same query.
+#[test]
+fn tcp_pipelined_clients_match_in_process() {
+    let (server, net, wl) = start_stack(1, 32, 512, 8);
+    let addr = net.local_addr();
+
+    // (query index, top_p, top_k) cells covering defaults (0), k > 1,
+    // full poll, and k beyond the class size
+    let cells: Vec<(usize, usize, usize)> = (0..24)
+        .map(|i| {
+            let qi = i % wl.queries.len();
+            let p = [0usize, 1, 2, 8][i % 4];
+            let k = [0usize, 1, 5, 300][(i / 4) % 4];
+            (qi, p, k)
+        })
+        .collect();
+
+    // in-process reference answers on the very same running server
+    let expected: Vec<_> = cells
+        .iter()
+        .map(|&(qi, p, k)| {
+            let r = server.search(wl.queries.get(qi).to_vec(), p, k).unwrap();
+            (r.neighbors, r.polled, r.candidates as u64)
+        })
+        .collect();
+
+    let n_clients = 3usize; // >= 2 concurrent connections
+    let results = amsearch::util::concurrent_map(n_clients, n_clients, |_| {
+        let mut client = NetClient::connect(addr).unwrap();
+        client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+        // pipelined: submit everything first, then collect by id
+        let ids: Vec<u64> = cells
+            .iter()
+            .map(|&(qi, p, k)| client.submit(wl.queries.get(qi), p, k).unwrap())
+            .collect();
+        assert_eq!(client.in_flight(), cells.len());
+        ids.into_iter().map(|id| client.wait(id).unwrap()).collect::<Vec<_>>()
+    });
+
+    for responses in results {
+        for (ci, resp) in responses.iter().enumerate() {
+            let (exp_neighbors, exp_polled, exp_candidates) = &expected[ci];
+            // Neighbor is (u32 id, f32 distance): PartialEq equality on
+            // finite distances == bitwise equality of both fields
+            assert_eq!(&resp.neighbors, exp_neighbors, "cell {ci}");
+            for (a, b) in resp.neighbors.iter().zip(exp_neighbors) {
+                assert_eq!(a.distance.to_bits(), b.distance.to_bits(), "cell {ci}");
+            }
+            assert_eq!(&resp.polled, exp_polled, "cell {ci}");
+            assert_eq!(resp.candidates, *exp_candidates, "cell {ci}");
+            assert!(resp.ops > 0);
+        }
+    }
+
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn validation_errors_have_stable_codes_and_connection_survives() {
+    let (server, net, wl) = start_stack(2, 32, 128, 4);
+    let addr = net.local_addr();
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // wrong dimension -> ERR_BAD_DIM from the server boundary
+    let id = client.submit(&[0.0f32; 31], 1, 1).unwrap();
+    let err = client.wait_detailed(id).unwrap().unwrap_err();
+    assert_eq!(err.code, wire::ERR_BAD_DIM);
+    assert!(err.message.contains("dim"), "{}", err.message);
+
+    // oversized top_k -> ERR_BAD_K from the wire boundary
+    let id = client
+        .submit(wl.queries.get(0), 1, (wire::MAX_WIRE_TOP_K + 1) as usize)
+        .unwrap();
+    let err = client.wait_detailed(id).unwrap().unwrap_err();
+    assert_eq!(err.code, wire::ERR_BAD_K);
+
+    // the connection is still usable after both error frames
+    let ok = client.search_k(wl.queries.get(0), 4, 1).unwrap();
+    assert_eq!(ok.neighbors.len(), 1);
+    assert_eq!(ok.polled.len(), 4);
+
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn zero_length_search_frame_gets_error_frame_not_hangup() {
+    let (server, net, _wl) = start_stack(3, 32, 128, 4);
+    let addr = net.local_addr();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // hand-crafted SEARCH frame with an empty payload
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&wire::MAGIC);
+    raw.push(wire::VERSION);
+    raw.push(0x01); // FT_SEARCH
+    raw.extend_from_slice(&0u16.to_le_bytes());
+    raw.extend_from_slice(&77u64.to_le_bytes());
+    raw.extend_from_slice(&0u32.to_le_bytes());
+    stream.write_all(&raw).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let frame = wire::read_frame(&mut reader).unwrap();
+    let wire::Frame::Error(e) = frame else { panic!("expected error frame") };
+    assert_eq!(e.code, wire::ERR_BAD_FRAME);
+    assert_eq!(e.id, 77);
+
+    // connection survives: a ping still answers
+    stream
+        .write_all(&wire::Frame::Ping { id: 78 }.encode())
+        .unwrap();
+    assert_eq!(
+        wire::read_frame(&mut reader).unwrap(),
+        wire::Frame::Pong { id: 78 }
+    );
+
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn admin_ping_and_stats() {
+    let (server, net, wl) = start_stack(4, 32, 128, 4);
+    let addr = net.local_addr();
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    client.ping().unwrap();
+    for qi in 0..5 {
+        client.search_k(wl.queries.get(qi), 2, 3).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("dim").unwrap().as_usize(), Some(32));
+    assert_eq!(stats.get("n_vectors").unwrap().as_usize(), Some(128));
+    assert!(stats.get("requests").unwrap().as_u64().unwrap() >= 5);
+    let latency = stats.get("latency").unwrap();
+    assert!(latency.get("count").unwrap().as_u64().unwrap() >= 5);
+    assert!(latency.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn json_lines_mode_serves_and_matches_binary() {
+    let (server, net, wl) = start_stack(5, 32, 128, 4);
+    let addr = net.local_addr();
+    let expected = server.search(wl.queries.get(0).to_vec(), 4, 3).unwrap();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // ping first: the very first byte ('{') selects JSON-lines mode
+    stream.write_all(b"{\"op\":\"ping\",\"id\":1}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str(), Some("pong"));
+    assert_eq!(v.get("id").unwrap().as_u64(), Some(1));
+
+    // a search through the JSON encoding matches the in-process answer
+    let req = wire::Frame::Search(wire::WireRequest {
+        id: 2,
+        top_p: 4,
+        top_k: 3,
+        vector: wl.queries.get(0).to_vec(),
+    });
+    stream.write_all(req.to_json_line().as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    let wire::Frame::Result(resp) = wire::Frame::from_json(&v).unwrap() else {
+        panic!("expected result, got {line}");
+    };
+    assert_eq!(resp.id, 2);
+    assert_eq!(resp.neighbors, expected.neighbors);
+    assert_eq!(resp.polled, expected.polled);
+
+    // a malformed line gets a typed error and the connection survives
+    stream.write_all(b"this is not json\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str(), Some("error"));
+    assert_eq!(
+        v.get("code").unwrap().as_u64(),
+        Some(wire::ERR_BAD_FRAME as u64)
+    );
+    stream.write_all(b"{\"op\":\"ping\",\"id\":3}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(
+        Json::parse(line.trim()).unwrap().get("op").unwrap().as_str(),
+        Some("pong")
+    );
+
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_frame_drains_and_stops_the_server() {
+    let (server, net, wl) = start_stack(6, 32, 256, 4);
+    let addr = net.local_addr();
+
+    // connection A: pipeline a burst and collect every response — all
+    // of them were accepted, so all of them must resolve
+    let mut a = NetClient::connect(addr).unwrap();
+    a.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let ids: Vec<u64> = (0..16)
+        .map(|i| a.submit(wl.queries.get(i % wl.queries.len()), 2, 1).unwrap())
+        .collect();
+    for id in ids {
+        a.wait(id).unwrap();
+    }
+
+    // connection B initiates the shutdown
+    let mut b = NetClient::connect(addr).unwrap();
+    b.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    b.shutdown_server().unwrap();
+
+    // the front door fully drains: join() must return (bounded by the
+    // connection poll interval), and only then is the coordinator
+    // stopped — the drain ordering under test
+    net.join();
+    assert!(net.is_shutting_down());
+    let m = server.metrics();
+    assert!(m.requests >= 16);
+    server.shutdown();
+
+    // new connections are refused once the listener is gone; a search
+    // on the drained connection resolves (error or EOF), never hangs
+    match a.search_k(wl.queries.get(0), 1, 1) {
+        Ok(_) => panic!("server should no longer serve searches"),
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(!msg.is_empty());
+        }
+    }
+}
+
+#[test]
+fn loadgen_closed_loop_reports_throughput_and_latency() {
+    let (server, net, wl) = start_stack(7, 32, 256, 4);
+    let addr = net.local_addr().to_string();
+    let queries: Vec<Vec<f32>> =
+        (0..wl.queries.len()).map(|qi| wl.queries.get(qi).to_vec()).collect();
+    let cfg = LoadGenConfig {
+        connections: 2,
+        requests: 100,
+        depth: 4,
+        top_p: 2,
+        top_k: 3,
+        connect_timeout: Duration::from_secs(10),
+    };
+    let report = loadgen::run(&addr, &queries, &cfg).unwrap();
+    assert_eq!(report.requests, 100);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.latency.count(), 100);
+    assert!(report.qps() > 0.0);
+    let j = report.to_json();
+    assert_eq!(j.get("requests").unwrap().as_u64(), Some(100));
+    assert!(j.get("latency").unwrap().get("p90_ns").is_some());
+    // the server counted exactly the loadgen traffic
+    assert_eq!(server.metrics().requests, 100);
+    net.shutdown();
+    server.shutdown();
+}

@@ -410,3 +410,112 @@ fn prop_dataset_invariants() {
         }
     });
 }
+
+/// Wire-protocol round trip: `parse(read_raw(encode(x))) == x` for
+/// random search requests across the boundary shapes (dim 1, large
+/// frames, extreme ids, top_k at the wire limit).
+#[test]
+fn prop_wire_request_roundtrip() {
+    use amsearch::net::wire::{self, Frame, WireRequest, MAX_WIRE_TOP_K};
+    cases(40, |rng| {
+        let dim = 1 + rng.below(2_000) as usize;
+        let f = Frame::Search(WireRequest {
+            id: rng.next_u64(),
+            top_p: rng.below(1_000) as u32,
+            top_k: rng.below(MAX_WIRE_TOP_K as u64 + 1) as u32,
+            vector: (0..dim).map(|_| rng.normal() as f32).collect(),
+        });
+        let bytes = f.encode();
+        let raw = wire::read_raw(&mut std::io::Cursor::new(bytes)).unwrap();
+        assert_eq!(wire::parse(&raw).unwrap(), f);
+    });
+}
+
+/// Wire-protocol round trip for responses: k > 1 neighbor lists, the
+/// empty-neighbors ("no candidates") case, and long polled lists —
+/// through both the blocking reader and the incremental `FrameBuffer`
+/// with random packet fragmentation.
+#[test]
+fn prop_wire_response_roundtrip() {
+    use amsearch::net::wire::{self, Frame, FrameBuffer, WireResponse};
+    use amsearch::search::Neighbor;
+    cases(40, |rng| {
+        let k = rng.below(400) as usize; // 0 = empty-neighbors case
+        let f = Frame::Result(WireResponse {
+            id: rng.next_u64(),
+            neighbors: (0..k)
+                .map(|_| Neighbor {
+                    id: rng.next_u64() as u32,
+                    distance: rng.normal() as f32,
+                })
+                .collect(),
+            polled: (0..rng.below(128)).map(|_| rng.next_u64() as u32).collect(),
+            candidates: rng.next_u64(),
+            ops: rng.next_u64(),
+            service_ns: rng.next_u64(),
+        });
+        let bytes = f.encode();
+        let raw = wire::read_raw(&mut std::io::Cursor::new(bytes.clone())).unwrap();
+        assert_eq!(wire::parse(&raw).unwrap(), f);
+        // the incremental decoder sees the same frame under arbitrary
+        // TCP fragmentation
+        let mut fb = FrameBuffer::new();
+        let mut pos = 0usize;
+        let mut got = None;
+        while pos < bytes.len() {
+            let step = 1 + rng.below(64) as usize;
+            let end = (pos + step).min(bytes.len());
+            fb.extend(&bytes[pos..end]);
+            pos = end;
+            if let Some(raw) = fb.next_raw().unwrap() {
+                got = Some(wire::parse(&raw).unwrap());
+            }
+        }
+        assert_eq!(got, Some(f));
+        assert!(fb.is_empty());
+    });
+}
+
+/// Corrupt frames are rejected, never mis-parsed: bad magic and
+/// oversized length prefixes are connection-fatal, truncation is an
+/// error, and single-byte payload corruption either still parses (a
+/// flipped value bit) or fails cleanly — it must never panic.
+#[test]
+fn prop_wire_corrupt_frames_rejected() {
+    use amsearch::net::wire::{self, Frame, WireRequest};
+    cases(40, |rng| {
+        let dim = 1 + rng.below(64) as usize;
+        let f = Frame::Search(WireRequest {
+            id: rng.next_u64(),
+            top_p: rng.below(64) as u32,
+            top_k: rng.below(64) as u32,
+            vector: (0..dim).map(|_| rng.normal() as f32).collect(),
+        });
+        let good = f.encode();
+
+        // (a) corrupt magic: fatal
+        let mut bad_magic = good.clone();
+        let mi = rng.below(4) as usize;
+        bad_magic[mi] ^= 0xFF;
+        assert!(wire::read_raw(&mut std::io::Cursor::new(bad_magic)).is_err());
+
+        // (b) oversized length prefix: fatal, nothing allocated
+        let mut bad_len = good.clone();
+        bad_len[16..20].copy_from_slice(&(wire::MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(wire::read_raw(&mut std::io::Cursor::new(bad_len)).is_err());
+
+        // (c) truncation at any point: error, not a partial frame
+        let cut = rng.below(good.len() as u64) as usize;
+        assert!(wire::read_raw(&mut std::io::Cursor::new(good[..cut].to_vec()))
+            .is_err());
+
+        // (d) arbitrary payload byte corruption: parse or typed reject
+        let mut flipped = good.clone();
+        let payload_len = (good.len() - wire::HEADER_LEN) as u64;
+        let bi = wire::HEADER_LEN + rng.below(payload_len) as usize;
+        flipped[bi] ^= 1 << rng.below(8);
+        if let Ok(raw) = wire::read_raw(&mut std::io::Cursor::new(flipped)) {
+            let _ = wire::parse(&raw); // must not panic either way
+        }
+    });
+}
