@@ -1,0 +1,103 @@
+//! End-to-end sharded-cluster serving benchmark: a real in-process
+//! cluster (N shard servers + scatter-gather router over loopback TCP)
+//! swept across (shards × fan-out s) cells by the closed-loop load
+//! generator, plus a shard-pruning recall column — how often the
+//! pruned fan-out reproduces the full fan-out top-1.
+//!
+//! Set `AMSEARCH_BENCH_JSON=BENCH_cluster_serving.json` to emit the
+//! measurements as a machine-readable artifact, and `AMSEARCH_BENCH_MS`
+//! to scale the per-cell request budget.
+
+#[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
+mod harness;
+
+use std::time::Duration;
+
+use amsearch::cluster::{ClusterConfig, ClusterHarness, ShardStrategy};
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::PruneRecall;
+use amsearch::net::{loadgen, LoadGenConfig};
+use harness::{budget, section, write_json_if_requested, Measurement};
+
+fn main() {
+    let mut rng = Rng::new(53);
+    let (d, n, q, p) = (64usize, 8192usize, 32usize, 4usize);
+    let spec = ClusteredSpec { dim: d, n_clusters: q, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, n, 128, &mut rng);
+    let params = IndexParams { n_classes: q, top_p: p, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let queries: Vec<Vec<f32>> =
+        (0..wl.queries.len()).map(|qi| wl.queries.get(qi).to_vec()).collect();
+    let requests = (budget().as_millis() as usize * 10).max(200);
+
+    section("sharded cluster serving (loadgen -> router -> top-s shards)");
+    let mut all: Vec<Measurement> = Vec::new();
+    for &n_shards in &[2usize, 4] {
+        let cfg = ClusterConfig {
+            n_shards,
+            strategy: ShardStrategy::BalancedMembers,
+            ..Default::default()
+        };
+        let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+        let addr = cluster.router_addr().to_string();
+        println!(
+            "cluster: n={n} d={d} q={q} shards={n_shards} at {addr} \
+             (shard sizes: {:?})",
+            (0..n_shards)
+                .map(|si| cluster.router().table().shard_len(si))
+                .collect::<Vec<_>>()
+        );
+        for s in 1..=n_shards {
+            cluster.router().set_fan_out(s);
+            let lg = LoadGenConfig {
+                connections: 4,
+                depth: 8,
+                requests,
+                top_p: 0,
+                top_k: 1,
+                connect_timeout: Duration::from_secs(10),
+            };
+            let report = loadgen::run(&addr, &queries, &lg).unwrap();
+            // shard-pruning recall: pruned top-1 vs full-fan-out top-1
+            // on the workload queries (s = N is identical by definition)
+            let mut prune = PruneRecall::new();
+            for query in queries.iter().take(64) {
+                cluster.router().set_fan_out(s);
+                let pruned = cluster.router().search(query.clone(), 0, 1).unwrap();
+                cluster.router().set_fan_out(n_shards);
+                let full = cluster.router().search(query.clone(), 0, 1).unwrap();
+                prune.record(pruned.neighbor(), full.neighbor());
+            }
+            let m = Measurement {
+                name: format!("cluster shards={n_shards} fanout={s}"),
+                iters: report.requests,
+                mean_ns: report.latency.mean_ns(),
+                p50_ns: report.latency.quantile_ns(0.5) as f64,
+                p95_ns: report.latency.quantile_ns(0.95) as f64,
+            };
+            m.report();
+            println!(
+                "  -> {:.0} qps, p99 {:.2}us, errors {}, prune-recall {:.3}",
+                report.qps(),
+                report.latency.quantile_ns(0.99) as f64 / 1e3,
+                report.errors,
+                prune.value()
+            );
+            all.push(m);
+        }
+        let rm = cluster.router().metrics();
+        println!(
+            "router: {} requests, mean fan-out {:.2}, end-to-end {} | \
+             shard service {}",
+            rm.requests,
+            rm.fanout.mean_fanout(),
+            rm.latency.summary(),
+            rm.shard_service.summary()
+        );
+        cluster.shutdown();
+    }
+    write_json_if_requested(&all);
+}

@@ -1,0 +1,244 @@
+//! Single-binary cluster harness: spawn N in-process shard servers
+//! (each a full coordinator + TCP front door on an ephemeral loopback
+//! port) plus the scatter-gather router in front of them — a real
+//! cluster topology over real TCP, with no orchestration tooling.
+//!
+//! ```text
+//! clients ──TCP──► router front door (NetServer)
+//!                    └─ ClusterRouter: score super-memories,
+//!                       contact top-s shards over pooled NetClients
+//!                         ├──TCP──► shard 0: NetServer + SearchServer
+//!                         ├──TCP──► shard 1: NetServer + SearchServer
+//!                         └──TCP──► ...        (ephemeral ports)
+//! ```
+//!
+//! Tests, benches, and CI exercise the exact production wire path; the
+//! `serve-cluster` CLI subcommand is a thin wrapper over
+//! [`ClusterHarness::launch`] / [`ClusterHarness::launch_from_dir`].
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use crate::error::Result;
+use crate::index::AmIndex;
+use crate::net::{NetConfig, NetServer};
+use crate::runtime::Backend;
+
+use super::plan::{build_shard_index, load_cluster, routing_table, ShardPlan, ShardStrategy};
+use super::router::{ClusterRouter, RouterConfig};
+
+/// Everything needed to launch a cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of shards `N` (ignored by
+    /// [`ClusterHarness::launch_from_dir`], which takes it from the
+    /// manifest).
+    pub n_shards: usize,
+    /// Class→shard assignment strategy.
+    pub strategy: ShardStrategy,
+    /// Router tuning (fan-out, workers, retry policy).
+    pub router: RouterConfig,
+    /// Per-shard coordinator tuning.
+    pub coordinator: CoordinatorConfig,
+    /// Front-door tuning, shared by the router and the shards (shard
+    /// front doors are relabeled `role = "shard"` in STATS).
+    pub net: NetConfig,
+    /// Scoring backend for the shard engines.
+    pub backend: Backend,
+    /// Artifacts directory (PJRT backend only).
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_shards: 2,
+            strategy: ShardStrategy::Contiguous,
+            router: RouterConfig::default(),
+            coordinator: CoordinatorConfig::default(),
+            net: NetConfig::default(),
+            backend: Backend::Native,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// One running shard: its coordinator and its TCP front door.
+struct ShardNode {
+    search: Arc<SearchServer>,
+    net: NetServer,
+}
+
+/// A running in-process cluster: N shard servers + router, all on
+/// loopback TCP.
+pub struct ClusterHarness {
+    shards: Vec<ShardNode>,
+    router: Arc<ClusterRouter>,
+    router_net: NetServer,
+}
+
+impl ClusterHarness {
+    /// Plan `index` across `cfg.n_shards` shards and launch the whole
+    /// cluster, with the router's front door bound to `listen`
+    /// (`"127.0.0.1:0"` for an ephemeral port).
+    pub fn launch(index: &AmIndex, listen: &str, cfg: &ClusterConfig) -> Result<Self> {
+        let plan = ShardPlan::for_index(index, cfg.n_shards, cfg.strategy)?;
+        let table = routing_table(index, &plan)?;
+        let mut factories = Vec::with_capacity(plan.n_shards);
+        for si in 0..plan.n_shards {
+            let (shard, _ids) = build_shard_index(index, &plan, si)?;
+            factories.push(EngineFactory {
+                index: Arc::new(shard),
+                backend: cfg.backend,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+            });
+        }
+        Self::launch_shards(table, factories, listen, cfg)
+    }
+
+    /// Launch from a plan directory written by `shard-plan`
+    /// ([`super::plan::write_cluster`]): shard artifacts are loaded
+    /// from disk, the routing table from the v3 manifest.  Every shard
+    /// artifact is validated against the manifest (dimension and vector
+    /// count) — a stale or half-written plan directory must fail here,
+    /// not panic a router worker at query time when a shard-local id
+    /// falls outside the manifest's id map.
+    pub fn launch_from_dir(dir: &Path, listen: &str, cfg: &ClusterConfig) -> Result<Self> {
+        let loaded = load_cluster(dir)?;
+        let mut factories = Vec::with_capacity(loaded.shard_files.len());
+        for (si, file) in loaded.shard_files.iter().enumerate() {
+            let factory = EngineFactory::from_index_file(
+                file,
+                cfg.backend,
+                cfg.artifacts_dir.clone(),
+            )?;
+            if factory.index.dim() != loaded.table.dim()
+                || factory.index.len() != loaded.table.shard_len(si)
+            {
+                return Err(crate::error::Error::Data(format!(
+                    "shard artifact {} (n={}, d={}) does not match the \
+                     manifest (n={}, d={}): stale or half-written plan \
+                     directory — rerun shard-plan",
+                    file.display(),
+                    factory.index.len(),
+                    factory.index.dim(),
+                    loaded.table.shard_len(si),
+                    loaded.table.dim()
+                )));
+            }
+            factories.push(factory);
+        }
+        Self::launch_shards(loaded.table, factories, listen, cfg)
+    }
+
+    fn launch_shards(
+        table: super::plan::RoutingTable,
+        factories: Vec<EngineFactory>,
+        listen: &str,
+        cfg: &ClusterConfig,
+    ) -> Result<Self> {
+        let shard_net = NetConfig { role: Some("shard"), ..cfg.net };
+        let mut shards = Vec::with_capacity(factories.len());
+        let mut addrs = Vec::with_capacity(factories.len());
+        for factory in factories {
+            let search = Arc::new(SearchServer::start(factory, cfg.coordinator)?);
+            let net = NetServer::bind(search.clone(), "127.0.0.1:0", shard_net)?;
+            addrs.push(net.local_addr().to_string());
+            shards.push(ShardNode { search, net });
+        }
+        let router = Arc::new(ClusterRouter::start(table, addrs, cfg.router)?);
+        let router_net = NetServer::bind(router.clone(), listen, cfg.net)?;
+        Ok(ClusterHarness { shards, router, router_net })
+    }
+
+    /// The router front door's address (what clients and `loadgen`
+    /// connect to).
+    pub fn router_addr(&self) -> std::net::SocketAddr {
+        self.router_net.local_addr()
+    }
+
+    /// Address of shard `si`'s front door.
+    pub fn shard_addr(&self, si: usize) -> std::net::SocketAddr {
+        self.shards[si].net.local_addr()
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The scatter-gather router (fan-out knob, metrics, in-process
+    /// `search`).
+    pub fn router(&self) -> &Arc<ClusterRouter> {
+        &self.router
+    }
+
+    /// Shard `si`'s coordinator (metrics inspection in tests).
+    pub fn shard_server(&self, si: usize) -> &Arc<SearchServer> {
+        &self.shards[si].search
+    }
+
+    /// Block until the router's front door has drained — i.e. until a
+    /// client sent a SHUTDOWN frame (`loadgen --shutdown`).
+    pub fn join(&self) {
+        self.router_net.join();
+    }
+
+    /// Orderly full-cluster shutdown: router front door first (drains
+    /// in-flight client requests), then the router workers, then each
+    /// shard's front door and coordinator — no layer is torn down while
+    /// a layer above it still holds in-flight work.
+    pub fn shutdown(&self) {
+        self.router_net.shutdown();
+        self.router.shutdown();
+        for shard in &self.shards {
+            shard.net.shutdown();
+            shard.search.shutdown();
+        }
+    }
+}
+
+impl Drop for ClusterHarness {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synthetic::{self, QueryModel};
+    use crate::index::IndexParams;
+
+    #[test]
+    fn harness_launches_and_serves_through_the_router() {
+        let mut rng = Rng::new(31);
+        let wl = synthetic::dense_workload(24, 192, 12, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 6, top_p: 2, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let cfg = ClusterConfig {
+            n_shards: 3,
+            net: NetConfig { poll_ms: 10, ..Default::default() },
+            ..Default::default()
+        };
+        let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+        assert_eq!(cluster.n_shards(), 3);
+        // full poll + full fan-out: every query finds its stored copy
+        for (qi, &gt) in wl.ground_truth.iter().enumerate().take(6) {
+            let resp = cluster
+                .router()
+                .search(wl.queries.get(qi).to_vec(), 6, 1)
+                .unwrap();
+            assert_eq!(resp.neighbor(), Some(gt), "query {qi}");
+            assert_eq!(resp.candidates, 192, "full poll scans everything");
+            assert_eq!(resp.polled.len(), 6, "all classes polled across shards");
+        }
+        let m = cluster.router().metrics();
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.fanout.per_shard, vec![6, 6, 6]);
+        cluster.shutdown();
+    }
+}

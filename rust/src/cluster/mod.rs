@@ -1,0 +1,31 @@
+//! The sharded cluster tier: shard planning, AM-based shard routing,
+//! and a single-binary cluster harness.
+//!
+//! The paper's core move — poll small associative memories to decide
+//! where to search exhaustively — is applied one level up: the router
+//! holds one **summed super-memory per shard** (sum rule ⇒ exactly
+//! `Σ_classes W_i`), scores them per query (`d²·N`), and contacts only
+//! the top-`s` shards over the existing [`net`](crate::net) wire
+//! protocol, merging shard top-k responses with the same
+//! [`TopK`](crate::search::TopK) rule every scan path uses.  `s = N`
+//! reproduces single-node results bitwise (with per-shard full poll);
+//! `s < N` prunes network fan-out like `p < q` prunes scan work.
+//!
+//! * [`plan`] — shard planner (contiguous / round-robin /
+//!   balanced-by-members), per-shard sub-index construction, routing
+//!   table, and the v3 shard manifest (`cluster.amplan`)
+//! * [`router`] — the scatter-gather [`Serveable`](crate::net::Serveable)
+//!   backend with pooled, reconnect-with-backoff shard links
+//! * [`harness`] — N in-process shard servers + router over loopback
+//!   TCP (`serve-cluster`), so tests and CI drive the real wire path
+
+pub mod harness;
+pub mod plan;
+pub mod router;
+
+pub use harness::{ClusterConfig, ClusterHarness};
+pub use plan::{
+    build_shard_index, load_cluster, routing_table, write_cluster, LoadedCluster,
+    RoutingTable, ShardPlan, ShardStrategy,
+};
+pub use router::{ClusterRouter, RouterConfig, RouterMetrics};

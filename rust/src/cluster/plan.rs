@@ -1,0 +1,810 @@
+//! The shard planner: partition a trained [`AmIndex`]'s classes across
+//! N shards and derive everything the cluster tier needs to run them —
+//! per-shard sub-indices (ordinary index files written via
+//! [`crate::index::persist::save`]), and a [`RoutingTable`] holding each
+//! shard's **summed super-memory**.
+//!
+//! The routing table is the paper's trick applied one level up: the sum
+//! rule is additive, so a shard's super-memory is exactly
+//! `Σ_{classes in shard} W_i`, and the bilinear score
+//! `x⁰ᵀ W_shard x⁰ = Σ_classes s(X^i, x⁰)` ranks shards by how much
+//! stored signal they hold for a query — the same way
+//! [`HierarchicalIndex`](crate::index::HierarchicalIndex) ranks
+//! super-classes, but across the network boundary.  The router keeps
+//! only this small `[N, d, d]` structure resident; shards hold the bulk
+//! data.
+//!
+//! Shard manifest format v3 (`cluster.amplan`, all integers
+//! little-endian, FNV-1a checksummed like the index format):
+//!
+//! ```text
+//! magic    8B   "AMSHPLAN"
+//! version  u32  (3)
+//! dim      u32
+//! metric   u8   0 = sq_l2, 1 = neg_dot, 2 = hamming
+//! strategy u8   0 = contiguous, 1 = round_robin, 2 = balanced
+//! top_k    u32  default neighbors per query
+//! n_total  u64  vectors across all shards
+//! n_shards u32
+//! per shard:
+//!   file       u32 len + utf-8 bytes (shard index artifact)
+//!   n_classes  u32, then that many u32 global class ids (ascending)
+//!   n_vectors  u64, then that many u32 global vector ids (ascending)
+//!   count      u64  patterns summed into the shard super-memory
+//! routing  n_shards * dim * dim * f32 (summed super-memories)
+//! checksum u64  FNV-1a of everything before it
+//! ```
+
+use std::io::{BufReader, BufWriter};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::index::persist::{CountingReader, CountingWriter, SHARD_MANIFEST_VERSION};
+use crate::index::{AmIndex, IndexParams};
+use crate::memory::{MemoryBank, StorageRule};
+use crate::search::Metric;
+
+/// File name of the shard manifest inside a plan directory.
+pub const MANIFEST_FILE: &str = "cluster.amplan";
+
+const MANIFEST_MAGIC: &[u8; 8] = b"AMSHPLAN";
+
+/// How classes are distributed across shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Contiguous runs of classes (near-equal class counts per shard).
+    Contiguous,
+    /// Class `c` goes to shard `c % N`.
+    RoundRobin,
+    /// Longest-processing-time greedy on class member counts: classes
+    /// sorted by size descending, each assigned to the currently
+    /// smallest shard — near-equal *vector* counts even when class
+    /// sizes are skewed (greedy allocation, online inserts).
+    BalancedMembers,
+}
+
+impl std::str::FromStr for ShardStrategy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "contiguous" => Ok(ShardStrategy::Contiguous),
+            "round_robin" => Ok(ShardStrategy::RoundRobin),
+            "balanced" => Ok(ShardStrategy::BalancedMembers),
+            other => Err(Error::Config(format!(
+                "unknown shard strategy '{other}' \
+                 (expected contiguous | round_robin | balanced)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for ShardStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShardStrategy::Contiguous => "contiguous",
+            ShardStrategy::RoundRobin => "round_robin",
+            ShardStrategy::BalancedMembers => "balanced",
+        })
+    }
+}
+
+impl ShardStrategy {
+    fn to_byte(self) -> u8 {
+        match self {
+            ShardStrategy::Contiguous => 0,
+            ShardStrategy::RoundRobin => 1,
+            ShardStrategy::BalancedMembers => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(ShardStrategy::Contiguous),
+            1 => Ok(ShardStrategy::RoundRobin),
+            2 => Ok(ShardStrategy::BalancedMembers),
+            x => Err(Error::Data(format!("bad shard strategy byte {x}"))),
+        }
+    }
+}
+
+/// An assignment of `q` classes to `n_shards` shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Number of shards `N`.
+    pub n_shards: usize,
+    /// Strategy that produced the plan.
+    pub strategy: ShardStrategy,
+    /// `shard_of[class] = shard index`.
+    pub shard_of: Vec<u32>,
+    /// Global class ids per shard, ascending.
+    pub classes_of: Vec<Vec<u32>>,
+}
+
+impl ShardPlan {
+    /// Plan a partition of `class_sizes.len()` classes (with the given
+    /// member counts) across `n_shards` shards.  Every shard receives at
+    /// least one class (requires `1 <= n_shards <= q`).
+    pub fn new(
+        class_sizes: &[usize],
+        n_shards: usize,
+        strategy: ShardStrategy,
+    ) -> Result<ShardPlan> {
+        let q = class_sizes.len();
+        if n_shards == 0 || n_shards > q {
+            return Err(Error::Config(format!(
+                "need 1 <= n_shards={n_shards} <= q={q}"
+            )));
+        }
+        let mut shard_of = vec![0u32; q];
+        match strategy {
+            ShardStrategy::Contiguous => {
+                // N contiguous chunks of size floor(q/N), the first
+                // q % N chunks one larger — never an empty shard
+                let base = q / n_shards;
+                let extra = q % n_shards;
+                let mut c = 0usize;
+                for s in 0..n_shards {
+                    let len = base + usize::from(s < extra);
+                    for _ in 0..len {
+                        shard_of[c] = s as u32;
+                        c += 1;
+                    }
+                }
+            }
+            ShardStrategy::RoundRobin => {
+                for (c, slot) in shard_of.iter_mut().enumerate() {
+                    *slot = (c % n_shards) as u32;
+                }
+            }
+            ShardStrategy::BalancedMembers => {
+                let mut order: Vec<usize> = (0..q).collect();
+                // largest classes first; ties by smaller class id
+                order.sort_by_key(|&c| (std::cmp::Reverse(class_sizes[c]), c));
+                let mut load = vec![0usize; n_shards];
+                for (i, &c) in order.iter().enumerate() {
+                    // the first N classes seed one per shard so no shard
+                    // is left empty even with zero-sized classes
+                    let s = if i < n_shards {
+                        i
+                    } else {
+                        (0..n_shards)
+                            .min_by_key(|&s| (load[s], s))
+                            .expect("n_shards >= 1")
+                    };
+                    shard_of[c] = s as u32;
+                    load[s] += class_sizes[c];
+                }
+            }
+        }
+        let mut classes_of = vec![Vec::new(); n_shards];
+        for (c, &s) in shard_of.iter().enumerate() {
+            classes_of[s as usize].push(c as u32);
+        }
+        // class ids were visited ascending, so each list is ascending —
+        // the invariant the id-remap monotonicity proof rests on
+        Ok(ShardPlan { n_shards, strategy, shard_of, classes_of })
+    }
+
+    /// Convenience: plan over a built index's class sizes.
+    pub fn for_index(
+        index: &AmIndex,
+        n_shards: usize,
+        strategy: ShardStrategy,
+    ) -> Result<ShardPlan> {
+        ShardPlan::new(&index.partition().sizes(), n_shards, strategy)
+    }
+
+    /// Global vector ids belonging to shard `si`, ascending.  Ascending
+    /// order is load-bearing: shard-local ids are assigned in this
+    /// order, so the local `(distance, id)` tie-break of a shard's
+    /// top-k agrees with the global one after remapping — the property
+    /// that makes full fan-out bitwise-identical to single-node search
+    /// even through distance ties.
+    pub fn shard_vector_ids(&self, index: &AmIndex, si: usize) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.classes_of[si]
+            .iter()
+            .flat_map(|&c| index.partition().members(c as usize).iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Vector counts per shard (balance diagnostic).
+    pub fn shard_sizes(&self, class_sizes: &[usize]) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.n_shards];
+        for (c, &s) in self.shard_of.iter().enumerate() {
+            sizes[s as usize] += class_sizes[c];
+        }
+        sizes
+    }
+}
+
+/// Build shard `si`'s standalone sub-index: the shard's classes (with
+/// their original memories, weights bit-identical) over the shard's
+/// vectors, with local ids assigned in ascending-global-id order.
+/// Returns the sub-index plus the local→global id map.
+pub fn build_shard_index(
+    index: &AmIndex,
+    plan: &ShardPlan,
+    si: usize,
+) -> Result<(AmIndex, Vec<u32>)> {
+    let classes = &plan.classes_of[si];
+    if classes.is_empty() {
+        return Err(Error::Config(format!("shard {si} has no classes")));
+    }
+    let shard_ids = plan.shard_vector_ids(index, si);
+    if shard_ids.len() < classes.len() {
+        return Err(Error::Config(format!(
+            "shard {si}: {} vectors cannot cover {} classes \
+             (lower --shards or rebalance)",
+            shard_ids.len(),
+            classes.len()
+        )));
+    }
+    let assignments: Vec<u32> = shard_ids
+        .iter()
+        .map(|&gid| {
+            let gc = index.partition().class_of(gid as usize);
+            classes.binary_search(&gc).expect("member of a shard class") as u32
+        })
+        .collect();
+    let d = index.dim();
+    let mut stacked = Vec::with_capacity(classes.len() * d * d);
+    let mut counts = Vec::with_capacity(classes.len());
+    for &c in classes {
+        stacked.extend_from_slice(index.bank().class_weights(c as usize));
+        counts.push(index.bank().count(c as usize));
+    }
+    let data = index.data().gather(&shard_ids);
+    let p = index.params();
+    let params = IndexParams {
+        n_classes: classes.len(),
+        top_p: p.top_p.min(classes.len()).max(1),
+        top_k: p.top_k,
+        rule: p.rule,
+        allocation: p.allocation,
+        metric: p.metric,
+        greedy_cap_factor: p.greedy_cap_factor,
+    };
+    let shard = AmIndex::from_parts(params, assignments, stacked, counts, data)?;
+    Ok((shard, shard_ids))
+}
+
+/// The router's resident structure: one summed super-memory per shard
+/// plus the id/class maps needed to translate shard-local responses
+/// back into the global namespace.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    /// `[N, d, d]` stacked shard super-memories (sum rule).
+    bank: MemoryBank,
+    metric: Metric,
+    default_top_k: usize,
+    n_vectors: usize,
+    /// `id_maps[s][local] = global` vector id (ascending per shard).
+    id_maps: Vec<Vec<u32>>,
+    /// `class_maps[s][local] = global` class id (ascending per shard).
+    class_maps: Vec<Vec<u32>>,
+}
+
+impl RoutingTable {
+    /// Number of shards `N`.
+    pub fn n_shards(&self) -> usize {
+        self.bank.n_classes()
+    }
+
+    /// Vector dimensionality `d`.
+    pub fn dim(&self) -> usize {
+        self.bank.dim()
+    }
+
+    /// Total vectors across all shards.
+    pub fn n_vectors(&self) -> usize {
+        self.n_vectors
+    }
+
+    /// The index's default `k` (used to size the router's merge
+    /// accumulator when a request passes `top_k = 0`).
+    pub fn default_top_k(&self) -> usize {
+        self.default_top_k
+    }
+
+    /// Distance metric of the sharded index.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// The stacked super-memory bank (for inspection/tests).
+    pub fn bank(&self) -> &MemoryBank {
+        &self.bank
+    }
+
+    /// Score every shard's super-memory against `x` — the shard-tier
+    /// analog of polling the class memories (`d²·N` operations).
+    pub fn score(&self, x: &[f32]) -> Vec<f32> {
+        self.bank.score_query(x)
+    }
+
+    /// Translate a shard-local vector id to its global id.
+    pub fn global_id(&self, shard: usize, local: u32) -> u32 {
+        self.id_maps[shard][local as usize]
+    }
+
+    /// Translate a shard-local class id to its global id.
+    pub fn global_class(&self, shard: usize, local: u32) -> u32 {
+        self.class_maps[shard][local as usize]
+    }
+
+    /// Vectors held by shard `si`.
+    pub fn shard_len(&self, si: usize) -> usize {
+        self.id_maps[si].len()
+    }
+}
+
+/// Derive the routing table for a plan over a built index.  Requires
+/// the sum rule: the shard super-memory is `Σ_classes W_i`, which is
+/// only a faithful super-memory when storage is additive (same
+/// restriction as [`HierarchicalIndex`](crate::index::HierarchicalIndex)).
+pub fn routing_table(index: &AmIndex, plan: &ShardPlan) -> Result<RoutingTable> {
+    if index.params().rule != StorageRule::Sum {
+        return Err(Error::Config(
+            "shard routing requires the sum rule (super-memories must be additive)"
+                .into(),
+        ));
+    }
+    let d = index.dim();
+    let sz = d * d;
+    let mut weights = vec![0f32; plan.n_shards * sz];
+    let mut counts = vec![0usize; plan.n_shards];
+    for (c, &s) in plan.shard_of.iter().enumerate() {
+        let dst = &mut weights[s as usize * sz..(s as usize + 1) * sz];
+        for (a, b) in dst.iter_mut().zip(index.bank().class_weights(c)) {
+            *a += b;
+        }
+        counts[s as usize] += index.bank().count(c);
+    }
+    let bank = MemoryBank::from_parts(d, weights, counts, StorageRule::Sum)?;
+    let id_maps: Vec<Vec<u32>> = (0..plan.n_shards)
+        .map(|si| plan.shard_vector_ids(index, si))
+        .collect();
+    Ok(RoutingTable {
+        bank,
+        metric: index.params().metric,
+        default_top_k: index.params().top_k,
+        n_vectors: index.len(),
+        id_maps,
+        class_maps: plan.classes_of.clone(),
+    })
+}
+
+/// A cluster plan loaded back from disk.
+#[derive(Debug)]
+pub struct LoadedCluster {
+    /// The router's routing table.
+    pub table: RoutingTable,
+    /// Strategy recorded in the manifest.
+    pub strategy: ShardStrategy,
+    /// Shard index artifact paths, shard order.
+    pub shard_files: Vec<PathBuf>,
+}
+
+/// Materialize a full cluster plan under `dir`: one index artifact per
+/// shard (`shard-<i>.amidx`, written via [`crate::index::persist::save`])
+/// plus the v3 shard manifest (`cluster.amplan`) carrying the routing
+/// table.  Returns the written shard artifact paths.
+pub fn write_cluster(index: &AmIndex, plan: &ShardPlan, dir: &Path) -> Result<Vec<PathBuf>> {
+    let table = routing_table(index, plan)?;
+    std::fs::create_dir_all(dir)?;
+    let mut files = Vec::with_capacity(plan.n_shards);
+    let mut names = Vec::with_capacity(plan.n_shards);
+    for si in 0..plan.n_shards {
+        let (shard, _ids) = build_shard_index(index, plan, si)?;
+        let name = format!("shard-{si}.amidx");
+        let path = dir.join(&name);
+        crate::index::persist::save(&shard, &path)?;
+        files.push(path);
+        names.push(name);
+    }
+    save_manifest(&table, plan.strategy, &names, &dir.join(MANIFEST_FILE))?;
+    Ok(files)
+}
+
+fn metric_byte(m: Metric) -> u8 {
+    match m {
+        Metric::SqL2 => 0,
+        Metric::NegDot => 1,
+        Metric::Hamming => 2,
+    }
+}
+
+fn metric_from_byte(b: u8) -> Result<Metric> {
+    match b {
+        0 => Ok(Metric::SqL2),
+        1 => Ok(Metric::NegDot),
+        2 => Ok(Metric::Hamming),
+        x => Err(Error::Data(format!("bad metric byte {x}"))),
+    }
+}
+
+/// Write the shard manifest (format v3).
+pub fn save_manifest(
+    table: &RoutingTable,
+    strategy: ShardStrategy,
+    shard_files: &[String],
+    path: &Path,
+) -> Result<()> {
+    let n_shards = table.n_shards();
+    if shard_files.len() != n_shards {
+        return Err(Error::Config(format!(
+            "{} shard files for {n_shards} shards",
+            shard_files.len()
+        )));
+    }
+    let d = table.dim();
+    let file = std::fs::File::create(path)?;
+    let mut w = CountingWriter::new(BufWriter::new(file));
+    w.put(MANIFEST_MAGIC)?;
+    w.put(&SHARD_MANIFEST_VERSION.to_le_bytes())?;
+    w.put(&(d as u32).to_le_bytes())?;
+    w.put(&[metric_byte(table.metric)])?;
+    w.put(&[strategy.to_byte()])?;
+    w.put(&(table.default_top_k as u32).to_le_bytes())?;
+    w.put(&(table.n_vectors as u64).to_le_bytes())?;
+    w.put(&(n_shards as u32).to_le_bytes())?;
+    for si in 0..n_shards {
+        let name = shard_files[si].as_bytes();
+        w.put(&(name.len() as u32).to_le_bytes())?;
+        w.put(name)?;
+        let classes = &table.class_maps[si];
+        w.put(&(classes.len() as u32).to_le_bytes())?;
+        for &c in classes {
+            w.put(&c.to_le_bytes())?;
+        }
+        let ids = &table.id_maps[si];
+        w.put(&(ids.len() as u64).to_le_bytes())?;
+        for &v in ids {
+            w.put(&v.to_le_bytes())?;
+        }
+        w.put(&(table.bank.count(si) as u64).to_le_bytes())?;
+    }
+    for &x in table.bank.stacked() {
+        w.put(&x.to_le_bytes())?;
+    }
+    w.finish()
+}
+
+/// Load a cluster plan directory written by [`write_cluster`].
+pub fn load_cluster(dir: &Path) -> Result<LoadedCluster> {
+    let path = dir.join(MANIFEST_FILE);
+    let file = std::fs::File::open(&path)
+        .map_err(|e| Error::Data(format!("cannot open {}: {e}", path.display())))?;
+    let mut r = CountingReader::new(BufReader::new(file));
+    let mut magic = [0u8; 8];
+    r.take(&mut magic)?;
+    if &magic != MANIFEST_MAGIC {
+        return Err(Error::Data("not an amsearch shard manifest".into()));
+    }
+    let version = r.u32()?;
+    if version != SHARD_MANIFEST_VERSION {
+        return Err(Error::Data(format!(
+            "unsupported shard manifest version {version}"
+        )));
+    }
+    // every length-bearing header field is bounded BEFORE it sizes an
+    // allocation or arithmetic (same discipline as the wire decoder): a
+    // corrupt count must surface as a typed error at the element reads
+    // or the checksum, never as a multi-GB allocation abort
+    let d = r.u32()? as usize;
+    if d == 0 || d > (1 << 16) {
+        return Err(Error::Data(format!("shard manifest: implausible dim {d}")));
+    }
+    let metric = metric_from_byte(r.u8()?)?;
+    let strategy = ShardStrategy::from_byte(r.u8()?)?;
+    let default_top_k = r.u32()? as usize;
+    let n_total = r.u64()? as usize;
+    let n_shards = r.u32()? as usize;
+    if n_shards == 0 || n_shards > (1 << 12) {
+        return Err(Error::Data(format!(
+            "shard manifest: implausible shard count {n_shards}"
+        )));
+    }
+    let mut shard_files = Vec::with_capacity(n_shards);
+    let mut class_maps = Vec::with_capacity(n_shards);
+    let mut id_maps = Vec::with_capacity(n_shards);
+    let mut counts = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let name_len = r.u32()? as usize;
+        if name_len > 4096 {
+            return Err(Error::Data("shard file name too long".into()));
+        }
+        let mut name = vec![0u8; name_len];
+        r.take(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|_| Error::Data("shard file name is not utf-8".into()))?;
+        shard_files.push(dir.join(name));
+        // element-wise reads: a corrupt count runs into EOF (typed io
+        // error), so capacity is only a bounded hint, never trusted
+        let n_classes = r.u32()? as usize;
+        let mut classes = Vec::with_capacity(n_classes.min(1 << 16));
+        for _ in 0..n_classes {
+            classes.push(r.u32()?);
+        }
+        class_maps.push(classes);
+        let n_vectors = r.u64()? as usize;
+        let mut ids = Vec::with_capacity(n_vectors.min(1 << 20));
+        for _ in 0..n_vectors {
+            ids.push(r.u32()?);
+        }
+        id_maps.push(ids);
+        counts.push(r.u64()? as usize);
+    }
+    // bounded d and n_shards keep this product far from overflow, and
+    // the chunked reads grow the buffer only as real bytes arrive
+    let weights_len = n_shards * d * d;
+    let mut weights = Vec::new();
+    let mut remaining = weights_len;
+    while remaining > 0 {
+        let chunk = remaining.min(1 << 20);
+        weights.extend(r.f32_vec(chunk)?);
+        remaining -= chunk;
+    }
+    r.verify_checksum()?;
+    let total_ids: usize = id_maps.iter().map(|m| m.len()).sum();
+    if total_ids != n_total {
+        return Err(Error::Data(format!(
+            "shard manifest corrupt: id maps cover {total_ids} vectors, \
+             header says {n_total}"
+        )));
+    }
+    let bank = MemoryBank::from_parts(d, weights, counts, StorageRule::Sum)?;
+    Ok(LoadedCluster {
+        table: RoutingTable {
+            bank,
+            metric,
+            default_top_k,
+            n_vectors: n_total,
+            id_maps,
+            class_maps,
+        },
+        strategy,
+        shard_files,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synthetic::{self, QueryModel};
+    use crate::metrics::OpsCounter;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "amsearch_cluster_{}_{}",
+            std::process::id(),
+            name
+        ))
+    }
+
+    fn build(seed: u64, n: usize, q: usize) -> (AmIndex, crate::data::Workload) {
+        let mut rng = Rng::new(seed);
+        let wl = synthetic::dense_workload(32, n, 20, QueryModel::Exact, &mut rng);
+        let params =
+            IndexParams { n_classes: q, top_p: 2, top_k: 3, ..Default::default() };
+        (AmIndex::build(wl.base.clone(), params, &mut rng).unwrap(), wl)
+    }
+
+    #[test]
+    fn strategies_produce_exact_covers_with_no_empty_shard() {
+        let sizes = vec![7usize, 1, 9, 3, 3, 0, 12, 5, 2];
+        for strategy in [
+            ShardStrategy::Contiguous,
+            ShardStrategy::RoundRobin,
+            ShardStrategy::BalancedMembers,
+        ] {
+            for n_shards in 1..=sizes.len() {
+                let plan = ShardPlan::new(&sizes, n_shards, strategy).unwrap();
+                assert_eq!(plan.shard_of.len(), sizes.len());
+                let covered: usize =
+                    plan.classes_of.iter().map(|c| c.len()).sum();
+                assert_eq!(covered, sizes.len(), "{strategy} N={n_shards}");
+                for (si, classes) in plan.classes_of.iter().enumerate() {
+                    assert!(
+                        !classes.is_empty(),
+                        "{strategy} N={n_shards}: shard {si} empty"
+                    );
+                    assert!(
+                        classes.windows(2).all(|w| w[0] < w[1]),
+                        "classes not ascending"
+                    );
+                    for &c in classes {
+                        assert_eq!(plan.shard_of[c as usize] as usize, si);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_members_evens_out_skewed_classes() {
+        // one huge class + many small ones: LPT must not stack the big
+        // one with others while another shard starves
+        let sizes = vec![100usize, 10, 10, 10, 10, 10, 10, 10];
+        let plan =
+            ShardPlan::new(&sizes, 4, ShardStrategy::BalancedMembers).unwrap();
+        let shard_sizes = plan.shard_sizes(&sizes);
+        assert_eq!(shard_sizes.iter().sum::<usize>(), 170);
+        // the big class sits alone; the 7 small ones split across the
+        // other three shards
+        assert_eq!(*shard_sizes.iter().max().unwrap(), 100);
+        assert!(*shard_sizes.iter().min().unwrap() >= 20, "{shard_sizes:?}");
+    }
+
+    #[test]
+    fn bad_shard_counts_rejected() {
+        let sizes = vec![4usize; 6];
+        assert!(ShardPlan::new(&sizes, 0, ShardStrategy::Contiguous).is_err());
+        assert!(ShardPlan::new(&sizes, 7, ShardStrategy::Contiguous).is_err());
+    }
+
+    #[test]
+    fn shard_indices_partition_the_database() {
+        let (index, _) = build(1, 240, 12);
+        for strategy in [
+            ShardStrategy::Contiguous,
+            ShardStrategy::RoundRobin,
+            ShardStrategy::BalancedMembers,
+        ] {
+            let plan = ShardPlan::for_index(&index, 4, strategy).unwrap();
+            let mut seen = vec![false; index.len()];
+            for si in 0..4 {
+                let (shard, id_map) = build_shard_index(&index, &plan, si).unwrap();
+                assert_eq!(shard.len(), id_map.len());
+                assert_eq!(shard.dim(), index.dim());
+                assert!(id_map.windows(2).all(|w| w[0] < w[1]), "ids ascending");
+                shard.partition().validate().unwrap();
+                for (local, &gid) in id_map.iter().enumerate() {
+                    assert!(!seen[gid as usize], "vector {gid} in two shards");
+                    seen[gid as usize] = true;
+                    // the shard stores the very same vector bits
+                    assert_eq!(
+                        shard.data().get(local),
+                        index.data().get(gid as usize)
+                    );
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{strategy}: not a cover");
+        }
+    }
+
+    #[test]
+    fn routing_super_memory_is_sum_of_class_memories() {
+        let (index, _) = build(2, 180, 9);
+        let plan =
+            ShardPlan::for_index(&index, 3, ShardStrategy::Contiguous).unwrap();
+        let table = routing_table(&index, &plan).unwrap();
+        assert_eq!(table.n_shards(), 3);
+        assert_eq!(table.n_vectors(), 180);
+        let d = index.dim();
+        for si in 0..3 {
+            let sw = table.bank().class_weights(si);
+            let mut sum = vec![0f32; d * d];
+            for &c in &plan.classes_of[si] {
+                for (a, b) in
+                    sum.iter_mut().zip(index.bank().class_weights(c as usize))
+                {
+                    *a += b;
+                }
+            }
+            for (a, b) in sw.iter().zip(&sum) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+        // scoring a query against the table equals summing its class
+        // scores shard-wise (the additivity the router relies on)
+        let mut ops = OpsCounter::new();
+        let probe: Vec<f32> = (0..d).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let class_scores = index.score_classes(&probe, &mut ops);
+        let shard_scores = table.score(&probe);
+        for si in 0..3 {
+            let want: f32 = plan.classes_of[si]
+                .iter()
+                .map(|&c| class_scores[c as usize])
+                .sum();
+            assert!(
+                (shard_scores[si] - want).abs() < want.abs().max(1.0) * 1e-3,
+                "shard {si}: {} vs {}",
+                shard_scores[si],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn max_rule_rejected_for_routing() {
+        let mut rng = Rng::new(3);
+        let wl = synthetic::dense_workload(16, 60, 5, QueryModel::Exact, &mut rng);
+        let params = IndexParams {
+            n_classes: 6,
+            rule: StorageRule::Max,
+            ..Default::default()
+        };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let plan =
+            ShardPlan::for_index(&index, 2, ShardStrategy::Contiguous).unwrap();
+        assert!(routing_table(&index, &plan).is_err());
+    }
+
+    #[test]
+    fn write_then_load_cluster_roundtrips() {
+        let (index, wl) = build(4, 200, 10);
+        let plan =
+            ShardPlan::for_index(&index, 3, ShardStrategy::BalancedMembers).unwrap();
+        let dir = tmp("roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+        let files = write_cluster(&index, &plan, &dir).unwrap();
+        assert_eq!(files.len(), 3);
+        let loaded = load_cluster(&dir).unwrap();
+        assert_eq!(loaded.strategy, ShardStrategy::BalancedMembers);
+        assert_eq!(loaded.shard_files, files);
+        assert_eq!(loaded.table.n_shards(), 3);
+        assert_eq!(loaded.table.n_vectors(), 200);
+        assert_eq!(loaded.table.default_top_k(), 3);
+        let fresh = routing_table(&index, &plan).unwrap();
+        for si in 0..3 {
+            assert_eq!(loaded.table.id_maps[si], fresh.id_maps[si]);
+            assert_eq!(loaded.table.class_maps[si], fresh.class_maps[si]);
+            // super-memories survive bit-exactly
+            for (a, b) in loaded
+                .table
+                .bank()
+                .class_weights(si)
+                .iter()
+                .zip(fresh.bank().class_weights(si))
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // the shard artifacts load as ordinary indices and answer
+        // queries (full poll finds the shard-local NN of any member)
+        let (shard0, id_map0) = build_shard_index(&index, &plan, 0).unwrap();
+        let reloaded = crate::index::persist::load(&files[0]).unwrap();
+        assert_eq!(reloaded.len(), shard0.len());
+        let mut ops = OpsCounter::new();
+        let probe = wl.queries.get(0);
+        let a = shard0.query_k(probe, shard0.params().n_classes, 2, &mut ops);
+        let b = reloaded.query_k(probe, reloaded.params().n_classes, 2, &mut ops);
+        assert_eq!(a, b);
+        assert!(!id_map0.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_corruption_detected() {
+        let (index, _) = build(5, 120, 6);
+        let plan =
+            ShardPlan::for_index(&index, 2, ShardStrategy::Contiguous).unwrap();
+        let dir = tmp("corrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        write_cluster(&index, &plan, &dir).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_cluster(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn strategy_strings_roundtrip() {
+        for s in [
+            ShardStrategy::Contiguous,
+            ShardStrategy::RoundRobin,
+            ShardStrategy::BalancedMembers,
+        ] {
+            assert_eq!(s.to_string().parse::<ShardStrategy>().unwrap(), s);
+            assert_eq!(ShardStrategy::from_byte(s.to_byte()).unwrap(), s);
+        }
+        assert!("nope".parse::<ShardStrategy>().is_err());
+    }
+}

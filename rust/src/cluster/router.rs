@@ -1,0 +1,605 @@
+//! The scatter-gather cluster router: a [`Serveable`] backend that
+//! answers each query by polling the **shard super-memories** in its
+//! [`RoutingTable`], contacting only the top-`s` shards over pooled
+//! pipelined [`NetClient`] links, and merging the shard top-k responses
+//! with the same [`TopK`] selection rule every other search path uses.
+//!
+//! This is the paper's mechanism applied at the cluster tier: the
+//! routing table is small and resident (`[N, d, d]`), shards hold the
+//! bulk data, and the `s < N` knob trades recall for network fan-out
+//! exactly like `p < q` trades recall for scan work inside one node.
+//! At `s = N` with per-shard full poll, routed results are
+//! bitwise-identical to single-node search (the shard-local id order is
+//! ascending-global, so `(distance, id)` tie-breaks agree after
+//! remapping; pinned by `prop_router_full_fanout_matches_single_node`).
+//!
+//! Concurrency model: a bounded request queue feeds `workers` router
+//! threads; each worker owns one [`NetClient`] per shard (the
+//! connection pool is `workers × N` links), scatters a request to its
+//! selected shards pipelined (submit all, then collect), and merges.
+//! Links reconnect with bounded jittered backoff
+//! ([`NetClient::connect_backoff`]) so shard restarts and transient
+//! `ERR_OVERLOADED` refusals do not kill the router.
+//!
+//! Latency accounting keeps two **separate** named histograms:
+//! `latency` is the router-observed end-to-end time and
+//! `shard_service` the shard-reported scan service time.  They are
+//! never merged into one histogram — re-recording shard-reported
+//! samples into the router's own would double-count every request in
+//! any aggregate view.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::SearchResponse;
+use crate::error::{Error, Result};
+use crate::metrics::{FanoutStats, LatencyHistogram};
+use crate::net::wire::{self, WireResponse};
+use crate::net::{NetClient, RetryPolicy, Serveable};
+use crate::search::{top_p_largest, TopK};
+use crate::util::Json;
+
+use super::plan::RoutingTable;
+
+/// Router configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Shards contacted per query (`0` = every shard, exact fan-out).
+    pub fan_out: usize,
+    /// Router worker threads (each owns one connection per shard).
+    pub workers: usize,
+    /// Bound of the request queue (backpressure, like the coordinator).
+    pub queue_depth: usize,
+    /// Reconnect/backoff policy for router→shard links.
+    pub retry: RetryPolicy,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            fan_out: 0,
+            workers: 4,
+            queue_depth: 1024,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Validate the configuration.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("router.workers must be > 0".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("router.queue_depth must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Router serving metrics.  `latency` (router end-to-end) and
+/// `shard_service` (shard-reported) are deliberately separate named
+/// histograms — see the module docs.
+#[derive(Debug, Clone, Default)]
+pub struct RouterMetrics {
+    /// Requests routed (success or error response).
+    pub requests: u64,
+    /// Requests answered with an error response.
+    pub errors: u64,
+    /// Router-observed end-to-end latency (enqueue → response ready).
+    pub latency: LatencyHistogram,
+    /// Shard-reported per-request service time (one sample per shard
+    /// contact, as carried in the shard's RESULT frame).
+    pub shard_service: LatencyHistogram,
+    /// Per-shard fan-out accounting.
+    pub fanout: FanoutStats,
+}
+
+/// One queued router request.
+struct RouterRequest {
+    id: u64,
+    vector: Vec<f32>,
+    top_p: usize,
+    top_k: usize,
+    enqueued: Instant,
+    resp: SyncSender<SearchResponse>,
+}
+
+/// State shared by the router handle and its workers.
+struct RouterShared {
+    table: RoutingTable,
+    addrs: Vec<String>,
+    fan_out: AtomicUsize,
+    retry: RetryPolicy,
+    metrics: Mutex<RouterMetrics>,
+}
+
+impl RouterShared {
+    /// The single home of the fan-out rule: `0` = every shard,
+    /// otherwise clamped to `N` (STATS and routing must never diverge).
+    fn effective_fan_out(&self) -> usize {
+        let raw = self.fan_out.load(Ordering::Relaxed);
+        let n = self.table.n_shards();
+        if raw == 0 {
+            n
+        } else {
+            raw.min(n)
+        }
+    }
+}
+
+/// Handle to a running scatter-gather router.  Sits behind a
+/// [`NetServer`](crate::net::NetServer) front door via [`Serveable`],
+/// exactly like a single-node [`SearchServer`](crate::coordinator::SearchServer).
+pub struct ClusterRouter {
+    shared: Arc<RouterShared>,
+    tx: Mutex<Option<SyncSender<RouterRequest>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl ClusterRouter {
+    /// Start the router: `cfg.workers` threads, each owning one lazily
+    /// connected link per shard in `addrs` (shard order must match the
+    /// routing table's).
+    pub fn start(
+        table: RoutingTable,
+        addrs: Vec<String>,
+        cfg: RouterConfig,
+    ) -> Result<ClusterRouter> {
+        cfg.validate()?;
+        if addrs.len() != table.n_shards() {
+            return Err(Error::Config(format!(
+                "{} shard addresses for a {}-shard routing table",
+                addrs.len(),
+                table.n_shards()
+            )));
+        }
+        let shared = Arc::new(RouterShared {
+            table,
+            addrs,
+            fan_out: AtomicUsize::new(cfg.fan_out),
+            retry: cfg.retry,
+            metrics: Mutex::new(RouterMetrics::default()),
+        });
+        let (req_tx, req_rx) = mpsc::sync_channel::<RouterRequest>(cfg.queue_depth);
+        let req_rx: Arc<Mutex<Receiver<RouterRequest>>> = Arc::new(Mutex::new(req_rx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wi in 0..cfg.workers {
+            let shared = shared.clone();
+            let req_rx = req_rx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("amsearch-router-{wi}"))
+                .spawn(move || {
+                    let mut links: Vec<ShardLink> = shared
+                        .addrs
+                        .iter()
+                        .map(|a| ShardLink::new(a.clone()))
+                        .collect();
+                    loop {
+                        // take one request under the lock, release
+                        // before the network round-trips
+                        let req = {
+                            let rx = req_rx.lock().expect("poisoned");
+                            match rx.recv() {
+                                Ok(r) => r,
+                                Err(_) => return,
+                            }
+                        };
+                        serve_one(&shared, &mut links, req);
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn router worker: {e}")))?;
+            workers.push(handle);
+        }
+        Ok(ClusterRouter {
+            shared,
+            tx: Mutex::new(Some(req_tx)),
+            workers: Mutex::new(workers),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of shards routed over.
+    pub fn n_shards(&self) -> usize {
+        self.shared.table.n_shards()
+    }
+
+    /// Dimension of the routed index.
+    pub fn dim(&self) -> usize {
+        self.shared.table.dim()
+    }
+
+    /// Total vectors across all shards.
+    pub fn n_vectors(&self) -> usize {
+        self.shared.table.n_vectors()
+    }
+
+    /// Effective fan-out `s`: shards contacted per query.
+    pub fn fan_out(&self) -> usize {
+        self.shared.effective_fan_out()
+    }
+
+    /// Change the fan-out at runtime (`0` = every shard).  Takes effect
+    /// for subsequently routed requests — the bench sweeps this knob.
+    pub fn set_fan_out(&self, s: usize) {
+        self.shared.fan_out.store(s, Ordering::Relaxed);
+    }
+
+    /// Submit a query and block until its merged response arrives (the
+    /// in-process convenience mirror of `SearchServer::search`).
+    pub fn search(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+    ) -> Result<SearchResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        Serveable::submit(self, vector, top_p, top_k, id, resp_tx)?;
+        let resp = resp_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("router dropped request".into()))?;
+        match resp.error {
+            Some(msg) => Err(Error::Coordinator(msg)),
+            None => Ok(resp),
+        }
+    }
+
+    /// Snapshot the router metrics.
+    pub fn metrics(&self) -> RouterMetrics {
+        self.shared.metrics.lock().expect("poisoned").clone()
+    }
+
+    /// The routing table served by this router.
+    pub fn table(&self) -> &RoutingTable {
+        &self.shared.table
+    }
+
+    /// Graceful shutdown: stop accepting, drain queued requests (every
+    /// accepted request still gets its response), join the workers.
+    pub fn shutdown(&self) {
+        *self.tx.lock().expect("poisoned") = None;
+        let mut workers = self.workers.lock().expect("poisoned");
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ClusterRouter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Serveable for ClusterRouter {
+    fn submit(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        id: u64,
+        resp: SyncSender<SearchResponse>,
+    ) -> Result<()> {
+        if vector.len() != self.shared.table.dim() {
+            return Err(Error::Shape(format!(
+                "query dim {} != index dim {}",
+                vector.len(),
+                self.shared.table.dim()
+            )));
+        }
+        let req = RouterRequest {
+            id,
+            vector,
+            top_p,
+            top_k,
+            enqueued: Instant::now(),
+            resp,
+        };
+        let guard = self.tx.lock().expect("poisoned");
+        let tx = guard
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("router shutting down".into()))?;
+        tx.send(req)
+            .map_err(|_| Error::Coordinator("router shutting down".into()))
+    }
+
+    fn stats_json(&self) -> Json {
+        let m = self.metrics();
+        let mut o = BTreeMap::new();
+        o.insert("role".to_string(), Json::Str("router".to_string()));
+        o.insert("dim".to_string(), Json::Num(self.dim() as f64));
+        o.insert("n_vectors".to_string(), Json::Num(self.n_vectors() as f64));
+        o.insert("shards".to_string(), Json::Num(self.n_shards() as f64));
+        o.insert("fan_out".to_string(), Json::Num(self.fan_out() as f64));
+        o.insert("requests".to_string(), Json::Num(m.requests as f64));
+        o.insert("errors".to_string(), Json::Num(m.errors as f64));
+        // two *separate* named histograms — never merged (merging would
+        // double-count each request: once as observed by the router,
+        // once per shard-reported sample)
+        o.insert("latency".to_string(), m.latency.to_json());
+        o.insert("shard_service".to_string(), m.shard_service.to_json());
+        o.insert("fanout".to_string(), m.fanout.to_json());
+        Json::Obj(o)
+    }
+}
+
+/// Route one request: score shards, scatter to the top-`s`, gather and
+/// merge.  Exactly one response is delivered, success or error.
+fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest) {
+    let started = Instant::now();
+    let n_shards = links.len();
+    let scores = shared.table.score(&req.vector);
+    let contacted = top_p_largest(&scores, shared.effective_fan_out());
+
+    // scatter: submit to every selected shard before collecting any
+    // response (the links pipeline, so shard scans overlap)
+    let mut pending: Vec<(usize, u64)> = Vec::with_capacity(contacted.len());
+    let mut failure: Option<Error> = None;
+    for &si in &contacted {
+        match links[si as usize].submit(&req.vector, req.top_p, req.top_k, &shared.retry)
+        {
+            Ok(id) => pending.push((si as usize, id)),
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        }
+    }
+
+    // the shards actually reached (scatter may have aborted early):
+    // what the fan-out counters must reflect
+    let submitted: Vec<u32> = pending.iter().map(|&(si, _)| si as u32).collect();
+
+    // gather: collect every submitted response even after a failure so
+    // the links stay in sync for the next request
+    let k_req = if req.top_k == 0 {
+        shared.table.default_top_k()
+    } else {
+        req.top_k
+    };
+    let k = k_req.min(shared.table.n_vectors()).max(1);
+    let d = shared.table.dim();
+    let mut acc = TopK::new(k);
+    let mut polled: Vec<u32> = Vec::new();
+    let mut candidates: u64 = 0;
+    // routing cost: one bilinear poll per shard super-memory
+    let mut ops: u64 = (d * d * n_shards) as u64;
+    let mut shard_ns: Vec<u64> = Vec::with_capacity(pending.len());
+    for (si, id) in pending {
+        match links[si].wait(id, &req.vector, req.top_p, req.top_k, &shared.retry) {
+            Ok(r) => {
+                for n in &r.neighbors {
+                    acc.push(n.distance, shared.table.global_id(si, n.id));
+                }
+                for &c in &r.polled {
+                    polled.push(shared.table.global_class(si, c));
+                }
+                candidates += r.candidates;
+                ops += r.ops;
+                shard_ns.push(r.service_ns);
+            }
+            Err(e) => {
+                if failure.is_none() {
+                    failure = Some(e);
+                }
+            }
+        }
+    }
+
+    let resp = match failure {
+        Some(e) => {
+            SearchResponse::failed(req.id, format!("router: shard search failed: {e}"))
+        }
+        None => SearchResponse {
+            id: req.id,
+            neighbors: acc.into_neighbors(),
+            polled,
+            candidates: candidates as usize,
+            ops,
+            service_ns: started.elapsed().as_nanos() as u64,
+            error: None,
+        },
+    };
+    // metrics BEFORE completing the request, same discipline as the
+    // coordinator: a client must never observe its response while its
+    // own request is uncounted
+    {
+        let mut m = shared.metrics.lock().expect("poisoned");
+        m.requests += 1;
+        if resp.error.is_some() {
+            m.errors += 1;
+        }
+        m.latency.record(req.enqueued.elapsed());
+        for &ns in &shard_ns {
+            m.shard_service.record_ns(ns);
+        }
+        m.fanout.record(&submitted, n_shards);
+    }
+    let _ = req.resp.send(resp); // receiver may have timed out
+}
+
+/// One router→shard connection with reconnect-on-failure semantics.
+struct ShardLink {
+    addr: String,
+    client: Option<NetClient>,
+}
+
+impl ShardLink {
+    fn new(addr: String) -> Self {
+        ShardLink { addr, client: None }
+    }
+
+    /// The live client, (re)connecting with backoff when absent.
+    fn ensure(&mut self, retry: &RetryPolicy) -> Result<&mut NetClient> {
+        if self.client.is_none() {
+            let c = NetClient::connect_backoff(&self.addr, retry)?;
+            c.set_timeout(Some(Duration::from_secs(60)))?;
+            self.client = Some(c);
+        }
+        Ok(self.client.as_mut().expect("just connected"))
+    }
+
+    /// Submit a search, reconnecting once if the link died since the
+    /// last request (a restarted shard surfaces as a send failure).
+    fn submit(
+        &mut self,
+        vector: &[f32],
+        top_p: usize,
+        top_k: usize,
+        retry: &RetryPolicy,
+    ) -> Result<u64> {
+        let first = self.ensure(retry)?.submit(vector, top_p, top_k);
+        match first {
+            Ok(id) => Ok(id),
+            Err(_) => {
+                self.client = None;
+                self.ensure(retry)?.submit(vector, top_p, top_k)
+            }
+        }
+    }
+
+    /// Wait for `id`.  A dead connection or a typed refusal
+    /// (`ERR_OVERLOADED` / `ERR_SHUTTING_DOWN`) tears the link down,
+    /// reconnects with backoff, and resubmits the query once; any other
+    /// shard error is returned as-is.
+    fn wait(
+        &mut self,
+        id: u64,
+        vector: &[f32],
+        top_p: usize,
+        top_k: usize,
+        retry: &RetryPolicy,
+    ) -> Result<WireResponse> {
+        let client = self
+            .client
+            .as_mut()
+            .ok_or_else(|| Error::Coordinator("router: link lost before response".into()))?;
+        match client.wait_detailed(id) {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(we))
+                if we.code == wire::ERR_OVERLOADED
+                    || we.code == wire::ERR_SHUTTING_DOWN =>
+            {
+                self.resubmit(vector, top_p, top_k, retry)
+            }
+            Ok(Err(we)) => Err(Error::Coordinator(format!(
+                "shard error (code {}): {}",
+                we.code, we.message
+            ))),
+            Err(_) => self.resubmit(vector, top_p, top_k, retry),
+        }
+    }
+
+    fn resubmit(
+        &mut self,
+        vector: &[f32],
+        top_p: usize,
+        top_k: usize,
+        retry: &RetryPolicy,
+    ) -> Result<WireResponse> {
+        self.client = None;
+        let client = self.ensure(retry)?;
+        let id = client.submit(vector, top_p, top_k)?;
+        client.wait(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::plan::{routing_table, ShardPlan, ShardStrategy};
+    use crate::data::rng::Rng;
+    use crate::data::synthetic::{self, QueryModel};
+    use crate::index::{AmIndex, IndexParams};
+
+    fn small_table() -> RoutingTable {
+        let mut rng = Rng::new(11);
+        let wl = synthetic::dense_workload(16, 64, 4, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 4, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let plan =
+            ShardPlan::for_index(&index, 2, ShardStrategy::Contiguous).unwrap();
+        routing_table(&index, &plan).unwrap()
+    }
+
+    #[test]
+    fn config_validation() {
+        RouterConfig::default().validate().unwrap();
+        assert!(RouterConfig { workers: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(RouterConfig { queue_depth: 0, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn addr_count_must_match_table() {
+        let table = small_table();
+        let err = ClusterRouter::start(
+            table,
+            vec!["127.0.0.1:1".into()], // 1 addr for 2 shards
+            RouterConfig::default(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unreachable_shards_yield_error_responses_not_hangs() {
+        // port 1 on loopback: connection refused — the request must
+        // resolve with an explicit error after bounded backoff
+        let table = small_table();
+        let retry = RetryPolicy {
+            max_attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let cfg = RouterConfig { workers: 1, retry, ..Default::default() };
+        let router = ClusterRouter::start(
+            table,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            cfg,
+        )
+        .unwrap();
+        let err = router.search(vec![0.0; 16], 1, 1).unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err}");
+        let m = router.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.latency.count(), 1);
+        assert_eq!(m.shard_service.count(), 0, "no shard ever answered");
+        // dim validation happens at submit time
+        let err = router.search(vec![0.0; 5], 1, 1).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn fan_out_knob_resolves_and_clamps() {
+        let table = small_table();
+        let router = ClusterRouter::start(
+            table,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            RouterConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(router.fan_out(), 2, "0 = every shard");
+        router.set_fan_out(1);
+        assert_eq!(router.fan_out(), 1);
+        router.set_fan_out(99);
+        assert_eq!(router.fan_out(), 2, "clamped to N");
+        let stats = Serveable::stats_json(&router);
+        assert_eq!(stats.get("role").unwrap().as_str(), Some("router"));
+        assert_eq!(stats.get("shards").unwrap().as_usize(), Some(2));
+        assert!(stats.get("latency").is_some());
+        assert!(stats.get("shard_service").is_some());
+        router.shutdown();
+    }
+}

@@ -295,6 +295,19 @@ pub struct EngineFactory {
 }
 
 impl EngineFactory {
+    /// Build a factory from a persisted index artifact — how a shard
+    /// server constructs its engine from a `shard-<i>.amidx` file
+    /// written by the cluster planner (any index file works; shard
+    /// artifacts are ordinary index files).
+    pub fn from_index_file(
+        path: &std::path::Path,
+        backend: Backend,
+        artifacts_dir: Option<PathBuf>,
+    ) -> Result<Self> {
+        let index = crate::index::persist::load(path)?;
+        Ok(EngineFactory { index: Arc::new(index), backend, artifacts_dir })
+    }
+
     /// Construct an engine on the calling thread.
     pub fn build(&self) -> Result<Engine> {
         match self.backend {

@@ -221,6 +221,8 @@ impl SearchServer {
         use crate::util::Json;
         let m = self.metrics();
         let mut o = std::collections::BTreeMap::new();
+        // the net layer may relabel this (e.g. "shard" in a cluster)
+        o.insert("role".to_string(), Json::Str("search".to_string()));
         o.insert("dim".to_string(), Json::Num(self.dim as f64));
         o.insert("n_vectors".to_string(), Json::Num(self.n_vectors as f64));
         o.insert("requests".to_string(), Json::Num(m.requests as f64));

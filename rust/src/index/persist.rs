@@ -2,6 +2,13 @@
 //! index can be served without rebuilding (allocation + memory build is
 //! the expensive part for large corpora).
 //!
+//! The checksummed reader/writer machinery here is also the substrate
+//! of the **shard manifest format (v3)** — the cluster plan file
+//! (`cluster.amplan`, see [`crate::cluster::plan`]) that carries the
+//! routing table (per-shard summed super-memories), the per-shard
+//! id/class maps, and the shard artifact file names.  Shard indices
+//! themselves are ordinary index files written by [`save`].
+//!
 //! Layout (all integers little-endian):
 //!
 //! ```text
@@ -38,6 +45,11 @@ use super::params::IndexParams;
 const MAGIC: &[u8; 8] = b"AMSEARCH";
 const VERSION: u32 = 2;
 
+/// Version stamp of the shard manifest format (the next member of the
+/// index-format family: index v1 = 1-NN, v2 = per-request k, v3 = the
+/// cluster plan / routing table).
+pub(crate) const SHARD_MANIFEST_VERSION: u32 = 3;
+
 /// Incremental FNV-1a 64 (integrity checksum; not cryptographic).
 struct Fnv(u64);
 
@@ -53,15 +65,27 @@ impl Fnv {
     }
 }
 
-struct CountingWriter<W: Write> {
+pub(crate) struct CountingWriter<W: Write> {
     inner: W,
     hash: Fnv,
 }
 
 impl<W: Write> CountingWriter<W> {
-    fn put(&mut self, data: &[u8]) -> Result<()> {
+    pub(crate) fn new(inner: W) -> Self {
+        CountingWriter { inner, hash: Fnv::new() }
+    }
+
+    pub(crate) fn put(&mut self, data: &[u8]) -> Result<()> {
         self.hash.update(data);
         self.inner.write_all(data)?;
+        Ok(())
+    }
+
+    /// Append the checksum of everything written so far and flush.
+    pub(crate) fn finish(mut self) -> Result<()> {
+        let checksum = self.hash.0;
+        self.inner.write_all(&checksum.to_le_bytes())?;
+        self.inner.flush()?;
         Ok(())
     }
 }
@@ -69,7 +93,7 @@ impl<W: Write> CountingWriter<W> {
 /// Save an index to `path`.
 pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
     let file = std::fs::File::create(path)?;
-    let mut w = CountingWriter { inner: BufWriter::new(file), hash: Fnv::new() };
+    let mut w = CountingWriter::new(BufWriter::new(file));
     let p = index.params();
 
     w.put(MAGIC)?;
@@ -107,44 +131,44 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
     for &x in index.data().as_flat() {
         w.put(&x.to_le_bytes())?;
     }
-    let checksum = w.hash.0;
-    w.inner.write_all(&checksum.to_le_bytes())?;
-    w.inner.flush()?;
-    Ok(())
+    w.finish()
 }
 
-struct CountingReader<R: Read> {
+pub(crate) struct CountingReader<R: Read> {
     inner: R,
     hash: Fnv,
 }
 
 impl<R: Read> CountingReader<R> {
-    fn take(&mut self, buf: &mut [u8]) -> Result<()> {
+    pub(crate) fn new(inner: R) -> Self {
+        CountingReader { inner, hash: Fnv::new() }
+    }
+    pub(crate) fn take(&mut self, buf: &mut [u8]) -> Result<()> {
         self.inner.read_exact(buf)?;
         self.hash.update(buf);
         Ok(())
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
         self.take(&mut b)?;
         Ok(u32::from_le_bytes(b))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let mut b = [0u8; 8];
         self.take(&mut b)?;
         Ok(u64::from_le_bytes(b))
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         let mut b = [0u8; 1];
         self.take(&mut b)?;
         Ok(b[0])
     }
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         let mut b = [0u8; 8];
         self.take(&mut b)?;
         Ok(f64::from_le_bytes(b))
     }
-    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+    pub(crate) fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
         let mut bytes = vec![0u8; n * 4];
         self.take(&mut bytes)?;
         Ok(bytes
@@ -152,13 +176,26 @@ impl<R: Read> CountingReader<R> {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
+    /// Read the trailing checksum and compare with everything consumed.
+    pub(crate) fn verify_checksum(mut self) -> Result<()> {
+        let computed = self.hash.0;
+        let mut tail = [0u8; 8];
+        self.inner.read_exact(&mut tail)?;
+        let stored = u64::from_le_bytes(tail);
+        if computed != stored {
+            return Err(Error::Data(format!(
+                "file corrupt: checksum {computed:#x} != stored {stored:#x}"
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// Load an index from `path`.
 pub fn load(path: &Path) -> Result<AmIndex> {
     let file = std::fs::File::open(path)
         .map_err(|e| Error::Data(format!("cannot open {}: {e}", path.display())))?;
-    let mut r = CountingReader { inner: BufReader::new(file), hash: Fnv::new() };
+    let mut r = CountingReader::new(BufReader::new(file));
 
     let mut magic = [0u8; 8];
     r.take(&mut magic)?;
@@ -213,16 +250,7 @@ pub fn load(path: &Path) -> Result<AmIndex> {
         counts.push(r.u64()? as usize);
     }
     let flat = r.f32_vec(n * dim)?;
-
-    let computed = r.hash.0;
-    let mut tail = [0u8; 8];
-    r.inner.read_exact(&mut tail)?;
-    let stored = u64::from_le_bytes(tail);
-    if computed != stored {
-        return Err(Error::Data(format!(
-            "index file corrupt: checksum {computed:#x} != stored {stored:#x}"
-        )));
-    }
+    r.verify_checksum()?;
 
     let data = Dataset::from_flat(dim, flat)?;
     AmIndex::from_parts(params, assignments, stacked, counts, data)

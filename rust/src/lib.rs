@@ -22,10 +22,13 @@
 //!   hybrid), a PJRT runtime that loads the AOT artifacts, an async
 //!   coordinator (router + dynamic batcher + workers), a TCP front door
 //!   (binary wire protocol, pipelined client library, closed-loop load
-//!   generator), the paper's complexity accounting, and the evaluation
+//!   generator), a sharded cluster tier (shard planner, scatter-gather
+//!   router with AM-based shard pruning, single-binary cluster
+//!   harness), the paper's complexity accounting, and the evaluation
 //!   harness that regenerates every figure of the paper.
 
 pub mod baseline;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

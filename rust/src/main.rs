@@ -7,6 +7,9 @@
 //!                [--repeat R] [--listen ADDR]
 //! amsearch loadgen --addr HOST:PORT [--connections N] [--requests R]
 //!                  [--depth D] [--top-p P] [--top-k K] [--json F] [--shutdown]
+//! amsearch shard-plan [--config cfg.json] --shards N [--strategy S] [--out-dir D]
+//! amsearch serve-cluster [--plan-dir D | --config cfg.json --shards N]
+//!                        [--listen ADDR] [--fan-out S]
 //! amsearch artifacts [--dir artifacts]
 //! ```
 //!
@@ -19,6 +22,10 @@
 //!   `serve --listen`, reporting throughput + latency quantiles
 //! * `query` — one-shot: build index, run the config's queries, print
 //!   recall and the paper's relative-complexity accounting
+//! * `shard-plan` — partition a built index across N shards: per-shard
+//!   index artifacts + the v3 routing-table manifest
+//! * `serve-cluster` — single-binary cluster: N in-process shard
+//!   servers on ephemeral ports + the scatter-gather router in front
 //! * `artifacts` — inspect the AOT artifact manifest
 
 use std::path::{Path, PathBuf};
@@ -26,6 +33,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use amsearch::baseline::Exhaustive;
+use amsearch::cluster::{self, ClusterConfig, ClusterHarness, ShardPlan, ShardStrategy};
 use amsearch::config::{AppConfig, DatasetKind};
 use amsearch::coordinator::{EngineFactory, SearchServer};
 use amsearch::data::clustered::{self, ClusteredSpec};
@@ -54,11 +62,23 @@ commands:
               (--config F, --workers N, --backend native|pjrt, --repeat R,
                --listen ADDR to open the TCP front door instead of
                driving the config workload in-process)
-  loadgen     closed-loop TCP load generator against serve --listen
-              (--addr HOST:PORT, --connections N, --requests R, --depth D,
-               --top-p P, --top-k K, --connect-timeout-s S, --seed S,
+  loadgen     closed-loop TCP load generator against serve --listen or
+              serve-cluster (--addr HOST:PORT, --connections N,
+               --requests R, --depth D, --top-p P, --top-k K,
+               --connect-timeout-s S, --seed S,
                --json FILE to write a BENCH JSON artifact,
                --shutdown to stop the server afterwards)
+  shard-plan  partition a built index across N shards and write the
+              shard artifacts + v3 routing-table manifest
+              (--config F, --shards N,
+               --strategy contiguous|round_robin|balanced, --out-dir D)
+  serve-cluster
+              single-binary cluster: N in-process shard servers on
+              ephemeral ports + scatter-gather router at --listen
+              (--plan-dir D to load a shard-plan, or --config F
+               --shards N --strategy S to build in-process;
+               --fan-out S contacts only the top-s shards per query,
+               0 = all; --listen ADDR, --router-workers W)
   artifacts   show the AOT manifest      (--dir D)
 ";
 
@@ -364,6 +384,95 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_shard_plan(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let n_shards: usize = args.get_parse("shards", 2usize)?;
+    let strategy: ShardStrategy = args
+        .get("strategy")
+        .unwrap_or("balanced")
+        .parse()?;
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("cluster_plan"));
+    let wl = load_workload(cfg)?;
+    let mut rng = Rng::new(cfg.dataset.seed ^ 0xA11C);
+    let params = cfg.index.to_params();
+    let build_start = Instant::now();
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng)?;
+    println!(
+        "built index: n={} d={} q={} in {:.2}s",
+        index.len(),
+        index.dim(),
+        params.n_classes,
+        build_start.elapsed().as_secs_f64()
+    );
+    let plan = ShardPlan::for_index(&index, n_shards, strategy)?;
+    let files = cluster::write_cluster(&index, &plan, &out_dir)?;
+    let sizes = plan.shard_sizes(&index.partition().sizes());
+    for (si, file) in files.iter().enumerate() {
+        println!(
+            "shard {si}: {} classes, {} vectors -> {}",
+            plan.classes_of[si].len(),
+            sizes[si],
+            file.display()
+        );
+    }
+    println!(
+        "wrote {} (strategy={strategy}, routing table {}x{}x{} f32)",
+        out_dir.join(cluster::plan::MANIFEST_FILE).display(),
+        n_shards,
+        index.dim(),
+        index.dim()
+    );
+    Ok(())
+}
+
+fn cmd_serve_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let listen = args.get("listen").unwrap_or("127.0.0.1:4177").to_string();
+    let mut ccfg = ClusterConfig {
+        n_shards: args.get_parse("shards", 2usize)?,
+        strategy: args.get("strategy").unwrap_or("balanced").parse()?,
+        coordinator: cfg.serve.to_coordinator(),
+        backend: cfg.backend.kind,
+        artifacts_dir: Some(cfg.backend.artifacts_dir.clone()),
+        ..Default::default()
+    };
+    ccfg.router.fan_out = args.get_parse("fan-out", 0usize)?;
+    ccfg.router.workers = args.get_parse("router-workers", 4usize)?.max(1);
+
+    let cluster = if let Some(dir) = args.get("plan-dir") {
+        println!("loading cluster plan from {dir}");
+        ClusterHarness::launch_from_dir(Path::new(dir), &listen, &ccfg)?
+    } else {
+        let wl = load_workload(cfg)?;
+        let mut rng = Rng::new(cfg.dataset.seed ^ 0xA11C);
+        let index = AmIndex::build(wl.base.clone(), cfg.index.to_params(), &mut rng)?;
+        ClusterHarness::launch(&index, &listen, &ccfg)?
+    };
+    for si in 0..cluster.n_shards() {
+        println!("shard {si} at {}", cluster.shard_addr(si));
+    }
+    println!(
+        "router listening on {} ({} shards, fan-out {}; \
+         AMNP v1 + JSON-lines; PING/STATS/SHUTDOWN admin ops)",
+        cluster.router_addr(),
+        cluster.n_shards(),
+        cluster.router().fan_out()
+    );
+    // serve until a client sends SHUTDOWN (loadgen --shutdown), then
+    // tear the tiers down router-first so nothing in flight is dropped
+    cluster.join();
+    let m = cluster.router().metrics();
+    println!("router drained; routed {} requests ({} errors)", m.requests, m.errors);
+    println!("end-to-end:    {}", m.latency.summary());
+    println!("shard service: {}", m.shard_service.summary());
+    println!(
+        "fan-out: mean {:.2} over {} shards ({} full fan-outs)",
+        m.fanout.mean_fanout(),
+        cluster.n_shards(),
+        m.fanout.full_fanouts
+    );
+    cluster.shutdown();
+    Ok(())
+}
+
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:4077").to_string();
     let cfg = LoadGenConfig {
@@ -385,7 +494,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .and_then(|v| v.as_usize())
         .ok_or_else(|| amsearch::Error::Coordinator("stats missing 'dim'".into()))?;
     println!(
-        "server at {addr}: dim={dim} n={}",
+        "server at {addr}: role={} dim={dim} n={}",
+        stats.get("role").and_then(|v| v.as_str()).unwrap_or("?"),
         stats.get("n_vectors").and_then(|v| v.as_usize()).unwrap_or(0)
     );
     // synthetic query pool of the right dimension (load generation does
@@ -399,6 +509,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let report = loadgen::run(&addr, &queries, &cfg)?;
     report.print();
     let server_stats = admin.stats()?;
+    // net-layer overload counters (refusals + current pipelined depth)
+    // exported by the server's STATS op alongside its own snapshot
+    if let Some(net) = server_stats.get("net") {
+        println!(
+            "server net: refused_connections={} inflight={}",
+            net.get("refused_connections")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            net.get("inflight").and_then(|v| v.as_u64()).unwrap_or(0)
+        );
+    }
+    if let Some(fanout) = server_stats.get("fanout") {
+        println!(
+            "router fan-out: mean {:.2} ({} full fan-outs)",
+            fanout.get("mean_fanout").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            fanout.get("full_fanouts").and_then(|v| v.as_u64()).unwrap_or(0)
+        );
+    }
 
     if let Some(path) = args.get("json") {
         // one artifact: the client-side report plus the server's own
@@ -465,6 +593,8 @@ fn main() {
         "query" => cmd_query(&cfg, &args),
         "serve" => cmd_serve(&cfg, &args),
         "loadgen" => cmd_loadgen(&args),
+        "shard-plan" => cmd_shard_plan(&cfg, &args),
+        "serve-cluster" => cmd_serve_cluster(&cfg, &args),
         "artifacts" => cmd_artifacts(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

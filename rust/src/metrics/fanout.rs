@@ -1,0 +1,167 @@
+//! Cluster-tier counters: per-shard fan-out accounting (how many and
+//! which shards the router contacts per query) and shard-pruning recall
+//! (how often a pruned fan-out reproduces the full fan-out answer).
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// Fan-out accounting for a scatter-gather router: total and per-shard
+/// contact counts, and how many requests went to every shard.
+#[derive(Debug, Clone, Default)]
+pub struct FanoutStats {
+    /// Routed requests.
+    pub requests: u64,
+    /// Shard contacts summed over requests.
+    pub contacts: u64,
+    /// Requests that contacted every shard (exact fan-out).
+    pub full_fanouts: u64,
+    /// Contacts per shard (`per_shard[s]` = requests sent to shard `s`).
+    pub per_shard: Vec<u64>,
+}
+
+impl FanoutStats {
+    /// Empty counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one routed request that contacted `contacted` (shard
+    /// indices) out of `n_shards` shards.
+    pub fn record(&mut self, contacted: &[u32], n_shards: usize) {
+        if self.per_shard.len() < n_shards {
+            self.per_shard.resize(n_shards, 0);
+        }
+        self.requests += 1;
+        self.contacts += contacted.len() as u64;
+        if contacted.len() >= n_shards {
+            self.full_fanouts += 1;
+        }
+        for &s in contacted {
+            if let Some(c) = self.per_shard.get_mut(s as usize) {
+                *c += 1;
+            }
+        }
+    }
+
+    /// Mean shards contacted per request (the pruning win: `< N` means
+    /// network fan-out was saved).
+    pub fn mean_fanout(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.contacts as f64 / self.requests as f64
+        }
+    }
+
+    /// Merge another counter set.
+    pub fn merge(&mut self, other: &FanoutStats) {
+        if self.per_shard.len() < other.per_shard.len() {
+            self.per_shard.resize(other.per_shard.len(), 0);
+        }
+        for (a, b) in self.per_shard.iter_mut().zip(&other.per_shard) {
+            *a += b;
+        }
+        self.requests += other.requests;
+        self.contacts += other.contacts;
+        self.full_fanouts += other.full_fanouts;
+    }
+
+    /// JSON image (the `fanout` object of the router's STATS reply).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("requests".to_string(), Json::Num(self.requests as f64));
+        o.insert("mean_fanout".to_string(), Json::Num(self.mean_fanout()));
+        o.insert(
+            "full_fanouts".to_string(),
+            Json::Num(self.full_fanouts as f64),
+        );
+        o.insert(
+            "per_shard".to_string(),
+            Json::Arr(self.per_shard.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Shard-pruning recall: fraction of queries whose pruned-fan-out
+/// answer (top-1 id) agrees with the full-fan-out reference.  Driven by
+/// the cluster bench/tests, where both answers are available.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PruneRecall {
+    /// Queries where pruned == reference.
+    pub agree: u64,
+    /// Queries recorded.
+    pub total: u64,
+}
+
+impl PruneRecall {
+    /// Empty counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one comparison of best-candidate ids (`None` = no
+    /// candidates).
+    pub fn record(&mut self, pruned: Option<u32>, reference: Option<u32>) {
+        self.total += 1;
+        if pruned == reference {
+            self.agree += 1;
+        }
+    }
+
+    /// Agreement fraction in [0, 1] (0 when nothing was recorded).
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.agree as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanout_accounting() {
+        let mut f = FanoutStats::new();
+        f.record(&[0, 2], 3);
+        f.record(&[1], 3);
+        f.record(&[0, 1, 2], 3);
+        assert_eq!(f.requests, 3);
+        assert_eq!(f.contacts, 6);
+        assert_eq!(f.full_fanouts, 1);
+        assert_eq!(f.per_shard, vec![2, 2, 2]);
+        assert!((f.mean_fanout() - 2.0).abs() < 1e-12);
+        let mut g = FanoutStats::new();
+        g.record(&[3], 4);
+        g.merge(&f);
+        assert_eq!(g.requests, 4);
+        assert_eq!(g.per_shard, vec![2, 2, 2, 1]);
+        let j = f.to_json();
+        assert_eq!(j.get("requests").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("full_fanouts").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn empty_fanout_is_safe() {
+        let f = FanoutStats::new();
+        assert_eq!(f.mean_fanout(), 0.0);
+        assert!(f.to_json().get("per_shard").is_some());
+    }
+
+    #[test]
+    fn prune_recall_counts_agreement() {
+        let mut r = PruneRecall::new();
+        r.record(Some(3), Some(3));
+        r.record(Some(4), Some(7));
+        r.record(None, None);
+        r.record(None, Some(1));
+        assert_eq!(r.total, 4);
+        assert_eq!(r.agree, 2);
+        assert!((r.value() - 0.5).abs() < 1e-12);
+        assert_eq!(PruneRecall::new().value(), 0.0);
+    }
+}

@@ -1,10 +1,12 @@
 //! Measurement: the paper's complexity accounting, recall/error-rate
 //! estimation, and serving latency histograms.
 
+pub mod fanout;
 pub mod latency;
 pub mod ops;
 pub mod recall;
 
+pub use fanout::{FanoutStats, PruneRecall};
 pub use latency::LatencyHistogram;
 pub use ops::{BatchScanStats, CostModel, OpsCounter};
 pub use recall::{Recall, RecallAtK};

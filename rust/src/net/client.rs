@@ -19,6 +19,64 @@ use crate::util::Json;
 
 use super::wire::{self, Frame, WireError, WireRequest, WireResponse};
 
+/// Bounded reconnect/backoff policy for clients that must survive
+/// server restarts and transient refusals: exponential backoff with
+/// jitter between attempts, capped per attempt and in total count.
+/// Used by [`NetClient::connect_backoff`] and by the cluster router's
+/// shard links.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total connect attempts before giving up (>= 1).
+    pub max_attempts: usize,
+    /// Backoff before the second attempt; doubled each further attempt.
+    pub base_delay: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub max_delay: Duration,
+    /// Read timeout for the PING verification round-trip of each
+    /// attempt — bounds how long an accepted-but-wedged endpoint can
+    /// hold one attempt.
+    pub verify_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 6,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_millis(500),
+            verify_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Jittered exponential backoff before `attempt` (0-based; the
+    /// first attempt never sleeps).  The jitter draws uniformly-ish
+    /// from [50%, 100%] of the capped exponential delay using the clock
+    /// nanos as entropy — enough to de-synchronize reconnect storms
+    /// across links without an RNG dependency.
+    pub fn delay(&self, attempt: usize) -> Duration {
+        if attempt == 0 {
+            return Duration::ZERO;
+        }
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32 << (attempt - 1).min(16) as u32)
+            .min(self.max_delay);
+        let nanos = exp.as_nanos() as u64;
+        if nanos == 0 {
+            return Duration::ZERO;
+        }
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0x9E37)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let jitter = (seed >> 33) % (nanos / 2 + 1);
+        Duration::from_nanos(nanos / 2 + jitter)
+    }
+}
+
 /// A blocking, pipelining-capable client over one TCP connection.
 pub struct NetClient {
     writer: TcpStream,
@@ -50,11 +108,25 @@ impl NetClient {
     }
 
     /// Connect, retrying until `budget` elapses — for racing a server
-    /// that is still binding (CI smoke runs, load generators).
+    /// that is still binding (CI smoke runs, load generators).  Each
+    /// attempt goes through the same PING-verified establishment as
+    /// [`Self::connect_backoff`] (one implementation, two retry
+    /// shapes: deadline-based here, attempt-based there).
     pub fn connect_retry(addr: &str, budget: Duration) -> Result<Self> {
         let deadline = Instant::now() + budget;
         loop {
-            match Self::connect(addr) {
+            // each attempt's verification wait is capped by what is
+            // left of the budget, so the deadline cannot be overshot by
+            // a wedged endpoint holding the PING
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let one_attempt = RetryPolicy {
+                max_attempts: 1,
+                verify_timeout: remaining
+                    .min(Duration::from_secs(5))
+                    .max(Duration::from_millis(10)),
+                ..Default::default()
+            };
+            match Self::connect_backoff(addr, &one_attempt) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     if Instant::now() >= deadline {
@@ -66,6 +138,42 @@ impl NetClient {
                 }
             }
         }
+    }
+
+    /// Connect with bounded, jittered exponential backoff, verifying
+    /// each attempt with a PING round-trip.  A connection that is
+    /// accepted but immediately answered with `ERR_OVERLOADED` (the
+    /// server's handler pool is saturated) or closed by a restarting
+    /// server fails the PING and counts as a failed attempt, so the
+    /// caller never holds a half-open client — this is what lets
+    /// router→shard links survive shard restarts.
+    pub fn connect_backoff(addr: &str, policy: &RetryPolicy) -> Result<Self> {
+        let attempts = policy.max_attempts.max(1);
+        let mut last: Option<Error> = None;
+        for attempt in 0..attempts {
+            std::thread::sleep(policy.delay(attempt));
+            match Self::connect(addr) {
+                Ok(mut c) => {
+                    // bound the verification so a dead-but-accepting
+                    // endpoint fails the attempt instead of hanging it
+                    let _ = c.set_timeout(Some(policy.verify_timeout.max(
+                        Duration::from_millis(10),
+                    )));
+                    match c.ping() {
+                        Ok(()) => {
+                            let _ = c.set_timeout(None);
+                            return Ok(c);
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::Coordinator(format!(
+            "net client: {addr} unavailable after {attempts} attempts: {}",
+            last.map(|e| e.to_string()).unwrap_or_else(|| "no attempt made".into())
+        )))
     }
 
     /// Set (or clear) the socket read timeout — a hung server then

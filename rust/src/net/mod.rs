@@ -6,7 +6,8 @@
 //!   (+ a JSON-lines debug encoding), typed validation with stable
 //!   error codes
 //! * [`server`] — accept loop, bounded connection-handler pool,
-//!   per-connection request pipelining, graceful drain
+//!   per-connection request pipelining, graceful drain; generic over a
+//!   [`Serveable`] backend (single-node coordinator or cluster router)
 //! * [`client`] — blocking client with connection reuse and pipelined
 //!   `search_k`/admin calls
 //! * [`loadgen`] — closed-loop multi-connection load generator
@@ -23,7 +24,7 @@ pub mod loadgen;
 pub mod server;
 pub mod wire;
 
-pub use client::NetClient;
+pub use client::{NetClient, RetryPolicy};
 pub use loadgen::{LoadGenConfig, LoadReport};
-pub use server::{NetConfig, NetServer};
+pub use server::{NetConfig, NetServer, Serveable};
 pub use wire::{Frame, WireError, WireRequest, WireResponse};

@@ -1,5 +1,7 @@
 //! The TCP front door: an accept loop feeding a bounded pool of
-//! connection-handler threads, layered directly on [`SearchServer`].
+//! connection-handler threads, layered on any [`Serveable`] backend —
+//! the single-node [`SearchServer`] or the cluster tier's
+//! scatter-gather router.
 //!
 //! ```text
 //! accept loop ──► bounded conn queue ──► handler pool (N threads)
@@ -35,7 +37,7 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -49,6 +51,49 @@ use super::wire::{
     ERR_BAD_FRAME, ERR_INTERNAL, ERR_OVERLOADED, ERR_SHUTTING_DOWN,
 };
 
+/// The backend a TCP front door serves.  The front door adds transport
+/// only; the backend defines the search semantics.  Implemented by the
+/// single-node [`SearchServer`] (coordinator pipeline) and by the
+/// cluster tier's scatter-gather router
+/// ([`ClusterRouter`](crate::cluster::ClusterRouter)), so one wire
+/// protocol and one server loop cover both roles.
+pub trait Serveable: Send + Sync {
+    /// Submit a k-NN query without blocking for its result; exactly one
+    /// response (success *or* explicit error) must be delivered on
+    /// `resp` with `id` echoed.  Same contract as
+    /// [`SearchServer::submit`].
+    fn submit(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        id: u64,
+        resp: SyncSender<SearchResponse>,
+    ) -> Result<()>;
+
+    /// Metrics snapshot — the payload of the STATS admin op.  Must be a
+    /// JSON object carrying at least `dim` and `n_vectors` (load
+    /// generators discover the query shape from it).
+    fn stats_json(&self) -> Json;
+}
+
+impl Serveable for SearchServer {
+    fn submit(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        id: u64,
+        resp: SyncSender<SearchResponse>,
+    ) -> Result<()> {
+        SearchServer::submit(self, vector, top_p, top_k, id, resp)
+    }
+
+    fn stats_json(&self) -> Json {
+        SearchServer::stats_json(self)
+    }
+}
+
 /// Network front-door configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct NetConfig {
@@ -61,11 +106,16 @@ pub struct NetConfig {
     /// Read-poll interval: how often blocked reads wake to check for
     /// shutdown.
     pub poll_ms: u64,
+    /// Role label injected into STATS replies (overrides the backend's
+    /// own `role` field when set) — lets a cluster harness label its
+    /// in-process shard servers "shard" while the router front door
+    /// keeps the backend's "router".
+    pub role: Option<&'static str>,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        NetConfig { max_connections: 64, max_inflight: 128, poll_ms: 25 }
+        NetConfig { max_connections: 64, max_inflight: 128, poll_ms: 25, role: None }
     }
 }
 
@@ -87,12 +137,19 @@ impl NetConfig {
 
 /// State shared between the accept loop and every connection handler.
 struct Shared {
-    search: Arc<SearchServer>,
+    backend: Arc<dyn Serveable>,
     cfg: NetConfig,
     down: AtomicBool,
     /// Our own listen address, used to self-connect once so a blocked
     /// `accept` wakes up and observes the shutdown flag.
     addr: SocketAddr,
+    /// Connections refused with `ERR_OVERLOADED` (handler pool + queue
+    /// exhausted) — exported in STATS so routers can do overload-aware
+    /// shard selection.
+    refused: AtomicU64,
+    /// Searches currently pipelined across all connections (claimed
+    /// window slots whose responses have not been written yet).
+    inflight: AtomicU64,
 }
 
 impl Shared {
@@ -116,11 +173,11 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start serving `search` over it.  The [`SearchServer`] must
-    /// outlive the front door and must only be shut down after
-    /// [`Self::join`] returns.
+    /// start serving `backend` over it.  The backend must outlive the
+    /// front door and must only be shut down after [`Self::join`]
+    /// returns.
     pub fn bind(
-        search: Arc<SearchServer>,
+        backend: Arc<dyn Serveable>,
         addr: impl ToSocketAddrs,
         cfg: NetConfig,
     ) -> Result<NetServer> {
@@ -131,10 +188,12 @@ impl NetServer {
             .local_addr()
             .map_err(|e| Error::Coordinator(format!("net: local_addr: {e}")))?;
         let shared = Arc::new(Shared {
-            search,
+            backend,
             cfg,
             down: AtomicBool::new(false),
             addr: local,
+            refused: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
         });
         let accept = {
             let shared = shared.clone();
@@ -223,6 +282,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             Err(TrySendError::Full(mut stream)) => {
                 // refuse with a stable error code instead of an opaque
                 // reset (best effort; the client may already be gone)
+                shared.refused.fetch_add(1, Ordering::Relaxed);
                 let frame = Frame::Error(WireError {
                     id: 0,
                     code: ERR_OVERLOADED,
@@ -267,16 +327,19 @@ impl ConnWriter {
 /// Pipelining window: current in-flight count + wakeup for the reader.
 type Inflight = Arc<(Mutex<usize>, Condvar)>;
 
-fn release_slot(inflight: &Inflight) {
+fn release_slot(inflight: &Inflight, shared: &Shared) {
     let (m, cv) = &**inflight;
     let mut n = m.lock().expect("poisoned");
     *n = n.saturating_sub(1);
     cv.notify_all();
+    // the server-wide gauge moves in lockstep with the per-connection
+    // windows: every release pairs with exactly one claim
+    shared.inflight.fetch_sub(1, Ordering::Relaxed);
 }
 
 /// One accepted connection: sniff the encoding from the first byte,
 /// then run the reader loop until EOF, fatal corruption, or shutdown.
-fn handle_connection(stream: TcpStream, shared: &Shared) {
+fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
     let _ = stream.set_nodelay(true);
     // a stalled client that stops reading must not wedge a handler
     // thread forever (writes would otherwise block once the socket
@@ -326,12 +389,13 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
     let writer = {
         let out = out.clone();
         let inflight = inflight.clone();
+        let shared = shared.clone();
         std::thread::Builder::new()
             .name("amsearch-net-writer".into())
             .spawn(move || {
                 while let Ok(resp) = resp_rx.recv() {
                     out.send(&response_frame(resp));
-                    release_slot(&inflight);
+                    release_slot(&inflight, &shared);
                 }
             })
             .expect("spawn connection writer")
@@ -399,8 +463,34 @@ fn dispatch(
             true
         }
         Frame::Stats { id } => {
-            let json = shared.search.stats_json().to_string();
-            out.send(&Frame::StatsReply { id, json });
+            let mut stats = shared.backend.stats_json();
+            if let Json::Obj(map) = &mut stats {
+                if let Some(role) = shared.cfg.role {
+                    map.insert("role".to_string(), Json::Str(role.to_string()));
+                }
+                // net-layer counters ride alongside the backend snapshot:
+                // refusals + current pipelined depth (overload signals
+                // for the cluster router's shard selection)
+                let mut net = std::collections::BTreeMap::new();
+                net.insert(
+                    "refused_connections".to_string(),
+                    Json::Num(shared.refused.load(Ordering::Relaxed) as f64),
+                );
+                net.insert(
+                    "inflight".to_string(),
+                    Json::Num(shared.inflight.load(Ordering::Relaxed) as f64),
+                );
+                net.insert(
+                    "max_connections".to_string(),
+                    Json::Num(shared.cfg.max_connections as f64),
+                );
+                net.insert(
+                    "max_inflight".to_string(),
+                    Json::Num(shared.cfg.max_inflight as f64),
+                );
+                map.insert("net".to_string(), Json::Obj(net));
+            }
+            out.send(&Frame::StatsReply { id, json: stats.to_string() });
             true
         }
         Frame::Shutdown { id } => {
@@ -452,7 +542,8 @@ fn dispatch_search(
         }
         *n += 1;
     }
-    let result = shared.search.submit(
+    shared.inflight.fetch_add(1, Ordering::Relaxed);
+    let result = shared.backend.submit(
         req.vector,
         req.top_p as usize,
         req.top_k as usize,
@@ -460,7 +551,7 @@ fn dispatch_search(
         resp_tx.clone(),
     );
     if let Err(e) = result {
-        release_slot(inflight);
+        release_slot(inflight, shared);
         let code = match &e {
             Error::Shape(_) => ERR_BAD_DIM,
             _ => ERR_SHUTTING_DOWN,

@@ -1,0 +1,306 @@
+//! Cluster-tier end-to-end tests: a real in-process cluster (N shard
+//! servers + scatter-gather router, all over loopback TCP) driven
+//! through the production wire path.
+//!
+//! Core pins: full fan-out (`s = N`) with per-shard full poll is
+//! bitwise-identical to single-node search; pruned fan-out (`s < N`)
+//! degrades recall monotonically; router end-to-end latency and
+//! shard-reported service time stay in separate named histograms.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use amsearch::cluster::{
+    self, ClusterConfig, ClusterHarness, ShardPlan, ShardStrategy,
+};
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::OpsCounter;
+use amsearch::net::{NetClient, NetConfig};
+use amsearch::runtime::Backend;
+
+fn fast_cluster_cfg(n_shards: usize, strategy: ShardStrategy) -> ClusterConfig {
+    ClusterConfig {
+        n_shards,
+        strategy,
+        coordinator: CoordinatorConfig {
+            max_batch: 4,
+            max_wait_us: 200,
+            workers: 1,
+            queue_depth: 64,
+        },
+        net: NetConfig { max_connections: 8, poll_ms: 5, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Acceptance pin (unit flavor; the proptest sweeps random shapes):
+/// routed responses at s = N with full poll are bitwise-identical —
+/// neighbor ids and distance bits — to in-process single-node answers,
+/// through a real TCP client against the router's front door.
+#[test]
+fn router_full_fanout_matches_single_node_over_tcp() {
+    let mut rng = Rng::new(71);
+    let (d, n, q) = (32usize, 256usize, 8usize);
+    let wl = synthetic::dense_workload(d, n, 16, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: q, top_p: 2, top_k: 3, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+
+    // single-node reference on the very same index
+    let factory = EngineFactory {
+        index: Arc::new(index.clone()),
+        backend: Backend::Native,
+        artifacts_dir: None,
+    };
+    let single = SearchServer::start(
+        factory,
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+
+    let cfg = fast_cluster_cfg(3, ShardStrategy::BalancedMembers);
+    let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+    assert_eq!(cluster.router().fan_out(), 3, "default fan-out is exact");
+
+    let mut client = NetClient::connect(cluster.router_addr()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    for (qi, k) in [(0usize, 1usize), (1, 5), (2, 300), (3, 0), (4, 7)] {
+        let query = wl.queries.get(qi);
+        let expected = single.search(query.to_vec(), q, k).unwrap();
+        let routed = client.search_k(query, q, k).unwrap();
+        assert_eq!(routed.neighbors.len(), expected.neighbors.len(), "k={k}");
+        for (a, b) in routed.neighbors.iter().zip(&expected.neighbors) {
+            assert_eq!(a.id, b.id, "qi={qi} k={k}");
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits(), "qi={qi} k={k}");
+        }
+        assert_eq!(routed.candidates, expected.candidates as u64, "full scan");
+        // full poll reaches every class, across all shards
+        let mut polled = routed.polled.clone();
+        polled.sort_unstable();
+        assert_eq!(polled, (0..q as u32).collect::<Vec<_>>());
+    }
+
+    // the router's STATS reply identifies itself and carries the
+    // cluster-tier fields
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("role").unwrap().as_str(), Some("router"));
+    assert_eq!(stats.get("shards").unwrap().as_usize(), Some(3));
+    assert_eq!(stats.get("fan_out").unwrap().as_usize(), Some(3));
+    assert!(stats.get("shard_service").is_some());
+    assert!(stats.get("fanout").is_some());
+    // shard front doors are labeled by the harness
+    let mut shard_client = NetClient::connect(cluster.shard_addr(0)).unwrap();
+    let shard_stats = shard_client.stats().unwrap();
+    assert_eq!(shard_stats.get("role").unwrap().as_str(), Some("shard"));
+    assert!(shard_stats.get("net").is_some());
+
+    cluster.shutdown();
+    single.shutdown();
+}
+
+/// Shard pruning is the class-polling trade-off one level up: with the
+/// fan-out ranking fixed per query, the candidate set at s is a subset
+/// of the candidate set at s + 1, so recall@1 against the exact ground
+/// truth is non-decreasing in s — and exact at s = N with full poll.
+#[test]
+fn pruned_fanout_degrades_recall_monotonically() {
+    let mut rng = Rng::new(72);
+    let spec = ClusteredSpec { dim: 32, n_clusters: 16, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, 768, 48, &mut rng);
+    let params = IndexParams { n_classes: 16, top_p: 16, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let cfg = fast_cluster_cfg(4, ShardStrategy::RoundRobin);
+    let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+
+    let mut recalls = Vec::new();
+    for s in 1..=4usize {
+        cluster.router().set_fan_out(s);
+        let mut hits = 0usize;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let resp = cluster
+                .router()
+                .search(wl.queries.get(qi).to_vec(), 16, 1)
+                .unwrap();
+            if resp.neighbor() == Some(gt) {
+                hits += 1;
+            }
+        }
+        recalls.push(hits as f64 / wl.ground_truth.len() as f64);
+    }
+    for w in recalls.windows(2) {
+        assert!(
+            w[0] <= w[1] + 1e-12,
+            "recall must be monotone in fan-out: {recalls:?}"
+        );
+    }
+    assert_eq!(recalls[3], 1.0, "s = N with full poll is exact: {recalls:?}");
+    assert!(
+        recalls[0] < 1.0,
+        "s = 1 on a 4-shard clustered corpus must lose recall: {recalls:?}"
+    );
+
+    let m = cluster.router().metrics();
+    assert_eq!(m.requests, 4 * 48);
+    assert_eq!(m.fanout.requests, 4 * 48);
+    // 1 + 2 + 3 + 4 contacts per query over the sweep
+    assert_eq!(m.fanout.contacts, (1 + 2 + 3 + 4) * 48);
+    assert_eq!(m.fanout.full_fanouts, 48, "only the s = 4 pass is exact fan-out");
+    cluster.shutdown();
+}
+
+/// The double-count fix: the router records its own end-to-end latency
+/// and the shard-reported service times in two separate named
+/// histograms — one sample per request in `latency`, one per shard
+/// contact in `shard_service`, never merged.
+#[test]
+fn router_keeps_end_to_end_and_shard_histograms_separate() {
+    let mut rng = Rng::new(73);
+    let wl = synthetic::dense_workload(24, 180, 10, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 6, top_p: 2, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let cluster = ClusterHarness::launch(
+        &index,
+        "127.0.0.1:0",
+        &fast_cluster_cfg(3, ShardStrategy::Contiguous),
+    )
+    .unwrap();
+    cluster.router().set_fan_out(2);
+    for qi in 0..10 {
+        cluster
+            .router()
+            .search(wl.queries.get(qi).to_vec(), 2, 1)
+            .unwrap();
+    }
+    let m = cluster.router().metrics();
+    assert_eq!(m.latency.count(), 10, "one end-to-end sample per request");
+    assert_eq!(
+        m.shard_service.count(),
+        20,
+        "one shard-service sample per shard contact (s = 2)"
+    );
+    let stats = amsearch::net::Serveable::stats_json(&**cluster.router());
+    let lat = stats.get("latency").unwrap();
+    let svc = stats.get("shard_service").unwrap();
+    assert_eq!(lat.get("count").unwrap().as_u64(), Some(10));
+    assert_eq!(svc.get("count").unwrap().as_u64(), Some(20));
+    cluster.shutdown();
+}
+
+/// The persisted path: `shard-plan` artifacts + v3 manifest loaded back
+/// by `serve-cluster --plan-dir` serve bitwise-identically to the
+/// original index (full fan-out, full poll).
+#[test]
+fn cluster_from_plan_dir_serves_identically() {
+    let mut rng = Rng::new(74);
+    let wl = synthetic::dense_workload(16, 200, 10, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 10, top_p: 3, top_k: 2, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let plan = ShardPlan::for_index(&index, 3, ShardStrategy::Contiguous).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "amsearch_cluster_e2e_{}_plandir",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    cluster::write_cluster(&index, &plan, &dir).unwrap();
+
+    let cluster = ClusterHarness::launch_from_dir(
+        &dir,
+        "127.0.0.1:0",
+        &fast_cluster_cfg(3, ShardStrategy::Contiguous),
+    )
+    .unwrap();
+    let mut ops = OpsCounter::new();
+    for qi in 0..10 {
+        let query = wl.queries.get(qi);
+        let expected = index.query_k(query, 10, 4, &mut ops);
+        let routed = cluster.router().search(query.to_vec(), 10, 4).unwrap();
+        assert_eq!(routed.neighbors.len(), expected.neighbors.len());
+        for (a, b) in routed.neighbors.iter().zip(&expected.neighbors) {
+            assert_eq!(a.id, b.id, "query {qi}");
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits(), "query {qi}");
+        }
+        assert_eq!(routed.candidates, expected.candidates);
+    }
+    cluster.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A stale or half-written plan directory (shard artifact disagreeing
+/// with the manifest) must fail at launch with a typed error — never
+/// reach a router worker that would panic on an out-of-range shard id.
+#[test]
+fn stale_plan_dir_rejected_at_launch() {
+    let mut rng = Rng::new(76);
+    let wl = synthetic::dense_workload(16, 120, 6, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 6, top_p: 2, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let plan = ShardPlan::for_index(&index, 2, ShardStrategy::Contiguous).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "amsearch_cluster_e2e_{}_stale",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    cluster::write_cluster(&index, &plan, &dir).unwrap();
+    // overwrite shard 0 with an artifact from a *different* build — the
+    // "shard-plan rerun died between shard files and manifest" shape
+    let mut rng2 = Rng::new(77);
+    let wl2 = synthetic::dense_workload(16, 80, 6, QueryModel::Exact, &mut rng2);
+    let other = AmIndex::build(
+        wl2.base.clone(),
+        IndexParams { n_classes: 4, top_p: 1, ..Default::default() },
+        &mut rng2,
+    )
+    .unwrap();
+    amsearch::index::persist::save(&other, &dir.join("shard-0.amidx")).unwrap();
+    let err = ClusterHarness::launch_from_dir(
+        &dir,
+        "127.0.0.1:0",
+        &fast_cluster_cfg(2, ShardStrategy::Contiguous),
+    );
+    let msg = match err {
+        Ok(_) => panic!("stale plan directory must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(msg.contains("manifest"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Graceful cluster drain: a SHUTDOWN frame through the router's front
+/// door unblocks `join`, in-flight requests all resolve, and the
+/// orderly teardown leaves every tier joined (no hangs, no drops).
+#[test]
+fn cluster_shutdown_drains_in_flight_requests() {
+    let mut rng = Rng::new(75);
+    let wl = synthetic::dense_workload(16, 128, 8, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 4, top_p: 2, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let cluster = ClusterHarness::launch(
+        &index,
+        "127.0.0.1:0",
+        &fast_cluster_cfg(2, ShardStrategy::Contiguous),
+    )
+    .unwrap();
+    let addr = cluster.router_addr();
+
+    let mut a = NetClient::connect(addr).unwrap();
+    a.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let ids: Vec<u64> = (0..12)
+        .map(|i| a.submit(wl.queries.get(i % 8), 4, 2).unwrap())
+        .collect();
+    for id in ids {
+        a.wait(id).unwrap(); // every accepted request resolves
+    }
+
+    let mut b = NetClient::connect(addr).unwrap();
+    b.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    b.shutdown_server().unwrap();
+    cluster.join(); // returns once the front door drained
+    let m = cluster.router().metrics();
+    assert!(m.requests >= 12);
+    assert_eq!(m.errors, 0);
+    cluster.shutdown();
+}

@@ -5,16 +5,18 @@
 //! to the in-process `SearchServer::search` answer on the same index.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
 use amsearch::data::rng::Rng;
 use amsearch::data::synthetic::{self, QueryModel};
 use amsearch::data::Workload;
 use amsearch::index::{AmIndex, IndexParams};
-use amsearch::net::{loadgen, wire, LoadGenConfig, NetClient, NetConfig, NetServer};
+use amsearch::net::{
+    loadgen, wire, LoadGenConfig, NetClient, NetConfig, NetServer, RetryPolicy,
+};
 use amsearch::runtime::Backend;
 use amsearch::util::Json;
 
@@ -37,7 +39,12 @@ fn start_stack(
     };
     let server = Arc::new(SearchServer::start(factory, config).unwrap());
     // small handler pool + fast poll: tests run many stacks in parallel
-    let net_cfg = NetConfig { max_connections: 8, max_inflight: 128, poll_ms: 10 };
+    let net_cfg = NetConfig {
+        max_connections: 8,
+        max_inflight: 128,
+        poll_ms: 10,
+        ..Default::default()
+    };
     let net = NetServer::bind(server.clone(), "127.0.0.1:0", net_cfg).unwrap();
     (server, net, wl)
 }
@@ -285,6 +292,141 @@ fn shutdown_frame_drains_and_stops_the_server() {
             assert!(!msg.is_empty());
         }
     }
+}
+
+/// Satellite pin: `connect_backoff` retries through a server that
+/// refuses the first attempt (an `ERR_OVERLOADED` frame, the saturated
+/// accept loop's behavior) and lands a verified, usable connection on
+/// the second — the mechanism that lets router→shard links survive
+/// shard restarts.  Against a dead port it fails after bounded
+/// attempts instead of hanging.
+#[test]
+fn connect_backoff_survives_initial_refusal_and_is_bounded() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        // first connection: refuse exactly like the overloaded accept
+        // loop does (typed ERROR frame, then hang up)
+        let (mut s1, _) = listener.accept().unwrap();
+        let refusal = wire::Frame::Error(wire::WireError {
+            id: 0,
+            code: wire::ERR_OVERLOADED,
+            message: "connection-handler pool exhausted".into(),
+        });
+        s1.write_all(&refusal.encode()).unwrap();
+        drop(s1);
+        // second connection: answer pings until the client hangs up
+        let (mut s2, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(s2.try_clone().unwrap());
+        while let Ok(frame) = wire::read_frame(&mut reader) {
+            if let wire::Frame::Ping { id } = frame {
+                s2.write_all(&wire::Frame::Pong { id }.encode()).unwrap();
+            }
+        }
+    });
+    let policy = RetryPolicy {
+        max_attempts: 5,
+        base_delay: Duration::from_millis(5),
+        max_delay: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let mut client = NetClient::connect_backoff(&addr, &policy).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    client.ping().unwrap(); // the surviving link is actually usable
+    drop(client);
+    server.join().unwrap();
+
+    // bounded failure: a "server" that accepts and immediately hangs up
+    // on every attempt (never answers PING) must exhaust the policy and
+    // error out — deterministic, unlike racing for a released port
+    let dead_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead = dead_listener.local_addr().unwrap().to_string();
+    let attempts = policy.max_attempts;
+    let dropper = std::thread::spawn(move || {
+        for _ in 0..attempts {
+            if let Ok((s, _)) = dead_listener.accept() {
+                drop(s);
+            }
+        }
+    });
+    let started = Instant::now();
+    assert!(NetClient::connect_backoff(&dead, &policy).is_err());
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "backoff must be bounded"
+    );
+    dropper.join().unwrap();
+}
+
+/// Satellite pin: STATS exports the net-layer overload counters — the
+/// `ERR_OVERLOADED` refusal count and the current pipelined depth —
+/// alongside the backend snapshot, and labels the backend role.
+#[test]
+fn stats_exports_refusal_and_inflight_counters() {
+    let mut rng = Rng::new(9);
+    let wl = synthetic::dense_workload(16, 128, 8, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 4, top_p: 2, ..Default::default() };
+    let idx = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+    let factory =
+        EngineFactory { index: idx, backend: Backend::Native, artifacts_dir: None };
+    let server =
+        Arc::new(SearchServer::start(factory, CoordinatorConfig::default()).unwrap());
+    // pool of exactly one handler (+ a one-slot queue): the third
+    // concurrent connection must be refused with ERR_OVERLOADED
+    let net_cfg = NetConfig { max_connections: 1, poll_ms: 5, ..Default::default() };
+    let net = NetServer::bind(server.clone(), "127.0.0.1:0", net_cfg).unwrap();
+    let addr = net.local_addr();
+
+    let mut a = NetClient::connect(addr).unwrap();
+    a.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    a.ping().unwrap(); // a ping answered == a occupies the one handler
+    let _queued = TcpStream::connect(addr).unwrap(); // fills the queue
+    // give the accept loop a beat to queue the second connection, so
+    // the third deterministically overflows
+    std::thread::sleep(Duration::from_millis(100));
+    let refused = TcpStream::connect(addr).unwrap();
+    refused.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(refused);
+    let frame = wire::read_frame(&mut reader).unwrap();
+    let wire::Frame::Error(e) = frame else { panic!("expected refusal frame") };
+    assert_eq!(e.code, wire::ERR_OVERLOADED);
+
+    // a few searches through the surviving connection, then STATS: the
+    // refusal was counted, and with every response claimed the current
+    // pipelined depth reads zero again
+    for qi in 0..4 {
+        a.search_k(wl.queries.get(qi), 2, 1).unwrap();
+    }
+    let stats = a.stats().unwrap();
+    assert_eq!(stats.get("role").unwrap().as_str(), Some("search"));
+    let netj = stats.get("net").expect("net counters present");
+    assert_eq!(
+        netj.get("refused_connections").unwrap().as_u64(),
+        Some(1),
+        "exactly one refusal"
+    );
+    assert_eq!(netj.get("max_connections").unwrap().as_usize(), Some(1));
+    assert!(netj.get("max_inflight").is_some());
+    // the writer thread releases a slot just *after* writing the
+    // response, so the gauge may lag the client by a beat — poll it
+    // back down to zero within a bounded window
+    let mut inflight = u64::MAX;
+    for _ in 0..200 {
+        let s = a.stats().unwrap();
+        inflight = s
+            .get("net")
+            .and_then(|n| n.get("inflight"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(u64::MAX);
+        if inflight == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(inflight, 0, "all claimed responses release their slots");
+
+    net.shutdown();
+    server.shutdown();
 }
 
 #[test]

@@ -519,3 +519,108 @@ fn prop_wire_corrupt_frames_rejected() {
         }
     });
 }
+
+/// The cluster acceptance pin: for random dense/sparse datasets, random
+/// `k`, shard counts, and planning strategies, the scatter-gather
+/// router at full fan-out (`s = N`, per-shard full poll) returns
+/// results **bitwise-identical** — neighbor ids and `to_bits()`
+/// distances — to single-node `SearchServer::search` on the unsharded
+/// index, through real loopback TCP (router → shard links and the
+/// client → router connection are all real sockets).
+#[test]
+fn prop_router_full_fanout_matches_single_node() {
+    use amsearch::cluster::{ClusterConfig, ClusterHarness, ShardStrategy};
+    use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+    use amsearch::net::{NetClient, NetConfig};
+    use amsearch::runtime::Backend;
+    use std::sync::Arc;
+
+    cases(6, |rng| {
+        let dense = rng.bernoulli(0.5);
+        let d = 8 + 8 * rng.below(3) as usize; // 8 / 16 / 24
+        let q = 4 + rng.below(5) as usize; // 4..=8
+        let n = q * (8 + rng.below(12) as usize); // every class non-empty
+        let wl = if dense {
+            synthetic::dense_workload(d, n, 8, QueryModel::Exact, rng)
+        } else {
+            synthetic::sparse_workload(
+                SparseSpec { dim: d, ones: 4.0 },
+                n,
+                8,
+                QueryModel::Exact,
+                rng,
+            )
+        };
+        let params =
+            IndexParams { n_classes: q, top_p: 2, top_k: 3, ..Default::default() };
+        let index = AmIndex::build(wl.base.clone(), params, rng).unwrap();
+
+        let single = SearchServer::start(
+            EngineFactory {
+                index: Arc::new(index.clone()),
+                backend: Backend::Native,
+                artifacts_dir: None,
+            },
+            CoordinatorConfig {
+                max_batch: 4,
+                max_wait_us: 200,
+                workers: 1,
+                queue_depth: 64,
+            },
+        )
+        .unwrap();
+
+        let n_shards = 1 + rng.below(q.min(4) as u64) as usize;
+        let strategy = match rng.below(3) {
+            0 => ShardStrategy::Contiguous,
+            1 => ShardStrategy::RoundRobin,
+            _ => ShardStrategy::BalancedMembers,
+        };
+        let cfg = ClusterConfig {
+            n_shards,
+            strategy,
+            coordinator: CoordinatorConfig {
+                max_batch: 4,
+                max_wait_us: 200,
+                workers: 1,
+                queue_depth: 64,
+            },
+            net: NetConfig { max_connections: 4, poll_ms: 5, ..Default::default() },
+            ..Default::default()
+        };
+        let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+        let mut client = NetClient::connect(cluster.router_addr()).unwrap();
+        client
+            .set_timeout(Some(std::time::Duration::from_secs(30)))
+            .unwrap();
+
+        for qi in 0..wl.queries.len() {
+            // k sweeps the edges: 1, a mid value, beyond the database
+            let k = match qi % 4 {
+                0 => 1,
+                1 => 1 + rng.below(8) as usize,
+                2 => n + 3,
+                _ => 0, // index default
+            };
+            let query = wl.queries.get(qi);
+            let expected = single.search(query.to_vec(), q, k).unwrap();
+            let routed = client.search_k(query, q, k).unwrap();
+            assert_eq!(
+                routed.neighbors.len(),
+                expected.neighbors.len(),
+                "qi={qi} k={k} N={n_shards} {strategy}"
+            );
+            for (a, b) in routed.neighbors.iter().zip(&expected.neighbors) {
+                assert_eq!(a.id, b.id, "qi={qi} k={k} N={n_shards} {strategy}");
+                assert_eq!(
+                    a.distance.to_bits(),
+                    b.distance.to_bits(),
+                    "qi={qi} k={k} N={n_shards} {strategy}"
+                );
+            }
+            assert_eq!(routed.candidates, expected.candidates as u64);
+        }
+        cluster.shutdown();
+        single.shutdown();
+    });
+}
