@@ -1,0 +1,87 @@
+//! Compressed scan vs exact scan on the clustered workload: sweeps
+//! scan precision (exact / sq8 / pq) × rerank budget at batch sizes
+//! B ∈ {1, 32}, timing the select+scan stage through `finish_batch`
+//! (scores precomputed outside the timed region, exactly like
+//! `batch_scan.rs`, so the cells are comparable across targets).
+//!
+//! Set `AMSEARCH_BENCH_JSON=BENCH_quant_scan.json` to also emit the
+//! measurements as a machine-readable artifact (used by CI).
+
+#[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
+mod harness;
+
+use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+use amsearch::data::rng::Rng;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::OpsCounter;
+use amsearch::quant::ScanPrecision;
+use harness::{bench, budget, section, write_json_if_requested, Measurement};
+
+fn main() {
+    let mut rng = Rng::new(47);
+    let (d, n, q, p) = (128usize, 16_384usize, 64usize, 4usize);
+    let spec = ClusteredSpec { dim: d, n_clusters: q, ..ClusteredSpec::sift_like() };
+    let n_queries = 64usize;
+    let wl = clustered_workload(spec, n, n_queries, &mut rng);
+    println!(
+        "workload: clustered n={n} d={d} q={q} k={} p={p}",
+        n / q
+    );
+
+    // one index per precision, trained once; the rerank sweep only
+    // retargets the budget (set_scan_rerank — no codebook retraining)
+    let precisions: &[(&str, ScanPrecision)] = &[
+        ("exact", ScanPrecision::Exact),
+        ("sq8", ScanPrecision::Sq8 { rerank: 0 }),
+        ("pq16x4", ScanPrecision::Pq { m: 16, bits: 4, rerank: 0 }),
+    ];
+    let mut all: Vec<Measurement> = Vec::new();
+    for &(label, precision) in precisions {
+        let params = IndexParams { n_classes: q, top_p: p, precision, ..Default::default() };
+        let mut index =
+            AmIndex::build(wl.base.clone(), params, &mut Rng::new(48)).unwrap();
+        let fp = index.footprint();
+        section(&format!(
+            "{label}: scan-resident {} bytes of {} f32 bytes ({:.3}x)",
+            fp.compressed_bytes,
+            fp.bytes,
+            fp.ratio()
+        ));
+        // budgets strictly above k = 10: the scan clamps any budget
+        // below k up to k, which would silently relabel the cell
+        let reranks: &[usize] = if precision == ScanPrecision::Exact {
+            &[0] // no rerank stage to sweep
+        } else {
+            &[16, 128]
+        };
+        for &r in reranks {
+            index.set_scan_rerank(r);
+            for &b in &[1usize, 32] {
+                let queries: Vec<&[f32]> =
+                    (0..b).map(|i| wl.queries.get(i % n_queries)).collect();
+                let ps = vec![p; b];
+                let ks = vec![10usize; b];
+                let mut throwaway = OpsCounter::new();
+                let mut flat_scores = Vec::with_capacity(b * q);
+                for x in &queries {
+                    flat_scores
+                        .extend_from_slice(&index.score_classes(x, &mut throwaway));
+                }
+                let m = bench(
+                    &format!("{label:<7} r={r:<3} B={b:<3} k=10 scan"),
+                    budget(),
+                    || {
+                        let mut ops = vec![OpsCounter::new(); b];
+                        let rs = index
+                            .finish_batch(&queries, &flat_scores, &ps, &ks, &mut ops);
+                        std::hint::black_box(rs.len());
+                    },
+                );
+                m.report();
+                all.push(m);
+            }
+        }
+    }
+    write_json_if_requested(&all);
+}

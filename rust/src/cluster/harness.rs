@@ -138,6 +138,12 @@ impl ClusterHarness {
         listen: &str,
         cfg: &ClusterConfig,
     ) -> Result<Self> {
+        // cluster-wide index summary (footprint + quant mode), captured
+        // while the shard indices are still in hand so the router's
+        // STATS can report compression like a single node does
+        let index_info = super::router::ClusterIndexInfo::from_indices(
+            factories.iter().map(|f| f.index.as_ref()),
+        );
         let shard_net = NetConfig { role: Some("shard"), ..cfg.net };
         let mut shards = Vec::with_capacity(factories.len());
         let mut addrs = Vec::with_capacity(factories.len());
@@ -148,6 +154,7 @@ impl ClusterHarness {
             shards.push(ShardNode { search, net });
         }
         let router = Arc::new(ClusterRouter::start(table, addrs, cfg.router)?);
+        router.set_index_info(index_info);
         let router_net = NetServer::bind(router.clone(), listen, cfg.net)?;
         Ok(ClusterHarness { shards, router, router_net })
     }

@@ -28,4 +28,4 @@ pub use plan::{
     build_shard_index, load_cluster, routing_table, write_cluster, LoadedCluster,
     RoutingTable, ShardPlan, ShardStrategy,
 };
-pub use router::{ClusterRouter, RouterConfig, RouterMetrics};
+pub use router::{ClusterIndexInfo, ClusterRouter, RouterConfig, RouterMetrics};

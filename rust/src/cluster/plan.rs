@@ -265,6 +265,10 @@ pub fn build_shard_index(
         allocation: p.allocation,
         metric: p.metric,
         greedy_cap_factor: p.greedy_cap_factor,
+        // the quantization config travels into every shard artifact:
+        // each shard trains its own codebooks over its own vectors
+        // (deterministically), so routed serving scans compressed shards
+        precision: p.precision,
     };
     let shard = AmIndex::from_parts(params, assignments, stacked, counts, data)?;
     Ok((shard, shard_ids))
@@ -775,6 +779,45 @@ mod tests {
         let b = reloaded.query_k(probe, reloaded.params().n_classes, 2, &mut ops);
         assert_eq!(a, b);
         assert!(!id_map0.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quantized_plan_writes_quantized_shard_artifacts() {
+        use crate::quant::ScanPrecision;
+        let mut rng = Rng::new(6);
+        let wl = synthetic::dense_workload(32, 200, 10, QueryModel::Exact, &mut rng);
+        let params = IndexParams {
+            n_classes: 10,
+            top_p: 2,
+            precision: ScanPrecision::Sq8 { rerank: 0 },
+            ..Default::default()
+        };
+        let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let plan =
+            ShardPlan::for_index(&index, 3, ShardStrategy::BalancedMembers).unwrap();
+        let dir = tmp("quant_plan");
+        std::fs::remove_dir_all(&dir).ok();
+        let files = write_cluster(&index, &plan, &dir).unwrap();
+        for (si, file) in files.iter().enumerate() {
+            let shard = crate::index::persist::load(file).unwrap();
+            assert_eq!(
+                shard.params().precision,
+                ScanPrecision::Sq8 { rerank: 0 },
+                "shard {si} lost the quantization config"
+            );
+            let q = shard.quant().expect("shard scans compressed");
+            assert_eq!(q.len(), shard.len());
+            assert!(shard.footprint().ratio() <= 0.35, "shard {si}");
+        }
+        // a shard's full-poll answer still matches the in-memory build
+        let (shard0, _) = build_shard_index(&index, &plan, 0).unwrap();
+        let reloaded = crate::index::persist::load(&files[0]).unwrap();
+        let mut ops = OpsCounter::new();
+        let probe = wl.queries.get(0);
+        let a = shard0.query_k(probe, shard0.params().n_classes, 3, &mut ops);
+        let b = reloaded.query_k(probe, reloaded.params().n_classes, 3, &mut ops);
+        assert_eq!(a, b);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -109,6 +109,50 @@ struct RouterRequest {
     resp: SyncSender<SearchResponse>,
 }
 
+/// What the router knows about the indices behind its shards: summed
+/// scan-representation footprints and the (shared) quantization mode —
+/// the cluster-level `index.*` / `quant.*` STATS fields.  Set by the
+/// harness at launch, when the shard indices are in hand.
+#[derive(Debug, Clone)]
+pub struct ClusterIndexInfo {
+    /// Footprints summed over every shard.
+    pub footprint: crate::quant::IndexFootprint,
+    /// Scan mode ("exact" | "sq8" | "pq", or "mixed" if shards differ).
+    pub quant_mode: String,
+    /// Rerank budget of the shard indices (0 = all).
+    pub rerank: usize,
+}
+
+impl ClusterIndexInfo {
+    /// Aggregate over the shard indices of a cluster.
+    pub fn from_indices<'a>(
+        indices: impl IntoIterator<Item = &'a crate::index::AmIndex>,
+    ) -> ClusterIndexInfo {
+        let mut footprint = crate::quant::IndexFootprint::default();
+        let mut mode: Option<&'static str> = None;
+        let mut mixed = false;
+        let mut rerank = 0usize;
+        for idx in indices {
+            footprint.add(idx.footprint());
+            match mode {
+                None => mode = Some(idx.quant_mode()),
+                Some(m) if m != idx.quant_mode() => mixed = true,
+                Some(_) => {}
+            }
+            rerank = rerank.max(idx.params().precision.rerank());
+        }
+        ClusterIndexInfo {
+            footprint,
+            quant_mode: if mixed {
+                "mixed".to_string()
+            } else {
+                mode.unwrap_or("exact").to_string()
+            },
+            rerank,
+        }
+    }
+}
+
 /// State shared by the router handle and its workers.
 struct RouterShared {
     table: RoutingTable,
@@ -116,6 +160,7 @@ struct RouterShared {
     fan_out: AtomicUsize,
     retry: RetryPolicy,
     metrics: Mutex<RouterMetrics>,
+    index_info: Mutex<Option<ClusterIndexInfo>>,
 }
 
 impl RouterShared {
@@ -165,6 +210,7 @@ impl ClusterRouter {
             fan_out: AtomicUsize::new(cfg.fan_out),
             retry: cfg.retry,
             metrics: Mutex::new(RouterMetrics::default()),
+            index_info: Mutex::new(None),
         });
         let (req_tx, req_rx) = mpsc::sync_channel::<RouterRequest>(cfg.queue_depth);
         let req_rx: Arc<Mutex<Receiver<RouterRequest>>> = Arc::new(Mutex::new(req_rx));
@@ -228,6 +274,13 @@ impl ClusterRouter {
     /// for subsequently routed requests — the bench sweeps this knob.
     pub fn set_fan_out(&self, s: usize) {
         self.shared.fan_out.store(s, Ordering::Relaxed);
+    }
+
+    /// Attach the shard-index summary (footprints + quant mode) so the
+    /// router's STATS report the cluster's compression the same way a
+    /// single node reports its own.
+    pub fn set_index_info(&self, info: ClusterIndexInfo) {
+        *self.shared.index_info.lock().expect("poisoned") = Some(info);
     }
 
     /// Submit a query and block until its merged response arrives (the
@@ -319,6 +372,18 @@ impl Serveable for ClusterRouter {
         o.insert("fan_out".to_string(), Json::Num(self.fan_out() as f64));
         o.insert("requests".to_string(), Json::Num(m.requests as f64));
         o.insert("errors".to_string(), Json::Num(m.errors as f64));
+        // cluster-wide scan footprint + quant mode, same shape as the
+        // single-node server's STATS (summed over shard indices)
+        if let Some(info) = self.shared.index_info.lock().expect("poisoned").as_ref() {
+            o.insert(
+                "index".to_string(),
+                crate::coordinator::footprint_json(&info.footprint),
+            );
+            o.insert(
+                "quant".to_string(),
+                crate::coordinator::quant_json(&info.quant_mode, info.rerank),
+            );
+        }
         // two *separate* named histograms — never merged (merging would
         // double-count each request: once as observed by the router,
         // once per shard-reported sample)

@@ -22,6 +22,7 @@ use crate::error::{Error, Result};
 use crate::index::IndexParams;
 use crate::memory::StorageRule;
 use crate::partition::Allocation;
+use crate::quant::ScanPrecision;
 use crate::runtime::Backend;
 use crate::search::Metric;
 use crate::util::json::Json;
@@ -114,6 +115,9 @@ pub struct IndexConfig {
     pub metric: Metric,
     /// Greedy class-size cap factor.
     pub greedy_cap_factor: Option<f64>,
+    /// Candidate-scan precision (JSON: `"precision": "exact"|"sq8"|"pq"`
+    /// plus `"rerank"`, `"pq_m"`, `"pq_bits"`).
+    pub precision: ScanPrecision,
 }
 
 impl Default for IndexConfig {
@@ -126,6 +130,7 @@ impl Default for IndexConfig {
             allocation: Allocation::Random,
             metric: Metric::SqL2,
             greedy_cap_factor: None,
+            precision: ScanPrecision::Exact,
         }
     }
 }
@@ -141,8 +146,31 @@ impl IndexConfig {
             allocation: self.allocation,
             metric: self.metric,
             greedy_cap_factor: self.greedy_cap_factor,
+            precision: self.precision,
         }
     }
+}
+
+/// Assemble a [`ScanPrecision`] from its four knobs (shared by the JSON
+/// parser and the CLI override flags).
+pub fn scan_precision_from_knobs(
+    mode: &str,
+    rerank: usize,
+    pq_m: usize,
+    pq_bits: usize,
+) -> Result<ScanPrecision> {
+    let precision = match mode {
+        "exact" | "f32" => ScanPrecision::Exact,
+        "sq8" => ScanPrecision::Sq8 { rerank },
+        "pq" => ScanPrecision::Pq { m: pq_m, bits: pq_bits, rerank },
+        other => {
+            return Err(Error::Config(format!(
+                "unknown scan precision '{other}' (exact|sq8|pq)"
+            )))
+        }
+    };
+    precision.validate_params()?;
+    Ok(precision)
 }
 
 /// Coordinator section.
@@ -296,6 +324,32 @@ impl AppConfig {
                     .ok_or_else(|| Error::Config("'greedy_cap_factor' must be a number".into()))?,
             );
         }
+        match ix.get("precision") {
+            Some(v) => {
+                let mode = v.as_str().ok_or_else(|| {
+                    Error::Config("'precision' must be a string".into())
+                })?;
+                cfg.index.precision = scan_precision_from_knobs(
+                    mode,
+                    get_usize(ix, "rerank", 0)?,
+                    get_usize(ix, "pq_m", 8)?,
+                    get_usize(ix, "pq_bits", 8)?,
+                )?;
+            }
+            // the quant knobs mean nothing without a mode — reject
+            // instead of silently serving at a different precision
+            None if ix.get("rerank").is_some()
+                || ix.get("pq_m").is_some()
+                || ix.get("pq_bits").is_some() =>
+            {
+                return Err(Error::Config(
+                    "'rerank'/'pq_m'/'pq_bits' require 'precision' \
+                     (exact|sq8|pq) in the index section"
+                        .into(),
+                ));
+            }
+            None => {}
+        }
 
         let sv = root.get("serve").unwrap_or(&empty);
         cfg.serve.max_batch = get_usize(sv, "max_batch", cfg.serve.max_batch)?;
@@ -415,5 +469,41 @@ mod tests {
         let cfg = AppConfig::from_json(r#"{"index": {"top_k": 5}}"#).unwrap();
         assert_eq!(cfg.index.top_k, 5);
         assert_eq!(cfg.index.to_params().top_k, 5);
+    }
+
+    #[test]
+    fn precision_parses_and_flows_to_params() {
+        let cfg = AppConfig::from_json(
+            r#"{"index": {"precision": "sq8", "rerank": 64}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.index.precision, ScanPrecision::Sq8 { rerank: 64 });
+        assert_eq!(
+            cfg.index.to_params().precision,
+            ScanPrecision::Sq8 { rerank: 64 }
+        );
+
+        let cfg = AppConfig::from_json(
+            r#"{"index": {"precision": "pq", "pq_m": 16, "pq_bits": 4}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.index.precision,
+            ScanPrecision::Pq { m: 16, bits: 4, rerank: 0 }
+        );
+
+        // default when unspecified
+        let cfg = AppConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.index.precision, ScanPrecision::Exact);
+
+        // bad values rejected
+        assert!(AppConfig::from_json(r#"{"index": {"precision": "fp4"}}"#).is_err());
+        assert!(AppConfig::from_json(
+            r#"{"index": {"precision": "pq", "pq_bits": 12}}"#
+        )
+        .is_err());
+        // quant knobs without a mode are rejected, not silently dropped
+        assert!(AppConfig::from_json(r#"{"index": {"rerank": 64}}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"index": {"pq_m": 4}}"#).is_err());
     }
 }

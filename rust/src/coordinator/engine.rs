@@ -88,7 +88,12 @@ impl Engine {
             .unwrap_or(0);
         let mut scanner = None;
         let mut class_members = Vec::new();
-        for entry in manifest.entries() {
+        // a quantized index scans codes through the two-stage compressed
+        // pipeline; the f32 GEMM artifact would bypass it, so the native
+        // scan path is used instead (the scorer still runs on PJRT)
+        let scan_entries =
+            if index.quant().is_none() { manifest.entries() } else { &[] };
+        for entry in scan_entries {
             if entry.kind == "class_distances"
                 && entry.d == index.dim()
                 && entry.k.is_some_and(|k| k >= max_class)
@@ -463,6 +468,50 @@ mod tests {
         let out = engine.serve_batch_detailed(&[]).unwrap();
         assert!(out.responses.is_empty());
         assert_eq!(out.scan.batches, 0);
+    }
+
+    #[test]
+    fn quantized_engine_at_full_rerank_matches_exact_engine() {
+        use crate::quant::ScanPrecision;
+        let mut rng = Rng::new(2);
+        let wl = synthetic::dense_workload(32, 256, 10, QueryModel::Exact, &mut rng);
+        let exact = AmIndex::build(
+            wl.base.clone(),
+            IndexParams { n_classes: 8, ..Default::default() },
+            &mut Rng::new(77),
+        )
+        .unwrap();
+        let quantized = AmIndex::build(
+            wl.base.clone(),
+            IndexParams {
+                n_classes: 8,
+                precision: ScanPrecision::Sq8 { rerank: 0 },
+                ..Default::default()
+            },
+            &mut Rng::new(77),
+        )
+        .unwrap();
+        let e_exact = Engine::native(Arc::new(exact)).unwrap();
+        let e_quant = Engine::native(Arc::new(quantized)).unwrap();
+        let queries: Vec<(&[f32], usize, usize)> = (0..6)
+            .map(|i| (wl.queries.get(i), [1usize, 2, 8, 8, 4, 3][i], [1usize, 5, 300, 1, 7, 2][i]))
+            .collect();
+        let a = e_exact.serve_batch(&queries).unwrap();
+        let b = e_quant.serve_batch(&queries).unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.polled, rb.polled);
+            assert_eq!(ra.candidates, rb.candidates);
+            assert_eq!(ra.neighbors.len(), rb.neighbors.len());
+            for (na, nb) in ra.neighbors.iter().zip(&rb.neighbors) {
+                assert_eq!(na.id, nb.id);
+                assert_eq!(na.distance.to_bits(), nb.distance.to_bits());
+            }
+        }
+        // the op split is visible at the engine level
+        let out = e_quant.serve_batch_detailed(&queries).unwrap();
+        assert!(out.ops.compressed_ops > 0);
+        assert!(out.ops.rerank_ops > 0);
+        assert_eq!(out.ops.scan_ops, 0);
     }
 
     #[test]

@@ -65,6 +65,13 @@ pub struct SearchServer {
     dim: usize,
     /// Database size, for clamping per-request `top_k` at the boundary.
     n_vectors: usize,
+    /// Scan-representation footprint of the served index (STATS:
+    /// `index.bytes` / `index.compressed_bytes`).
+    footprint: crate::quant::IndexFootprint,
+    /// Candidate-scan mode of the served index (STATS: `quant.mode`).
+    quant_mode: &'static str,
+    /// Rerank budget of the served index (0 = all; STATS: `quant.rerank`).
+    quant_rerank: usize,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -76,6 +83,9 @@ impl SearchServer {
         config.validate()?;
         let dim = factory.index.dim();
         let n_vectors = factory.index.len();
+        let footprint = factory.index.footprint();
+        let quant_mode = factory.index.quant_mode();
+        let quant_rerank = factory.index.params().precision.rerank();
         let (req_tx, req_rx) = mpsc::sync_channel::<SearchRequest>(config.queue_depth);
         let (batch_tx, batch_rx) =
             mpsc::sync_channel::<Vec<SearchRequest>>(config.workers * 2);
@@ -128,6 +138,9 @@ impl SearchServer {
             next_id: std::sync::atomic::AtomicU64::new(0),
             dim,
             n_vectors,
+            footprint,
+            quant_mode,
+            quant_rerank,
             workers: Mutex::new(workers),
             batcher: Mutex::new(Some(batcher)),
         })
@@ -236,6 +249,17 @@ impl SearchServer {
             "scan_fusion".to_string(),
             Json::Num(m.scan.fusion_factor()),
         );
+        // compressed-scan vs rerank op split (0/0 on an exact index)
+        o.insert(
+            "compressed_ops".to_string(),
+            Json::Num(m.ops.compressed_ops as f64),
+        );
+        o.insert("rerank_ops".to_string(), Json::Num(m.ops.rerank_ops as f64));
+        o.insert("index".to_string(), footprint_json(&self.footprint));
+        o.insert(
+            "quant".to_string(),
+            quant_json(self.quant_mode, self.quant_rerank),
+        );
         o.insert("latency".to_string(), m.latency.to_json());
         o.insert("service".to_string(), m.service.to_json());
         Json::Obj(o)
@@ -272,6 +296,30 @@ impl Drop for SearchServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// The STATS `index` object: scan-representation footprint.  One shape
+/// shared by the single-node server and the cluster router (which sums
+/// its shards' footprints).
+pub fn footprint_json(fp: &crate::quant::IndexFootprint) -> crate::util::Json {
+    use crate::util::Json;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bytes".to_string(), Json::Num(fp.bytes as f64));
+    o.insert(
+        "compressed_bytes".to_string(),
+        Json::Num(fp.compressed_bytes as f64),
+    );
+    o.insert("compression_ratio".to_string(), Json::Num(fp.ratio()));
+    Json::Obj(o)
+}
+
+/// The STATS `quant` object: scan mode + rerank budget.
+pub fn quant_json(mode: &str, rerank: usize) -> crate::util::Json {
+    use crate::util::Json;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("mode".to_string(), Json::Str(mode.to_string()));
+    o.insert("rerank".to_string(), Json::Num(rerank as f64));
+    Json::Obj(o)
 }
 
 /// Execute one batch on an engine and complete every request.

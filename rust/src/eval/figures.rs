@@ -1017,6 +1017,7 @@ pub fn run_figure(id: &str, opts: &EvalOptions) -> Result<Figure> {
         "11" | "fig11" => fig11(opts),
         "12" | "fig12" => fig12(opts),
         "knn" | "eval_knn" => super::knn::run_knn_eval(opts),
+        "quant" | "eval_quant" => super::quant::run_quant_eval(opts),
         "ablation_rule" => Ok(ablation_rule(opts)),
         "ablation_corruption" => Ok(ablation_corruption(opts)),
         "ablation_hierarchical" => ablation_hierarchical(opts),
@@ -1029,8 +1030,8 @@ pub fn run_figure(id: &str, opts: &EvalOptions) -> Result<Figure> {
 /// All figure ids in order.
 pub const ALL_FIGURES: &[&str] = &[
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12",
-    "knn", "ablation_rule", "ablation_corruption", "ablation_hierarchical",
-    "ablation_higher_order", "ablation_pooling",
+    "knn", "quant", "ablation_rule", "ablation_corruption",
+    "ablation_hierarchical", "ablation_higher_order", "ablation_pooling",
 ];
 
 #[cfg(test)]

@@ -3,10 +3,12 @@
 
 pub mod figures;
 pub mod knn;
+pub mod quant;
 pub mod report;
 pub mod runner;
 
 pub use figures::{run_figure, EvalOptions, ALL_FIGURES};
 pub use knn::{knn_classify, run_knn_eval};
+pub use quant::run_quant_eval;
 pub use report::{Figure, Series};
 pub use runner::{class_selection_trials, PatternModel, TrialConfig};

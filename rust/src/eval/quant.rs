@@ -1,0 +1,175 @@
+//! The compressed-scan eval: recall@k and k-NN classification accuracy
+//! as a function of (scan precision, rerank budget) on the labeled
+//! MNIST-like workload — `eval --figure quant`.
+//!
+//! The x axis is the rerank budget `r` (the number of compressed-scan
+//! survivors re-scored exactly; the rightmost point is `r = n`, i.e.
+//! rerank everything, which is bitwise the exact scan).  One recall@k
+//! series per (precision, k ∈ {1, 10, 100}) plus one accuracy series
+//! per precision, all at a fixed poll depth — so the curves show what
+//! the *dimension* axis (quantization) costs on top of the paper's
+//! *cardinal* axis (class polling), and how `r` buys it back.
+//!
+//! Each series queries at its own `k` and sweeps `r` as *multiples of
+//! k* (`r ∈ {k, 4k, 16k, n}`): the scan clamps any budget below `k` up
+//! to `k` (you must rerank at least `k` to return `k`), so sweeping a
+//! fixed absolute `r` across different `k` would collapse the points
+//! below `k` into the same measurement.
+
+use crate::data::mnist_like;
+use crate::data::rng::Rng;
+use crate::error::Result;
+use crate::index::{AmIndex, IndexParams};
+use crate::metrics::{OpsCounter, Recall, RecallAtK};
+use crate::quant::ScanPrecision;
+use crate::search::Neighbor;
+use crate::util::par::parallel_map;
+
+use super::figures::EvalOptions;
+use super::knn::knn_classify;
+use super::report::{Figure, Series};
+
+/// The ks the quant eval sweeps (clamped to the database size).
+pub const QUANT_EVAL_KS: &[usize] = &[1, 10, 100];
+
+/// Run the quant eval figure (see the module docs).
+pub fn run_quant_eval(opts: &EvalOptions) -> Result<Figure> {
+    let n = ((2_000.0 * opts.scale).round() as usize).max(300);
+    let n_queries = ((200.0 * opts.scale).round() as usize).max(40);
+    let mut rng = Rng::new(opts.seed);
+    let lw = mnist_like::mnist_like_labeled_workload(n, n_queries, &mut rng);
+    let wl = &lw.workload;
+    let d = wl.base.dim();
+    let q = 20usize.min(n / 10).max(2);
+    // the interesting pruning regime: poll a fraction of the classes
+    let p = (q / 2).max(1);
+    let ks: Vec<usize> = QUANT_EVAL_KS.iter().map(|&k| k.min(n)).collect();
+    let k_max = *ks.iter().max().expect("non-empty");
+
+    // exact-scan reference index: its full-poll top-k IS the ground
+    // truth at this poll depth, and the `exact` series anchors the plot
+    let base_params = IndexParams { n_classes: q, ..Default::default() };
+    let exact = AmIndex::build(wl.base.clone(), base_params, &mut Rng::new(opts.seed ^ 0xA11C))?;
+    // recall is measured against the exact scan at the SAME poll depth:
+    // this isolates what quantization costs (the polling loss is the
+    // knn figure's subject, not this one's)
+    let truth: Vec<Vec<u32>> = parallel_map(wl.queries.len(), |qi| {
+        let mut ops = OpsCounter::new();
+        exact
+            .query_k(wl.queries.get(qi), p, k_max, &mut ops)
+            .neighbors
+            .into_iter()
+            .map(|nb| nb.id)
+            .collect()
+    });
+
+    // rerank sweep per k, in multiples of k so no point clamps into its
+    // neighbor; 0 = everything scanned (plotted at x = n)
+    let rerank_factors: &[usize] = &[1, 4, 16, 0];
+    let m = if d % 8 == 0 { 8 } else { 1 };
+    let precisions: Vec<ScanPrecision> = vec![
+        ScanPrecision::Sq8 { rerank: 0 },
+        ScanPrecision::Pq { m, bits: 4, rerank: 0 },
+    ];
+
+    let mut fig = Figure::new(
+        "quant",
+        format!(
+            "compressed scan eval (MNIST-like, n={n}, d={d}, q={q}, p={p}): \
+             recall@k vs exact scan and majority-vote accuracy, by \
+             (precision, rerank)"
+        ),
+        "rerank",
+        "recall_or_accuracy",
+    );
+    for precision in precisions {
+        // train codebooks once per precision; the rerank sweep only
+        // retargets the budget (set_scan_rerank, no retraining)
+        let mut index = AmIndex::build(
+            wl.base.clone(),
+            IndexParams { n_classes: q, precision, ..Default::default() },
+            &mut Rng::new(opts.seed ^ 0xA11C),
+        )?;
+        let mode = precision.mode();
+        for &k in &ks {
+            let mut recall_series = Series::new(format!("{mode}_recall@{k}"));
+            let mut acc_series =
+                (k == 10.min(n)).then(|| Series::new(format!("{mode}_accuracy@{k}")));
+            for &f in rerank_factors {
+                // each point queries at THIS k with budget r = f·k, so
+                // the scan's r≥k clamp never collapses two points; a
+                // budget already covering the database duplicates the
+                // final rerank-everything point and is skipped
+                let r = f * k;
+                if f != 0 && r >= n {
+                    continue;
+                }
+                index.set_scan_rerank(r);
+                let x_val = if r == 0 { n as f64 } else { r as f64 };
+                let answers: Vec<Vec<Neighbor>> =
+                    parallel_map(wl.queries.len(), |qi| {
+                        let mut ops = OpsCounter::new();
+                        index.query_k(wl.queries.get(qi), p, k, &mut ops).neighbors
+                    });
+                let mut recall = RecallAtK::new(k);
+                for (qi, got) in answers.iter().enumerate() {
+                    let top: Vec<u32> = got.iter().map(|nb| nb.id).collect();
+                    recall.record(&top, &truth[qi]);
+                }
+                recall_series.push(x_val, recall.value());
+                if let Some(acc) = acc_series.as_mut() {
+                    let mut accuracy = Recall::new();
+                    for (qi, got) in answers.iter().enumerate() {
+                        let predicted = knn_classify(got, &lw.base_labels);
+                        accuracy.record(predicted == Some(lw.query_labels[qi]));
+                    }
+                    acc.push(x_val, accuracy.value());
+                }
+            }
+            fig.series.push(recall_series);
+            if let Some(acc) = acc_series {
+                fig.series.push(acc);
+            }
+        }
+    }
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_eval_runs_small_and_behaves() {
+        let fig = run_quant_eval(&EvalOptions { scale: 0.05, seed: 13 }).unwrap();
+        // per precision: one recall series per k + one accuracy series
+        assert_eq!(fig.series.len(), 2 * (QUANT_EVAL_KS.len() + 1));
+        for s in &fig.series {
+            assert!(!s.points.is_empty(), "{} empty", s.label);
+            for &(x, y, _) in &s.points {
+                assert!(x >= 1.0, "{}: rerank x = {x}", s.label);
+                assert!((0.0..=1.0).contains(&y), "{}: y={y}", s.label);
+            }
+        }
+        for s in fig.series.iter().filter(|s| s.label.contains("recall@")) {
+            // recall is monotone in the rerank budget (nested survivor
+            // sets) ...
+            for w in s.points.windows(2) {
+                assert!(
+                    w[1].1 >= w[0].1 - 1e-9,
+                    "{} not monotone: {:?}",
+                    s.label,
+                    s.points
+                );
+            }
+            // ... and rerank-everything IS the exact scan at the same
+            // poll depth: recall vs that reference must be exactly 1
+            let (_, y, _) = *s.points.last().expect("has full-rerank point");
+            assert!(
+                (y - 1.0).abs() < 1e-9,
+                "{} at full rerank = {y}, want 1.0",
+                s.label
+            );
+        }
+    }
+}

@@ -16,6 +16,7 @@ use crate::error::Result;
 use crate::memory::{score as mem_score, MemoryBank};
 use crate::metrics::OpsCounter;
 use crate::partition::{greedy_alloc, random_alloc, roundrobin, Allocation, Partition};
+use crate::quant::{effective_rerank, rerank::rerank_exact, IndexFootprint, QuantIndex};
 use crate::search::{distance_pruned, invert_polled, top_p_largest, Neighbor, TopK};
 use crate::util::par::parallel_map;
 
@@ -65,6 +66,11 @@ pub struct AmIndex {
     /// True when every stored vector is binary 0/1 (enables the paper's
     /// c²-cost sparse scoring).
     binary_sparse: bool,
+    /// Compressed scan companion (codes + quantizer) when
+    /// `params.precision != Exact`; the candidate scan then runs
+    /// two-stage: approximate over codes, exact rerank of the best
+    /// `rerank` survivors.
+    quant: Option<QuantIndex>,
 }
 
 impl AmIndex {
@@ -94,10 +100,15 @@ impl AmIndex {
             member_bufs.iter().map(|d| d.as_flat()).collect();
         let bank = MemoryBank::build(data.dim(), &member_refs, params.rule)?;
         let binary_sparse = data.is_binary_sparse();
-        Ok(AmIndex { params, partition, bank, data, binary_sparse })
+        let quant = QuantIndex::train(&data, params.precision)?;
+        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant })
     }
 
     /// Reassemble an index from persisted parts (see [`super::persist`]).
+    /// When the params request a quantized scan, the quantizer is
+    /// retrained deterministically over `data` (identical to the one a
+    /// fresh build would produce); [`Self::from_parts_with_quant`] skips
+    /// the retraining by injecting persisted codes.
     pub fn from_parts(
         params: IndexParams,
         assignments: Vec<u32>,
@@ -105,7 +116,32 @@ impl AmIndex {
         counts: Vec<usize>,
         data: Dataset,
     ) -> Result<Self> {
+        let quant = QuantIndex::train(&data, params.precision)?;
+        Self::from_parts_with_quant(params, assignments, stacked, counts, data, quant)
+    }
+
+    /// [`Self::from_parts`] with a prebuilt compressed companion (the
+    /// persisted-index load path: codebooks and codes come from the v4
+    /// artifact instead of being retrained).
+    pub fn from_parts_with_quant(
+        params: IndexParams,
+        assignments: Vec<u32>,
+        stacked: Vec<f32>,
+        counts: Vec<usize>,
+        data: Dataset,
+        quant: Option<QuantIndex>,
+    ) -> Result<Self> {
         params.validate(data.len())?;
+        params.precision.validate_for_dim(data.dim())?;
+        if let Some(q) = &quant {
+            if q.len() != data.len() {
+                return Err(crate::error::Error::Data(format!(
+                    "{} quant code rows for {} vectors",
+                    q.len(),
+                    data.len()
+                )));
+            }
+        }
         let partition = Partition::from_assignments(assignments, params.n_classes)?;
         partition.validate()?;
         let bank = crate::memory::MemoryBank::from_parts(
@@ -115,7 +151,7 @@ impl AmIndex {
             params.rule,
         )?;
         let binary_sparse = data.is_binary_sparse();
-        Ok(AmIndex { params, partition, bank, data, binary_sparse })
+        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant })
     }
 
     /// Online insert: add a vector to the index without rebuilding.
@@ -159,6 +195,12 @@ impl AmIndex {
         self.bank.add_to_class(class, x);
         let id = self.partition.push(class as u32)?;
         self.data.push(x)?;
+        if let Some(q) = &mut self.quant {
+            // encode with the existing quantizer (codebooks are not
+            // retrained online; out-of-range values clamp, and the
+            // exact rerank stage keeps answers correct regardless)
+            q.push(x);
+        }
         Ok(id)
     }
 
@@ -200,6 +242,40 @@ impl AmIndex {
     /// True when the sparse (support-based, c²-cost) scoring path is used.
     pub fn uses_sparse_scoring(&self) -> bool {
         self.binary_sparse
+    }
+
+    /// The compressed scan companion, when the index is quantized.
+    pub fn quant(&self) -> Option<&QuantIndex> {
+        self.quant.as_ref()
+    }
+
+    /// Mode label of the candidate scan ("exact" | "sq8" | "pq") — the
+    /// `quant.mode` STATS field.
+    pub fn quant_mode(&self) -> &'static str {
+        self.quant.as_ref().map_or("exact", |q| q.mode())
+    }
+
+    /// Change the rerank budget without retraining codebooks (evals and
+    /// benches sweep this knob).  No-op on an exact index.
+    pub fn set_scan_rerank(&mut self, rerank: usize) {
+        self.params.precision = self.params.precision.with_rerank(rerank);
+        if let Some(q) = &mut self.quant {
+            q.set_rerank(rerank);
+        }
+    }
+
+    /// Memory footprint of the candidate-scan representation: f32
+    /// member-matrix bytes versus what the scan keeps resident (codes +
+    /// codebooks for a quantized index).
+    pub fn footprint(&self) -> IndexFootprint {
+        let bytes = (self.len() * self.dim() * 4) as u64;
+        IndexFootprint {
+            bytes,
+            compressed_bytes: self
+                .quant
+                .as_ref()
+                .map_or(bytes, |q| q.compressed_bytes()),
+        }
     }
 
     /// Score every class against `x` (native path), with cost accounting.
@@ -295,6 +371,9 @@ impl AmIndex {
         let polled: Vec<Vec<u32>> = (0..b)
             .map(|bi| top_p_largest(&scores[bi * q..(bi + 1) * q], ps[bi]))
             .collect();
+        if let Some(quant) = &self.quant {
+            return self.finish_batch_quant(quant, queries, polled, ks, ops);
+        }
         // invert (query -> polled classes) into (class -> querying
         // batch members); only classes someone polled get scanned
         let by_class = invert_polled(&polled, q);
@@ -364,9 +443,105 @@ impl AmIndex {
         out
     }
 
+    /// The class-major compressed scan of a whole batch: per-query ADC
+    /// tables / SQ8 residuals are built **once per batch**
+    /// ([`QuantIndex::prepare`]) and shared across every class a query
+    /// polled; each polled class's *code* matrix is streamed exactly
+    /// once for the batch (the same fusion as the exact class-major
+    /// scan, over 4–16× fewer bytes), with per-(class, query)
+    /// approximate `TopK(r)` accumulators merged per query and
+    /// exact-reranked.
+    ///
+    /// Bitwise-identical to B independent [`Self::finish_query`] calls
+    /// on the same quantized index: the approximate keys are computed by
+    /// the same kernel in the same per-candidate term order, `TopK`
+    /// selection and merging are invariant to candidate order under the
+    /// total `(key, id)` order, so the survivor sets — and therefore the
+    /// exact-reranked results and op counts — match exactly.
+    fn finish_batch_quant(
+        &self,
+        quant: &QuantIndex,
+        queries: &[&[f32]],
+        polled: Vec<Vec<u32>>,
+        ks: &[usize],
+        ops: &mut [OpsCounter],
+    ) -> Vec<QueryResult> {
+        let q = self.params.n_classes;
+        let b = queries.len();
+        let by_class = invert_polled(&polled, q);
+        let active: Vec<usize> =
+            (0..q).filter(|&ci| !by_class[ci].is_empty()).collect();
+        // per-query scan state, built once per batch: the LUT (ADC
+        // table / residual), the candidate count, the rerank heap size
+        let luts: Vec<crate::quant::QueryLut<'_>> =
+            queries.iter().map(|x| quant.prepare(x)).collect();
+        let candidates: Vec<usize> = polled
+            .iter()
+            .map(|pol| {
+                pol.iter()
+                    .map(|&ci| self.partition.members(ci as usize).len())
+                    .sum()
+            })
+            .collect();
+        let r_effs: Vec<usize> = (0..b)
+            .map(|bi| effective_rerank(quant.rerank(), ks[bi].max(1), candidates[bi]))
+            .collect();
+        // stage 1, class-major: one pass over each polled class's code
+        // rows, scoring every querying batch member via its shared LUT
+        let scan_class = |ci: usize| -> Vec<(u32, TopK)> {
+            let queriers = &by_class[ci];
+            let mut accs: Vec<(u32, TopK)> = queriers
+                .iter()
+                .map(|&bi| (bi, TopK::new(r_effs[bi as usize])))
+                .collect();
+            for &vid in self.partition.members(ci) {
+                let code = quant.code(vid as usize);
+                for (bi, acc) in accs.iter_mut() {
+                    if let Some(ad) =
+                        luts[*bi as usize].distance_pruned(code, acc.bound())
+                    {
+                        acc.push(ad, vid);
+                    }
+                }
+            }
+            accs
+        };
+        let class_accs: Vec<Vec<(u32, TopK)>> = if b <= 1 || active.len() <= 1 {
+            active.iter().map(|&ci| scan_class(ci)).collect()
+        } else {
+            parallel_map(active.len(), |i| scan_class(active[i]))
+        };
+        let mut survivors: Vec<TopK> =
+            r_effs.iter().map(|&r| TopK::new(r)).collect();
+        for accs in class_accs {
+            for (bi, acc) in accs {
+                survivors[bi as usize].merge(acc);
+            }
+        }
+        // stage 2: exact rerank per query
+        let mut out = Vec::with_capacity(b);
+        for ((bi, pol), approx) in polled.into_iter().enumerate().zip(survivors) {
+            let (neighbors, reranked) = rerank_exact(
+                self.params.metric,
+                queries[bi],
+                &self.data,
+                approx.into_sorted(),
+                ks[bi].max(1),
+            );
+            ops[bi].compressed_ops +=
+                (candidates[bi] * quant.approx_unit_cost()) as u64;
+            ops[bi].rerank_ops += (reranked * self.dim()) as u64;
+            ops[bi].searches += 1;
+            out.push(QueryResult { neighbors, polled: pol, candidates: candidates[bi] });
+        }
+        out
+    }
+
     /// Exhaustive top-`k` scan over the members of the given classes: a
     /// single fused `TopK(k)` accumulator with threshold-based early
     /// abandoning (bitwise-identical distances for every kept candidate).
+    /// On a quantized index this runs the two-stage compressed scan
+    /// instead ([`Self::scan_classes_quant`]).
     fn scan_classes(
         &self,
         x: &[f32],
@@ -374,6 +549,9 @@ impl AmIndex {
         k: usize,
         ops: &mut OpsCounter,
     ) -> (Vec<Neighbor>, usize) {
+        if let Some(quant) = &self.quant {
+            return self.scan_classes_quant(quant, x, classes, k, ops);
+        }
         let metric = self.params.metric;
         let mut acc = TopK::new(k.max(1));
         let mut candidates = 0usize;
@@ -395,6 +573,50 @@ impl AmIndex {
         }
         ops.scan_ops += (candidates * per_candidate) as u64;
         (acc.into_neighbors(), candidates)
+    }
+
+    /// The two-stage compressed scan of a quantized index: rank every
+    /// member of the polled classes by approximate compressed distance
+    /// (SQ8 integer kernel / PQ ADC lookups, early-abandoned against the
+    /// current `r`-th best approximate key), then exact-rerank the best
+    /// `r` survivors into the final top-`k`
+    /// ([`crate::quant::rerank::rerank_exact`]).  With `rerank = 0`
+    /// every scanned candidate survives, so the result is
+    /// bitwise-identical to the exact scan.
+    fn scan_classes_quant(
+        &self,
+        quant: &QuantIndex,
+        x: &[f32],
+        classes: &[u32],
+        k: usize,
+        ops: &mut OpsCounter,
+    ) -> (Vec<Neighbor>, usize) {
+        let lut = quant.prepare(x);
+        let candidates: usize = classes
+            .iter()
+            .map(|&ci| self.partition.members(ci as usize).len())
+            .sum();
+        let r = effective_rerank(quant.rerank(), k.max(1), candidates);
+        let mut approx = TopK::new(r);
+        for &ci in classes {
+            for &vid in self.partition.members(ci as usize) {
+                if let Some(ad) =
+                    lut.distance_pruned(quant.code(vid as usize), approx.bound())
+                {
+                    approx.push(ad, vid);
+                }
+            }
+        }
+        ops.compressed_ops += (candidates * quant.approx_unit_cost()) as u64;
+        let (neighbors, reranked) = rerank_exact(
+            self.params.metric,
+            x,
+            &self.data,
+            approx.into_sorted(),
+            k.max(1),
+        );
+        ops.rerank_ops += (reranked * self.dim()) as u64;
+        (neighbors, candidates)
     }
 
     /// Full 1-NN query: score, poll top-`p`, scan, with cost accounting.
@@ -881,6 +1103,175 @@ mod tests {
             assert_eq!(results[bi], seq);
             assert_eq!(batch_ops[bi], o);
         }
+    }
+
+    fn quant_pair(
+        seed: u64,
+        n: usize,
+        q: usize,
+        precision: crate::quant::ScanPrecision,
+    ) -> (AmIndex, AmIndex, crate::data::Workload) {
+        // identical build rngs -> identical partitions, so the scan
+        // precision is the only difference between the two indices
+        let mut rng = Rng::new(seed);
+        let wl = synthetic::dense_workload(64, n, 30, QueryModel::Exact, &mut rng);
+        let exact = AmIndex::build(
+            wl.base.clone(),
+            IndexParams { n_classes: q, ..Default::default() },
+            &mut Rng::new(seed ^ 0xF00D),
+        )
+        .unwrap();
+        let quantized = AmIndex::build(
+            wl.base.clone(),
+            IndexParams { n_classes: q, precision, ..Default::default() },
+            &mut Rng::new(seed ^ 0xF00D),
+        )
+        .unwrap();
+        (exact, quantized, wl)
+    }
+
+    #[test]
+    fn quant_full_rerank_matches_exact_bitwise() {
+        use crate::quant::ScanPrecision;
+        for precision in [
+            ScanPrecision::Sq8 { rerank: 0 },
+            ScanPrecision::Pq { m: 8, bits: 4, rerank: 0 },
+        ] {
+            let (exact, quantized, wl) = quant_pair(40, 256, 8, precision);
+            assert!(quantized.quant().is_some());
+            let mut ops_e = OpsCounter::new();
+            let mut ops_q = OpsCounter::new();
+            for qi in 0..wl.queries.len() {
+                let x = wl.queries.get(qi);
+                for (p, k) in [(1usize, 1usize), (3, 5), (8, 300)] {
+                    let a = exact.query_k(x, p, k, &mut ops_e);
+                    let b = quantized.query_k(x, p, k, &mut ops_q);
+                    assert_eq!(a.polled, b.polled, "{precision} q{qi} p{p} k{k}");
+                    assert_eq!(a.candidates, b.candidates);
+                    assert_eq!(
+                        a.neighbors.len(),
+                        b.neighbors.len(),
+                        "{precision} q{qi} p{p} k{k}"
+                    );
+                    for (na, nb) in a.neighbors.iter().zip(&b.neighbors) {
+                        assert_eq!(na.id, nb.id, "{precision} q{qi} p{p} k{k}");
+                        assert_eq!(
+                            na.distance.to_bits(),
+                            nb.distance.to_bits(),
+                            "{precision} q{qi} p{p} k{k}"
+                        );
+                    }
+                }
+            }
+            // the exact path spent scan_ops; the quantized path split
+            // its spend into compressed + rerank and spent no scan_ops
+            assert!(ops_e.scan_ops > 0);
+            assert_eq!(ops_e.compressed_ops, 0);
+            assert_eq!(ops_q.scan_ops, 0);
+            assert!(ops_q.compressed_ops > 0);
+            assert!(ops_q.rerank_ops > 0);
+        }
+    }
+
+    #[test]
+    fn quant_finish_batch_matches_finish_query() {
+        use crate::quant::ScanPrecision;
+        let (_, idx, wl) =
+            quant_pair(41, 256, 8, ScanPrecision::Sq8 { rerank: 7 });
+        let b = 6;
+        let queries: Vec<&[f32]> = (0..b).map(|i| wl.queries.get(i)).collect();
+        let ps: Vec<usize> = vec![1, 2, 3, 8, 8, 5];
+        let ks: Vec<usize> = vec![1, 4, 1, 33, 300, 7];
+        let mut flat_scores = Vec::new();
+        let mut seq_results = Vec::new();
+        let mut seq_ops = Vec::new();
+        for (bi, x) in queries.iter().enumerate() {
+            let mut throwaway = OpsCounter::new();
+            let scores = idx.score_classes(x, &mut throwaway);
+            let mut o = OpsCounter::new();
+            seq_results.push(idx.finish_query(x, &scores, ps[bi], ks[bi], &mut o));
+            seq_ops.push(o);
+            flat_scores.extend_from_slice(&scores);
+        }
+        let mut batch_ops = vec![OpsCounter::new(); b];
+        let batch_results =
+            idx.finish_batch(&queries, &flat_scores, &ps, &ks, &mut batch_ops);
+        assert_eq!(batch_results, seq_results);
+        assert_eq!(batch_ops, seq_ops);
+    }
+
+    #[test]
+    fn quant_small_rerank_still_finds_stored_copy_at_full_poll() {
+        use crate::quant::ScanPrecision;
+        // rerank = 1 is the harshest setting: the exact stage only sees
+        // the single best compressed candidate.  Queries are exact
+        // copies of stored vectors, whose compressed distance is the
+        // (near-)minimum, so even r = 1 finds them at full poll.
+        let (_, idx, wl) = quant_pair(42, 128, 4, ScanPrecision::Sq8 { rerank: 1 });
+        let mut ops = OpsCounter::new();
+        let mut hits = 0;
+        for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+            let r = idx.query(wl.queries.get(qi), 4, &mut ops);
+            assert_eq!(r.neighbors.len(), 1, "rerank=1 returns one candidate");
+            if r.id() == gt {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 28, "hits={hits}/30");
+    }
+
+    #[test]
+    fn quant_insert_then_query_finds_new_vector() {
+        use crate::quant::ScanPrecision;
+        let (_, mut idx, _) = quant_pair(43, 128, 4, ScanPrecision::Sq8 { rerank: 0 });
+        let mut rng = Rng::new(99);
+        let v: Vec<f32> =
+            (0..64).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let id = idx.insert(&v).unwrap();
+        assert_eq!(idx.quant().unwrap().len(), idx.len());
+        let mut ops = OpsCounter::new();
+        let r = idx.query(&v, 4, &mut ops);
+        assert_eq!(r.id(), id);
+        assert_eq!(r.distance(), 0.0);
+    }
+
+    #[test]
+    fn quant_footprint_reports_compression() {
+        use crate::quant::ScanPrecision;
+        let (exact, sq8, _) = quant_pair(44, 256, 8, ScanPrecision::Sq8 { rerank: 8 });
+        let fe = exact.footprint();
+        assert_eq!(fe.bytes, 256 * 64 * 4);
+        assert_eq!(fe.compressed_bytes, fe.bytes);
+        assert_eq!(exact.quant_mode(), "exact");
+        let fq = sq8.footprint();
+        assert_eq!(fq.bytes, fe.bytes);
+        assert!(
+            fq.ratio() <= 0.35,
+            "sq8 must compress below 0.35x, got {}",
+            fq.ratio()
+        );
+        assert_eq!(sq8.quant_mode(), "sq8");
+        let (_, pq, _) = quant_pair(
+            44,
+            256,
+            8,
+            ScanPrecision::Pq { m: 8, bits: 8, rerank: 8 },
+        );
+        assert!(
+            pq.footprint().compressed_bytes < fq.compressed_bytes,
+            "pq ({}) must be smaller than sq8 ({})",
+            pq.footprint().compressed_bytes,
+            fq.compressed_bytes
+        );
+    }
+
+    #[test]
+    fn set_scan_rerank_updates_params_and_codes() {
+        use crate::quant::ScanPrecision;
+        let (_, mut idx, _) = quant_pair(45, 128, 4, ScanPrecision::Sq8 { rerank: 4 });
+        idx.set_scan_rerank(16);
+        assert_eq!(idx.params().precision, ScanPrecision::Sq8 { rerank: 16 });
+        assert_eq!(idx.quant().unwrap().rerank(), 16);
     }
 
     #[test]

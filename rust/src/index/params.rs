@@ -3,6 +3,7 @@
 use crate::error::{Error, Result};
 use crate::memory::StorageRule;
 use crate::partition::Allocation;
+use crate::quant::ScanPrecision;
 use crate::search::Metric;
 
 /// Parameters of an associative-memory ANN index.
@@ -26,6 +27,9 @@ pub struct IndexParams {
     /// Cap on class size for greedy allocation, as a multiple of the
     /// mean size `n/q` (None = unbounded).
     pub greedy_cap_factor: Option<f64>,
+    /// Candidate-scan precision: exact f32, or a compressed scan
+    /// (SQ8 / PQ) with exact rerank (see [`crate::quant`]).
+    pub precision: ScanPrecision,
 }
 
 impl Default for IndexParams {
@@ -38,6 +42,7 @@ impl Default for IndexParams {
             allocation: Allocation::Random,
             metric: Metric::SqL2,
             greedy_cap_factor: None,
+            precision: ScanPrecision::Exact,
         }
     }
 }
@@ -70,6 +75,14 @@ impl IndexParams {
                 )));
             }
         }
+        self.precision.validate_params()?;
+        if self.precision != ScanPrecision::Exact && self.metric != Metric::SqL2 {
+            return Err(Error::Config(format!(
+                "quantized scan precision {} requires the sq_l2 metric \
+                 (the compressed kernels approximate squared L2)",
+                self.precision
+            )));
+        }
         Ok(())
     }
 }
@@ -99,6 +112,26 @@ mod tests {
         p.greedy_cap_factor = None;
         p.top_k = 0;
         assert!(p.validate(10).is_err());
+    }
+
+    #[test]
+    fn quantized_precision_requires_sq_l2() {
+        let p = IndexParams {
+            precision: ScanPrecision::Sq8 { rerank: 8 },
+            ..Default::default()
+        };
+        p.validate(1000).unwrap();
+        let p = IndexParams {
+            precision: ScanPrecision::Sq8 { rerank: 8 },
+            metric: Metric::NegDot,
+            ..Default::default()
+        };
+        assert!(p.validate(1000).is_err());
+        let p = IndexParams {
+            precision: ScanPrecision::Pq { m: 4, bits: 9, rerank: 0 },
+            ..Default::default()
+        };
+        assert!(p.validate(1000).is_err(), "bits out of range");
     }
 
     #[test]

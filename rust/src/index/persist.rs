@@ -13,7 +13,7 @@
 //!
 //! ```text
 //! magic    8B   "AMSEARCH"
-//! version  u32  (currently 2)
+//! version  u32  (currently 4; v3 is the shard-manifest format)
 //! dim      u32
 //! n        u64  number of vectors
 //! q        u32  number of classes
@@ -23,12 +23,23 @@
 //! alloc    u8   0 = random, 1 = greedy, 2 = round_robin
 //! metric   u8   0 = sq_l2, 1 = neg_dot, 2 = hamming
 //! cap      f64  greedy cap factor (NaN = none)
+//! quant    u8   (v4+) 0 = exact, 1 = sq8, 2 = pq
+//!   sq8:   rerank u32
+//!   pq:    m u32, bits u32, rerank u32, n_centroids u32
 //! assignments  n * u32
 //! bank         q * dim * dim * f32
 //! counts       q * u64
 //! data         n * dim * f32
+//! quant payload (v4+, per the quant byte):
+//!   sq8:   min dim * f32, step dim * f32, codes n * dim * u8
+//!   pq:    codebooks m * n_centroids * (dim/m) * f32, codes n * m * u8
 //! checksum u64  FNV-1a of everything before it
 //! ```
+//!
+//! The quant section makes a compressed index a first-class artifact:
+//! codebooks and codes are persisted (not retrained on load), so a
+//! served index is byte-for-byte the one that was built.  v1/v2 files
+//! keep loading unchanged (no quant section, `ScanPrecision::Exact`).
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -37,17 +48,18 @@ use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::memory::StorageRule;
 use crate::partition::Allocation;
+use crate::quant::{PqQuantizer, QuantIndex, Quantizer, ScanPrecision, Sq8Quantizer};
 use crate::search::Metric;
 
 use super::am_index::AmIndex;
 use super::params::IndexParams;
 
 const MAGIC: &[u8; 8] = b"AMSEARCH";
-const VERSION: u32 = 2;
+const VERSION: u32 = 4;
 
-/// Version stamp of the shard manifest format (the next member of the
+/// Version stamp of the shard manifest format (a member of the shared
 /// index-format family: index v1 = 1-NN, v2 = per-request k, v3 = the
-/// cluster plan / routing table).
+/// cluster plan / routing table, v4 = quantized index artifacts).
 pub(crate) const SHARD_MANIFEST_VERSION: u32 = 3;
 
 /// Incremental FNV-1a 64 (integrity checksum; not cryptographic).
@@ -118,6 +130,21 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
         Metric::Hamming => 2,
     }])?;
     w.put(&p.greedy_cap_factor.unwrap_or(f64::NAN).to_le_bytes())?;
+    // v4 quant header: the precision the artifact's payload encodes
+    match index.quant().map(|q| q.quantizer()) {
+        None => w.put(&[0u8])?,
+        Some(Quantizer::Sq8(_)) => {
+            w.put(&[1u8])?;
+            w.put(&(index.quant().expect("checked").rerank() as u32).to_le_bytes())?;
+        }
+        Some(Quantizer::Pq(pq)) => {
+            w.put(&[2u8])?;
+            w.put(&(pq.m() as u32).to_le_bytes())?;
+            w.put(&(pq.bits() as u32).to_le_bytes())?;
+            w.put(&(index.quant().expect("checked").rerank() as u32).to_le_bytes())?;
+            w.put(&(pq.n_centroids() as u32).to_le_bytes())?;
+        }
+    }
 
     for v in 0..index.len() {
         w.put(&index.partition().class_of(v).to_le_bytes())?;
@@ -130,6 +157,25 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
     }
     for &x in index.data().as_flat() {
         w.put(&x.to_le_bytes())?;
+    }
+    // v4 quant payload: codebooks/tables then the code rows
+    if let Some(quant) = index.quant() {
+        match quant.quantizer() {
+            Quantizer::Sq8(sq) => {
+                for &x in sq.min() {
+                    w.put(&x.to_le_bytes())?;
+                }
+                for &x in sq.step() {
+                    w.put(&x.to_le_bytes())?;
+                }
+            }
+            Quantizer::Pq(pq) => {
+                for &x in pq.codebooks() {
+                    w.put(&x.to_le_bytes())?;
+                }
+            }
+        }
+        w.put(quant.codes())?;
     }
     w.finish()
 }
@@ -203,7 +249,9 @@ pub fn load(path: &Path) -> Result<AmIndex> {
         return Err(Error::Data("not an amsearch index file".into()));
     }
     let version = r.u32()?;
-    if version == 0 || version > VERSION {
+    // v3 of the format family is the shard manifest (different magic,
+    // never a valid index version); everything else up to VERSION loads
+    if version == 0 || version == SHARD_MANIFEST_VERSION || version > VERSION {
         return Err(Error::Data(format!("unsupported index version {version}")));
     }
     let dim = r.u32()? as usize;
@@ -230,6 +278,29 @@ pub fn load(path: &Path) -> Result<AmIndex> {
         x => return Err(Error::Data(format!("bad metric byte {x}"))),
     };
     let cap = r.f64()?;
+    // v4 quant header (absent before v4: those files are exact)
+    let quant_header = if version >= 4 {
+        match r.u8()? {
+            0 => QuantHeader::Exact,
+            1 => QuantHeader::Sq8 { rerank: r.u32()? as usize },
+            2 => {
+                let m = r.u32()? as usize;
+                let bits = r.u32()? as usize;
+                let rerank = r.u32()? as usize;
+                let n_centroids = r.u32()? as usize;
+                QuantHeader::Pq { m, bits, rerank, n_centroids }
+            }
+            x => return Err(Error::Data(format!("bad quant byte {x}"))),
+        }
+    } else {
+        QuantHeader::Exact
+    };
+    let precision = match quant_header {
+        QuantHeader::Exact => ScanPrecision::Exact,
+        QuantHeader::Sq8 { rerank } => ScanPrecision::Sq8 { rerank },
+        QuantHeader::Pq { m, bits, rerank, .. } => ScanPrecision::Pq { m, bits, rerank },
+    };
+    precision.validate_for_dim(dim)?;
     let params = IndexParams {
         n_classes: q,
         top_p,
@@ -238,6 +309,7 @@ pub fn load(path: &Path) -> Result<AmIndex> {
         allocation,
         metric,
         greedy_cap_factor: if cap.is_nan() { None } else { Some(cap) },
+        precision,
     };
 
     let mut assignments = Vec::with_capacity(n);
@@ -250,10 +322,49 @@ pub fn load(path: &Path) -> Result<AmIndex> {
         counts.push(r.u64()? as usize);
     }
     let flat = r.f32_vec(n * dim)?;
+    // v4 quant payload: quantizer tables, then one code row per vector
+    let quant = match quant_header {
+        QuantHeader::Exact => None,
+        QuantHeader::Sq8 { rerank } => {
+            let min = r.f32_vec(dim)?;
+            let step = r.f32_vec(dim)?;
+            let mut codes = vec![0u8; n * dim];
+            r.take(&mut codes)?;
+            Some(QuantIndex::from_parts(
+                Quantizer::Sq8(Sq8Quantizer::from_parts(min, step)),
+                codes,
+                rerank,
+            )?)
+        }
+        QuantHeader::Pq { m, bits, rerank, n_centroids } => {
+            if n_centroids == 0 || n_centroids > 256 || m == 0 || m > dim {
+                return Err(Error::Data(format!(
+                    "implausible pq header: m={m} n_centroids={n_centroids}"
+                )));
+            }
+            let codebooks = r.f32_vec(m * n_centroids * (dim / m))?;
+            let mut codes = vec![0u8; n * m];
+            r.take(&mut codes)?;
+            Some(QuantIndex::from_parts(
+                Quantizer::Pq(PqQuantizer::from_parts(dim, m, bits, n_centroids, codebooks)?),
+                codes,
+                rerank,
+            )?)
+        }
+    };
     r.verify_checksum()?;
 
     let data = Dataset::from_flat(dim, flat)?;
-    AmIndex::from_parts(params, assignments, stacked, counts, data)
+    AmIndex::from_parts_with_quant(params, assignments, stacked, counts, data, quant)
+}
+
+/// Parsed v4 quant header (precision + the PQ codebook size the payload
+/// was written with).
+#[derive(Debug, Clone, Copy)]
+enum QuantHeader {
+    Exact,
+    Sq8 { rerank: usize },
+    Pq { m: usize, bits: usize, rerank: usize, n_centroids: usize },
 }
 
 #[cfg(test)]
@@ -293,6 +404,120 @@ mod tests {
             let b = loaded.query(x, 2, &mut ops);
             assert_eq!(a, b, "query {qi}");
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn build_quant(seed: u64, precision: ScanPrecision) -> (AmIndex, crate::data::Workload) {
+        let mut rng = Rng::new(seed);
+        let wl = synthetic::dense_workload(16, 120, 20, QueryModel::Exact, &mut rng);
+        let params = IndexParams {
+            n_classes: 6,
+            top_p: 2,
+            top_k: 3,
+            precision,
+            ..Default::default()
+        };
+        (AmIndex::build(wl.base.clone(), params, &mut rng).unwrap(), wl)
+    }
+
+    #[test]
+    fn quantized_roundtrip_preserves_queries_and_codes() {
+        for precision in [
+            ScanPrecision::Sq8 { rerank: 5 },
+            ScanPrecision::Pq { m: 4, bits: 4, rerank: 0 },
+        ] {
+            let (index, wl) = build_quant(10, precision);
+            let path = tmp(&format!("rt_{}.amidx", precision.mode()));
+            save(&index, &path).unwrap();
+            let loaded = load(&path).unwrap();
+            assert_eq!(loaded.params().precision, precision);
+            // codes and quantizer survive byte-for-byte — no retraining
+            assert_eq!(loaded.quant(), index.quant());
+            assert_eq!(loaded.footprint(), index.footprint());
+            let mut ops = OpsCounter::new();
+            for qi in 0..wl.queries.len() {
+                let x = wl.queries.get(qi);
+                let a = index.query_k(x, 3, 4, &mut ops);
+                let b = loaded.query_k(x, 3, 4, &mut ops);
+                assert_eq!(a, b, "{precision} query {qi}");
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn quantized_artifact_is_smaller_than_exact_in_the_data_section() {
+        // the artifact keeps the f32 vectors for the exact rerank, so
+        // the *file* grows by the code bytes — but the scan-resident
+        // representation it reports is what matters for serving memory
+        let (index, _) = build_quant(11, ScanPrecision::Sq8 { rerank: 4 });
+        let fp = index.footprint();
+        assert!(
+            (fp.compressed_bytes as f64) <= 0.35 * fp.bytes as f64,
+            "sq8 compressed {} vs f32 {}",
+            fp.compressed_bytes,
+            fp.bytes
+        );
+    }
+
+    /// Write `index` in the historical v2 layout (pre-quant): the
+    /// backward-compat fixture for `v2_artifacts_still_load`.
+    fn save_v2(index: &AmIndex, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)?;
+        let mut w = CountingWriter::new(BufWriter::new(file));
+        let p = index.params();
+        w.put(MAGIC)?;
+        w.put(&2u32.to_le_bytes())?;
+        w.put(&(index.dim() as u32).to_le_bytes())?;
+        w.put(&(index.len() as u64).to_le_bytes())?;
+        w.put(&(p.n_classes as u32).to_le_bytes())?;
+        w.put(&(p.top_p as u32).to_le_bytes())?;
+        w.put(&(p.top_k as u32).to_le_bytes())?;
+        w.put(&[0u8])?; // sum rule
+        w.put(&[0u8])?; // random allocation
+        w.put(&[0u8])?; // sq_l2
+        w.put(&f64::NAN.to_le_bytes())?;
+        for v in 0..index.len() {
+            w.put(&index.partition().class_of(v).to_le_bytes())?;
+        }
+        for &x in index.bank().stacked() {
+            w.put(&x.to_le_bytes())?;
+        }
+        for i in 0..p.n_classes {
+            w.put(&(index.bank().count(i) as u64).to_le_bytes())?;
+        }
+        for &x in index.data().as_flat() {
+            w.put(&x.to_le_bytes())?;
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn v2_artifacts_still_load() {
+        let (index, wl) = build(7);
+        let path = tmp("v2.amidx");
+        save_v2(&index, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.params().precision, ScanPrecision::Exact);
+        assert!(loaded.quant().is_none());
+        let mut ops = OpsCounter::new();
+        for qi in 0..wl.queries.len() {
+            let x = wl.queries.get(qi);
+            assert_eq!(index.query(x, 2, &mut ops), loaded.query(x, 2, &mut ops));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_3_is_reserved_for_shard_manifests() {
+        let (index, _) = build(8);
+        let path = tmp("v3.amidx");
+        save(&index, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("unsupported index version 3"));
         std::fs::remove_file(&path).ok();
     }
 

@@ -24,8 +24,11 @@
 //!   (binary wire protocol, pipelined client library, closed-loop load
 //!   generator), a sharded cluster tier (shard planner, scatter-gather
 //!   router with AM-based shard pruning, single-binary cluster
-//!   harness), the paper's complexity accounting, and the evaluation
-//!   harness that regenerates every figure of the paper.
+//!   harness), a quantized-scan subsystem (scalar + product quantization
+//!   with ADC tables and exact rerank — the complementary *dimension*
+//!   axis the paper leaves open), the paper's complexity accounting,
+//!   and the evaluation harness that regenerates every figure of the
+//!   paper.
 
 pub mod baseline;
 pub mod cluster;
@@ -39,6 +42,7 @@ pub mod memory;
 pub mod metrics;
 pub mod net;
 pub mod partition;
+pub mod quant;
 pub mod runtime;
 pub mod search;
 pub mod util;

@@ -1,7 +1,7 @@
 //! `amsearch` — launcher CLI for the associative-memory ANN search system.
 //!
 //! ```text
-//! amsearch eval  [--figure N|knn | --all] [--out-dir results] [--scale S] [--seed S]
+//! amsearch eval  [--figure N|knn|quant | --all] [--out-dir results] [--scale S] [--seed S]
 //! amsearch query [--config cfg.json] [--top-p P] [--top-k K]
 //! amsearch serve [--config cfg.json] [--workers N] [--backend native|pjrt]
 //!                [--repeat R] [--listen ADDR]
@@ -54,10 +54,16 @@ usage: amsearch <command> [options]
 
 commands:
   eval        regenerate paper figures / eval modes
-              (--figure N|knn | --all, --out-dir D, --scale S, --seed S)
+              (--figure N|knn|quant | --all, --out-dir D, --scale S, --seed S)
   query       build index + run queries  (--config F, --top-p P, --top-k K,
               --index F.amidx to load instead of building)
   build       build index and save it     (--config F, --out F.amidx)
+
+  index-building commands (build, query, serve, shard-plan,
+  serve-cluster) also take the scan-precision knobs:
+              --precision exact|sq8|pq  compressed candidate scan
+              --rerank R                exact-rerank budget (0 = all)
+              --pq-m M --pq-bits B      PQ shape (M subspaces, B bits)
   serve       serve queries through the coordinator
               (--config F, --workers N, --backend native|pjrt, --repeat R,
                --listen ADDR to open the TCP front door instead of
@@ -81,6 +87,50 @@ commands:
                0 = all; --listen ADDR, --router-workers W)
   artifacts   show the AOT manifest      (--dir D)
 ";
+
+/// Apply the scan-precision CLI overrides (`--precision`, `--rerank`,
+/// `--pq-m`, `--pq-bits`) on top of the config file.  Flags that are
+/// absent keep the config's values.
+fn apply_scan_precision_args(
+    cfg: &mut AppConfig,
+    args: &Args,
+) -> Result<()> {
+    use amsearch::quant::ScanPrecision;
+    if args.get("precision").is_none()
+        && args.get("rerank").is_none()
+        && args.get("pq-m").is_none()
+        && args.get("pq-bits").is_none()
+    {
+        return Ok(());
+    }
+    let mode = args
+        .get("precision")
+        .unwrap_or(cfg.index.precision.mode())
+        .to_string();
+    let knob_given = args.get("rerank").is_some()
+        || args.get("pq-m").is_some()
+        || args.get("pq-bits").is_some();
+    if mode == "exact" && knob_given {
+        // --rerank / --pq-* mean nothing on an exact scan: reject
+        // instead of silently serving at a different precision
+        return Err(amsearch::Error::Config(
+            "--rerank/--pq-m/--pq-bits require --precision sq8|pq \
+             (or a quantized 'precision' in the config)"
+                .into(),
+        ));
+    }
+    let (cfg_m, cfg_bits) = match cfg.index.precision {
+        ScanPrecision::Pq { m, bits, .. } => (m, bits),
+        _ => (8, 8),
+    };
+    cfg.index.precision = amsearch::config::scan_precision_from_knobs(
+        &mode,
+        args.get_parse("rerank", cfg.index.precision.rerank())?,
+        args.get_parse("pq-m", cfg_m)?,
+        args.get_parse("pq-bits", cfg_bits)?,
+    )?;
+    Ok(())
+}
 
 /// Materialize the configured workload.
 fn load_workload(cfg: &AppConfig) -> Result<Workload> {
@@ -180,6 +230,15 @@ fn cmd_build(cfg: &AppConfig, args: &Args) -> Result<()> {
     amsearch::index::persist::save(&index, &out)?;
     let bytes = std::fs::metadata(&out)?.len();
     println!("saved {} ({:.1} MB)", out.display(), bytes as f64 / 1e6);
+    let fp = index.footprint();
+    println!(
+        "scan representation: mode={} f32_bytes={} resident_bytes={} \
+         (compression {:.3}x)",
+        index.params().precision,
+        fp.bytes,
+        fp.compressed_bytes,
+        fp.ratio()
+    );
     Ok(())
 }
 
@@ -300,13 +359,14 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
         artifacts_dir: Some(cfg.backend.artifacts_dir.clone()),
     };
     println!(
-        "serving: n={} d={} q={} backend={} workers={} batch={}",
+        "serving: n={} d={} q={} backend={} workers={} batch={} scan={}",
         index.len(),
         index.dim(),
         params.n_classes,
         backend_kind,
         serve_cfg.workers,
-        serve_cfg.max_batch
+        serve_cfg.max_batch,
+        params.precision
     );
     let server = Arc::new(SearchServer::start(factory, serve_cfg)?);
 
@@ -527,6 +587,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             fanout.get("full_fanouts").and_then(|v| v.as_u64()).unwrap_or(0)
         );
     }
+    // compression visible from the wire: the server's scan footprint
+    if let Some(index) = server_stats.get("index") {
+        println!(
+            "server index: quant={} bytes={} compressed_bytes={} \
+             (compression {:.3}x)",
+            server_stats
+                .get("quant")
+                .and_then(|q| q.get("mode"))
+                .and_then(|v| v.as_str())
+                .unwrap_or("?"),
+            index.get("bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+            index
+                .get("compressed_bytes")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            index
+                .get("compression_ratio")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        );
+    }
 
     if let Some(path) = args.get("json") {
         // one artifact: the client-side report plus the server's own
@@ -577,7 +658,7 @@ fn main() {
         println!("{USAGE}");
         return;
     }
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => match AppConfig::from_file(Path::new(path)) {
             Ok(c) => c,
             Err(e) => {
@@ -587,6 +668,10 @@ fn main() {
         },
         None => AppConfig::default(),
     };
+    if let Err(e) = apply_scan_precision_args(&mut cfg, &args) {
+        eprintln!("error: {e}\n{USAGE}");
+        std::process::exit(2);
+    }
     let result = match args.pos(0).unwrap() {
         "eval" => cmd_eval(&args),
         "build" => cmd_build(&cfg, &args),

@@ -13,12 +13,26 @@
 //! against the exhaustive reference.
 
 /// Elementary-operation counter for one or more searches.
+///
+/// A quantized scan ([`crate::quant`]) splits the candidate stage into
+/// two separately counted terms: `compressed_ops` (approximate
+/// distances over codes — `d` per candidate for SQ8, `m` table lookups
+/// for PQ) and `rerank_ops` (exact f32 distances over the surviving
+/// `rerank` candidates).  The exact scan keeps using `scan_ops`, so the
+/// three never mix and the compression win is visible per stage.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpsCounter {
     /// Operations spent scoring class memories (d²q / c²q term).
     pub score_ops: u64,
-    /// Operations spent scanning candidates (pkd / pkc term).
+    /// Operations spent scanning candidates at full precision
+    /// (pkd / pkc term).
     pub scan_ops: u64,
+    /// Operations spent scanning candidates over the compressed
+    /// representation (quantized scans only).
+    pub compressed_ops: u64,
+    /// Operations spent exactly re-scoring compressed-scan survivors
+    /// (quantized scans only).
+    pub rerank_ops: u64,
     /// Operations spent on auxiliary structures (e.g. RS anchor search).
     pub aux_ops: u64,
     /// Number of searches accumulated.
@@ -33,7 +47,7 @@ impl OpsCounter {
 
     /// Total elementary operations.
     pub fn total(&self) -> u64 {
-        self.score_ops + self.scan_ops + self.aux_ops
+        self.score_ops + self.scan_ops + self.compressed_ops + self.rerank_ops + self.aux_ops
     }
 
     /// Mean operations per search.
@@ -58,6 +72,8 @@ impl OpsCounter {
     pub fn merge(&mut self, other: &OpsCounter) {
         self.score_ops += other.score_ops;
         self.scan_ops += other.scan_ops;
+        self.compressed_ops += other.compressed_ops;
+        self.rerank_ops += other.rerank_ops;
         self.aux_ops += other.aux_ops;
         self.searches += other.searches;
     }
@@ -157,10 +173,47 @@ mod tests {
 
     #[test]
     fn merge_adds() {
-        let mut a = OpsCounter { score_ops: 1, scan_ops: 2, aux_ops: 3, searches: 1 };
-        let b = OpsCounter { score_ops: 10, scan_ops: 20, aux_ops: 30, searches: 2 };
+        let mut a = OpsCounter {
+            score_ops: 1,
+            scan_ops: 2,
+            compressed_ops: 4,
+            rerank_ops: 5,
+            aux_ops: 3,
+            searches: 1,
+        };
+        let b = OpsCounter {
+            score_ops: 10,
+            scan_ops: 20,
+            compressed_ops: 40,
+            rerank_ops: 50,
+            aux_ops: 30,
+            searches: 2,
+        };
         a.merge(&b);
-        assert_eq!(a, OpsCounter { score_ops: 11, scan_ops: 22, aux_ops: 33, searches: 3 });
+        assert_eq!(
+            a,
+            OpsCounter {
+                score_ops: 11,
+                scan_ops: 22,
+                compressed_ops: 44,
+                rerank_ops: 55,
+                aux_ops: 33,
+                searches: 3,
+            }
+        );
+    }
+
+    #[test]
+    fn compressed_and_rerank_ops_count_toward_total() {
+        let c = OpsCounter {
+            score_ops: 100,
+            compressed_ops: 30,
+            rerank_ops: 20,
+            searches: 1,
+            ..Default::default()
+        };
+        assert_eq!(c.total(), 150);
+        assert_eq!(c.per_search(), 150.0);
     }
 
     #[test]

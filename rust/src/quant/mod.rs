@@ -1,0 +1,559 @@
+//! Quantized candidate scan — the *dimension* axis of the trade-off.
+//!
+//! The paper attacks the cardinal axis (AM polling prunes which classes
+//! are scanned) and explicitly leaves "reducing the dimension of vectors
+//! using quantization techniques or hashing" to complementary work.
+//! This subsystem composes both: polled classes are scanned over a
+//! compressed in-memory representation, and only the best `rerank`
+//! compressed candidates per query are re-scored with the exact f32
+//! metric — the standard compressed-scan + exact-rerank recipe of
+//! at-scale ANN systems.
+//!
+//! Two representations:
+//!
+//! * [`scalar`] — per-dimension affine 8-bit quantization (SQ8): one
+//!   `(min, step)` pair per dimension, one byte per coordinate, and a
+//!   fused integer-code L2 kernel (4× memory reduction).
+//! * [`pq`] — product quantization: the vector is split into `m`
+//!   subspaces, each summarized by a per-subspace k-means codebook
+//!   (`2^bits` centroids, trained via [`crate::baseline::kmeans`]);
+//!   distances are read from a per-query asymmetric-distance (ADC)
+//!   lookup table built once and shared across the class-major scan
+//!   (`4·d/m`× memory reduction at 8 bits).
+//!
+//! Both kernels implement [`crate::search::DistanceKernel`], so they
+//! share the exact early-abandon accumulation loop of the f32 scan.
+//!
+//! The correctness anchor: the approximate distances only *rank*
+//! candidates — every reported distance comes from the exact rerank
+//! stage ([`rerank`]), bitwise-identical to the full-precision scan for
+//! the candidates it keeps.  With `rerank = 0` ("rerank everything
+//! scanned") the two-stage scan degenerates to the exact scan: same
+//! ids, bitwise-same distances (pinned by
+//! `prop_quant_rerank_full_matches_exact`).
+
+pub mod pq;
+pub mod rerank;
+pub mod scalar;
+
+pub use pq::PqQuantizer;
+pub use scalar::Sq8Quantizer;
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+use crate::search::accumulate_pruned;
+
+/// Deterministic seed for PQ codebook training: retraining over the same
+/// data always yields the same codebooks (k-means is deterministic given
+/// the seed), so an index rebuilt from parts matches its persisted form.
+const PQ_TRAIN_SEED: u64 = 0x9A11_A5C0;
+
+/// Precision of the candidate-scan stage.  `rerank` is the number of
+/// best compressed candidates per query re-scored with the exact f32
+/// metric (`0` = rerank every scanned candidate, which makes the
+/// quantized scan bitwise-identical to [`ScanPrecision::Exact`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanPrecision {
+    /// Full-precision f32 scan (the historical behavior).
+    #[default]
+    Exact,
+    /// Scalar 8-bit scan + exact rerank.
+    Sq8 {
+        /// Compressed candidates kept for exact rerank (0 = all).
+        rerank: usize,
+    },
+    /// Product-quantized ADC scan + exact rerank.
+    Pq {
+        /// Number of subspaces (must divide the dimension).
+        m: usize,
+        /// Bits per subspace code (1..=8; `2^bits` centroids).
+        bits: usize,
+        /// Compressed candidates kept for exact rerank (0 = all).
+        rerank: usize,
+    },
+}
+
+impl std::fmt::Display for ScanPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScanPrecision::Exact => write!(f, "exact"),
+            ScanPrecision::Sq8 { rerank } => write!(f, "sq8(rerank={rerank})"),
+            ScanPrecision::Pq { m, bits, rerank } => {
+                write!(f, "pq(m={m},bits={bits},rerank={rerank})")
+            }
+        }
+    }
+}
+
+impl ScanPrecision {
+    /// Short mode label ("exact" | "sq8" | "pq") — the `quant.mode`
+    /// STATS field.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            ScanPrecision::Exact => "exact",
+            ScanPrecision::Sq8 { .. } => "sq8",
+            ScanPrecision::Pq { .. } => "pq",
+        }
+    }
+
+    /// The rerank budget (0 = all; also 0 for `Exact`, which has no
+    /// rerank stage).
+    pub fn rerank(&self) -> usize {
+        match self {
+            ScanPrecision::Exact => 0,
+            ScanPrecision::Sq8 { rerank } => *rerank,
+            ScanPrecision::Pq { rerank, .. } => *rerank,
+        }
+    }
+
+    /// Replace the rerank budget (no-op for `Exact`).  Lets evals and
+    /// benches sweep `rerank` without retraining codebooks.
+    pub fn with_rerank(self, rerank: usize) -> ScanPrecision {
+        match self {
+            ScanPrecision::Exact => ScanPrecision::Exact,
+            ScanPrecision::Sq8 { .. } => ScanPrecision::Sq8 { rerank },
+            ScanPrecision::Pq { m, bits, .. } => ScanPrecision::Pq { m, bits, rerank },
+        }
+    }
+
+    /// Dimension-independent parameter checks (what a config file can
+    /// verify before any data exists).
+    pub fn validate_params(&self) -> Result<()> {
+        if let ScanPrecision::Pq { m, bits, .. } = self {
+            if *m == 0 {
+                return Err(Error::Config("pq m must be > 0".into()));
+            }
+            if *bits == 0 || *bits > 8 {
+                return Err(Error::Config(format!(
+                    "pq bits {bits} must be in 1..=8"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Full validation against a concrete vector dimension.
+    pub fn validate_for_dim(&self, dim: usize) -> Result<()> {
+        self.validate_params()?;
+        if let ScanPrecision::Pq { m, .. } = self {
+            if *m > dim || dim % m != 0 {
+                return Err(Error::Config(format!(
+                    "pq m {m} must divide the dimension {dim}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Memory footprint of an index's candidate-scan representation: the
+/// full-precision member-matrix bytes versus what the scan actually
+/// keeps resident.  For an exact index the two are equal.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IndexFootprint {
+    /// f32 member-matrix bytes (`n · d · 4`).
+    pub bytes: u64,
+    /// Bytes of the scanned representation: codes + codebooks/tables for
+    /// a quantized index, `bytes` for an exact one.
+    pub compressed_bytes: u64,
+}
+
+impl IndexFootprint {
+    /// `compressed_bytes / bytes` (1.0 for an exact index, 0 when empty).
+    pub fn ratio(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            self.compressed_bytes as f64 / self.bytes as f64
+        }
+    }
+
+    /// Accumulate another footprint (cluster tier: sum over shards).
+    pub fn add(&mut self, other: IndexFootprint) {
+        self.bytes += other.bytes;
+        self.compressed_bytes += other.compressed_bytes;
+    }
+}
+
+/// The trained quantizer variant behind a [`QuantIndex`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Quantizer {
+    /// Per-dimension affine 8-bit.
+    Sq8(Sq8Quantizer),
+    /// Product quantization.
+    Pq(PqQuantizer),
+}
+
+/// Compressed companion of an [`crate::index::AmIndex`]: one fixed-width
+/// code row per stored vector (global-id order, so class member lists
+/// index it directly), plus the trained quantizer and the rerank budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantIndex {
+    quantizer: Quantizer,
+    /// Row-major codes, `code_len` bytes per vector.
+    codes: Vec<u8>,
+    code_len: usize,
+    rerank: usize,
+}
+
+impl QuantIndex {
+    /// Train a quantizer for `precision` over `data` and encode every
+    /// vector.  Returns `None` for [`ScanPrecision::Exact`].
+    /// Deterministic: the same data and precision always produce the
+    /// same codebooks and codes (PQ training is seeded by
+    /// [`PQ_TRAIN_SEED`]).
+    pub fn train(data: &Dataset, precision: ScanPrecision) -> Result<Option<QuantIndex>> {
+        precision.validate_for_dim(data.dim())?;
+        let (quantizer, rerank) = match precision {
+            ScanPrecision::Exact => return Ok(None),
+            ScanPrecision::Sq8 { rerank } => {
+                (Quantizer::Sq8(Sq8Quantizer::train(data)), rerank)
+            }
+            ScanPrecision::Pq { m, bits, rerank } => {
+                let mut rng = Rng::new(PQ_TRAIN_SEED);
+                (Quantizer::Pq(PqQuantizer::train(data, m, bits, &mut rng)?), rerank)
+            }
+        };
+        let code_len = match &quantizer {
+            Quantizer::Sq8(q) => q.code_len(),
+            Quantizer::Pq(q) => q.code_len(),
+        };
+        let mut codes = Vec::with_capacity(data.len() * code_len);
+        for v in data.iter() {
+            match &quantizer {
+                Quantizer::Sq8(q) => q.encode_into(v, &mut codes),
+                Quantizer::Pq(q) => q.encode_into(v, &mut codes),
+            }
+        }
+        Ok(Some(QuantIndex { quantizer, codes, code_len, rerank }))
+    }
+
+    /// Reassemble from persisted parts (see [`crate::index::persist`]).
+    /// Every PQ code byte is range-checked against the codebook here —
+    /// a corrupt-but-checksummed (or foreign-writer) artifact must fail
+    /// load with a typed error, never index past a query's ADC table
+    /// inside a serving worker.
+    pub fn from_parts(
+        quantizer: Quantizer,
+        codes: Vec<u8>,
+        rerank: usize,
+    ) -> Result<QuantIndex> {
+        let code_len = match &quantizer {
+            Quantizer::Sq8(q) => q.code_len(),
+            Quantizer::Pq(q) => q.code_len(),
+        };
+        if code_len == 0 || codes.len() % code_len != 0 {
+            return Err(Error::Data(format!(
+                "quant codes length {} not a multiple of code width {code_len}",
+                codes.len()
+            )));
+        }
+        if let Quantizer::Pq(q) = &quantizer {
+            let k = q.n_centroids();
+            if let Some(pos) = codes.iter().position(|&c| c as usize >= k) {
+                return Err(Error::Data(format!(
+                    "pq code byte {} at offset {pos} out of range \
+                     (codebook has {k} centroids)",
+                    codes[pos]
+                )));
+            }
+        }
+        Ok(QuantIndex { quantizer, codes, code_len, rerank })
+    }
+
+    /// Encode and append one vector (the online-insert path).
+    pub fn push(&mut self, x: &[f32]) {
+        match &self.quantizer {
+            Quantizer::Sq8(q) => q.encode_into(x, &mut self.codes),
+            Quantizer::Pq(q) => q.encode_into(x, &mut self.codes),
+        }
+    }
+
+    /// Number of encoded vectors.
+    pub fn len(&self) -> usize {
+        self.codes.len() / self.code_len
+    }
+
+    /// True when no vector has been encoded.
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Code row of vector `id`.
+    #[inline]
+    pub fn code(&self, id: usize) -> &[u8] {
+        &self.codes[id * self.code_len..(id + 1) * self.code_len]
+    }
+
+    /// The full code buffer (persistence).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Bytes per code row.
+    pub fn code_len(&self) -> usize {
+        self.code_len
+    }
+
+    /// The trained quantizer (persistence / inspection).
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.quantizer
+    }
+
+    /// The rerank budget (0 = rerank everything scanned).
+    pub fn rerank(&self) -> usize {
+        self.rerank
+    }
+
+    /// Change the rerank budget without retraining.
+    pub fn set_rerank(&mut self, rerank: usize) {
+        self.rerank = rerank;
+    }
+
+    /// Mode label ("sq8" | "pq").
+    pub fn mode(&self) -> &'static str {
+        match &self.quantizer {
+            Quantizer::Sq8(_) => "sq8",
+            Quantizer::Pq(_) => "pq",
+        }
+    }
+
+    /// Reconstruct the [`ScanPrecision`] this index implements.
+    pub fn precision(&self) -> ScanPrecision {
+        match &self.quantizer {
+            Quantizer::Sq8(_) => ScanPrecision::Sq8 { rerank: self.rerank },
+            Quantizer::Pq(q) => ScanPrecision::Pq {
+                m: q.m(),
+                bits: q.bits(),
+                rerank: self.rerank,
+            },
+        }
+    }
+
+    /// Elementary ops per candidate of the compressed scan (`d` for SQ8,
+    /// `m` table lookups for PQ) — the `compressed_ops` unit.
+    pub fn approx_unit_cost(&self) -> usize {
+        self.code_len
+    }
+
+    /// Resident bytes of the compressed representation: all code rows
+    /// plus the quantizer's tables (SQ8 min/step, PQ codebooks).
+    pub fn compressed_bytes(&self) -> u64 {
+        let table = match &self.quantizer {
+            Quantizer::Sq8(q) => q.table_bytes(),
+            Quantizer::Pq(q) => q.table_bytes(),
+        };
+        self.codes.len() as u64 + table
+    }
+
+    /// Build the per-query lookup structure shared across the whole
+    /// class-major scan: the SQ8 residual vector, or the PQ ADC table
+    /// (one exact subvector-to-centroid distance per `(subspace,
+    /// centroid)` cell, computed once per query per batch).
+    pub fn prepare(&self, x: &[f32]) -> QueryLut<'_> {
+        match &self.quantizer {
+            Quantizer::Sq8(q) => QueryLut::Sq8 {
+                residual: q.residual(x),
+                step: q.step(),
+            },
+            Quantizer::Pq(q) => QueryLut::Pq {
+                lut: q.adc_table(x),
+                n_centroids: q.n_centroids(),
+            },
+        }
+    }
+}
+
+/// Per-query state of the compressed scan (see [`QuantIndex::prepare`]).
+#[derive(Debug, Clone)]
+pub enum QueryLut<'a> {
+    /// SQ8: `residual[j] = x[j] - min[j]`, so the per-candidate term is
+    /// `(residual[j] - step[j]·code[j])²`.
+    Sq8 {
+        /// Query minus the per-dimension offsets.
+        residual: Vec<f32>,
+        /// Per-dimension quantization steps (borrowed from the
+        /// quantizer).
+        step: &'a [f32],
+    },
+    /// PQ: `lut[s·n_centroids + c]` = exact squared distance between the
+    /// query's `s`-th subvector and centroid `c`.
+    Pq {
+        /// The `[m, n_centroids]` ADC table.
+        lut: Vec<f32>,
+        /// Centroids per subspace (row stride of `lut`).
+        n_centroids: usize,
+    },
+}
+
+impl QueryLut<'_> {
+    /// Approximate distance of one code row with early abandoning
+    /// against `bound` (same contract as
+    /// [`crate::search::distance_pruned`]: `None` iff strictly greater,
+    /// kept values deterministic).
+    #[inline]
+    pub fn distance_pruned(&self, code: &[u8], bound: f32) -> Option<f32> {
+        match self {
+            QueryLut::Sq8 { residual, step } => accumulate_pruned(
+                &scalar::Sq8Terms { residual, step, code },
+                bound,
+            ),
+            QueryLut::Pq { lut, n_centroids } => accumulate_pruned(
+                &pq::AdcTerms { lut, n_centroids: *n_centroids, code },
+                bound,
+            ),
+        }
+    }
+
+    /// Unpruned approximate distance (tests / diagnostics).
+    pub fn distance(&self, code: &[u8]) -> f32 {
+        self.distance_pruned(code, f32::INFINITY)
+            .expect("infinite bound keeps every candidate")
+    }
+}
+
+/// The effective rerank heap size for one query: `rerank = 0` means
+/// every scanned candidate survives to the exact stage (the
+/// equivalence-pin degenerate), and the budget can never usefully be
+/// below `k` or above the candidate count.
+pub fn effective_rerank(rerank: usize, k: usize, candidates: usize) -> usize {
+    let r = if rerank == 0 { candidates } else { rerank.max(k) };
+    r.clamp(1, candidates.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn dense(seed: u64, d: usize, n: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        synthetic::dense_patterns(d, n, &mut rng)
+    }
+
+    #[test]
+    fn exact_trains_to_none() {
+        let ds = dense(1, 8, 10);
+        assert!(QuantIndex::train(&ds, ScanPrecision::Exact).unwrap().is_none());
+    }
+
+    #[test]
+    fn sq8_codes_have_one_byte_per_dim() {
+        let ds = dense(2, 16, 40);
+        let q = QuantIndex::train(&ds, ScanPrecision::Sq8 { rerank: 8 })
+            .unwrap()
+            .unwrap();
+        assert_eq!(q.len(), 40);
+        assert_eq!(q.code_len(), 16);
+        assert_eq!(q.code(7).len(), 16);
+        assert_eq!(q.mode(), "sq8");
+        assert_eq!(q.rerank(), 8);
+        assert_eq!(q.precision(), ScanPrecision::Sq8 { rerank: 8 });
+        // codes (n·d) + min/step tables (2·d·4) — far below n·d·4
+        assert_eq!(q.compressed_bytes(), (40 * 16 + 2 * 16 * 4) as u64);
+    }
+
+    #[test]
+    fn pq_codes_have_one_byte_per_subspace() {
+        let ds = dense(3, 16, 60);
+        let p = ScanPrecision::Pq { m: 4, bits: 4, rerank: 0 };
+        let q = QuantIndex::train(&ds, p).unwrap().unwrap();
+        assert_eq!(q.code_len(), 4);
+        assert_eq!(q.len(), 60);
+        assert_eq!(q.mode(), "pq");
+        assert_eq!(q.precision(), p);
+        // 16 centroids × 4 dims × 4 subspaces of f32 + n·m code bytes
+        assert_eq!(q.compressed_bytes(), (60 * 4 + 16 * 4 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let ds = dense(4, 8, 50);
+        let p = ScanPrecision::Pq { m: 2, bits: 3, rerank: 5 };
+        let a = QuantIndex::train(&ds, p).unwrap().unwrap();
+        let b = QuantIndex::train(&ds, p).unwrap().unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn push_appends_a_code_row() {
+        let ds = dense(5, 8, 20);
+        let mut q = QuantIndex::train(&ds, ScanPrecision::Sq8 { rerank: 0 })
+            .unwrap()
+            .unwrap();
+        let x: Vec<f32> = ds.get(3).to_vec();
+        q.push(&x);
+        assert_eq!(q.len(), 21);
+        assert_eq!(q.code(20), q.code(3), "same vector, same code");
+    }
+
+    #[test]
+    fn from_parts_rejects_out_of_range_pq_codes() {
+        let ds = dense(6, 8, 40);
+        let q = QuantIndex::train(&ds, ScanPrecision::Pq { m: 2, bits: 3, rerank: 0 })
+            .unwrap()
+            .unwrap();
+        let quantizer = q.quantizer().clone();
+        let mut codes = q.codes().to_vec();
+        // valid bytes round-trip ...
+        QuantIndex::from_parts(quantizer.clone(), codes.clone(), 0).unwrap();
+        // ... a byte >= the codebook size (8 centroids at bits=3) does not
+        codes[5] = 8;
+        let err = QuantIndex::from_parts(quantizer, codes, 0).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn precision_validation() {
+        assert!(ScanPrecision::Pq { m: 0, bits: 4, rerank: 0 }
+            .validate_params()
+            .is_err());
+        assert!(ScanPrecision::Pq { m: 2, bits: 0, rerank: 0 }
+            .validate_params()
+            .is_err());
+        assert!(ScanPrecision::Pq { m: 2, bits: 9, rerank: 0 }
+            .validate_params()
+            .is_err());
+        assert!(ScanPrecision::Pq { m: 3, bits: 4, rerank: 0 }
+            .validate_for_dim(8)
+            .is_err());
+        ScanPrecision::Pq { m: 4, bits: 8, rerank: 0 }
+            .validate_for_dim(8)
+            .unwrap();
+        ScanPrecision::Sq8 { rerank: 0 }.validate_for_dim(3).unwrap();
+        ScanPrecision::Exact.validate_for_dim(1).unwrap();
+    }
+
+    #[test]
+    fn effective_rerank_rules() {
+        // 0 = everything scanned
+        assert_eq!(effective_rerank(0, 3, 100), 100);
+        // never below k, never above the candidate count
+        assert_eq!(effective_rerank(5, 10, 100), 10);
+        assert_eq!(effective_rerank(500, 1, 100), 100);
+        assert_eq!(effective_rerank(5, 1, 100), 5);
+        // empty scans still need a positive heap
+        assert_eq!(effective_rerank(0, 1, 0), 1);
+    }
+
+    #[test]
+    fn footprint_ratio_and_add() {
+        let mut fp = IndexFootprint { bytes: 400, compressed_bytes: 100 };
+        assert!((fp.ratio() - 0.25).abs() < 1e-12);
+        fp.add(IndexFootprint { bytes: 600, compressed_bytes: 150 });
+        assert_eq!(fp, IndexFootprint { bytes: 1000, compressed_bytes: 250 });
+        assert_eq!(IndexFootprint::default().ratio(), 0.0);
+    }
+
+    #[test]
+    fn mode_strings() {
+        assert_eq!(ScanPrecision::Exact.mode(), "exact");
+        assert_eq!(ScanPrecision::Sq8 { rerank: 1 }.mode(), "sq8");
+        assert_eq!(ScanPrecision::Pq { m: 2, bits: 4, rerank: 1 }.mode(), "pq");
+        assert_eq!(
+            ScanPrecision::Sq8 { rerank: 0 }.with_rerank(7),
+            ScanPrecision::Sq8 { rerank: 7 }
+        );
+    }
+}

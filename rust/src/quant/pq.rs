@@ -1,0 +1,320 @@
+//! Product quantization (PQ) with asymmetric distance computation (ADC).
+//!
+//! The vector is split into `m` contiguous subspaces of `d/m` dimensions
+//! each; every subspace gets its own k-means codebook of `2^bits`
+//! centroids (trained via [`crate::baseline::kmeans`], the same
+//! coarse-quantizer substrate the IVF baseline uses).  A vector is
+//! stored as `m` one-byte centroid ids.
+//!
+//! Queries are never quantized: per query, an ADC lookup table holds the
+//! *exact* squared distance between each query subvector and each
+//! centroid (`m · 2^bits` cells, built once and shared across the whole
+//! class-major scan), so a candidate's approximate distance is `m` table
+//! lookups — summed through the shared early-abandon loop
+//! ([`crate::search::DistanceKernel`]), since every cell is a squared
+//! distance and therefore non-negative.
+
+use crate::baseline::kmeans::kmeans;
+use crate::data::dataset::Dataset;
+use crate::data::rng::Rng;
+use crate::error::{Error, Result};
+use crate::search::distance::sq_l2;
+use crate::search::DistanceKernel;
+
+/// Trained product quantizer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PqQuantizer {
+    dim: usize,
+    m: usize,
+    sub_dim: usize,
+    bits: usize,
+    /// Centroids actually trained per subspace: `min(2^bits, n)` — a
+    /// tiny database cannot support a full codebook.
+    n_centroids: usize,
+    /// `[m, n_centroids, sub_dim]` row-major centroid table.
+    codebooks: Vec<f32>,
+}
+
+impl PqQuantizer {
+    /// Train per-subspace codebooks over `data`.  Deterministic given
+    /// the rng seed (k-means++ seeding and Lloyd iterations consume the
+    /// rng in a fixed order).
+    pub fn train(data: &Dataset, m: usize, bits: usize, rng: &mut Rng) -> Result<PqQuantizer> {
+        let d = data.dim();
+        if m == 0 || m > d || d % m != 0 {
+            return Err(Error::Config(format!("pq m {m} must divide the dimension {d}")));
+        }
+        if bits == 0 || bits > 8 {
+            return Err(Error::Config(format!("pq bits {bits} must be in 1..=8")));
+        }
+        if data.is_empty() {
+            return Err(Error::Config("cannot train pq codebooks on no data".into()));
+        }
+        let sub_dim = d / m;
+        let n_centroids = (1usize << bits).min(data.len());
+        let mut codebooks = Vec::with_capacity(m * n_centroids * sub_dim);
+        for s in 0..m {
+            // materialize the subspace columns as an (n × sub_dim) dataset
+            let mut flat = Vec::with_capacity(data.len() * sub_dim);
+            for v in data.iter() {
+                flat.extend_from_slice(&v[s * sub_dim..(s + 1) * sub_dim]);
+            }
+            let sub = Dataset::from_flat(sub_dim, flat)?;
+            let km = kmeans(&sub, n_centroids, 25, rng)?;
+            codebooks.extend_from_slice(&km.centroids);
+        }
+        Ok(PqQuantizer { dim: d, m, sub_dim, bits, n_centroids, codebooks })
+    }
+
+    /// Reassemble from persisted parts.
+    pub fn from_parts(
+        dim: usize,
+        m: usize,
+        bits: usize,
+        n_centroids: usize,
+        codebooks: Vec<f32>,
+    ) -> Result<PqQuantizer> {
+        if m == 0 || m > dim || dim % m != 0 {
+            return Err(Error::Data(format!("pq m {m} must divide the dimension {dim}")));
+        }
+        if n_centroids == 0 || n_centroids > 256 {
+            return Err(Error::Data(format!(
+                "pq centroid count {n_centroids} must be in 1..=256"
+            )));
+        }
+        let sub_dim = dim / m;
+        if codebooks.len() != m * n_centroids * sub_dim {
+            return Err(Error::Data(format!(
+                "pq codebook length {} != m·k·sub_dim = {}",
+                codebooks.len(),
+                m * n_centroids * sub_dim
+            )));
+        }
+        Ok(PqQuantizer { dim, m, sub_dim, bits, n_centroids, codebooks })
+    }
+
+    /// Vector dimensionality `d`.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of subspaces `m` (= bytes per code row).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Dimensions per subspace (`d / m`).
+    pub fn sub_dim(&self) -> usize {
+        self.sub_dim
+    }
+
+    /// Configured bits per code.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Centroids actually trained per subspace.
+    pub fn n_centroids(&self) -> usize {
+        self.n_centroids
+    }
+
+    /// Bytes per code row (`m`).
+    pub fn code_len(&self) -> usize {
+        self.m
+    }
+
+    /// The `[m, n_centroids, sub_dim]` centroid table (persistence).
+    pub fn codebooks(&self) -> &[f32] {
+        &self.codebooks
+    }
+
+    /// Resident bytes of the codebooks.
+    pub fn table_bytes(&self) -> u64 {
+        (self.codebooks.len() * 4) as u64
+    }
+
+    /// Centroid `c` of subspace `s`.
+    fn centroid(&self, s: usize, c: usize) -> &[f32] {
+        let base = (s * self.n_centroids + c) * self.sub_dim;
+        &self.codebooks[base..base + self.sub_dim]
+    }
+
+    /// Encode one vector, appending `m` code bytes to `out` (nearest
+    /// centroid per subspace; distance ties resolve to the smaller
+    /// centroid id, so encoding is deterministic).
+    pub fn encode_into(&self, x: &[f32], out: &mut Vec<u8>) {
+        debug_assert_eq!(x.len(), self.dim);
+        for s in 0..self.m {
+            let sub = &x[s * self.sub_dim..(s + 1) * self.sub_dim];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..self.n_centroids {
+                let dist = sq_l2(sub, self.centroid(s, c));
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            out.push(best as u8);
+        }
+    }
+
+    /// Decode one code row to the centroid concatenation (tests).
+    pub fn decode(&self, code: &[u8]) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.dim);
+        for (s, &c) in code.iter().enumerate() {
+            v.extend_from_slice(self.centroid(s, c as usize));
+        }
+        v
+    }
+
+    /// Build the per-query ADC table: `lut[s·n_centroids + c]` is the
+    /// exact squared distance between the query's subvector `s` and
+    /// centroid `c`.  `m · n_centroids · sub_dim` work, paid once per
+    /// query per batch and amortized over every scanned candidate.
+    pub fn adc_table(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut lut = Vec::with_capacity(self.m * self.n_centroids);
+        for s in 0..self.m {
+            let sub = &x[s * self.sub_dim..(s + 1) * self.sub_dim];
+            for c in 0..self.n_centroids {
+                lut.push(sq_l2(sub, self.centroid(s, c)));
+            }
+        }
+        lut
+    }
+}
+
+/// The ADC kernel: `term(s) = lut[s·n_centroids + code[s]]` — one table
+/// lookup per subspace, summed through the shared early-abandon loop
+/// (every cell is a squared distance, hence non-negative).
+pub struct AdcTerms<'a> {
+    /// The query's `[m, n_centroids]` ADC table.
+    pub lut: &'a [f32],
+    /// Row stride of `lut`.
+    pub n_centroids: usize,
+    /// The candidate's code row.
+    pub code: &'a [u8],
+}
+
+impl DistanceKernel for AdcTerms<'_> {
+    #[inline(always)]
+    fn terms(&self) -> usize {
+        self.code.len()
+    }
+    #[inline(always)]
+    fn term(&self, s: usize) -> f32 {
+        self.lut[s * self.n_centroids + self.code[s] as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::accumulate;
+
+    fn gaussian(seed: u64, d: usize, n: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let flat: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        Dataset::from_flat(d, flat).unwrap()
+    }
+
+    #[test]
+    fn trains_and_encodes() {
+        let ds = gaussian(1, 12, 100);
+        let mut rng = Rng::new(2);
+        let pq = PqQuantizer::train(&ds, 3, 4, &mut rng).unwrap();
+        assert_eq!(pq.sub_dim(), 4);
+        assert_eq!(pq.n_centroids(), 16);
+        assert_eq!(pq.codebooks().len(), 3 * 16 * 4);
+        let mut code = Vec::new();
+        pq.encode_into(ds.get(0), &mut code);
+        assert_eq!(code.len(), 3);
+        assert!(code.iter().all(|&c| (c as usize) < 16));
+    }
+
+    #[test]
+    fn encode_picks_nearest_centroid() {
+        let ds = gaussian(3, 8, 120);
+        let mut rng = Rng::new(4);
+        let pq = PqQuantizer::train(&ds, 2, 3, &mut rng).unwrap();
+        let mut code = Vec::new();
+        for v in ds.iter().take(20) {
+            code.clear();
+            pq.encode_into(v, &mut code);
+            for s in 0..2 {
+                let sub = &v[s * 4..(s + 1) * 4];
+                let chosen = sq_l2(sub, pq.centroid(s, code[s] as usize));
+                for c in 0..pq.n_centroids() {
+                    assert!(
+                        chosen <= sq_l2(sub, pq.centroid(s, c)) + 1e-5,
+                        "subspace {s}: centroid {c} beats chosen {}",
+                        code[s]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adc_distance_equals_decoded_distance() {
+        let ds = gaussian(5, 16, 80);
+        let mut rng = Rng::new(6);
+        let pq = PqQuantizer::train(&ds, 4, 4, &mut rng).unwrap();
+        let x: Vec<f32> = (0..16).map(|j| (j as f32 * 0.3).sin()).collect();
+        let lut = pq.adc_table(&x);
+        let mut code = Vec::new();
+        for v in ds.iter().take(20) {
+            code.clear();
+            pq.encode_into(v, &mut code);
+            let via_adc = accumulate(&AdcTerms {
+                lut: &lut,
+                n_centroids: pq.n_centroids(),
+                code: &code,
+            });
+            // ADC sums per-subspace distances — exactly the squared
+            // distance to the decoded (centroid-concatenated) vector
+            let via_decode = sq_l2(&x, &pq.decode(&code));
+            assert!(
+                (via_adc - via_decode).abs() <= via_decode.abs() * 1e-4 + 1e-4,
+                "{via_adc} vs {via_decode}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_database_clamps_codebook_size() {
+        let ds = gaussian(7, 4, 3);
+        let mut rng = Rng::new(8);
+        let pq = PqQuantizer::train(&ds, 2, 8, &mut rng).unwrap();
+        assert_eq!(pq.n_centroids(), 3, "k clamps to n");
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let ds = gaussian(9, 10, 20);
+        let mut rng = Rng::new(10);
+        assert!(PqQuantizer::train(&ds, 3, 4, &mut rng).is_err(), "m ∤ d");
+        assert!(PqQuantizer::train(&ds, 0, 4, &mut rng).is_err());
+        assert!(PqQuantizer::train(&ds, 2, 0, &mut rng).is_err());
+        assert!(PqQuantizer::train(&ds, 2, 9, &mut rng).is_err());
+        assert!(PqQuantizer::from_parts(10, 2, 4, 16, vec![0.0; 7]).is_err());
+        assert!(PqQuantizer::from_parts(10, 2, 4, 300, vec![0.0; 5 * 300 * 2]).is_err());
+    }
+
+    #[test]
+    fn from_parts_roundtrips() {
+        let ds = gaussian(11, 8, 60);
+        let mut rng = Rng::new(12);
+        let pq = PqQuantizer::train(&ds, 2, 4, &mut rng).unwrap();
+        let back = PqQuantizer::from_parts(
+            pq.dim(),
+            pq.m(),
+            pq.bits(),
+            pq.n_centroids(),
+            pq.codebooks().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back, pq);
+    }
+}

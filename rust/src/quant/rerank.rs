@@ -1,0 +1,85 @@
+//! The exact rerank stage of the two-stage compressed scan.
+//!
+//! Stage 1 (in [`crate::index::AmIndex`]'s scan paths) ranks every
+//! scanned candidate by its *approximate* compressed distance, keeping
+//! the best `r` per query in a `TopK(r)` accumulator.  Stage 2 — this
+//! module — re-scores those survivors with the exact f32 metric and
+//! selects the final top-`k` with the very same `(distance, id)` rule
+//! as the full-precision scan.
+//!
+//! Why `r = everything-scanned` (`rerank = 0`) is bitwise-exact: the
+//! reported distances all come from [`crate::search::distance_pruned`]
+//! (bitwise `sq_l2` for kept candidates, and abandoned candidates
+//! provably cannot enter the top-k), and the `TopK` selection is
+//! invariant to candidate order under the total `(distance, id)` order.
+//! So whenever the survivor set contains the true top-`k`, the result is
+//! bit-for-bit the exact scan's — and at `rerank = 0` the survivor set
+//! is *all* scanned candidates, which always contains it.
+
+use crate::data::dataset::Dataset;
+use crate::search::{distance_pruned, Metric, Neighbor, TopK};
+
+/// Exact-rerank the stage-1 survivors: `survivors` are `(approx_dist,
+/// id)` pairs (any order; stage 1 hands them ascending).  Returns the
+/// final neighbors plus the number of exact distance evaluations (the
+/// `rerank_ops` unit is this count times `d`).
+pub(crate) fn rerank_exact(
+    metric: Metric,
+    x: &[f32],
+    data: &Dataset,
+    survivors: Vec<(f32, u32)>,
+    k: usize,
+) -> (Vec<Neighbor>, usize) {
+    let reranked = survivors.len();
+    let mut acc = TopK::new(k.max(1));
+    for (_, vid) in survivors {
+        // early abandoning against the current exact k-th best: kept
+        // distances are bitwise sq_l2, abandoned ones provably lose
+        if let Some(dist) = distance_pruned(metric, x, data.get(vid as usize), acc.bound())
+        {
+            acc.push(dist, vid);
+        }
+    }
+    (acc.into_neighbors(), reranked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::search::distance::sq_l2;
+
+    fn gaussian(seed: u64, d: usize, n: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let flat: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        Dataset::from_flat(d, flat).unwrap()
+    }
+
+    #[test]
+    fn rerank_over_all_candidates_is_the_exact_topk() {
+        let ds = gaussian(1, 8, 50);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        // garbage approximate keys: the rerank must not care
+        let survivors: Vec<(f32, u32)> =
+            (0..50).map(|i| ((50 - i) as f32, i as u32)).collect();
+        let (got, reranked) = rerank_exact(Metric::SqL2, &x, &ds, survivors, 3);
+        assert_eq!(reranked, 50);
+        let mut want: Vec<(f32, u32)> =
+            (0..50).map(|i| (sq_l2(&x, ds.get(i)), i as u32)).collect();
+        want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (nb, (wd, wi)) in got.iter().zip(want.iter().take(3)) {
+            assert_eq!(nb.id, *wi);
+            assert_eq!(nb.distance.to_bits(), wd.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_survivors_give_empty_neighbors() {
+        let ds = gaussian(3, 4, 10);
+        let (got, reranked) =
+            rerank_exact(Metric::SqL2, &[0.0; 4], &ds, Vec::new(), 5);
+        assert!(got.is_empty());
+        assert_eq!(reranked, 0);
+    }
+}

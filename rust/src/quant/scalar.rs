@@ -1,0 +1,226 @@
+//! Scalar 8-bit quantization (SQ8): per-dimension affine codes.
+//!
+//! Training learns one `(min, step)` pair per dimension over the
+//! database; a coordinate is stored as
+//! `code = round((x - min) / step)` clamped to `0..=255` (one byte), and
+//! decodes to `min + step · code`.  The asymmetric distance against an
+//! f32 query folds the offset into a per-query residual computed once
+//! (`r = x - min`), so the per-candidate kernel is
+//! `Σ_j (r_j - step_j · code_j)²` — a fused loop over the integer codes
+//! that shares the early-abandon accumulation of the f32 scan through
+//! [`crate::search::DistanceKernel`].
+
+use crate::data::dataset::Dataset;
+use crate::search::DistanceKernel;
+
+/// Trained per-dimension affine 8-bit quantizer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sq8Quantizer {
+    /// Per-dimension offset (the observed minimum).
+    min: Vec<f32>,
+    /// Per-dimension step `(max - min) / 255`, forced positive so a
+    /// constant dimension encodes to code 0 and decodes exactly.
+    step: Vec<f32>,
+}
+
+impl Sq8Quantizer {
+    /// Learn per-dimension ranges over `data` (must be non-empty; the
+    /// index guarantees `n ≥ 1`).
+    pub fn train(data: &Dataset) -> Sq8Quantizer {
+        let d = data.dim();
+        if data.is_empty() {
+            // degenerate but total: identity-ish ranges, every code 0
+            return Sq8Quantizer { min: vec![0.0; d], step: vec![1.0; d] };
+        }
+        let mut min = vec![f32::INFINITY; d];
+        let mut max = vec![f32::NEG_INFINITY; d];
+        for v in data.iter() {
+            for j in 0..d {
+                if v[j] < min[j] {
+                    min[j] = v[j];
+                }
+                if v[j] > max[j] {
+                    max[j] = v[j];
+                }
+            }
+        }
+        let step = (0..d)
+            .map(|j| {
+                let s = (max[j] - min[j]) / 255.0;
+                if s > 0.0 {
+                    s
+                } else {
+                    1.0 // constant dimension: every code is 0
+                }
+            })
+            .collect();
+        Sq8Quantizer { min, step }
+    }
+
+    /// Reassemble from persisted parts.
+    pub fn from_parts(min: Vec<f32>, step: Vec<f32>) -> Sq8Quantizer {
+        debug_assert_eq!(min.len(), step.len());
+        Sq8Quantizer { min, step }
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.min.len()
+    }
+
+    /// Bytes per code row (`d`).
+    pub fn code_len(&self) -> usize {
+        self.min.len()
+    }
+
+    /// Per-dimension offsets (persistence).
+    pub fn min(&self) -> &[f32] {
+        &self.min
+    }
+
+    /// Per-dimension steps (persistence + the scan kernel).
+    pub fn step(&self) -> &[f32] {
+        &self.step
+    }
+
+    /// Resident bytes of the quantizer tables (min + step).
+    pub fn table_bytes(&self) -> u64 {
+        (2 * self.min.len() * 4) as u64
+    }
+
+    /// Encode one vector, appending `d` code bytes to `out`.  Values
+    /// outside the trained range clamp to the nearest code — the rerank
+    /// stage re-scores with exact f32 distances, so clamping only costs
+    /// ranking quality, never correctness.
+    pub fn encode_into(&self, x: &[f32], out: &mut Vec<u8>) {
+        debug_assert_eq!(x.len(), self.min.len());
+        out.extend((0..x.len()).map(|j| {
+            let c = (x[j] - self.min[j]) / self.step[j];
+            c.round().clamp(0.0, 255.0) as u8
+        }));
+    }
+
+    /// Decode one code row (tests / diagnostics).
+    pub fn decode(&self, code: &[u8]) -> Vec<f32> {
+        code.iter()
+            .enumerate()
+            .map(|(j, &c)| self.min[j] + self.step[j] * c as f32)
+            .collect()
+    }
+
+    /// The per-query residual `x - min`, computed once per query and
+    /// shared across every candidate of the scan.
+    pub fn residual(&self, x: &[f32]) -> Vec<f32> {
+        x.iter().zip(&self.min).map(|(v, m)| v - m).collect()
+    }
+}
+
+/// The fused SQ8 L2 kernel: `term(j) = (residual[j] - step[j]·code[j])²`
+/// over one-byte codes — a [`DistanceKernel`], so it reuses the shared
+/// early-abandon accumulation loop.
+pub struct Sq8Terms<'a> {
+    /// Per-query residual `x - min`.
+    pub residual: &'a [f32],
+    /// Per-dimension steps.
+    pub step: &'a [f32],
+    /// The candidate's code row.
+    pub code: &'a [u8],
+}
+
+impl DistanceKernel for Sq8Terms<'_> {
+    #[inline(always)]
+    fn terms(&self) -> usize {
+        self.code.len()
+    }
+    #[inline(always)]
+    fn term(&self, j: usize) -> f32 {
+        let t = self.residual[j] - self.step[j] * self.code[j] as f32;
+        t * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::search::{accumulate, distance::sq_l2};
+
+    fn gaussian(seed: u64, d: usize, n: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let flat: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        Dataset::from_flat(d, flat).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_error_is_within_half_step() {
+        let ds = gaussian(1, 12, 80);
+        let q = Sq8Quantizer::train(&ds);
+        let mut code = Vec::new();
+        for v in ds.iter() {
+            code.clear();
+            q.encode_into(v, &mut code);
+            let back = q.decode(&code);
+            for j in 0..12 {
+                assert!(
+                    (back[j] - v[j]).abs() <= q.step()[j] * 0.5 + 1e-5,
+                    "dim {j}: {} vs {}",
+                    back[j],
+                    v[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_matches_decoded_distance() {
+        let ds = gaussian(2, 17, 40);
+        let q = Sq8Quantizer::train(&ds);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..17).map(|_| rng.normal() as f32).collect();
+        let residual = q.residual(&x);
+        let mut code = Vec::new();
+        for v in ds.iter() {
+            code.clear();
+            q.encode_into(v, &mut code);
+            let via_kernel = accumulate(&Sq8Terms {
+                residual: &residual,
+                step: q.step(),
+                code: &code,
+            });
+            let via_decode = sq_l2(&x, &q.decode(&code));
+            assert!(
+                (via_kernel - via_decode).abs() <= via_decode.abs() * 1e-4 + 1e-4,
+                "{via_kernel} vs {via_decode}"
+            );
+        }
+    }
+
+    #[test]
+    fn binary_01_data_encodes_to_extreme_codes() {
+        let ds = Dataset::from_flat(3, vec![0., 1., 0., 1., 0., 1.]).unwrap();
+        let q = Sq8Quantizer::train(&ds);
+        let mut code = Vec::new();
+        q.encode_into(&[1.0, 0.0, 1.0], &mut code);
+        assert_eq!(code, vec![255, 0, 255]);
+    }
+
+    #[test]
+    fn constant_dimension_is_exact() {
+        let ds = Dataset::from_flat(2, vec![5., 1., 5., 3.]).unwrap();
+        let q = Sq8Quantizer::train(&ds);
+        let mut code = Vec::new();
+        q.encode_into(&[5.0, 2.0], &mut code);
+        assert_eq!(code[0], 0, "constant dim encodes to 0");
+        assert_eq!(q.decode(&code)[0], 5.0, "and decodes exactly");
+    }
+
+    #[test]
+    fn out_of_range_values_clamp() {
+        let ds = Dataset::from_flat(1, vec![0., 1.]).unwrap();
+        let q = Sq8Quantizer::train(&ds);
+        let mut code = Vec::new();
+        q.encode_into(&[100.0], &mut code);
+        q.encode_into(&[-100.0], &mut code);
+        assert_eq!(code, vec![255, 0]);
+    }
+}

@@ -2,49 +2,87 @@
 //! baselines.  The squared-L2 kernel is the hot loop of the exhaustive
 //! stage; it is written with 4-way unrolled accumulators so LLVM
 //! auto-vectorizes it without a SIMD dependency.
+//!
+//! Every distance whose per-coordinate terms are non-negative shares one
+//! early-abandon loop through the [`DistanceKernel`] seam: `sq_l2`, the
+//! SQ8 integer kernel, and the PQ ADC lookup kernel (see
+//! [`crate::quant`]) are all the same 4-lane accumulation over a
+//! different term producer, so the pruning logic — and its bitwise
+//! guarantees — lives in exactly one place.
 
-/// Squared Euclidean distance.
+/// A distance expressible as a sum of **non-negative** terms, so every
+/// partial prefix sum is a lower bound on the full distance.  This is
+/// the contract the shared early-abandon loop
+/// ([`accumulate_pruned`]) relies on: a partial sum exceeding the bound
+/// proves the full distance does too.
+///
+/// `term(j)` must be pure (same value on every call) — the accumulation
+/// loops call it exactly once per index, in ascending order within each
+/// 4-lane block.
+pub trait DistanceKernel {
+    /// Number of terms in the sum.
+    fn terms(&self) -> usize;
+    /// The `j`-th non-negative term.
+    fn term(&self, j: usize) -> f32;
+}
+
+/// Squared-L2 terms over two f32 slices: `term(j) = (a[j] - b[j])²`.
+pub struct SqL2Terms<'a> {
+    /// Left operand.
+    pub a: &'a [f32],
+    /// Right operand.
+    pub b: &'a [f32],
+}
+
+impl DistanceKernel for SqL2Terms<'_> {
+    #[inline(always)]
+    fn terms(&self) -> usize {
+        self.a.len()
+    }
+    #[inline(always)]
+    fn term(&self, j: usize) -> f32 {
+        let d = self.a[j] - self.b[j];
+        d * d
+    }
+}
+
+/// Full accumulation of a kernel's terms: 4 unrolled lanes folded at the
+/// end, remainder scalar — the exact operation order of the historical
+/// `sq_l2`, so [`sq_l2`] stays bitwise stable across the refactor.
 #[inline]
-pub fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
+pub fn accumulate<K: DistanceKernel>(kernel: &K) -> f32 {
+    let n = kernel.terms();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
     for i in 0..chunks {
         let j = i * 4;
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2 = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
+        s0 += kernel.term(j);
+        s1 += kernel.term(j + 1);
+        s2 += kernel.term(j + 2);
+        s3 += kernel.term(j + 3);
     }
     let mut s = s0 + s1 + s2 + s3;
     for j in chunks * 4..n {
-        let d = a[j] - b[j];
-        s += d * d;
+        s += kernel.term(j);
     }
     s
 }
 
-/// `sq_l2` with threshold-based early abandoning, used by the batched
-/// class-grouped candidate scan: the 4-lane accumulation is *identical*
-/// to [`sq_l2`] (same operations in the same order), probed every 32
-/// coordinates.  Squared differences are non-negative, so every partial
-/// lane sum is a lower bound on the final distance; a probe exceeding
-/// `bound` proves the full distance does too and the candidate can be
-/// abandoned without changing any reported value bitwise.
+/// [`accumulate`] with threshold-based early abandoning: identical lane
+/// accumulation (same operations in the same order), probed every 32
+/// terms.  Terms are non-negative by the [`DistanceKernel`] contract, so
+/// every partial lane sum is a lower bound on the final distance; a
+/// probe exceeding `bound` proves the full distance does too and the
+/// candidate can be abandoned without changing any reported value
+/// bitwise.
 ///
 /// Returns `None` iff the distance is strictly greater than `bound`
 /// (ties survive, preserving the scan's `dist == best && id < best_id`
 /// tie-break), otherwise `Some(d)` with `d` bitwise identical to
-/// `sq_l2(a, b)`.
+/// `accumulate(kernel)`.
 #[inline]
-fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
+pub fn accumulate_pruned<K: DistanceKernel>(kernel: &K, bound: f32) -> Option<f32> {
+    let n = kernel.terms();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
     let mut i = 0usize;
@@ -52,14 +90,10 @@ fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
         let stop = (i + 8).min(chunks);
         while i < stop {
             let j = i * 4;
-            let d0 = a[j] - b[j];
-            let d1 = a[j + 1] - b[j + 1];
-            let d2 = a[j + 2] - b[j + 2];
-            let d3 = a[j + 3] - b[j + 3];
-            s0 += d0 * d0;
-            s1 += d1 * d1;
-            s2 += d2 * d2;
-            s3 += d3 * d3;
+            s0 += kernel.term(j);
+            s1 += kernel.term(j + 1);
+            s2 += kernel.term(j + 2);
+            s3 += kernel.term(j + 3);
             i += 1;
         }
         // probe only reads the lanes; accumulation state is untouched
@@ -69,14 +103,29 @@ fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
     }
     let mut s = s0 + s1 + s2 + s3;
     for j in chunks * 4..n {
-        let d = a[j] - b[j];
-        s += d * d;
+        s += kernel.term(j);
     }
     if s > bound {
         None
     } else {
         Some(s)
     }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    accumulate(&SqL2Terms { a, b })
+}
+
+/// `sq_l2` with threshold-based early abandoning, used by the batched
+/// class-grouped candidate scan (see [`accumulate_pruned`] for the
+/// bitwise contract).
+#[inline]
+fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    accumulate_pruned(&SqL2Terms { a, b }, bound)
 }
 
 /// Metric distance with early abandoning against `bound`.
@@ -247,6 +296,48 @@ mod tests {
         a[0] = 1000.0;
         assert_eq!(sq_l2_pruned(&a, &b, 10.0), None);
         assert_eq!(sq_l2_pruned(&a, &b, 1e7), Some(1e6));
+    }
+
+    #[test]
+    fn generic_kernel_loop_matches_dedicated_sq_l2() {
+        // the DistanceKernel seam must be an exact refactor: the generic
+        // loops over SqL2Terms reproduce sq_l2 / sq_l2_pruned bitwise
+        use crate::data::rng::Rng;
+        let mut rng = Rng::new(123);
+        for n in [0usize, 1, 5, 32, 33, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let k = SqL2Terms { a: &a, b: &b };
+            assert_eq!(accumulate(&k).to_bits(), sq_l2(&a, &b).to_bits());
+            assert_eq!(
+                accumulate_pruned(&k, f32::INFINITY).map(f32::to_bits),
+                Some(sq_l2(&a, &b).to_bits())
+            );
+        }
+    }
+
+    /// A toy kernel over precomputed non-negative terms — stands in for
+    /// the quant ADC kernels, which sum table lookups the same way.
+    struct TermSlice<'a>(&'a [f32]);
+    impl DistanceKernel for TermSlice<'_> {
+        fn terms(&self) -> usize {
+            self.0.len()
+        }
+        fn term(&self, j: usize) -> f32 {
+            self.0[j]
+        }
+    }
+
+    #[test]
+    fn pruned_accumulation_abandons_and_keeps_correctly_for_any_kernel() {
+        let terms: Vec<f32> = (0..70).map(|i| (i % 7) as f32).collect();
+        let full: f32 = accumulate(&TermSlice(&terms));
+        assert_eq!(accumulate_pruned(&TermSlice(&terms), full), Some(full));
+        assert_eq!(accumulate_pruned(&TermSlice(&terms), full - 0.5), None);
+        // a huge early term must trip the 32-term probe
+        let mut spiked = vec![0f32; 512];
+        spiked[0] = 1e9;
+        assert_eq!(accumulate_pruned(&TermSlice(&spiked), 10.0), None);
     }
 
     #[test]

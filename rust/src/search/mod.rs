@@ -4,6 +4,8 @@ pub mod distance;
 pub mod policy;
 pub mod topk;
 
-pub use distance::{distance_pruned, Metric};
+pub use distance::{
+    accumulate, accumulate_pruned, distance_pruned, DistanceKernel, Metric,
+};
 pub use policy::AdaptivePolicy;
 pub use topk::{invert_polled, one_nn, top_p_largest, Neighbor, TopK};

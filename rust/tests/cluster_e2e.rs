@@ -229,6 +229,92 @@ fn cluster_from_plan_dir_serves_identically() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Acceptance pin for the quantized cluster: with `ScanPrecision::Sq8`
+/// and `rerank = 0` (rerank everything), routed answers at s = N —
+/// through quantized v4 shard artifacts loaded from a plan directory —
+/// are bitwise-identical to the **exact** single-node index, and the
+/// router's STATS report the summed compressed footprint at ≤ 0.35×
+/// the f32 member-matrix bytes.
+#[test]
+fn quantized_cluster_matches_exact_and_reports_compression() {
+    use amsearch::net::Serveable;
+    use amsearch::quant::ScanPrecision;
+    let mut rng = Rng::new(79);
+    let wl = synthetic::dense_workload(32, 240, 12, QueryModel::Exact, &mut rng);
+    let exact = AmIndex::build(
+        wl.base.clone(),
+        IndexParams { n_classes: 8, top_p: 2, ..Default::default() },
+        &mut Rng::new(80),
+    )
+    .unwrap();
+    let quantized = AmIndex::build(
+        wl.base.clone(),
+        IndexParams {
+            n_classes: 8,
+            top_p: 2,
+            precision: ScanPrecision::Sq8 { rerank: 0 },
+            ..Default::default()
+        },
+        &mut Rng::new(80),
+    )
+    .unwrap();
+    let plan = ShardPlan::for_index(&quantized, 3, ShardStrategy::BalancedMembers).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "amsearch_cluster_e2e_{}_quant",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    cluster::write_cluster(&quantized, &plan, &dir).unwrap();
+
+    let cluster = ClusterHarness::launch_from_dir(
+        &dir,
+        "127.0.0.1:0",
+        &fast_cluster_cfg(3, ShardStrategy::BalancedMembers),
+    )
+    .unwrap();
+    let mut ops = OpsCounter::new();
+    for qi in 0..12 {
+        let query = wl.queries.get(qi);
+        for k in [1usize, 4, 300] {
+            let expected = exact.query_k(query, 8, k, &mut ops);
+            let routed = cluster.router().search(query.to_vec(), 8, k).unwrap();
+            assert_eq!(
+                routed.neighbors.len(),
+                expected.neighbors.len(),
+                "query {qi} k={k}"
+            );
+            for (a, b) in routed.neighbors.iter().zip(&expected.neighbors) {
+                assert_eq!(a.id, b.id, "query {qi} k={k}");
+                assert_eq!(a.distance.to_bits(), b.distance.to_bits(), "query {qi} k={k}");
+            }
+            assert_eq!(routed.candidates, expected.candidates);
+        }
+    }
+    // the router's STATS carry the cluster-wide compression, summed
+    // over the shard indices it loaded from disk
+    let stats = Serveable::stats_json(cluster.router().as_ref());
+    let index_obj = stats.get("index").expect("router stats carry index.*");
+    let bytes = index_obj.get("bytes").and_then(|v| v.as_u64()).unwrap();
+    let compressed = index_obj
+        .get("compressed_bytes")
+        .and_then(|v| v.as_u64())
+        .unwrap();
+    assert_eq!(bytes, (240 * 32 * 4) as u64, "shard footprints sum to the corpus");
+    assert!(
+        (compressed as f64) <= 0.35 * bytes as f64,
+        "sq8 compressed {compressed} vs f32 {bytes}"
+    );
+    assert_eq!(
+        stats
+            .get("quant")
+            .and_then(|q| q.get("mode"))
+            .and_then(|v| v.as_str()),
+        Some("sq8")
+    );
+    cluster.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// A stale or half-written plan directory (shard artifact disagreeing
 /// with the manifest) must fail at launch with a typed error — never
 /// reach a router worker that would panic on an out-of-range shard id.

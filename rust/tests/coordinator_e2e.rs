@@ -65,6 +65,87 @@ fn serves_concurrent_clients_correctly() {
     server.shutdown();
 }
 
+/// The serving acceptance check for the quantized subsystem: a server
+/// over an SQ8 index answers exactly like one over the exact index
+/// (rerank = 0) and its STATS report `index.compressed_bytes` at
+/// ≤ 0.35× the f32 member-matrix bytes plus `quant.mode = "sq8"`.
+#[test]
+fn quantized_server_matches_exact_and_reports_footprint() {
+    use amsearch::quant::ScanPrecision;
+    let mut rng = Rng::new(17);
+    let wl = synthetic::dense_workload(32, 512, 64, QueryModel::Exact, &mut rng);
+    let build = |precision| {
+        Arc::new(
+            AmIndex::build(
+                wl.base.clone(),
+                IndexParams { n_classes: 8, top_p: 2, precision, ..Default::default() },
+                &mut Rng::new(18),
+            )
+            .unwrap(),
+        )
+    };
+    let config = CoordinatorConfig {
+        max_batch: 8,
+        max_wait_us: 300,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let exact =
+        SearchServer::start(native_factory(build(ScanPrecision::Exact)), config).unwrap();
+    let quant = SearchServer::start(
+        native_factory(build(ScanPrecision::Sq8 { rerank: 0 })),
+        config,
+    )
+    .unwrap();
+    for qi in 0..32 {
+        let x = wl.queries.get(qi).to_vec();
+        let a = exact.search(x.clone(), 3, 5).unwrap();
+        let b = quant.search(x, 3, 5).unwrap();
+        assert_eq!(a.neighbors.len(), b.neighbors.len(), "query {qi}");
+        for (na, nb) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(na.id, nb.id, "query {qi}");
+            assert_eq!(na.distance.to_bits(), nb.distance.to_bits(), "query {qi}");
+        }
+    }
+    let stats = quant.stats_json();
+    let index_obj = stats.get("index").expect("stats carry index.*");
+    let bytes = index_obj.get("bytes").and_then(|v| v.as_u64()).unwrap();
+    let compressed = index_obj
+        .get("compressed_bytes")
+        .and_then(|v| v.as_u64())
+        .unwrap();
+    assert_eq!(bytes, (512 * 32 * 4) as u64);
+    assert!(
+        (compressed as f64) <= 0.35 * bytes as f64,
+        "sq8 compressed {compressed} vs f32 {bytes}"
+    );
+    assert_eq!(
+        stats
+            .get("quant")
+            .and_then(|v| v.get("mode"))
+            .and_then(|v| v.as_str()),
+        Some("sq8")
+    );
+    // the exact server reports no compression and an exact mode
+    let estats = exact.stats_json();
+    assert_eq!(
+        estats
+            .get("index")
+            .and_then(|v| v.get("compression_ratio"))
+            .and_then(|v| v.as_f64()),
+        Some(1.0)
+    );
+    assert_eq!(
+        estats
+            .get("quant")
+            .and_then(|v| v.get("mode"))
+            .and_then(|v| v.as_str()),
+        Some("exact")
+    );
+    quant.shutdown();
+    exact.shutdown();
+}
+
 #[test]
 fn batching_actually_groups_requests() {
     let (index, wl) = build_index(2, 32, 256, 4);

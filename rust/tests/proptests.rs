@@ -295,6 +295,139 @@ fn prop_finish_batch_matches_sequential() {
     });
 }
 
+/// The two-stage compressed scan with `rerank = 0` (every scanned
+/// candidate survives to the exact stage) is bitwise-identical to
+/// `ScanPrecision::Exact` — neighbor ids, `to_bits()` distances, polled
+/// order, and candidate counts — across dense ±1 and sparse 0-1
+/// workloads, both quantizers (SQ8 and PQ at random shapes), random
+/// poll depths including p = q, and random k including k = 1 and k > n.
+#[test]
+fn prop_quant_rerank_full_matches_exact() {
+    use amsearch::quant::ScanPrecision;
+    cases(12, |rng| {
+        let dense = rng.bernoulli(0.5);
+        // d = m · sub_dim so PQ always divides the dimension
+        let m = 1 + rng.below(4) as usize;
+        let sub_dim = 2 + rng.below(8) as usize;
+        let d = m * sub_dim;
+        let q = 1 + rng.below(6) as usize;
+        let n = q + rng.below(120) as usize;
+        let wl = if dense {
+            synthetic::dense_workload(d, n, 5, QueryModel::Exact, rng)
+        } else {
+            synthetic::sparse_workload(
+                SparseSpec { dim: d, ones: 3.0 },
+                n,
+                5,
+                QueryModel::Exact,
+                rng,
+            )
+        };
+        let bits = 1 + rng.below(8) as usize;
+        let build_seed = 0xF17E_0000 + rng.below(1 << 20);
+        let build = |precision: ScanPrecision| {
+            // same build rng per precision -> identical partitions, so
+            // the scan stage is the only thing that differs
+            AmIndex::build(
+                wl.base.clone(),
+                IndexParams { n_classes: q, precision, ..Default::default() },
+                &mut Rng::new(build_seed),
+            )
+            .unwrap()
+        };
+        let exact = build(ScanPrecision::Exact);
+        let quantized = [
+            build(ScanPrecision::Sq8 { rerank: 0 }),
+            build(ScanPrecision::Pq { m, bits, rerank: 0 }),
+        ];
+        let mut ops = OpsCounter::new();
+        for qi in 0..wl.queries.len() {
+            let x = wl.queries.get(qi);
+            let p = 1 + rng.below(q as u64) as usize;
+            let k = 1 + rng.below((n + 3) as u64) as usize;
+            let want = exact.query_k(x, p, k, &mut ops);
+            for (which, idx) in quantized.iter().enumerate() {
+                let got = idx.query_k(x, p, k, &mut ops);
+                let tag = ["sq8", "pq"][which];
+                assert_eq!(got.polled, want.polled, "{tag} q{qi} p{p} k{k}");
+                assert_eq!(got.candidates, want.candidates, "{tag} q{qi}");
+                assert_eq!(
+                    got.neighbors.len(),
+                    want.neighbors.len(),
+                    "{tag} q{qi} p{p} k{k} (d={d} m={m} bits={bits} n={n})"
+                );
+                for (g, w) in got.neighbors.iter().zip(&want.neighbors) {
+                    assert_eq!(g.id, w.id, "{tag} q{qi} p{p} k{k}");
+                    assert_eq!(
+                        g.distance.to_bits(),
+                        w.distance.to_bits(),
+                        "{tag} q{qi} p{p} k{k}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Recall@k of the compressed scan is monotone non-decreasing in the
+/// rerank budget on the clustered workload: survivor sets are nested in
+/// `r`, and a true neighbor that survives can never be evicted by
+/// growing the candidate pool (at most k−1 polled candidates beat it).
+#[test]
+fn prop_quant_recall_monotone_in_rerank() {
+    use amsearch::data::clustered::{clustered_workload, ClusteredSpec};
+    use amsearch::metrics::RecallAtK;
+    use amsearch::quant::ScanPrecision;
+    cases(6, |rng| {
+        let spec = ClusteredSpec { dim: 16, n_clusters: 8, ..ClusteredSpec::sift_like() };
+        let n = 300 + rng.below(200) as usize;
+        let wl = clustered_workload(spec, n, 24, rng);
+        let k = 1 + rng.below(8) as usize;
+        let p = 1 + rng.below(8) as usize;
+        let params = IndexParams {
+            n_classes: 8,
+            precision: ScanPrecision::Sq8 { rerank: 1 },
+            ..Default::default()
+        };
+        let mut index = AmIndex::build(wl.base.clone(), params, rng).unwrap();
+        // ground truth: the exact scan at the same poll depth (rerank=0)
+        index.set_scan_rerank(0);
+        let mut ops = OpsCounter::new();
+        let truth: Vec<Vec<u32>> = (0..wl.queries.len())
+            .map(|qi| {
+                index
+                    .query_k(wl.queries.get(qi), p, k, &mut ops)
+                    .neighbors
+                    .into_iter()
+                    .map(|nb| nb.id)
+                    .collect()
+            })
+            .collect();
+        let mut last = -1.0f64;
+        for r in [1usize, 4, 16, 64, 0] {
+            index.set_scan_rerank(r);
+            let mut recall = RecallAtK::new(k);
+            for qi in 0..wl.queries.len() {
+                let got: Vec<u32> = index
+                    .query_k(wl.queries.get(qi), p, k, &mut ops)
+                    .neighbors
+                    .into_iter()
+                    .map(|nb| nb.id)
+                    .collect();
+                recall.record(&got, &truth[qi]);
+            }
+            assert!(
+                recall.value() >= last - 1e-12,
+                "recall dropped from {last} to {} at r={r} (k={k} p={p})",
+                recall.value()
+            );
+            last = recall.value();
+        }
+        // rerank-everything is the exact scan: recall vs it must be 1
+        assert!((last - 1.0).abs() < 1e-12, "full rerank recall = {last}");
+    });
+}
+
 /// At a full poll (p = q), the index's top-k equals the exhaustive
 /// baseline's top-k exactly — neighbor ids and bitwise distances — so
 /// AM ground truth and baselines stay comparable at every k.
