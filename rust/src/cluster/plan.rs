@@ -169,7 +169,7 @@ impl ShardPlan {
                     } else {
                         (0..n_shards)
                             .min_by_key(|&s| (load[s], s))
-                            .expect("n_shards >= 1")
+                            .unwrap_or(0)
                     };
                     shard_of[c] = s as u32;
                     load[s] += class_sizes[c];
@@ -241,13 +241,16 @@ pub fn build_shard_index(
             classes.len()
         )));
     }
-    let assignments: Vec<u32> = shard_ids
-        .iter()
-        .map(|&gid| {
-            let gc = index.partition().class_of(gid as usize);
-            classes.binary_search(&gc).expect("member of a shard class") as u32
-        })
-        .collect();
+    let mut assignments: Vec<u32> = Vec::with_capacity(shard_ids.len());
+    for &gid in &shard_ids {
+        let gc = index.partition().class_of(gid as usize);
+        let local = classes.binary_search(&gc).map_err(|_| {
+            Error::Data(format!(
+                "shard {si}: vector {gid} belongs to class {gc}, which is not                  assigned to this shard (corrupt plan?)"
+            ))
+        })?;
+        assignments.push(local as u32);
+    }
     let d = index.dim();
     let mut stacked = Vec::with_capacity(classes.len() * d * d);
     let mut counts = Vec::with_capacity(classes.len());

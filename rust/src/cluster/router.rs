@@ -40,6 +40,7 @@ use crate::metrics::{FanoutStats, LatencyHistogram};
 use crate::net::wire::{self, WireResponse};
 use crate::net::{NetClient, RetryPolicy, Serveable};
 use crate::search::{top_p_largest, TopK};
+use crate::util::sync::lock_unpoisoned;
 use crate::util::Json;
 
 use super::plan::RoutingTable;
@@ -230,7 +231,8 @@ impl ClusterRouter {
                         // take one request under the lock, release
                         // before the network round-trips
                         let req = {
-                            let rx = req_rx.lock().expect("poisoned");
+                            let rx = lock_unpoisoned(&req_rx);
+                            // amlint: allow(lock_blocking, reason = "the guard IS the hand-off: idle workers queue on this lock until a request arrives")
                             match rx.recv() {
                                 Ok(r) => r,
                                 Err(_) => return,
@@ -280,7 +282,7 @@ impl ClusterRouter {
     /// router's STATS report the cluster's compression the same way a
     /// single node reports its own.
     pub fn set_index_info(&self, info: ClusterIndexInfo) {
-        *self.shared.index_info.lock().expect("poisoned") = Some(info);
+        *lock_unpoisoned(&self.shared.index_info) = Some(info);
     }
 
     /// Submit a query and block until its merged response arrives (the
@@ -305,7 +307,7 @@ impl ClusterRouter {
 
     /// Snapshot the router metrics.
     pub fn metrics(&self) -> RouterMetrics {
-        self.shared.metrics.lock().expect("poisoned").clone()
+        lock_unpoisoned(&self.shared.metrics).clone()
     }
 
     /// The routing table served by this router.
@@ -316,8 +318,8 @@ impl ClusterRouter {
     /// Graceful shutdown: stop accepting, drain queued requests (every
     /// accepted request still gets its response), join the workers.
     pub fn shutdown(&self) {
-        *self.tx.lock().expect("poisoned") = None;
-        let mut workers = self.workers.lock().expect("poisoned");
+        *lock_unpoisoned(&self.tx) = None;
+        let mut workers = lock_unpoisoned(&self.workers);
         for w in workers.drain(..) {
             let _ = w.join();
         }
@@ -354,10 +356,11 @@ impl Serveable for ClusterRouter {
             enqueued: Instant::now(),
             resp,
         };
-        let guard = self.tx.lock().expect("poisoned");
+        let guard = lock_unpoisoned(&self.tx);
         let tx = guard
             .as_ref()
             .ok_or_else(|| Error::Coordinator("router shutting down".into()))?;
+        // amlint: allow(lock_blocking, reason = "bounded-queue backpressure by design; holding the guard keeps shutdown from closing the channel mid-send")
         tx.send(req)
             .map_err(|_| Error::Coordinator("router shutting down".into()))
     }
@@ -374,7 +377,7 @@ impl Serveable for ClusterRouter {
         o.insert("errors".to_string(), Json::Num(m.errors as f64));
         // cluster-wide scan footprint + quant mode, same shape as the
         // single-node server's STATS (summed over shard indices)
-        if let Some(info) = self.shared.index_info.lock().expect("poisoned").as_ref() {
+        if let Some(info) = lock_unpoisoned(&self.shared.index_info).as_ref() {
             o.insert(
                 "index".to_string(),
                 crate::coordinator::footprint_json(&info.footprint),
@@ -475,7 +478,7 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
     // coordinator: a client must never observe its response while its
     // own request is uncounted
     {
-        let mut m = shared.metrics.lock().expect("poisoned");
+        let mut m = lock_unpoisoned(&shared.metrics);
         m.requests += 1;
         if resp.error.is_some() {
             m.errors += 1;
@@ -507,7 +510,9 @@ impl ShardLink {
             c.set_timeout(Some(Duration::from_secs(60)))?;
             self.client = Some(c);
         }
-        Ok(self.client.as_mut().expect("just connected"))
+        self.client
+            .as_mut()
+            .ok_or_else(|| Error::Coordinator("shard link: connect failed".into()))
     }
 
     /// Submit a search, reconnecting once if the link died since the

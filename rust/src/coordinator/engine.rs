@@ -94,15 +94,15 @@ impl Engine {
         let scan_entries =
             if index.quant().is_none() { manifest.entries() } else { &[] };
         for entry in scan_entries {
-            if entry.kind == "class_distances"
-                && entry.d == index.dim()
-                && entry.k.is_some_and(|k| k >= max_class)
-            {
+            if entry.kind == "class_distances" && entry.d == index.dim() {
+                let Some(entry_k) = entry.k.filter(|&k| k >= max_class) else {
+                    continue;
+                };
                 if let Ok(d) = PjrtDistances::from_manifest(
                     &client,
                     &manifest,
                     index.dim(),
-                    entry.k.expect("checked"),
+                    entry_k,
                 ) {
                     scanner = Some(d);
                     class_members = (0..index.params().n_classes)

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::{BatchScanStats, LatencyHistogram, OpsCounter};
+use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::run_batcher;
 use super::engine::EngineFactory;
@@ -119,7 +120,8 @@ impl SearchServer {
                     loop {
                         // take one batch under the lock, release before work
                         let batch = {
-                            let rx = batch_rx.lock().expect("poisoned");
+                            let rx = lock_unpoisoned(&batch_rx);
+                            // amlint: allow(lock_blocking, reason = "the guard IS the hand-off: idle workers queue on this lock until a batch arrives")
                             match rx.recv() {
                                 Ok(b) => b,
                                 Err(_) => return,
@@ -186,10 +188,11 @@ impl SearchServer {
             enqueued: Instant::now(),
             resp,
         };
-        let guard = self.tx.lock().expect("poisoned");
+        let guard = lock_unpoisoned(&self.tx);
         let tx = guard
             .as_ref()
             .ok_or_else(|| Error::Coordinator("server shutting down".into()))?;
+        // amlint: allow(lock_blocking, reason = "bounded-queue backpressure by design; holding the guard keeps shutdown from closing the channel mid-send")
         tx.send(req)
             .map_err(|_| Error::Coordinator("server shutting down".into()))
     }
@@ -267,7 +270,7 @@ impl SearchServer {
 
     /// Snapshot the metrics.
     pub fn metrics(&self) -> ServerMetrics {
-        let m = self.metrics.lock().expect("poisoned");
+        let m = lock_unpoisoned(&self.metrics);
         ServerMetrics {
             latency: m.latency.clone(),
             service: m.service.clone(),
@@ -281,11 +284,11 @@ impl SearchServer {
     /// Graceful shutdown: stop accepting, drain, join threads.
     pub fn shutdown(&self) {
         // drop the sender -> batcher drains & exits -> workers exit
-        *self.tx.lock().expect("poisoned") = None;
-        if let Some(b) = self.batcher.lock().expect("poisoned").take() {
+        *lock_unpoisoned(&self.tx) = None;
+        if let Some(b) = lock_unpoisoned(&self.batcher).take() {
             let _ = b.join();
         }
-        let mut workers = self.workers.lock().expect("poisoned");
+        let mut workers = lock_unpoisoned(&self.workers);
         for w in workers.drain(..) {
             let _ = w.join();
         }
@@ -353,7 +356,7 @@ fn serve_one_batch(
             // op counts merge with their per-stage split intact (the old
             // path lumped the per-request totals into score_ops).
             {
-                let mut m = metrics.lock().expect("poisoned");
+                let mut m = lock_unpoisoned(metrics);
                 m.batches += 1;
                 m.requests += requests;
                 m.ops.merge(&ops);

@@ -186,7 +186,7 @@ impl AmIndex {
                 // smallest class first (preserves the equal-size model)
                 (0..self.params.n_classes)
                     .min_by_key(|&i| self.partition.members(i).len())
-                    .expect("q >= 1")
+                    .unwrap_or(0)
             }
         };
         if self.binary_sparse && !x.iter().all(|&v| v == 0.0 || v == 1.0) {
@@ -671,9 +671,11 @@ pub fn two_empty_classes_fixture() -> AmIndex {
     let refs: [&[f32]; 4] =
         [empty.as_slice(), empty.as_slice(), c2.as_slice(), c3.as_slice()];
     let bank = MemoryBank::build(d, &refs, crate::memory::StorageRule::Sum)
+        // amlint: allow(panic, reason = "test-support fixture over constant inputs; only reachable from test code")
         .expect("fixture bank");
     let data =
         Dataset::from_flat(d, vec![1., 0., 0., 0., 1., 0., 1., 0., 0., 0., 1., 0.])
+            // amlint: allow(panic, reason = "test-support fixture over constant inputs; only reachable from test code")
             .expect("fixture data");
     let params = IndexParams { n_classes: 4, top_p: 2, ..Default::default() };
     AmIndex::from_parts(
@@ -683,6 +685,7 @@ pub fn two_empty_classes_fixture() -> AmIndex {
         vec![0, 0, 2, 2],
         data,
     )
+    // amlint: allow(panic, reason = "test-support fixture over constant inputs; only reachable from test code")
     .expect("fixture index")
 }
 

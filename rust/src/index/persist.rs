@@ -131,19 +131,21 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
     }])?;
     w.put(&p.greedy_cap_factor.unwrap_or(f64::NAN).to_le_bytes())?;
     // v4 quant header: the precision the artifact's payload encodes
-    match index.quant().map(|q| q.quantizer()) {
+    match index.quant() {
         None => w.put(&[0u8])?,
-        Some(Quantizer::Sq8(_)) => {
-            w.put(&[1u8])?;
-            w.put(&(index.quant().expect("checked").rerank() as u32).to_le_bytes())?;
-        }
-        Some(Quantizer::Pq(pq)) => {
-            w.put(&[2u8])?;
-            w.put(&(pq.m() as u32).to_le_bytes())?;
-            w.put(&(pq.bits() as u32).to_le_bytes())?;
-            w.put(&(index.quant().expect("checked").rerank() as u32).to_le_bytes())?;
-            w.put(&(pq.n_centroids() as u32).to_le_bytes())?;
-        }
+        Some(q) => match q.quantizer() {
+            Quantizer::Sq8(_) => {
+                w.put(&[1u8])?;
+                w.put(&(q.rerank() as u32).to_le_bytes())?;
+            }
+            Quantizer::Pq(pq) => {
+                w.put(&[2u8])?;
+                w.put(&(pq.m() as u32).to_le_bytes())?;
+                w.put(&(pq.bits() as u32).to_le_bytes())?;
+                w.put(&(q.rerank() as u32).to_le_bytes())?;
+                w.put(&(pq.n_centroids() as u32).to_le_bytes())?;
+            }
+        },
     }
 
     for v in 0..index.len() {

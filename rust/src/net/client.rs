@@ -264,13 +264,13 @@ impl NetClient {
         if self.outstanding == 0 {
             return Err(Error::Coordinator("net client: nothing in flight".into()));
         }
-        while self.ready.is_empty() {
+        loop {
+            if let Some((id, r)) = self.ready.pop_first() {
+                self.outstanding = self.outstanding.saturating_sub(1);
+                return Ok((id, r));
+            }
             self.pump()?;
         }
-        let id = *self.ready.keys().next().expect("non-empty");
-        let r = self.ready.remove(&id).expect("present");
-        self.outstanding = self.outstanding.saturating_sub(1);
-        Ok((id, r))
     }
 
     /// Blocking k-NN search: submit + wait.  `top_p`/`top_k` follow the
@@ -322,7 +322,13 @@ impl NetClient {
         let id = self.fresh_id();
         let reply =
             self.admin(Frame::Stats { id }, |f| matches!(f, Frame::StatsReply { .. }))?;
-        let Frame::StatsReply { json, .. } = reply else { unreachable!() };
+        let Frame::StatsReply { json, .. } = reply else {
+            // admin() only accepts the frame the predicate matched, but
+            // a typed error beats a panic inside a serving client
+            return Err(Error::Coordinator(
+                "net client: stats reply of unexpected type".into(),
+            ));
+        };
         Json::parse(&json)
     }
 

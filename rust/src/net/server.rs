@@ -44,6 +44,7 @@ use std::time::Duration;
 
 use crate::coordinator::{SearchResponse, SearchServer};
 use crate::error::{Error, Result};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 use crate::util::Json;
 
 use super::wire::{
@@ -220,7 +221,7 @@ impl NetServer {
     /// because a client sent a SHUTDOWN frame or because
     /// [`Self::shutdown`] was called from another thread.
     pub fn join(&self) {
-        let handle = self.accept.lock().expect("poisoned").take();
+        let handle = lock_unpoisoned(&self.accept).take();
         if let Some(h) = handle {
             let _ = h.join();
         }
@@ -255,16 +256,26 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             .spawn(move || loop {
                 // take one connection under the lock, release before work
                 let stream = {
-                    let guard = rx.lock().expect("poisoned");
+                    let guard = lock_unpoisoned(&rx);
+                    // amlint: allow(lock_blocking, reason = "the guard IS the hand-off: idle handlers queue on this lock until a connection arrives")
                     match guard.recv() {
                         Ok(s) => s,
                         Err(_) => return,
                     }
                 };
                 handle_connection(stream, &shared);
-            })
-            .expect("spawn connection handler");
-        handlers.push(h);
+            });
+        match h {
+            Ok(h) => handlers.push(h),
+            // thread exhaustion: serve with however many handlers did
+            // start (zero is handled below)
+            Err(_) => {}
+        }
+    }
+    if handlers.is_empty() {
+        // nothing can ever service a connection; accepting would strand
+        // clients in the queue forever
+        return;
     }
     for conn in listener.incoming() {
         if shared.down() {
@@ -318,9 +329,13 @@ impl ConnWriter {
         } else {
             frame.encode()
         };
-        if let Ok(mut s) = self.stream.lock() {
-            let _ = s.write_all(&bytes);
-        }
+        // recover from poisoning: a panicked writer must not silently
+        // eat every later frame on the connection (the stream itself is
+        // just an fd; there is no torn state to fear beyond a possibly
+        // truncated frame, which only this client observes)
+        let mut s = lock_unpoisoned(&self.stream);
+        // amlint: allow(lock_blocking, reason = "this mutex exists to serialize whole frames onto the socket; the 30s write timeout bounds the hold")
+        let _ = s.write_all(&bytes);
     }
 }
 
@@ -329,7 +344,7 @@ type Inflight = Arc<(Mutex<usize>, Condvar)>;
 
 fn release_slot(inflight: &Inflight, shared: &Shared) {
     let (m, cv) = &**inflight;
-    let mut n = m.lock().expect("poisoned");
+    let mut n = lock_unpoisoned(m);
     *n = n.saturating_sub(1);
     cv.notify_all();
     // the server-wide gauge moves in lockstep with the per-connection
@@ -390,15 +405,20 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
         let out = out.clone();
         let inflight = inflight.clone();
         let shared = shared.clone();
-        std::thread::Builder::new()
+        let spawned = std::thread::Builder::new()
             .name("amsearch-net-writer".into())
             .spawn(move || {
                 while let Ok(resp) = resp_rx.recv() {
                     out.send(&response_frame(resp));
                     release_slot(&inflight, &shared);
                 }
-            })
-            .expect("spawn connection writer")
+            });
+        match spawned {
+            Ok(h) => h,
+            // no writer means no response could ever be delivered;
+            // refuse the connection cleanly before any request is read
+            Err(_) => return,
+        }
     };
 
     if json {
@@ -533,11 +553,13 @@ fn dispatch_search(
     // guarantee non-blocking completion for coordinator workers
     {
         let (m, cv) = &**inflight;
-        let mut n = m.lock().expect("poisoned");
+        let mut n = lock_unpoisoned(m);
         while *n >= shared.cfg.max_inflight {
-            let (guard, _) = cv
-                .wait_timeout(n, Duration::from_millis(shared.cfg.poll_ms))
-                .expect("poisoned");
+            let (guard, _) = wait_timeout_unpoisoned(
+                cv,
+                n,
+                Duration::from_millis(shared.cfg.poll_ms),
+            );
             n = guard;
         }
         *n += 1;
@@ -704,5 +726,50 @@ mod tests {
         let worded = SearchResponse::failed(6, "engine said: shutting down the GPU");
         let Frame::Error(e) = response_frame(worded) else { panic!("not error") };
         assert_eq!(e.code, ERR_INTERNAL, "message text must not drive the code");
+    }
+
+    /// A backend that refuses every submit with a non-shape error — the
+    /// deterministic stand-in for a coordinator that is already
+    /// draining.  Lets the `ERR_SHUTTING_DOWN` dispatch path be pinned
+    /// without racing a real shutdown.
+    struct RefusingBackend;
+
+    impl Serveable for RefusingBackend {
+        fn submit(
+            &self,
+            _vector: Vec<f32>,
+            _top_p: usize,
+            _top_k: usize,
+            _id: u64,
+            _resp: SyncSender<SearchResponse>,
+        ) -> Result<()> {
+            Err(Error::Coordinator("server is draining".into()))
+        }
+
+        fn stats_json(&self) -> Json {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("dim".to_string(), Json::Num(2.0));
+            o.insert("n_vectors".to_string(), Json::Num(0.0));
+            Json::Obj(o)
+        }
+    }
+
+    #[test]
+    fn refused_submit_surfaces_as_typed_shutting_down_frame() {
+        let server = NetServer::bind(
+            Arc::new(RefusingBackend),
+            "127.0.0.1:0",
+            NetConfig::default(),
+        )
+        .unwrap();
+        let mut client =
+            crate::net::NetClient::connect(server.local_addr()).unwrap();
+        let id = client.submit(&[0.0, 1.0], 0, 0).unwrap();
+        let resp = client.wait_detailed(id).unwrap();
+        let e = resp.expect_err("refused submit must produce an ERROR frame");
+        assert_eq!(e.id, id);
+        assert_eq!(e.code, ERR_SHUTTING_DOWN);
+        drop(client);
+        server.shutdown();
     }
 }

@@ -295,7 +295,9 @@ fn check_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u64, usize)> {
         return Err(Error::Data(format!("wire: unsupported version {}", h[4])));
     }
     let ftype = h[5];
+    // amlint: allow(panic, reason = "h is a fixed [u8; 20]; 8..16 is 8 bytes by construction")
     let id = u64::from_le_bytes(h[8..16].try_into().expect("8 bytes"));
+    // amlint: allow(panic, reason = "h is a fixed [u8; 20]; 16..20 is 4 bytes by construction")
     let len = u32::from_le_bytes(h[16..20].try_into().expect("4 bytes"));
     if len > MAX_PAYLOAD {
         return Err(Error::Data(format!(
@@ -363,6 +365,7 @@ impl FrameBuffer {
             return Ok(None);
         }
         let header: [u8; HEADER_LEN] =
+            // amlint: allow(panic, reason = "buffered len >= HEADER_LEN checked above; the slice is exactly HEADER_LEN bytes")
             self.buf[..HEADER_LEN].try_into().expect("length checked");
         let (ftype, id, len) = check_header(&header)?;
         if self.buf.len() < HEADER_LEN + len {
@@ -391,16 +394,16 @@ impl<'a> Cur<'a> {
         Some(s)
     }
     fn u16(&mut self) -> Option<u16> {
-        self.take(2).map(|b| u16::from_le_bytes(b.try_into().expect("2")))
+        self.take(2).and_then(|b| b.try_into().ok()).map(u16::from_le_bytes)
     }
     fn u32(&mut self) -> Option<u32> {
-        self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4")))
+        self.take(4).and_then(|b| b.try_into().ok()).map(u32::from_le_bytes)
     }
     fn u64(&mut self) -> Option<u64> {
-        self.take(8).map(|b| u64::from_le_bytes(b.try_into().expect("8")))
+        self.take(8).and_then(|b| b.try_into().ok()).map(u64::from_le_bytes)
     }
     fn f32(&mut self) -> Option<f32> {
-        self.take(4).map(|b| f32::from_le_bytes(b.try_into().expect("4")))
+        self.take(4).and_then(|b| b.try_into().ok()).map(f32::from_le_bytes)
     }
     fn remaining(&self) -> usize {
         self.bytes.len() - self.pos
@@ -971,5 +974,20 @@ mod tests {
         assert_eq!(Frame::from_json(&v).unwrap_err().code, ERR_BAD_K);
         let v = Json::parse(r#"{"op":"nope","id":1}"#).unwrap();
         assert_eq!(Frame::from_json(&v).unwrap_err().code, ERR_BAD_FRAME);
+    }
+
+    /// The numeric error codes are wire protocol: clients match on
+    /// them, the README documents them, and `amlint`'s drift rule
+    /// requires every code to be pinned here.  Renumbering is a
+    /// protocol break, not a refactor.
+    #[test]
+    fn error_codes_are_stable() {
+        assert_eq!(ERR_BAD_FRAME, 1);
+        assert_eq!(ERR_BAD_DIM, 2);
+        assert_eq!(ERR_BAD_K, 3);
+        assert_eq!(ERR_SHUTTING_DOWN, 4);
+        assert_eq!(ERR_INTERNAL, 5);
+        assert_eq!(ERR_OVERLOADED, 6);
+        assert_eq!(VERSION, 1, "wire version bumps must be deliberate");
     }
 }

@@ -409,7 +409,7 @@ impl QueryLut<'_> {
     /// Unpruned approximate distance (tests / diagnostics).
     pub fn distance(&self, code: &[u8]) -> f32 {
         self.distance_pruned(code, f32::INFINITY)
-            .expect("infinite bound keeps every candidate")
+            .unwrap_or(f32::INFINITY)
     }
 }
 

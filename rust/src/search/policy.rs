@@ -39,7 +39,7 @@ impl AdaptivePolicy {
         let min = scores.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
         let mut sorted: Vec<f64> =
             scores.iter().map(|&s| (s as f64 - min).max(0.0)).collect();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        sorted.sort_by(|a, b| b.total_cmp(a));
         let total: f64 = sorted.iter().sum();
         if total <= 0.0 {
             // uniform scores: maximally ambiguous -> poll widest

@@ -1,12 +1,14 @@
 //! In-tree utility substrates (the offline build has no serde/rayon/clap,
 //! so these are built from scratch): JSON, scoped-thread parallelism,
-//! and CLI argument parsing.
+//! poison-tolerant locking, and CLI argument parsing.
 
 pub mod args;
 pub mod json;
 pub mod par;
 pub mod sha256;
+pub mod sync;
 
 pub use args::Args;
 pub use json::Json;
 pub use par::{concurrent_map, parallel_map, parallel_map_items};
+pub use sync::{lock_unpoisoned, wait_timeout_unpoisoned};

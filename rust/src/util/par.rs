@@ -103,8 +103,12 @@ where
 
 struct SendPtr<T>(*mut T);
 // SAFETY: the pointer is only dereferenced at disjoint indices, each by a
-// single thread, within the scope that owns the Vec.
+// single thread, within the scope that owns the Vec, so moving the
+// wrapper across threads cannot create aliased writes.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared references to the wrapper only ever `.add(i)` with
+// indices claimed through the atomic counter — one writer per slot —
+// so concurrent `&SendPtr` access is race-free.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]

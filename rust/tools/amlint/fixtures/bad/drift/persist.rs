@@ -1,0 +1,12 @@
+// amlint fixture: rule 3 (drift), persist side. VERSION was bumped to 5
+// but no `version >= 5` gate exists, and one gate reaches beyond it.
+const VERSION: u32 = 5;
+pub(crate) const SHARD_MANIFEST_VERSION: u32 = 3;
+
+fn load(version: u32) {
+    if version == 0 || version == SHARD_MANIFEST_VERSION || version > VERSION {
+        return;
+    }
+    let _ = version >= 2;
+    let _ = version >= 9;
+}

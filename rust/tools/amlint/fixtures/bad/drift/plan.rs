@@ -1,0 +1,7 @@
+// amlint fixture: rule 3 (drift), plan side. The manifest check ignores
+// the shared SHARD_MANIFEST_VERSION constant.
+fn load_manifest(version: u32) {
+    if version != 3 {
+        return;
+    }
+}

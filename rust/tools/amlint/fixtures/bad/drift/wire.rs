@@ -1,0 +1,5 @@
+// amlint fixture: rule 3 (drift), wire side. ERR_UNTESTED never shows
+// up in a test assertion, and the codes skip 3.
+pub const ERR_BAD_FRAME: u16 = 1;
+pub const ERR_UNTESTED: u16 = 2;
+pub const ERR_GAPPED: u16 = 4;

@@ -1,0 +1,34 @@
+// amlint fixture: rule 2 (lock discipline). Not compiled — read as data
+// by tests/fixtures.rs with registry ["tx", "workers", "metrics"];
+// expected findings come from the `amlint-fixture: expect` markers.
+
+pub fn out_of_order(&self) {
+    let m = self.metrics.lock().unwrap_or_default();
+    let t = self.tx.lock().unwrap_or_default(); // amlint-fixture: expect lock_order
+}
+
+pub fn blocking_under_guard(&self) {
+    let guard = self.tx.lock().unwrap_or_default();
+    guard.send(1); // amlint-fixture: expect lock_blocking
+}
+
+pub fn lock_in_closure(&self) {
+    // tricky case: a guard acquired inside a closure body still counts
+    self.items.iter().for_each(|w| {
+        let g = self.tx.lock().unwrap_or_default();
+        g.send(w); // amlint-fixture: expect lock_blocking
+    });
+    self.out.send(1); // not flagged: the closure guard died at its block
+}
+
+pub fn undeclared(&self) {
+    let g = self.secret.lock().unwrap_or_default(); // amlint-fixture: expect lock_registry
+}
+
+pub fn fine(&self) {
+    let t = self.tx.lock().unwrap_or_default();
+    let w = self.workers.lock().unwrap_or_default(); // in declared order: ok
+    drop(t);
+    drop(w);
+    self.out.send(1); // ok: both guards dropped
+}

@@ -1,0 +1,48 @@
+// amlint fixture: rule 1 (panic-freedom). Not compiled — read as data
+// by tests/fixtures.rs, which derives the expected findings from the
+// expectation markers on the lines below.
+
+pub fn serve(x: Option<u32>) -> u32 {
+    let a = x.unwrap(); // amlint-fixture: expect panic
+    let b = x.expect("present"); // amlint-fixture: expect panic
+    if a == 0 {
+        unreachable!("a is never zero"); // amlint-fixture: expect panic
+    }
+    match b {
+        0 => panic!("no"), // amlint-fixture: expect panic
+        n => n,
+    }
+}
+
+pub fn lookalikes(x: Option<u32>) -> u32 {
+    // none of these are findings
+    let s = "call unwrap() or panic!() today";
+    let _ = s;
+    let _ = std::panic::catch_unwind(|| 1);
+    x.unwrap_or(7)
+}
+
+mod outer {
+    #[cfg(test)]
+    mod nested_tests {
+        // tricky case: unwrap inside a *nested* #[cfg(test)] module —
+        // must NOT be flagged
+        fn helper(x: Option<u32>) -> u32 {
+            x.unwrap()
+        }
+
+        #[test]
+        fn t() {
+            assert_eq!(helper(Some(1)), 1);
+        }
+    }
+
+    pub fn still_serving(x: Option<u32>) -> u32 {
+        x.unwrap() // amlint-fixture: expect panic
+    }
+}
+
+pub fn annotated(x: Option<u32>) -> u32 {
+    // amlint: allow(panic, reason = "fixture: annotated site is exempt")
+    x.unwrap()
+}

@@ -1,0 +1,25 @@
+// amlint fixture: rule 4 (SAFETY audit). Not compiled — read as data by
+// tests/fixtures.rs; expected findings come from the
+// `amlint-fixture: expect` markers.
+
+pub fn write_slot(p: *mut u32) {
+    unsafe { *p = 1 } // amlint-fixture: expect safety
+}
+
+// SAFETY: stale comment separated by a blank line — does not count
+
+pub fn write_slot_again(p: *mut u32) {
+    unsafe { *p = 2 } // amlint-fixture: expect safety
+}
+
+// SAFETY: the pointer is derived from a live &mut and never aliased;
+// a multi-line justification directly above the item counts.
+pub unsafe fn documented(p: *mut u32) {
+    // SAFETY: caller contract forwarded from `documented`
+    unsafe { *p = 3 } // ok
+}
+
+struct Token(*const u8);
+unsafe impl Send for Token {} // amlint-fixture: expect safety
+// SAFETY: Token is a value type; the pointer is never dereferenced
+unsafe impl Sync for Token {} // ok

@@ -1,0 +1,33 @@
+// amlint fixture: every rule's escape hatch, used correctly. Registry
+// for the lock rule: ["tx", "workers", "metrics"].
+
+pub fn checked_invariant(x: Option<u32>) -> u32 {
+    // amlint: allow(panic, reason = "x is Some: filled two lines above")
+    x.unwrap()
+}
+
+pub fn same_line(x: Option<u32>) -> u32 {
+    x.unwrap() // amlint: allow(panic, reason = "fixture: same-line form")
+}
+
+pub fn handoff(&self) {
+    let guard = self.tx.lock().unwrap_or_default();
+    // amlint: allow(lock_blocking, reason = "bounded channel; send cannot wedge")
+    guard.send(1);
+}
+
+pub fn deliberate_inversion(&self) {
+    let m = self.metrics.lock().unwrap_or_default();
+    // amlint: allow(lock_order, reason = "fixture: documented inversion")
+    let t = self.tx.lock().unwrap_or_default();
+}
+
+pub fn scratch_mutex(&self) {
+    // amlint: allow(lock_registry, reason = "fixture: local scratch lock")
+    let g = self.scratch.lock().unwrap_or_default();
+}
+
+pub fn raw(p: *mut u32) {
+    // SAFETY: p points into a live, exclusively-owned allocation
+    unsafe { *p = 1 }
+}

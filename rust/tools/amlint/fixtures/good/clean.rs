@@ -1,0 +1,32 @@
+// amlint fixture: a file every rule must pass byte-for-byte. Registry
+// for the lock rule: ["tx", "workers", "metrics"].
+
+pub fn serve(x: Option<u32>) -> u32 {
+    x.unwrap_or_default().max(1)
+}
+
+pub fn strings_and_comments() -> &'static str {
+    // unwrap() and panic! in comments are not code
+    /* neither in /* nested */ block comments: x.unwrap() */
+    "panic!(\"in a string\") and r#\"x.unwrap()\"# are literals"
+}
+
+pub fn ordered_locks(&self) {
+    let t = self.tx.lock().unwrap_or_default();
+    let w = self.workers.lock().unwrap_or_default();
+    drop(w);
+    drop(t);
+    let m = self.metrics.lock().unwrap_or_default();
+    *m += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap_and_block() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let g = self.tx.lock().unwrap();
+        g.send(1);
+    }
+}

@@ -1,0 +1,401 @@
+//! Rule 3: protocol/format drift.  Cross-file checks that keep the wire
+//! protocol and the persisted-index format constants in lockstep with
+//! the tests and the README:
+//!
+//! * every `ERR_*` code in `net/wire.rs` is unique, contiguous from 1,
+//!   asserted in at least one test, and documented in a README table
+//!   row carrying the matching numeric code;
+//! * every `ERR_*` name mentioned in the README actually exists (no
+//!   stale constants surviving a rename);
+//! * `index/persist.rs` rejects future versions (`version > VERSION`),
+//!   reserves the shard-manifest number (`version ==
+//!   SHARD_MANIFEST_VERSION`), and every `version >= N` feature gate
+//!   satisfies `2 <= N <= VERSION`, with a gate for the current
+//!   `VERSION` present (bumping the constant without gating the new
+//!   field is drift);
+//! * `cluster/plan.rs` pins its manifest check to
+//!   `SHARD_MANIFEST_VERSION`;
+//! * the README formats table has a `| vN |` row for every version
+//!   1..=`VERSION`, the current row says "current", and the
+//!   shard-manifest row says "shard".
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{lex, Kind, Tok};
+use crate::rules::Finding;
+
+fn code(toks: &[Tok]) -> Vec<&Tok> {
+    toks.iter().filter(|t| t.kind != Kind::Comment).collect()
+}
+
+/// `const <name>: <ty> = <int literal>;` declarations whose name starts
+/// with `prefix`, as `(name, value, line)`.
+fn int_consts(toks: &[Tok], prefix: &str, ty: &str) -> Vec<(String, u64, usize)> {
+    let c = code(toks);
+    let mut out = Vec::new();
+    for i in 0..c.len() {
+        if c[i].text != "const" || i + 6 >= c.len() {
+            continue;
+        }
+        let name = &c[i + 1];
+        if name.kind != Kind::Ident || !name.text.starts_with(prefix) {
+            continue;
+        }
+        if c[i + 2].text != ":" || c[i + 3].text != ty || c[i + 4].text != "=" {
+            continue;
+        }
+        let lit = &c[i + 5];
+        if lit.kind != Kind::Lit || c[i + 6].text != ";" {
+            continue;
+        }
+        if let Ok(v) = lit.text.parse::<u64>() {
+            out.push((name.text.clone(), v, name.line));
+        }
+    }
+    out
+}
+
+/// Does the code token stream contain `pattern` as a consecutive
+/// sequence of token texts?
+fn has_seq(toks: &[Tok], pattern: &[&str]) -> bool {
+    let c = code(toks);
+    c.windows(pattern.len())
+        .any(|w| w.iter().zip(pattern).all(|(t, p)| t.text == *p))
+}
+
+/// All `version >= <int>` gates in the stream, as `(value, line)`.
+fn ge_gates(toks: &[Tok]) -> Vec<(u64, usize)> {
+    let c = code(toks);
+    let mut out = Vec::new();
+    for w in c.windows(4) {
+        if w[0].text == "version" && w[1].text == ">" && w[2].text == "=" {
+            if let Ok(v) = w[3].text.parse::<u64>() {
+                out.push((v, w[3].line));
+            }
+        }
+    }
+    out
+}
+
+/// Inputs to the drift rule: the relevant sources plus the set of
+/// identifiers appearing in test code anywhere in the workspace.
+pub struct DriftInput<'a> {
+    /// `rust/src/net/wire.rs` source.
+    pub wire: &'a str,
+    /// `rust/src/index/persist.rs` source.
+    pub persist: &'a str,
+    /// `rust/src/cluster/plan.rs` source.
+    pub plan: &'a str,
+    /// `README.md` contents.
+    pub readme: &'a str,
+    /// Idents inside `#[cfg(test)]` regions of `rust/src` plus all
+    /// idents of `rust/tests/*.rs`.
+    pub test_idents: &'a BTreeSet<String>,
+}
+
+/// Run every drift check, appending findings.
+pub fn check(input: &DriftInput<'_>, out: &mut Vec<Finding>) {
+    let wire_toks = lex(input.wire);
+    let persist_toks = lex(input.persist);
+    let plan_toks = lex(input.plan);
+    let wire_file = "rust/src/net/wire.rs";
+    let persist_file = "rust/src/index/persist.rs";
+    let plan_file = "rust/src/cluster/plan.rs";
+    let readme_file = "README.md";
+    let push = |out: &mut Vec<Finding>, file: &str, line: usize, message: String| {
+        out.push(Finding { file: file.to_string(), line, rule: "drift", message });
+    };
+
+    // --- wire error codes ---------------------------------------------
+    let errs = int_consts(&wire_toks, "ERR_", "u16");
+    if errs.is_empty() {
+        push(out, wire_file, 1, "no `ERR_*: u16` constants found".into());
+    }
+    let mut seen = BTreeSet::new();
+    for (name, v, line) in &errs {
+        if !seen.insert(*v) {
+            push(out, wire_file, *line, format!("`{name}` reuses error code {v}"));
+        }
+    }
+    for want in 1..=errs.len() as u64 {
+        if !seen.contains(&want) {
+            push(
+                out,
+                wire_file,
+                1,
+                format!(
+                    "error codes are not contiguous from 1: {} constants but \
+                     code {want} is unassigned",
+                    errs.len()
+                ),
+            );
+        }
+    }
+    for (name, v, line) in &errs {
+        if !input.test_idents.contains(name) {
+            push(
+                out,
+                wire_file,
+                *line,
+                format!("`{name}` (code {v}) is not asserted by any test"),
+            );
+        }
+        let cell = format!("| {v} |");
+        let documented = input
+            .readme
+            .lines()
+            .any(|l| l.contains(name.as_str()) && l.contains(&cell));
+        if !documented {
+            push(
+                out,
+                wire_file,
+                *line,
+                format!(
+                    "`{name}` (code {v}) has no README error-table row \
+                     containing both the name and `{cell}`"
+                ),
+            );
+        }
+    }
+    // stale ERR_* mentions in the README
+    let known: BTreeSet<&str> = errs.iter().map(|(n, _, _)| n.as_str()).collect();
+    for (ln, line) in input.readme.lines().enumerate() {
+        let mut rest = line;
+        while let Some(pos) = rest.find("ERR_") {
+            let word: String = rest[pos..]
+                .chars()
+                .take_while(|c| c.is_ascii_uppercase() || *c == '_' || c.is_ascii_digit())
+                .collect();
+            if word.len() > 4 && !known.contains(word.as_str()) {
+                push(
+                    out,
+                    readme_file,
+                    ln + 1,
+                    format!("README mentions `{word}`, which does not exist in net/wire.rs"),
+                );
+            }
+            rest = &rest[pos + word.len().max(4)..];
+        }
+    }
+
+    // --- persist format versions --------------------------------------
+    let version = int_consts(&persist_toks, "VERSION", "u32")
+        .iter()
+        .find(|(n, _, _)| n == "VERSION")
+        .map(|&(_, v, _)| v);
+    let shard = int_consts(&persist_toks, "SHARD_MANIFEST_VERSION", "u32")
+        .first()
+        .map(|&(_, v, _)| v);
+    match (version, shard) {
+        (Some(version), Some(shard)) => {
+            if !has_seq(&persist_toks, &["version", ">", "VERSION"]) {
+                push(
+                    out,
+                    persist_file,
+                    1,
+                    "load gate `version > VERSION` (reject future formats) not found"
+                        .into(),
+                );
+            }
+            if !has_seq(&persist_toks, &["version", "=", "=", "SHARD_MANIFEST_VERSION"]) {
+                push(
+                    out,
+                    persist_file,
+                    1,
+                    "load gate reserving `SHARD_MANIFEST_VERSION` not found".into(),
+                );
+            }
+            let gates = ge_gates(&persist_toks);
+            for (v, line) in &gates {
+                if *v < 2 || *v > version {
+                    push(
+                        out,
+                        persist_file,
+                        *line,
+                        format!(
+                            "feature gate `version >= {v}` is outside 2..={version} \
+                             (VERSION)"
+                        ),
+                    );
+                }
+            }
+            if !gates.iter().any(|(v, _)| *v == version) {
+                push(
+                    out,
+                    persist_file,
+                    1,
+                    format!(
+                        "VERSION is {version} but no `version >= {version}` feature \
+                         gate exists — bumped the constant without gating the new \
+                         fields?"
+                    ),
+                );
+            }
+            if !has_seq(&plan_toks, &["version", "!", "=", "SHARD_MANIFEST_VERSION"]) {
+                push(
+                    out,
+                    plan_file,
+                    1,
+                    "shard-manifest check `version != SHARD_MANIFEST_VERSION` not found"
+                        .into(),
+                );
+            }
+            // README formats table
+            for v in 1..=version {
+                let cell = format!("| v{v} |");
+                match input.readme.lines().find(|l| l.contains(&cell)) {
+                    None => push(
+                        out,
+                        readme_file,
+                        1,
+                        format!("README formats table has no `{cell}` row"),
+                    ),
+                    Some(row) => {
+                        let is_current = row.to_lowercase().contains("current");
+                        if v == version && !is_current {
+                            push(
+                                out,
+                                readme_file,
+                                1,
+                                format!("README `{cell}` row must say \"current\""),
+                            );
+                        }
+                        if v != version && is_current {
+                            push(
+                                out,
+                                readme_file,
+                                1,
+                                format!(
+                                    "README `{cell}` row says \"current\" but VERSION \
+                                     is {version}"
+                                ),
+                            );
+                        }
+                        if v == shard && !row.to_lowercase().contains("shard") {
+                            push(
+                                out,
+                                readme_file,
+                                1,
+                                format!(
+                                    "README `{cell}` row must mention the shard \
+                                     manifest"
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        _ => push(
+            out,
+            persist_file,
+            1,
+            "could not parse `VERSION` / `SHARD_MANIFEST_VERSION` constants".into(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIRE_OK: &str = r#"
+        pub const ERR_A: u16 = 1;
+        pub const ERR_B: u16 = 2;
+    "#;
+    const PERSIST_OK: &str = r#"
+        const VERSION: u32 = 4;
+        pub(crate) const SHARD_MANIFEST_VERSION: u32 = 3;
+        fn load(version: u32) {
+            if version == 0 || version == SHARD_MANIFEST_VERSION || version > VERSION {}
+            let _ = version >= 2;
+            let _ = version >= 4;
+        }
+    "#;
+    const PLAN_OK: &str = "fn f(version: u32) { if version != SHARD_MANIFEST_VERSION {} }";
+    const README_OK: &str = r#"
+| code | name | meaning |
+|---|---|---|
+| 1 | `ERR_A` | a |
+| 2 | `ERR_B` | b |
+
+| version | notes |
+|---|---|
+| v1 | base |
+| v2 | top-k |
+| v3 | shard manifest |
+| v4 | quant (current) |
+"#;
+
+    fn run(wire: &str, persist: &str, plan: &str, readme: &str, tests: &[&str]) -> Vec<Finding> {
+        let test_idents: BTreeSet<String> = tests.iter().map(|s| s.to_string()).collect();
+        let mut out = Vec::new();
+        check(
+            &DriftInput { wire, persist, plan, readme, test_idents: &test_idents },
+            &mut out,
+        );
+        out
+    }
+
+    #[test]
+    fn clean_tree_passes() {
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn untested_and_undocumented_codes_flagged() {
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A"]);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("ERR_B"));
+        assert!(got[0].message.contains("not asserted"));
+        let readme_missing = README_OK.replace("| 2 | `ERR_B` | b |\n", "");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme_missing, &["ERR_A", "ERR_B"]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("error-table row"));
+    }
+
+    #[test]
+    fn stale_readme_constant_flagged() {
+        let readme = format!("{README_OK}\nAlso see `ERR_GONE`.\n");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("ERR_GONE"));
+    }
+
+    #[test]
+    fn duplicate_and_gapped_codes_flagged() {
+        let wire = "pub const ERR_A: u16 = 1;\npub const ERR_B: u16 = 1;";
+        let got = run(wire, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        assert!(got.iter().any(|f| f.message.contains("reuses")));
+        assert!(got.iter().any(|f| f.message.contains("contiguous")));
+    }
+
+    #[test]
+    fn version_bump_without_gate_flagged() {
+        let persist = PERSIST_OK.replace("VERSION: u32 = 4", "VERSION: u32 = 5");
+        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        assert!(
+            got.iter().any(|f| f.message.contains("no `version >= 5` feature gate")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn gate_beyond_version_flagged() {
+        let persist = PERSIST_OK.replace("version >= 4", "version >= 9");
+        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        assert!(got.iter().any(|f| f.message.contains("outside 2..=4")), "{got:?}");
+    }
+
+    #[test]
+    fn readme_version_rows_checked() {
+        let readme = README_OK.replace("| v4 | quant (current) |", "| v4 | quant |");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        assert!(got.iter().any(|f| f.message.contains("must say \"current\"")), "{got:?}");
+        let readme = README_OK.replace("| v3 | shard manifest |", "| v3 | reserved (current) |");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        assert!(got.iter().any(|f| f.message.contains("shard")), "{got:?}");
+        assert!(got.iter().any(|f| f.message.contains("but VERSION")), "{got:?}");
+    }
+}

@@ -1,0 +1,316 @@
+//! A minimal hand-rolled Rust lexer: just enough token structure for the
+//! rule engine — identifiers, punctuation, literals, comments, lifetimes
+//! — with line numbers, and with strings/comments properly consumed so a
+//! `panic!` inside a string literal never looks like code.
+//!
+//! Deliberately not a full Rust lexer: float-literal edge cases may split
+//! into several `Lit` tokens and shebang/frontmatter is not handled.
+//! Neither affects any rule: rules only match identifier/punctuation
+//! sequences outside comments and literals.
+
+/// Token kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident,
+    /// Single punctuation character.
+    Punct,
+    /// String / char / byte / numeric literal.
+    Lit,
+    /// Line or block comment (text retained for annotation parsing).
+    Comment,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+}
+
+/// One lexed token.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token kind.
+    pub kind: Kind,
+    /// Raw token text.
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a token stream.  Unknown bytes become `Punct` tokens;
+/// the lexer never fails.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let text_of = |a: usize, b: usize| -> String { chars[a..b].iter().collect() };
+    let count_lines = |a: usize, b: usize| -> usize {
+        chars[a..b].iter().filter(|&&c| c == '\n').count()
+    };
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Comment, text: text_of(i, j), line });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Comment, text: text_of(i, j), line: start_line });
+            i = j;
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# / br#"..."#
+        if c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                j += 1;
+                // scan for `"` followed by `hashes` hash marks
+                'raw: while j < n {
+                    if chars[j] == '"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while k < n && seen < hashes && chars[k] == '#' {
+                            seen += 1;
+                            k += 1;
+                        }
+                        if seen == hashes {
+                            j = k;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                let start_line = line;
+                line += count_lines(i, j);
+                toks.push(Tok { kind: Kind::Lit, text: text_of(i, j), line: start_line });
+                i = j;
+                continue;
+            }
+            // not a raw string: fall through to ident handling
+        }
+        // plain / byte strings
+        if c == '"' || (c == 'b' && i + 1 < n && chars[i + 1] == '"') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            let j = j.min(n);
+            let start_line = line;
+            line += count_lines(i, j);
+            toks.push(Tok { kind: Kind::Lit, text: text_of(i, j), line: start_line });
+            i = j;
+            continue;
+        }
+        // lifetime vs char literal
+        if c == '\'' {
+            let next_is_ident =
+                i + 1 < n && (chars[i + 1].is_alphanumeric() || chars[i + 1] == '_');
+            let closes = i + 2 < n && chars[i + 2] == '\'';
+            if next_is_ident && !closes {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Tok { kind: Kind::Lifetime, text: text_of(i, j), line });
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '\'' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            let j = j.min(n);
+            toks.push(Tok { kind: Kind::Lit, text: text_of(i, j), line });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: text_of(i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = chars[j];
+                if d == '.' {
+                    // stop at `..` / method calls on numbers; continue
+                    // through a decimal point followed by a digit
+                    if j + 1 < n && chars[j + 1].is_ascii_digit() {
+                        j += 1;
+                        continue;
+                    }
+                    break;
+                }
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok { kind: Kind::Lit, text: text_of(i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_lits() {
+        let got = kinds("let x = 42;");
+        assert_eq!(
+            got,
+            vec![
+                (Kind::Ident, "let".into()),
+                (Kind::Ident, "x".into()),
+                (Kind::Punct, "=".into()),
+                (Kind::Lit, "42".into()),
+                (Kind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn panics_inside_strings_are_literals() {
+        let toks = lex(r#"let s = "panic!(x.unwrap())";"#);
+        assert!(toks.iter().all(|t| t.kind != Kind::Ident || t.text != "panic"));
+        assert!(toks.iter().any(|t| t.kind == Kind::Lit && t.text.contains("panic")));
+    }
+
+    #[test]
+    fn comments_are_retained_with_lines() {
+        let toks = lex("// one\nlet x = 1; // two\n/* three\nspans */ let y = 2;");
+        let comments: Vec<(usize, &str)> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Comment)
+            .map(|t| (t.line, t.text.as_str()))
+            .collect();
+        assert_eq!(comments.len(), 3);
+        assert_eq!(comments[0], (1, "// one"));
+        assert_eq!(comments[1].0, 2);
+        assert_eq!(comments[2].0, 3);
+        // the ident after the multi-line block comment is on line 4
+        let y = toks.iter().find(|t| t.text == "y").expect("y");
+        assert_eq!(y.line, 4);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* a /* b */ c */ fn f() {}");
+        assert_eq!(toks[0].kind, Kind::Comment);
+        assert_eq!(toks[1].text, "fn");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let lits: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lit)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(lits.contains(&"'x'"));
+    }
+
+    #[test]
+    fn raw_strings_consume_hashes() {
+        let toks = lex(r##"let s = r#"has "quotes" and unwrap()"#; let t = 1;"##);
+        assert!(toks.iter().any(|t| t.kind == Kind::Lit && t.text.contains("quotes")));
+        assert!(toks.iter().any(|t| t.text == "t"));
+        assert!(!toks.iter().any(|t| t.kind == Kind::Ident && t.text == "unwrap"));
+    }
+
+    #[test]
+    fn range_expressions_do_not_eat_idents() {
+        let got = kinds("for i in 0..n_shards {}");
+        assert!(got.contains(&(Kind::Lit, "0".into())));
+        assert!(got.contains(&(Kind::Ident, "n_shards".into())));
+    }
+
+    #[test]
+    fn unterminated_string_does_not_hang_or_panic() {
+        let toks = lex("let s = \"open");
+        assert_eq!(toks.last().map(|t| t.kind), Some(Kind::Lit));
+    }
+}

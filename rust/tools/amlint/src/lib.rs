@@ -1,0 +1,189 @@
+//! `amlint` — repo-specific static analysis for the `amsearch` serving
+//! stack.  Four rule classes (see [`rules`] and [`drift`]):
+//!
+//! 1. panic-freedom in the serving path (`panic`),
+//! 2. lock discipline against a declared mutex registry (`lock_order`,
+//!    `lock_blocking`, `lock_registry`),
+//! 3. protocol/format drift between constants, tests, and README
+//!    (`drift`),
+//! 4. `// SAFETY:` comments on every `unsafe` (`safety`).
+//!
+//! Zero dependencies, like the rest of the workspace: a hand-rolled
+//! lexer ([`lexer`]) feeds a token-level rule engine.  Findings are
+//! suppressed per-site with `// amlint: allow(<rule>, reason = "...")`
+//! on the line above (or the same line as) the offending code; the
+//! reason string is mandatory and must be non-empty.
+
+pub mod drift;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+pub use rules::Finding;
+
+/// Top-level `rust/src` directories where the panic rule applies (the
+/// serving path: a panicking handler thread breaks the
+/// exactly-one-response guarantee and poisons shared mutexes).
+pub const PANIC_DIRS: [&str; 6] =
+    ["net", "coordinator", "cluster", "search", "index", "quant"];
+
+/// The declared mutex registries: for each file, its mutexes in
+/// acquisition order.  A mutex may only be taken while holding mutexes
+/// that appear strictly earlier in its file's list; taking a mutex that
+/// is not listed at all is a `lock_registry` finding.
+///
+/// Paths are relative to `rust/src`.  Names are the receiver identifier
+/// at the lock site (`self.shared.metrics.lock()` registers as
+/// `metrics`; `lock_unpoisoned(&self.tx)` registers as `tx`).
+pub const LOCK_REGISTRIES: [(&str, &[&str]); 3] = [
+    // accept-thread handle, handler-pool receiver, pipelining window,
+    // per-connection writer
+    ("net/server.rs", &["accept", "rx", "m", "stream"]),
+    // batch funnel receiver, submit sender, batcher handle, worker
+    // handles, metrics
+    ("coordinator/server.rs", &["batch_rx", "tx", "batcher", "workers", "metrics"]),
+    // request receiver, submit sender, worker handles, metrics, cached
+    // index info
+    ("cluster/router.rs", &["req_rx", "tx", "workers", "metrics", "index_info"]),
+];
+
+/// Recursively collect `*.rs` files under `dir`, as paths relative to
+/// `dir`, sorted for deterministic output.
+fn rs_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, prefix: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            let rel = prefix.join(entry.file_name());
+            if path.is_dir() {
+                walk(&path, &rel, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(rel);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(dir, Path::new(""), &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel))
+        .map_err(|e| format!("amlint: cannot read {rel}: {e}"))
+}
+
+/// Run every rule over the repo rooted at `root` (the directory holding
+/// `rust/` and `README.md`).  Returns findings sorted by file then
+/// line; an empty list means the tree is clean.
+pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let src_root = root.join("rust/src");
+    let mut findings = Vec::new();
+    let mut test_idents: BTreeSet<String> = BTreeSet::new();
+    let mut sources: Vec<(String, String)> = Vec::new();
+
+    for rel in rs_files(&src_root).map_err(|e| format!("amlint: walk rust/src: {e}"))? {
+        let rel_str = rel.to_string_lossy().replace('\\', "/");
+        let text = read(root, &format!("rust/src/{rel_str}"))?;
+        sources.push((rel_str, text));
+    }
+    for (rel_str, text) in &sources {
+        let toks = lexer::lex(text);
+        let display = format!("rust/src/{rel_str}");
+        let top = rel_str.split('/').next().unwrap_or("");
+        if PANIC_DIRS.contains(&top) {
+            rules::rule_panic(&display, &toks, &mut findings);
+        }
+        rules::rule_safety(&display, &toks, &mut findings);
+        if let Some((_, registry)) =
+            LOCK_REGISTRIES.iter().find(|(f, _)| f == rel_str)
+        {
+            rules::rule_locks(&display, &toks, registry, &mut findings);
+        }
+        test_idents.extend(rules::idents_in_test_regions(&toks));
+    }
+
+    // integration tests are all test code: every ident counts
+    let tests_root = root.join("rust/tests");
+    if tests_root.is_dir() {
+        for rel in
+            rs_files(&tests_root).map_err(|e| format!("amlint: walk rust/tests: {e}"))?
+        {
+            let rel_str = rel.to_string_lossy().replace('\\', "/");
+            let text = read(root, &format!("rust/tests/{rel_str}"))?;
+            for t in lexer::lex(&text) {
+                if t.kind == lexer::Kind::Ident {
+                    test_idents.insert(t.text);
+                }
+            }
+        }
+    }
+
+    let find = |path: &str| -> &str {
+        sources
+            .iter()
+            .find(|(rel, _)| rel == path)
+            .map(|(_, text)| text.as_str())
+            .unwrap_or("")
+    };
+    let readme = read(root, "README.md")?;
+    drift::check(
+        &drift::DriftInput {
+            wire: find("net/wire.rs"),
+            persist: find("index/persist.rs"),
+            plan: find("cluster/plan.rs"),
+            readme: &readme,
+            test_idents: &test_idents,
+        },
+        &mut findings,
+    );
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}
+
+/// Locate the repo root: walk up from `start` looking for a directory
+/// that contains both `rust/src` and `README.md`.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust/src").is_dir() && dir.join("README.md").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registries_cover_declared_files_only() {
+        for (file, registry) in LOCK_REGISTRIES {
+            assert!(!registry.is_empty(), "{file} registry is empty");
+            let unique: BTreeSet<&str> = registry.iter().copied().collect();
+            assert_eq!(unique.len(), registry.len(), "{file} registry has duplicates");
+        }
+    }
+
+    #[test]
+    fn repo_is_clean() {
+        // the linter's own acceptance test: zero unannotated findings on
+        // the live tree (mirrors `cargo run -p amlint` in CI)
+        let here = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = find_root(here).expect("repo root above tools/amlint");
+        let findings = run(&root).expect("lint run");
+        assert!(
+            findings.is_empty(),
+            "repo has {} unannotated findings:\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! CLI driver: `cargo run -p amlint [--release] [-- --root <dir>]`.
+//! Prints one `file:line: rule: message` per finding and exits 1 if any
+//! were found, 0 on a clean tree.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!(
+                    "amlint: repo-specific static analysis for amsearch\n\
+                     usage: amlint [--root <repo-root>]\n\
+                     rules: panic, lock_order, lock_blocking, lock_registry, \
+                     safety, drift\n\
+                     suppress per-site with: // amlint: allow(<rule>, reason = \"...\")"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("amlint: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let start = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            match amlint::find_root(&start) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "amlint: no repo root (rust/src + README.md) at or above \
+                         {} — pass --root",
+                        start.display()
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+    match amlint::run(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("amlint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!("amlint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,693 @@
+//! The four repo-specific rule classes, implemented over the token
+//! stream from [`crate::lexer`]:
+//!
+//! 1. `panic` — no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/
+//!    `unimplemented!` outside `#[cfg(test)]` code in serving-path
+//!    files, unless tagged `// amlint: allow(panic, reason = "...")`.
+//! 2. `lock_order` / `lock_blocking` / `lock_registry` — a declared
+//!    per-file registry of mutexes with a partial acquisition order;
+//!    flags out-of-order nesting, blocking calls made while a guard is
+//!    held, and locks on mutexes missing from the registry.
+//! 3. drift — cross-file; lives in [`crate::drift`].
+//! 4. `safety` — every `unsafe` must carry a `// SAFETY:` comment in
+//!    the contiguous comment block directly above it (or on its line).
+//!
+//! The lock rules are intra-procedural and textual: a guard is tracked
+//! from its acquisition token to the end of its enclosing block (`let` /
+//! `if let` / `while let` / `match` bindings), to the end of its
+//! statement (un-bound temporaries), or to an explicit `drop(guard)`.
+//! That over-approximates guard lifetimes (a `let`-bound value that is
+//! not actually a guard is still tracked), which can only produce
+//! findings to annotate, never silently missed ones.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{Kind, Tok};
+
+/// Methods that panic on the error/none case.
+const PANIC_METHODS: [&str; 4] = ["unwrap", "unwrap_err", "expect", "expect_err"];
+/// Macros that unconditionally panic.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Calls that can block indefinitely while a guard is held.  `Condvar`
+/// waits are deliberately absent: they atomically release the guard.
+const BLOCKING_CALLS: [&str; 9] = [
+    "send",
+    "recv",
+    "recv_timeout",
+    "write_all",
+    "write",
+    "flush",
+    "read",
+    "read_exact",
+    "read_to_end",
+];
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the repo root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule name (`panic`, `lock_order`, `lock_blocking`,
+    /// `lock_registry`, `safety`, `drift`).
+    pub rule: &'static str,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Indices of non-comment tokens, in stream order.
+fn code_indices(toks: &[Tok]) -> Vec<usize> {
+    (0..toks.len()).filter(|&i| toks[i].kind != Kind::Comment).collect()
+}
+
+/// Token-index ranges (over the code-index list) covered by
+/// `#[cfg(test)]` / `#[test]` items, nested braces included.
+fn test_regions(toks: &[Tok], code: &[usize]) -> Vec<(usize, usize)> {
+    let t = |ci: usize| -> &Tok { &toks[code[ci]] };
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if t(i).text == "#" && i + 1 < code.len() && t(i + 1).text == "[" {
+            // collect the attribute's tokens up to the matching `]`
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut inner = String::new();
+            while j < code.len() && depth > 0 {
+                match t(j).text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+                if depth > 0 {
+                    inner.push_str(&t(j).text);
+                }
+                j += 1;
+            }
+            if inner == "cfg(test)" || inner == "test" {
+                // skip any further attributes on the same item
+                let mut k = j;
+                while k + 1 < code.len() && t(k).text == "#" && t(k + 1).text == "[" {
+                    let mut d = 1usize;
+                    k += 2;
+                    while k < code.len() && d > 0 {
+                        match t(k).text.as_str() {
+                            "[" => d += 1,
+                            "]" => d -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                }
+                // the item body is the first `{` before any `;`
+                while k < code.len() && t(k).text != "{" && t(k).text != ";" {
+                    k += 1;
+                }
+                if k < code.len() && t(k).text == "{" {
+                    let mut d = 1usize;
+                    let mut e = k + 1;
+                    while e < code.len() && d > 0 {
+                        match t(e).text.as_str() {
+                            "{" => d += 1,
+                            "}" => d -= 1,
+                            _ => {}
+                        }
+                        e += 1;
+                    }
+                    regions.push((i, e));
+                    i = e;
+                    continue;
+                }
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    regions
+}
+
+fn in_regions(ci: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(s, e)| s <= ci && ci < e)
+}
+
+/// All identifiers appearing inside `#[cfg(test)]` / `#[test]` regions.
+/// The drift rule uses this to check that every wire error code is
+/// exercised by at least one test assertion.
+pub fn idents_in_test_regions(toks: &[Tok]) -> BTreeSet<String> {
+    let code = code_indices(toks);
+    let regions = test_regions(toks, &code);
+    let mut out = BTreeSet::new();
+    for (ci, &ti) in code.iter().enumerate() {
+        if toks[ti].kind == Kind::Ident && in_regions(ci, &regions) {
+            out.insert(toks[ti].text.clone());
+        }
+    }
+    out
+}
+
+/// Parse one comment for `amlint: allow(<rule>, reason = "...")`.
+/// The reason string must be non-empty.
+pub fn allow_in_comment(text: &str) -> Option<&str> {
+    let rest = text.split("amlint:").nth(1)?;
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?.trim_start();
+    let rule_end = rest.find(|c: char| !c.is_alphanumeric() && c != '_')?;
+    let (rule, rest) = rest.split_at(rule_end);
+    let rest = rest.trim_start().strip_prefix(',')?.trim_start();
+    let rest = rest.strip_prefix("reason")?.trim_start();
+    let rest = rest.strip_prefix('=')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let close = rest.find('"')?;
+    let reason = &rest[..close];
+    let tail = rest[close + 1..].trim_start();
+    if reason.trim().is_empty() || !tail.starts_with(')') || rule.is_empty() {
+        return None;
+    }
+    Some(rule)
+}
+
+/// Lines covered by an `allow(rule, ...)` annotation: the annotation's
+/// own line plus the next line that carries any code token (so the
+/// annotation sits directly above the code it excuses).
+fn allowed_lines(toks: &[Tok], rule: &str) -> BTreeSet<usize> {
+    let code_lines: BTreeSet<usize> = toks
+        .iter()
+        .filter(|t| t.kind != Kind::Comment)
+        .map(|t| t.line)
+        .collect();
+    let mut out = BTreeSet::new();
+    for t in toks {
+        if t.kind != Kind::Comment {
+            continue;
+        }
+        if allow_in_comment(&t.text) == Some(rule) {
+            out.insert(t.line);
+            if let Some(&next) = code_lines.range(t.line + 1..).next() {
+                out.insert(next);
+            }
+        }
+    }
+    out
+}
+
+/// Rule 1: panic-freedom in the serving path.
+pub fn rule_panic(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let code = code_indices(toks);
+    let regions = test_regions(toks, &code);
+    let allowed = allowed_lines(toks, "panic");
+    let t = |ci: usize| -> &Tok { &toks[code[ci]] };
+    for ci in 0..code.len() {
+        let tok = t(ci);
+        if tok.kind != Kind::Ident {
+            continue;
+        }
+        let name = tok.text.as_str();
+        let flagged = if PANIC_METHODS.contains(&name) {
+            ci > 0
+                && t(ci - 1).text == "."
+                && ci + 1 < code.len()
+                && t(ci + 1).text == "("
+        } else if PANIC_MACROS.contains(&name) {
+            // a macro invocation, not a method/path segment of that name
+            ci + 1 < code.len()
+                && t(ci + 1).text == "!"
+                && (ci == 0 || (t(ci - 1).text != "." && t(ci - 1).text != ":"))
+        } else {
+            false
+        };
+        if !flagged || in_regions(ci, &regions) || allowed.contains(&tok.line) {
+            continue;
+        }
+        let what = if PANIC_METHODS.contains(&name) {
+            format!("`.{name}()`")
+        } else {
+            format!("`{name}!`")
+        };
+        out.push(Finding {
+            file: file.to_string(),
+            line: tok.line,
+            rule: "panic",
+            message: format!(
+                "{what} in serving-path code — return an error or tag \
+                 `// amlint: allow(panic, reason = \"...\")`"
+            ),
+        });
+    }
+}
+
+/// Rule 4: every `unsafe` must carry a `// SAFETY:` comment directly
+/// above it (contiguous comment block; blank lines end the block) or on
+/// its own line.
+pub fn rule_safety(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let mut comment_lines: std::collections::BTreeMap<usize, Vec<&str>> =
+        std::collections::BTreeMap::new();
+    for t in toks {
+        if t.kind == Kind::Comment {
+            comment_lines.entry(t.line).or_default().push(&t.text);
+        }
+    }
+    let allowed = allowed_lines(toks, "safety");
+    let code = code_indices(toks);
+    for &i in &code {
+        let tok = &toks[i];
+        if tok.kind != Kind::Ident || tok.text != "unsafe" {
+            continue;
+        }
+        let has_safety = |lines: &[&str]| lines.iter().any(|c| c.contains("SAFETY:"));
+        let mut ok = comment_lines
+            .get(&tok.line)
+            .is_some_and(|c| has_safety(c));
+        // walk the contiguous comment block directly above
+        let mut l = tok.line.saturating_sub(1);
+        while l > 0 {
+            match comment_lines.get(&l) {
+                Some(c) => {
+                    if has_safety(c) {
+                        ok = true;
+                        break;
+                    }
+                    l -= 1;
+                }
+                None => break,
+            }
+        }
+        if !ok && !allowed.contains(&tok.line) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: tok.line,
+                rule: "safety",
+                message: "`unsafe` without a `// SAFETY:` comment directly above"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// How long a tracked guard lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// Until brace depth drops below this value.
+    Block(usize),
+    /// Until the next `;` at the acquisition depth.
+    Statement,
+}
+
+#[derive(Debug, Clone)]
+struct Guard {
+    name: String,
+    rank: Option<usize>,
+    scope: Scope,
+    binding: Option<String>,
+}
+
+/// Rule 2: lock discipline against a declared registry.  `registry`
+/// lists the file's mutexes in acquisition order (a lock may only be
+/// taken while holding locks that appear strictly earlier).
+pub fn rule_locks(
+    file: &str,
+    toks: &[Tok],
+    registry: &[&str],
+    out: &mut Vec<Finding>,
+) {
+    let code = code_indices(toks);
+    let regions = test_regions(toks, &code);
+    let allow_order = allowed_lines(toks, "lock_order");
+    let allow_blocking = allowed_lines(toks, "lock_blocking");
+    let allow_registry = allowed_lines(toks, "lock_registry");
+    let rank_of = |name: &str| registry.iter().position(|&r| r == name);
+    let t = |ci: usize| -> &Tok { &toks[code[ci]] };
+
+    let mut depth = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut stmt_start = 0usize;
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let tok = t(ci);
+        match tok.text.as_str() {
+            "{" if tok.kind == Kind::Punct => {
+                depth += 1;
+                stmt_start = ci + 1;
+                ci += 1;
+                continue;
+            }
+            "}" if tok.kind == Kind::Punct => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| match g.scope {
+                    Scope::Block(d) => d <= depth,
+                    // a block close also ends any tail-expression
+                    // temporary (no `;` follows a tail expression)
+                    Scope::Statement => false,
+                });
+                stmt_start = ci + 1;
+                ci += 1;
+                continue;
+            }
+            ";" if tok.kind == Kind::Punct => {
+                guards.retain(|g| g.scope != Scope::Statement);
+                stmt_start = ci + 1;
+                ci += 1;
+                continue;
+            }
+            _ => {}
+        }
+        // explicit `drop(guard)`
+        if tok.kind == Kind::Ident
+            && tok.text == "drop"
+            && ci + 2 < code.len()
+            && t(ci + 1).text == "("
+            && t(ci + 2).kind == Kind::Ident
+        {
+            let victim = t(ci + 2).text.clone();
+            guards.retain(|g| g.binding.as_deref() != Some(victim.as_str()));
+        }
+        // acquisition: `<recv> . lock (` or `lock_unpoisoned( ... <name> )`
+        let mut acquired: Option<String> = None;
+        if tok.kind == Kind::Ident
+            && tok.text == "lock"
+            && ci >= 2
+            && t(ci - 1).text == "."
+            && t(ci - 2).kind == Kind::Ident
+            && ci + 1 < code.len()
+            && t(ci + 1).text == "("
+        {
+            acquired = Some(t(ci - 2).text.clone());
+        }
+        if tok.kind == Kind::Ident
+            && tok.text == "lock_unpoisoned"
+            && ci + 1 < code.len()
+            && t(ci + 1).text == "("
+        {
+            // the mutex name is the last top-level ident in the arguments
+            let mut j = ci + 2;
+            let mut d = 1usize;
+            let mut last: Option<String> = None;
+            while j < code.len() && d > 0 {
+                match t(j).text.as_str() {
+                    "(" => d += 1,
+                    ")" => d -= 1,
+                    _ => {
+                        if d == 1 && t(j).kind == Kind::Ident {
+                            last = Some(t(j).text.clone());
+                        }
+                    }
+                }
+                j += 1;
+            }
+            acquired = last;
+        }
+        if let Some(name) = acquired {
+            if !in_regions(ci, &regions) {
+                let rank = rank_of(&name);
+                if rank.is_none() && !allow_registry.contains(&tok.line) {
+                    out.push(Finding {
+                        file: file.to_string(),
+                        line: tok.line,
+                        rule: "lock_registry",
+                        message: format!(
+                            "lock on `{name}`, which is not in the declared mutex \
+                             registry for this file — add it (with its order) to \
+                             amlint's registry"
+                        ),
+                    });
+                }
+                if let Some(r) = rank {
+                    for g in &guards {
+                        if let Some(gr) = g.rank {
+                            if gr >= r && !allow_order.contains(&tok.line) {
+                                out.push(Finding {
+                                    file: file.to_string(),
+                                    line: tok.line,
+                                    rule: "lock_order",
+                                    message: format!(
+                                        "`{name}` acquired while holding `{}` — \
+                                         violates the declared acquisition order",
+                                        g.name
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+                // classify the guard's lifetime from the statement head
+                let head: Vec<&str> =
+                    (stmt_start..ci).map(|k| t(k).text.as_str()).collect();
+                let (scope, binding) = if head.first() == Some(&"let") {
+                    let mut h = &head[1..];
+                    if h.first() == Some(&"mut") {
+                        h = &h[1..];
+                    }
+                    let binding = h
+                        .first()
+                        .filter(|s| {
+                            s.chars().all(|c| c.is_alphanumeric() || c == '_')
+                        })
+                        .map(|s| s.to_string());
+                    (Scope::Block(depth), binding)
+                } else if matches!(head.first(), Some(&"if") | Some(&"while"))
+                    && head.contains(&"let")
+                {
+                    (Scope::Block(depth), None)
+                } else if matches!(head.first(), Some(&"match") | Some(&"for")) {
+                    (Scope::Block(depth), None)
+                } else {
+                    (Scope::Statement, None)
+                };
+                guards.push(Guard { name, rank, scope, binding });
+            }
+        }
+        // blocking call while a registry guard is held
+        if tok.kind == Kind::Ident
+            && BLOCKING_CALLS.contains(&tok.text.as_str())
+            && ci > 0
+            && (t(ci - 1).text == "." || t(ci - 1).text == ":")
+            && ci + 1 < code.len()
+            && t(ci + 1).text == "("
+            && !in_regions(ci, &regions)
+        {
+            let held: Vec<&str> = guards
+                .iter()
+                .filter(|g| g.rank.is_some())
+                .map(|g| g.name.as_str())
+                .collect();
+            if !held.is_empty() && !allow_blocking.contains(&tok.line) {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: tok.line,
+                    rule: "lock_blocking",
+                    message: format!(
+                        "blocking `{}()` while holding `{}` — move the call out \
+                         of the critical section or tag \
+                         `// amlint: allow(lock_blocking, reason = \"...\")`",
+                        tok.text,
+                        held.join("`, `")
+                    ),
+                });
+            }
+        }
+        ci += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn panics(src: &str) -> Vec<Finding> {
+        let toks = lex(src);
+        let mut out = Vec::new();
+        rule_panic("f.rs", &toks, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_unwrap_and_macros() {
+        let found = panics("fn f() { x.unwrap(); panic!(\"no\"); }");
+        assert_eq!(found.len(), 2);
+        assert_eq!(found[0].rule, "panic");
+    }
+
+    #[test]
+    fn ignores_test_code_and_lookalikes() {
+        let src = r#"
+            #[cfg(test)]
+            mod tests {
+                fn g() { x.unwrap(); }
+            }
+            fn ok() { x.unwrap_or(0); std::panic::catch_unwind(f); }
+        "#;
+        assert!(panics(src).is_empty());
+    }
+
+    #[test]
+    fn allow_needs_nonempty_reason() {
+        assert_eq!(
+            allow_in_comment(r#"// amlint: allow(panic, reason = "fixture only")"#),
+            Some("panic")
+        );
+        assert_eq!(allow_in_comment(r#"// amlint: allow(panic, reason = "")"#), None);
+        assert_eq!(allow_in_comment("// amlint: allow(panic)"), None);
+    }
+
+    #[test]
+    fn annotation_covers_next_code_line_only() {
+        let src = r#"
+            fn f() {
+                // amlint: allow(panic, reason = "checked above")
+                x.unwrap();
+                y.unwrap();
+            }
+        "#;
+        let found = panics(src);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].line, 5);
+    }
+
+    #[test]
+    fn safety_rule_accepts_block_above_and_same_line() {
+        let ok = r#"
+            // SAFETY: disjoint slots
+            unsafe { *p = 1; }
+            unsafe impl Send for T {} // SAFETY: no shared state
+        "#;
+        let mut out = Vec::new();
+        rule_safety("f.rs", &lex(ok), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let bad = "fn f() { unsafe { *p = 1; } }";
+        let mut out = Vec::new();
+        rule_safety("f.rs", &lex(bad), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "safety");
+    }
+
+    #[test]
+    fn safety_comment_does_not_leak_across_blank_line() {
+        let src = "// SAFETY: stale\n\nfn f() { unsafe { *p = 1; } }";
+        let mut out = Vec::new();
+        rule_safety("f.rs", &lex(src), &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    fn locks(src: &str, registry: &[&str]) -> Vec<Finding> {
+        let mut out = Vec::new();
+        rule_locks("f.rs", &lex(src), registry, &mut out);
+        out
+    }
+
+    #[test]
+    fn out_of_order_nesting_flagged() {
+        let src = r#"
+            fn f(&self) {
+                let m = self.metrics.lock();
+                let t = self.tx.lock();
+            }
+        "#;
+        let found = locks(src, &["tx", "metrics"]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "lock_order");
+        assert_eq!(found[0].line, 4);
+    }
+
+    #[test]
+    fn in_order_nesting_passes() {
+        let src = r#"
+            fn f(&self) {
+                let t = self.tx.lock();
+                let m = self.metrics.lock();
+            }
+        "#;
+        assert!(locks(src, &["tx", "metrics"]).is_empty());
+    }
+
+    #[test]
+    fn statement_temporary_releases_at_semicolon_and_tail() {
+        let src = r#"
+            fn f(&self) -> M {
+                *self.tx.lock() = None;
+                self.metrics.lock().clone()
+            }
+            fn g(&self) {
+                let t = self.tx.lock();
+            }
+        "#;
+        // metrics is a tail expression; tx guard died at the `;` — and
+        // neither may leak into `g`
+        assert!(locks(src, &["tx", "metrics"]).is_empty());
+    }
+
+    #[test]
+    fn blocking_call_under_guard_flagged_and_allowable() {
+        let src = r#"
+            fn f(&self) {
+                let g = self.tx.lock();
+                g.send(req);
+            }
+        "#;
+        let found = locks(src, &["tx"]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, "lock_blocking");
+        let annotated = r#"
+            fn f(&self) {
+                let g = self.tx.lock();
+                // amlint: allow(lock_blocking, reason = "bounded queue")
+                g.send(req);
+            }
+        "#;
+        assert!(locks(annotated, &["tx"]).is_empty());
+    }
+
+    #[test]
+    fn drop_releases_guard() {
+        let src = r#"
+            fn f(&self) {
+                let g = self.tx.lock();
+                drop(g);
+                out.send(req);
+            }
+        "#;
+        assert!(locks(src, &["tx"]).is_empty());
+    }
+
+    #[test]
+    fn undeclared_mutex_flagged() {
+        let found = locks("fn f() { let g = other.lock(); }", &["tx"]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, "lock_registry");
+    }
+
+    #[test]
+    fn lock_unpoisoned_form_recognized() {
+        let src = r#"
+            fn f(&self) {
+                let g = lock_unpoisoned(&self.tx);
+                g.send(req);
+            }
+        "#;
+        let found = locks(src, &["tx"]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, "lock_blocking");
+    }
+
+    #[test]
+    fn if_let_temporary_lives_for_the_block() {
+        // the `if let` scrutinee temporary lives to the end of the block
+        let src = r#"
+            fn f(&self) {
+                if let Some(x) = self.tx.lock().as_ref() {
+                    out.send(x);
+                }
+            }
+        "#;
+        let found = locks(src, &["tx"]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "lock_blocking");
+    }
+}

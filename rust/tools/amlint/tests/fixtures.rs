@@ -1,0 +1,136 @@
+//! The fixture corpus: known-bad snippets each rule must flag (with
+//! expectations pinned by `amlint-fixture: expect <rule>` markers in the
+//! fixture itself) and known-good files each rule must pass clean.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use amlint::{drift, lexer, rules};
+
+/// Registry used by the lock-rule fixtures.
+const FIXTURE_REGISTRY: [&str; 3] = ["tx", "workers", "metrics"];
+
+fn fixture(rel: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(rel);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()))
+}
+
+/// `(line, rule)` pairs declared by `amlint-fixture: expect <rule>`
+/// markers.
+fn expectations(src: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        if let Some(rest) = line.split("amlint-fixture: expect ").nth(1) {
+            let rule: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            out.push((i + 1, rule));
+        }
+    }
+    assert!(!out.is_empty(), "fixture declares no expectations");
+    out
+}
+
+/// Run all three file-local rules and return `(line, rule)` findings.
+fn lint(src: &str) -> Vec<(usize, String)> {
+    let toks = lexer::lex(src);
+    let mut findings = Vec::new();
+    rules::rule_panic("fixture.rs", &toks, &mut findings);
+    rules::rule_safety("fixture.rs", &toks, &mut findings);
+    rules::rule_locks("fixture.rs", &toks, &FIXTURE_REGISTRY, &mut findings);
+    let mut got: Vec<(usize, String)> =
+        findings.into_iter().map(|f| (f.line, f.rule.to_string())).collect();
+    got.sort();
+    got
+}
+
+#[test]
+fn bad_panic_fixture_flags_exactly_the_marked_lines() {
+    let src = fixture("bad/panic.rs");
+    assert_eq!(lint(&src), expectations(&src));
+}
+
+#[test]
+fn bad_locks_fixture_flags_exactly_the_marked_lines() {
+    let src = fixture("bad/locks.rs");
+    assert_eq!(lint(&src), expectations(&src));
+}
+
+#[test]
+fn bad_safety_fixture_flags_exactly_the_marked_lines() {
+    let src = fixture("bad/safety.rs");
+    assert_eq!(lint(&src), expectations(&src));
+}
+
+#[test]
+fn good_fixtures_pass_byte_for_byte() {
+    for rel in ["good/clean.rs", "good/annotated.rs"] {
+        let src = fixture(rel);
+        let got = lint(&src);
+        assert!(got.is_empty(), "{rel} should be clean, got {got:?}");
+    }
+}
+
+#[test]
+fn drift_fixture_flags_every_planted_inconsistency() {
+    let wire = fixture("bad/drift/wire.rs");
+    let persist = fixture("bad/drift/persist.rs");
+    let plan = fixture("bad/drift/plan.rs");
+    let readme = fixture("bad/drift/README.md");
+    // ERR_BAD_FRAME is asserted somewhere; ERR_UNTESTED and ERR_GAPPED
+    // are not
+    let test_idents: BTreeSet<String> = ["ERR_BAD_FRAME".to_string()].into();
+    let mut findings = Vec::new();
+    drift::check(
+        &drift::DriftInput {
+            wire: &wire,
+            persist: &persist,
+            plan: &plan,
+            readme: &readme,
+            test_idents: &test_idents,
+        },
+        &mut findings,
+    );
+    let messages: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+    let expect_contains = [
+        "code 3 is unassigned",                    // gapped codes
+        "`ERR_UNTESTED` (code 2) is not asserted", // untested code
+        "`ERR_GAPPED` (code 4) is not asserted",
+        "`ERR_UNTESTED` (code 2) has no README",   // wrong code cell in table
+        "`ERR_GAPPED` (code 4) has no README",     // missing row
+        "`ERR_REMOVED`, which does not exist",     // stale constant
+        "no `version >= 5` feature gate",          // bumped without gating
+        "`version >= 9` is outside 2..=5",         // gate beyond VERSION
+        "`version != SHARD_MANIFEST_VERSION` not found", // plan hardcodes 3
+        "README formats table has no `| v4 |` row",
+        "README formats table has no `| v5 |` row",
+        "README `| v1 |` row says \"current\" but VERSION is 5",
+        "README `| v3 |` row must mention the shard manifest",
+    ];
+    for needle in expect_contains {
+        assert!(
+            messages.iter().any(|m| m.contains(needle)),
+            "expected a finding containing {needle:?}; got:\n{}",
+            messages.join("\n")
+        );
+    }
+    assert_eq!(
+        findings.len(),
+        expect_contains.len(),
+        "unexpected extra drift findings:\n{}",
+        messages.join("\n")
+    );
+}
+
+#[test]
+fn clean_drift_inputs_produce_no_findings() {
+    // the good half of the drift fixture: the real repo's own files,
+    // which `amlint::run` checks end-to-end in lib.rs tests
+    let root = amlint::find_root(PathBuf::from(env!("CARGO_MANIFEST_DIR")).as_path())
+        .expect("repo root");
+    let findings = amlint::run(&root).expect("run");
+    let drift_only: Vec<_> = findings.iter().filter(|f| f.rule == "drift").collect();
+    assert!(drift_only.is_empty(), "{drift_only:?}");
+}
