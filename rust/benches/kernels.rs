@@ -1,0 +1,260 @@
+//! Distance-kernel benchmarks: per-backend ns/distance and effective
+//! GB/s for every kernel family (f32 squared-L2 / dot, integer-domain
+//! SQ8, gather-free ADC, hamming) plus the cache-blocked batch scan vs
+//! its unblocked shape — the measured-performance program behind
+//! `BENCH_kernels.json`.
+//!
+//! Cell names are stable identifiers (`kern f32 d=64 sse2`, `scan f32
+//! d=128 B=8 sse2 blocked`, ...): `tools/benchcmp` joins fresh runs
+//! against the committed baseline by exact name, so renaming a cell is
+//! a baseline change, not a cosmetic edit.
+//!
+//! The JSON written to `AMSEARCH_BENCH_JSON` carries provenance
+//! (`meta.harness`, `meta.cpu`): benchcmp refuses to hard-fail across
+//! differing provenance, so numbers measured on one machine never gate
+//! another.
+
+#[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
+mod harness;
+
+use amsearch::data::rng::Rng;
+use amsearch::search::{Backend, Kernels};
+use harness::{bench, budget, section, Measurement};
+
+/// One JSON row: the harness measurement plus the derived per-distance
+/// and bandwidth columns benchcmp compares on.
+struct Cell {
+    m: Measurement,
+    /// Nanoseconds per single distance evaluation.
+    ns_per_distance: f64,
+    /// Effective bandwidth over the bytes the kernel actually reads.
+    gbps: f64,
+}
+
+/// Time `f` (which evaluates `dists` distances reading `bytes` bytes
+/// per iteration) and derive the comparison columns.
+fn cell(name: &str, dists: usize, bytes: usize, f: impl FnMut()) -> Cell {
+    let m = bench(name, budget(), f);
+    let ns_per_distance = m.mean_ns / dists as f64;
+    let gbps = bytes as f64 / m.mean_ns;
+    println!("{name:<40} {ns_per_distance:>8.2} ns/dist  {gbps:>7.2} GB/s");
+    Cell { m, ns_per_distance, gbps }
+}
+
+/// The backends worth measuring on this host (scalar always; SIMD when
+/// available).
+fn backends() -> Vec<(Kernels, &'static str)> {
+    [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon]
+        .into_iter()
+        .filter_map(|b| Kernels::with_backend(b).map(|k| (k, b.name())))
+        .collect()
+}
+
+fn random_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let mut cells: Vec<Cell> = Vec::new();
+    // enough rows that a scan iteration is measurable, few enough that
+    // single-row kernels stay cache-resident (latency, not DRAM)
+    const ROWS: usize = 256;
+
+    section("f32 squared-L2, one row at a time (bitwise-pinned fold order)");
+    for &d in &[16usize, 64, 128, 256] {
+        let data = random_vec(&mut rng, ROWS * d);
+        let x = random_vec(&mut rng, d);
+        for (k, tag) in backends() {
+            cells.push(cell(
+                &format!("kern f32 d={d} {tag}"),
+                ROWS,
+                ROWS * d * 4,
+                || {
+                    let mut acc = 0f32;
+                    for row in data.chunks_exact(d) {
+                        acc += k.sq_l2(&x, row);
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+        }
+    }
+
+    section("f32 dot (scoring-path shape)");
+    for &d in &[64usize, 128, 256] {
+        let data = random_vec(&mut rng, ROWS * d);
+        let x = random_vec(&mut rng, d);
+        for (k, tag) in backends() {
+            cells.push(cell(
+                &format!("kern dot d={d} {tag}"),
+                ROWS,
+                ROWS * d * 4,
+                || {
+                    let mut acc = 0f32;
+                    for row in data.chunks_exact(d) {
+                        acc += k.dot(&x, row);
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+        }
+    }
+
+    section("SQ8 integer-domain distance over u8 codes");
+    for &d in &[64usize, 128, 256] {
+        let codes: Vec<u8> =
+            (0..ROWS * d).map(|_| rng.below(256) as u8).collect();
+        let qcode: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+        let step2: Vec<f32> =
+            (0..d).map(|_| rng.uniform() as f32 * 0.01 + 1e-4).collect();
+        for (k, tag) in backends() {
+            cells.push(cell(
+                &format!("kern sq8 d={d} {tag}"),
+                ROWS,
+                ROWS * d,
+                || {
+                    let mut acc = 0f32;
+                    for code in codes.chunks_exact(d) {
+                        acc += k.sq8(&qcode, code, &step2);
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+        }
+    }
+
+    section("ADC table lookups over padded pow2 rows");
+    for &(m, c) in &[(8usize, 16usize), (16, 16), (32, 16), (8, 256), (16, 256), (32, 256)] {
+        let shift = (c as u32).next_power_of_two().trailing_zeros();
+        let lut = random_vec(&mut rng, m << shift);
+        let codes: Vec<u8> =
+            (0..ROWS * m).map(|_| rng.below(c as u64) as u8).collect();
+        for (k, tag) in backends() {
+            cells.push(cell(
+                &format!("kern adc m={m} c={c} {tag}"),
+                ROWS,
+                ROWS * m,
+                || {
+                    let mut acc = 0f32;
+                    for code in codes.chunks_exact(m) {
+                        acc += k.adc(&lut, shift, code);
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+        }
+    }
+
+    section("hamming over f32 lanes (binary sparse data)");
+    for &d in &[128usize, 1024] {
+        let a: Vec<f32> =
+            (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let data: Vec<f32> = (0..ROWS * d)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+            .collect();
+        for (k, tag) in backends() {
+            cells.push(cell(
+                &format!("kern hamming d={d} {tag}"),
+                ROWS,
+                ROWS * d * 4,
+                || {
+                    let mut acc = 0u32;
+                    for row in data.chunks_exact(d) {
+                        acc = acc.wrapping_add(k.hamming(&a, row));
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+        }
+    }
+
+    section("cache-blocked batch scan vs unblocked (class-major, query-fused)");
+    {
+        let d = 128usize;
+        let n = 4096usize; // 2 MiB of rows: larger than one 256 KiB tile
+        let data = random_vec(&mut rng, n * d);
+        // pin the 128-bit backend where available so the scan cell
+        // names stay stable across hosts whose auto-selection differs
+        // (f32 scans dispatch to the same 128-bit kernels either way)
+        let kernels =
+            Kernels::with_backend(Backend::Sse2).unwrap_or_else(Kernels::select);
+        let tag = kernels.backend_name();
+        let tile = (256 * 1024) / (d * 4);
+        for &b in &[1usize, 8, 32] {
+            let queries: Vec<Vec<f32>> =
+                (0..b).map(|_| random_vec(&mut rng, d)).collect();
+            cells.push(cell(
+                &format!("scan f32 d={d} B={b} {tag} blocked"),
+                n * b,
+                n * d * 4,
+                || {
+                    let mut acc = 0f32;
+                    for tile_rows in data.chunks(tile * d) {
+                        for x in &queries {
+                            for row in tile_rows.chunks_exact(d) {
+                                acc += kernels.sq_l2(x, row);
+                            }
+                        }
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+            cells.push(cell(
+                &format!("scan f32 d={d} B={b} {tag} noblock"),
+                n * b,
+                n * d * 4,
+                || {
+                    let mut acc = 0f32;
+                    for x in &queries {
+                        for row in data.chunks_exact(d) {
+                            acc += kernels.sq_l2(x, row);
+                        }
+                    }
+                    std::hint::black_box(acc);
+                },
+            ));
+        }
+    }
+
+    write_kernel_json(&cells);
+}
+
+/// Rich JSON for benchcmp: meta (provenance) + measurements with the
+/// derived ns/distance and GB/s columns.
+fn write_kernel_json(cells: &[Cell]) {
+    let Ok(path) = std::env::var("AMSEARCH_BENCH_JSON") else {
+        return;
+    };
+    let cpu = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|v| v.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown".to_string());
+    let mut out = String::from("{\n  \"meta\": {\n");
+    out.push_str("    \"schema\": 1,\n    \"bench\": \"kernels\",\n");
+    out.push_str(&format!(
+        "    \"arch\": {:?},\n    \"os\": {:?},\n    \"cpu\": {cpu:?},\n",
+        std::env::consts::ARCH,
+        std::env::consts::OS
+    ));
+    out.push_str("    \"harness\": \"rust-bench\"\n  },\n  \"measurements\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        let sep = if i + 1 == cells.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"name\": {:?}, \"iters\": {}, \
+             \"ns_per_distance\": {:.2}, \"gbps\": {:.2}}}{sep}\n",
+            c.m.name, c.m.iters, c.ns_per_distance, c.gbps
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("\nwrote {} cells to {path}", cells.len()),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

@@ -10,6 +10,7 @@ mod harness;
 
 use amsearch::data::rng::Rng;
 use amsearch::memory::score::{score_batch, score_batch_support};
+use amsearch::search::Kernels;
 use harness::{bench, budget, section};
 
 fn random_bank(rng: &mut Rng, q: usize, d: usize) -> Vec<f32> {
@@ -18,6 +19,7 @@ fn random_bank(rng: &mut Rng, q: usize, d: usize) -> Vec<f32> {
 
 fn main() {
     let mut rng = Rng::new(42);
+    let kernels = Kernels::select();
 
     section("dense bilinear scoring: scores = x^T W_i x  (native scorer)");
     for &(d, q, b) in &[
@@ -34,7 +36,7 @@ fn main() {
             &format!("score_batch d={d} q={q} B={b}"),
             budget(),
             || {
-                let s = score_batch(&bank, &queries, d, q);
+                let s = score_batch(&bank, &queries, d, q, kernels);
                 std::hint::black_box(s);
             },
         );
@@ -87,7 +89,7 @@ fn main() {
             supports.push(s);
         }
         let md = bench("dense path (d²q)", budget(), || {
-            std::hint::black_box(score_batch(&bank, &dense_queries, d, q));
+            std::hint::black_box(score_batch(&bank, &dense_queries, d, q, kernels));
         });
         let ms = bench("support path (c²q)", budget(), || {
             std::hint::black_box(score_batch_support(&bank, &supports, d, q));

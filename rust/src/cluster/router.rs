@@ -122,6 +122,9 @@ pub struct ClusterIndexInfo {
     pub quant_mode: String,
     /// Rerank budget of the shard indices (0 = all).
     pub rerank: usize,
+    /// Distance-kernel backend of the shard indices ("scalar" | "sse2"
+    /// | "avx2" | "neon", or "mixed" if shards differ).
+    pub kernel_backend: String,
 }
 
 impl ClusterIndexInfo {
@@ -133,11 +136,18 @@ impl ClusterIndexInfo {
         let mut mode: Option<&'static str> = None;
         let mut mixed = false;
         let mut rerank = 0usize;
+        let mut kernel: Option<&'static str> = None;
+        let mut kernel_mixed = false;
         for idx in indices {
             footprint.add(idx.footprint());
             match mode {
                 None => mode = Some(idx.quant_mode()),
                 Some(m) if m != idx.quant_mode() => mixed = true,
+                Some(_) => {}
+            }
+            match kernel {
+                None => kernel = Some(idx.kernel_backend()),
+                Some(k) if k != idx.kernel_backend() => kernel_mixed = true,
                 Some(_) => {}
             }
             rerank = rerank.max(idx.params().precision.rerank());
@@ -150,6 +160,11 @@ impl ClusterIndexInfo {
                 mode.unwrap_or("exact").to_string()
             },
             rerank,
+            kernel_backend: if kernel_mixed {
+                "mixed".to_string()
+            } else {
+                kernel.unwrap_or("scalar").to_string()
+            },
         }
     }
 }
@@ -385,6 +400,10 @@ impl Serveable for ClusterRouter {
             o.insert(
                 "quant".to_string(),
                 crate::coordinator::quant_json(&info.quant_mode, info.rerank),
+            );
+            o.insert(
+                "kernel".to_string(),
+                crate::coordinator::kernel_json(&info.kernel_backend),
             );
         }
         // two *separate* named histograms — never merged (merging would

@@ -73,6 +73,9 @@ pub struct SearchServer {
     quant_mode: &'static str,
     /// Rerank budget of the served index (0 = all; STATS: `quant.rerank`).
     quant_rerank: usize,
+    /// Distance-kernel backend of the served index (STATS:
+    /// `kernel.backend`).
+    kernel_backend: &'static str,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -87,6 +90,7 @@ impl SearchServer {
         let footprint = factory.index.footprint();
         let quant_mode = factory.index.quant_mode();
         let quant_rerank = factory.index.params().precision.rerank();
+        let kernel_backend = factory.index.kernel_backend();
         let (req_tx, req_rx) = mpsc::sync_channel::<SearchRequest>(config.queue_depth);
         let (batch_tx, batch_rx) =
             mpsc::sync_channel::<Vec<SearchRequest>>(config.workers * 2);
@@ -143,6 +147,7 @@ impl SearchServer {
             footprint,
             quant_mode,
             quant_rerank,
+            kernel_backend,
             workers: Mutex::new(workers),
             batcher: Mutex::new(Some(batcher)),
         })
@@ -263,6 +268,7 @@ impl SearchServer {
             "quant".to_string(),
             quant_json(self.quant_mode, self.quant_rerank),
         );
+        o.insert("kernel".to_string(), kernel_json(self.kernel_backend));
         o.insert("latency".to_string(), m.latency.to_json());
         o.insert("service".to_string(), m.service.to_json());
         Json::Obj(o)
@@ -322,6 +328,16 @@ pub fn quant_json(mode: &str, rerank: usize) -> crate::util::Json {
     let mut o = std::collections::BTreeMap::new();
     o.insert("mode".to_string(), Json::Str(mode.to_string()));
     o.insert("rerank".to_string(), Json::Num(rerank as f64));
+    Json::Obj(o)
+}
+
+/// The STATS `kernel` object: the distance-kernel backend selected at
+/// index build/load ("scalar" | "sse2" | "avx2" | "neon"; the cluster
+/// router reports "mixed" when its shards disagree).
+pub fn kernel_json(backend: &str) -> crate::util::Json {
+    use crate::util::Json;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str(backend.to_string()));
     Json::Obj(o)
 }
 

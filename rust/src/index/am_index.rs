@@ -17,7 +17,7 @@ use crate::memory::{score as mem_score, MemoryBank};
 use crate::metrics::OpsCounter;
 use crate::partition::{greedy_alloc, random_alloc, roundrobin, Allocation, Partition};
 use crate::quant::{effective_rerank, rerank::rerank_exact, IndexFootprint, QuantIndex};
-use crate::search::{distance_pruned, invert_polled, top_p_largest, Neighbor, TopK};
+use crate::search::{invert_polled, top_p_largest, Kernels, Neighbor, TopK};
 use crate::util::par::parallel_map;
 
 use super::params::IndexParams;
@@ -71,6 +71,54 @@ pub struct AmIndex {
     /// two-stage: approximate over codes, exact rerank of the best
     /// `rerank` survivors.
     quant: Option<QuantIndex>,
+    /// Distance-kernel dispatch, selected once at build/load from CPU
+    /// feature detection ([`Kernels::select`]); every distance the index
+    /// computes goes through it, and STATS reports it as
+    /// `kernel.backend`.
+    kernels: Kernels,
+    /// Class-contiguous member slabs for the **exact** scan (empty when
+    /// quantized — the code matrix already is class-addressable):
+    /// `slabs[ci]` holds class `ci`'s member rows in members-list order,
+    /// so the batch scan streams cache-resident tiles instead of chasing
+    /// `data.get(vid)` through the global id order.
+    slabs: Vec<Vec<f32>>,
+}
+
+/// Scan-tile budget: member rows are processed in tiles of at most this
+/// many bytes (f32 rows or code rows), so a tile loaded for one batch
+/// query is still L2-resident when the next query of the batch scans it.
+/// 256 KiB fits comfortably inside the ≥ 1 MiB L2 of every deployment
+/// target while leaving room for the queries and accumulators.
+const SCAN_TILE_BYTES: usize = 256 * 1024;
+
+/// Rows per scan tile for a `row_bytes`-wide representation (≥ 1, so
+/// degenerate dimensions still make progress).
+fn tile_rows(row_bytes: usize) -> usize {
+    (SCAN_TILE_BYTES / row_bytes.max(1)).max(1)
+}
+
+/// The exact scan's class-contiguous slabs: one flat `[rows × d]` buffer
+/// per class, rows in members-list order.  Skipped (empty) for quantized
+/// indices, whose scan streams code rows instead.
+fn member_slabs(
+    n_classes: usize,
+    partition: &Partition,
+    data: &Dataset,
+    quantized: bool,
+) -> Vec<Vec<f32>> {
+    if quantized {
+        return Vec::new();
+    }
+    (0..n_classes)
+        .map(|ci| {
+            let members = partition.members(ci);
+            let mut slab = Vec::with_capacity(members.len() * data.dim());
+            for &vid in members {
+                slab.extend_from_slice(data.get(vid as usize));
+            }
+            slab
+        })
+        .collect()
 }
 
 impl AmIndex {
@@ -101,7 +149,9 @@ impl AmIndex {
         let bank = MemoryBank::build(data.dim(), &member_refs, params.rule)?;
         let binary_sparse = data.is_binary_sparse();
         let quant = QuantIndex::train(&data, params.precision)?;
-        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant })
+        let kernels = Kernels::select();
+        let slabs = member_slabs(q, &partition, &data, quant.is_some());
+        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant, kernels, slabs })
     }
 
     /// Reassemble an index from persisted parts (see [`super::persist`]).
@@ -151,7 +201,10 @@ impl AmIndex {
             params.rule,
         )?;
         let binary_sparse = data.is_binary_sparse();
-        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant })
+        let kernels = Kernels::select();
+        let slabs =
+            member_slabs(params.n_classes, &partition, &data, quant.is_some());
+        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant, kernels, slabs })
     }
 
     /// Online insert: add a vector to the index without rebuilding.
@@ -195,6 +248,11 @@ impl AmIndex {
         self.bank.add_to_class(class, x);
         let id = self.partition.push(class as u32)?;
         self.data.push(x)?;
+        if let Some(slab) = self.slabs.get_mut(class) {
+            // the exact scan's slab mirrors the members list, which
+            // appends the new id at the end of its class
+            slab.extend_from_slice(x);
+        }
         if let Some(q) = &mut self.quant {
             // encode with the existing quantizer (codebooks are not
             // retrained online; out-of-range values clamp, and the
@@ -247,6 +305,17 @@ impl AmIndex {
     /// The compressed scan companion, when the index is quantized.
     pub fn quant(&self) -> Option<&QuantIndex> {
         self.quant.as_ref()
+    }
+
+    /// The distance-kernel dispatch handle selected at build/load.
+    pub fn kernels(&self) -> Kernels {
+        self.kernels
+    }
+
+    /// Name of the selected kernel backend — the `kernel.backend` STATS
+    /// field ("scalar" | "sse2" | "avx2" | "neon").
+    pub fn kernel_backend(&self) -> &'static str {
+        self.kernels.backend_name()
     }
 
     /// Mode label of the candidate scan ("exact" | "sq8" | "pq") — the
@@ -303,7 +372,7 @@ impl AmIndex {
         let q = self.params.n_classes;
         let batch = queries.len() / d;
         ops.score_ops += (d * d * q * batch) as u64;
-        mem_score::score_batch(self.bank.stacked(), queries, d, q)
+        mem_score::score_batch(self.bank.stacked(), queries, d, q, self.kernels)
     }
 
     /// Rank all classes by score, best first (used by the recall@p
@@ -380,24 +449,41 @@ impl AmIndex {
         let active: Vec<usize> =
             (0..q).filter(|&ci| !by_class[ci].is_empty()).collect();
         let metric = self.params.metric;
-        // one pass over each polled class's member matrix, scoring every
-        // querying batch member against each streamed row; per (class,
-        // query) a fused TopK(k) accumulator with early abandoning
+        let d = self.dim();
+        let kernels = self.kernels;
+        // one pass over each polled class's member slab, tiled to fit in
+        // L2 so each tile of rows is reused across every querying batch
+        // member before the next tile is streamed in; per (class, query)
+        // a fused TopK(k) accumulator with early abandoning.  Within a
+        // tile the loop is query-outer / row-inner, so each query still
+        // sees candidates in ascending member order — the per-query
+        // arithmetic and abandon decisions are unchanged from the
+        // untiled scan (bitwise guarantee preserved)
         let scan_class = |ci: usize| -> Vec<(u32, TopK)> {
             let queriers = &by_class[ci];
             let mut accs: Vec<(u32, TopK)> = queriers
                 .iter()
                 .map(|&bi| (bi, TopK::new(ks[bi as usize].max(1))))
                 .collect();
-            for &vid in self.partition.members(ci) {
-                let v = self.data.get(vid as usize);
+            let members = self.partition.members(ci);
+            let slab = &self.slabs[ci];
+            let tr = tile_rows(d * 4);
+            for (tile_members, tile_slab) in
+                members.chunks(tr).zip(slab.chunks(tr * d))
+            {
                 for (qi, acc) in accs.iter_mut() {
                     let x = queries[*qi as usize];
-                    // abandon candidates that provably exceed this
-                    // query's in-class k-th best; ties survive for the
-                    // id tie-break
-                    if let Some(dist) = distance_pruned(metric, x, v, acc.bound()) {
-                        acc.push(dist, vid);
+                    for (&vid, v) in
+                        tile_members.iter().zip(tile_slab.chunks_exact(d))
+                    {
+                        // abandon candidates that provably exceed this
+                        // query's in-class k-th best; ties survive for
+                        // the id tie-break
+                        if let Some(dist) =
+                            kernels.distance_pruned(metric, x, v, acc.bound())
+                        {
+                            acc.push(dist, vid);
+                        }
                     }
                 }
             }
@@ -474,7 +560,7 @@ impl AmIndex {
         // per-query scan state, built once per batch: the LUT (ADC
         // table / residual), the candidate count, the rerank heap size
         let luts: Vec<crate::quant::QueryLut<'_>> =
-            queries.iter().map(|x| quant.prepare(x)).collect();
+            queries.iter().map(|x| quant.prepare(x, self.kernels)).collect();
         let candidates: Vec<usize> = polled
             .iter()
             .map(|pol| {
@@ -494,13 +580,21 @@ impl AmIndex {
                 .iter()
                 .map(|&bi| (bi, TopK::new(r_effs[bi as usize])))
                 .collect();
-            for &vid in self.partition.members(ci) {
-                let code = quant.code(vid as usize);
+            // tile the member list so a tile's worth of code bytes stays
+            // cache-resident across every querying batch member; within
+            // a tile the loop is query-outer / code-inner, preserving
+            // each query's ascending candidate order
+            let members = self.partition.members(ci);
+            let tr = tile_rows(quant.code_len());
+            for tile_members in members.chunks(tr) {
                 for (bi, acc) in accs.iter_mut() {
-                    if let Some(ad) =
-                        luts[*bi as usize].distance_pruned(code, acc.bound())
-                    {
-                        acc.push(ad, vid);
+                    let lut = &luts[*bi as usize];
+                    for &vid in tile_members {
+                        if let Some(ad) =
+                            lut.distance_pruned(quant.code(vid as usize), acc.bound())
+                        {
+                            acc.push(ad, vid);
+                        }
                     }
                 }
             }
@@ -527,6 +621,7 @@ impl AmIndex {
                 &self.data,
                 approx.into_sorted(),
                 ks[bi].max(1),
+                self.kernels,
             );
             ops[bi].compressed_ops +=
                 (candidates[bi] * quant.approx_unit_cost()) as u64;
@@ -561,11 +656,16 @@ impl AmIndex {
         } else {
             self.dim()
         };
+        let d = self.dim();
         for &ci in classes {
-            for &vid in self.partition.members(ci as usize) {
-                candidates += 1;
+            // stream the class's contiguous member slab (rows in
+            // ascending member order, same as the members list)
+            let members = self.partition.members(ci as usize);
+            let slab = &self.slabs[ci as usize];
+            candidates += members.len();
+            for (&vid, v) in members.iter().zip(slab.chunks_exact(d)) {
                 if let Some(dist) =
-                    distance_pruned(metric, x, self.data.get(vid as usize), acc.bound())
+                    self.kernels.distance_pruned(metric, x, v, acc.bound())
                 {
                     acc.push(dist, vid);
                 }
@@ -591,7 +691,7 @@ impl AmIndex {
         k: usize,
         ops: &mut OpsCounter,
     ) -> (Vec<Neighbor>, usize) {
-        let lut = quant.prepare(x);
+        let lut = quant.prepare(x, self.kernels);
         let candidates: usize = classes
             .iter()
             .map(|&ci| self.partition.members(ci as usize).len())
@@ -614,6 +714,7 @@ impl AmIndex {
             &self.data,
             approx.into_sorted(),
             k.max(1),
+            self.kernels,
         );
         ops.rerank_ops += (reranked * self.dim()) as u64;
         (neighbors, candidates)

@@ -8,15 +8,24 @@
 //! rayon-parallel: each class's `d²` weight slab is touched by exactly
 //! one thread (no false sharing).
 
+use crate::search::Kernels;
 use crate::util::par::parallel_map;
 
 /// Batched bilinear scores: `S[b, i] = x_bᵀ W_i x_b`.
 ///
 /// * `stacked`: `[q * d * d]` row-major class memories
 /// * `queries`: `[batch * d]` row-major query block
+/// * `kernels`: the dispatch handle whose wide-dot backend computes the
+///   per-row `W_i[l] · x_b` products (see [`Kernels::dot_wide`])
 ///
 /// Returns `[batch * q]` row-major scores.
-pub fn score_batch(stacked: &[f32], queries: &[f32], dim: usize, q: usize) -> Vec<f32> {
+pub fn score_batch(
+    stacked: &[f32],
+    queries: &[f32],
+    dim: usize,
+    q: usize,
+    kernels: Kernels,
+) -> Vec<f32> {
     assert_eq!(stacked.len(), q * dim * dim, "stacked bank shape");
     assert_eq!(queries.len() % dim, 0, "query buffer shape");
     let batch = queries.len() / dim;
@@ -25,7 +34,7 @@ pub fn score_batch(stacked: &[f32], queries: &[f32], dim: usize, q: usize) -> Ve
     let cols: Vec<Vec<f32>> = parallel_map(q, |i| {
         let w = &stacked[i * dim * dim..(i + 1) * dim * dim];
         let mut col = vec![0f32; batch];
-        score_one_class(w, queries, dim, &mut col);
+        score_one_class(w, queries, dim, &mut col, kernels);
         col
     });
     for (i, col) in cols.iter().enumerate() {
@@ -36,52 +45,18 @@ pub fn score_batch(stacked: &[f32], queries: &[f32], dim: usize, q: usize) -> Ve
     out
 }
 
-/// Dot product structured for reliable auto-vectorization: eight
-/// independent accumulator lanes over `chunks_exact(8)` (no bounds
-/// checks in the hot loop), scalar tail.
-#[inline(always)]
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    // 32 scalar lanes = 4 independent 8-wide vector accumulators: enough
-    // ILP to hide FMA latency (a single accumulator chain runs at ~1/4
-    // of FMA throughput).
-    let mut lanes = [0f32; 32];
-    let ac = a.chunks_exact(32);
-    let bc = b.chunks_exact(32);
-    let (atail, btail) = (ac.remainder(), bc.remainder());
-    for (ra, rb) in ac.zip(bc) {
-        for i in 0..32 {
-            lanes[i] += ra[i] * rb[i];
-        }
-    }
-    let mut acc = 0f32;
-    for i in 0..32 {
-        acc += lanes[i];
-    }
-    // tail: 8-wide then scalar
-    let atc = atail.chunks_exact(8);
-    let btc = btail.chunks_exact(8);
-    let (at2, bt2) = (atc.remainder(), btc.remainder());
-    let mut tail_lanes = [0f32; 8];
-    for (ra, rb) in atc.zip(btc) {
-        for i in 0..8 {
-            tail_lanes[i] += ra[i] * rb[i];
-        }
-    }
-    for l in tail_lanes {
-        acc += l;
-    }
-    for (x, y) in at2.iter().zip(bt2) {
-        acc += x * y;
-    }
-    acc
-}
-
 /// Scores of every query against a single class memory.
 /// `col[b] = x_bᵀ W x_b`; one pass over `W` rows, all queries updated per
 /// row (the batch-fusion that makes this bandwidth-optimal: each cache
 /// line of `W` is touched once per batch, not once per query).
 #[inline]
-fn score_one_class(w: &[f32], queries: &[f32], dim: usize, col: &mut [f32]) {
+fn score_one_class(
+    w: &[f32],
+    queries: &[f32],
+    dim: usize,
+    col: &mut [f32],
+    kernels: Kernels,
+) {
     let batch = col.len();
     for (l, row) in w.chunks_exact(dim).enumerate() {
         for b in 0..batch {
@@ -90,7 +65,7 @@ fn score_one_class(w: &[f32], queries: &[f32], dim: usize, col: &mut [f32]) {
             if xl == 0.0 {
                 continue;
             }
-            col[b] += xl * dot8(row, x);
+            col[b] += xl * kernels.dot_wide(row, x);
         }
     }
 }
@@ -183,7 +158,7 @@ mod tests {
         let queries: Vec<f32> = (0..b * d)
             .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
             .collect();
-        let got = score_batch(bank.stacked(), &queries, d, q);
+        let got = score_batch(bank.stacked(), &queries, d, q, Kernels::select());
         for bi in 0..b {
             let want = bank.score_query(&queries[bi * d..(bi + 1) * d]);
             for i in 0..q {
@@ -203,7 +178,7 @@ mod tests {
         for d in [3, 7, 17, 33] {
             let bank = random_bank(&mut rng, 3, 2, d);
             let queries: Vec<f32> = (0..2 * d).map(|_| rng.normal() as f32).collect();
-            let got = score_batch(bank.stacked(), &queries, d, 3);
+            let got = score_batch(bank.stacked(), &queries, d, 3, Kernels::select());
             for bi in 0..2 {
                 let want = bank.score_query(&queries[bi * d..(bi + 1) * d]);
                 for i in 0..3 {
@@ -244,7 +219,7 @@ mod tests {
             })
             .collect();
         let flat: Vec<f32> = queries.concat();
-        let dense = score_batch(bank.stacked(), &flat, d, q);
+        let dense = score_batch(bank.stacked(), &flat, d, q, Kernels::select());
         let sparse = score_batch_support(bank.stacked(), &supports, d, q);
         for (a, b) in dense.iter().zip(&sparse) {
             assert!((a - b).abs() < 1e-2, "{a} vs {b}");
@@ -255,13 +230,13 @@ mod tests {
     fn single_query_single_class() {
         let bank_w = vec![1.0f32, 0.0, 0.0, 2.0]; // W = diag(1,2), d=2
         let queries = vec![3.0f32, 4.0];
-        let s = score_batch(&bank_w, &queries, 2, 1);
+        let s = score_batch(&bank_w, &queries, 2, 1, Kernels::select());
         assert_eq!(s, vec![9.0 + 32.0]); // 1*9 + 2*16
     }
 
     #[test]
     #[should_panic]
     fn wrong_stack_size_panics() {
-        score_batch(&[0.0; 10], &[0.0; 4], 2, 2);
+        score_batch(&[0.0; 10], &[0.0; 4], 2, 2, Kernels::select());
     }
 }

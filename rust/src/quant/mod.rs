@@ -21,8 +21,10 @@
 //!   lookup table built once and shared across the class-major scan
 //!   (`4·d/m`× memory reduction at 8 bits).
 //!
-//! Both kernels implement [`crate::search::DistanceKernel`], so they
-//! share the exact early-abandon accumulation loop of the f32 scan.
+//! Both distances dispatch through [`crate::search::kernels`] (scalar
+//! term producers implement [`crate::search::DistanceKernel`]; SIMD
+//! backends are bitwise-equal), sharing the f32 scan's early-abandon
+//! probe cadence and tie contract.
 //!
 //! The correctness anchor: the approximate distances only *rank*
 //! candidates — every reported distance comes from the exact rerank
@@ -42,7 +44,7 @@ pub use scalar::Sq8Quantizer;
 use crate::data::dataset::Dataset;
 use crate::data::rng::Rng;
 use crate::error::{Error, Result};
-use crate::search::accumulate_pruned;
+use crate::search::Kernels;
 
 /// Deterministic seed for PQ codebook training: retraining over the same
 /// data always yields the same codebooks (k-means is deterministic given
@@ -348,18 +350,23 @@ impl QuantIndex {
     }
 
     /// Build the per-query lookup structure shared across the whole
-    /// class-major scan: the SQ8 residual vector, or the PQ ADC table
+    /// class-major scan: the SQ8 encoded query, or the PQ ADC table
     /// (one exact subvector-to-centroid distance per `(subspace,
-    /// centroid)` cell, computed once per query per batch).
-    pub fn prepare(&self, x: &[f32]) -> QueryLut<'_> {
+    /// centroid)` cell in the padded gather-free layout, computed once
+    /// per query per batch).  `kernels` is the index's one-time-selected
+    /// dispatch handle; every candidate distance of the scan goes
+    /// through it.
+    pub fn prepare(&self, x: &[f32], kernels: Kernels) -> QueryLut<'_> {
         match &self.quantizer {
             Quantizer::Sq8(q) => QueryLut::Sq8 {
-                residual: q.residual(x),
-                step: q.step(),
+                qcode: q.encode_query(x),
+                step2: q.step2(),
+                kernels,
             },
             Quantizer::Pq(q) => QueryLut::Pq {
                 lut: q.adc_table(x),
-                n_centroids: q.n_centroids(),
+                shift: q.stride_shift(),
+                kernels,
             },
         }
     }
@@ -368,22 +375,26 @@ impl QuantIndex {
 /// Per-query state of the compressed scan (see [`QuantIndex::prepare`]).
 #[derive(Debug, Clone)]
 pub enum QueryLut<'a> {
-    /// SQ8: `residual[j] = x[j] - min[j]`, so the per-candidate term is
-    /// `(residual[j] - step[j]·code[j])²`.
+    /// SQ8 integer-domain: the per-candidate term is
+    /// `((qcode[j] − code[j])² as f32) · step2[j]`.
     Sq8 {
-        /// Query minus the per-dimension offsets.
-        residual: Vec<f32>,
-        /// Per-dimension quantization steps (borrowed from the
-        /// quantizer).
-        step: &'a [f32],
+        /// The query, encoded with the database quantizer.
+        qcode: Vec<u8>,
+        /// Per-dimension squared steps (borrowed from the quantizer).
+        step2: &'a [f32],
+        /// The index's kernel dispatch handle.
+        kernels: Kernels,
     },
-    /// PQ: `lut[s·n_centroids + c]` = exact squared distance between the
-    /// query's `s`-th subvector and centroid `c`.
+    /// PQ: `lut[(s << shift) | c]` = exact squared distance between the
+    /// query's `s`-th subvector and centroid `c` (padded rows, see
+    /// [`pq::PqQuantizer::adc_table`]).
     Pq {
-        /// The `[m, n_centroids]` ADC table.
+        /// The padded `[m << shift]` ADC table.
         lut: Vec<f32>,
-        /// Centroids per subspace (row stride of `lut`).
-        n_centroids: usize,
+        /// log2 of the row stride.
+        shift: u32,
+        /// The index's kernel dispatch handle.
+        kernels: Kernels,
     },
 }
 
@@ -395,14 +406,12 @@ impl QueryLut<'_> {
     #[inline]
     pub fn distance_pruned(&self, code: &[u8], bound: f32) -> Option<f32> {
         match self {
-            QueryLut::Sq8 { residual, step } => accumulate_pruned(
-                &scalar::Sq8Terms { residual, step, code },
-                bound,
-            ),
-            QueryLut::Pq { lut, n_centroids } => accumulate_pruned(
-                &pq::AdcTerms { lut, n_centroids: *n_centroids, code },
-                bound,
-            ),
+            QueryLut::Sq8 { qcode, step2, kernels } => {
+                kernels.sq8_pruned(qcode, code, step2, bound)
+            }
+            QueryLut::Pq { lut, shift, kernels } => {
+                kernels.adc_pruned(lut, *shift, code, bound)
+            }
         }
     }
 

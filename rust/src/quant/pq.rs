@@ -8,18 +8,24 @@
 //!
 //! Queries are never quantized: per query, an ADC lookup table holds the
 //! *exact* squared distance between each query subvector and each
-//! centroid (`m · 2^bits` cells, built once and shared across the whole
-//! class-major scan), so a candidate's approximate distance is `m` table
-//! lookups — summed through the shared early-abandon loop
-//! ([`crate::search::DistanceKernel`]), since every cell is a squared
-//! distance and therefore non-negative.
+//! centroid, built once and shared across the whole class-major scan, so
+//! a candidate's approximate distance is `m` table lookups — summed
+//! through the kernel dispatch ([`crate::search::kernels`]), since every
+//! cell is a squared distance and therefore non-negative.
+//!
+//! The table rows are padded to a power-of-two stride (`1 << shift`
+//! floats, `shift = ceil(log2(n_centroids))`): subspace `s`'s cell for
+//! centroid `c` sits at `(s << shift) | c`, so the address is a shift
+//! and an OR — no multiply, and the vector backends read cells as plain
+//! sequential L1 loads, no gather instruction.  Pad cells are `0.0` and
+//! are never addressed by in-range codes (enforced at load by
+//! [`crate::quant::QuantIndex::from_parts`]).
 
 use crate::baseline::kmeans::kmeans;
 use crate::data::dataset::Dataset;
 use crate::data::rng::Rng;
 use crate::error::{Error, Result};
 use crate::search::distance::sq_l2;
-use crate::search::DistanceKernel;
 
 /// Trained product quantizer.
 #[derive(Debug, Clone, PartialEq)]
@@ -168,50 +174,36 @@ impl PqQuantizer {
         v
     }
 
-    /// Build the per-query ADC table: `lut[s·n_centroids + c]` is the
-    /// exact squared distance between the query's subvector `s` and
-    /// centroid `c`.  `m · n_centroids · sub_dim` work, paid once per
-    /// query per batch and amortized over every scanned candidate.
+    /// log2 of the padded ADC row stride: the smallest power of two
+    /// holding `n_centroids` cells.
+    pub fn stride_shift(&self) -> u32 {
+        self.n_centroids.next_power_of_two().trailing_zeros()
+    }
+
+    /// Build the per-query ADC table in the padded layout (see the
+    /// module docs): cell `(s << shift) | c` is the exact squared
+    /// distance between the query's subvector `s` and centroid `c`,
+    /// with `shift = ` [`Self::stride_shift`]; pad cells are `0.0`.
+    /// `m · n_centroids · sub_dim` work, paid once per query per batch
+    /// and amortized over every scanned candidate.
     pub fn adc_table(&self, x: &[f32]) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.dim);
-        let mut lut = Vec::with_capacity(self.m * self.n_centroids);
+        let shift = self.stride_shift();
+        let mut lut = vec![0f32; self.m << shift];
         for s in 0..self.m {
             let sub = &x[s * self.sub_dim..(s + 1) * self.sub_dim];
             for c in 0..self.n_centroids {
-                lut.push(sq_l2(sub, self.centroid(s, c)));
+                lut[(s << shift) | c] = sq_l2(sub, self.centroid(s, c));
             }
         }
         lut
     }
 }
 
-/// The ADC kernel: `term(s) = lut[s·n_centroids + code[s]]` — one table
-/// lookup per subspace, summed through the shared early-abandon loop
-/// (every cell is a squared distance, hence non-negative).
-pub struct AdcTerms<'a> {
-    /// The query's `[m, n_centroids]` ADC table.
-    pub lut: &'a [f32],
-    /// Row stride of `lut`.
-    pub n_centroids: usize,
-    /// The candidate's code row.
-    pub code: &'a [u8],
-}
-
-impl DistanceKernel for AdcTerms<'_> {
-    #[inline(always)]
-    fn terms(&self) -> usize {
-        self.code.len()
-    }
-    #[inline(always)]
-    fn term(&self, s: usize) -> f32 {
-        self.lut[s * self.n_centroids + self.code[s] as usize]
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::search::accumulate;
+    use crate::search::Kernels;
 
     fn gaussian(seed: u64, d: usize, n: usize) -> Dataset {
         let mut rng = Rng::new(seed);
@@ -263,15 +255,12 @@ mod tests {
         let pq = PqQuantizer::train(&ds, 4, 4, &mut rng).unwrap();
         let x: Vec<f32> = (0..16).map(|j| (j as f32 * 0.3).sin()).collect();
         let lut = pq.adc_table(&x);
+        assert_eq!(lut.len(), pq.m() << pq.stride_shift());
         let mut code = Vec::new();
         for v in ds.iter().take(20) {
             code.clear();
             pq.encode_into(v, &mut code);
-            let via_adc = accumulate(&AdcTerms {
-                lut: &lut,
-                n_centroids: pq.n_centroids(),
-                code: &code,
-            });
+            let via_adc = Kernels::scalar().adc(&lut, pq.stride_shift(), &code);
             // ADC sums per-subspace distances — exactly the squared
             // distance to the decoded (centroid-concatenated) vector
             let via_decode = sq_l2(&x, &pq.decode(&code));
@@ -288,6 +277,12 @@ mod tests {
         let mut rng = Rng::new(8);
         let pq = PqQuantizer::train(&ds, 2, 8, &mut rng).unwrap();
         assert_eq!(pq.n_centroids(), 3, "k clamps to n");
+        // non-power-of-two codebook pads its ADC rows to the next power
+        assert_eq!(pq.stride_shift(), 2);
+        let lut = pq.adc_table(ds.get(0));
+        assert_eq!(lut.len(), 2 << 2);
+        assert_eq!(lut[3], 0.0, "pad cell never addressed by codes 0..3");
+        assert_eq!(lut[7], 0.0, "pad cell never addressed by codes 0..3");
     }
 
     #[test]

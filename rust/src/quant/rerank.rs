@@ -17,7 +17,7 @@
 //! is *all* scanned candidates, which always contains it.
 
 use crate::data::dataset::Dataset;
-use crate::search::{distance_pruned, Metric, Neighbor, TopK};
+use crate::search::{Kernels, Metric, Neighbor, TopK};
 
 /// Exact-rerank the stage-1 survivors: `survivors` are `(approx_dist,
 /// id)` pairs (any order; stage 1 hands them ascending).  Returns the
@@ -29,13 +29,15 @@ pub(crate) fn rerank_exact(
     data: &Dataset,
     survivors: Vec<(f32, u32)>,
     k: usize,
+    kernels: Kernels,
 ) -> (Vec<Neighbor>, usize) {
     let reranked = survivors.len();
     let mut acc = TopK::new(k.max(1));
     for (_, vid) in survivors {
         // early abandoning against the current exact k-th best: kept
         // distances are bitwise sq_l2, abandoned ones provably lose
-        if let Some(dist) = distance_pruned(metric, x, data.get(vid as usize), acc.bound())
+        if let Some(dist) =
+            kernels.distance_pruned(metric, x, data.get(vid as usize), acc.bound())
         {
             acc.push(dist, vid);
         }
@@ -63,7 +65,8 @@ mod tests {
         // garbage approximate keys: the rerank must not care
         let survivors: Vec<(f32, u32)> =
             (0..50).map(|i| ((50 - i) as f32, i as u32)).collect();
-        let (got, reranked) = rerank_exact(Metric::SqL2, &x, &ds, survivors, 3);
+        let (got, reranked) =
+            rerank_exact(Metric::SqL2, &x, &ds, survivors, 3, Kernels::select());
         assert_eq!(reranked, 50);
         let mut want: Vec<(f32, u32)> =
             (0..50).map(|i| (sq_l2(&x, ds.get(i)), i as u32)).collect();
@@ -78,7 +81,7 @@ mod tests {
     fn empty_survivors_give_empty_neighbors() {
         let ds = gaussian(3, 4, 10);
         let (got, reranked) =
-            rerank_exact(Metric::SqL2, &[0.0; 4], &ds, Vec::new(), 5);
+            rerank_exact(Metric::SqL2, &[0.0; 4], &ds, Vec::new(), 5, Kernels::scalar());
         assert!(got.is_empty());
         assert_eq!(reranked, 0);
     }

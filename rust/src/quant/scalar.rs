@@ -3,15 +3,18 @@
 //! Training learns one `(min, step)` pair per dimension over the
 //! database; a coordinate is stored as
 //! `code = round((x - min) / step)` clamped to `0..=255` (one byte), and
-//! decodes to `min + step · code`.  The asymmetric distance against an
-//! f32 query folds the offset into a per-query residual computed once
-//! (`r = x - min`), so the per-candidate kernel is
-//! `Σ_j (r_j - step_j · code_j)²` — a fused loop over the integer codes
-//! that shares the early-abandon accumulation of the f32 scan through
-//! [`crate::search::DistanceKernel`].
+//! decodes to `min + step · code`.  The scan distance is computed in the
+//! **integer domain**: the query is encoded with the same quantizer once
+//! per query (`qcode`), and the per-candidate kernel is
+//! `Σ_j ((qcode_j − code_j)² as f32) · step_j²` — the byte difference
+//! squared is exact in `i32` and in the `i32 → f32` convert, leaving one
+//! f32 multiply per term, which scalar and SIMD backends perform
+//! identically (the kernel lives in [`crate::search::kernels`]).  The
+//! approximate distance equals the squared L2 between the two decoded
+//! vectors up to decode rounding; the exact rerank stage absorbs the
+//! difference, as it already absorbs quantization error.
 
 use crate::data::dataset::Dataset;
-use crate::search::DistanceKernel;
 
 /// Trained per-dimension affine 8-bit quantizer.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,6 +24,9 @@ pub struct Sq8Quantizer {
     /// Per-dimension step `(max - min) / 255`, forced positive so a
     /// constant dimension encodes to code 0 and decodes exactly.
     step: Vec<f32>,
+    /// Per-dimension squared steps (`step[j]²`), precomputed once at
+    /// train/load for the integer-domain scan kernel.
+    step2: Vec<f32>,
 }
 
 impl Sq8Quantizer {
@@ -30,7 +36,7 @@ impl Sq8Quantizer {
         let d = data.dim();
         if data.is_empty() {
             // degenerate but total: identity-ish ranges, every code 0
-            return Sq8Quantizer { min: vec![0.0; d], step: vec![1.0; d] };
+            return Sq8Quantizer::from_parts(vec![0.0; d], vec![1.0; d]);
         }
         let mut min = vec![f32::INFINITY; d];
         let mut max = vec![f32::NEG_INFINITY; d];
@@ -54,13 +60,15 @@ impl Sq8Quantizer {
                 }
             })
             .collect();
-        Sq8Quantizer { min, step }
+        Sq8Quantizer::from_parts(min, step)
     }
 
-    /// Reassemble from persisted parts.
+    /// Reassemble from persisted parts (`step2` is derived, not
+    /// persisted).
     pub fn from_parts(min: Vec<f32>, step: Vec<f32>) -> Sq8Quantizer {
         debug_assert_eq!(min.len(), step.len());
-        Sq8Quantizer { min, step }
+        let step2 = step.iter().map(|s| s * s).collect();
+        Sq8Quantizer { min, step, step2 }
     }
 
     /// Vector dimensionality.
@@ -78,9 +86,15 @@ impl Sq8Quantizer {
         &self.min
     }
 
-    /// Per-dimension steps (persistence + the scan kernel).
+    /// Per-dimension steps (persistence).
     pub fn step(&self) -> &[f32] {
         &self.step
+    }
+
+    /// Per-dimension squared steps — the integer-domain scan kernel's
+    /// weight table (see [`crate::search::kernels::Sq8Terms`]).
+    pub fn step2(&self) -> &[f32] {
+        &self.step2
     }
 
     /// Resident bytes of the quantizer tables (min + step).
@@ -108,34 +122,13 @@ impl Sq8Quantizer {
             .collect()
     }
 
-    /// The per-query residual `x - min`, computed once per query and
-    /// shared across every candidate of the scan.
-    pub fn residual(&self, x: &[f32]) -> Vec<f32> {
-        x.iter().zip(&self.min).map(|(v, m)| v - m).collect()
-    }
-}
-
-/// The fused SQ8 L2 kernel: `term(j) = (residual[j] - step[j]·code[j])²`
-/// over one-byte codes — a [`DistanceKernel`], so it reuses the shared
-/// early-abandon accumulation loop.
-pub struct Sq8Terms<'a> {
-    /// Per-query residual `x - min`.
-    pub residual: &'a [f32],
-    /// Per-dimension steps.
-    pub step: &'a [f32],
-    /// The candidate's code row.
-    pub code: &'a [u8],
-}
-
-impl DistanceKernel for Sq8Terms<'_> {
-    #[inline(always)]
-    fn terms(&self) -> usize {
-        self.code.len()
-    }
-    #[inline(always)]
-    fn term(&self, j: usize) -> f32 {
-        let t = self.residual[j] - self.step[j] * self.code[j] as f32;
-        t * t
+    /// Encode the query for the integer-domain scan: the same clamped
+    /// affine encoding as the database codes, computed once per query
+    /// and shared across every candidate of the scan.
+    pub fn encode_query(&self, x: &[f32]) -> Vec<u8> {
+        let mut qcode = Vec::with_capacity(x.len());
+        self.encode_into(x, &mut qcode);
+        qcode
     }
 }
 
@@ -143,7 +136,7 @@ impl DistanceKernel for Sq8Terms<'_> {
 mod tests {
     use super::*;
     use crate::data::rng::Rng;
-    use crate::search::{accumulate, distance::sq_l2};
+    use crate::search::{distance::sq_l2, Kernels};
 
     fn gaussian(seed: u64, d: usize, n: usize) -> Dataset {
         let mut rng = Rng::new(seed);
@@ -173,25 +166,40 @@ mod tests {
 
     #[test]
     fn kernel_matches_decoded_distance() {
+        // the integer-domain kernel equals the squared L2 between the
+        // two *decoded* vectors, up to decode rounding: both measure
+        // Σ (step·(qcode − code))² — the kernel without materializing
+        // the decode
         let ds = gaussian(2, 17, 40);
         let q = Sq8Quantizer::train(&ds);
         let mut rng = Rng::new(3);
         let x: Vec<f32> = (0..17).map(|_| rng.normal() as f32).collect();
-        let residual = q.residual(&x);
+        let qcode = q.encode_query(&x);
+        let kernels = Kernels::scalar();
         let mut code = Vec::new();
         for v in ds.iter() {
             code.clear();
             q.encode_into(v, &mut code);
-            let via_kernel = accumulate(&Sq8Terms {
-                residual: &residual,
-                step: q.step(),
-                code: &code,
-            });
-            let via_decode = sq_l2(&x, &q.decode(&code));
+            let via_kernel = kernels.sq8(&qcode, &code, q.step2());
+            let via_decode = sq_l2(&q.decode(&qcode), &q.decode(&code));
             assert!(
                 (via_kernel - via_decode).abs() <= via_decode.abs() * 1e-4 + 1e-4,
                 "{via_kernel} vs {via_decode}"
             );
+        }
+    }
+
+    #[test]
+    fn query_encoding_shares_the_database_encoder() {
+        let ds = gaussian(4, 9, 30);
+        let q = Sq8Quantizer::train(&ds);
+        let x = ds.get(5);
+        let mut via_encode_into = Vec::new();
+        q.encode_into(x, &mut via_encode_into);
+        assert_eq!(q.encode_query(x), via_encode_into);
+        assert_eq!(q.step2().len(), 9);
+        for j in 0..9 {
+            assert_eq!(q.step2()[j], q.step()[j] * q.step()[j]);
         }
     }
 

@@ -6,6 +6,7 @@
 
 use crate::error::{Error, Result};
 use crate::memory::score as mem_score;
+use crate::search::Kernels;
 
 use super::artifacts::Manifest;
 use super::xla;
@@ -35,6 +36,8 @@ pub struct NativeScorer {
     stacked: Vec<f32>,
     dim: usize,
     q: usize,
+    /// Distance/dot kernel dispatch, selected once at construction.
+    kernels: Kernels,
 }
 
 impl NativeScorer {
@@ -47,7 +50,7 @@ impl NativeScorer {
                 q * dim * dim
             )));
         }
-        Ok(NativeScorer { stacked, dim, q })
+        Ok(NativeScorer { stacked, dim, q, kernels: Kernels::select() })
     }
 }
 
@@ -60,7 +63,13 @@ impl ClassScorer for NativeScorer {
                 self.dim
             )));
         }
-        Ok(mem_score::score_batch(&self.stacked, queries, self.dim, self.q))
+        Ok(mem_score::score_batch(
+            &self.stacked,
+            queries,
+            self.dim,
+            self.q,
+            self.kernels,
+        ))
     }
 
     fn dim(&self) -> usize {

@@ -123,7 +123,7 @@ pub fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
 /// class-grouped candidate scan (see [`accumulate_pruned`] for the
 /// bitwise contract).
 #[inline]
-fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+pub(crate) fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
     debug_assert_eq!(a.len(), b.len());
     accumulate_pruned(&SqL2Terms { a, b }, bound)
 }
@@ -172,11 +172,27 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Hamming distance between binary (0/1 or ±1) vectors, counting
-/// coordinates that differ.
+/// coordinates that differ.  Written as a 4-wide chunked count (like the
+/// distance loops) so LLVM vectorizes the compares; counts are integers,
+/// so any evaluation order yields the identical result.
 #[inline]
 pub fn hamming(a: &[f32], b: &[f32]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).filter(|(x, y)| x != y).count() as u32
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    for i in 0..chunks {
+        let j = i * 4;
+        c0 += u32::from(a[j] != b[j]);
+        c1 += u32::from(a[j + 1] != b[j + 1]);
+        c2 += u32::from(a[j + 2] != b[j + 2]);
+        c3 += u32::from(a[j + 3] != b[j + 3]);
+    }
+    let mut c = c0 + c1 + c2 + c3;
+    for j in chunks * 4..n {
+        c += u32::from(a[j] != b[j]);
+    }
+    c
 }
 
 /// Metric selector used across index and baselines.

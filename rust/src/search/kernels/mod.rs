@@ -1,0 +1,509 @@
+//! Runtime-dispatched distance kernels.
+//!
+//! Every scan in the system — exact f32, SQ8, PQ/ADC, hamming, and the
+//! bilinear scoring stage's wide dot product — bottoms out in one of the
+//! operations on [`Kernels`].  A backend is selected **once** per index
+//! (at build or load, see [`Kernels::select`]) from one-time CPU feature
+//! detection, and reported in server/router STATS as `kernel.backend`.
+//!
+//! # The bitwise contract
+//!
+//! Every backend is **bitwise identical** to the scalar reference for
+//! every operation (pinned by `to_bits` proptests in
+//! `tests/proptests.rs`).  The scalar loops were written with 4
+//! independent accumulator lanes folded as `((s0 + s1) + s2) + s3`
+//! precisely so a 4-wide vector register whose lane `l` *is* `s_l` can
+//! replay the identical per-lane addition chains with vertical adds, and
+//! the horizontal fold extracts lanes and adds them in the scalar order.
+//! No FMA is used anywhere — contraction would change results.  The
+//! early-abandon variants probe at the same 32-term cadence as
+//! [`crate::search::accumulate_pruned`], so the tie/abandon contract
+//! (`None` iff strictly greater than the bound) is unchanged.
+//!
+//! A consequence worth knowing when reading the dispatch table: under
+//! this fold-order constraint, single-row f32 distances are bound by the
+//! latency of the one serial 4-wide accumulator chain, so 256-bit
+//! vectors buy nothing over 128-bit for them (measured: see
+//! `BENCH_kernels.json`).  The f32 ops therefore use the 128-bit kernels
+//! on both the `sse2` and `avx2` backends, while AVX2 earns its keep
+//! where it has real headroom: the 8-wide integer SQ8 kernel, the
+//! 8-wide hamming compare, and the 32-lane `dot_wide` used by batched
+//! scoring (independent lanes, no serial fold).
+//!
+//! # Backends
+//!
+//! | Backend  | Where                | Detection                          |
+//! | -------- | -------------------- | ---------------------------------- |
+//! | `scalar` | everywhere           | always available (reference)       |
+//! | `sse2`   | x86_64               | baseline — statically guaranteed   |
+//! | `avx2`   | x86_64               | `is_x86_feature_detected!("avx2")` |
+//! | `neon`   | aarch64              | baseline — statically guaranteed   |
+//!
+//! The `AMSEARCH_KERNEL` environment variable (`scalar` / `sse2` /
+//! `avx2` / `neon`) overrides selection for benchmarks and tests; an
+//! unknown or unavailable name falls back to the detected best, never
+//! panics.  Backends without a dedicated implementation of some
+//! operation fall back to the scalar reference for that operation —
+//! still bitwise-equal by definition.
+
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use crate::search::distance::{self, Metric};
+
+pub use scalar::{AdcTerms, Sq8Terms};
+
+/// A concrete kernel implementation family (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable 4-lane scalar loops — the reference every other backend
+    /// must match bitwise.
+    Scalar,
+    /// 128-bit SSE2 vectors (x86_64 baseline, no runtime check needed).
+    Sse2,
+    /// 256-bit AVX2 where it wins (integer SQ8, hamming, `dot_wide`);
+    /// 128-bit f32 ops shared with `sse2` (see module docs).
+    Avx2,
+    /// 128-bit NEON f32 vectors (aarch64 baseline).
+    Neon,
+}
+
+impl Backend {
+    /// Stable lowercase name, used by `AMSEARCH_KERNEL` and the
+    /// `kernel.backend` STATS row.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "scalar" => Some(Backend::Scalar),
+            "sse2" => Some(Backend::Sse2),
+            "avx2" => Some(Backend::Avx2),
+            "neon" => Some(Backend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this backend can run on the current machine.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Sse2 => cfg!(target_arch = "x86_64"),
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Backend::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// One-time CPU detection: the best backend this machine supports.
+fn detected() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Backend::Avx2
+        } else {
+            Backend::Sse2
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Backend::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Backend::Scalar
+    }
+}
+
+fn detected_cached() -> Backend {
+    static DETECTED: std::sync::OnceLock<Backend> = std::sync::OnceLock::new();
+    *DETECTED.get_or_init(detected)
+}
+
+/// The dispatch handle every scan layer carries: a [`Backend`] chosen
+/// once, exposing every distance operation with the scalar reference's
+/// exact bitwise semantics.  `Copy` and two bytes — cheap to embed in an
+/// index or a per-query lookup table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernels {
+    backend: Backend,
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        Kernels::select()
+    }
+}
+
+impl Kernels {
+    /// The selected backend: the detected best for this machine, unless
+    /// the `AMSEARCH_KERNEL` environment variable names an available
+    /// override.  Called once at index build/load — the detection itself
+    /// is cached process-wide.
+    pub fn select() -> Kernels {
+        let best = detected_cached();
+        let backend = match std::env::var("AMSEARCH_KERNEL") {
+            Ok(name) => match Backend::parse(name.trim()) {
+                Some(b) if b.available() => b,
+                // unknown or unavailable override: fall back, don't fail
+                _ => best,
+            },
+            Err(_) => best,
+        };
+        Kernels { backend }
+    }
+
+    /// The always-available scalar reference.
+    pub fn scalar() -> Kernels {
+        Kernels { backend: Backend::Scalar }
+    }
+
+    /// A specific backend, or `None` if this machine can't run it
+    /// (benchmarks and the bitwise-equivalence tests sweep these).
+    pub fn with_backend(backend: Backend) -> Option<Kernels> {
+        backend.available().then_some(Kernels { backend })
+    }
+
+    /// The selected backend.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Stable backend name for STATS (`kernel.backend`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Squared Euclidean distance; bitwise equal to
+    /// [`crate::search::distance::sq_l2`] on every backend.
+    #[inline]
+    pub fn sq_l2(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "sq_l2 operand shapes");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 | Backend::Avx2 => x86::sq_l2(a, b),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon::sq_l2(a, b),
+            _ => distance::sq_l2(a, b),
+        }
+    }
+
+    /// Early-abandoning squared-L2: same probe cadence and tie contract
+    /// as [`crate::search::accumulate_pruned`] (`None` iff strictly
+    /// greater than `bound`), `Some(d)` bitwise equal to [`Self::sq_l2`].
+    #[inline]
+    pub fn sq_l2_pruned(&self, a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+        assert_eq!(a.len(), b.len(), "sq_l2 operand shapes");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 | Backend::Avx2 => x86::sq_l2_pruned(a, b, bound),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon::sq_l2_pruned(a, b, bound),
+            _ => distance::sq_l2_pruned(a, b, bound),
+        }
+    }
+
+    /// Dot product; bitwise equal to [`crate::search::distance::dot`].
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot operand shapes");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 | Backend::Avx2 => x86::dot(a, b),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon::dot(a, b),
+            _ => distance::dot(a, b),
+        }
+    }
+
+    /// The 32-lane dot product used by the batched scoring stage
+    /// (`memory::score`): 32 independent accumulator lanes over 32-term
+    /// chunks, folded sequentially, then an 8-wide and a scalar tail.
+    /// Unlike the 4-lane distance kernels this has no serial vector
+    /// chain, so AVX2 runs four genuine 256-bit accumulators.
+    #[inline]
+    pub fn dot_wide(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot_wide operand shapes");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                // SAFETY: this handle only carries Backend::Avx2 when
+                // `is_x86_feature_detected!("avx2")` held at selection
+                // (Kernels::select / Backend::available), so the
+                // target-feature contract of `dot_wide_avx2` is met.
+                unsafe { x86::dot_wide_avx2(a, b) }
+            }
+            _ => scalar::dot_wide(a, b),
+        }
+    }
+
+    /// Hamming distance (count of differing coordinates); exactly equal
+    /// to [`crate::search::distance::hamming`] — integer counts carry no
+    /// rounding, so any summation order is the same count.
+    #[inline]
+    pub fn hamming(&self, a: &[f32], b: &[f32]) -> u32 {
+        assert_eq!(a.len(), b.len(), "hamming operand shapes");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 => x86::hamming_sse2(a, b),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                // SAFETY: Backend::Avx2 is only constructed after the
+                // runtime `is_x86_feature_detected!("avx2")` check
+                // (Kernels::select / Backend::available).
+                unsafe { x86::hamming_avx2(a, b) }
+            }
+            _ => distance::hamming(a, b),
+        }
+    }
+
+    /// Metric distance — mirrors [`Metric::distance`] bitwise.
+    #[inline]
+    pub fn distance(&self, metric: Metric, a: &[f32], b: &[f32]) -> f32 {
+        match metric {
+            Metric::SqL2 => self.sq_l2(a, b),
+            Metric::NegDot => -self.dot(a, b),
+            Metric::Hamming => self.hamming(a, b) as f32,
+        }
+    }
+
+    /// Metric distance with early abandoning — mirrors
+    /// [`crate::search::distance_pruned`] bitwise: `None` iff strictly
+    /// greater than `bound`; squared-L2 abandons mid-accumulation, the
+    /// other metrics compute fully before comparing.
+    #[inline]
+    pub fn distance_pruned(
+        &self,
+        metric: Metric,
+        a: &[f32],
+        b: &[f32],
+        bound: f32,
+    ) -> Option<f32> {
+        match metric {
+            Metric::SqL2 => self.sq_l2_pruned(a, b, bound),
+            _ => {
+                let d = self.distance(metric, a, b);
+                if d > bound {
+                    None
+                } else {
+                    Some(d)
+                }
+            }
+        }
+    }
+
+    /// SQ8 asymmetric distance in the integer domain:
+    /// `Σ_j ((qcode[j] − code[j])² as f32) · step2[j]`.  The byte
+    /// difference squared is at most `255² = 65025`, exact in `i32` and
+    /// exact when converted to `f32`, so the only rounding is the one
+    /// `f32` multiply per term — which every backend performs
+    /// identically.
+    #[inline]
+    pub fn sq8(&self, qcode: &[u8], code: &[u8], step2: &[f32]) -> f32 {
+        assert_eq!(qcode.len(), code.len(), "sq8 code shapes");
+        assert_eq!(step2.len(), code.len(), "sq8 step table shape");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                // SAFETY: Backend::Avx2 is only constructed after the
+                // runtime `is_x86_feature_detected!("avx2")` check
+                // (Kernels::select / Backend::available).
+                unsafe { x86::sq8_avx2(qcode, code, step2) }
+            }
+            _ => scalar::sq8(qcode, code, step2),
+        }
+    }
+
+    /// Early-abandoning [`Self::sq8`] with the standard 32-term probe
+    /// cadence and tie contract.
+    #[inline]
+    pub fn sq8_pruned(
+        &self,
+        qcode: &[u8],
+        code: &[u8],
+        step2: &[f32],
+        bound: f32,
+    ) -> Option<f32> {
+        assert_eq!(qcode.len(), code.len(), "sq8 code shapes");
+        assert_eq!(step2.len(), code.len(), "sq8 step table shape");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                // SAFETY: Backend::Avx2 is only constructed after the
+                // runtime `is_x86_feature_detected!("avx2")` check
+                // (Kernels::select / Backend::available).
+                unsafe { x86::sq8_pruned_avx2(qcode, code, step2, bound) }
+            }
+            _ => scalar::sq8_pruned(qcode, code, step2, bound),
+        }
+    }
+
+    /// ADC distance over a power-of-two padded lookup table:
+    /// `Σ_s lut[(s << shift) | code[s]]`.  The pad makes every row the
+    /// same `1 << shift` floats, so the address is a shift and an OR —
+    /// no multiply, no gather: the vector backends issue four scalar L1
+    /// loads and pack them (gather-free sequential lookup).
+    #[inline]
+    pub fn adc(&self, lut: &[f32], shift: u32, code: &[u8]) -> f32 {
+        debug_assert!(lut.len() >= code.len() << shift, "adc table shape");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 | Backend::Avx2 => x86::adc(lut, shift, code),
+            _ => scalar::adc(lut, shift, code),
+        }
+    }
+
+    /// Early-abandoning [`Self::adc`] with the standard 32-term probe
+    /// cadence and tie contract.
+    #[inline]
+    pub fn adc_pruned(
+        &self,
+        lut: &[f32],
+        shift: u32,
+        code: &[u8],
+        bound: f32,
+    ) -> Option<f32> {
+        debug_assert!(lut.len() >= code.len() << shift, "adc table shape");
+        match self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 | Backend::Avx2 => x86::adc_pruned(lut, shift, code, bound),
+            _ => scalar::adc_pruned(lut, shift, code, bound),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn backends() -> Vec<Kernels> {
+        [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon]
+            .into_iter()
+            .filter_map(Kernels::with_backend)
+            .collect()
+    }
+
+    #[test]
+    fn scalar_backend_is_always_available() {
+        assert_eq!(Kernels::scalar().backend(), Backend::Scalar);
+        assert!(Backend::Scalar.available());
+        assert_eq!(Kernels::with_backend(Backend::Scalar), Some(Kernels::scalar()));
+    }
+
+    #[test]
+    fn selected_backend_is_available() {
+        let k = Kernels::select();
+        assert!(k.backend().available());
+        // name round-trips through the override parser
+        assert_eq!(Backend::parse(k.backend_name()), Some(k.backend()));
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_bitwise_smoke() {
+        // quick cross-op smoke; the exhaustive sweep lives in
+        // tests/proptests.rs
+        let mut rng = Rng::new(41);
+        let scalar = Kernels::scalar();
+        for n in [0usize, 1, 3, 4, 7, 31, 32, 33, 64, 100, 128, 129] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let qc: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let cc: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let s2: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).abs()).collect();
+            for k in backends() {
+                let name = k.backend_name();
+                assert_eq!(
+                    k.sq_l2(&a, &b).to_bits(),
+                    scalar.sq_l2(&a, &b).to_bits(),
+                    "sq_l2 {name} n={n}"
+                );
+                assert_eq!(
+                    k.dot(&a, &b).to_bits(),
+                    scalar.dot(&a, &b).to_bits(),
+                    "dot {name} n={n}"
+                );
+                assert_eq!(
+                    k.dot_wide(&a, &b).to_bits(),
+                    scalar.dot_wide(&a, &b).to_bits(),
+                    "dot_wide {name} n={n}"
+                );
+                assert_eq!(k.hamming(&a, &b), scalar.hamming(&a, &b), "hamming {name}");
+                assert_eq!(
+                    k.sq8(&qc, &cc, &s2).to_bits(),
+                    scalar.sq8(&qc, &cc, &s2).to_bits(),
+                    "sq8 {name} n={n}"
+                );
+                let full = scalar.sq_l2(&a, &b);
+                assert_eq!(
+                    k.sq_l2_pruned(&a, &b, full).map(f32::to_bits),
+                    Some(full.to_bits()),
+                    "pruned tie {name} n={n}"
+                );
+                if full > 0.0 {
+                    assert_eq!(
+                        k.sq_l2_pruned(&a, &b, full * 0.999),
+                        None,
+                        "pruned abandon {name} n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adc_backends_agree_on_padded_tables() {
+        let mut rng = Rng::new(42);
+        let scalar = Kernels::scalar();
+        for (m, shift) in [(0usize, 2u32), (1, 2), (8, 4), (13, 4), (16, 8), (33, 8)] {
+            let lut: Vec<f32> =
+                (0..m << shift).map(|_| (rng.normal() as f32).abs()).collect();
+            let code: Vec<u8> = (0..m)
+                .map(|_| (rng.next_u64() & ((1 << shift) - 1)) as u8)
+                .collect();
+            let want = scalar.adc(&lut, shift, &code);
+            for k in backends() {
+                assert_eq!(
+                    k.adc(&lut, shift, &code).to_bits(),
+                    want.to_bits(),
+                    "adc {} m={m}",
+                    k.backend_name()
+                );
+                assert_eq!(
+                    k.adc_pruned(&lut, shift, &code, want).map(f32::to_bits),
+                    Some(want.to_bits()),
+                    "adc_pruned {} m={m}",
+                    k.backend_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_override_falls_back_to_detected() {
+        // Backend::parse is what the env override goes through; the
+        // fallback path must not panic and must stay available
+        assert_eq!(Backend::parse("quantum"), None);
+        let k = Kernels::select();
+        assert!(k.backend().available());
+    }
+}

@@ -1,0 +1,110 @@
+//! aarch64 NEON kernels for the f32 distance loops.  NEON is a baseline
+//! feature of the `aarch64` targets we build for, so there is no runtime
+//! check — `Backend::Neon` is always available there.
+//!
+//! Same bitwise contract as the x86 file: one `float32x4_t` accumulator
+//! whose lanes are the scalar `s0..s3`, vertical adds per 4-term chunk,
+//! lanes extracted and folded in the scalar order `((l0 + l1) + l2) + l3`.
+//! `vmulq`/`vaddq` are separate (non-fused) instructions, matching the
+//! scalar mul-then-add.
+//!
+//! The quantized kernels (SQ8/ADC) fall back to scalar on aarch64 for
+//! now; only the f32 hot loops are vectorized here.
+
+#[allow(clippy::wildcard_imports)]
+use std::arch::aarch64::*;
+
+/// Horizontal fold in the scalar order: `((l0 + l1) + l2) + l3`.
+#[inline(always)]
+fn fold4(acc: float32x4_t) -> f32 {
+    ((vgetq_lane_f32::<0>(acc) + vgetq_lane_f32::<1>(acc)) + vgetq_lane_f32::<2>(acc))
+        + vgetq_lane_f32::<3>(acc)
+}
+
+/// Squared-L2, bitwise equal to [`crate::search::distance::sq_l2`].
+#[inline]
+pub(crate) fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so both
+        // 16-byte unaligned loads stay inside their slices; NEON is
+        // baseline on aarch64.
+        acc = unsafe {
+            let d = vsubq_f32(vld1q_f32(a.as_ptr().add(j)), vld1q_f32(b.as_ptr().add(j)));
+            vaddq_f32(acc, vmulq_f32(d, d))
+        };
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Early-abandoning [`sq_l2`]; replays `accumulate_pruned`'s probe
+/// schedule and tie contract exactly.
+#[inline]
+pub(crate) fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    let mut s = 0f32;
+    let mut i = 0usize;
+    while i < chunks {
+        let stop = (i + 8).min(chunks);
+        while i < stop {
+            let j = i * 4;
+            // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so
+            // both 16-byte unaligned loads stay inside their slices;
+            // NEON is baseline on aarch64.
+            acc = unsafe {
+                let d =
+                    vsubq_f32(vld1q_f32(a.as_ptr().add(j)), vld1q_f32(b.as_ptr().add(j)));
+                vaddq_f32(acc, vmulq_f32(d, d))
+            };
+            i += 1;
+        }
+        s = fold4(acc);
+        if s > bound {
+            return None;
+        }
+    }
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    if s > bound {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// Dot product, bitwise equal to [`crate::search::distance::dot`].
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so both
+        // 16-byte unaligned loads stay inside their slices; NEON is
+        // baseline on aarch64.
+        acc = unsafe {
+            vaddq_f32(
+                acc,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(j)), vld1q_f32(b.as_ptr().add(j))),
+            )
+        };
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}

@@ -1,0 +1,201 @@
+//! Scalar reference kernels — the bitwise ground truth every vector
+//! backend must reproduce (see the module docs in [`super`]).
+//!
+//! The f32 squared-L2 / dot / hamming references live in
+//! [`crate::search::distance`] (they predate this module and the
+//! baselines call them directly); this file adds the term producers for
+//! the quantized representations and the 32-lane `dot_wide` used by the
+//! batched scorer.
+
+use crate::search::distance::{accumulate, accumulate_pruned, DistanceKernel};
+
+/// SQ8 asymmetric-distance terms in the integer domain: the query is
+/// encoded with the same per-dimension affine quantizer as the database
+/// (`qcode`), and
+/// `term(j) = ((qcode[j] − code[j])² as f32) · step2[j]`
+/// with `step2[j] = step[j]²`.  The byte difference squared is ≤ 65025 —
+/// exact in `i32` and exact in the `i32 → f32` convert — so the single
+/// rounding per term is the final multiply, which scalar and vector
+/// backends perform identically.  Terms are non-negative, satisfying the
+/// [`DistanceKernel`] early-abandon contract.
+pub struct Sq8Terms<'a> {
+    /// Encoded query.
+    pub qcode: &'a [u8],
+    /// Encoded candidate.
+    pub code: &'a [u8],
+    /// Per-dimension squared quantization steps.
+    pub step2: &'a [f32],
+}
+
+impl DistanceKernel for Sq8Terms<'_> {
+    #[inline(always)]
+    fn terms(&self) -> usize {
+        self.code.len()
+    }
+    #[inline(always)]
+    fn term(&self, j: usize) -> f32 {
+        let d = i32::from(self.qcode[j]) - i32::from(self.code[j]);
+        ((d * d) as f32) * self.step2[j]
+    }
+}
+
+/// ADC terms over a power-of-two padded lookup table: subspace `s`'s row
+/// starts at `s << shift` (row stride `1 << shift` floats, padded with
+/// zeros that in-range codes never address), so
+/// `term(s) = lut[(s << shift) | code[s]]` — a shift and an OR, no
+/// multiply.  Table entries are exact squared subspace distances, hence
+/// non-negative.
+pub struct AdcTerms<'a> {
+    /// Padded `[m << shift]` lookup table.
+    pub lut: &'a [f32],
+    /// log2 of the row stride.
+    pub shift: u32,
+    /// One centroid id per subspace.
+    pub code: &'a [u8],
+}
+
+impl DistanceKernel for AdcTerms<'_> {
+    #[inline(always)]
+    fn terms(&self) -> usize {
+        self.code.len()
+    }
+    #[inline(always)]
+    fn term(&self, j: usize) -> f32 {
+        self.lut[(j << self.shift) | self.code[j] as usize]
+    }
+}
+
+/// Scalar SQ8 distance — [`accumulate`] over [`Sq8Terms`].
+#[inline]
+pub fn sq8(qcode: &[u8], code: &[u8], step2: &[f32]) -> f32 {
+    accumulate(&Sq8Terms { qcode, code, step2 })
+}
+
+/// Early-abandoning scalar SQ8 — [`accumulate_pruned`] over
+/// [`Sq8Terms`].
+#[inline]
+pub fn sq8_pruned(qcode: &[u8], code: &[u8], step2: &[f32], bound: f32) -> Option<f32> {
+    accumulate_pruned(&Sq8Terms { qcode, code, step2 }, bound)
+}
+
+/// Scalar ADC distance — [`accumulate`] over [`AdcTerms`].
+#[inline]
+pub fn adc(lut: &[f32], shift: u32, code: &[u8]) -> f32 {
+    accumulate(&AdcTerms { lut, shift, code })
+}
+
+/// Early-abandoning scalar ADC — [`accumulate_pruned`] over
+/// [`AdcTerms`].
+#[inline]
+pub fn adc_pruned(lut: &[f32], shift: u32, code: &[u8], bound: f32) -> Option<f32> {
+    accumulate_pruned(&AdcTerms { lut, shift, code }, bound)
+}
+
+/// The scoring stage's wide dot product: 32 scalar lanes (= 4
+/// independent 8-wide vector accumulators when auto-vectorized) over
+/// 32-term chunks, lanes folded sequentially, then an 8-wide tail and a
+/// scalar tail.  Moved verbatim from `memory::score::dot8` — this exact
+/// operation order is the reference the AVX2 `dot_wide` reproduces.
+#[inline(always)]
+pub(crate) fn dot_wide(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0f32; 32];
+    let ac = a.chunks_exact(32);
+    let bc = b.chunks_exact(32);
+    let (atail, btail) = (ac.remainder(), bc.remainder());
+    for (ra, rb) in ac.zip(bc) {
+        for i in 0..32 {
+            lanes[i] += ra[i] * rb[i];
+        }
+    }
+    let mut acc = 0f32;
+    for l in lanes {
+        acc += l;
+    }
+    dot_wide_tail(acc, atail, btail)
+}
+
+/// The sub-32-term tail of [`dot_wide`]: 8-wide lanes then scalar,
+/// folded into `acc` in the reference order.  Shared with the AVX2
+/// `dot_wide` so both paths run the byte-identical tail sequence.
+#[inline(always)]
+pub(crate) fn dot_wide_tail(mut acc: f32, atail: &[f32], btail: &[f32]) -> f32 {
+    let atc = atail.chunks_exact(8);
+    let btc = btail.chunks_exact(8);
+    let (at2, bt2) = (atc.remainder(), btc.remainder());
+    let mut tail_lanes = [0f32; 8];
+    for (ra, rb) in atc.zip(btc) {
+        for i in 0..8 {
+            tail_lanes[i] += ra[i] * rb[i];
+        }
+    }
+    for l in tail_lanes {
+        acc += l;
+    }
+    for (x, y) in at2.iter().zip(bt2) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::search::distance::dot;
+
+    #[test]
+    fn sq8_terms_are_exact_integer_domain() {
+        // one term: (7-3)^2 * 0.25 = 4.0, exactly representable
+        let q = [7u8];
+        let c = [3u8];
+        let s2 = [0.25f32];
+        assert_eq!(sq8(&q, &c, &s2), 4.0);
+        // max byte difference stays exact in i32 and f32
+        let q = [255u8];
+        let c = [0u8];
+        let s2 = [1.0f32];
+        assert_eq!(sq8(&q, &c, &s2), 65025.0);
+    }
+
+    #[test]
+    fn sq8_pruned_matches_full_and_keeps_ties() {
+        let mut rng = Rng::new(9);
+        for n in [0usize, 1, 5, 32, 33, 129] {
+            let q: Vec<u8> = (0..n).map(|i| (i * 37 % 256) as u8).collect();
+            let c: Vec<u8> = (0..n).map(|i| (i * 101 % 256) as u8).collect();
+            let s2: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).abs()).collect();
+            let full = sq8(&q, &c, &s2);
+            assert_eq!(
+                sq8_pruned(&q, &c, &s2, full).map(f32::to_bits),
+                Some(full.to_bits())
+            );
+            if full > 0.0 {
+                assert_eq!(sq8_pruned(&q, &c, &s2, full * 0.999), None);
+            }
+        }
+    }
+
+    #[test]
+    fn adc_walks_padded_rows() {
+        // 2 subspaces, stride 4 (shift=2): rows [1,2,3,0] and [5,6,7,0]
+        let lut = [1f32, 2., 3., 0., 5., 6., 7., 0.];
+        assert_eq!(adc(&lut, 2, &[0, 0]), 6.0);
+        assert_eq!(adc(&lut, 2, &[2, 1]), 9.0);
+        assert_eq!(adc_pruned(&lut, 2, &[2, 1], 9.0), Some(9.0));
+        assert_eq!(adc_pruned(&lut, 2, &[2, 1], 8.9), None);
+    }
+
+    #[test]
+    fn dot_wide_matches_plain_dot_closely() {
+        // different summation orders — not bitwise, but must agree to
+        // float tolerance on well-conditioned data
+        let mut rng = Rng::new(10);
+        for n in [0usize, 7, 8, 31, 32, 33, 64, 100, 357] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let wide = dot_wide(&a, &b);
+            let narrow = dot(&a, &b);
+            assert!((wide - narrow).abs() < 1e-3 * (1.0 + narrow.abs()), "n={n}");
+        }
+    }
+}

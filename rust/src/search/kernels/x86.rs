@@ -1,0 +1,428 @@
+//! x86_64 vector kernels: SSE2 (baseline, no runtime check) and AVX2
+//! (runtime-detected) implementations of the scalar reference loops in
+//! [`crate::search::distance`] and [`super::scalar`].
+//!
+//! Bitwise design (see the module docs in [`super`]): the 4 independent
+//! scalar accumulator lanes `s0..s3` become the 4 lanes of one `__m128`
+//! accumulator; each 4-term chunk is one vertical `addps`, so lane `l`
+//! replays the scalar chain `s_l += term(4i + l)` in the identical
+//! order, and the horizontal fold extracts lanes and adds them as
+//! `((l0 + l1) + l2) + l3` — the scalar fold.  Where 256-bit vectors are
+//! used (SQ8), the two 128-bit halves of each 8-term block are added
+//! into that same 4-wide accumulator low-half-first, preserving every
+//! per-lane chain.  No FMA is ever emitted: `_mm_add_ps(_mm_mul_ps(..))`
+//! are separate intrinsics and rustc does not contract them.
+//!
+//! The pruned variants replay `accumulate_pruned`'s exact probe
+//! schedule: a horizontal fold compared against the bound after every
+//! group of ≤ 8 chunks (32 terms), then the scalar tail and the final
+//! strictly-greater check.
+//!
+//! Unsafety is confined to raw-pointer loads/stores whose bounds are
+//! established by the surrounding chunk arithmetic; all lane arithmetic
+//! uses value intrinsics, which are safe under the statically-enabled
+//! sse2 baseline (or the `#[target_feature(enable = "avx2")]` scope).
+
+#[allow(clippy::wildcard_imports)]
+use std::arch::x86_64::*;
+
+/// Horizontal fold in the scalar order: `((l0 + l1) + l2) + l3`.
+#[inline(always)]
+fn fold4(acc: __m128) -> f32 {
+    let mut l = [0f32; 4];
+    // SAFETY: `l` is a live 16-byte buffer; `_mm_storeu_ps` is an
+    // unaligned store, and an sse baseline instruction on x86_64.
+    unsafe { _mm_storeu_ps(l.as_mut_ptr(), acc) };
+    ((l[0] + l[1]) + l[2]) + l[3]
+}
+
+/// Squared-L2, bitwise equal to [`crate::search::distance::sq_l2`]
+/// (128-bit; used by both the `sse2` and `avx2` backends — the serial
+/// 4-wide fold chain leaves 256-bit vectors no faster for single rows).
+#[inline]
+pub(crate) fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..chunks {
+        let j = i * 4;
+        // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so both
+        // 16-byte unaligned loads stay inside their slices; sse2 is the
+        // x86_64 baseline.
+        acc = unsafe {
+            let d = _mm_sub_ps(
+                _mm_loadu_ps(a.as_ptr().add(j)),
+                _mm_loadu_ps(b.as_ptr().add(j)),
+            );
+            _mm_add_ps(acc, _mm_mul_ps(d, d))
+        };
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Early-abandoning [`sq_l2`]; replays `accumulate_pruned`'s probe
+/// schedule and tie contract exactly.
+#[inline]
+pub(crate) fn sq_l2_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    let mut s = 0f32;
+    let mut i = 0usize;
+    while i < chunks {
+        let stop = (i + 8).min(chunks);
+        while i < stop {
+            let j = i * 4;
+            // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so
+            // both 16-byte unaligned loads stay inside their slices;
+            // sse2 is the x86_64 baseline.
+            acc = unsafe {
+                let d = _mm_sub_ps(
+                    _mm_loadu_ps(a.as_ptr().add(j)),
+                    _mm_loadu_ps(b.as_ptr().add(j)),
+                );
+                _mm_add_ps(acc, _mm_mul_ps(d, d))
+            };
+            i += 1;
+        }
+        // probe only reads the lanes; accumulation state is untouched
+        s = fold4(acc);
+        if s > bound {
+            return None;
+        }
+    }
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    if s > bound {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// Dot product, bitwise equal to [`crate::search::distance::dot`].
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..chunks {
+        let j = i * 4;
+        // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so both
+        // 16-byte unaligned loads stay inside their slices; sse2 is the
+        // x86_64 baseline.
+        acc = unsafe {
+            _mm_add_ps(
+                acc,
+                _mm_mul_ps(
+                    _mm_loadu_ps(a.as_ptr().add(j)),
+                    _mm_loadu_ps(b.as_ptr().add(j)),
+                ),
+            )
+        };
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Hamming distance via 4-wide `cmpneq` + movemask + popcount.  The
+/// `NEQ_UQ` predicate matches Rust's `f32 !=` exactly (NaN compares
+/// unequal to everything, `0.0 == -0.0`), and integer counts carry no
+/// rounding, so this equals the scalar count for any input.
+#[inline]
+pub(crate) fn hamming_sse2(a: &[f32], b: &[f32]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut count = 0u32;
+    for i in 0..chunks {
+        let j = i * 4;
+        // SAFETY: `j + 4 <= chunks * 4 <= n <= a.len(), b.len()`, so both
+        // 16-byte unaligned loads stay inside their slices; sse2 is the
+        // x86_64 baseline.
+        let mask = unsafe {
+            let ne = _mm_cmpneq_ps(
+                _mm_loadu_ps(a.as_ptr().add(j)),
+                _mm_loadu_ps(b.as_ptr().add(j)),
+            );
+            _mm_movemask_ps(ne)
+        };
+        count += (mask as u32).count_ones();
+    }
+    for j in chunks * 4..n {
+        count += u32::from(a[j] != b[j]);
+    }
+    count
+}
+
+// SAFETY: requires avx2 — every caller is gated by the one-time
+// `is_x86_feature_detected!("avx2")` check in `Kernels::select` /
+// `Backend::available` (Backend::Avx2 is never constructed without it).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn hamming_avx2(a: &[f32], b: &[f32]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut count = 0u32;
+    for i in 0..chunks {
+        let j = i * 8;
+        // SAFETY: `j + 8 <= chunks * 8 <= n <= a.len(), b.len()`, so both
+        // 32-byte unaligned loads stay inside their slices; the avx
+        // instructions are gated by this fn's `target_feature` contract.
+        let mask = unsafe {
+            let ne = _mm256_cmp_ps::<_CMP_NEQ_UQ>(
+                _mm256_loadu_ps(a.as_ptr().add(j)),
+                _mm256_loadu_ps(b.as_ptr().add(j)),
+            );
+            _mm256_movemask_ps(ne)
+        };
+        count += (mask as u32).count_ones();
+    }
+    for j in chunks * 8..n {
+        count += u32::from(a[j] != b[j]);
+    }
+    count
+}
+
+/// Four SQ8 terms computed scalar and packed lane-for-lane — the odd
+/// trailing 4-term chunk of the 8-wide loops (each term is produced by
+/// the exact scalar expression, so the packed vertical add extends every
+/// per-lane chain identically).
+#[inline(always)]
+fn sq8_terms4(qcode: &[u8], code: &[u8], step2: &[f32], j: usize) -> __m128 {
+    let t = |k: usize| {
+        let d = i32::from(qcode[j + k]) - i32::from(code[j + k]);
+        ((d * d) as f32) * step2[j + k]
+    };
+    _mm_set_ps(t(3), t(2), t(1), t(0))
+}
+
+// SAFETY: requires avx2 — every caller is gated by the one-time
+// `is_x86_feature_detected!("avx2")` check in `Kernels::select` /
+// `Backend::available` (Backend::Avx2 is never constructed without it).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sq8_avx2(qcode: &[u8], code: &[u8], step2: &[f32]) -> f32 {
+    let n = code.len();
+    let chunks = n / 4;
+    let pairs = chunks / 2;
+    let mut acc = _mm_setzero_ps();
+    for p in 0..pairs {
+        let j = p * 8;
+        // SAFETY: `j + 8 <= pairs * 8 <= n`, and the dispatch layer
+        // asserts `qcode`, `code`, `step2` all have length `n`, so the
+        // two 8-byte and one 32-byte unaligned loads stay in bounds; the
+        // avx2 instructions are gated by this fn's `target_feature`
+        // contract.
+        let t: __m256 = unsafe {
+            let vq = _mm256_cvtepu8_epi32(_mm_loadl_epi64(qcode.as_ptr().add(j).cast()));
+            let vc = _mm256_cvtepu8_epi32(_mm_loadl_epi64(code.as_ptr().add(j).cast()));
+            let d = _mm256_sub_epi32(vq, vc);
+            _mm256_mul_ps(
+                _mm256_cvtepi32_ps(_mm256_mullo_epi32(d, d)),
+                _mm256_loadu_ps(step2.as_ptr().add(j)),
+            )
+        };
+        // low half first, then high: lane l's chain gains term(8p + l)
+        // then term(8p + 4 + l), matching the scalar chunk order
+        acc = _mm_add_ps(acc, _mm256_castps256_ps128(t));
+        acc = _mm_add_ps(acc, _mm256_extractf128_ps::<1>(t));
+    }
+    if chunks % 2 == 1 {
+        acc = _mm_add_ps(acc, sq8_terms4(qcode, code, step2, (chunks - 1) * 4));
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = i32::from(qcode[j]) - i32::from(code[j]);
+        s += ((d * d) as f32) * step2[j];
+    }
+    s
+}
+
+// SAFETY: requires avx2 — every caller is gated by the one-time
+// `is_x86_feature_detected!("avx2")` check in `Kernels::select` /
+// `Backend::available` (Backend::Avx2 is never constructed without it).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sq8_pruned_avx2(
+    qcode: &[u8],
+    code: &[u8],
+    step2: &[f32],
+    bound: f32,
+) -> Option<f32> {
+    let n = code.len();
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    let mut s = 0f32;
+    let mut i = 0usize;
+    while i < chunks {
+        let stop = (i + 8).min(chunks);
+        while i + 2 <= stop {
+            let j = i * 4;
+            // SAFETY: `j + 8 <= chunks * 4 <= n`, and the dispatch layer
+            // asserts `qcode`, `code`, `step2` all have length `n`, so
+            // the two 8-byte and one 32-byte unaligned loads stay in
+            // bounds; the avx2 instructions are gated by this fn's
+            // `target_feature` contract.
+            let t: __m256 = unsafe {
+                let vq =
+                    _mm256_cvtepu8_epi32(_mm_loadl_epi64(qcode.as_ptr().add(j).cast()));
+                let vc =
+                    _mm256_cvtepu8_epi32(_mm_loadl_epi64(code.as_ptr().add(j).cast()));
+                let d = _mm256_sub_epi32(vq, vc);
+                _mm256_mul_ps(
+                    _mm256_cvtepi32_ps(_mm256_mullo_epi32(d, d)),
+                    _mm256_loadu_ps(step2.as_ptr().add(j)),
+                )
+            };
+            acc = _mm_add_ps(acc, _mm256_castps256_ps128(t));
+            acc = _mm_add_ps(acc, _mm256_extractf128_ps::<1>(t));
+            i += 2;
+        }
+        if i < stop {
+            acc = _mm_add_ps(acc, sq8_terms4(qcode, code, step2, i * 4));
+            i += 1;
+        }
+        // the same 32-term probe boundary as `accumulate_pruned`
+        s = fold4(acc);
+        if s > bound {
+            return None;
+        }
+    }
+    for j in chunks * 4..n {
+        let d = i32::from(qcode[j]) - i32::from(code[j]);
+        s += ((d * d) as f32) * step2[j];
+    }
+    if s > bound {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// Four ADC terms looked up scalar (gather-free: four L1 loads off the
+/// padded shift/OR addresses) and packed lane-for-lane.
+#[inline(always)]
+fn adc_terms4(lut: &[f32], shift: u32, code: &[u8], j: usize) -> __m128 {
+    let t = |k: usize| lut[((j + k) << shift) | code[j + k] as usize];
+    _mm_set_ps(t(3), t(2), t(1), t(0))
+}
+
+/// ADC over the padded table: packed sequential lookups, one vertical
+/// add per 4 subspaces (no gather instruction anywhere).
+#[inline]
+pub(crate) fn adc(lut: &[f32], shift: u32, code: &[u8]) -> f32 {
+    let m = code.len();
+    let chunks = m / 4;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..chunks {
+        acc = _mm_add_ps(acc, adc_terms4(lut, shift, code, i * 4));
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..m {
+        s += lut[(j << shift) | code[j] as usize];
+    }
+    s
+}
+
+/// Early-abandoning [`adc`] with `accumulate_pruned`'s probe schedule.
+#[inline]
+pub(crate) fn adc_pruned(lut: &[f32], shift: u32, code: &[u8], bound: f32) -> Option<f32> {
+    let m = code.len();
+    let chunks = m / 4;
+    let mut acc = _mm_setzero_ps();
+    let mut s = 0f32;
+    let mut i = 0usize;
+    while i < chunks {
+        let stop = (i + 8).min(chunks);
+        while i < stop {
+            acc = _mm_add_ps(acc, adc_terms4(lut, shift, code, i * 4));
+            i += 1;
+        }
+        s = fold4(acc);
+        if s > bound {
+            return None;
+        }
+    }
+    for j in chunks * 4..m {
+        s += lut[(j << shift) | code[j] as usize];
+    }
+    if s > bound {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+// SAFETY: requires avx2 — every caller is gated by the one-time
+// `is_x86_feature_detected!("avx2")` check in `Kernels::select` /
+// `Backend::available` (Backend::Avx2 is never constructed without it).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_wide_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 32;
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let j = c * 32;
+        // SAFETY: `j + 32 <= chunks * 32 <= n <= a.len(), b.len()`, so
+        // all eight 32-byte unaligned loads stay inside their slices;
+        // the avx instructions are gated by this fn's `target_feature`
+        // contract.
+        unsafe {
+            acc0 = _mm256_add_ps(
+                acc0,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(j)),
+                    _mm256_loadu_ps(b.as_ptr().add(j)),
+                ),
+            );
+            acc1 = _mm256_add_ps(
+                acc1,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(j + 8)),
+                    _mm256_loadu_ps(b.as_ptr().add(j + 8)),
+                ),
+            );
+            acc2 = _mm256_add_ps(
+                acc2,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(j + 16)),
+                    _mm256_loadu_ps(b.as_ptr().add(j + 16)),
+                ),
+            );
+            acc3 = _mm256_add_ps(
+                acc3,
+                _mm256_mul_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(j + 24)),
+                    _mm256_loadu_ps(b.as_ptr().add(j + 24)),
+                ),
+            );
+        }
+    }
+    // the accumulators' 32 lanes are exactly the scalar `lanes[0..32]`
+    // (acc0 = lanes 0..8, …), folded in the identical sequential order
+    let mut lanes = [0f32; 32];
+    // SAFETY: `lanes` is a live 128-byte buffer, each store writes one
+    // disjoint 32-byte span; unaligned stores, avx per this fn's
+    // `target_feature` contract.
+    unsafe {
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(16), acc2);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(24), acc3);
+    }
+    let mut acc = 0f32;
+    for l in lanes {
+        acc += l;
+    }
+    super::scalar::dot_wide_tail(acc, &a[chunks * 32..n], &b[chunks * 32..n])
+}

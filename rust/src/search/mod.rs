@@ -1,11 +1,14 @@
-//! Search primitives: distance kernels and bounded top-k selection.
+//! Search primitives: distance kernels (scalar reference and
+//! runtime-dispatched SIMD backends) and bounded top-k selection.
 
 pub mod distance;
+pub mod kernels;
 pub mod policy;
 pub mod topk;
 
 pub use distance::{
     accumulate, accumulate_pruned, distance_pruned, DistanceKernel, Metric,
 };
+pub use kernels::{Backend, Kernels};
 pub use policy::AdaptivePolicy;
 pub use topk::{invert_polled, one_nn, top_p_largest, Neighbor, TopK};

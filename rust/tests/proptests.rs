@@ -104,6 +104,7 @@ fn prop_memory_score_identity() {
 /// arbitrary shapes (the same property the PJRT path is tested against).
 #[test]
 fn prop_batch_scorer_matches_scalar() {
+    use amsearch::search::Kernels;
     cases(25, |rng| {
         let d = 3 + rng.below(40) as usize;
         let q = 1 + rng.below(10) as usize;
@@ -115,7 +116,8 @@ fn prop_batch_scorer_matches_scalar() {
         let refs: Vec<&[f32]> = classes.iter().map(|c| c.as_slice()).collect();
         let bank = MemoryBank::build(d, &refs, StorageRule::Sum).unwrap();
         let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
-        let batch = score::score_batch(bank.stacked(), &queries, d, q);
+        let batch =
+            score::score_batch(bank.stacked(), &queries, d, q, Kernels::select());
         for bi in 0..b {
             let single = bank.score_query(&queries[bi * d..(bi + 1) * d]);
             for ci in 0..q {
@@ -756,4 +758,203 @@ fn prop_router_full_fanout_matches_single_node() {
         cluster.shutdown();
         single.shutdown();
     });
+}
+
+/// Every available SIMD backend is **bitwise-identical** (`to_bits`) to
+/// the scalar reference for every f32 kernel — squared L2, dot, the
+/// wide dot, and hamming — across odd lengths, n < 4 (tail-only, no
+/// full SIMD chunk), n = 0, and NaN-free random data with planted
+/// equal coordinates (hamming must count, not approximate).
+#[test]
+fn prop_kernel_backends_bitwise_equal_scalar() {
+    use amsearch::search::{Backend, Kernels};
+    cases(60, |rng| {
+        let scalar = Kernels::scalar();
+        // length mix: tails only (0..=3), one-chunk-ish, and general
+        // odd/even lengths spanning several probe groups
+        let n = match rng.below(3) {
+            0 => rng.below(4) as usize,
+            1 => 4 + rng.below(12) as usize,
+            _ => rng.below(300) as usize,
+        };
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n)
+            .map(|i| if rng.bernoulli(0.2) { a[i] } else { rng.normal() as f32 })
+            .collect();
+        for backend in
+            [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon]
+        {
+            let Some(k) = Kernels::with_backend(backend) else {
+                continue;
+            };
+            let tag = backend.name();
+            assert_eq!(
+                k.sq_l2(&a, &b).to_bits(),
+                scalar.sq_l2(&a, &b).to_bits(),
+                "sq_l2 {tag} n={n}"
+            );
+            assert_eq!(
+                k.dot(&a, &b).to_bits(),
+                scalar.dot(&a, &b).to_bits(),
+                "dot {tag} n={n}"
+            );
+            assert_eq!(
+                k.dot_wide(&a, &b).to_bits(),
+                scalar.dot_wide(&a, &b).to_bits(),
+                "dot_wide {tag} n={n}"
+            );
+            assert_eq!(
+                k.hamming(&a, &b),
+                scalar.hamming(&a, &b),
+                "hamming {tag} n={n}"
+            );
+        }
+    });
+}
+
+/// The early-abandoning scan kernel makes the **same keep/abandon
+/// decision** with the same bitwise distance on every backend, at every
+/// bound — including a bound placed exactly at the full distance (the
+/// tie case: `accumulate_pruned` abandons only on strictly-greater, so
+/// ties must survive on all backends alike).
+#[test]
+fn prop_kernel_pruned_bitwise_equal_scalar() {
+    use amsearch::search::{Backend, Kernels, Metric};
+    cases(60, |rng| {
+        let scalar = Kernels::scalar();
+        let n = rng.below(260) as usize;
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        for metric in [Metric::SqL2, Metric::Dot] {
+            let full = scalar.distance(metric, &a, &b);
+            // bound sweep: never-abandon, bound-at-tie (full distance),
+            // always-abandon-late, and a random partial-sum cut
+            let bounds = [
+                f32::INFINITY,
+                full,
+                full - full.abs() * 0.5,
+                full * (rng.uniform() as f32),
+            ];
+            for backend in
+                [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon]
+            {
+                let Some(k) = Kernels::with_backend(backend) else {
+                    continue;
+                };
+                let tag = backend.name();
+                for &bound in &bounds {
+                    let want = scalar.distance_pruned(metric, &a, &b, bound);
+                    let got = k.distance_pruned(metric, &a, &b, bound);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some(g), Some(w)) => assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{metric:?} {tag} n={n} bound={bound}"
+                        ),
+                        _ => panic!(
+                            "{metric:?} {tag} n={n} bound={bound}: \
+                             keep/abandon diverged ({got:?} vs {want:?})"
+                        ),
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// The integer-domain SQ8 kernel and the padded gather-free ADC kernel
+/// agree bitwise across every available backend, full and pruned
+/// (bound-at-tie included), over random code lengths including 0 and
+/// sub-chunk sizes, and random centroid counts (pad cells present).
+#[test]
+fn prop_quant_kernel_backends_bitwise_equal_scalar() {
+    use amsearch::search::{Backend, Kernels};
+    cases(40, |rng| {
+        let scalar = Kernels::scalar();
+        let n = rng.below(70) as usize;
+        let qcode: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let code: Vec<u8> = (0..n)
+            .map(|i| if rng.bernoulli(0.2) { qcode[i] } else { rng.below(256) as u8 })
+            .collect();
+        let step2: Vec<f32> =
+            (0..n).map(|_| rng.uniform() as f32 * 0.1 + 1e-3).collect();
+        let sq8_full = scalar.sq8(&qcode, &code, &step2);
+        // ADC: m subspaces, c centroids padded to the pow2 stride
+        let m = rng.below(40) as usize;
+        let c = 1 + rng.below(256) as usize;
+        let shift = (c as u32).next_power_of_two().trailing_zeros();
+        let lut: Vec<f32> =
+            (0..m << shift).map(|_| rng.normal() as f32).collect();
+        let acode: Vec<u8> = (0..m).map(|_| rng.below(c as u64) as u8).collect();
+        let adc_full = scalar.adc(&lut, shift, &acode);
+        for backend in
+            [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon]
+        {
+            let Some(k) = Kernels::with_backend(backend) else {
+                continue;
+            };
+            let tag = backend.name();
+            assert_eq!(
+                k.sq8(&qcode, &code, &step2).to_bits(),
+                sq8_full.to_bits(),
+                "sq8 {tag} n={n}"
+            );
+            assert_eq!(
+                k.adc(&lut, shift, &acode).to_bits(),
+                adc_full.to_bits(),
+                "adc {tag} m={m} c={c}"
+            );
+            for &(full, pruned) in &[
+                (sq8_full, k.sq8_pruned(&qcode, &code, &step2, sq8_full)),
+                (adc_full, k.adc_pruned(&lut, shift, &acode, adc_full)),
+            ] {
+                // bound-at-tie: ties survive on every backend
+                assert_eq!(
+                    pruned.map(f32::to_bits),
+                    Some(full.to_bits()),
+                    "{tag} tie survival"
+                );
+            }
+            for bound in [f32::INFINITY, sq8_full * 0.5] {
+                assert_eq!(
+                    k.sq8_pruned(&qcode, &code, &step2, bound)
+                        .map(f32::to_bits),
+                    scalar
+                        .sq8_pruned(&qcode, &code, &step2, bound)
+                        .map(f32::to_bits),
+                    "sq8_pruned {tag} n={n} bound={bound}"
+                );
+            }
+            for bound in [f32::INFINITY, adc_full * 0.5] {
+                assert_eq!(
+                    k.adc_pruned(&lut, shift, &acode, bound).map(f32::to_bits),
+                    scalar
+                        .adc_pruned(&lut, shift, &acode, bound)
+                        .map(f32::to_bits),
+                    "adc_pruned {tag} m={m} c={c} bound={bound}"
+                );
+            }
+        }
+    });
+}
+
+/// Forcing each backend through the `AMSEARCH_KERNEL` override selects
+/// exactly that backend when it is available on the host.  Ignored by
+/// default: it mutates process environment, so it must not race other
+/// tests — run explicitly with
+/// `cargo test --test proptests -- --ignored --test-threads=1`.
+#[test]
+#[ignore = "mutates process env; run with --ignored --test-threads=1"]
+fn forced_kernel_override_selects_each_backend() {
+    use amsearch::search::{Backend, Kernels};
+    for backend in [Backend::Scalar, Backend::Sse2, Backend::Avx2, Backend::Neon] {
+        if !backend.available() {
+            continue;
+        }
+        std::env::set_var("AMSEARCH_KERNEL", backend.name());
+        assert_eq!(Kernels::select().backend(), backend, "{}", backend.name());
+    }
+    std::env::remove_var("AMSEARCH_KERNEL");
+    assert!(Kernels::select().backend().available());
 }

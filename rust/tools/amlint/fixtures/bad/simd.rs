@@ -1,0 +1,27 @@
+//! Known-bad SIMD fixture: raw intrinsics leaking outside
+//! `rust/src/search/kernels/` and `#[target_feature]` functions missing
+//! parts of their contract.  Linted with `in_kernels = false`.
+
+use std::arch::x86_64::*; // amlint-fixture: expect simd
+
+pub fn leaked_intrinsic(a: &[f32]) -> f32 {
+    let v = _mm_setzero_ps(); // amlint-fixture: expect simd
+    a[0]
+}
+
+// SAFETY: callers check is_x86_feature_detected!("avx2") first.
+#[target_feature(enable = "avx2")] // amlint-fixture: expect simd
+fn not_declared_unsafe(a: &[f32]) -> f32 {
+    a[0]
+}
+
+#[target_feature(enable = "avx2")] // amlint-fixture: expect simd
+unsafe fn no_safety_comment(a: &[f32]) -> f32 { // amlint-fixture: expect safety
+    a[0]
+}
+
+// SAFETY: the comment forgets to name the detected feature.
+#[target_feature(enable = "avx2")] // amlint-fixture: expect simd
+unsafe fn wrong_feature_named(a: &[f32]) -> f32 {
+    a[0]
+}

@@ -1,0 +1,32 @@
+//! Known-good kernel-module fixture: intrinsics are containment-legal
+//! here (linted with `in_kernels = true`), and the `#[target_feature]`
+//! function carries the full contract — `unsafe`, plus a `// SAFETY:`
+//! comment above the attribute stack naming the runtime check.
+
+use std::arch::x86_64::*;
+
+pub(crate) fn sum_sse2(a: &[f32]) -> f32 {
+    let mut acc = _mm_setzero_ps();
+    for chunk in a.chunks_exact(4) {
+        // SAFETY: `chunks_exact(4)` guarantees 4 readable floats at
+        // `chunk.as_ptr()`; sse2 is baseline on x86_64.
+        let v = unsafe { _mm_loadu_ps(chunk.as_ptr()) };
+        acc = _mm_add_ps(acc, v);
+    }
+    fold(acc)
+}
+
+// SAFETY: requires avx2 — the dispatch layer constructs this backend
+// only after a one-time `is_x86_feature_detected!("avx2")` probe.
+#[inline]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sum_avx2(a: &[f32]) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    for chunk in a.chunks_exact(8) {
+        // SAFETY: `chunks_exact(8)` guarantees 8 readable floats; the
+        // avx instructions are gated by this fn's `target_feature`.
+        let v = unsafe { _mm256_loadu_ps(chunk.as_ptr()) };
+        acc = _mm256_add_ps(acc, v);
+    }
+    fold8(acc)
+}

@@ -17,7 +17,10 @@
 //!   `SHARD_MANIFEST_VERSION`;
 //! * the README formats table has a `| vN |` row for every version
 //!   1..=`VERSION`, the current row says "current", and the
-//!   shard-manifest row says "shard".
+//!   shard-manifest row says "shard";
+//! * `coordinator/server.rs` exposes the selected distance-kernel
+//!   backend (`kernel_backend`) through STATS and the README documents
+//!   the `kernel.backend` row name.
 
 use std::collections::BTreeSet;
 
@@ -86,6 +89,8 @@ pub struct DriftInput<'a> {
     pub persist: &'a str,
     /// `rust/src/cluster/plan.rs` source.
     pub plan: &'a str,
+    /// `rust/src/coordinator/server.rs` source.
+    pub server: &'a str,
     /// `README.md` contents.
     pub readme: &'a str,
     /// Idents inside `#[cfg(test)]` regions of `rust/src` plus all
@@ -176,6 +181,30 @@ pub fn check(input: &DriftInput<'_>, out: &mut Vec<Finding>) {
             }
             rest = &rest[pos + word.len().max(4)..];
         }
+    }
+
+    // --- kernel dispatch STATS row ------------------------------------
+    // the server reports its selected distance-kernel backend; the
+    // README must document the exact `kernel.backend` row name
+    let server_file = "rust/src/coordinator/server.rs";
+    if !input.server.contains("kernel_backend") {
+        push(
+            out,
+            server_file,
+            1,
+            "no `kernel_backend` STATS field in coordinator/server.rs — the \
+             selected distance-kernel backend must stay observable"
+                .into(),
+        );
+    } else if !input.readme.lines().any(|l| l.contains("kernel.backend")) {
+        push(
+            out,
+            readme_file,
+            1,
+            "server STATS exposes `kernel.backend` but the README never \
+             documents that row"
+                .into(),
+        );
     }
 
     // --- persist format versions --------------------------------------
@@ -313,6 +342,8 @@ mod tests {
         }
     "#;
     const PLAN_OK: &str = "fn f(version: u32) { if version != SHARD_MANIFEST_VERSION {} }";
+    const SERVER_OK: &str =
+        "fn start() { let kernel_backend = factory.index.kernel_backend(); }";
     const README_OK: &str = r#"
 | code | name | meaning |
 |---|---|---|
@@ -325,13 +356,26 @@ mod tests {
 | v2 | top-k |
 | v3 | shard manifest |
 | v4 | quant (current) |
+
+STATS reports the selected backend under `kernel.backend`.
 "#;
 
     fn run(wire: &str, persist: &str, plan: &str, readme: &str, tests: &[&str]) -> Vec<Finding> {
+        run_with_server(wire, persist, plan, SERVER_OK, readme, tests)
+    }
+
+    fn run_with_server(
+        wire: &str,
+        persist: &str,
+        plan: &str,
+        server: &str,
+        readme: &str,
+        tests: &[&str],
+    ) -> Vec<Finding> {
         let test_idents: BTreeSet<String> = tests.iter().map(|s| s.to_string()).collect();
         let mut out = Vec::new();
         check(
-            &DriftInput { wire, persist, plan, readme, test_idents: &test_idents },
+            &DriftInput { wire, persist, plan, server, readme, test_idents: &test_idents },
             &mut out,
         );
         out
@@ -386,6 +430,24 @@ mod tests {
         let persist = PERSIST_OK.replace("version >= 4", "version >= 9");
         let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
         assert!(got.iter().any(|f| f.message.contains("outside 2..=4")), "{got:?}");
+    }
+
+    #[test]
+    fn kernel_stats_row_checked() {
+        let got = run_with_server(
+            WIRE_OK,
+            PERSIST_OK,
+            PLAN_OK,
+            "fn start() {}",
+            README_OK,
+            &["ERR_A", "ERR_B"],
+        );
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("kernel_backend"));
+        let readme = README_OK.replace("kernel.backend", "kernel backend");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("kernel.backend"));
     }
 
     #[test]

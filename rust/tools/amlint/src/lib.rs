@@ -6,7 +6,10 @@
 //!    `lock_blocking`, `lock_registry`),
 //! 3. protocol/format drift between constants, tests, and README
 //!    (`drift`),
-//! 4. `// SAFETY:` comments on every `unsafe` (`safety`).
+//! 4. `// SAFETY:` comments on every `unsafe` (`safety`),
+//! 5. SIMD containment: raw intrinsics only inside
+//!    `rust/src/search/kernels/`, `#[target_feature]` fns `unsafe` with
+//!    a `// SAFETY:` naming the runtime check (`simd`).
 //!
 //! Zero dependencies, like the rest of the workspace: a hand-rolled
 //! lexer ([`lexer`]) feeds a token-level rule engine.  Findings are
@@ -98,6 +101,8 @@ pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
             rules::rule_panic(&display, &toks, &mut findings);
         }
         rules::rule_safety(&display, &toks, &mut findings);
+        let in_kernels = rel_str.starts_with("search/kernels/");
+        rules::rule_simd(&display, &toks, in_kernels, &mut findings);
         if let Some((_, registry)) =
             LOCK_REGISTRIES.iter().find(|(f, _)| f == rel_str)
         {
@@ -135,6 +140,7 @@ pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
             wire: find("net/wire.rs"),
             persist: find("index/persist.rs"),
             plan: find("cluster/plan.rs"),
+            server: find("coordinator/server.rs"),
             readme: &readme,
             test_idents: &test_idents,
         },

@@ -11,6 +11,9 @@
 //! 3. drift — cross-file; lives in [`crate::drift`].
 //! 4. `safety` — every `unsafe` must carry a `// SAFETY:` comment in
 //!    the contiguous comment block directly above it (or on its line).
+//! 5. `simd` — raw `std::arch` intrinsics stay inside
+//!    `rust/src/search/kernels/`, and every `#[target_feature]` fn is
+//!    `unsafe` with a `// SAFETY:` comment naming the runtime check.
 //!
 //! The lock rules are intra-procedural and textual: a guard is tracked
 //! from its acquisition token to the end of its enclosing block (`let` /
@@ -243,9 +246,39 @@ pub fn rule_panic(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
     }
 }
 
+/// Lines covered by outer `#[...]` attributes.  Comment-block walks
+/// treat these as transparent: a `// SAFETY:` comment above a
+/// `#[target_feature]` / `#[inline]` stack still covers the `unsafe fn`
+/// below it.
+fn attribute_lines(toks: &[Tok], code: &[usize]) -> BTreeSet<usize> {
+    let t = |ci: usize| -> &Tok { &toks[code[ci]] };
+    let mut out = BTreeSet::new();
+    let mut ci = 0usize;
+    while ci < code.len() {
+        if t(ci).text == "#" && ci + 1 < code.len() && t(ci + 1).text == "[" {
+            out.insert(t(ci).line);
+            let mut depth = 1usize;
+            let mut j = ci + 2;
+            while j < code.len() && depth > 0 {
+                match t(j).text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+                out.insert(t(j).line);
+                j += 1;
+            }
+            ci = j;
+            continue;
+        }
+        ci += 1;
+    }
+    out
+}
+
 /// Rule 4: every `unsafe` must carry a `// SAFETY:` comment directly
-/// above it (contiguous comment block; blank lines end the block) or on
-/// its own line.
+/// above it (contiguous comment block; blank lines end the block,
+/// attribute lines are transparent) or on its own line.
 pub fn rule_safety(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
     let mut comment_lines: std::collections::BTreeMap<usize, Vec<&str>> =
         std::collections::BTreeMap::new();
@@ -256,6 +289,7 @@ pub fn rule_safety(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
     }
     let allowed = allowed_lines(toks, "safety");
     let code = code_indices(toks);
+    let attrs = attribute_lines(toks, &code);
     for &i in &code {
         let tok = &toks[i];
         if tok.kind != Kind::Ident || tok.text != "unsafe" {
@@ -265,7 +299,8 @@ pub fn rule_safety(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
         let mut ok = comment_lines
             .get(&tok.line)
             .is_some_and(|c| has_safety(c));
-        // walk the contiguous comment block directly above
+        // walk the contiguous comment block directly above, stepping
+        // over attribute-only lines (`#[target_feature(...)]`)
         let mut l = tok.line.saturating_sub(1);
         while l > 0 {
             match comment_lines.get(&l) {
@@ -276,6 +311,7 @@ pub fn rule_safety(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
                     }
                     l -= 1;
                 }
+                None if attrs.contains(&l) => l -= 1,
                 None => break,
             }
         }
@@ -288,6 +324,180 @@ pub fn rule_safety(file: &str, toks: &[Tok], out: &mut Vec<Finding>) {
                     .to_string(),
             });
         }
+    }
+}
+
+/// Identifier prefixes that mark raw SIMD intrinsics or vector types
+/// (x86 `_mm*` / `__m*`, NEON loads and lane ops).
+const INTRINSIC_PREFIXES: [&str; 8] =
+    ["_mm", "__m", "float32x", "vld1", "vaddq", "vsubq", "vmulq", "vgetq"];
+
+/// Rule 5: SIMD containment.  Raw `std::arch` / `core::arch` use may
+/// only appear under `rust/src/search/kernels/` (everything else goes
+/// through the `Kernels` dispatch handle, which is selected once per
+/// index), and every `#[target_feature(enable = "X")]` function —
+/// kernels included — must be declared `unsafe` and carry a
+/// `// SAFETY:` comment directly above the attribute naming the `X`
+/// runtime check its callers perform.
+pub fn rule_simd(file: &str, toks: &[Tok], in_kernels: bool, out: &mut Vec<Finding>) {
+    let code = code_indices(toks);
+    let allowed = allowed_lines(toks, "simd");
+    let attrs = attribute_lines(toks, &code);
+    let t = |ci: usize| -> &Tok { &toks[code[ci]] };
+    let mut comment_lines: std::collections::BTreeMap<usize, Vec<&str>> =
+        std::collections::BTreeMap::new();
+    for tk in toks {
+        if tk.kind == Kind::Comment {
+            comment_lines.entry(tk.line).or_default().push(&tk.text);
+        }
+    }
+
+    if !in_kernels {
+        for ci in 0..code.len() {
+            let tok = t(ci);
+            if tok.kind != Kind::Ident || allowed.contains(&tok.line) {
+                continue;
+            }
+            let name = tok.text.as_str();
+            let arch_path = name == "arch"
+                && ci >= 3
+                && t(ci - 1).text == ":"
+                && t(ci - 2).text == ":"
+                && (t(ci - 3).text == "std" || t(ci - 3).text == "core");
+            let intrinsic = INTRINSIC_PREFIXES.iter().any(|p| name.starts_with(p));
+            if !arch_path && !intrinsic {
+                continue;
+            }
+            let what = if arch_path {
+                "`std::arch`/`core::arch` use".to_string()
+            } else {
+                format!("raw SIMD intrinsic `{name}`")
+            };
+            out.push(Finding {
+                file: file.to_string(),
+                line: tok.line,
+                rule: "simd",
+                message: format!(
+                    "{what} outside `rust/src/search/kernels/` — vector code \
+                     goes through the `Kernels` dispatch layer, or tag \
+                     `// amlint: allow(simd, reason = \"...\")`"
+                ),
+            });
+        }
+    }
+
+    // `#[target_feature(...)]` contract, enforced in every file
+    let mut ci = 0usize;
+    while ci < code.len() {
+        if !(t(ci).text == "#" && ci + 1 < code.len() && t(ci + 1).text == "[") {
+            ci += 1;
+            continue;
+        }
+        let attr_line = t(ci).line;
+        let mut depth = 1usize;
+        let mut j = ci + 2;
+        let mut inner: Vec<&Tok> = Vec::new();
+        while j < code.len() && depth > 0 {
+            match t(j).text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                _ => {}
+            }
+            if depth > 0 {
+                inner.push(t(j));
+            }
+            j += 1;
+        }
+        if inner.first().map(|tk| tk.text.as_str()) != Some("target_feature") {
+            ci = j;
+            continue;
+        }
+        let features: Vec<String> = inner
+            .iter()
+            .filter(|tk| tk.kind == Kind::Lit && tk.text.starts_with('"'))
+            .map(|tk| tk.text.trim_matches('"').to_string())
+            .collect();
+        // collect the contiguous comment block above (and on) the
+        // attribute line; attribute lines in a stack are transparent
+        let mut block = String::new();
+        let grab = |l: usize, block: &mut String| -> bool {
+            match comment_lines.get(&l) {
+                Some(cs) => {
+                    for c in cs {
+                        block.push_str(c);
+                        block.push('\n');
+                    }
+                    true
+                }
+                None => false,
+            }
+        };
+        grab(attr_line, &mut block);
+        let mut l = attr_line.saturating_sub(1);
+        while l > 0 {
+            if grab(l, &mut block) || attrs.contains(&l) {
+                l -= 1;
+            } else {
+                break;
+            }
+        }
+        // skip any further attributes, then look for `unsafe` ... `fn`
+        let mut k = j;
+        while k + 1 < code.len() && t(k).text == "#" && t(k + 1).text == "[" {
+            let mut d = 1usize;
+            k += 2;
+            while k < code.len() && d > 0 {
+                match t(k).text.as_str() {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+        let mut saw_unsafe = false;
+        let mut is_fn = false;
+        while k < code.len() {
+            match t(k).text.as_str() {
+                "unsafe" => saw_unsafe = true,
+                "fn" => {
+                    is_fn = true;
+                    break;
+                }
+                "{" | ";" | "}" => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        if is_fn && !allowed.contains(&attr_line) {
+            if !saw_unsafe {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: attr_line,
+                    rule: "simd",
+                    message: format!(
+                        "`#[target_feature(enable = \"{}\")]` fn must be declared \
+                         `unsafe` so callers inherit the CPU-feature contract",
+                        features.join("\", \"")
+                    ),
+                });
+            }
+            if !block.contains("SAFETY:")
+                || features.iter().any(|f| !block.contains(f.as_str()))
+            {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: attr_line,
+                    rule: "simd",
+                    message: format!(
+                        "`#[target_feature]` needs a `// SAFETY:` comment directly \
+                         above naming the `{}` runtime check its callers perform",
+                        features.join("`, `")
+                    ),
+                });
+            }
+        }
+        ci = j;
     }
 }
 
@@ -674,6 +884,88 @@ mod tests {
         let found = locks(src, &["tx"]);
         assert_eq!(found.len(), 1);
         assert_eq!(found[0].rule, "lock_blocking");
+    }
+
+    fn simd(src: &str, in_kernels: bool) -> Vec<Finding> {
+        let mut out = Vec::new();
+        rule_simd("f.rs", &lex(src), in_kernels, &mut out);
+        out
+    }
+
+    #[test]
+    fn intrinsics_flagged_outside_kernels_only() {
+        let src = r#"
+            use std::arch::x86_64::*;
+            fn f(a: __m128) -> __m128 { _mm_add_ps(a, a) }
+        "#;
+        let found = simd(src, false);
+        assert_eq!(found.len(), 4, "{found:?}"); // arch + 2x __m128 + _mm_add_ps
+        assert!(found.iter().all(|f| f.rule == "simd"));
+        assert!(simd(src, true).is_empty());
+    }
+
+    #[test]
+    fn arch_in_comments_and_unrelated_idents_pass() {
+        let src = r#"
+            // std::arch and _mm_add_ps in a comment are fine
+            fn f(arch: &str, mmap: usize) -> usize { mmap }
+        "#;
+        assert!(simd(src, false).is_empty());
+    }
+
+    #[test]
+    fn simd_allow_annotation_respected() {
+        let src = r#"
+            // amlint: allow(simd, reason = "feature probe, not a kernel")
+            let ok = std::arch::is_x86_feature_detected!("avx2");
+        "#;
+        assert!(simd(src, false).is_empty());
+    }
+
+    #[test]
+    fn target_feature_contract_enforced_even_in_kernels() {
+        let good = r#"
+            // SAFETY: dispatch probes `is_x86_feature_detected!("avx2")`
+            // once before constructing this backend.
+            #[inline]
+            #[target_feature(enable = "avx2")]
+            pub(crate) unsafe fn f(a: &[f32]) -> f32 { a[0] }
+        "#;
+        assert!(simd(good, true).is_empty(), "{:?}", simd(good, true));
+
+        let not_unsafe = good.replace("unsafe fn", "fn");
+        let found = simd(&not_unsafe, true);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert!(found[0].message.contains("must be declared `unsafe`"));
+
+        let wrong_feature = good.replace("avx2", "sse4.1");
+        // comment now names sse4.1 consistently, so it passes; but a
+        // comment naming a different feature than the attribute fails
+        assert!(simd(&wrong_feature, true).is_empty());
+        let mismatched = good.replace("`is_x86_feature_detected!(\"avx2\")`", "nothing");
+        let found = simd(&mismatched, true);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert!(found[0].message.contains("SAFETY"));
+    }
+
+    #[test]
+    fn target_feature_without_any_comment_flagged() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}";
+        let found = simd(src, true);
+        assert_eq!(found.len(), 1);
+        assert!(found[0].message.contains("SAFETY"));
+    }
+
+    #[test]
+    fn safety_comment_covers_unsafe_fn_through_attribute_stack() {
+        let src = r#"
+            // SAFETY: callers probe avx2 first.
+            #[target_feature(enable = "avx2")]
+            unsafe fn f() {}
+        "#;
+        let mut out = Vec::new();
+        rule_safety("f.rs", &lex(src), &mut out);
+        assert!(out.is_empty(), "{out:?}");
     }
 
     #[test]

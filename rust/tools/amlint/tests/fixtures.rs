@@ -33,12 +33,14 @@ fn expectations(src: &str) -> Vec<(usize, String)> {
     out
 }
 
-/// Run all three file-local rules and return `(line, rule)` findings.
+/// Run all four file-local rules (simd as a non-kernels file) and
+/// return `(line, rule)` findings.
 fn lint(src: &str) -> Vec<(usize, String)> {
     let toks = lexer::lex(src);
     let mut findings = Vec::new();
     rules::rule_panic("fixture.rs", &toks, &mut findings);
     rules::rule_safety("fixture.rs", &toks, &mut findings);
+    rules::rule_simd("fixture.rs", &toks, false, &mut findings);
     rules::rule_locks("fixture.rs", &toks, &FIXTURE_REGISTRY, &mut findings);
     let mut got: Vec<(usize, String)> =
         findings.into_iter().map(|f| (f.line, f.rule.to_string())).collect();
@@ -65,12 +67,32 @@ fn bad_safety_fixture_flags_exactly_the_marked_lines() {
 }
 
 #[test]
+fn bad_simd_fixture_flags_exactly_the_marked_lines() {
+    let src = fixture("bad/simd.rs");
+    assert_eq!(lint(&src), expectations(&src));
+}
+
+#[test]
 fn good_fixtures_pass_byte_for_byte() {
     for rel in ["good/clean.rs", "good/annotated.rs"] {
         let src = fixture(rel);
         let got = lint(&src);
         assert!(got.is_empty(), "{rel} should be clean, got {got:?}");
     }
+}
+
+#[test]
+fn kernel_simd_fixture_clean_inside_kernels_dir_only() {
+    let src = fixture("good/kernels_simd.rs");
+    let toks = lexer::lex(&src);
+    let mut findings = Vec::new();
+    rules::rule_simd("search/kernels/x86.rs", &toks, true, &mut findings);
+    rules::rule_safety("search/kernels/x86.rs", &toks, &mut findings);
+    assert!(findings.is_empty(), "{findings:?}");
+    // the same file outside `search/kernels/` is a containment violation
+    let mut outside = Vec::new();
+    rules::rule_simd("search/distance.rs", &toks, false, &mut outside);
+    assert!(!outside.is_empty());
 }
 
 #[test]
@@ -88,6 +110,8 @@ fn drift_fixture_flags_every_planted_inconsistency() {
             wire: &wire,
             persist: &persist,
             plan: &plan,
+            // a server that never reports its kernel backend
+            server: "fn start() {}",
             readme: &readme,
             test_idents: &test_idents,
         },
@@ -95,6 +119,7 @@ fn drift_fixture_flags_every_planted_inconsistency() {
     );
     let messages: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
     let expect_contains = [
+        "no `kernel_backend` STATS field",         // backend unobservable
         "code 3 is unassigned",                    // gapped codes
         "`ERR_UNTESTED` (code 2) is not asserted", // untested code
         "`ERR_GAPPED` (code 4) is not asserted",

@@ -1,0 +1,539 @@
+//! benchcmp: compare a fresh bench JSON against a committed baseline.
+//!
+//! Zero-dependency (the workspace is fully offline), so it carries its
+//! own minimal JSON reader.  Two input shapes are accepted, matching
+//! the bench harnesses in `rust/benches/`:
+//!
+//! * a flat array of measurements:
+//!   `[{"name": ..., "mean_ns": ...}, ...]`
+//! * the kernels shape with provenance:
+//!   `{"meta": {...}, "measurements": [{"name": ..., "ns_per_distance":
+//!   ..., "gbps": ...}, ...]}`
+//!
+//! Cells are joined by exact `name`.  The compared metric is
+//! `ns_per_distance` when both sides carry it, else `mean_ns` (lower is
+//! better for both).  A cell regresses when
+//! `fresh > baseline * (1 + threshold)`.
+//!
+//! Exit policy: without `--enforce` this is informational (always exit
+//! 0).  With `--enforce` it exits 1 on regression — **unless** the two
+//! files disagree on provenance (`meta.harness` / `meta.cpu`), in which
+//! case the failure is downgraded to a warning: numbers measured on one
+//! machine or harness must never hard-gate another.  A missing baseline
+//! file warns and exits 0, so the gate is soft until a baseline is
+//! committed.
+//!
+//! Usage: `benchcmp <baseline.json> <fresh.json> [--threshold 0.15]
+//! [--enforce]`
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+/// Minimal JSON value (objects keep key order irrelevant: BTreeMap).
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent JSON reader over the byte buffer; returns the
+/// value and the index just past it.
+fn parse_value(s: &[u8], mut i: usize) -> Result<(Json, usize), String> {
+    i = skip_ws(s, i);
+    match s.get(i) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => {
+            let mut o = BTreeMap::new();
+            i += 1;
+            i = skip_ws(s, i);
+            if s.get(i) == Some(&b'}') {
+                return Ok((Json::Obj(o), i + 1));
+            }
+            loop {
+                i = skip_ws(s, i);
+                let (key, ni) = parse_string(s, i)?;
+                i = skip_ws(s, ni);
+                if s.get(i) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {i}"));
+                }
+                let (val, ni) = parse_value(s, i + 1)?;
+                o.insert(key, val);
+                i = skip_ws(s, ni);
+                match s.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b'}') => return Ok((Json::Obj(o), i + 1)),
+                    _ => return Err(format!("expected ',' or '}}' at byte {i}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            let mut a = Vec::new();
+            i += 1;
+            i = skip_ws(s, i);
+            if s.get(i) == Some(&b']') {
+                return Ok((Json::Arr(a), i + 1));
+            }
+            loop {
+                let (val, ni) = parse_value(s, i)?;
+                a.push(val);
+                i = skip_ws(s, ni);
+                match s.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b']') => return Ok((Json::Arr(a), i + 1)),
+                    _ => return Err(format!("expected ',' or ']' at byte {i}")),
+                }
+            }
+        }
+        Some(b'"') => {
+            let (v, ni) = parse_string(s, i)?;
+            Ok((Json::Str(v), ni))
+        }
+        Some(b't') if s[i..].starts_with(b"true") => Ok((Json::Bool(true), i + 4)),
+        Some(b'f') if s[i..].starts_with(b"false") => {
+            Ok((Json::Bool(false), i + 5))
+        }
+        Some(b'n') if s[i..].starts_with(b"null") => Ok((Json::Null, i + 4)),
+        Some(_) => {
+            let start = i;
+            while i < s.len()
+                && matches!(s[i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                i += 1;
+            }
+            let text = std::str::from_utf8(&s[start..i])
+                .map_err(|e| e.to_string())?;
+            let n: f64 = text
+                .parse()
+                .map_err(|_| format!("bad number {text:?} at byte {start}"))?;
+            Ok((Json::Num(n), i))
+        }
+    }
+}
+
+fn skip_ws(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && s[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Parse a string literal starting at `i` (which must be `"`); handles
+/// the escapes the bench writers emit (\" \\ \/ \n \t \r \u).
+fn parse_string(s: &[u8], i: usize) -> Result<(String, usize), String> {
+    if s.get(i) != Some(&b'"') {
+        return Err(format!("expected string at byte {i}"));
+    }
+    let mut out = String::new();
+    let mut j = i + 1;
+    while j < s.len() {
+        match s[j] {
+            b'"' => return Ok((out, j + 1)),
+            b'\\' => {
+                let esc = s.get(j + 1).ok_or("truncated escape")?;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'u' => {
+                        let hex = s
+                            .get(j + 2..j + 6)
+                            .ok_or("truncated \\u escape")?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                            16,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        j += 4;
+                    }
+                    other => {
+                        return Err(format!("unknown escape \\{}", *other as char))
+                    }
+                }
+                j += 2;
+            }
+            byte => {
+                // multi-byte UTF-8 passes through unchanged
+                let len = utf8_len(byte);
+                let chunk = s.get(j..j + len).ok_or("truncated utf8")?;
+                out.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                j += len;
+            }
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0xF0..=0xF7 => 4,
+        0xE0..=0xEF => 3,
+        0xC0..=0xDF => 2,
+        _ => 1,
+    }
+}
+
+/// One comparable cell: the preferred metric and which field it came
+/// from.
+#[derive(Debug, Clone, PartialEq)]
+struct CellMetric {
+    value: f64,
+    field: &'static str,
+}
+
+/// Provenance fields that must agree for `--enforce` to hard-fail.
+#[derive(Debug, Clone, PartialEq, Default)]
+struct Provenance {
+    harness: Option<String>,
+    cpu: Option<String>,
+}
+
+/// A parsed bench file: provenance + name → measurement object.
+struct BenchFile {
+    provenance: Provenance,
+    cells: BTreeMap<String, Json>,
+}
+
+fn load_bench(doc: &Json) -> Result<BenchFile, String> {
+    let (meta, list) = match doc {
+        Json::Arr(a) => (None, a),
+        Json::Obj(_) => {
+            let list = match doc.get("measurements") {
+                Some(Json::Arr(a)) => a,
+                _ => return Err("object form needs a \"measurements\" array".into()),
+            };
+            (doc.get("meta"), list)
+        }
+        _ => return Err("top level must be an array or an object".into()),
+    };
+    let provenance = Provenance {
+        harness: meta
+            .and_then(|m| m.get("harness"))
+            .and_then(|v| v.as_str().map(str::to_string)),
+        cpu: meta
+            .and_then(|m| m.get("cpu"))
+            .and_then(|v| v.as_str().map(str::to_string)),
+    };
+    let mut cells = BTreeMap::new();
+    for m in list {
+        let Some(name) = m.get("name").and_then(Json::as_str) else {
+            return Err("measurement without a \"name\"".into());
+        };
+        cells.insert(name.to_string(), m.clone());
+    }
+    Ok(BenchFile { provenance, cells })
+}
+
+/// The compared metric for a (baseline, fresh) cell pair:
+/// ns_per_distance when both sides have it, else mean_ns.
+fn joint_metric(base: &Json, fresh: &Json) -> Option<(CellMetric, CellMetric)> {
+    for field in ["ns_per_distance", "mean_ns"] {
+        if let (Some(b), Some(f)) = (
+            base.get(field).and_then(Json::as_f64),
+            fresh.get(field).and_then(Json::as_f64),
+        ) {
+            return Some((
+                CellMetric { value: b, field },
+                CellMetric { value: f, field },
+            ));
+        }
+    }
+    None
+}
+
+struct Comparison {
+    regressions: Vec<String>,
+    improvements: usize,
+    compared: usize,
+    missing_in_fresh: usize,
+    new_in_fresh: usize,
+}
+
+fn compare(base: &BenchFile, fresh: &BenchFile, threshold: f64) -> Comparison {
+    let mut c = Comparison {
+        regressions: Vec::new(),
+        improvements: 0,
+        compared: 0,
+        missing_in_fresh: 0,
+        new_in_fresh: 0,
+    };
+    for (name, b) in &base.cells {
+        let Some(f) = fresh.cells.get(name) else {
+            c.missing_in_fresh += 1;
+            continue;
+        };
+        let Some((bm, fm)) = joint_metric(b, f) else {
+            continue;
+        };
+        c.compared += 1;
+        let ratio = if bm.value > 0.0 { fm.value / bm.value } else { 1.0 };
+        if ratio > 1.0 + threshold {
+            c.regressions.push(format!(
+                "{name}: {field} {base:.2} -> {fresh:.2} ({pct:+.1}%)",
+                field = bm.field,
+                base = bm.value,
+                fresh = fm.value,
+                pct = (ratio - 1.0) * 100.0
+            ));
+        } else if ratio < 1.0 - threshold {
+            c.improvements += 1;
+        }
+    }
+    c.new_in_fresh =
+        fresh.cells.keys().filter(|k| !base.cells.contains_key(*k)).count();
+    c
+}
+
+fn read_json_file(path: &str) -> Result<Json, String> {
+    let text = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+    let (doc, end) = parse_value(&text, 0)?;
+    if skip_ws(&text, end) != text.len() {
+        return Err(format!("{path}: trailing garbage after JSON"));
+    }
+    Ok(doc)
+}
+
+fn run(args: &[String]) -> ExitCode {
+    let mut paths: Vec<&String> = Vec::new();
+    let mut threshold = 0.15f64;
+    let mut enforce = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--threshold" => {
+                let Some(v) = it.next().and_then(|v| v.parse::<f64>().ok()) else {
+                    eprintln!("benchcmp: --threshold needs a number");
+                    return ExitCode::from(2);
+                };
+                threshold = v;
+            }
+            "--enforce" => enforce = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: benchcmp <baseline.json> <fresh.json> \
+                     [--threshold 0.15] [--enforce]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            _ => paths.push(a),
+        }
+    }
+    let [base_path, fresh_path] = paths.as_slice() else {
+        eprintln!(
+            "usage: benchcmp <baseline.json> <fresh.json> \
+             [--threshold 0.15] [--enforce]"
+        );
+        return ExitCode::from(2);
+    };
+    if !std::path::Path::new(base_path.as_str()).exists() {
+        println!(
+            "benchcmp: no baseline at {base_path} — nothing to compare \
+             (commit one to arm the gate)"
+        );
+        return ExitCode::SUCCESS;
+    }
+    let (base, fresh) = match (read_json_file(base_path), read_json_file(fresh_path))
+    {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("benchcmp: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let (base, fresh) = match (load_bench(&base), load_bench(&fresh)) {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("benchcmp: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let same_provenance = base.provenance == fresh.provenance;
+    let c = compare(&base, &fresh, threshold);
+    println!(
+        "benchcmp: {} compared, {} improved, {} regressed \
+         (threshold {:.0}%, {} baseline-only, {} fresh-only)",
+        c.compared,
+        c.improvements,
+        c.regressions.len(),
+        threshold * 100.0,
+        c.missing_in_fresh,
+        c.new_in_fresh
+    );
+    for r in &c.regressions {
+        println!("  REGRESSION {r}");
+    }
+    if c.regressions.is_empty() {
+        return ExitCode::SUCCESS;
+    }
+    if !enforce {
+        println!("benchcmp: informational run (no --enforce); not failing");
+        return ExitCode::SUCCESS;
+    }
+    if !same_provenance {
+        println!(
+            "benchcmp: provenance differs (harness/cpu: {:?} vs {:?}); \
+             downgrading failure to a warning — cross-machine numbers \
+             never hard-gate",
+            base.provenance, fresh.provenance
+        );
+        return ExitCode::SUCCESS;
+    }
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    run(&args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Json {
+        let (v, end) = parse_value(text.as_bytes(), 0).unwrap();
+        assert_eq!(skip_ws(text.as_bytes(), end), text.len());
+        v
+    }
+
+    #[test]
+    fn parses_flat_array_shape() {
+        let doc = parse(
+            r#"[
+              {"name": "a", "iters": 3, "mean_ns": 12.5},
+              {"name": "b", "iters": 4, "mean_ns": 100.0}
+            ]"#,
+        );
+        let f = load_bench(&doc).unwrap();
+        assert_eq!(f.cells.len(), 2);
+        assert_eq!(f.provenance, Provenance::default());
+        assert_eq!(
+            f.cells["a"].get("mean_ns").and_then(Json::as_f64),
+            Some(12.5)
+        );
+    }
+
+    #[test]
+    fn parses_meta_measurements_shape() {
+        let doc = parse(
+            r#"{"meta": {"harness": "c-mirror-gcc", "cpu": "Xeon"},
+                "measurements": [
+                  {"name": "kern f32 d=64 sse2", "ns_per_distance": 9.79,
+                   "gbps": 26.14}
+                ]}"#,
+        );
+        let f = load_bench(&doc).unwrap();
+        assert_eq!(f.provenance.harness.as_deref(), Some("c-mirror-gcc"));
+        assert_eq!(f.provenance.cpu.as_deref(), Some("Xeon"));
+        assert_eq!(f.cells.len(), 1);
+    }
+
+    #[test]
+    fn string_escapes_and_nesting() {
+        let doc = parse(r#"{"a": "q\"uo\\te\nx", "b": [1, -2.5e1, true, null]}"#);
+        assert_eq!(doc.get("a").and_then(Json::as_str), Some("q\"uo\\te\nx"));
+        assert_eq!(
+            doc.get("b"),
+            Some(&Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Num(-25.0),
+                Json::Bool(true),
+                Json::Null
+            ]))
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse_value(b"{", 0).is_err());
+        assert!(parse_value(b"[1,", 0).is_err());
+        assert!(parse_value(b"\"open", 0).is_err());
+        assert!(parse_value(b"nope", 0).is_err());
+        let (_, end) = parse_value(b"[] []", 0).unwrap();
+        assert_ne!(skip_ws(b"[] []", end), 5); // trailing garbage detected
+    }
+
+    fn bench_of(pairs: &[(&str, f64)], field: &str) -> BenchFile {
+        let cells = pairs
+            .iter()
+            .map(|(n, v)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str((*n).to_string()));
+                o.insert(field.to_string(), Json::Num(*v));
+                ((*n).to_string(), Json::Obj(o))
+            })
+            .collect();
+        BenchFile { provenance: Provenance::default(), cells }
+    }
+
+    #[test]
+    fn flags_regressions_beyond_threshold_only() {
+        let base = bench_of(
+            &[("a", 100.0), ("b", 100.0), ("c", 100.0), ("gone", 1.0)],
+            "mean_ns",
+        );
+        let fresh = bench_of(
+            &[("a", 114.9), ("b", 116.0), ("c", 50.0), ("new", 1.0)],
+            "mean_ns",
+        );
+        let c = compare(&base, &fresh, 0.15);
+        assert_eq!(c.compared, 3);
+        assert_eq!(c.regressions.len(), 1, "{:?}", c.regressions);
+        assert!(c.regressions[0].starts_with("b:"), "{:?}", c.regressions);
+        assert_eq!(c.improvements, 1);
+        assert_eq!(c.missing_in_fresh, 1);
+        assert_eq!(c.new_in_fresh, 1);
+    }
+
+    #[test]
+    fn prefers_ns_per_distance_over_mean_ns() {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str("a".to_string()));
+        o.insert("mean_ns".to_string(), Json::Num(1.0));
+        o.insert("ns_per_distance".to_string(), Json::Num(10.0));
+        let b = Json::Obj(o.clone());
+        let (bm, fm) = joint_metric(&b, &Json::Obj(o)).unwrap();
+        assert_eq!(bm.field, "ns_per_distance");
+        assert_eq!(bm.value, 10.0);
+        assert_eq!(fm.value, 10.0);
+    }
+
+    #[test]
+    fn missing_metric_cells_are_skipped() {
+        let base = bench_of(&[("a", 100.0)], "mean_ns");
+        let fresh = bench_of(&[("a", 200.0)], "gbps"); // no shared metric
+        let c = compare(&base, &fresh, 0.15);
+        assert_eq!(c.compared, 0);
+        assert!(c.regressions.is_empty());
+    }
+}
