@@ -1,0 +1,78 @@
+//! Observability overhead benchmark: the same coordinator round-trip
+//! with tracing disabled vs every request traced into a discarding
+//! sink.  CI runs this with `AMSEARCH_BENCH_JSON` and feeds the two
+//! cells to `benchcmp --pair` to enforce the ≤ 2% overhead budget —
+//! tracing that is off must cost nothing, and tracing that is on must
+//! stay in the noise.
+
+#[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
+mod harness;
+
+use std::sync::Arc;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::obs::TraceSink;
+use amsearch::runtime::Backend;
+use harness::{bench, budget, section, write_json_if_requested};
+
+fn main() {
+    let mut rng = Rng::new(17);
+    let wl = synthetic::dense_workload(64, 4_096, 64, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 16, top_p: 2, ..Default::default() };
+    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+    let config = CoordinatorConfig {
+        max_batch: 1,
+        max_wait_us: 0,
+        workers: 1,
+        queue_depth: 16,
+    };
+    let factory = || EngineFactory {
+        index: index.clone(),
+        backend: Backend::Native,
+        artifacts_dir: None,
+    };
+
+    section("coordinator round-trip: tracing off vs every request traced");
+    let mut measurements = Vec::new();
+
+    let untraced = Arc::new(SearchServer::start(factory(), config).unwrap());
+    let mut qi = 0usize;
+    let m = bench("obs/untraced", budget(), || {
+        let q = wl.queries.get(qi % 64).to_vec();
+        std::hint::black_box(untraced.search(q, 0, 0).unwrap());
+        qi += 1;
+    });
+    m.report();
+    measurements.push(m);
+    untraced.shutdown();
+
+    // sample_every = 1: every request builds a span record and writes a
+    // JSON line (into a discarding sink, so this bounds the CPU cost of
+    // tracing itself, not the disk)
+    let sink = TraceSink::new(Box::new(std::io::sink()), 1, 0);
+    let traced = Arc::new(
+        SearchServer::start_traced(factory(), config, Some(sink.clone())).unwrap(),
+    );
+    let mut qj = 0usize;
+    let m = bench("obs/traced", budget(), || {
+        let q = wl.queries.get(qj % 64).to_vec();
+        std::hint::black_box(traced.search(q, 0, 0).unwrap());
+        qj += 1;
+    });
+    m.report();
+    assert!(sink.emitted() > 0, "traced cell must actually emit records");
+    println!("  trace records emitted: {}", sink.emitted());
+    let (untraced_ns, traced_ns) = (measurements[0].mean_ns, m.mean_ns);
+    println!(
+        "  overhead: {:+.2}% mean ns/request",
+        100.0 * (traced_ns - untraced_ns) / untraced_ns
+    );
+    measurements.push(m);
+    traced.shutdown();
+
+    write_json_if_requested(&measurements);
+}

@@ -23,6 +23,7 @@ use crate::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
 use crate::error::Result;
 use crate::index::AmIndex;
 use crate::net::{NetConfig, NetServer};
+use crate::obs::TraceSink;
 use crate::runtime::Backend;
 
 use super::plan::{build_shard_index, load_cluster, routing_table, ShardPlan, ShardStrategy};
@@ -48,6 +49,10 @@ pub struct ClusterConfig {
     pub backend: Backend,
     /// Artifacts directory (PJRT backend only).
     pub artifacts_dir: Option<PathBuf>,
+    /// Shared trace sink for the whole cluster: the router and every
+    /// shard coordinator emit into the same JSON-lines destination, so
+    /// one `--trace-out` file carries complete stitched request trees.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for ClusterConfig {
@@ -60,6 +65,7 @@ impl Default for ClusterConfig {
             net: NetConfig::default(),
             backend: Backend::Native,
             artifacts_dir: None,
+            trace: None,
         }
     }
 }
@@ -148,12 +154,21 @@ impl ClusterHarness {
         let mut shards = Vec::with_capacity(factories.len());
         let mut addrs = Vec::with_capacity(factories.len());
         for factory in factories {
-            let search = Arc::new(SearchServer::start(factory, cfg.coordinator)?);
+            let search = Arc::new(SearchServer::start_traced(
+                factory,
+                cfg.coordinator,
+                cfg.trace.clone(),
+            )?);
             let net = NetServer::bind(search.clone(), "127.0.0.1:0", shard_net)?;
             addrs.push(net.local_addr().to_string());
             shards.push(ShardNode { search, net });
         }
-        let router = Arc::new(ClusterRouter::start(table, addrs, cfg.router)?);
+        let router = Arc::new(ClusterRouter::start_traced(
+            table,
+            addrs,
+            cfg.router,
+            cfg.trace.clone(),
+        )?);
         router.set_index_info(index_info);
         let router_net = NetServer::bind(router.clone(), listen, cfg.net)?;
         Ok(ClusterHarness { shards, router, router_net })

@@ -36,9 +36,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::SearchResponse;
 use crate::error::{Error, Result};
-use crate::metrics::{FanoutStats, LatencyHistogram};
+use crate::metrics::{FanoutStats, LatencyHistogram, WindowedHistogram};
 use crate::net::wire::{self, WireResponse};
 use crate::net::{NetClient, RetryPolicy, Serveable};
+use crate::obs::{prom, Registry, Trace, TraceSink};
 use crate::search::{top_p_largest, TopK};
 use crate::util::sync::lock_unpoisoned;
 use crate::util::Json;
@@ -96,6 +97,13 @@ pub struct RouterMetrics {
     /// Shard-reported per-request service time (one sample per shard
     /// contact, as carried in the shard's RESULT frame).
     pub shard_service: LatencyHistogram,
+    /// Rolling-window view of `latency` (router end-to-end tail over
+    /// the last ~10 s).
+    pub window: WindowedHistogram,
+    /// Rolling-window shard service time **per shard link** (indexed by
+    /// shard), so one slow shard is visible instead of averaged away.
+    /// Sized to the shard count at router start.
+    pub shard_windows: Vec<WindowedHistogram>,
     /// Per-shard fan-out accounting.
     pub fanout: FanoutStats,
 }
@@ -106,6 +114,9 @@ struct RouterRequest {
     vector: Vec<f32>,
     top_p: usize,
     top_k: usize,
+    /// `0` = untraced; non-zero ids propagate to every contacted shard
+    /// so shard spans stitch under the router's trace id.
+    trace_id: u64,
     enqueued: Instant,
     resp: SyncSender<SearchResponse>,
 }
@@ -177,6 +188,9 @@ struct RouterShared {
     retry: RetryPolicy,
     metrics: Mutex<RouterMetrics>,
     index_info: Mutex<Option<ClusterIndexInfo>>,
+    /// Trace sink; consulted at admission for sampling.  `None` =
+    /// tracing disabled.
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl RouterShared {
@@ -212,6 +226,18 @@ impl ClusterRouter {
         addrs: Vec<String>,
         cfg: RouterConfig,
     ) -> Result<ClusterRouter> {
+        Self::start_traced(table, addrs, cfg, None)
+    }
+
+    /// [`Self::start`] with an optional trace sink: sampled requests
+    /// emit router-tier span records, and their trace ids propagate to
+    /// every contacted shard so shard spans stitch under the same id.
+    pub fn start_traced(
+        table: RoutingTable,
+        addrs: Vec<String>,
+        cfg: RouterConfig,
+        trace: Option<Arc<TraceSink>>,
+    ) -> Result<ClusterRouter> {
         cfg.validate()?;
         if addrs.len() != table.n_shards() {
             return Err(Error::Config(format!(
@@ -220,13 +246,18 @@ impl ClusterRouter {
                 table.n_shards()
             )));
         }
+        let metrics = RouterMetrics {
+            shard_windows: vec![WindowedHistogram::new(); addrs.len()],
+            ..RouterMetrics::default()
+        };
         let shared = Arc::new(RouterShared {
             table,
             addrs,
             fan_out: AtomicUsize::new(cfg.fan_out),
             retry: cfg.retry,
-            metrics: Mutex::new(RouterMetrics::default()),
+            metrics: Mutex::new(metrics),
             index_info: Mutex::new(None),
+            trace,
         });
         let (req_tx, req_rx) = mpsc::sync_channel::<RouterRequest>(cfg.queue_depth);
         let req_rx: Arc<Mutex<Receiver<RouterRequest>>> = Arc::new(Mutex::new(req_rx));
@@ -310,7 +341,7 @@ impl ClusterRouter {
     ) -> Result<SearchResponse> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        Serveable::submit(self, vector, top_p, top_k, id, resp_tx)?;
+        Serveable::submit(self, vector, top_p, top_k, id, 0, resp_tx)?;
         let resp = resp_rx
             .recv()
             .map_err(|_| Error::Coordinator("router dropped request".into()))?;
@@ -354,6 +385,7 @@ impl Serveable for ClusterRouter {
         top_p: usize,
         top_k: usize,
         id: u64,
+        trace_id: u64,
         resp: SyncSender<SearchResponse>,
     ) -> Result<()> {
         if vector.len() != self.shared.table.dim() {
@@ -363,11 +395,16 @@ impl Serveable for ClusterRouter {
                 self.shared.table.dim()
             )));
         }
+        let trace_id = match &self.shared.trace {
+            Some(sink) if trace_id == 0 => sink.sample_id(),
+            _ => trace_id,
+        };
         let req = RouterRequest {
             id,
             vector,
             top_p,
             top_k,
+            trace_id,
             enqueued: Instant::now(),
             resp,
         };
@@ -411,26 +448,67 @@ impl Serveable for ClusterRouter {
         // once per shard-reported sample)
         o.insert("latency".to_string(), m.latency.to_json());
         o.insert("shard_service".to_string(), m.shard_service.to_json());
+        o.insert("window".to_string(), m.window.to_json());
+        o.insert(
+            "shard_windows".to_string(),
+            Json::Arr(m.shard_windows.iter().map(|w| w.to_json()).collect()),
+        );
         o.insert("fanout".to_string(), m.fanout.to_json());
         Json::Obj(o)
+    }
+
+    /// Prometheus-style registry derived from the same single-lock
+    /// [`Self::metrics`] snapshot as [`Serveable::stats_json`], so the
+    /// two export surfaces can never disagree.
+    fn metrics_registry(&self) -> Registry {
+        let m = self.metrics();
+        let mut reg = Registry::default();
+        let role = [("role", "router")];
+        reg.counter(prom::M_REQUESTS, &role, m.requests);
+        reg.counter(prom::M_ERRORS, &role, m.errors);
+        reg.histogram(prom::M_LATENCY, &role, &m.latency);
+        reg.histogram(prom::M_SHARD_SERVICE, &role, &m.shard_service);
+        reg.histogram(prom::M_WINDOW_LATENCY, &role, &m.window.windowed());
+        for (si, w) in m.shard_windows.iter().enumerate() {
+            let shard = si.to_string();
+            reg.histogram(
+                prom::M_SHARD_WINDOW,
+                &[("role", "router"), ("shard", shard.as_str())],
+                &w.windowed(),
+            );
+        }
+        reg
     }
 }
 
 /// Route one request: score shards, scatter to the top-`s`, gather and
 /// merge.  Exactly one response is delivered, success or error.
+///
+/// A traced request (non-zero `trace_id`, or a slow outlier crossing
+/// the sink's threshold) emits one router-tier span record — `queue`,
+/// `score`, `scatter`, `gather`, `respond` — and its id travels to
+/// every contacted shard inside the SEARCH frame so the shard-tier
+/// records stitch under the same trace.
 fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest) {
     let started = Instant::now();
     let n_shards = links.len();
     let scores = shared.table.score(&req.vector);
     let contacted = top_p_largest(&scores, shared.effective_fan_out());
+    let score_ns = started.elapsed().as_nanos() as u64;
 
     // scatter: submit to every selected shard before collecting any
     // response (the links pipeline, so shard scans overlap)
+    let scatter_started = Instant::now();
     let mut pending: Vec<(usize, u64)> = Vec::with_capacity(contacted.len());
     let mut failure: Option<Error> = None;
     for &si in &contacted {
-        match links[si as usize].submit(&req.vector, req.top_p, req.top_k, &shared.retry)
-        {
+        match links[si as usize].submit(
+            &req.vector,
+            req.top_p,
+            req.top_k,
+            req.trace_id,
+            &shared.retry,
+        ) {
             Ok(id) => pending.push((si as usize, id)),
             Err(e) => {
                 failure = Some(e);
@@ -438,6 +516,7 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
             }
         }
     }
+    let scatter_ns = scatter_started.elapsed().as_nanos() as u64;
 
     // the shards actually reached (scatter may have aborted early):
     // what the fan-out counters must reflect
@@ -457,9 +536,17 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
     let mut candidates: u64 = 0;
     // routing cost: one bilinear poll per shard super-memory
     let mut ops: u64 = (d * d * n_shards) as u64;
-    let mut shard_ns: Vec<u64> = Vec::with_capacity(pending.len());
+    let gather_started = Instant::now();
+    let mut shard_ns: Vec<(usize, u64)> = Vec::with_capacity(pending.len());
     for (si, id) in pending {
-        match links[si].wait(id, &req.vector, req.top_p, req.top_k, &shared.retry) {
+        match links[si].wait(
+            id,
+            &req.vector,
+            req.top_p,
+            req.top_k,
+            req.trace_id,
+            &shared.retry,
+        ) {
             Ok(r) => {
                 for n in &r.neighbors {
                     acc.push(n.distance, shared.table.global_id(si, n.id));
@@ -469,7 +556,7 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
                 }
                 candidates += r.candidates;
                 ops += r.ops;
-                shard_ns.push(r.service_ns);
+                shard_ns.push((si, r.service_ns));
             }
             Err(e) => {
                 if failure.is_none() {
@@ -478,6 +565,7 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
             }
         }
     }
+    let gather_ns = gather_started.elapsed().as_nanos() as u64;
 
     let resp = match failure {
         Some(e) => {
@@ -502,13 +590,47 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
         if resp.error.is_some() {
             m.errors += 1;
         }
-        m.latency.record(req.enqueued.elapsed());
-        for &ns in &shard_ns {
+        let lat_ns = req.enqueued.elapsed().as_nanos() as u64;
+        m.latency.record_ns(lat_ns);
+        m.window.record_ns(lat_ns);
+        for &(si, ns) in &shard_ns {
             m.shard_service.record_ns(ns);
+            if let Some(w) = m.shard_windows.get_mut(si) {
+                w.record_ns(ns);
+            }
         }
         m.fanout.record(&submitted, n_shards);
     }
-    let _ = req.resp.send(resp); // receiver may have timed out
+    let Some(sink) = shared.trace.as_deref() else {
+        let _ = req.resp.send(resp); // receiver may have timed out
+        return;
+    };
+    // slow outliers are force-sampled even when the sampler skipped
+    // them at admission (router-tier record only: the shards were
+    // contacted with trace id 0 and emitted nothing)
+    let tid = if req.trace_id != 0 {
+        req.trace_id
+    } else if sink.slow_ns() > 0
+        && req.enqueued.elapsed().as_nanos() as u64 >= sink.slow_ns()
+    {
+        sink.force_id()
+    } else {
+        0
+    };
+    if tid == 0 {
+        let _ = req.resp.send(resp);
+        return;
+    }
+    let mut t = Trace::start(tid, "router", req.id);
+    t.span_ns("queue", started.duration_since(req.enqueued).as_nanos() as u64);
+    t.span_ns("score", score_ns);
+    t.span_ns("scatter", scatter_ns);
+    t.span_ns("gather", gather_ns);
+    let send_started = Instant::now();
+    let _ = req.resp.send(resp);
+    t.span_ns("respond", send_started.elapsed().as_nanos() as u64);
+    let rec = t.finish_with_total(req.enqueued.elapsed().as_nanos() as u64);
+    sink.emit(&rec);
 }
 
 /// One router→shard connection with reconnect-on-failure semantics.
@@ -536,19 +658,23 @@ impl ShardLink {
 
     /// Submit a search, reconnecting once if the link died since the
     /// last request (a restarted shard surfaces as a send failure).
+    /// `trace_id` rides the SEARCH frame (0 = untraced, wire v1).
     fn submit(
         &mut self,
         vector: &[f32],
         top_p: usize,
         top_k: usize,
+        trace_id: u64,
         retry: &RetryPolicy,
     ) -> Result<u64> {
-        let first = self.ensure(retry)?.submit(vector, top_p, top_k);
+        let first = self
+            .ensure(retry)?
+            .submit_traced(vector, top_p, top_k, trace_id);
         match first {
             Ok(id) => Ok(id),
             Err(_) => {
                 self.client = None;
-                self.ensure(retry)?.submit(vector, top_p, top_k)
+                self.ensure(retry)?.submit_traced(vector, top_p, top_k, trace_id)
             }
         }
     }
@@ -563,6 +689,7 @@ impl ShardLink {
         vector: &[f32],
         top_p: usize,
         top_k: usize,
+        trace_id: u64,
         retry: &RetryPolicy,
     ) -> Result<WireResponse> {
         let client = self
@@ -575,13 +702,13 @@ impl ShardLink {
                 if we.code == wire::ERR_OVERLOADED
                     || we.code == wire::ERR_SHUTTING_DOWN =>
             {
-                self.resubmit(vector, top_p, top_k, retry)
+                self.resubmit(vector, top_p, top_k, trace_id, retry)
             }
             Ok(Err(we)) => Err(Error::Coordinator(format!(
                 "shard error (code {}): {}",
                 we.code, we.message
             ))),
-            Err(_) => self.resubmit(vector, top_p, top_k, retry),
+            Err(_) => self.resubmit(vector, top_p, top_k, trace_id, retry),
         }
     }
 
@@ -590,11 +717,12 @@ impl ShardLink {
         vector: &[f32],
         top_p: usize,
         top_k: usize,
+        trace_id: u64,
         retry: &RetryPolicy,
     ) -> Result<WireResponse> {
         self.client = None;
         let client = self.ensure(retry)?;
-        let id = client.submit(vector, top_p, top_k)?;
+        let id = client.submit_traced(vector, top_p, top_k, trace_id)?;
         client.wait(id)
     }
 }
@@ -689,6 +817,18 @@ mod tests {
         assert_eq!(stats.get("shards").unwrap().as_usize(), Some(2));
         assert!(stats.get("latency").is_some());
         assert!(stats.get("shard_service").is_some());
+        assert!(stats.get("window").is_some());
+        let windows = stats.get("shard_windows").unwrap();
+        assert!(
+            matches!(windows, Json::Arr(a) if a.len() == 2),
+            "one rolling window per shard link"
+        );
+        // the exposition surface derives from the same snapshot and
+        // must always validate with every required family present
+        let text = Serveable::metrics_registry(&router).render();
+        crate::obs::prom::validate(&text, &crate::obs::REQUIRED_FAMILIES).unwrap();
+        assert!(text.contains("amsearch_requests_total{role=\"router\"}"));
+        assert!(text.contains("shard=\"1\""), "per-shard windowed family");
         router.shutdown();
     }
 }

@@ -184,11 +184,23 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Request queue bound.
     pub queue_depth: usize,
+    /// Trace-sample every Nth request (`0` = tracing off).
+    pub trace_sample: u64,
+    /// Force-sample requests slower than this many milliseconds
+    /// (`0` = no slow-query forcing).
+    pub trace_slow_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, max_wait_us: 200, workers: 2, queue_depth: 1024 }
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 200,
+            workers: 2,
+            queue_depth: 1024,
+            trace_sample: 0,
+            trace_slow_ms: 0,
+        }
     }
 }
 
@@ -356,6 +368,9 @@ impl AppConfig {
         cfg.serve.max_wait_us = get_u64(sv, "max_wait_us", cfg.serve.max_wait_us)?;
         cfg.serve.workers = get_usize(sv, "workers", cfg.serve.workers)?;
         cfg.serve.queue_depth = get_usize(sv, "queue_depth", cfg.serve.queue_depth)?;
+        cfg.serve.trace_sample = get_u64(sv, "trace_sample", cfg.serve.trace_sample)?;
+        cfg.serve.trace_slow_ms =
+            get_u64(sv, "trace_slow_ms", cfg.serve.trace_slow_ms)?;
 
         let be = root.get("backend").unwrap_or(&empty);
         cfg.backend.kind = get_parsed(be, "kind", cfg.backend.kind)?;
@@ -439,7 +454,22 @@ mod tests {
             AppConfig::from_json(r#"{"index": {"n_classes": 10}}"#).unwrap();
         assert_eq!(cfg.index.n_classes, 10);
         assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.serve.trace_sample, 0, "tracing defaults off");
+        assert_eq!(cfg.serve.trace_slow_ms, 0);
         assert_eq!(cfg.dataset.kind, DatasetKind::SiftLike);
+    }
+
+    #[test]
+    fn trace_knobs_parse() {
+        let cfg = AppConfig::from_json(
+            r#"{"serve": {"trace_sample": 100, "trace_slow_ms": 250}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.trace_sample, 100);
+        assert_eq!(cfg.serve.trace_slow_ms, 250);
+        assert!(
+            AppConfig::from_json(r#"{"serve": {"trace_sample": -1}}"#).is_err()
+        );
     }
 
     #[test]

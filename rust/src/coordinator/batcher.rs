@@ -125,6 +125,7 @@ mod tests {
                 vector: vec![0.0; 4],
                 top_p: 1,
                 top_k: 1,
+                trace_id: 0,
                 enqueued: Instant::now(),
                 resp: tx,
             },

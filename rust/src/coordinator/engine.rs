@@ -30,6 +30,32 @@ use crate::search::{invert_polled, top_p_largest, TopK};
 
 use super::protocol::SearchResponse;
 
+/// Wall-clock time spent in each pipeline stage of one batch, measured
+/// around the stage boundaries of [`Engine::serve_batch_detailed`].  The
+/// server divides these by the batch size to attribute per-request span
+/// durations (`score`/`select`/`scan`) to sampled traces.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimings {
+    /// Scorer call (`[B, d]` -> `[B, q]`).
+    pub score_ns: u64,
+    /// Top-`p` class selection.  `0` on the native path, where selection
+    /// fuses into [`AmIndex::finish_batch`] and is accounted under
+    /// `scan_ns`.
+    pub select_ns: u64,
+    /// Class-major candidate scan (including any quantized rerank).
+    pub scan_ns: u64,
+}
+
+impl StageTimings {
+    /// Sum of all stage durations (bounded above by the batch service
+    /// time that wraps the engine call).
+    pub fn total_ns(&self) -> u64 {
+        self.score_ns
+            .saturating_add(self.select_ns)
+            .saturating_add(self.scan_ns)
+    }
+}
+
 /// Everything one executed batch produced: per-request responses plus
 /// the batch-level accounting the server aggregates per *batch*, not per
 /// request.
@@ -42,6 +68,8 @@ pub struct BatchOutput {
     pub ops: OpsCounter,
     /// Class-grouped scan accounting (polls vs distinct class passes).
     pub scan: BatchScanStats,
+    /// Per-stage wall-clock split of this batch.
+    pub timings: StageTimings,
 }
 
 /// A ready-to-serve engine (one per worker thread).
@@ -225,14 +253,18 @@ impl Engine {
                 responses: Vec::new(),
                 ops: OpsCounter::new(),
                 scan: BatchScanStats::new(),
+                timings: StageTimings::default(),
             });
         }
+        let mut timings = StageTimings::default();
         // stage 1: score the whole batch in one scorer call
         let mut flat = Vec::with_capacity(b * d);
         for (v, _, _) in queries {
             flat.extend_from_slice(v);
         }
+        let stage = std::time::Instant::now();
         let scores = self.scorer.score(&flat)?;
+        timings.score_ns = stage.elapsed().as_nanos() as u64;
         // per-query accounting; scoring cost per the paper's model
         // (d²q dense); per-request p and k resolved against the index
         // defaults and clamped to what exists
@@ -248,14 +280,23 @@ impl Engine {
         }
         let qrefs: Vec<&[f32]> = queries.iter().map(|(v, _, _)| *v).collect();
         // stages 2+3: top-p selection for the whole batch, then the
-        // class-major scan (native or PJRT GEMM)
+        // class-major scan (native or PJRT GEMM); the native path fuses
+        // selection into the scan, so its select_ns stays 0 by design
         let results = if let Some(scanner) = &self.scanner {
+            let stage = std::time::Instant::now();
             let polled: Vec<Vec<u32>> = (0..b)
                 .map(|bi| top_p_largest(&scores[bi * q..(bi + 1) * q], ps[bi]))
                 .collect();
-            self.scan_pjrt_batch(scanner, &qrefs, polled, &ks, &mut ops)?
+            timings.select_ns = stage.elapsed().as_nanos() as u64;
+            let stage = std::time::Instant::now();
+            let r = self.scan_pjrt_batch(scanner, &qrefs, polled, &ks, &mut ops)?;
+            timings.scan_ns = stage.elapsed().as_nanos() as u64;
+            r
         } else {
-            self.index.finish_batch(&qrefs, &scores, &ps, &ks, &mut ops)
+            let stage = std::time::Instant::now();
+            let r = self.index.finish_batch(&qrefs, &scores, &ps, &ks, &mut ops);
+            timings.scan_ns = stage.elapsed().as_nanos() as u64;
+            r
         };
         // assemble responses + batch-level accounting
         let mut agg = OpsCounter::new();
@@ -284,7 +325,7 @@ impl Engine {
             });
         }
         scan.class_passes = touched.iter().filter(|&&t| t).count() as u64;
-        Ok(BatchOutput { responses, ops: agg, scan })
+        Ok(BatchOutput { responses, ops: agg, scan, timings })
     }
 }
 
@@ -434,6 +475,15 @@ mod tests {
         assert!(out.ops.scan_ops > 0);
         let total: u64 = out.responses.iter().map(|r| r.ops).sum();
         assert_eq!(total, out.ops.total());
+        // stage timings: scoring and scanning both ran; the native path
+        // fuses selection into the scan so select_ns stays 0
+        assert!(out.timings.score_ns > 0);
+        assert!(out.timings.scan_ns > 0);
+        assert_eq!(out.timings.select_ns, 0);
+        assert_eq!(
+            out.timings.total_ns(),
+            out.timings.score_ns + out.timings.scan_ns
+        );
     }
 
     #[test]

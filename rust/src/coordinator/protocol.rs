@@ -21,6 +21,11 @@ pub struct SearchRequest {
     /// Number of neighbors to return (`k`); 0 = the index default.
     /// Clamped to the database size at the server boundary.
     pub top_k: usize,
+    /// Trace id for per-stage span emission (`0` = untraced).  Non-zero
+    /// ids either arrived on the wire (a router stitching shard spans
+    /// into its own trace) or were assigned by the server's sampler at
+    /// admission.
+    pub trace_id: u64,
     /// Enqueue timestamp (for end-to-end latency).
     pub enqueued: std::time::Instant,
     /// Completion channel (capacity 1; dropped on worker failure, which

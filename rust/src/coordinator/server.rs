@@ -19,7 +19,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::metrics::{BatchScanStats, LatencyHistogram, OpsCounter};
+use crate::metrics::{BatchScanStats, LatencyHistogram, OpsCounter, WindowedHistogram};
+use crate::obs::{prom, Registry, Trace, TraceSink};
 use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::run_batcher;
@@ -43,6 +44,12 @@ pub struct ServerMetrics {
     pub batches: u64,
     /// Requests served.
     pub requests: u64,
+    /// Requests answered with an explicit error response.
+    pub errors: u64,
+    /// Rolling-window view of the end-to-end latency: same samples as
+    /// `latency`, but only the last ~10 s of them, so operators see
+    /// current tail latency instead of a lifetime average.
+    pub window: WindowedHistogram,
 }
 
 impl ServerMetrics {
@@ -76,6 +83,9 @@ pub struct SearchServer {
     /// Distance-kernel backend of the served index (STATS:
     /// `kernel.backend`).
     kernel_backend: &'static str,
+    /// Trace sink shared with the worker threads; consulted at
+    /// admission for sampling decisions.  `None` = tracing disabled.
+    trace: Option<Arc<TraceSink>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -84,6 +94,18 @@ impl SearchServer {
     /// Start the server: one batcher thread + `config.workers` engine
     /// threads built from `factory`.
     pub fn start(factory: EngineFactory, config: CoordinatorConfig) -> Result<Self> {
+        Self::start_traced(factory, config, None)
+    }
+
+    /// [`Self::start`] with an optional trace sink: sampled (or
+    /// propagated) requests emit one per-stage span record per tier as
+    /// JSON lines.  `None` is exactly [`Self::start`] — the request
+    /// path does no tracing work at all.
+    pub fn start_traced(
+        factory: EngineFactory,
+        config: CoordinatorConfig,
+        trace: Option<Arc<TraceSink>>,
+    ) -> Result<Self> {
         config.validate()?;
         let dim = factory.index.dim();
         let n_vectors = factory.index.len();
@@ -111,6 +133,7 @@ impl SearchServer {
             let factory = factory.clone();
             let batch_rx = batch_rx.clone();
             let metrics = metrics.clone();
+            let trace = trace.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("amsearch-worker-{wi}"))
                 .spawn(move || {
@@ -131,7 +154,7 @@ impl SearchServer {
                                 Err(_) => return,
                             }
                         };
-                        serve_one_batch(&engine, batch, &metrics);
+                        serve_one_batch(&engine, batch, &metrics, trace.as_deref());
                     }
                 })
                 .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
@@ -148,6 +171,7 @@ impl SearchServer {
             quant_mode,
             quant_rerank,
             kernel_backend,
+            trace,
             workers: Mutex::new(workers),
             batcher: Mutex::new(Some(batcher)),
         })
@@ -167,12 +191,18 @@ impl SearchServer {
     /// larger than the database is clamped to it (the response simply
     /// carries every vector, nearest first).  Blocks only while the
     /// bounded request queue is full (backpressure).
+    ///
+    /// `trace_id` = 0 means "untraced": when a trace sink is attached
+    /// the admission sampler may still pick the request.  A non-zero id
+    /// (propagated by a cluster router) is kept as-is so shard spans
+    /// stitch into the router's trace.
     pub fn submit(
         &self,
         vector: Vec<f32>,
         top_p: usize,
         top_k: usize,
         id: u64,
+        trace_id: u64,
         resp: SyncSender<SearchResponse>,
     ) -> Result<()> {
         if vector.len() != self.dim {
@@ -182,6 +212,10 @@ impl SearchServer {
                 self.dim
             )));
         }
+        let trace_id = match &self.trace {
+            Some(sink) if trace_id == 0 => sink.sample_id(),
+            _ => trace_id,
+        };
         // clamp here so an absurd k never reaches the scan accumulators
         // (0 passes through: it selects the index default downstream)
         let top_k = top_k.min(self.n_vectors);
@@ -190,6 +224,7 @@ impl SearchServer {
             vector,
             top_p,
             top_k,
+            trace_id,
             enqueued: Instant::now(),
             resp,
         };
@@ -214,7 +249,7 @@ impl SearchServer {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.submit(vector, top_p, top_k, id, resp_tx)?;
+        self.submit(vector, top_p, top_k, id, 0, resp_tx)?;
         let resp = resp_rx
             .recv()
             .map_err(|_| Error::Coordinator("worker dropped request".into()))?;
@@ -269,12 +304,44 @@ impl SearchServer {
             quant_json(self.quant_mode, self.quant_rerank),
         );
         o.insert("kernel".to_string(), kernel_json(self.kernel_backend));
+        o.insert("errors".to_string(), Json::Num(m.errors as f64));
         o.insert("latency".to_string(), m.latency.to_json());
         o.insert("service".to_string(), m.service.to_json());
+        o.insert("window".to_string(), m.window.to_json());
         Json::Obj(o)
     }
 
-    /// Snapshot the metrics.
+    /// Render the serving metrics as a Prometheus-style [`Registry`] —
+    /// the payload of the network METRICS admin op.  Derived from the
+    /// same single-lock snapshot as [`Self::stats_json`], so the two
+    /// export surfaces can never disagree about whether a request has
+    /// been counted.
+    pub fn metrics_registry(&self) -> Registry {
+        let m = self.metrics();
+        let mut reg = Registry::default();
+        let role = [("role", "search")];
+        reg.counter(prom::M_REQUESTS, &role, m.requests);
+        reg.counter(prom::M_BATCHES, &role, m.batches);
+        reg.counter(prom::M_ERRORS, &role, m.errors);
+        for (stage, v) in [
+            ("score", m.ops.score_ops),
+            ("scan", m.ops.scan_ops),
+            ("compressed", m.ops.compressed_ops),
+            ("rerank", m.ops.rerank_ops),
+            ("aux", m.ops.aux_ops),
+        ] {
+            reg.counter(prom::M_OPS, &[("role", "search"), ("stage", stage)], v);
+        }
+        reg.histogram(prom::M_LATENCY, &role, &m.latency);
+        reg.histogram(prom::M_SERVICE, &role, &m.service);
+        reg.histogram(prom::M_WINDOW_LATENCY, &role, &m.window.windowed());
+        reg
+    }
+
+    /// Snapshot the metrics — one lock acquisition, so every field of
+    /// the returned struct describes the same instant (a STATS reply
+    /// can never show a request counted in `requests` but missing from
+    /// `latency`).
     pub fn metrics(&self) -> ServerMetrics {
         let m = lock_unpoisoned(&self.metrics);
         ServerMetrics {
@@ -284,6 +351,8 @@ impl SearchServer {
             scan: m.scan,
             batches: m.batches,
             requests: m.requests,
+            errors: m.errors,
+            window: m.window.clone(),
         }
     }
 
@@ -342,10 +411,18 @@ pub fn kernel_json(backend: &str) -> crate::util::Json {
 }
 
 /// Execute one batch on an engine and complete every request.
+///
+/// When `trace` is attached, every request whose `trace_id` is non-zero
+/// (or that crosses the sink's slow threshold) emits one span record:
+/// `queue` (enqueue → youngest batch arrival), `batch` (youngest
+/// arrival → execution start), `score`/`select`/`scan` (per-request
+/// share of the engine stage timings), `respond` (response hand-off).
+/// The spans sum to at most the end-to-end latency by construction.
 fn serve_one_batch(
     engine: &super::engine::Engine,
     batch: Vec<SearchRequest>,
     metrics: &Arc<Mutex<ServerMetrics>>,
+    trace: Option<&TraceSink>,
 ) {
     let started = Instant::now();
     let queries: Vec<(&[f32], usize, usize)> = batch
@@ -354,18 +431,30 @@ fn serve_one_batch(
         .collect();
     match engine.serve_batch_detailed(&queries) {
         Ok(output) => {
-            let super::engine::BatchOutput { mut responses, ops, scan } = output;
+            let super::engine::BatchOutput { mut responses, ops, scan, timings } =
+                output;
             let service_ns = started.elapsed().as_nanos() as u64;
-            let per_req_ns = service_ns / batch.len().max(1) as u64;
+            let b = batch.len().max(1) as u64;
+            let per_req_ns = service_ns / b;
             let requests = batch.len() as u64;
+            // the youngest arrival separates queue wait (request-specific)
+            // from batch formation (shared straggler wait)
+            let youngest = batch
+                .iter()
+                .map(|r| r.enqueued)
+                .max()
+                .unwrap_or(started);
             let mut latency = LatencyHistogram::new();
+            let mut lat_ns = Vec::with_capacity(batch.len());
             let mut completed = Vec::with_capacity(batch.len());
             for (req, resp) in batch.into_iter().zip(responses.drain(..)) {
                 let mut resp = resp;
                 resp.id = req.id;
                 resp.service_ns = per_req_ns;
-                latency.record(req.enqueued.elapsed());
-                completed.push((req.resp, resp));
+                let ns = req.enqueued.elapsed().as_nanos() as u64;
+                latency.record_ns(ns);
+                lat_ns.push(ns);
+                completed.push((req.resp, resp, req.trace_id, req.enqueued));
             }
             // metrics BEFORE completing requests: a client must never
             // observe its response while its own request is uncounted.
@@ -379,9 +468,49 @@ fn serve_one_batch(
                 m.scan.merge(&scan);
                 m.service.record_ns(service_ns);
                 m.latency.merge(&latency);
+                for &ns in &lat_ns {
+                    m.window.record_ns(ns);
+                }
             }
-            for (tx, resp) in completed {
-                let _ = tx.send(resp); // receiver may have timed out
+            for (tx, resp, trace_id, enqueued) in completed {
+                let Some(sink) = trace else {
+                    let _ = tx.send(resp); // receiver may have timed out
+                    continue;
+                };
+                // slow outliers are force-sampled even when the sampler
+                // skipped them at admission
+                let tid = if trace_id != 0 {
+                    trace_id
+                } else if sink.slow_ns() > 0
+                    && enqueued.elapsed().as_nanos() as u64 >= sink.slow_ns()
+                {
+                    sink.force_id()
+                } else {
+                    0
+                };
+                if tid == 0 {
+                    let _ = tx.send(resp);
+                    continue;
+                }
+                let req_id = resp.id;
+                let mut t = Trace::start(tid, "search", req_id);
+                t.span_ns(
+                    "queue",
+                    youngest.duration_since(enqueued).as_nanos() as u64,
+                );
+                t.span_ns(
+                    "batch",
+                    started.duration_since(youngest).as_nanos() as u64,
+                );
+                t.span_ns("score", timings.score_ns / b);
+                t.span_ns("select", timings.select_ns / b);
+                t.span_ns("scan", timings.scan_ns / b);
+                let send_started = Instant::now();
+                let _ = tx.send(resp);
+                t.span_ns("respond", send_started.elapsed().as_nanos() as u64);
+                let rec =
+                    t.finish_with_total(enqueued.elapsed().as_nanos() as u64);
+                sink.emit(&rec);
             }
         }
         Err(e) => {
@@ -391,6 +520,10 @@ fn serve_one_batch(
             // responses funnel through a shared per-connection channel)
             eprintln!("batch failed: {e}; failing {} requests", batch.len());
             let reason = format!("batch execution failed: {e}");
+            {
+                let mut m = lock_unpoisoned(metrics);
+                m.errors += batch.len() as u64;
+            }
             for req in batch {
                 let resp = SearchResponse::failed(req.id, reason.clone());
                 let _ = req.resp.send(resp);

@@ -41,6 +41,7 @@ pub mod index;
 pub mod memory;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod partition;
 pub mod quant;
 pub mod runtime;

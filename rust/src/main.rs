@@ -10,6 +10,7 @@
 //! amsearch shard-plan [--config cfg.json] --shards N [--strategy S] [--out-dir D]
 //! amsearch serve-cluster [--plan-dir D | --config cfg.json --shards N]
 //!                        [--listen ADDR] [--fan-out S]
+//! amsearch metrics --addr HOST:PORT [--check]
 //! amsearch artifacts [--dir artifacts]
 //! ```
 //!
@@ -26,6 +27,8 @@
 //!   index artifacts + the v3 routing-table manifest
 //! * `serve-cluster` — single-binary cluster: N in-process shard
 //!   servers on ephemeral ports + the scatter-gather router in front
+//! * `metrics` — scrape a running server's METRICS frame (Prometheus
+//!   text exposition), optionally validating it
 //! * `artifacts` — inspect the AOT artifact manifest
 
 use std::path::{Path, PathBuf};
@@ -46,6 +49,7 @@ use amsearch::eval::{run_figure, EvalOptions, ALL_FIGURES};
 use amsearch::index::AmIndex;
 use amsearch::metrics::{OpsCounter, Recall, RecallAtK};
 use amsearch::net::{loadgen, LoadGenConfig, NetClient, NetConfig, NetServer};
+use amsearch::obs::{self, TraceSink};
 use amsearch::runtime::{Backend, Manifest};
 use amsearch::util::{Args, Json};
 
@@ -68,6 +72,16 @@ commands:
               (--config F, --workers N, --backend native|pjrt, --repeat R,
                --listen ADDR to open the TCP front door instead of
                driving the config workload in-process)
+
+  serving commands (serve --listen, serve-cluster) also take the
+  tracing knobs:
+              --trace-out FILE          per-request span records as
+                                        JSON lines (tracing is off
+                                        without this)
+              --trace-sample N          sample every Nth request (0 =
+                                        only slow queries)
+              --trace-slow-ms MS        force-trace requests slower
+                                        than MS (0 = off)
   loadgen     closed-loop TCP load generator against serve --listen or
               serve-cluster (--addr HOST:PORT, --connections N,
                --requests R, --depth D, --top-p P, --top-k K,
@@ -85,6 +99,9 @@ commands:
                --shards N --strategy S to build in-process;
                --fan-out S contacts only the top-s shards per query,
                0 = all; --listen ADDR, --router-workers W)
+  metrics     scrape a running server's Prometheus text exposition
+              (--addr HOST:PORT, --check to validate the format and
+               required metric families, exiting non-zero on failure)
   artifacts   show the AOT manifest      (--dir D)
 ";
 
@@ -130,6 +147,31 @@ fn apply_scan_precision_args(
         args.get_parse("pq-bits", cfg_bits)?,
     )?;
     Ok(())
+}
+
+/// Build the optional per-request trace sink from the config's serve
+/// section plus the CLI overrides (`--trace-out`, `--trace-sample`,
+/// `--trace-slow-ms`).  Tracing stays off unless an output path is
+/// given — the hot path then pays nothing (see `obs::trace`).
+fn build_trace_sink(
+    serve: &amsearch::config::ServeConfig,
+    args: &Args,
+) -> Result<Option<Arc<TraceSink>>> {
+    let sample: u64 = args.get_parse("trace-sample", serve.trace_sample)?;
+    let slow_ms: u64 = args.get_parse("trace-slow-ms", serve.trace_slow_ms)?;
+    let Some(path) = args.get("trace-out") else {
+        return Ok(None);
+    };
+    let sink = TraceSink::to_file(
+        Path::new(path),
+        sample,
+        slow_ms.saturating_mul(1_000_000),
+    )?;
+    println!(
+        "tracing to {path} (sample every {sample} requests, \
+         slow-query threshold {slow_ms} ms; 0 = off)"
+    );
+    Ok(Some(sink))
 }
 
 /// Materialize the configured workload.
@@ -368,7 +410,12 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
         serve_cfg.max_batch,
         params.precision
     );
-    let server = Arc::new(SearchServer::start(factory, serve_cfg)?);
+    let trace = build_trace_sink(&cfg.serve, args)?;
+    let server = Arc::new(SearchServer::start_traced(
+        factory,
+        serve_cfg,
+        trace.clone(),
+    )?);
 
     if let Some(listen) = args.get("listen") {
         // TCP front door: serve remote clients until a SHUTDOWN frame
@@ -393,6 +440,9 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
             m.ops.per_search(),
             m.scan.fusion_factor()
         );
+        if let Some(t) = &trace {
+            println!("trace records emitted: {}", t.emitted());
+        }
         server.shutdown();
         return Ok(());
     }
@@ -496,6 +546,7 @@ fn cmd_serve_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
     };
     ccfg.router.fan_out = args.get_parse("fan-out", 0usize)?;
     ccfg.router.workers = args.get_parse("router-workers", 4usize)?.max(1);
+    ccfg.trace = build_trace_sink(&cfg.serve, args)?;
 
     let cluster = if let Some(dir) = args.get("plan-dir") {
         println!("loading cluster plan from {dir}");
@@ -529,6 +580,9 @@ fn cmd_serve_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
         cluster.n_shards(),
         m.fanout.full_fanouts
     );
+    if let Some(t) = &ccfg.trace {
+        println!("trace records emitted: {}", t.emitted());
+    }
     cluster.shutdown();
     Ok(())
 }
@@ -587,6 +641,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             fanout.get("full_fanouts").and_then(|v| v.as_u64()).unwrap_or(0)
         );
     }
+    // routing overhead: the gap between what the router's clients saw
+    // end-to-end and what the shards spent serving (scatter + gather +
+    // queueing in the routing tier)
+    if server_stats.get("role").and_then(|v| v.as_str()) == Some("router") {
+        let mean = |key: &str| {
+            server_stats
+                .get(key)
+                .and_then(|h| h.get("mean_ns"))
+                .and_then(|v| v.as_f64())
+        };
+        if let (Some(e2e), Some(shard)) = (mean("latency"), mean("shard_service")) {
+            println!(
+                "router overhead: end-to-end mean {:.1}us vs shard \
+                 service mean {:.1}us (delta {:.1}us)",
+                e2e / 1e3,
+                shard / 1e3,
+                (e2e - shard) / 1e3
+            );
+        }
+    }
     // compression visible from the wire: the server's scan footprint
     if let Some(index) = server_stats.get("index") {
         println!(
@@ -626,6 +700,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:4077").to_string();
+    let timeout = std::time::Duration::from_secs(
+        args.get_parse("connect-timeout-s", 10u64)?,
+    );
+    let mut client = NetClient::connect_retry(&addr, timeout)?;
+    let text = client.metrics_text()?;
+    print!("{text}");
+    if args.flag("check") {
+        obs::prom::validate(&text, &obs::REQUIRED_FAMILIES)
+            .map_err(amsearch::Error::Coordinator)?;
+        eprintln!(
+            "metrics check: exposition OK ({} lines, required families \
+             present)",
+            text.lines().count()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
     let manifest = Manifest::load(&dir)?;
@@ -647,7 +741,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["all", "help", "shutdown"]) {
+    let args = match Args::parse(raw, &["all", "help", "shutdown", "check"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -680,6 +774,7 @@ fn main() {
         "loadgen" => cmd_loadgen(&args),
         "shard-plan" => cmd_shard_plan(&cfg, &args),
         "serve-cluster" => cmd_serve_cluster(&cfg, &args),
+        "metrics" => cmd_metrics(&args),
         "artifacts" => cmd_artifacts(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

@@ -70,6 +70,11 @@ impl LatencyHistogram {
         self.total
     }
 
+    /// Sum of all recorded durations in ns (Prometheus `_sum` sample).
+    pub fn sum_ns(&self) -> f64 {
+        self.sum_ns
+    }
+
     /// Mean latency in ns.
     pub fn mean_ns(&self) -> f64 {
         if self.total == 0 {
@@ -161,6 +166,162 @@ impl LatencyHistogram {
     }
 }
 
+/// Default rolling-window span for [`WindowedHistogram`]: 10 one-second
+/// slots, so quantiles cover roughly the last ten seconds of traffic.
+const DEFAULT_SLOT_NS: u64 = 1_000_000_000;
+/// Default number of ring slots.
+const DEFAULT_SLOTS: usize = 10;
+
+/// A ring of [`LatencyHistogram`] slots giving quantiles over the last
+/// N seconds instead of since boot — the live-tail estimate a hedging
+/// policy (ROADMAP item 3) needs, and what `window` blocks in STATS /
+/// the Prometheus exposition report.
+///
+/// Time is divided into fixed epochs of `slot_ns`; epoch `e` writes to
+/// slot `e % slots.len()`, resetting the slot first if it still holds a
+/// stale epoch.  Each slot remembers which epoch it holds as
+/// `epoch + 1` (`0` = never written) so a genuine epoch 0 is not
+/// confused with an empty slot.  All mutating entry points take an
+/// explicit `now_ns` (`*_at` variants) so tests and proptests are
+/// deterministic; the plain variants read [`crate::util::clock`].
+#[derive(Debug, Clone)]
+pub struct WindowedHistogram {
+    slots: Vec<LatencyHistogram>,
+    /// `epoch + 1` per slot; `0` marks a slot that was never written.
+    epochs: Vec<u64>,
+    slot_ns: u64,
+}
+
+impl Default for WindowedHistogram {
+    fn default() -> Self {
+        Self::with_slots(DEFAULT_SLOT_NS, DEFAULT_SLOTS)
+    }
+}
+
+impl WindowedHistogram {
+    /// Window of `DEFAULT_SLOTS` slots covering roughly 10 s.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Window with explicit slot width and count (both clamped to ≥ 1).
+    pub fn with_slots(slot_ns: u64, n_slots: usize) -> Self {
+        let n = n_slots.max(1);
+        WindowedHistogram {
+            slots: (0..n).map(|_| LatencyHistogram::new()).collect(),
+            epochs: vec![0; n],
+            slot_ns: slot_ns.max(1),
+        }
+    }
+
+    /// Total span of the window in nanoseconds.
+    pub fn window_ns(&self) -> u64 {
+        self.slot_ns.saturating_mul(self.slots.len() as u64)
+    }
+
+    fn epoch_of(&self, now_ns: u64) -> u64 {
+        now_ns / self.slot_ns
+    }
+
+    /// Record a sample with an explicit clock reading (deterministic).
+    pub fn record_at(&mut self, ns: u64, now_ns: u64) {
+        let epoch = self.epoch_of(now_ns);
+        let idx = (epoch % self.slots.len() as u64) as usize;
+        if self.epochs[idx] != epoch + 1 {
+            self.slots[idx] = LatencyHistogram::new();
+            self.epochs[idx] = epoch + 1;
+        }
+        self.slots[idx].record_ns(ns);
+    }
+
+    /// Record a sample at the current process clock.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.record_at(ns, crate::util::clock::monotonic_ns());
+    }
+
+    /// Record a duration at the current process clock.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Oldest epoch (inclusive) still inside the window ending at
+    /// `now_ns`'s epoch.
+    fn live_floor(&self, now_ns: u64) -> u64 {
+        self.epoch_of(now_ns)
+            .saturating_sub(self.slots.len() as u64 - 1)
+    }
+
+    /// The merged histogram of all slots still inside the window at an
+    /// explicit clock reading.
+    pub fn windowed_at(&self, now_ns: u64) -> LatencyHistogram {
+        let floor = self.live_floor(now_ns);
+        let mut out = LatencyHistogram::new();
+        for (slot, &e) in self.slots.iter().zip(&self.epochs) {
+            if e > 0 && e - 1 >= floor {
+                out.merge(slot);
+            }
+        }
+        out
+    }
+
+    /// The merged histogram of the live window at the current process
+    /// clock — feed the result's `to_json`/`summary`/quantiles.
+    pub fn windowed(&self) -> LatencyHistogram {
+        self.windowed_at(crate::util::clock::monotonic_ns())
+    }
+
+    /// Merge another window into this one at an explicit clock reading.
+    /// Per slot index the newer epoch wins (equal epochs merge); slots
+    /// already outside the window are skipped.  With a shared clock this
+    /// makes merging associative and commutative: each index ends up
+    /// holding the merge of every input slot carrying the maximum epoch
+    /// for that index.  Mismatched shapes (different slot width or
+    /// count) are skipped rather than merged wrongly.
+    pub fn merge_at(&mut self, other: &WindowedHistogram, now_ns: u64) {
+        if other.slot_ns != self.slot_ns || other.slots.len() != self.slots.len() {
+            return; // refusing beats merging epochs that mean different times
+        }
+        let floor = self.live_floor(now_ns);
+        for i in 0..self.slots.len() {
+            let oe = other.epochs[i];
+            if oe == 0 || oe - 1 < floor {
+                continue;
+            }
+            let se = self.epochs[i];
+            if oe > se {
+                self.slots[i] = other.slots[i].clone();
+                self.epochs[i] = oe;
+            } else if oe == se {
+                self.slots[i].merge(&other.slots[i]);
+            }
+        }
+    }
+
+    /// Merge another window at the current process clock.
+    pub fn merge(&mut self, other: &WindowedHistogram) {
+        self.merge_at(other, crate::util::clock::monotonic_ns());
+    }
+
+    /// JSON view: the live window's statistics plus the window span, an
+    /// additive sibling of [`LatencyHistogram::to_json`].
+    pub fn to_json(&self) -> crate::util::Json {
+        self.to_json_at(crate::util::clock::monotonic_ns())
+    }
+
+    /// Deterministic variant of [`Self::to_json`].
+    pub fn to_json_at(&self, now_ns: u64) -> crate::util::Json {
+        use crate::util::Json;
+        let mut j = self.windowed_at(now_ns).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert(
+                "window_s".to_string(),
+                Json::Num(self.window_ns() as f64 / 1e9),
+            );
+        }
+        j
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +399,101 @@ mod tests {
         h.record_ns(u64::MAX / 2); // above MAX
         assert_eq!(h.count(), 2);
         assert!(h.quantile_ns(0.0) >= 100);
+    }
+
+    // --- WindowedHistogram ---
+
+    /// Clock reading in the middle of epoch `e` for a given slot width.
+    fn mid(slot_ns: u64, e: u64) -> u64 {
+        e * slot_ns + slot_ns / 2
+    }
+
+    #[test]
+    fn window_drops_old_epochs() {
+        let slot = 1_000u64;
+        let mut w = WindowedHistogram::with_slots(slot, 4);
+        w.record_at(10_000, mid(slot, 0));
+        w.record_at(20_000, mid(slot, 1));
+        assert_eq!(w.windowed_at(mid(slot, 1)).count(), 2);
+        // epoch 4: window covers epochs 1..=4, epoch 0 falls out
+        assert_eq!(w.windowed_at(mid(slot, 4)).count(), 1);
+        // epoch 5: everything has aged out
+        assert_eq!(w.windowed_at(mid(slot, 5)).count(), 0);
+    }
+
+    #[test]
+    fn stale_slot_resets_on_reuse() {
+        let slot = 1_000u64;
+        let mut w = WindowedHistogram::with_slots(slot, 2);
+        w.record_at(10_000, mid(slot, 0));
+        // epoch 2 reuses slot 0 and must not inherit epoch 0's sample
+        w.record_at(30_000, mid(slot, 2));
+        let h = w.windowed_at(mid(slot, 2));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_ns(), 30_000);
+    }
+
+    #[test]
+    fn genuine_epoch_zero_is_live() {
+        let slot = 1_000u64;
+        let mut w = WindowedHistogram::with_slots(slot, 4);
+        w.record_at(5_000, 0); // now_ns = 0 → epoch 0
+        assert_eq!(w.windowed_at(0).count(), 1);
+    }
+
+    #[test]
+    fn window_agrees_with_cumulative_when_covered() {
+        let slot = 1_000_000u64;
+        let mut w = WindowedHistogram::with_slots(slot, 8);
+        let mut c = LatencyHistogram::new();
+        for i in 1..=50u64 {
+            let now = mid(slot, i % 8); // stays inside the window
+            w.record_at(i * 777, now);
+            c.record_ns(i * 777);
+        }
+        let h = w.windowed_at(mid(slot, 7));
+        assert_eq!(h.count(), c.count());
+        assert_eq!(h.max_ns(), c.max_ns());
+        assert_eq!(h.quantile_ns(0.5), c.quantile_ns(0.5));
+        assert_eq!(h.quantile_ns(0.99), c.quantile_ns(0.99));
+        assert!((h.mean_ns() - c.mean_ns()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_takes_newer_epoch_and_merges_equal() {
+        let slot = 1_000u64;
+        let now = mid(slot, 3);
+        let mut a = WindowedHistogram::with_slots(slot, 4);
+        let mut b = WindowedHistogram::with_slots(slot, 4);
+        a.record_at(1_000, mid(slot, 3));
+        b.record_at(2_000, mid(slot, 3)); // equal epoch → merge
+        b.record_at(9_000, mid(slot, 2)); // only in b → adopt
+        a.merge_at(&b, now);
+        let h = a.windowed_at(now);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_ns(), 9_000);
+    }
+
+    #[test]
+    fn merge_skips_mismatched_shapes_and_stale_slots() {
+        let slot = 1_000u64;
+        let mut a = WindowedHistogram::with_slots(slot, 4);
+        let b = WindowedHistogram::with_slots(slot, 8);
+        a.merge_at(&b, mid(slot, 0)); // shape mismatch: silent no-op
+        let mut c = WindowedHistogram::with_slots(slot, 4);
+        c.record_at(1_000, mid(slot, 0));
+        a.merge_at(&c, mid(slot, 10)); // c's sample is outside the window
+        assert_eq!(a.windowed_at(mid(slot, 10)).count(), 0);
+    }
+
+    #[test]
+    fn windowed_json_has_window_span() {
+        let slot = 1_000_000_000u64;
+        let mut w = WindowedHistogram::with_slots(slot, 10);
+        w.record_at(5_000, mid(slot, 0));
+        let j = w.to_json_at(mid(slot, 0));
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("window_s").unwrap().as_f64(), Some(10.0));
+        assert!(j.get("p99_ns").is_some());
     }
 }

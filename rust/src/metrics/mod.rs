@@ -7,6 +7,6 @@ pub mod ops;
 pub mod recall;
 
 pub use fanout::{FanoutStats, PruneRecall};
-pub use latency::LatencyHistogram;
+pub use latency::{LatencyHistogram, WindowedHistogram};
 pub use ops::{BatchScanStats, CostModel, OpsCounter};
 pub use recall::{Recall, RecallAtK};

@@ -205,11 +205,25 @@ impl NetClient {
     /// Send a search without waiting for the result; returns the
     /// request id to pass to [`Self::wait`].
     pub fn submit(&mut self, vector: &[f32], top_p: usize, top_k: usize) -> Result<u64> {
+        self.submit_traced(vector, top_p, top_k, 0)
+    }
+
+    /// [`Self::submit`] carrying a trace id in the SEARCH frame
+    /// (`0` = untraced, encodes as wire v1 — how a cluster router
+    /// propagates its trace id to shards so their span records stitch).
+    pub fn submit_traced(
+        &mut self,
+        vector: &[f32],
+        top_p: usize,
+        top_k: usize,
+        trace_id: u64,
+    ) -> Result<u64> {
         let id = self.fresh_id();
         self.send(&Frame::Search(WireRequest {
             id,
             top_p: top_p as u32,
             top_k: top_k as u32,
+            trace_id,
             vector: vector.to_vec(),
         }))?;
         self.outstanding += 1;
@@ -330,6 +344,22 @@ impl NetClient {
             ));
         };
         Json::parse(&json)
+    }
+
+    /// Fetch the server's Prometheus text exposition (the METRICS admin
+    /// op) — same snapshot discipline as [`Self::stats`], different
+    /// rendering.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let id = self.fresh_id();
+        let reply = self.admin(Frame::Metrics { id }, |f| {
+            matches!(f, Frame::MetricsReply { .. })
+        })?;
+        let Frame::MetricsReply { text, .. } = reply else {
+            return Err(Error::Coordinator(
+                "net client: metrics reply of unexpected type".into(),
+            ));
+        };
+        Ok(text)
     }
 
     /// Ask the server to shut down gracefully; returns once the server

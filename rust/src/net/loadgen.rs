@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{LatencyHistogram, WindowedHistogram};
 use crate::util::{concurrent_map, Json};
 
 use super::client::NetClient;
@@ -60,6 +60,10 @@ pub struct LoadReport {
     /// Per-request latency (submit → response arrival), merged across
     /// connections.
     pub latency: LatencyHistogram,
+    /// Rolling-window view of the same samples: the tail over the last
+    /// ~10 s of the run rather than the whole run (long runs hide
+    /// late-run regressions in the cumulative view).
+    pub window: WindowedHistogram,
     /// Echo of the run shape.
     pub connections: usize,
     /// Echo of the run shape.
@@ -87,6 +91,11 @@ impl LoadReport {
         o.insert("elapsed_s".to_string(), Json::Num(self.elapsed_s));
         o.insert("qps".to_string(), Json::Num(self.qps()));
         o.insert("latency".to_string(), self.latency.to_json());
+        o.insert("window".to_string(), self.window.to_json());
+        o.insert(
+            "window_p99_ns".to_string(),
+            Json::Num(self.window.windowed().quantile_ns(0.99) as f64),
+        );
         Json::Obj(o)
     }
 
@@ -103,6 +112,13 @@ impl LoadReport {
             self.qps()
         );
         println!("latency: {}", self.latency.summary());
+        let w = self.window.windowed();
+        println!(
+            "windowed (last {:.0}s): {} samples, p99 {} ns",
+            self.window.window_ns() as f64 / 1e9,
+            w.count(),
+            w.quantile_ns(0.99)
+        );
     }
 }
 
@@ -119,17 +135,19 @@ pub fn run(addr: &str, queries: &[Vec<f32>], cfg: &LoadGenConfig) -> Result<Load
     let base = cfg.requests / cfg.connections;
     let extra = cfg.requests % cfg.connections;
     let started = Instant::now();
-    let results: Vec<Result<(LatencyHistogram, u64)>> =
+    let results: Vec<Result<(LatencyHistogram, WindowedHistogram, u64)>> =
         concurrent_map(cfg.connections, cfg.connections, |ci| {
             let n = base + usize::from(ci < extra);
             run_connection(addr, queries, cfg, ci, n)
         });
     let elapsed_s = started.elapsed().as_secs_f64();
     let mut latency = LatencyHistogram::new();
+    let mut window = WindowedHistogram::new();
     let mut errors = 0u64;
     for r in results {
-        let (h, e) = r?; // a connection-level failure fails the run
+        let (h, w, e) = r?; // a connection-level failure fails the run
         latency.merge(&h);
+        window.merge(&w);
         errors += e;
     }
     Ok(LoadReport {
@@ -137,6 +155,7 @@ pub fn run(addr: &str, queries: &[Vec<f32>], cfg: &LoadGenConfig) -> Result<Load
         errors,
         elapsed_s,
         latency,
+        window,
         connections: cfg.connections,
         depth: cfg.depth,
     })
@@ -150,11 +169,12 @@ fn run_connection(
     cfg: &LoadGenConfig,
     ci: usize,
     n: usize,
-) -> Result<(LatencyHistogram, u64)> {
+) -> Result<(LatencyHistogram, WindowedHistogram, u64)> {
     let mut hist = LatencyHistogram::new();
+    let mut window = WindowedHistogram::new();
     let mut errors = 0u64;
     if n == 0 {
-        return Ok((hist, errors));
+        return Ok((hist, window, errors));
     }
     let mut client = NetClient::connect_retry(addr, cfg.connect_timeout)?;
     client.set_timeout(Some(Duration::from_secs(60)))?;
@@ -171,12 +191,14 @@ fn run_connection(
         }
         let (id, result) = client.wait_any_detailed()?;
         if let Some(t0) = starts.remove(&id) {
-            hist.record(t0.elapsed());
+            let ns = t0.elapsed().as_nanos() as u64;
+            hist.record_ns(ns);
+            window.record_ns(ns);
         }
         if result.is_err() {
             errors += 1;
         }
         done += 1;
     }
-    Ok((hist, errors))
+    Ok((hist, window, errors))
 }

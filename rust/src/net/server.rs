@@ -44,6 +44,7 @@ use std::time::Duration;
 
 use crate::coordinator::{SearchResponse, SearchServer};
 use crate::error::{Error, Result};
+use crate::obs::{prom, Registry};
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 use crate::util::Json;
 
@@ -62,13 +63,16 @@ pub trait Serveable: Send + Sync {
     /// Submit a k-NN query without blocking for its result; exactly one
     /// response (success *or* explicit error) must be delivered on
     /// `resp` with `id` echoed.  Same contract as
-    /// [`SearchServer::submit`].
+    /// [`SearchServer::submit`].  `trace_id` = 0 means untraced; a
+    /// non-zero id arrived on the wire (router → shard propagation) and
+    /// must be honoured so the tiers' span records stitch.
     fn submit(
         &self,
         vector: Vec<f32>,
         top_p: usize,
         top_k: usize,
         id: u64,
+        trace_id: u64,
         resp: SyncSender<SearchResponse>,
     ) -> Result<()>;
 
@@ -76,6 +80,11 @@ pub trait Serveable: Send + Sync {
     /// JSON object carrying at least `dim` and `n_vectors` (load
     /// generators discover the query shape from it).
     fn stats_json(&self) -> Json;
+
+    /// Prometheus-style registry — the payload of the METRICS admin op.
+    /// Must derive from the same snapshot as [`Self::stats_json`] so
+    /// the two export surfaces never disagree.
+    fn metrics_registry(&self) -> Registry;
 }
 
 impl Serveable for SearchServer {
@@ -85,13 +94,18 @@ impl Serveable for SearchServer {
         top_p: usize,
         top_k: usize,
         id: u64,
+        trace_id: u64,
         resp: SyncSender<SearchResponse>,
     ) -> Result<()> {
-        SearchServer::submit(self, vector, top_p, top_k, id, resp)
+        SearchServer::submit(self, vector, top_p, top_k, id, trace_id, resp)
     }
 
     fn stats_json(&self) -> Json {
         SearchServer::stats_json(self)
+    }
+
+    fn metrics_registry(&self) -> Registry {
+        SearchServer::metrics_registry(self)
     }
 }
 
@@ -513,6 +527,27 @@ fn dispatch(
             out.send(&Frame::StatsReply { id, json: stats.to_string() });
             true
         }
+        Frame::Metrics { id } => {
+            // same discipline as STATS: one backend snapshot, plus the
+            // net layer's own transport families, rendered as
+            // Prometheus text exposition
+            let mut reg = shared.backend.metrics_registry();
+            reg.counter(
+                prom::M_NET_REFUSED,
+                &[],
+                shared.refused.load(Ordering::Relaxed),
+            );
+            reg.gauge(
+                prom::M_NET_INFLIGHT,
+                &[],
+                shared.inflight.load(Ordering::Relaxed) as f64,
+            );
+            if let Some(role) = shared.cfg.role {
+                reg.relabel("role", role);
+            }
+            out.send(&Frame::MetricsReply { id, text: reg.render() });
+            true
+        }
         Frame::Shutdown { id } => {
             out.send(&Frame::ShutdownOk { id });
             shared.begin_shutdown();
@@ -570,6 +605,7 @@ fn dispatch_search(
         req.top_p as usize,
         req.top_k as usize,
         req.id,
+        req.trace_id,
         resp_tx.clone(),
     );
     if let Err(e) = result {
@@ -741,6 +777,7 @@ mod tests {
             _top_p: usize,
             _top_k: usize,
             _id: u64,
+            _trace_id: u64,
             _resp: SyncSender<SearchResponse>,
         ) -> Result<()> {
             Err(Error::Coordinator("server is draining".into()))
@@ -751,6 +788,22 @@ mod tests {
             o.insert("dim".to_string(), Json::Num(2.0));
             o.insert("n_vectors".to_string(), Json::Num(0.0));
             Json::Obj(o)
+        }
+
+        fn metrics_registry(&self) -> Registry {
+            let mut reg = Registry::new();
+            reg.counter(prom::M_REQUESTS, &[], 0);
+            reg.histogram(
+                prom::M_LATENCY,
+                &[],
+                &crate::metrics::LatencyHistogram::new(),
+            );
+            reg.histogram(
+                prom::M_WINDOW_LATENCY,
+                &[],
+                &crate::metrics::LatencyHistogram::new(),
+            );
+            reg
         }
     }
 
@@ -769,6 +822,30 @@ mod tests {
         let e = resp.expect_err("refused submit must produce an ERROR frame");
         assert_eq!(e.id, id);
         assert_eq!(e.code, ERR_SHUTTING_DOWN);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_frame_returns_valid_exposition_with_net_families() {
+        let server = NetServer::bind(
+            Arc::new(RefusingBackend),
+            "127.0.0.1:0",
+            NetConfig { role: Some("shard"), ..Default::default() },
+        )
+        .unwrap();
+        let mut client =
+            crate::net::NetClient::connect(server.local_addr()).unwrap();
+        let text = client.metrics_text().unwrap();
+        prom::validate(&text, &crate::obs::REQUIRED_FAMILIES).unwrap();
+        // the net layer's own families ride along ...
+        assert!(text.contains(prom::M_NET_REFUSED), "{text}");
+        assert!(text.contains(prom::M_NET_INFLIGHT), "{text}");
+        // ... and the configured role is stamped onto every sample
+        assert!(
+            text.contains("amsearch_requests_total{role=\"shard\"}"),
+            "{text}"
+        );
         drop(client);
         server.shutdown();
     }

@@ -7,7 +7,7 @@
 //!
 //! ```text
 //! magic    4B   "AMNP"
-//! version  u8   (currently 1)
+//! version  u8   1, or 2 for a SEARCH frame carrying a trace id
 //! type     u8   frame type (see below)
 //! reserved u16  0
 //! id       u64  request id, echoed verbatim in the matching response
@@ -18,18 +18,27 @@
 //! Frame types and payloads:
 //!
 //! ```text
-//! 0x01 SEARCH       top_p u32, top_k u32, dim u32, dim * f32
-//! 0x02 RESULT       n u32, n * (id u32, distance f32),
-//!                   n_polled u32, n_polled * u32,
-//!                   candidates u64, ops u64, service_ns u64
-//! 0x03 ERROR        code u16, utf-8 message (rest of payload)
-//! 0x04 PING         (empty)
-//! 0x05 PONG         (empty)
-//! 0x06 STATS        (empty)
-//! 0x07 STATS_REPLY  utf-8 JSON document (server metrics snapshot)
-//! 0x08 SHUTDOWN     (empty)
-//! 0x09 SHUTDOWN_OK  (empty)
+//! 0x01 SEARCH        top_p u32, top_k u32, dim u32, dim * f32
+//!                    [, trace_id u64 — version 2 only]
+//! 0x02 RESULT        n u32, n * (id u32, distance f32),
+//!                    n_polled u32, n_polled * u32,
+//!                    candidates u64, ops u64, service_ns u64
+//! 0x03 ERROR         code u16, utf-8 message (rest of payload)
+//! 0x04 PING          (empty)
+//! 0x05 PONG          (empty)
+//! 0x06 STATS         (empty)
+//! 0x07 STATS_REPLY   utf-8 JSON document (server metrics snapshot)
+//! 0x08 SHUTDOWN      (empty)
+//! 0x09 SHUTDOWN_OK   (empty)
+//! 0x0A METRICS       (empty)
+//! 0x0B METRICS_REPLY utf-8 Prometheus text exposition
 //! ```
+//!
+//! Version 2 exists only to carry the optional 8-byte trace id on
+//! SEARCH: an encoder emits version 1 whenever the trace id is 0 (the
+//! overwhelmingly common case), so untraced traffic is byte-identical
+//! to what v1-only peers produce and accept.  A decoder accepts both
+//! versions and tells the two SEARCH layouts apart by payload length.
 //!
 //! Corruption handling is two-level, mirroring how a TCP stream can
 //! fail: header-level damage (bad magic/version, oversized length
@@ -55,8 +64,13 @@ use crate::util::json::Json;
 
 /// Frame magic ("AMsearch Net Protocol").
 pub const MAGIC: [u8; 4] = *b"AMNP";
-/// Protocol version.
+/// Protocol version emitted for every frame without a trace id.
 pub const VERSION: u8 = 1;
+/// Protocol version emitted for a SEARCH frame carrying a trace id
+/// (its payload ends with an extra `trace_id u64`).  Decoders accept
+/// both versions; encoders only use this one when `trace_id != 0`, so
+/// untraced streams stay v1-compatible byte for byte.
+pub const TRACED_VERSION: u8 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 20;
 /// Maximum payload size (16 MiB) — larger length prefixes are treated
@@ -85,6 +99,10 @@ pub const FT_STATS_REPLY: u8 = 0x07;
 pub const FT_SHUTDOWN: u8 = 0x08;
 /// Frame type: shutdown acknowledgement.
 pub const FT_SHUTDOWN_OK: u8 = 0x09;
+/// Frame type: Prometheus metrics request.
+pub const FT_METRICS: u8 = 0x0A;
+/// Frame type: Prometheus metrics reply (text exposition payload).
+pub const FT_METRICS_REPLY: u8 = 0x0B;
 
 /// Error code: malformed or zero-length frame payload.
 pub const ERR_BAD_FRAME: u16 = 1;
@@ -115,6 +133,9 @@ pub struct WireRequest {
     pub top_k: u32,
     /// Query vector.
     pub vector: Vec<f32>,
+    /// Distributed trace id (`0` = untraced; encodes as wire v1).  Set
+    /// by a router so shard-side span records stitch to its own.
+    pub trace_id: u64,
 }
 
 /// A search result as it travels on the wire (the network image of
@@ -190,6 +211,18 @@ pub enum Frame {
         /// Echo of the request id.
         id: u64,
     },
+    /// Prometheus metrics request.
+    Metrics {
+        /// Request id.
+        id: u64,
+    },
+    /// Prometheus metrics reply.
+    MetricsReply {
+        /// Echo of the request id.
+        id: u64,
+        /// Text exposition rendered by [`crate::obs::Registry`].
+        text: String,
+    },
 }
 
 impl Frame {
@@ -204,7 +237,9 @@ impl Frame {
             | Frame::Stats { id }
             | Frame::StatsReply { id, .. }
             | Frame::Shutdown { id }
-            | Frame::ShutdownOk { id } => *id,
+            | Frame::ShutdownOk { id }
+            | Frame::Metrics { id }
+            | Frame::MetricsReply { id, .. } => *id,
         }
     }
 
@@ -219,6 +254,8 @@ impl Frame {
             Frame::StatsReply { .. } => FT_STATS_REPLY,
             Frame::Shutdown { .. } => FT_SHUTDOWN,
             Frame::ShutdownOk { .. } => FT_SHUTDOWN_OK,
+            Frame::Metrics { .. } => FT_METRICS,
+            Frame::MetricsReply { .. } => FT_METRICS_REPLY,
         }
     }
 
@@ -232,6 +269,9 @@ impl Frame {
                 payload.extend_from_slice(&(r.vector.len() as u32).to_le_bytes());
                 for &x in &r.vector {
                     payload.extend_from_slice(&x.to_le_bytes());
+                }
+                if r.trace_id != 0 {
+                    payload.extend_from_slice(&r.trace_id.to_le_bytes());
                 }
             }
             Frame::Result(r) => {
@@ -253,15 +293,23 @@ impl Frame {
                 payload.extend_from_slice(e.message.as_bytes());
             }
             Frame::StatsReply { json, .. } => payload.extend_from_slice(json.as_bytes()),
+            Frame::MetricsReply { text, .. } => payload.extend_from_slice(text.as_bytes()),
             Frame::Ping { .. }
             | Frame::Pong { .. }
             | Frame::Stats { .. }
             | Frame::Shutdown { .. }
-            | Frame::ShutdownOk { .. } => {}
+            | Frame::ShutdownOk { .. }
+            | Frame::Metrics { .. } => {}
         }
+        // only a trace-carrying SEARCH needs the v2 layout; everything
+        // else stays v1 so old peers keep decoding untraced streams
+        let version = match self {
+            Frame::Search(r) if r.trace_id != 0 => TRACED_VERSION,
+            _ => VERSION,
+        };
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
         out.extend_from_slice(&MAGIC);
-        out.push(VERSION);
+        out.push(version);
         out.push(self.ftype());
         out.extend_from_slice(&0u16.to_le_bytes());
         out.extend_from_slice(&self.id().to_le_bytes());
@@ -291,7 +339,7 @@ fn check_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u64, usize)> {
             h[0], h[1], h[2], h[3]
         )));
     }
-    if h[4] != VERSION {
+    if h[4] != VERSION && h[4] != TRACED_VERSION {
         return Err(Error::Data(format!("wire: unsupported version {}", h[4])));
     }
     let ftype = h[5];
@@ -448,15 +496,25 @@ pub fn parse(raw: &RawFrame) -> std::result::Result<Frame, WireError> {
             }
             // declared count must match the bytes actually present
             // BEFORE any allocation is sized from it: an untrusted
-            // dim = u32::MAX in a tiny frame must not reserve gigabytes
-            if dim as u64 * 4 != c.remaining() as u64 {
-                return Err(bad(id, "search: dim disagrees with payload length"));
-            }
+            // dim = u32::MAX in a tiny frame must not reserve gigabytes.
+            // The two admissible layouts (v1: floats only, v2: floats
+            // then trace_id u64) are told apart by exact length.
+            let floats = dim as u64 * 4;
+            let traced = match c.remaining() as u64 {
+                r if r == floats => false,
+                r if r == floats + 8 => true,
+                _ => return Err(bad(id, "search: dim disagrees with payload length")),
+            };
             let mut vector = Vec::with_capacity(dim as usize);
             for _ in 0..dim {
                 vector.push(c.f32().ok_or_else(|| bad(id, "search: truncated vector"))?);
             }
-            Ok(Frame::Search(WireRequest { id, top_p, top_k, vector }))
+            let trace_id = if traced {
+                c.u64().ok_or_else(|| bad(id, "search: truncated trace id"))?
+            } else {
+                0
+            };
+            Ok(Frame::Search(WireRequest { id, top_p, top_k, vector, trace_id }))
         }
         FT_RESULT => {
             let n = c.u32().ok_or_else(|| bad(id, "result: truncated count"))?;
@@ -507,7 +565,12 @@ pub fn parse(raw: &RawFrame) -> std::result::Result<Frame, WireError> {
                 .map_err(|_| bad(id, "stats reply is not utf-8"))?;
             Ok(Frame::StatsReply { id, json })
         }
-        FT_PING | FT_PONG | FT_STATS | FT_SHUTDOWN | FT_SHUTDOWN_OK => {
+        FT_METRICS_REPLY => {
+            let text = String::from_utf8(raw.payload.clone())
+                .map_err(|_| bad(id, "metrics reply is not utf-8"))?;
+            Ok(Frame::MetricsReply { id, text })
+        }
+        FT_PING | FT_PONG | FT_STATS | FT_SHUTDOWN | FT_SHUTDOWN_OK | FT_METRICS => {
             if !raw.payload.is_empty() {
                 return Err(bad(id, "unexpected payload on admin frame"));
             }
@@ -516,6 +579,7 @@ pub fn parse(raw: &RawFrame) -> std::result::Result<Frame, WireError> {
                 FT_PONG => Frame::Pong { id },
                 FT_STATS => Frame::Stats { id },
                 FT_SHUTDOWN => Frame::Shutdown { id },
+                FT_METRICS => Frame::Metrics { id },
                 _ => Frame::ShutdownOk { id },
             })
         }
@@ -547,6 +611,8 @@ impl Frame {
             Frame::StatsReply { .. } => "stats_reply",
             Frame::Shutdown { .. } => "shutdown",
             Frame::ShutdownOk { .. } => "shutdown_ok",
+            Frame::Metrics { .. } => "metrics",
+            Frame::MetricsReply { .. } => "metrics_reply",
         }
     }
 
@@ -563,6 +629,11 @@ impl Frame {
                     "vector".to_string(),
                     Json::Arr(r.vector.iter().map(|&x| jnum(x as f64)).collect()),
                 );
+                // mirrors the binary encoding: the field only exists
+                // when the request is traced
+                if r.trace_id != 0 {
+                    m.insert("trace_id".to_string(), jnum(r.trace_id as f64));
+                }
             }
             Frame::Result(r) => {
                 m.insert(
@@ -598,6 +669,10 @@ impl Frame {
                 // embed the stats document itself, not a quoted string
                 let v = Json::parse(json).unwrap_or_else(|_| jstr(json));
                 m.insert("stats".to_string(), v);
+            }
+            Frame::MetricsReply { text, .. } => {
+                // the exposition is plain text, so it stays a string
+                m.insert("text".to_string(), jstr(text));
             }
             _ => {}
         }
@@ -650,7 +725,9 @@ impl Frame {
                         message: "empty query vector (dim = 0)".into(),
                     });
                 }
-                Ok(Frame::Search(WireRequest { id, top_p, top_k, vector }))
+                let trace_id =
+                    v.get("trace_id").and_then(|x| x.as_u64()).unwrap_or(0);
+                Ok(Frame::Search(WireRequest { id, top_p, top_k, vector, trace_id }))
             }
             "result" => {
                 let mut neighbors = Vec::new();
@@ -707,6 +784,15 @@ impl Frame {
             }),
             "shutdown" => Ok(Frame::Shutdown { id }),
             "shutdown_ok" => Ok(Frame::ShutdownOk { id }),
+            "metrics" => Ok(Frame::Metrics { id }),
+            "metrics_reply" => Ok(Frame::MetricsReply {
+                id,
+                text: v
+                    .get("text")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            }),
             other => Err(bad(id, format!("json: unknown op '{other}'"))),
         }
     }
@@ -760,6 +846,14 @@ mod tests {
                 top_p: 4,
                 top_k: 10,
                 vector: vec![0.5, -1.25, 3.75],
+                trace_id: 0,
+            }),
+            Frame::Search(WireRequest {
+                id: 12,
+                top_p: 4,
+                top_k: 10,
+                vector: vec![0.5, -1.25],
+                trace_id: 0xDEAD_BEEF,
             }),
             sample_result(),
             Frame::Result(WireResponse {
@@ -781,6 +875,11 @@ mod tests {
             Frame::StatsReply { id: 6, json: r#"{"requests":10}"#.into() },
             Frame::Shutdown { id: 7 },
             Frame::ShutdownOk { id: 8 },
+            Frame::Metrics { id: 11 },
+            Frame::MetricsReply {
+                id: 12,
+                text: "# TYPE amsearch_requests_total counter\n".into(),
+            },
         ];
         for f in frames {
             assert_eq!(roundtrip(&f), f);
@@ -796,6 +895,7 @@ mod tests {
             top_p: 0,
             top_k: 0,
             vector: vec![f32::MIN_POSITIVE, 1.0e-40, -0.1, f32::MAX],
+            trace_id: 0,
         });
         let Frame::Search(r) = roundtrip(&f) else { panic!("wrong type") };
         let Frame::Search(orig) = f else { unreachable!() };
@@ -844,7 +944,13 @@ mod tests {
     #[test]
     fn frame_buffer_reassembles_byte_at_a_time() {
         let frames = [
-            Frame::Search(WireRequest { id: 1, top_p: 2, top_k: 3, vector: vec![1.0; 7] }),
+            Frame::Search(WireRequest {
+                id: 1,
+                top_p: 2,
+                top_k: 3,
+                vector: vec![1.0; 7],
+                trace_id: 0,
+            }),
             sample_result(),
             Frame::Ping { id: 11 },
         ];
@@ -879,6 +985,7 @@ mod tests {
             top_p: 1,
             top_k: MAX_WIRE_TOP_K + 1,
             vector: vec![0.0; 4],
+            trace_id: 0,
         });
         let mut cur = std::io::Cursor::new(f.encode());
         let raw = read_raw(&mut cur).unwrap();
@@ -889,7 +996,13 @@ mod tests {
 
     #[test]
     fn zero_dim_search_has_stable_code() {
-        let f = Frame::Search(WireRequest { id: 6, top_p: 1, top_k: 1, vector: vec![] });
+        let f = Frame::Search(WireRequest {
+            id: 6,
+            top_p: 1,
+            top_k: 1,
+            vector: vec![],
+            trace_id: 0,
+        });
         let mut cur = std::io::Cursor::new(f.encode());
         let raw = read_raw(&mut cur).unwrap();
         let e = parse(&raw).unwrap_err();
@@ -904,6 +1017,7 @@ mod tests {
             top_p: 1,
             top_k: 1,
             vector: vec![0.0; 4],
+            trace_id: 0,
         });
         let mut bytes = good.encode();
         // payload starts at HEADER_LEN; dim field is at offset 8 in payload
@@ -947,8 +1061,18 @@ mod tests {
                 top_p: 2,
                 top_k: 3,
                 vector: vec![0.5, -1.5],
+                trace_id: 0,
+            }),
+            Frame::Search(WireRequest {
+                id: 14,
+                top_p: 2,
+                top_k: 3,
+                vector: vec![0.5],
+                trace_id: 77,
             }),
             sample_result(),
+            Frame::Metrics { id: 12 },
+            Frame::MetricsReply { id: 13, text: "amsearch_net_inflight 0\n".into() },
             Frame::Error(WireError { id: 2, code: ERR_BAD_K, message: "too big".into() }),
             Frame::Ping { id: 3 },
             Frame::Pong { id: 4 },
@@ -989,5 +1113,93 @@ mod tests {
         assert_eq!(ERR_INTERNAL, 5);
         assert_eq!(ERR_OVERLOADED, 6);
         assert_eq!(VERSION, 1, "wire version bumps must be deliberate");
+        // v2 added deliberately for the SEARCH trace-id field; untraced
+        // frames still encode (and must keep encoding) as v1
+        assert_eq!(TRACED_VERSION, 2, "wire version bumps must be deliberate");
+    }
+
+    #[test]
+    fn traced_search_is_v2_untraced_stays_v1() {
+        let untraced = Frame::Search(WireRequest {
+            id: 1,
+            top_p: 2,
+            top_k: 3,
+            vector: vec![1.0, 2.0],
+            trace_id: 0,
+        });
+        let bytes = untraced.encode();
+        assert_eq!(bytes[4], VERSION, "untraced search must stay v1 for old peers");
+
+        let traced = Frame::Search(WireRequest {
+            id: 1,
+            top_p: 2,
+            top_k: 3,
+            vector: vec![1.0, 2.0],
+            trace_id: u64::MAX,
+        });
+        let bytes = traced.encode();
+        assert_eq!(bytes[4], TRACED_VERSION);
+        // payload is exactly 8 bytes longer than the untraced layout
+        assert_eq!(bytes.len(), untraced.encode().len() + 8);
+        let Frame::Search(r) = roundtrip(&traced) else { panic!("wrong type") };
+        assert_eq!(r.trace_id, u64::MAX);
+        assert_eq!(r.vector, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn search_with_bad_trailing_length_rejected() {
+        // floats + 4 trailing bytes is neither layout: reject, and
+        // never size an allocation from the mismatch
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes()); // top_p
+        payload.extend_from_slice(&1u32.to_le_bytes()); // top_k
+        payload.extend_from_slice(&2u32.to_le_bytes()); // dim
+        payload.extend_from_slice(&1f32.to_le_bytes());
+        payload.extend_from_slice(&2f32.to_le_bytes());
+        payload.extend_from_slice(&[0u8; 4]); // half a trace id
+        let raw = RawFrame { ftype: FT_SEARCH, id: 3, payload };
+        assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
+    }
+
+    #[test]
+    fn versions_above_traced_stay_fatal() {
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        bytes[4] = TRACED_VERSION + 1;
+        let err = read_raw(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v1_peer_bytes_still_parse() {
+        // a hand-built v1 SEARCH frame (no trace id), as an old client
+        // would emit it, must decode to trace_id = 0
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&2u32.to_le_bytes()); // top_p
+        payload.extend_from_slice(&3u32.to_le_bytes()); // top_k
+        payload.extend_from_slice(&1u32.to_le_bytes()); // dim
+        payload.extend_from_slice(&0.5f32.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(1); // literal v1
+        bytes.push(FT_SEARCH);
+        bytes.extend_from_slice(&0u16.to_le_bytes());
+        bytes.extend_from_slice(&8u64.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        let raw = read_raw(&mut std::io::Cursor::new(bytes)).unwrap();
+        let Frame::Search(r) = parse(&raw).unwrap() else { panic!("wrong type") };
+        assert_eq!(r.trace_id, 0);
+        assert_eq!(r.id, 8);
+        assert_eq!(r.vector, vec![0.5]);
+    }
+
+    #[test]
+    fn metrics_frames_mirror_stats_behaviour() {
+        // payload on the request side is an error, like other admin ops
+        let raw = RawFrame { ftype: FT_METRICS, id: 4, payload: vec![1] };
+        assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
+        // reply must be utf-8
+        let raw = RawFrame { ftype: FT_METRICS_REPLY, id: 5, payload: vec![0xFF, 0xFE] };
+        assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
     }
 }

@@ -1,0 +1,26 @@
+//! Observability: per-request tracing and a unified metrics export
+//! surface for the serving stack.
+//!
+//! Two halves, both zero-dependency:
+//!
+//! * [`trace`] — per-request spans.  Each serving tier stamps stage
+//!   durations (queue wait, batch formation, score, select, scan,
+//!   response write; scatter/gather in the router) onto a
+//!   [`trace::TraceRecord`] and emits it as one JSON line through a
+//!   shared [`trace::TraceSink`].  The trace id travels to shards
+//!   inside the SEARCH frame (wire v2), so a router-side trace and its
+//!   shard-side spans stitch into one tree by id.  The untraced path
+//!   allocates nothing: a request whose trace id is 0 never builds a
+//!   record.
+//! * [`prom`] — a [`prom::Registry`] of counters, gauges, and
+//!   histogram summaries rendered in Prometheus text exposition
+//!   format.  `SearchServer`, `ClusterRouter`, and `NetServer` all
+//!   feed the same registry from the same one-lock metrics snapshot
+//!   that backs the STATS JSON, so the two export surfaces cannot
+//!   disagree.
+
+pub mod prom;
+pub mod trace;
+
+pub use prom::{Registry, REQUIRED_FAMILIES};
+pub use trace::{stitch, Trace, TraceRecord, TraceSink};

@@ -1,0 +1,431 @@
+//! Prometheus text-exposition rendering from a single metrics registry.
+//!
+//! Every serving tier converts its one-lock metrics snapshot into a
+//! [`Registry`] (counters, gauges, and histogram summaries), the net
+//! front door appends its own transport gauges and a `role` label, and
+//! [`Registry::render`] produces the `METRICS` frame payload.  Because
+//! the registry and the STATS JSON are both derived from the same
+//! snapshot, the two export surfaces cannot disagree.
+//!
+//! Metric families are pinned by name below (`M_*`).  amlint's drift
+//! rule holds these constants, the README metric table, and the
+//! exposition output together — renaming a family without updating the
+//! docs is a lint failure, like renumbering an `ERR_*` code.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::metrics::LatencyHistogram;
+
+/// Requests accepted (counter).
+pub const M_REQUESTS: &str = "amsearch_requests_total";
+/// Requests that failed (counter; router tier).
+pub const M_ERRORS: &str = "amsearch_errors_total";
+/// Batches executed (counter; coordinator tier).
+pub const M_BATCHES: &str = "amsearch_batches_total";
+/// Elementary operations by `stage` label (counter; coordinator tier).
+pub const M_OPS: &str = "amsearch_ops_total";
+/// End-to-end request latency since boot (summary).
+pub const M_LATENCY: &str = "amsearch_latency_ns";
+/// In-engine service time since boot (summary; coordinator tier).
+pub const M_SERVICE: &str = "amsearch_service_ns";
+/// End-to-end request latency over the rolling window (summary).
+pub const M_WINDOW_LATENCY: &str = "amsearch_window_latency_ns";
+/// Per-shard service time since boot, `shard` label (summary; router).
+pub const M_SHARD_SERVICE: &str = "amsearch_shard_service_ns";
+/// Per-shard service time over the rolling window, `shard` label
+/// (summary; router).
+pub const M_SHARD_WINDOW: &str = "amsearch_shard_window_service_ns";
+/// Connections refused with `ERR_OVERLOADED` (counter; net layer).
+pub const M_NET_REFUSED: &str = "amsearch_net_refused_connections_total";
+/// Searches currently pipelined across all connections (gauge; net
+/// layer).
+pub const M_NET_INFLIGHT: &str = "amsearch_net_inflight";
+
+/// Families every tier's exposition must contain — what the CLI's
+/// `metrics --check` and the CI smoke scrape assert.
+pub const REQUIRED_FAMILIES: [&str; 3] = [M_REQUESTS, M_LATENCY, M_WINDOW_LATENCY];
+
+/// The quantiles a histogram family exports (matches the STATS JSON's
+/// `p50_ns`/`p90_ns`/`p99_ns`, plus `quantile="1"` for the exact max).
+const QUANTILES: [(f64, &str); 4] =
+    [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (1.0, "1")];
+
+#[derive(Debug, Clone)]
+struct Sample {
+    /// Family-name suffix (`""`, `"_sum"`, `"_count"`).
+    suffix: &'static str,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Family {
+    /// `counter` | `gauge` | `summary` — the kind first registered for
+    /// the name wins.
+    kind: &'static str,
+    samples: Vec<Sample>,
+}
+
+/// An ordered collection of metric families, rendered as Prometheus
+/// text exposition.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    families: BTreeMap<String, Family>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn push(
+        &mut self,
+        name: &str,
+        kind: &'static str,
+        suffix: &'static str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        let fam = self
+            .families
+            .entry(name.to_string())
+            .or_insert_with(|| Family { kind, samples: Vec::new() });
+        fam.samples.push(Sample {
+            suffix,
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            value,
+        });
+    }
+
+    /// Add a counter sample.
+    pub fn counter(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.push(name, "counter", "", labels, value as f64);
+    }
+
+    /// Add a gauge sample.
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.push(name, "gauge", "", labels, value);
+    }
+
+    /// Add a latency histogram as a Prometheus summary: one sample per
+    /// quantile in [`QUANTILES`] plus `_sum` and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        h: &LatencyHistogram,
+    ) {
+        for (q, qlabel) in QUANTILES {
+            let mut ql: Vec<(&str, &str)> = labels.to_vec();
+            ql.push(("quantile", qlabel));
+            let v = if q >= 1.0 { h.max_ns() } else { h.quantile_ns(q) };
+            self.push(name, "summary", "", &ql, v as f64);
+        }
+        self.push(name, "summary", "_sum", labels, h.sum_ns());
+        self.push(name, "summary", "_count", labels, h.count() as f64);
+    }
+
+    /// Set label `key` to `value` on every sample, replacing any
+    /// existing value — how the net front door stamps its `role` onto a
+    /// backend-built registry.
+    pub fn relabel(&mut self, key: &str, value: &str) {
+        for fam in self.families.values_mut() {
+            for s in &mut fam.samples {
+                match s.labels.iter_mut().find(|(k, _)| k == key) {
+                    Some(pair) => pair.1 = value.to_string(),
+                    None => s.labels.push((key.to_string(), value.to_string())),
+                }
+            }
+        }
+    }
+
+    /// Render the text exposition: a `# TYPE` line per family followed
+    /// by its samples, families in name order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, fam) in &self.families {
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for s in &fam.samples {
+                out.push_str(name);
+                out.push_str(s.suffix);
+                if !s.labels.is_empty() {
+                    out.push('{');
+                    for (i, (k, v)) in s.labels.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+                    }
+                    out.push('}');
+                }
+                out.push(' ');
+                write_value(&mut out, s.value);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Prometheus label-value escaping: backslash, quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Integral values render without a decimal point (same convention as
+/// `util::json`).
+fn write_value(out: &mut String, v: f64) {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Parse one sample line, returning its family-or-sample name.
+fn check_sample_line(line: &str) -> Result<(), String> {
+    let name_end = line
+        .find(|c: char| c == '{' || c.is_ascii_whitespace())
+        .unwrap_or(line.len());
+    let name = &line[..name_end];
+    if !valid_metric_name(name) {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let rest = &line[name_end..];
+    let rest = if let Some(after) = rest.strip_prefix('{') {
+        // scan the label block, honouring escapes inside quoted values
+        let bytes = after.as_bytes();
+        let mut i = 0usize;
+        let mut in_quotes = false;
+        let mut closed = None;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'\\' if in_quotes => i += 1, // skip the escaped byte
+                b'"' => in_quotes = !in_quotes,
+                b'}' if !in_quotes => {
+                    closed = Some(i);
+                    break;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        let Some(end) = closed else {
+            return Err("unterminated label block".to_string());
+        };
+        let inner = &after[..end];
+        if !inner.is_empty() {
+            // every label must look like key="value"
+            for part in split_labels(inner) {
+                let Some((k, v)) = part.split_once('=') else {
+                    return Err(format!("label without '=': {part:?}"));
+                };
+                if !valid_metric_name(k) {
+                    return Err(format!("bad label name {k:?}"));
+                }
+                if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                    return Err(format!("unquoted label value {v:?}"));
+                }
+            }
+        }
+        &after[end + 1..]
+    } else {
+        rest
+    };
+    let value = rest.trim();
+    if value.is_empty() {
+        return Err("sample line has no value".to_string());
+    }
+    // value may carry an optional timestamp; the first token must parse
+    let first = value.split_ascii_whitespace().next().unwrap_or("");
+    if first.parse::<f64>().is_err()
+        && !matches!(first, "NaN" | "+Inf" | "-Inf")
+    {
+        return Err(format!("unparseable sample value {first:?}"));
+    }
+    Ok(())
+}
+
+/// Split a label block on commas that sit outside quoted values.
+fn split_labels(inner: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let bytes = inner.as_bytes();
+    let mut start = 0usize;
+    let mut in_quotes = false;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_quotes => i += 1,
+            b'"' => in_quotes = !in_quotes,
+            b',' if !in_quotes => {
+                out.push(inner[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    if start < inner.len() {
+        out.push(inner[start..].trim());
+    }
+    out
+}
+
+/// Validate a text exposition: every line must be a well-formed comment
+/// or sample, and every family in `required` must be declared by a
+/// `# TYPE` line.  Returns the first problem found — the CLI's
+/// `metrics --check` and the CI smoke scrape both call this.
+pub fn validate(text: &str, required: &[&str]) -> Result<(), String> {
+    let mut declared: Vec<&str> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_ascii_whitespace();
+            let (name, kind) = (parts.next(), parts.next());
+            match (name, kind) {
+                (Some(n), Some(k))
+                    if valid_metric_name(n)
+                        && matches!(
+                            k,
+                            "counter" | "gauge" | "summary" | "histogram" | "untyped"
+                        )
+                        && parts.next().is_none() =>
+                {
+                    declared.push(n);
+                }
+                _ => {
+                    return Err(format!("line {}: malformed # TYPE: {line:?}", lineno + 1))
+                }
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or free-form comment
+        }
+        check_sample_line(line)
+            .map_err(|e| format!("line {}: {e}: {line:?}", lineno + 1))?;
+    }
+    for req in required {
+        if !declared.contains(req) {
+            return Err(format!("missing required metric family {req}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_names_are_prefixed_and_unique() {
+        let all = [
+            M_REQUESTS,
+            M_ERRORS,
+            M_BATCHES,
+            M_OPS,
+            M_LATENCY,
+            M_SERVICE,
+            M_WINDOW_LATENCY,
+            M_SHARD_SERVICE,
+            M_SHARD_WINDOW,
+            M_NET_REFUSED,
+            M_NET_INFLIGHT,
+        ];
+        let unique: std::collections::BTreeSet<&str> = all.iter().copied().collect();
+        assert_eq!(unique.len(), all.len());
+        for name in all {
+            assert!(name.starts_with("amsearch_"), "{name}");
+            assert!(valid_metric_name(name), "{name}");
+        }
+        for req in REQUIRED_FAMILIES {
+            assert!(all.contains(&req));
+        }
+    }
+
+    #[test]
+    fn render_groups_families_and_validates() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record_ns(i * 1_000);
+        }
+        let mut reg = Registry::new();
+        reg.counter(M_REQUESTS, &[], 42);
+        reg.gauge(M_NET_INFLIGHT, &[], 3.0);
+        reg.histogram(M_LATENCY, &[], &h);
+        reg.histogram(M_WINDOW_LATENCY, &[("shard", "0")], &h);
+        reg.relabel("role", "search");
+        let text = reg.render();
+        assert!(text.contains("# TYPE amsearch_requests_total counter"));
+        assert!(text.contains("amsearch_requests_total{role=\"search\"} 42"));
+        assert!(text.contains("# TYPE amsearch_latency_ns summary"));
+        assert!(text.contains("quantile=\"0.99\""));
+        assert!(text.contains("amsearch_latency_ns_count{role=\"search\"} 100"));
+        assert!(text
+            .contains("amsearch_window_latency_ns_sum{shard=\"0\",role=\"search\"}"));
+        // exactly one TYPE line per family
+        let type_lines =
+            text.lines().filter(|l| l.starts_with("# TYPE amsearch_latency_ns ")).count();
+        assert_eq!(type_lines, 1);
+        validate(&text, &REQUIRED_FAMILIES).unwrap();
+    }
+
+    #[test]
+    fn relabel_overrides_existing_value() {
+        let mut reg = Registry::new();
+        reg.counter(M_REQUESTS, &[("role", "old")], 1);
+        reg.relabel("role", "shard");
+        assert!(reg.render().contains("role=\"shard\""));
+        assert!(!reg.render().contains("old"));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_lines() {
+        assert!(validate("# TYPE amsearch_x counter\namsearch_x 1\n", &[]).is_ok());
+        let missing = validate("# TYPE amsearch_x counter\namsearch_x 1\n",
+            &["amsearch_requests_total"]);
+        assert!(missing.unwrap_err().contains("missing required"));
+        assert!(validate("2bad_name 1\n", &[]).is_err());
+        assert!(validate("amsearch_x{unclosed=\"v\" 1\n", &[]).is_err());
+        assert!(validate("amsearch_x{k=unquoted} 1\n", &[]).is_err());
+        assert!(validate("amsearch_x notanumber\n", &[]).is_err());
+        assert!(validate("amsearch_x\n", &[]).is_err());
+        assert!(validate("# TYPE amsearch_x nonsense\n", &[]).is_err());
+        // escapes inside label values are fine
+        validate("amsearch_x{msg=\"a\\\"b,c\"} 1\n", &[]).unwrap();
+        validate("amsearch_x NaN\namsearch_y +Inf\n", &[]).unwrap();
+    }
+
+    #[test]
+    fn label_escaping_roundtrips_through_validation() {
+        let mut reg = Registry::new();
+        reg.counter(M_REQUESTS, &[("path", "a\"b\\c\nd")], 1);
+        validate(&reg.render(), &[]).unwrap();
+    }
+}

@@ -1,0 +1,383 @@
+//! Per-request spans: stage-by-stage timing records emitted as JSON
+//! lines.
+//!
+//! A [`TraceRecord`] is one serving tier's view of one request — the
+//! router and every shard it contacted each emit their own record
+//! carrying the *same* trace id, and [`stitch`] groups a log back into
+//! per-request trees.  Records are flat (a span is a named duration,
+//! not a subtree): the tree structure lives in the shared id plus the
+//! `role` field, which is all the stage-attribution questions we ask
+//! ("where did this slow request spend its time?") need.
+//!
+//! Sampling is decided once, at admission: [`TraceSink::sample_id`]
+//! returns a fresh non-zero id for every `sample_every`-th request (0
+//! otherwise), and a slow-query threshold lets the serving tier
+//! force-emit an outlier after the fact via [`TraceSink::force_id`].
+//! A request with trace id 0 allocates nothing and touches no lock.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::clock::monotonic_ns;
+use crate::util::sync::lock_unpoisoned;
+use crate::util::Json;
+
+/// One tier's timing record for one traced request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Request-tree id shared by every tier's record (never 0).
+    pub trace_id: u64,
+    /// Emitting tier: `"search"` for a coordinator, `"router"` for the
+    /// cluster scatter-gather tier.
+    pub role: String,
+    /// The tier-local request id (wire frame id on the shard side).
+    pub req_id: u64,
+    /// End-to-end time at this tier, admission to response write (ns).
+    pub total_ns: u64,
+    /// Ordered `(stage, duration_ns)` spans.  Stage sets per role are
+    /// documented in the README's span table.
+    pub spans: Vec<(String, u64)>,
+}
+
+impl TraceRecord {
+    /// Sum of all span durations — by construction at most
+    /// [`Self::total_ns`] (stages partition or under-cover the request;
+    /// batch-shared stages are attributed per request as an equal
+    /// share).
+    pub fn spans_total_ns(&self) -> u64 {
+        self.spans.iter().map(|(_, ns)| ns).sum()
+    }
+
+    /// Duration of the named span, if recorded.
+    pub fn span_ns(&self, name: &str) -> Option<u64> {
+        self.spans
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, ns)| ns)
+    }
+
+    /// The record as one JSON object (what [`TraceSink::emit`] writes,
+    /// one per line).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("trace_id".to_string(), Json::Num(self.trace_id as f64));
+        o.insert("role".to_string(), Json::Str(self.role.clone()));
+        o.insert("req_id".to_string(), Json::Num(self.req_id as f64));
+        o.insert("total_ns".to_string(), Json::Num(self.total_ns as f64));
+        let spans = self
+            .spans
+            .iter()
+            .map(|(name, ns)| {
+                let mut s = BTreeMap::new();
+                s.insert("stage".to_string(), Json::Str(name.clone()));
+                s.insert("ns".to_string(), Json::Num(*ns as f64));
+                Json::Obj(s)
+            })
+            .collect();
+        o.insert("spans".to_string(), Json::Arr(spans));
+        Json::Obj(o)
+    }
+
+    /// Parse a record back from its JSON form (test/tooling side of the
+    /// emit path).
+    pub fn from_json(j: &Json) -> Option<TraceRecord> {
+        let spans = j
+            .get("spans")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Some((
+                    s.get("stage")?.as_str()?.to_string(),
+                    s.get("ns")?.as_u64()?,
+                ))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(TraceRecord {
+            trace_id: j.get("trace_id")?.as_u64()?,
+            role: j.get("role")?.as_str()?.to_string(),
+            req_id: j.get("req_id")?.as_u64()?,
+            total_ns: j.get("total_ns")?.as_u64()?,
+            spans,
+        })
+    }
+}
+
+/// Group records by trace id — reassembles the per-request tree a
+/// router-side record and its shard-side records form.  Record order
+/// within a group follows the input (emission) order.
+pub fn stitch(records: &[TraceRecord]) -> BTreeMap<u64, Vec<&TraceRecord>> {
+    let mut out: BTreeMap<u64, Vec<&TraceRecord>> = BTreeMap::new();
+    for r in records {
+        out.entry(r.trace_id).or_default().push(r);
+    }
+    out
+}
+
+/// In-progress record builder for one traced request at one tier.
+/// Total time runs from [`Trace::start`] unless the caller supplies its
+/// own measurement via [`Trace::finish_with_total`] (the coordinator
+/// does: its clock starts at enqueue, before the worker sees the
+/// request).
+#[derive(Debug)]
+pub struct Trace {
+    rec: TraceRecord,
+    started_ns: u64,
+}
+
+impl Trace {
+    /// Begin a trace at the current process clock.
+    pub fn start(trace_id: u64, role: &str, req_id: u64) -> Trace {
+        Trace {
+            rec: TraceRecord {
+                trace_id,
+                role: role.to_string(),
+                req_id,
+                total_ns: 0,
+                spans: Vec::new(),
+            },
+            started_ns: monotonic_ns(),
+        }
+    }
+
+    /// Append a pre-measured span.
+    pub fn span_ns(&mut self, stage: &str, ns: u64) {
+        self.rec.spans.push((stage.to_string(), ns));
+    }
+
+    /// Finish with `total_ns` measured by the caller.
+    pub fn finish_with_total(mut self, total_ns: u64) -> TraceRecord {
+        self.rec.total_ns = total_ns;
+        self.rec
+    }
+
+    /// Finish, measuring total time from [`Trace::start`].
+    pub fn finish(self) -> TraceRecord {
+        let total = monotonic_ns().saturating_sub(self.started_ns);
+        self.finish_with_total(total)
+    }
+}
+
+/// Shared JSON-lines trace destination with sampling policy.
+///
+/// * `sample_every = 0` never samples (only slow-query force-sampling
+///   can still emit); `sample_every = n` samples every n-th admission.
+/// * `slow_ns = 0` disables the slow-query threshold; otherwise a tier
+///   that observes `total_ns >= slow_ns` on an unsampled request calls
+///   [`TraceSink::force_id`] and emits the outlier.
+///
+/// Ids are allocated from one process-wide counter starting at 1, so 0
+/// unambiguously means "untraced" everywhere (wire field included).
+/// Write errors are swallowed: observability must never fail serving.
+pub struct TraceSink {
+    out: Mutex<Box<dyn Write + Send>>,
+    sample_every: u64,
+    slow_ns: u64,
+    admissions: AtomicU64,
+    next_id: AtomicU64,
+    emitted: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("sample_every", &self.sample_every)
+            .field("slow_ns", &self.slow_ns)
+            .field("emitted", &self.emitted.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl TraceSink {
+    /// Sink writing to `out` with the given sampling policy.
+    pub fn new(
+        out: Box<dyn Write + Send>,
+        sample_every: u64,
+        slow_ns: u64,
+    ) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            out: Mutex::new(out),
+            sample_every,
+            slow_ns,
+            admissions: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            emitted: AtomicU64::new(0),
+        })
+    }
+
+    /// Sink appending JSON lines to `path` (created if absent).
+    pub fn to_file(
+        path: &std::path::Path,
+        sample_every: u64,
+        slow_ns: u64,
+    ) -> crate::error::Result<Arc<TraceSink>> {
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| {
+                crate::error::Error::Config(format!(
+                    "trace sink {}: {e}",
+                    path.display()
+                ))
+            })?;
+        Ok(Self::new(Box::new(f), sample_every, slow_ns))
+    }
+
+    /// Admission-time sampling decision: a fresh trace id for every
+    /// `sample_every`-th call, 0 otherwise.  Lock-free.
+    pub fn sample_id(&self) -> u64 {
+        if self.sample_every == 0 {
+            return 0;
+        }
+        let n = self.admissions.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample_every == 0 {
+            self.alloc_id()
+        } else {
+            0
+        }
+    }
+
+    /// Unconditionally allocate a trace id (slow-query force-sampling).
+    pub fn force_id(&self) -> u64 {
+        self.alloc_id()
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Slow-query threshold in ns (0 = disabled).
+    pub fn slow_ns(&self) -> u64 {
+        self.slow_ns
+    }
+
+    /// Records emitted so far (tests and the serve loop's exit summary).
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    /// Write one record as a JSON line.  IO errors are ignored.
+    pub fn emit(&self, rec: &TraceRecord) {
+        let line = rec.to_json().to_string();
+        let mut out = lock_unpoisoned(&self.out);
+        let _ = writeln!(out, "{line}");
+        let _ = out.flush();
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let rec = TraceRecord {
+            trace_id: 7,
+            role: "router".to_string(),
+            req_id: 42,
+            total_ns: 1000,
+            spans: vec![("queue".to_string(), 100), ("scatter".to_string(), 300)],
+        };
+        let parsed = TraceRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(parsed, rec);
+        assert_eq!(parsed.spans_total_ns(), 400);
+        assert_eq!(parsed.span_ns("scatter"), Some(300));
+        assert_eq!(parsed.span_ns("missing"), None);
+    }
+
+    #[test]
+    fn trace_builder_orders_spans_and_bounds_total() {
+        let mut t = Trace::start(9, "search", 1);
+        t.span_ns("queue", 10);
+        t.span_ns("score", 20);
+        let rec = t.finish_with_total(100);
+        assert_eq!(rec.spans, vec![("queue".into(), 10), ("score".into(), 20)]);
+        assert!(rec.spans_total_ns() <= rec.total_ns);
+        // self-timed variant: total covers the builder's lifetime
+        let t = Trace::start(10, "search", 2);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let rec = t.finish();
+        assert!(rec.total_ns > 0);
+    }
+
+    #[test]
+    fn stitching_groups_tiers_under_one_id() {
+        let router = TraceRecord {
+            trace_id: 5,
+            role: "router".into(),
+            req_id: 1,
+            total_ns: 900,
+            spans: vec![("gather".into(), 500)],
+        };
+        let shard = TraceRecord {
+            trace_id: 5,
+            role: "search".into(),
+            req_id: 11,
+            total_ns: 400,
+            spans: vec![("scan".into(), 300)],
+        };
+        let other = TraceRecord { trace_id: 6, ..shard.clone() };
+        let recs = vec![router.clone(), shard.clone(), other];
+        let trees = stitch(&recs);
+        assert_eq!(trees.len(), 2);
+        let tree = &trees[&5];
+        assert_eq!(tree.len(), 2);
+        assert_eq!(tree[0].role, "router");
+        assert_eq!(tree[1].role, "search");
+    }
+
+    #[test]
+    fn sampling_rate_and_force() {
+        let sink = TraceSink::new(Box::new(std::io::sink()), 3, 0);
+        let ids: Vec<u64> = (0..9).map(|_| sink.sample_id()).collect();
+        let sampled: Vec<u64> = ids.iter().copied().filter(|&i| i != 0).collect();
+        assert_eq!(sampled.len(), 3, "every 3rd admission samples: {ids:?}");
+        assert!(sampled.windows(2).all(|w| w[0] < w[1]), "ids increase");
+        assert!(sink.force_id() > 0);
+        // disabled sink never samples but can still force
+        let off = TraceSink::new(Box::new(std::io::sink()), 0, 1_000);
+        assert!((0..100).all(|_| off.sample_id() == 0));
+        assert_eq!(off.slow_ns(), 1_000);
+        assert!(off.force_id() > 0);
+    }
+
+    #[test]
+    fn emit_writes_one_parseable_line_per_record() {
+        use std::sync::{Arc, Mutex};
+        // a Write impl capturing into shared memory
+        #[derive(Clone)]
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let sink = TraceSink::new(Box::new(buf.clone()), 1, 0);
+        let rec = TraceRecord {
+            trace_id: 1,
+            role: "search".into(),
+            req_id: 2,
+            total_ns: 3,
+            spans: vec![("scan".into(), 2)],
+        };
+        sink.emit(&rec);
+        sink.emit(&rec);
+        assert_eq!(sink.emitted(), 2);
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(TraceRecord::from_json(&j).unwrap(), rec);
+        }
+    }
+}

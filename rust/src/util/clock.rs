@@ -1,0 +1,32 @@
+//! Process-wide monotonic clock: nanoseconds since the first call in
+//! this process.  One shared origin means timestamps taken anywhere in
+//! the serving stack (coordinator workers, router workers, trace
+//! emission) are directly comparable, which the windowed histograms and
+//! span records rely on.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds elapsed since the process clock origin (the first call
+/// to this function).  Monotonic and cheap — one atomic load plus an
+/// `Instant::elapsed` after initialization.
+pub fn monotonic_ns() -> u64 {
+    ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_and_shared_origin() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a, "clock went backwards: {a} -> {b}");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let c = monotonic_ns();
+        assert!(c > b, "clock did not advance across a sleep");
+    }
+}

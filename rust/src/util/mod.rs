@@ -3,6 +3,7 @@
 //! poison-tolerant locking, and CLI argument parsing.
 
 pub mod args;
+pub mod clock;
 pub mod json;
 pub mod par;
 pub mod sha256;

@@ -390,3 +390,133 @@ fn cluster_shutdown_drains_in_flight_requests() {
     assert_eq!(m.errors, 0);
     cluster.shutdown();
 }
+
+/// The tracing acceptance pin, over the persisted production path: a
+/// plan directory (what `shard-plan` writes) served by a traced cluster
+/// (what `serve-cluster --trace-out` launches) and driven by the load
+/// generator yields JSON-line trace records that stitch into
+/// per-request trees — one router record plus one shard record per
+/// contact under a single trace id, with span sums bounded by each
+/// tier's end-to-end time and shard totals nested inside the router's.
+#[test]
+fn traced_cluster_stitches_router_and_shard_spans_under_one_id() {
+    use amsearch::net::loadgen::{self, LoadGenConfig};
+    use amsearch::obs::{stitch, TraceRecord, TraceSink};
+    use amsearch::util::Json;
+
+    let mut rng = Rng::new(81);
+    let wl = synthetic::dense_workload(16, 180, 8, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 6, top_p: 2, top_k: 2, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let plan = ShardPlan::for_index(&index, 3, ShardStrategy::Contiguous).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "amsearch_cluster_e2e_{}_trace",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    cluster::write_cluster(&index, &plan, &dir).unwrap();
+    let trace_path = dir.join("trace.jsonl");
+
+    // sample every request; slow-query threshold off
+    let sink = TraceSink::to_file(&trace_path, 1, 0).unwrap();
+    let mut cfg = fast_cluster_cfg(3, ShardStrategy::Contiguous);
+    cfg.trace = Some(sink.clone());
+    let cluster = ClusterHarness::launch_from_dir(&dir, "127.0.0.1:0", &cfg).unwrap();
+
+    let queries: Vec<Vec<f32>> =
+        (0..8).map(|qi| wl.queries.get(qi).to_vec()).collect();
+    let load = LoadGenConfig {
+        connections: 2,
+        requests: 20,
+        depth: 2,
+        ..Default::default()
+    };
+    let report =
+        loadgen::run(&cluster.router_addr().to_string(), &queries, &load).unwrap();
+    assert_eq!(report.requests, 20);
+    assert_eq!(report.errors, 0);
+    // shutdown drains every worker, so all records are flushed
+    cluster.shutdown();
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let records: Vec<TraceRecord> = text
+        .lines()
+        .map(|l| TraceRecord::from_json(&Json::parse(l).unwrap()).unwrap())
+        .collect();
+    // every request was sampled: 1 router + 3 shard records each
+    assert_eq!(sink.emitted(), records.len() as u64);
+    assert_eq!(records.len(), 20 * 4, "full fan-out traces every contact");
+    for r in &records {
+        assert!(r.trace_id > 0);
+        assert!(
+            r.spans_total_ns() <= r.total_ns,
+            "span sums exceed end-to-end at {}: {r:?}",
+            r.role
+        );
+    }
+    let trees = stitch(&records);
+    assert_eq!(trees.len(), 20, "one tree per request");
+    for (tid, tree) in &trees {
+        let routers: Vec<_> = tree.iter().filter(|r| r.role == "router").collect();
+        let shards: Vec<_> = tree.iter().filter(|r| r.role == "search").collect();
+        assert_eq!(routers.len(), 1, "trace {tid}");
+        assert_eq!(shards.len(), 3, "trace {tid}");
+        let router = routers[0];
+        for stage in ["queue", "score", "scatter", "gather", "respond"] {
+            assert!(router.span_ns(stage).is_some(), "trace {tid} missing {stage}");
+        }
+        for shard in &shards {
+            for stage in ["queue", "batch", "score", "select", "scan", "respond"] {
+                assert!(shard.span_ns(stage).is_some(), "trace {tid} missing {stage}");
+            }
+            // the shard's service interval is nested inside the
+            // router's end-to-end interval (same monotonic clock)
+            assert!(
+                shard.total_ns <= router.total_ns,
+                "trace {tid}: shard total {} > router total {}",
+                shard.total_ns,
+                router.total_ns
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tracing must never change answers: the same plan directory served
+/// with tracing disabled and with every request traced returns
+/// bitwise-identical neighbors and distances.
+#[test]
+fn traced_and_untraced_clusters_answer_bitwise_identically() {
+    use amsearch::obs::TraceSink;
+
+    let mut rng = Rng::new(82);
+    let wl = synthetic::dense_workload(16, 160, 10, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 5, top_p: 5, top_k: 3, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+
+    let plain = ClusterHarness::launch(
+        &index,
+        "127.0.0.1:0",
+        &fast_cluster_cfg(2, ShardStrategy::BalancedMembers),
+    )
+    .unwrap();
+    let mut traced_cfg = fast_cluster_cfg(2, ShardStrategy::BalancedMembers);
+    traced_cfg.trace =
+        Some(TraceSink::new(Box::new(std::io::sink()), 1, 1));
+    let traced = ClusterHarness::launch(&index, "127.0.0.1:0", &traced_cfg).unwrap();
+
+    for qi in 0..10 {
+        let query = wl.queries.get(qi);
+        let a = plain.router().search(query.to_vec(), 5, 3).unwrap();
+        let b = traced.router().search(query.to_vec(), 5, 3).unwrap();
+        assert_eq!(a.neighbors.len(), b.neighbors.len(), "query {qi}");
+        for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(x.id, y.id, "query {qi}");
+            assert_eq!(x.distance.to_bits(), y.distance.to_bits(), "query {qi}");
+        }
+        assert_eq!(a.polled, b.polled, "query {qi}");
+        assert_eq!(a.candidates, b.candidates, "query {qi}");
+    }
+    plain.shutdown();
+    traced.shutdown();
+}

@@ -218,6 +218,7 @@ fn json_lines_mode_serves_and_matches_binary() {
         id: 2,
         top_p: 4,
         top_k: 3,
+        trace_id: 0,
         vector: wl.queries.get(0).to_vec(),
     });
     stream.write_all(req.to_json_line().as_bytes()).unwrap();
@@ -451,8 +452,45 @@ fn loadgen_closed_loop_reports_throughput_and_latency() {
     let j = report.to_json();
     assert_eq!(j.get("requests").unwrap().as_u64(), Some(100));
     assert!(j.get("latency").unwrap().get("p90_ns").is_some());
+    // the rolling-window view: a short run fits entirely inside the
+    // window, so its tail quantiles cover every sample
+    assert_eq!(report.window.windowed().count(), 100);
+    assert!(j.get("window_p99_ns").unwrap().as_u64().is_some());
+    assert!(j.get("window").unwrap().get("window_s").is_some());
     // the server counted exactly the loadgen traffic
     assert_eq!(server.metrics().requests, 100);
+    net.shutdown();
+    server.shutdown();
+}
+
+/// The export surfaces must never disagree: the requests counter in the
+/// STATS JSON snapshot and in the Prometheus text exposition (METRICS
+/// frame) come from the same metrics snapshot, and the exposition
+/// passes the format validator with every required family present.
+#[test]
+fn metrics_exposition_agrees_with_stats() {
+    use amsearch::obs;
+    let (server, net, wl) = start_stack(11, 16, 128, 4);
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    for qi in 0..7 {
+        client.search_k(wl.queries.get(qi), 2, 1).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    let text = client.metrics_text().unwrap();
+    obs::prom::validate(&text, &obs::REQUIRED_FAMILIES).unwrap();
+    let stats_requests = stats.get("requests").unwrap().as_u64().unwrap();
+    assert_eq!(stats_requests, 7);
+    let prom_requests: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("amsearch_requests_total{role=\"search\"} "))
+        .expect("requests sample present")
+        .parse()
+        .unwrap();
+    assert_eq!(prom_requests, stats_requests, "STATS and exposition agree");
+    // windowed family is exported alongside the cumulative one
+    assert!(text.contains("amsearch_window_latency_ns"));
+    assert!(text.contains("amsearch_net_inflight"));
     net.shutdown();
     server.shutdown();
 }

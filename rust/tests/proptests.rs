@@ -558,6 +558,9 @@ fn prop_wire_request_roundtrip() {
             id: rng.next_u64(),
             top_p: rng.below(1_000) as u32,
             top_k: rng.below(MAX_WIRE_TOP_K as u64 + 1) as u32,
+            // half the cases exercise the traced v2 encoding (non-zero
+            // trace id appends the trailer and bumps the version byte)
+            trace_id: if rng.below(2) == 0 { 0 } else { rng.next_u64() | 1 },
             vector: (0..dim).map(|_| rng.normal() as f32).collect(),
         });
         let bytes = f.encode();
@@ -624,6 +627,7 @@ fn prop_wire_corrupt_frames_rejected() {
             id: rng.next_u64(),
             top_p: rng.below(64) as u32,
             top_k: rng.below(64) as u32,
+            trace_id: 0, // v1 layout: the corruption offsets below assume it
             vector: (0..dim).map(|_| rng.normal() as f32).collect(),
         });
         let good = f.encode();
@@ -957,4 +961,77 @@ fn forced_kernel_override_selects_each_backend() {
     }
     std::env::remove_var("AMSEARCH_KERNEL");
     assert!(Kernels::select().backend().available());
+}
+
+/// Windowed-histogram merging is associative and commutative under a
+/// shared clock: `(a ∪ b) ∪ c` and `a ∪ (c ∪ b)` expose identical
+/// windowed statistics at every probe time.  This is the property the
+/// serving stack leans on — loadgen merges per-connection windows and
+/// the router merges per-shard windows in arbitrary order.
+#[test]
+fn prop_windowed_merge_associative_commutative() {
+    use amsearch::metrics::WindowedHistogram;
+    cases(40, |rng| {
+        let slot_ns = 1_000 + rng.below(10_000);
+        let n_slots = 2 + rng.below(8) as usize;
+        let span = slot_ns * n_slots as u64;
+        let mk = |rng: &mut Rng| {
+            let mut w = WindowedHistogram::with_slots(slot_ns, n_slots);
+            for _ in 0..rng.below(60) {
+                // samples spread over ~2 windows so some slots expire
+                w.record_at(1 + rng.below(1_000_000), rng.below(2 * span));
+            }
+            w
+        };
+        let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+        let now = rng.below(3 * span);
+        let mut left = a.clone();
+        left.merge_at(&b, now);
+        left.merge_at(&c, now);
+        let mut right = a.clone();
+        let mut cb = c.clone();
+        cb.merge_at(&b, now);
+        right.merge_at(&cb, now);
+        for probe in [now, now + slot_ns, now + span] {
+            let (l, r) = (left.windowed_at(probe), right.windowed_at(probe));
+            assert_eq!(l.count(), r.count(), "count at probe {probe}");
+            assert_eq!(l.sum_ns(), r.sum_ns(), "sum at probe {probe}");
+            assert_eq!(l.max_ns(), r.max_ns(), "max at probe {probe}");
+            for q in [0.5, 0.9, 0.99] {
+                assert_eq!(l.quantile_ns(q), r.quantile_ns(q), "q{q} at {probe}");
+            }
+        }
+    });
+}
+
+/// When every sample lands inside the live window, the windowed view
+/// agrees exactly with a cumulative histogram fed the same samples —
+/// the STATS JSON's `window` block and `latency` block can only
+/// diverge by expiry, never by accounting.
+#[test]
+fn prop_windowed_agrees_with_cumulative_when_window_covers_all() {
+    use amsearch::metrics::{LatencyHistogram, WindowedHistogram};
+    cases(40, |rng| {
+        let slot_ns = 1_000 + rng.below(10_000);
+        let n_slots = 2 + rng.below(8) as usize;
+        let span = slot_ns * n_slots as u64;
+        let mut w = WindowedHistogram::with_slots(slot_ns, n_slots);
+        let mut cum = LatencyHistogram::new();
+        // all arrival times inside one window ending at `now`
+        let base = rng.below(1_000_000) * span;
+        let now = base + span - 1;
+        for _ in 0..1 + rng.below(200) {
+            let ns = 1 + rng.below(10_000_000);
+            let at = base + rng.below(span);
+            w.record_at(ns, at);
+            cum.record_ns(ns);
+        }
+        let live = w.windowed_at(now);
+        assert_eq!(live.count(), cum.count());
+        assert_eq!(live.sum_ns(), cum.sum_ns());
+        assert_eq!(live.max_ns(), cum.max_ns());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(live.quantile_ns(q), cum.quantile_ns(q), "q{q}");
+        }
+    });
 }

@@ -20,7 +20,14 @@
 //!   shard-manifest row says "shard";
 //! * `coordinator/server.rs` exposes the selected distance-kernel
 //!   backend (`kernel_backend`) through STATS and the README documents
-//!   the `kernel.backend` row name.
+//!   the `kernel.backend` row name;
+//! * every `M_*` metric-name constant in `obs/prom.rs` is unique,
+//!   `amsearch_`-prefixed, and documented in the README — renaming an
+//!   exported Prometheus family silently breaks dashboards, so names
+//!   only move when the docs move with them;
+//! * `net/wire.rs` keeps a `TRACED_VERSION` constant for the SEARCH
+//!   layout carrying a trace id, a test asserts its value, and the
+//!   README documents the `trace_id` field.
 
 use std::collections::BTreeSet;
 
@@ -58,6 +65,35 @@ fn int_consts(toks: &[Tok], prefix: &str, ty: &str) -> Vec<(String, u64, usize)>
     out
 }
 
+/// `const <name>: &str = "<value>";` declarations whose name starts
+/// with `prefix`, as `(name, value, line)` with the quotes stripped.
+fn str_consts(toks: &[Tok], prefix: &str) -> Vec<(String, String, usize)> {
+    let c = code(toks);
+    let mut out = Vec::new();
+    for i in 0..c.len() {
+        if c[i].text != "const" || i + 7 >= c.len() {
+            continue;
+        }
+        let name = &c[i + 1];
+        if name.kind != Kind::Ident || !name.text.starts_with(prefix) {
+            continue;
+        }
+        if c[i + 2].text != ":"
+            || c[i + 3].text != "&"
+            || c[i + 4].text != "str"
+            || c[i + 5].text != "="
+        {
+            continue;
+        }
+        let lit = &c[i + 6];
+        if lit.kind != Kind::Lit || !lit.text.starts_with('"') || c[i + 7].text != ";" {
+            continue;
+        }
+        out.push((name.text.clone(), lit.text.trim_matches('"').to_string(), name.line));
+    }
+    out
+}
+
 /// Does the code token stream contain `pattern` as a consecutive
 /// sequence of token texts?
 fn has_seq(toks: &[Tok], pattern: &[&str]) -> bool {
@@ -91,6 +127,8 @@ pub struct DriftInput<'a> {
     pub plan: &'a str,
     /// `rust/src/coordinator/server.rs` source.
     pub server: &'a str,
+    /// `rust/src/obs/prom.rs` source.
+    pub obs: &'a str,
     /// `README.md` contents.
     pub readme: &'a str,
     /// Idents inside `#[cfg(test)]` regions of `rust/src` plus all
@@ -205,6 +243,73 @@ pub fn check(input: &DriftInput<'_>, out: &mut Vec<Finding>) {
              documents that row"
                 .into(),
         );
+    }
+
+    // --- observability: metric families and traced wire version ------
+    // exported Prometheus family names are an external contract (the
+    // README table is what dashboards are built from), and the traced
+    // SEARCH layout is a wire contract old peers must keep rejecting
+    // deterministically
+    let obs_file = "rust/src/obs/prom.rs";
+    let obs_toks = lex(input.obs);
+    let metrics = str_consts(&obs_toks, "M_");
+    if metrics.is_empty() {
+        push(out, obs_file, 1, "no `M_*: &str` metric-name constants found".into());
+    }
+    let mut metric_names = BTreeSet::new();
+    for (name, value, line) in &metrics {
+        if !value.starts_with("amsearch_") {
+            push(
+                out,
+                obs_file,
+                *line,
+                format!("`{name}` metric `{value}` is not `amsearch_`-prefixed"),
+            );
+        }
+        if !metric_names.insert(value.as_str()) {
+            push(out, obs_file, *line, format!("`{name}` reuses metric name `{value}`"));
+        }
+        if !input.readme.lines().any(|l| l.contains(value.as_str())) {
+            push(
+                out,
+                obs_file,
+                *line,
+                format!(
+                    "metric family `{value}` (`{name}`) has no README row — \
+                     exported names must stay documented"
+                ),
+            );
+        }
+    }
+    match int_consts(&wire_toks, "TRACED_VERSION", "u8").first() {
+        None => push(
+            out,
+            wire_file,
+            1,
+            "no `TRACED_VERSION: u8` constant found — the SEARCH layout \
+             carrying a trace id must keep a distinct pinned wire version"
+                .into(),
+        ),
+        Some((_, v, line)) => {
+            if !input.test_idents.contains("TRACED_VERSION") {
+                push(
+                    out,
+                    wire_file,
+                    *line,
+                    format!("`TRACED_VERSION` (version {v}) is not asserted by any test"),
+                );
+            }
+            if !input.readme.lines().any(|l| l.contains("trace_id")) {
+                push(
+                    out,
+                    readme_file,
+                    1,
+                    "wire speaks a traced SEARCH layout but the README never \
+                     documents the `trace_id` field"
+                        .into(),
+                );
+            }
+        }
     }
 
     // --- persist format versions --------------------------------------
@@ -331,6 +436,11 @@ mod tests {
     const WIRE_OK: &str = r#"
         pub const ERR_A: u16 = 1;
         pub const ERR_B: u16 = 2;
+        pub const TRACED_VERSION: u8 = 2;
+    "#;
+    const OBS_OK: &str = r#"
+        pub const M_REQUESTS: &str = "amsearch_requests_total";
+        pub const M_LATENCY: &str = "amsearch_latency_ns";
     "#;
     const PERSIST_OK: &str = r#"
         const VERSION: u32 = 4;
@@ -358,10 +468,17 @@ mod tests {
 | v4 | quant (current) |
 
 STATS reports the selected backend under `kernel.backend`.
+
+| metric | meaning |
+|---|---|
+| `amsearch_requests_total` | requests |
+| `amsearch_latency_ns` | latency |
+
+A v2 SEARCH frame appends a `trace_id` trailer.
 "#;
 
     fn run(wire: &str, persist: &str, plan: &str, readme: &str, tests: &[&str]) -> Vec<Finding> {
-        run_with_server(wire, persist, plan, SERVER_OK, readme, tests)
+        run_full(wire, persist, plan, SERVER_OK, OBS_OK, readme, tests)
     }
 
     fn run_with_server(
@@ -372,10 +489,22 @@ STATS reports the selected backend under `kernel.backend`.
         readme: &str,
         tests: &[&str],
     ) -> Vec<Finding> {
+        run_full(wire, persist, plan, server, OBS_OK, readme, tests)
+    }
+
+    fn run_full(
+        wire: &str,
+        persist: &str,
+        plan: &str,
+        server: &str,
+        obs: &str,
+        readme: &str,
+        tests: &[&str],
+    ) -> Vec<Finding> {
         let test_idents: BTreeSet<String> = tests.iter().map(|s| s.to_string()).collect();
         let mut out = Vec::new();
         check(
-            &DriftInput { wire, persist, plan, server, readme, test_idents: &test_idents },
+            &DriftInput { wire, persist, plan, server, obs, readme, test_idents: &test_idents },
             &mut out,
         );
         out
@@ -383,18 +512,18 @@ STATS reports the selected backend under `kernel.backend`.
 
     #[test]
     fn clean_tree_passes() {
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert!(got.is_empty(), "{got:?}");
     }
 
     #[test]
     fn untested_and_undocumented_codes_flagged() {
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "TRACED_VERSION"]);
         assert_eq!(got.len(), 1);
         assert!(got[0].message.contains("ERR_B"));
         assert!(got[0].message.contains("not asserted"));
         let readme_missing = README_OK.replace("| 2 | `ERR_B` | b |\n", "");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme_missing, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme_missing, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("error-table row"));
     }
@@ -402,7 +531,7 @@ STATS reports the selected backend under `kernel.backend`.
     #[test]
     fn stale_readme_constant_flagged() {
         let readme = format!("{README_OK}\nAlso see `ERR_GONE`.\n");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("ERR_GONE"));
     }
@@ -410,7 +539,7 @@ STATS reports the selected backend under `kernel.backend`.
     #[test]
     fn duplicate_and_gapped_codes_flagged() {
         let wire = "pub const ERR_A: u16 = 1;\npub const ERR_B: u16 = 1;";
-        let got = run(wire, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        let got = run(wire, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert!(got.iter().any(|f| f.message.contains("reuses")));
         assert!(got.iter().any(|f| f.message.contains("contiguous")));
     }
@@ -418,7 +547,7 @@ STATS reports the selected backend under `kernel.backend`.
     #[test]
     fn version_bump_without_gate_flagged() {
         let persist = PERSIST_OK.replace("VERSION: u32 = 4", "VERSION: u32 = 5");
-        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert!(
             got.iter().any(|f| f.message.contains("no `version >= 5` feature gate")),
             "{got:?}"
@@ -428,7 +557,7 @@ STATS reports the selected backend under `kernel.backend`.
     #[test]
     fn gate_beyond_version_flagged() {
         let persist = PERSIST_OK.replace("version >= 4", "version >= 9");
-        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert!(got.iter().any(|f| f.message.contains("outside 2..=4")), "{got:?}");
     }
 
@@ -440,12 +569,12 @@ STATS reports the selected backend under `kernel.backend`.
             PLAN_OK,
             "fn start() {}",
             README_OK,
-            &["ERR_A", "ERR_B"],
+            &["ERR_A", "ERR_B", "TRACED_VERSION"],
         );
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("kernel_backend"));
         let readme = README_OK.replace("kernel.backend", "kernel backend");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("kernel.backend"));
     }
@@ -453,11 +582,55 @@ STATS reports the selected backend under `kernel.backend`.
     #[test]
     fn readme_version_rows_checked() {
         let readme = README_OK.replace("| v4 | quant (current) |", "| v4 | quant |");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert!(got.iter().any(|f| f.message.contains("must say \"current\"")), "{got:?}");
         let readme = README_OK.replace("| v3 | shard manifest |", "| v3 | reserved (current) |");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
         assert!(got.iter().any(|f| f.message.contains("shard")), "{got:?}");
         assert!(got.iter().any(|f| f.message.contains("but VERSION")), "{got:?}");
+    }
+
+    #[test]
+    fn metric_families_checked() {
+        let tests = &["ERR_A", "ERR_B", "TRACED_VERSION"];
+        // undocumented family
+        let readme = README_OK.replace("| `amsearch_latency_ns` | latency |\n", "");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, tests);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("amsearch_latency_ns"));
+        assert!(got[0].message.contains("README"));
+        // un-prefixed name
+        let obs = OBS_OK.replace("\"amsearch_latency_ns\"", "\"latency_ns\"");
+        let got = run_full(WIRE_OK, PERSIST_OK, PLAN_OK, SERVER_OK, &obs, README_OK, tests);
+        assert!(
+            got.iter().any(|f| f.message.contains("not `amsearch_`-prefixed")),
+            "{got:?}"
+        );
+        // duplicated name
+        let obs = OBS_OK.replace("\"amsearch_latency_ns\"", "\"amsearch_requests_total\"");
+        let got = run_full(WIRE_OK, PERSIST_OK, PLAN_OK, SERVER_OK, &obs, README_OK, tests);
+        assert!(got.iter().any(|f| f.message.contains("reuses metric name")), "{got:?}");
+        // constants vanished entirely (e.g. the module was renamed)
+        let got = run_full(WIRE_OK, PERSIST_OK, PLAN_OK, SERVER_OK, "", README_OK, tests);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("no `M_*"));
+    }
+
+    #[test]
+    fn traced_wire_version_checked() {
+        // constant removed
+        let wire = WIRE_OK.replace("pub const TRACED_VERSION: u8 = 2;\n", "");
+        let got = run(&wire, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("TRACED_VERSION"));
+        // constant present but no test pins its value
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("not asserted"));
+        // README stops documenting the trailer field
+        let readme = README_OK.replace("`trace_id` trailer", "an id trailer");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("trace_id"));
     }
 }

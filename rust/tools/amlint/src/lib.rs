@@ -29,8 +29,8 @@ pub use rules::Finding;
 /// Top-level `rust/src` directories where the panic rule applies (the
 /// serving path: a panicking handler thread breaks the
 /// exactly-one-response guarantee and poisons shared mutexes).
-pub const PANIC_DIRS: [&str; 6] =
-    ["net", "coordinator", "cluster", "search", "index", "quant"];
+pub const PANIC_DIRS: [&str; 7] =
+    ["net", "coordinator", "cluster", "search", "index", "quant", "obs"];
 
 /// The declared mutex registries: for each file, its mutexes in
 /// acquisition order.  A mutex may only be taken while holding mutexes
@@ -141,6 +141,7 @@ pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
             persist: find("index/persist.rs"),
             plan: find("cluster/plan.rs"),
             server: find("coordinator/server.rs"),
+            obs: find("obs/prom.rs"),
             readme: &readme,
             test_idents: &test_idents,
         },

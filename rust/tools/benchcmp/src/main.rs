@@ -25,6 +25,16 @@
 //!
 //! Usage: `benchcmp <baseline.json> <fresh.json> [--threshold 0.15]
 //! [--enforce]`
+//!
+//! Single-file pair mode compares two cells of the *same* run instead
+//! of two runs — the shape the observability overhead gate needs
+//! (`obs/untraced` vs `obs/traced` are measured seconds apart on the
+//! same machine, so provenance can never disagree):
+//!
+//! `benchcmp --pair <base_cell> <test_cell> <run.json>
+//! [--threshold 0.02] [--enforce]`
+//!
+//! A missing cell warns and exits 0 (soft until the bench emits both).
 
 use std::collections::BTreeMap;
 use std::process::ExitCode;
@@ -314,6 +324,49 @@ fn compare(base: &BenchFile, fresh: &BenchFile, threshold: f64) -> Comparison {
     c
 }
 
+/// Pair-mode verdict within one run: `Ok(Some(msg))` when `test_cell`
+/// exceeds `base_cell` by more than `threshold`, `Ok(None)` when it is
+/// within budget, `Err` when either cell (or a shared metric) is absent.
+fn pair_verdict(
+    file: &BenchFile,
+    base_cell: &str,
+    test_cell: &str,
+    threshold: f64,
+) -> Result<Option<String>, String> {
+    let base = file
+        .cells
+        .get(base_cell)
+        .ok_or_else(|| format!("cell {base_cell:?} not in the run"))?;
+    let test = file
+        .cells
+        .get(test_cell)
+        .ok_or_else(|| format!("cell {test_cell:?} not in the run"))?;
+    let (bm, tm) = joint_metric(base, test)
+        .ok_or_else(|| "cells share no comparable metric".to_string())?;
+    let ratio = if bm.value > 0.0 { tm.value / bm.value } else { 1.0 };
+    println!(
+        "benchcmp: {test_cell} vs {base_cell}: {field} {base:.2} -> \
+         {test:.2} ({pct:+.2}%, budget {budget:.0}%)",
+        field = bm.field,
+        base = bm.value,
+        test = tm.value,
+        pct = (ratio - 1.0) * 100.0,
+        budget = threshold * 100.0
+    );
+    if ratio > 1.0 + threshold {
+        Ok(Some(format!(
+            "{test_cell}: {field} {base:.2} -> {test:.2} ({pct:+.1}% over \
+             {base_cell})",
+            field = bm.field,
+            base = bm.value,
+            test = tm.value,
+            pct = (ratio - 1.0) * 100.0
+        )))
+    } else {
+        Ok(None)
+    }
+}
+
 fn read_json_file(path: &str) -> Result<Json, String> {
     let text = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
     let (doc, end) = parse_value(&text, 0)?;
@@ -327,6 +380,7 @@ fn run(args: &[String]) -> ExitCode {
     let mut paths: Vec<&String> = Vec::new();
     let mut threshold = 0.15f64;
     let mut enforce = false;
+    let mut pair: Option<(String, String)> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -338,15 +392,62 @@ fn run(args: &[String]) -> ExitCode {
                 threshold = v;
             }
             "--enforce" => enforce = true,
+            "--pair" => {
+                let (Some(b), Some(t)) = (it.next(), it.next()) else {
+                    eprintln!("benchcmp: --pair needs <base_cell> <test_cell>");
+                    return ExitCode::from(2);
+                };
+                pair = Some((b.clone(), t.clone()));
+            }
             "--help" | "-h" => {
                 println!(
                     "usage: benchcmp <baseline.json> <fresh.json> \
-                     [--threshold 0.15] [--enforce]"
+                     [--threshold 0.15] [--enforce]\n\
+                     \x20      benchcmp --pair <base_cell> <test_cell> \
+                     <run.json> [--threshold 0.02] [--enforce]"
                 );
                 return ExitCode::SUCCESS;
             }
             _ => paths.push(a),
         }
+    }
+    if let Some((base_cell, test_cell)) = pair {
+        let [run_path] = paths.as_slice() else {
+            eprintln!("benchcmp: --pair mode takes exactly one run file");
+            return ExitCode::from(2);
+        };
+        if !std::path::Path::new(run_path.as_str()).exists() {
+            println!(
+                "benchcmp: no run file at {run_path} — nothing to compare"
+            );
+            return ExitCode::SUCCESS;
+        }
+        let file = match read_json_file(run_path).and_then(|d| load_bench(&d)) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("benchcmp: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        return match pair_verdict(&file, &base_cell, &test_cell, threshold) {
+            Err(e) => {
+                // missing cells keep the gate soft, like a missing baseline
+                println!("benchcmp: {e} — nothing to compare");
+                ExitCode::SUCCESS
+            }
+            Ok(None) => ExitCode::SUCCESS,
+            Ok(Some(r)) => {
+                println!("  REGRESSION {r}");
+                if enforce {
+                    ExitCode::FAILURE
+                } else {
+                    println!(
+                        "benchcmp: informational run (no --enforce); not failing"
+                    );
+                    ExitCode::SUCCESS
+                }
+            }
+        };
     }
     let [base_path, fresh_path] = paths.as_slice() else {
         eprintln!(
@@ -535,5 +636,35 @@ mod tests {
         let c = compare(&base, &fresh, 0.15);
         assert_eq!(c.compared, 0);
         assert!(c.regressions.is_empty());
+    }
+
+    #[test]
+    fn pair_mode_flags_over_budget_cells_only() {
+        let run = bench_of(
+            &[("obs/untraced", 100.0), ("obs/traced", 101.5), ("obs/slow", 110.0)],
+            "mean_ns",
+        );
+        // within the 2% budget
+        assert_eq!(
+            pair_verdict(&run, "obs/untraced", "obs/traced", 0.02).unwrap(),
+            None
+        );
+        // over budget: named in the regression message
+        let r = pair_verdict(&run, "obs/untraced", "obs/slow", 0.02)
+            .unwrap()
+            .expect("10% over a 2% budget must flag");
+        assert!(r.starts_with("obs/slow:"), "{r}");
+        // faster than baseline is never a regression
+        assert_eq!(
+            pair_verdict(&run, "obs/slow", "obs/untraced", 0.02).unwrap(),
+            None
+        );
+    }
+
+    #[test]
+    fn pair_mode_missing_cells_are_soft() {
+        let run = bench_of(&[("obs/untraced", 100.0)], "mean_ns");
+        assert!(pair_verdict(&run, "obs/untraced", "obs/traced", 0.02).is_err());
+        assert!(pair_verdict(&run, "absent", "obs/untraced", 0.02).is_err());
     }
 }
