@@ -58,6 +58,7 @@ fn main() {
             max_wait_us: 200,
             workers,
             queue_depth: 256,
+            quality_sample: 0,
         };
         let server = Arc::new(SearchServer::start(factory, config).unwrap());
         let total = 2_000usize;
@@ -91,6 +92,7 @@ fn main() {
             max_wait_us: 0,
             workers: 1,
             queue_depth: 16,
+            quality_sample: 0,
         };
         let server = Arc::new(SearchServer::start(factory, config).unwrap());
         let mut qj = 0usize;

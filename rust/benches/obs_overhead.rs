@@ -1,9 +1,12 @@
 //! Observability overhead benchmark: the same coordinator round-trip
 //! with tracing disabled vs every request traced into a discarding
-//! sink.  CI runs this with `AMSEARCH_BENCH_JSON` and feeds the two
-//! cells to `benchcmp --pair` to enforce the ≤ 2% overhead budget —
-//! tracing that is off must cost nothing, and tracing that is on must
-//! stay in the noise.
+//! sink, and with quality sampling disabled vs every request
+//! shadow-verified by the off-path exact-scan worker.  CI runs this
+//! with `AMSEARCH_BENCH_JSON` and feeds each pair to `benchcmp --pair`
+//! to enforce the ≤ 2% overhead budget — observability that is off must
+//! cost nothing, and observability that is on must stay in the noise on
+//! the serving path (the shadow worker burns its own core, not the
+//! request's).
 
 #[path = "harness_common.rs"]
 #[allow(dead_code)] // helpers are shared; each target uses a subset
@@ -29,6 +32,7 @@ fn main() {
         max_wait_us: 0,
         workers: 1,
         queue_depth: 16,
+        quality_sample: 0,
     };
     let factory = || EngineFactory {
         index: index.clone(),
@@ -73,6 +77,51 @@ fn main() {
     );
     measurements.push(m);
     traced.shutdown();
+
+    section("coordinator round-trip: quality sampling off vs every request shadow-verified");
+    // a fresh off cell measured back-to-back with its pair, so the gate
+    // compares cells from the same thermal/cache regime
+    let quality_off = Arc::new(SearchServer::start(factory(), config).unwrap());
+    let mut qa = 0usize;
+    let m = bench("obs/quality_off", budget(), || {
+        let q = wl.queries.get(qa % 64).to_vec();
+        std::hint::black_box(quality_off.search(q, 0, 0).unwrap());
+        qa += 1;
+    });
+    m.report();
+    measurements.push(m);
+    quality_off.shutdown();
+
+    // quality_sample = 1: every request's inputs are cloned onto the
+    // bounded shadow queue; the exact scan itself runs on the dedicated
+    // worker, so the serving path pays only the clone + push
+    let quality_cfg = CoordinatorConfig { quality_sample: 1, ..config };
+    let sampled = Arc::new(SearchServer::start(factory(), quality_cfg).unwrap());
+    let mut qb = 0usize;
+    let m = bench("obs/quality_sampled", budget(), || {
+        let q = wl.queries.get(qb % 64).to_vec();
+        std::hint::black_box(sampled.search(q, 0, 0).unwrap());
+        qb += 1;
+    });
+    m.report();
+    let off_ns = measurements.last().map(|p| p.mean_ns).unwrap_or(0.0);
+    println!(
+        "  overhead: {:+.2}% mean ns/request",
+        100.0 * (m.mean_ns - off_ns) / off_ns
+    );
+    measurements.push(m);
+    sampled.shutdown(); // drains the shadow queue before the assert
+    let quality = sampled.metrics().quality;
+    assert!(
+        quality.samples > 0,
+        "sampled cell must actually shadow-verify requests"
+    );
+    println!(
+        "  shadow samples: {} (dropped {}, recall {:.4})",
+        quality.samples,
+        quality.dropped,
+        quality.recall()
+    );
 
     write_json_if_requested(&measurements);
 }

@@ -49,6 +49,7 @@ fn run_backend(
         max_wait_us: 300,
         workers: 2,
         queue_depth: 512,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(factory, config)?);
     let total = wl.queries.len() * passes;

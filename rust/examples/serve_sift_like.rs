@@ -38,6 +38,7 @@ fn main() -> amsearch::Result<()> {
         max_wait_us: 200,
         workers: 2,
         queue_depth: 512,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(factory, config)?);
 

@@ -27,6 +27,17 @@
 //! never merged into one histogram — re-recording shard-reported
 //! samples into the router's own would double-count every request in
 //! any aggregate view.
+//!
+//! Quality observability mirrors the coordinator's: always-on
+//! selectivity counters (which contacted-shard rank produced the
+//! merged winner, candidate→k survival), and — when
+//! `quality_sample > 0` — a shadow worker with its **own** shard links
+//! that re-executes every sampled query at full fan-out `s = N`,
+//! merging exactly like [`serve_one`]'s gather, and folds the
+//! comparison into an online recall estimate.  The router-tier
+//! estimate isolates the *fan-out* knob: shards are polled with the
+//! same per-request `top_p`, so per-shard poll loss is measured by
+//! each shard's own estimator, not double-counted here.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -39,8 +50,11 @@ use crate::error::{Error, Result};
 use crate::metrics::{FanoutStats, LatencyHistogram, WindowedHistogram};
 use crate::net::wire::{self, WireResponse};
 use crate::net::{NetClient, RetryPolicy, Serveable};
-use crate::obs::{prom, Registry, Trace, TraceSink};
-use crate::search::{top_p_largest, TopK};
+use crate::obs::{
+    prom, sample_hit, QualityStats, RankHistogram, Registry, ShadowQueue,
+    SurvivalStats, Trace, TraceSink,
+};
+use crate::search::{top_p_largest, Neighbor, TopK};
 use crate::util::sync::lock_unpoisoned;
 use crate::util::Json;
 
@@ -57,6 +71,10 @@ pub struct RouterConfig {
     pub queue_depth: usize,
     /// Reconnect/backoff policy for router→shard links.
     pub retry: RetryPolicy,
+    /// Shadow-re-execute every `quality_sample`-th routed request at
+    /// full fan-out on a dedicated worker and fold the comparison into
+    /// the online recall estimate (`0` = quality sampling off).
+    pub quality_sample: u64,
 }
 
 impl Default for RouterConfig {
@@ -66,6 +84,7 @@ impl Default for RouterConfig {
             workers: 4,
             queue_depth: 1024,
             retry: RetryPolicy::default(),
+            quality_sample: 0,
         }
     }
 }
@@ -106,6 +125,82 @@ pub struct RouterMetrics {
     pub shard_windows: Vec<WindowedHistogram>,
     /// Per-shard fan-out accounting.
     pub fanout: FanoutStats,
+    /// Online recall estimate vs the full-fanout shadow re-execution
+    /// (all-zero when `quality_sample` is 0).
+    pub quality: QualityStats,
+    /// Always-on: which contacted-shard rank (scored order) produced
+    /// the merged winner.
+    pub served_from: RankHistogram,
+    /// Sampled: rank, in the router's *full* scored order, of the shard
+    /// holding the true (full-fanout) winner — the fan-out
+    /// effectiveness view.  A mass at ranks `>= s` means raising the
+    /// fan-out would recover real winners.
+    pub truth_from: RankHistogram,
+    /// Always-on: shard candidates scanned → merged `k` survival.
+    pub survival: SurvivalStats,
+    /// Sampled, indexed by shard: how much of the full-fanout truth set
+    /// lives on each shard and how much of it serving captured.  Sized
+    /// to the shard count at router start.
+    pub shard_quality: Vec<ShardQuality>,
+}
+
+/// One shard's share of the shadow (full-fanout) truth set and how much
+/// of it the serving answer captured — "which shard's data are we
+/// missing?" in one pair of counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardQuality {
+    /// Exact top-k neighbors that live on this shard (over all shadow
+    /// comparisons).
+    pub truth: u64,
+    /// Of those, how many the served answer actually returned.
+    pub captured: u64,
+}
+
+impl ShardQuality {
+    /// Fraction of this shard's truth neighbors that serving captured
+    /// (`1.0` when the shard held none — no evidence of loss).
+    pub fn capture_rate(&self) -> f64 {
+        if self.truth == 0 {
+            1.0
+        } else {
+            self.captured as f64 / self.truth as f64
+        }
+    }
+
+    /// `{truth, captured, capture_rate}` for the STATS report.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("truth".to_string(), Json::Num(self.truth as f64));
+        o.insert("captured".to_string(), Json::Num(self.captured as f64));
+        o.insert(
+            "capture_rate".to_string(),
+            Json::Num(self.capture_rate()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Bound of the shadow hand-off queue: deep enough to ride out shard
+/// latency spikes, small enough that a stalled shadow worker sheds
+/// (oldest-first) instead of accumulating.
+const SHADOW_QUEUE_DEPTH: usize = 256;
+
+/// One sampled request handed to the shadow worker: the query, what
+/// serving answered, and the knobs needed to re-execute it faithfully.
+struct RouterShadowSample {
+    vector: Vec<f32>,
+    served: Vec<Neighbor>,
+    top_p: usize,
+    top_k: usize,
+}
+
+/// Shadow-sampling state: the admission counter deciding which requests
+/// are sampled and the bounded drop-oldest queue feeding the
+/// full-fanout shadow worker.
+struct RouterShadow {
+    every: u64,
+    served: AtomicU64,
+    queue: Arc<ShadowQueue<RouterShadowSample>>,
 }
 
 /// One queued router request.
@@ -191,6 +286,8 @@ struct RouterShared {
     /// Trace sink; consulted at admission for sampling.  `None` =
     /// tracing disabled.
     trace: Option<Arc<TraceSink>>,
+    /// Shadow quality sampling; `None` = quality sampling disabled.
+    shadow: Option<RouterShadow>,
 }
 
 impl RouterShared {
@@ -214,6 +311,8 @@ pub struct ClusterRouter {
     shared: Arc<RouterShared>,
     tx: Mutex<Option<SyncSender<RouterRequest>>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// The full-fanout shadow worker (present iff `quality_sample > 0`).
+    shadow_worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     next_id: AtomicU64,
 }
 
@@ -248,8 +347,14 @@ impl ClusterRouter {
         }
         let metrics = RouterMetrics {
             shard_windows: vec![WindowedHistogram::new(); addrs.len()],
+            shard_quality: vec![ShardQuality::default(); addrs.len()],
             ..RouterMetrics::default()
         };
+        let shadow = (cfg.quality_sample > 0).then(|| RouterShadow {
+            every: cfg.quality_sample,
+            served: AtomicU64::new(0),
+            queue: Arc::new(ShadowQueue::new(SHADOW_QUEUE_DEPTH)),
+        });
         let shared = Arc::new(RouterShared {
             table,
             addrs,
@@ -258,6 +363,7 @@ impl ClusterRouter {
             metrics: Mutex::new(metrics),
             index_info: Mutex::new(None),
             trace,
+            shadow,
         });
         let (req_tx, req_rx) = mpsc::sync_channel::<RouterRequest>(cfg.queue_depth);
         let req_rx: Arc<Mutex<Receiver<RouterRequest>>> = Arc::new(Mutex::new(req_rx));
@@ -290,10 +396,35 @@ impl ClusterRouter {
                 .map_err(|e| Error::Coordinator(format!("spawn router worker: {e}")))?;
             workers.push(handle);
         }
+        // the shadow worker owns its own links so quality re-execution
+        // never competes with serving for a pooled connection
+        let shadow_worker = if shared.shadow.is_some() {
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name("amsearch-router-shadow".to_string())
+                .spawn(move || {
+                    let mut links: Vec<ShardLink> = shared
+                        .addrs
+                        .iter()
+                        .map(|a| ShardLink::new(a.clone()))
+                        .collect();
+                    let Some(shadow) = shared.shadow.as_ref() else { return };
+                    while let Some(sample) = shadow.queue.pop() {
+                        shadow_compare(&shared, &mut links, &sample);
+                    }
+                })
+                .map_err(|e| {
+                    Error::Coordinator(format!("spawn router shadow worker: {e}"))
+                })?;
+            Some(handle)
+        } else {
+            None
+        };
         Ok(ClusterRouter {
             shared,
             tx: Mutex::new(Some(req_tx)),
             workers: Mutex::new(workers),
+            shadow_worker: Mutex::new(shadow_worker),
             next_id: AtomicU64::new(0),
         })
     }
@@ -351,9 +482,221 @@ impl ClusterRouter {
         }
     }
 
-    /// Snapshot the router metrics.
+    /// Replay one query through the routing tier with full
+    /// introspection: shard scores, the fan-out decision and its
+    /// margin, per-shard results, merged neighbors with shard
+    /// attribution, and (with `exact`) the full-fanout ground-truth
+    /// diff.  Runs synchronously on fresh shard links so the serving
+    /// pool is never perturbed.
+    pub fn explain(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        exact: bool,
+    ) -> Result<Json> {
+        let shared = &self.shared;
+        if vector.len() != shared.table.dim() {
+            return Err(Error::Shape(format!(
+                "query dim {} != index dim {}",
+                vector.len(),
+                shared.table.dim()
+            )));
+        }
+        let mut links: Vec<ShardLink> = shared
+            .addrs
+            .iter()
+            .map(|a| ShardLink::new(a.clone()))
+            .collect();
+        let n = shared.table.n_shards();
+        let s = shared.effective_fan_out();
+        let scores = shared.table.score(&vector);
+        let order = top_p_largest(&scores, n);
+        // contact every shard once when the exact diff is requested:
+        // the first `s` answers are the serving-fanout view, the rest
+        // complete the ground-truth merge (at s = N the two coincide)
+        let contact: &[u32] = if exact { &order } else { &order[..s] };
+        let mut pending: Vec<(usize, u64)> = Vec::with_capacity(contact.len());
+        for &si in contact {
+            let id = links[si as usize]
+                .submit(&vector, top_p, top_k, 0, &shared.retry)?;
+            pending.push((si as usize, id));
+        }
+        let mut results: Vec<Option<WireResponse>> = vec![None; n];
+        for (si, id) in pending {
+            let r = links[si].wait(id, &vector, top_p, top_k, 0, &shared.retry)?;
+            results[si] = Some(r);
+        }
+        let k_req = if top_k == 0 { shared.table.default_top_k() } else { top_k };
+        let k = k_req.min(shared.table.n_vectors()).max(1);
+        // same merge rule as serve_one's gather (TopK over remapped ids)
+        let merge = |take: &[u32]| -> Vec<Neighbor> {
+            let mut acc = TopK::new(k);
+            for &si in take {
+                if let Some(r) = &results[si as usize] {
+                    for nb in &r.neighbors {
+                        acc.push(
+                            nb.distance,
+                            shared.table.global_id(si as usize, nb.id),
+                        );
+                    }
+                }
+            }
+            acc.into_neighbors()
+        };
+        let served = merge(&order[..s]);
+        let shard_of = |gid: u32| -> Option<usize> {
+            results.iter().enumerate().find_map(|(si, r)| {
+                r.as_ref().and_then(|r| {
+                    r.neighbors
+                        .iter()
+                        .any(|nb| shared.table.global_id(si, nb.id) == gid)
+                        .then_some(si)
+                })
+            })
+        };
+        let mut o = BTreeMap::new();
+        o.insert("backend".to_string(), Json::Str("router".to_string()));
+        o.insert("shards".to_string(), Json::Num(n as f64));
+        // the fan-out decision: every shard's score and rank, the
+        // contacted cut, and the margin at the cut
+        let mut fan = BTreeMap::new();
+        fan.insert("s".to_string(), Json::Num(s as f64));
+        if s > 0 && s < n {
+            let margin = scores[order[s - 1] as usize] - scores[order[s] as usize];
+            fan.insert("margin".to_string(), Json::Num(margin as f64));
+        }
+        fan.insert(
+            "ranked".to_string(),
+            Json::Arr(
+                order
+                    .iter()
+                    .enumerate()
+                    .map(|(rank, &si)| {
+                        let mut e = BTreeMap::new();
+                        e.insert("shard".to_string(), Json::Num(si as f64));
+                        e.insert("rank".to_string(), Json::Num(rank as f64));
+                        e.insert(
+                            "score".to_string(),
+                            Json::Num(scores[si as usize] as f64),
+                        );
+                        e.insert("contacted".to_string(), Json::Bool(rank < s));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("fan_out".to_string(), Json::Obj(fan));
+        // per-shard results for the serving fan-out
+        let mut candidates: u64 = 0;
+        let mut shard_results = Vec::new();
+        for (rank, &si) in order[..s].iter().enumerate() {
+            let Some(r) = &results[si as usize] else { continue };
+            candidates += r.candidates;
+            let mut e = BTreeMap::new();
+            e.insert("shard".to_string(), Json::Num(si as f64));
+            e.insert("rank".to_string(), Json::Num(rank as f64));
+            e.insert(
+                "returned".to_string(),
+                Json::Num(r.neighbors.len() as f64),
+            );
+            e.insert("candidates".to_string(), Json::Num(r.candidates as f64));
+            e.insert("ops".to_string(), Json::Num(r.ops as f64));
+            e.insert("service_ns".to_string(), Json::Num(r.service_ns as f64));
+            shard_results.push(Json::Obj(e));
+        }
+        o.insert("shard_results".to_string(), Json::Arr(shard_results));
+        o.insert(
+            "neighbors".to_string(),
+            Json::Arr(
+                served
+                    .iter()
+                    .map(|nb| {
+                        let mut e = BTreeMap::new();
+                        e.insert("id".to_string(), Json::Num(nb.id as f64));
+                        e.insert(
+                            "distance".to_string(),
+                            Json::Num(nb.distance as f64),
+                        );
+                        match shard_of(nb.id) {
+                            Some(si) => {
+                                e.insert(
+                                    "shard".to_string(),
+                                    Json::Num(si as f64),
+                                );
+                                let rank = order
+                                    .iter()
+                                    .position(|&c| c as usize == si);
+                                e.insert(
+                                    "shard_rank".to_string(),
+                                    rank.map_or(Json::Null, |r| {
+                                        Json::Num(r as f64)
+                                    }),
+                                );
+                            }
+                            None => {
+                                e.insert("shard".to_string(), Json::Null);
+                                e.insert("shard_rank".to_string(), Json::Null);
+                            }
+                        }
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        let mut funnel = BTreeMap::new();
+        funnel.insert("candidates".to_string(), Json::Num(candidates as f64));
+        funnel.insert("survivors".to_string(), Json::Num(served.len() as f64));
+        o.insert("funnel".to_string(), Json::Obj(funnel));
+        if exact {
+            let truth = merge(&order);
+            let mut q = QualityStats::default();
+            q.record_comparison(&served, &truth);
+            let mut e = BTreeMap::new();
+            e.insert(
+                "neighbors".to_string(),
+                Json::Arr(
+                    truth
+                        .iter()
+                        .map(|nb| {
+                            let mut t = BTreeMap::new();
+                            t.insert("id".to_string(), Json::Num(nb.id as f64));
+                            t.insert(
+                                "distance".to_string(),
+                                Json::Num(nb.distance as f64),
+                            );
+                            Json::Obj(t)
+                        })
+                        .collect(),
+                ),
+            );
+            e.insert("recall".to_string(), Json::Num(q.recall()));
+            e.insert(
+                "matches_exactly".to_string(),
+                Json::Bool(q.exact_matches == 1),
+            );
+            e.insert(
+                "mean_rank_displacement".to_string(),
+                Json::Num(q.mean_displacement()),
+            );
+            e.insert(
+                "mean_distance_error".to_string(),
+                Json::Num(q.mean_distance_error()),
+            );
+            o.insert("exact".to_string(), Json::Obj(e));
+        }
+        Ok(Json::Obj(o))
+    }
+
+    /// Snapshot the router metrics.  The shadow queue's drop counter is
+    /// folded in here so the snapshot reflects sheds that happened
+    /// since the last comparison was recorded.
     pub fn metrics(&self) -> RouterMetrics {
-        lock_unpoisoned(&self.shared.metrics).clone()
+        let mut m = lock_unpoisoned(&self.shared.metrics).clone();
+        if let Some(shadow) = &self.shared.shadow {
+            m.quality.dropped = shadow.queue.dropped();
+        }
+        m
     }
 
     /// The routing table served by this router.
@@ -362,12 +705,27 @@ impl ClusterRouter {
     }
 
     /// Graceful shutdown: stop accepting, drain queued requests (every
-    /// accepted request still gets its response), join the workers.
+    /// accepted request still gets its response), join the workers,
+    /// drain the shadow queue, and flush buffered trace records.
     pub fn shutdown(&self) {
         *lock_unpoisoned(&self.tx) = None;
         let mut workers = lock_unpoisoned(&self.workers);
         for w in workers.drain(..) {
             let _ = w.join();
+        }
+        drop(workers);
+        // close after the serving workers stopped pushing: the shadow
+        // worker drains what is queued, then exits
+        if let Some(shadow) = &self.shared.shadow {
+            shadow.queue.close();
+        }
+        if let Some(h) = lock_unpoisoned(&self.shadow_worker).take() {
+            let _ = h.join();
+        }
+        // push the tail of buffered trace records to disk before the
+        // process (or a test) inspects the trace file
+        if let Some(trace) = &self.shared.trace {
+            trace.flush();
         }
     }
 }
@@ -417,6 +775,16 @@ impl Serveable for ClusterRouter {
             .map_err(|_| Error::Coordinator("router shutting down".into()))
     }
 
+    fn explain(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        exact: bool,
+    ) -> Result<Json> {
+        ClusterRouter::explain(self, vector, top_p, top_k, exact)
+    }
+
     fn stats_json(&self) -> Json {
         let m = self.metrics();
         let mut o = BTreeMap::new();
@@ -454,6 +822,25 @@ impl Serveable for ClusterRouter {
             Json::Arr(m.shard_windows.iter().map(|w| w.to_json()).collect()),
         );
         o.insert("fanout".to_string(), m.fanout.to_json());
+        // always-on selectivity: shard-rank of the merged winner +
+        // candidate→k survival, same shape as the coordinator's
+        o.insert(
+            "selectivity".to_string(),
+            crate::coordinator::selectivity_json(&m.served_from, &m.survival),
+        );
+        // present iff quality sampling is on, so scrapers can key off
+        // the field deterministically
+        if self.shared.shadow.is_some() {
+            o.insert("quality".to_string(), m.quality.to_json());
+            o.insert(
+                "fanout_effectiveness".to_string(),
+                m.truth_from.to_json(),
+            );
+            o.insert(
+                "shard_quality".to_string(),
+                Json::Arr(m.shard_quality.iter().map(|q| q.to_json()).collect()),
+            );
+        }
         Json::Obj(o)
     }
 
@@ -476,6 +863,38 @@ impl Serveable for ClusterRouter {
                 &[("role", "router"), ("shard", shard.as_str())],
                 &w.windowed(),
             );
+        }
+        // selectivity gauges are always exported; the sampled quality
+        // families appear iff quality sampling is on (same presence
+        // rule as the STATS `quality` field)
+        reg.gauge(
+            prom::M_QUALITY_TOP1_FRACTION,
+            &role,
+            m.served_from.top1_fraction(),
+        );
+        reg.gauge(prom::M_QUALITY_SURVIVAL, &role, m.survival.ratio());
+        if self.shared.shadow.is_some() {
+            reg.counter(prom::M_QUALITY_SAMPLES, &role, m.quality.samples);
+            reg.counter(prom::M_QUALITY_DROPPED, &role, m.quality.dropped);
+            reg.gauge(prom::M_QUALITY_RECALL, &role, m.quality.recall());
+            reg.gauge(
+                prom::M_QUALITY_RANK_DISPLACEMENT,
+                &role,
+                m.quality.mean_displacement(),
+            );
+            reg.gauge(
+                prom::M_QUALITY_DISTANCE_ERROR,
+                &role,
+                m.quality.mean_distance_error(),
+            );
+            for (si, q) in m.shard_quality.iter().enumerate() {
+                let shard = si.to_string();
+                reg.gauge(
+                    prom::M_QUALITY_SHARD_CAPTURE,
+                    &[("role", "router"), ("shard", shard.as_str())],
+                    q.capture_rate(),
+                );
+            }
         }
         reg
     }
@@ -538,6 +957,10 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
     let mut ops: u64 = (d * d * n_shards) as u64;
     let gather_started = Instant::now();
     let mut shard_ns: Vec<(usize, u64)> = Vec::with_capacity(pending.len());
+    // each reached shard's own best neighbor (shards return ascending
+    // `(distance, id)`, so their first is their best), in contacted
+    // order — resolves which fan-out rank produced the merged winner
+    let mut shard_best: Vec<Option<Neighbor>> = Vec::with_capacity(pending.len());
     for (si, id) in pending {
         match links[si].wait(
             id,
@@ -548,6 +971,10 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
             &shared.retry,
         ) {
             Ok(r) => {
+                shard_best.push(r.neighbors.first().map(|n| Neighbor {
+                    id: shared.table.global_id(si, n.id),
+                    distance: n.distance,
+                }));
                 for n in &r.neighbors {
                     acc.push(n.distance, shared.table.global_id(si, n.id));
                 }
@@ -559,6 +986,7 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
                 shard_ns.push((si, r.service_ns));
             }
             Err(e) => {
+                shard_best.push(None);
                 if failure.is_none() {
                     failure = Some(e);
                 }
@@ -581,6 +1009,28 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
             error: None,
         },
     };
+    // shadow sampling: clone-only — the served response itself is
+    // untouched, so sampled and unsampled serving stay bitwise-identical
+    if resp.error.is_none() {
+        if let Some(shadow) = &shared.shadow {
+            let n = 1 + shadow.served.fetch_add(1, Ordering::Relaxed);
+            if sample_hit(n, shadow.every) {
+                shadow.queue.push(RouterShadowSample {
+                    vector: req.vector.clone(),
+                    served: resp.neighbors.clone(),
+                    top_p: req.top_p,
+                    top_k: req.top_k,
+                });
+            }
+        }
+    }
+    // which contacted-shard rank produced the merged winner (None ⇒
+    // unresolved: empty merge)
+    let served_rank = resp.neighbors.first().and_then(|w| {
+        shard_best
+            .iter()
+            .position(|b| matches!(b, Some(n) if n.id == w.id))
+    });
     // metrics BEFORE completing the request, same discipline as the
     // coordinator: a client must never observe its response while its
     // own request is uncounted
@@ -600,6 +1050,10 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
             }
         }
         m.fanout.record(&submitted, n_shards);
+        if resp.error.is_none() {
+            m.served_from.record(served_rank);
+            m.survival.record(resp.candidates, resp.neighbors.len());
+        }
     }
     let Some(sink) = shared.trace.as_deref() else {
         let _ = req.resp.send(resp); // receiver may have timed out
@@ -631,6 +1085,116 @@ fn serve_one(shared: &RouterShared, links: &mut [ShardLink], req: RouterRequest)
     t.span_ns("respond", send_started.elapsed().as_nanos() as u64);
     let rec = t.finish_with_total(req.enqueued.elapsed().as_nanos() as u64);
     sink.emit(&rec);
+}
+
+/// Shadow-compare one sampled request: re-execute at full fan-out over
+/// the shadow worker's own links, then fold the served-vs-exact
+/// comparison, the fan-out-effectiveness rank, and the per-shard truth
+/// attribution into the metrics under the usual single lock.  A failed
+/// re-execution (unreachable shard) is skipped, never charged to the
+/// estimate.
+fn shadow_compare(
+    shared: &RouterShared,
+    links: &mut [ShardLink],
+    sample: &RouterShadowSample,
+) {
+    let Some((exact, returned)) = shadow_full_fanout(shared, links, sample) else {
+        return;
+    };
+    // the shard each exact neighbor lives on (global ids are unique, so
+    // membership in one shard's returned list resolves it)
+    let shard_of = |id: u32| returned.iter().position(|ids| ids.contains(&id));
+    // rank, in the router's full scored order, of the shard holding the
+    // true winner — fan-out effectiveness ("would a bigger s help?")
+    let truth_rank = exact.first().and_then(|w| shard_of(w.id)).map(|si| {
+        let scores = shared.table.score(&sample.vector);
+        let order = top_p_largest(&scores, shared.table.n_shards());
+        order
+            .iter()
+            .position(|&c| c as usize == si)
+            .unwrap_or(order.len())
+    });
+    let mut per_shard: Vec<ShardQuality> =
+        vec![ShardQuality::default(); returned.len()];
+    for n in &exact {
+        let Some(si) = shard_of(n.id) else { continue };
+        per_shard[si].truth += 1;
+        if sample.served.iter().any(|s| s.id == n.id) {
+            per_shard[si].captured += 1;
+        }
+    }
+    let mut m = lock_unpoisoned(&shared.metrics);
+    m.quality.record_comparison(&sample.served, &exact);
+    m.truth_from.record(truth_rank);
+    for (si, q) in per_shard.iter().enumerate() {
+        if let Some(slot) = m.shard_quality.get_mut(si) {
+            slot.truth += q.truth;
+            slot.captured += q.captured;
+        }
+    }
+}
+
+/// Re-execute one sampled query at full fan-out (`s = N`) and merge
+/// exactly like [`serve_one`]'s gather — same per-shard `top_p`, same
+/// `k` clamp, same `TopK` tie-break — so at serving fan-out `s = N`
+/// the shadow answer is identical to the served one by construction.
+/// Returns the merged exact top-k plus each shard's returned global
+/// ids, or `None` when any shard contact failed.
+fn shadow_full_fanout(
+    shared: &RouterShared,
+    links: &mut [ShardLink],
+    sample: &RouterShadowSample,
+) -> Option<(Vec<Neighbor>, Vec<Vec<u32>>)> {
+    let mut pending: Vec<(usize, u64)> = Vec::with_capacity(links.len());
+    let mut failed = false;
+    for si in 0..links.len() {
+        match links[si].submit(
+            &sample.vector,
+            sample.top_p,
+            sample.top_k,
+            0,
+            &shared.retry,
+        ) {
+            Ok(id) => pending.push((si, id)),
+            Err(_) => {
+                failed = true;
+                break;
+            }
+        }
+    }
+    let k_req = if sample.top_k == 0 {
+        shared.table.default_top_k()
+    } else {
+        sample.top_k
+    };
+    let k = k_req.min(shared.table.n_vectors()).max(1);
+    let mut acc = TopK::new(k);
+    let mut returned: Vec<Vec<u32>> = vec![Vec::new(); links.len()];
+    // collect every submitted response even after a failure so the
+    // links stay in sync for the next sample
+    for (si, id) in pending {
+        match links[si].wait(
+            id,
+            &sample.vector,
+            sample.top_p,
+            sample.top_k,
+            0,
+            &shared.retry,
+        ) {
+            Ok(r) => {
+                for n in &r.neighbors {
+                    let gid = shared.table.global_id(si, n.id);
+                    acc.push(n.distance, gid);
+                    returned[si].push(gid);
+                }
+            }
+            Err(_) => failed = true,
+        }
+    }
+    if failed {
+        return None;
+    }
+    Some((acc.into_neighbors(), returned))
 }
 
 /// One router→shard connection with reconnect-on-failure semantics.
@@ -823,12 +1387,68 @@ mod tests {
             matches!(windows, Json::Arr(a) if a.len() == 2),
             "one rolling window per shard link"
         );
+        // always-on selectivity; sampled quality absent while the knob
+        // is off
+        let sel = stats.get("selectivity").unwrap();
+        assert!(sel.get("served_from").is_some());
+        assert!(sel.get("survival").is_some());
+        assert!(stats.get("quality").is_none(), "sampling off ⇒ no estimate");
+        assert!(stats.get("shard_quality").is_none());
         // the exposition surface derives from the same snapshot and
         // must always validate with every required family present
         let text = Serveable::metrics_registry(&router).render();
         crate::obs::prom::validate(&text, &crate::obs::REQUIRED_FAMILIES).unwrap();
         assert!(text.contains("amsearch_requests_total{role=\"router\"}"));
         assert!(text.contains("shard=\"1\""), "per-shard windowed family");
+        assert!(text.contains("amsearch_quality_top1_fraction{role=\"router\"}"));
+        assert!(text.contains("amsearch_quality_survival_ratio{role=\"router\"}"));
+        assert!(
+            !text.contains("amsearch_quality_recall"),
+            "sampled families gated on the quality knob"
+        );
         router.shutdown();
+    }
+
+    #[test]
+    fn quality_knob_exposes_estimate_surfaces() {
+        let table = small_table();
+        let router = ClusterRouter::start(
+            table,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            RouterConfig { workers: 1, quality_sample: 2, ..Default::default() },
+        )
+        .unwrap();
+        let stats = Serveable::stats_json(&router);
+        let q = stats.get("quality").unwrap();
+        assert_eq!(q.get("samples").unwrap().as_u64(), Some(0));
+        assert_eq!(q.get("recall").unwrap().as_f64(), Some(1.0));
+        let sq = stats.get("shard_quality").unwrap();
+        assert!(
+            matches!(sq, Json::Arr(a) if a.len() == 2),
+            "one capture entry per shard"
+        );
+        assert!(stats.get("fanout_effectiveness").is_some());
+        let text = Serveable::metrics_registry(&router).render();
+        crate::obs::prom::validate(&text, &crate::obs::REQUIRED_FAMILIES).unwrap();
+        assert!(text.contains("amsearch_quality_samples_total{role=\"router\"}"));
+        assert!(text.contains("amsearch_quality_recall{role=\"router\"}"));
+        assert!(text.contains(
+            "amsearch_quality_shard_capture_rate{role=\"router\",shard=\"0\"}"
+        ));
+        // shutdown with an idle shadow worker must not hang
+        router.shutdown();
+    }
+
+    #[test]
+    fn shard_quality_capture_rate() {
+        let mut q = ShardQuality::default();
+        assert_eq!(q.capture_rate(), 1.0, "no truth ⇒ no evidence of loss");
+        q.truth = 4;
+        q.captured = 3;
+        assert_eq!(q.capture_rate(), 0.75);
+        let j = q.to_json();
+        assert_eq!(j.get("truth").unwrap().as_u64(), Some(4));
+        assert_eq!(j.get("captured").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("capture_rate").unwrap().as_f64(), Some(0.75));
     }
 }

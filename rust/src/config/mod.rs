@@ -189,6 +189,9 @@ pub struct ServeConfig {
     /// Force-sample requests slower than this many milliseconds
     /// (`0` = no slow-query forcing).
     pub trace_slow_ms: u64,
+    /// Shadow-execute an exact scan for every Nth request and fold the
+    /// comparison into the online recall estimate (`0` = off).
+    pub quality_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -200,6 +203,7 @@ impl Default for ServeConfig {
             queue_depth: 1024,
             trace_sample: 0,
             trace_slow_ms: 0,
+            quality_sample: 0,
         }
     }
 }
@@ -212,6 +216,7 @@ impl ServeConfig {
             max_wait_us: self.max_wait_us,
             workers: self.workers,
             queue_depth: self.queue_depth,
+            quality_sample: self.quality_sample,
         }
     }
 }
@@ -371,6 +376,8 @@ impl AppConfig {
         cfg.serve.trace_sample = get_u64(sv, "trace_sample", cfg.serve.trace_sample)?;
         cfg.serve.trace_slow_ms =
             get_u64(sv, "trace_slow_ms", cfg.serve.trace_slow_ms)?;
+        cfg.serve.quality_sample =
+            get_u64(sv, "quality_sample", cfg.serve.quality_sample)?;
 
         let be = root.get("backend").unwrap_or(&empty);
         cfg.backend.kind = get_parsed(be, "kind", cfg.backend.kind)?;
@@ -456,6 +463,7 @@ mod tests {
         assert_eq!(cfg.serve.max_batch, 8);
         assert_eq!(cfg.serve.trace_sample, 0, "tracing defaults off");
         assert_eq!(cfg.serve.trace_slow_ms, 0);
+        assert_eq!(cfg.serve.quality_sample, 0, "quality sampling defaults off");
         assert_eq!(cfg.dataset.kind, DatasetKind::SiftLike);
     }
 
@@ -469,6 +477,17 @@ mod tests {
         assert_eq!(cfg.serve.trace_slow_ms, 250);
         assert!(
             AppConfig::from_json(r#"{"serve": {"trace_sample": -1}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn quality_knob_parses_and_threads_through() {
+        let cfg =
+            AppConfig::from_json(r#"{"serve": {"quality_sample": 10}}"#).unwrap();
+        assert_eq!(cfg.serve.quality_sample, 10);
+        assert_eq!(cfg.serve.to_coordinator().quality_sample, 10);
+        assert!(
+            AppConfig::from_json(r#"{"serve": {"quality_sample": -2}}"#).is_err()
         );
     }
 

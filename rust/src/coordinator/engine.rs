@@ -17,16 +17,19 @@
 //! `Rc`-based, so each worker thread constructs its own engine via an
 //! [`EngineFactory`] and keeps it thread-local for its lifetime.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::index::{AmIndex, QueryResult};
 use crate::metrics::{BatchScanStats, OpsCounter};
+use crate::obs::quality::QualityStats;
 use crate::runtime::{
     Backend, ClassScorer, Manifest, NativeScorer, PjrtDistances, PjrtScorer,
 };
-use crate::search::{invert_polled, top_p_largest, TopK};
+use crate::search::{invert_polled, top_p_largest, Neighbor, TopK};
+use crate::util::Json;
 
 use super::protocol::SearchResponse;
 
@@ -221,6 +224,186 @@ impl Engine {
     /// The index served by this engine.
     pub fn index(&self) -> &AmIndex {
         &self.index
+    }
+
+    /// Ground-truth top-`k` for one query: an exhaustive exact scan over
+    /// every stored vector, bypassing the poll *and* any quantized
+    /// codes.  Distances go through the same pruned kernel dispatch as
+    /// the exact serving scan, so on an exact-precision index a served
+    /// answer that covered the whole database is bitwise-identical to
+    /// this one.  This is the shadow worker's reference answer and the
+    /// `explain --exact` baseline — never part of the serving path.
+    pub fn exact_scan(&self, x: &[f32], k: usize) -> Vec<Neighbor> {
+        let metric = self.index.params().metric;
+        let kernels = self.index.kernels();
+        let k = k.min(self.index.len()).max(1);
+        let d = self.index.dim();
+        let mut acc = TopK::new(k);
+        for (vid, v) in self.index.data().as_flat().chunks_exact(d).enumerate() {
+            if let Some(dist) = kernels.distance_pruned(metric, x, v, acc.bound()) {
+                acc.push(dist, vid as u32);
+            }
+        }
+        acc.into_neighbors()
+    }
+
+    /// Replay one query with full introspection: the class scores and
+    /// poll decision (with its margin), per-class candidate counts, the
+    /// candidate→neighbor funnel, final neighbors annotated with the
+    /// polled rank of their source class, per-stage timings, and — with
+    /// `exact` — the ground-truth diff against [`Self::exact_scan`].
+    /// Admin path (the EXPLAIN frame): one pipeline call plus one extra
+    /// scoring call, never used by serving.
+    pub fn explain(&self, x: &[f32], top_p: usize, top_k: usize, exact: bool) -> Result<Json> {
+        let d = self.index.dim();
+        if x.len() != d {
+            return Err(Error::Shape(format!(
+                "explain: query dim {} != index dim {d}",
+                x.len()
+            )));
+        }
+        let q = self.index.params().n_classes;
+        let out = self.serve_batch_detailed(&[(x, top_p, top_k)])?;
+        let Some(resp) = out.responses.first() else {
+            return Err(Error::Coordinator("explain: empty batch output".into()));
+        };
+        // the pipeline call doesn't expose its score matrix; re-score
+        // the single query for introspection
+        let scores = self.scorer.score(x)?;
+        let p = if top_p == 0 { self.index.params().top_p } else { top_p }.min(q);
+        let k = if top_k == 0 { self.index.params().top_k } else { top_k }
+            .min(self.index.len())
+            .max(1);
+        let ranked = top_p_largest(&scores, q);
+
+        let mut root = BTreeMap::new();
+        root.insert("backend".to_string(), Json::Str(self.backend().to_string()));
+        root.insert(
+            "quant_mode".to_string(),
+            Json::Str(self.index.quant_mode().to_string()),
+        );
+        if let Some(quant) = self.index.quant() {
+            root.insert("rerank".to_string(), Json::Num(quant.rerank() as f64));
+        }
+        let mut requested = BTreeMap::new();
+        requested.insert("top_p".to_string(), Json::Num(top_p as f64));
+        requested.insert("top_k".to_string(), Json::Num(top_k as f64));
+        root.insert("requested".to_string(), Json::Obj(requested));
+        let mut resolved = BTreeMap::new();
+        resolved.insert("p".to_string(), Json::Num(p as f64));
+        resolved.insert("k".to_string(), Json::Num(k as f64));
+        resolved.insert("n_classes".to_string(), Json::Num(q as f64));
+        root.insert("resolved".to_string(), Json::Obj(resolved));
+
+        // the poll decision: every polled class plus the next few
+        // runners-up, so the margin is visible in context
+        let shown = (p + 8).min(q);
+        let mut classes = Vec::with_capacity(shown);
+        for (rank, &ci) in ranked.iter().take(shown).enumerate() {
+            let mut c = BTreeMap::new();
+            c.insert("class".to_string(), Json::Num(ci as f64));
+            c.insert("rank".to_string(), Json::Num(rank as f64));
+            c.insert("score".to_string(), Json::Num(scores[ci as usize] as f64));
+            c.insert(
+                "members".to_string(),
+                Json::Num(self.index.partition().members(ci as usize).len() as f64),
+            );
+            c.insert("polled".to_string(), Json::Bool(rank < p));
+            classes.push(Json::Obj(c));
+        }
+        let mut poll = BTreeMap::new();
+        poll.insert(
+            "polled".to_string(),
+            Json::Arr(resp.polled.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        // margin between the last polled class and the best unpolled
+        // one — how close the poll came to a different decision
+        if p > 0 && p < q {
+            let last_in = scores[ranked[p - 1] as usize];
+            let first_out = scores[ranked[p] as usize];
+            poll.insert(
+                "margin".to_string(),
+                Json::Num((last_in - first_out) as f64),
+            );
+        }
+        poll.insert("classes".to_string(), Json::Arr(classes));
+        root.insert("poll".to_string(), Json::Obj(poll));
+
+        let mut neighbors = Vec::with_capacity(resp.neighbors.len());
+        for n in &resp.neighbors {
+            let ci = self.index.partition().class_of(n.id as usize);
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Num(n.id as f64));
+            o.insert("distance".to_string(), Json::Num(n.distance as f64));
+            o.insert("class".to_string(), Json::Num(ci as f64));
+            match resp.polled.iter().position(|&c| c == ci) {
+                Some(rank) => {
+                    o.insert("class_rank".to_string(), Json::Num(rank as f64));
+                }
+                None => {
+                    o.insert("class_rank".to_string(), Json::Null);
+                }
+            }
+            neighbors.push(Json::Obj(o));
+        }
+        root.insert("neighbors".to_string(), Json::Arr(neighbors));
+
+        let mut funnel = BTreeMap::new();
+        funnel.insert("candidates".to_string(), Json::Num(resp.candidates as f64));
+        funnel.insert(
+            "survivors".to_string(),
+            Json::Num(resp.neighbors.len() as f64),
+        );
+        root.insert("funnel".to_string(), Json::Obj(funnel));
+        root.insert("ops".to_string(), Json::Num(resp.ops as f64));
+
+        let mut timings = BTreeMap::new();
+        timings.insert("score_ns".to_string(), Json::Num(out.timings.score_ns as f64));
+        timings.insert(
+            "select_ns".to_string(),
+            Json::Num(out.timings.select_ns as f64),
+        );
+        timings.insert("scan_ns".to_string(), Json::Num(out.timings.scan_ns as f64));
+        root.insert("timings".to_string(), Json::Obj(timings));
+
+        if exact {
+            let truth = self.exact_scan(x, k);
+            let mut quality = QualityStats::default();
+            quality.record_comparison(&resp.neighbors, &truth);
+            let mut ex = BTreeMap::new();
+            ex.insert(
+                "neighbors".to_string(),
+                Json::Arr(
+                    truth
+                        .iter()
+                        .map(|n| {
+                            let mut o = BTreeMap::new();
+                            o.insert("id".to_string(), Json::Num(n.id as f64));
+                            o.insert(
+                                "distance".to_string(),
+                                Json::Num(n.distance as f64),
+                            );
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                ),
+            );
+            ex.insert("recall".to_string(), Json::Num(quality.recall()));
+            ex.insert(
+                "matches_exactly".to_string(),
+                Json::Bool(quality.exact_matches == 1),
+            );
+            ex.insert(
+                "mean_rank_displacement".to_string(),
+                Json::Num(quality.mean_displacement()),
+            );
+            ex.insert(
+                "mean_distance_error".to_string(),
+                Json::Num(quality.mean_distance_error()),
+            );
+            root.insert("exact".to_string(), Json::Obj(ex));
+        }
+        Ok(Json::Obj(root))
     }
 
     /// Serve one batch through the class-grouped pipeline (see the
@@ -570,5 +753,67 @@ mod tests {
         let f = EngineFactory { index: idx, backend: Backend::Native, artifacts_dir: None };
         let e = f.build().unwrap();
         assert_eq!(e.backend(), "native");
+    }
+
+    #[test]
+    fn exact_scan_matches_full_poll_serving_bitwise() {
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx).unwrap();
+        for i in 0..4 {
+            let served = engine
+                .serve_batch(&[(wl.queries.get(i), 8usize, 5usize)])
+                .unwrap();
+            let truth = engine.exact_scan(wl.queries.get(i), 5);
+            assert_eq!(served[0].neighbors.len(), truth.len());
+            for (a, b) in served[0].neighbors.iter().zip(&truth) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+            }
+        }
+        // k clamps to the database size like the serving path
+        assert_eq!(engine.exact_scan(wl.queries.get(0), 100_000).len(), 256);
+    }
+
+    #[test]
+    fn explain_reports_poll_decision_and_exact_diff() {
+        let (idx, wl) = test_index();
+        let engine = Engine::native(idx).unwrap();
+        let j = engine.explain(wl.queries.get(0), 2, 3, true).unwrap();
+        let p = j.get("resolved").and_then(|r| r.get("p")).and_then(|v| v.as_usize());
+        assert_eq!(p, Some(2));
+        let polled = j
+            .get("poll")
+            .and_then(|o| o.get("polled"))
+            .and_then(|v| v.as_arr())
+            .unwrap();
+        assert_eq!(polled.len(), 2);
+        // p < q: the decision margin is reported and non-negative
+        let margin =
+            j.get("poll").and_then(|o| o.get("margin")).and_then(|v| v.as_f64());
+        assert!(margin.unwrap() >= 0.0);
+        let neighbors = j.get("neighbors").and_then(|v| v.as_arr()).unwrap();
+        assert!(!neighbors.is_empty());
+        for n in neighbors {
+            // every served neighbor's source class must be a polled one
+            assert!(n.get("class_rank").and_then(|v| v.as_usize()).is_some());
+        }
+        let recall =
+            j.get("exact").and_then(|e| e.get("recall")).and_then(|v| v.as_f64());
+        assert!((0.0..=1.0).contains(&recall.unwrap()));
+
+        // full poll IS exact: the diff must report a perfect answer
+        let j = engine.explain(wl.queries.get(0), 8, 3, true).unwrap();
+        let ex = j.get("exact").unwrap();
+        assert_eq!(ex.get("recall").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(ex.get("matches_exactly").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            ex.get("mean_distance_error").and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        // without --exact the diff section is absent
+        let j = engine.explain(wl.queries.get(0), 2, 3, false).unwrap();
+        assert!(j.get("exact").is_none());
+        // a wrong-dimension query is a typed error, not a panic
+        assert!(engine.explain(&[0.0; 3], 1, 1, false).is_err());
     }
 }

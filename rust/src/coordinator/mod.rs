@@ -12,4 +12,7 @@ pub mod server;
 
 pub use engine::{BatchOutput, Engine, EngineFactory};
 pub use protocol::{CoordinatorConfig, SearchRequest, SearchResponse};
-pub use server::{footprint_json, kernel_json, quant_json, SearchServer, ServerMetrics};
+pub use server::{
+    footprint_json, kernel_json, quant_json, selectivity_json, SearchServer,
+    ServerMetrics,
+};

@@ -101,11 +101,23 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bound of the request queue (backpressure).
     pub queue_depth: usize,
+    /// Shadow-execute an exact scan for every `quality_sample`-th
+    /// request and fold the comparison into the online recall estimate
+    /// (`0` = quality sampling off).  The shadow work runs on a
+    /// dedicated worker behind a bounded drop-oldest queue; it never
+    /// touches the serving path.
+    pub quality_sample: u64,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_batch: 8, max_wait_us: 200, workers: 2, queue_depth: 1024 }
+        CoordinatorConfig {
+            max_batch: 8,
+            max_wait_us: 200,
+            workers: 2,
+            queue_depth: 1024,
+            quality_sample: 0,
+        }
     }
 }
 

@@ -20,12 +20,38 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::{BatchScanStats, LatencyHistogram, OpsCounter, WindowedHistogram};
+use crate::obs::quality::{
+    sample_hit, QualityStats, RankHistogram, ShadowQueue, SurvivalStats,
+};
 use crate::obs::{prom, Registry, Trace, TraceSink};
+use crate::search::Neighbor;
 use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::run_batcher;
 use super::engine::EngineFactory;
 use super::protocol::{CoordinatorConfig, SearchRequest, SearchResponse};
+
+/// Bound of the shadow-scan queue: sampled requests pending exact
+/// re-execution.  Under load the oldest pending sample is dropped (and
+/// counted) — the estimate degrades, the serving path never does.
+const SHADOW_QUEUE_DEPTH: usize = 256;
+
+/// One sampled request awaiting its shadow exact scan: the query, the
+/// answer that was served, and the requested `k` (0 = index default).
+struct ShadowSample {
+    vector: Vec<f32>,
+    served: Vec<Neighbor>,
+    top_k: usize,
+}
+
+/// Shared sampling state for the shadow path: the deterministic
+/// served-request counter (request `n` is sampled iff `n % every == 0`)
+/// and the bounded queue to the shadow worker.
+struct ShadowContext {
+    every: u64,
+    served: std::sync::atomic::AtomicU64,
+    queue: Arc<ShadowQueue<ShadowSample>>,
+}
 
 /// Shared serving metrics.
 #[derive(Debug, Default)]
@@ -50,6 +76,14 @@ pub struct ServerMetrics {
     /// `latency`, but only the last ~10 s of them, so operators see
     /// current tail latency instead of a lifetime average.
     pub window: WindowedHistogram,
+    /// Online recall estimate fed by the shadow exact-scan worker
+    /// (all-zero when `quality_sample` is 0).
+    pub quality: QualityStats,
+    /// Always-on poll-selectivity telemetry: the polled rank of the
+    /// class that produced each request's top-1 neighbor.
+    pub served_from: RankHistogram,
+    /// Always-on candidate-survival funnel (scanned → returned).
+    pub survival: SurvivalStats,
 }
 
 impl ServerMetrics {
@@ -86,8 +120,18 @@ pub struct SearchServer {
     /// Trace sink shared with the worker threads; consulted at
     /// admission for sampling decisions.  `None` = tracing disabled.
     trace: Option<Arc<TraceSink>>,
+    /// Engine recipe, kept for the EXPLAIN admin path (each explain
+    /// builds a short-lived engine on the handler thread — the serving
+    /// engines are thread-local to their workers and not shareable).
+    factory: EngineFactory,
+    /// `quality_sample` knob (0 = shadow sampling off).
+    quality_sample: u64,
+    /// Shadow-scan handoff shared with the worker threads (present iff
+    /// `quality_sample > 0`).
+    shadow: Option<Arc<ShadowQueue<ShadowSample>>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shadow_worker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl SearchServer {
@@ -125,6 +169,53 @@ impl SearchServer {
             .spawn(move || run_batcher(req_rx, batch_tx, max_batch, max_wait))
             .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
 
+        // shadow path: a dedicated worker re-executes sampled requests
+        // as exhaustive exact scans, off the hot path, behind a bounded
+        // drop-oldest queue (it competes for CPU only when samples
+        // arrive; starving it costs estimate samples, not latency)
+        let shadow_ctx = if config.quality_sample > 0 {
+            let queue = Arc::new(ShadowQueue::<ShadowSample>::new(SHADOW_QUEUE_DEPTH));
+            Some(Arc::new(ShadowContext {
+                every: config.quality_sample,
+                served: std::sync::atomic::AtomicU64::new(0),
+                queue,
+            }))
+        } else {
+            None
+        };
+        let shadow_worker = match &shadow_ctx {
+            None => None,
+            Some(ctx) => {
+                let queue = ctx.queue.clone();
+                let factory = factory.clone();
+                let metrics = metrics.clone();
+                let handle = std::thread::Builder::new()
+                    .name("amsearch-shadow".into())
+                    .spawn(move || {
+                        let engine = match factory.build() {
+                            Ok(e) => e,
+                            Err(e) => {
+                                eprintln!("shadow worker: engine build failed: {e}");
+                                queue.close();
+                                return;
+                            }
+                        };
+                        while let Some(sample) = queue.pop() {
+                            let k = if sample.top_k == 0 {
+                                engine.index().params().top_k
+                            } else {
+                                sample.top_k
+                            };
+                            let truth = engine.exact_scan(&sample.vector, k);
+                            let mut m = lock_unpoisoned(&metrics);
+                            m.quality.record_comparison(&sample.served, &truth);
+                        }
+                    })
+                    .map_err(|e| Error::Coordinator(format!("spawn shadow: {e}")))?;
+                Some(handle)
+            }
+        };
+
         // single consumer side shared by worker threads
         let batch_rx: Arc<Mutex<Receiver<Vec<SearchRequest>>>> =
             Arc::new(Mutex::new(batch_rx));
@@ -134,6 +225,7 @@ impl SearchServer {
             let batch_rx = batch_rx.clone();
             let metrics = metrics.clone();
             let trace = trace.clone();
+            let shadow_ctx = shadow_ctx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("amsearch-worker-{wi}"))
                 .spawn(move || {
@@ -154,7 +246,13 @@ impl SearchServer {
                                 Err(_) => return,
                             }
                         };
-                        serve_one_batch(&engine, batch, &metrics, trace.as_deref());
+                        serve_one_batch(
+                            &engine,
+                            batch,
+                            &metrics,
+                            trace.as_deref(),
+                            shadow_ctx.as_deref(),
+                        );
                     }
                 })
                 .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
@@ -172,8 +270,12 @@ impl SearchServer {
             quant_rerank,
             kernel_backend,
             trace,
+            factory,
+            quality_sample: config.quality_sample,
+            shadow: shadow_ctx.map(|ctx| ctx.queue.clone()),
             workers: Mutex::new(workers),
             batcher: Mutex::new(Some(batcher)),
+            shadow_worker: Mutex::new(shadow_worker),
         })
     }
 
@@ -308,7 +410,26 @@ impl SearchServer {
         o.insert("latency".to_string(), m.latency.to_json());
         o.insert("service".to_string(), m.service.to_json());
         o.insert("window".to_string(), m.window.to_json());
+        o.insert("selectivity".to_string(), selectivity_json(&m.served_from, &m.survival));
+        // present iff sampling is configured, even before any sample
+        // lands — scrapers can rely on the key's presence
+        if self.quality_sample > 0 {
+            o.insert("quality".to_string(), m.quality.to_json());
+        }
         Json::Obj(o)
+    }
+
+    /// Replay one query through a fresh engine with full introspection —
+    /// the EXPLAIN admin op (see [`super::engine::Engine::explain`]).
+    pub fn explain(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        exact: bool,
+    ) -> Result<crate::util::Json> {
+        let engine = self.factory.build()?;
+        engine.explain(&vector, top_p, top_k, exact)
     }
 
     /// Render the serving metrics as a Prometheus-style [`Registry`] —
@@ -335,6 +456,26 @@ impl SearchServer {
         reg.histogram(prom::M_LATENCY, &role, &m.latency);
         reg.histogram(prom::M_SERVICE, &role, &m.service);
         reg.histogram(prom::M_WINDOW_LATENCY, &role, &m.window.windowed());
+        // always-on poll-selectivity gauges
+        reg.gauge(prom::M_QUALITY_TOP1_FRACTION, &role, m.served_from.top1_fraction());
+        reg.gauge(prom::M_QUALITY_SURVIVAL, &role, m.survival.ratio());
+        // sampled-quality families, exported (possibly at zero) whenever
+        // sampling is configured so scrapes can assert their presence
+        if self.quality_sample > 0 {
+            reg.counter(prom::M_QUALITY_SAMPLES, &role, m.quality.samples);
+            reg.counter(prom::M_QUALITY_DROPPED, &role, m.quality.dropped);
+            reg.gauge(prom::M_QUALITY_RECALL, &role, m.quality.recall());
+            reg.gauge(
+                prom::M_QUALITY_RANK_DISPLACEMENT,
+                &role,
+                m.quality.mean_displacement(),
+            );
+            reg.gauge(
+                prom::M_QUALITY_DISTANCE_ERROR,
+                &role,
+                m.quality.mean_distance_error(),
+            );
+        }
         reg
     }
 
@@ -344,6 +485,12 @@ impl SearchServer {
     /// `latency`).
     pub fn metrics(&self) -> ServerMetrics {
         let m = lock_unpoisoned(&self.metrics);
+        let mut quality = m.quality.clone();
+        // the queue's drop counter lives outside the metrics lock (the
+        // hot path must not take it); fold it in at snapshot time
+        if let Some(shadow) = &self.shadow {
+            quality.dropped = shadow.dropped();
+        }
         ServerMetrics {
             latency: m.latency.clone(),
             service: m.service.clone(),
@@ -353,6 +500,9 @@ impl SearchServer {
             requests: m.requests,
             errors: m.errors,
             window: m.window.clone(),
+            quality,
+            served_from: m.served_from.clone(),
+            survival: m.survival,
         }
     }
 
@@ -366,6 +516,20 @@ impl SearchServer {
         let mut workers = lock_unpoisoned(&self.workers);
         for w in workers.drain(..) {
             let _ = w.join();
+        }
+        drop(workers);
+        // every worker has exited, so no further samples can arrive:
+        // close the shadow queue (pop drains, then returns None)
+        if let Some(shadow) = &self.shadow {
+            shadow.close();
+        }
+        if let Some(s) = lock_unpoisoned(&self.shadow_worker).take() {
+            let _ = s.join();
+        }
+        // flush the tail of buffered trace records before the process
+        // (or test) inspects the trace file
+        if let Some(trace) = &self.trace {
+            trace.flush();
         }
     }
 }
@@ -410,6 +574,20 @@ pub fn kernel_json(backend: &str) -> crate::util::Json {
     Json::Obj(o)
 }
 
+/// The STATS `selectivity` object: always-on poll-selectivity telemetry.
+/// One shape shared by the single-node server (`served_from` ranks are
+/// polled-class ranks) and the cluster router (contacted-shard ranks).
+pub fn selectivity_json(
+    served_from: &RankHistogram,
+    survival: &SurvivalStats,
+) -> crate::util::Json {
+    use crate::util::Json;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("served_from".to_string(), served_from.to_json());
+    o.insert("survival".to_string(), survival.to_json());
+    Json::Obj(o)
+}
+
 /// Execute one batch on an engine and complete every request.
 ///
 /// When `trace` is attached, every request whose `trace_id` is non-zero
@@ -423,6 +601,7 @@ fn serve_one_batch(
     batch: Vec<SearchRequest>,
     metrics: &Arc<Mutex<ServerMetrics>>,
     trace: Option<&TraceSink>,
+    shadow: Option<&ShadowContext>,
 ) {
     let started = Instant::now();
     let queries: Vec<(&[f32], usize, usize)> = batch
@@ -447,10 +626,35 @@ fn serve_one_batch(
             let mut latency = LatencyHistogram::new();
             let mut lat_ns = Vec::with_capacity(batch.len());
             let mut completed = Vec::with_capacity(batch.len());
+            // always-on poll-selectivity telemetry, folded into the
+            // metrics lock below; computed outside it
+            let mut served_from = RankHistogram::default();
+            let mut survival = SurvivalStats::default();
             for (req, resp) in batch.into_iter().zip(responses.drain(..)) {
                 let mut resp = resp;
                 resp.id = req.id;
                 resp.service_ns = per_req_ns;
+                survival.record(resp.candidates, resp.neighbors.len());
+                served_from.record(resp.neighbors.first().and_then(|n| {
+                    let ci = engine.index().partition().class_of(n.id as usize);
+                    resp.polled.iter().position(|&c| c == ci)
+                }));
+                // shadow sampling: clone the sampled request's inputs
+                // and served answer into the bounded queue — the
+                // response itself is delivered untouched (quality-
+                // sampled serving stays bitwise-identical)
+                if let Some(ctx) = shadow {
+                    let n = 1 + ctx
+                        .served
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if sample_hit(n, ctx.every) {
+                        ctx.queue.push(ShadowSample {
+                            vector: req.vector.clone(),
+                            served: resp.neighbors.clone(),
+                            top_k: req.top_k,
+                        });
+                    }
+                }
                 let ns = req.enqueued.elapsed().as_nanos() as u64;
                 latency.record_ns(ns);
                 lat_ns.push(ns);
@@ -471,6 +675,8 @@ fn serve_one_batch(
                 for &ns in &lat_ns {
                     m.window.record_ns(ns);
                 }
+                m.served_from.merge(&served_from);
+                m.survival.merge(&survival);
             }
             for (tx, resp, trace_id, enqueued) in completed {
                 let Some(sink) = trace else {

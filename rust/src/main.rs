@@ -11,6 +11,8 @@
 //! amsearch serve-cluster [--plan-dir D | --config cfg.json --shards N]
 //!                        [--listen ADDR] [--fan-out S]
 //! amsearch metrics --addr HOST:PORT [--check]
+//! amsearch explain --addr HOST:PORT [--top-p P] [--top-k K] [--seed S] [--exact]
+//! amsearch dash --addr HOST:PORT [--interval-ms MS] [--iterations N]
 //! amsearch artifacts [--dir artifacts]
 //! ```
 //!
@@ -29,6 +31,12 @@
 //!   servers on ephemeral ports + the scatter-gather router in front
 //! * `metrics` — scrape a running server's METRICS frame (Prometheus
 //!   text exposition), optionally validating it
+//! * `explain` — replay one query through a running server with full
+//!   introspection (the EXPLAIN admin op): poll/fan-out decision,
+//!   per-stage candidates, final neighbors, optional ground-truth diff
+//! * `dash` — live terminal dashboard polling a running server's STATS:
+//!   rolling QPS, windowed tail latency, online recall estimate,
+//!   fan-out effectiveness
 //! * `artifacts` — inspect the AOT artifact manifest
 
 use std::path::{Path, PathBuf};
@@ -82,6 +90,10 @@ commands:
                                         only slow queries)
               --trace-slow-ms MS        force-trace requests slower
                                         than MS (0 = off)
+              --quality-sample N        shadow-execute every Nth request
+                                        as an exact scan off the hot
+                                        path and export the online
+                                        recall estimate (0 = off)
   loadgen     closed-loop TCP load generator against serve --listen or
               serve-cluster (--addr HOST:PORT, --connections N,
                --requests R, --depth D, --top-p P, --top-k K,
@@ -102,6 +114,18 @@ commands:
   metrics     scrape a running server's Prometheus text exposition
               (--addr HOST:PORT, --check to validate the format and
                required metric families, exiting non-zero on failure)
+  explain     replay one query through a running server with full
+              introspection: poll / fan-out decision and margin,
+              per-stage candidate counts, final neighbors — and, with
+              --exact, the exact ground-truth diff (recall, rank
+              displacement, distance error)
+              (--addr HOST:PORT, --top-p P, --top-k K,
+               --seed S for the synthesized query, --exact)
+  dash        live terminal dashboard for a running server: rolling
+              QPS, windowed tail latency, online recall estimate,
+              fan-out effectiveness, per-shard capture rates
+              (--addr HOST:PORT, --interval-ms MS,
+               --iterations N to stop after N frames, 0 = forever)
   artifacts   show the AOT manifest      (--dir D)
 ";
 
@@ -394,6 +418,8 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
         Some(s) => s.parse()?,
         None => cfg.backend.kind,
     };
+    serve_cfg.quality_sample =
+        args.get_parse("quality-sample", serve_cfg.quality_sample)?;
     let repeat: usize = args.get_parse("repeat", 1usize)?.max(1);
     let factory = EngineFactory {
         index: index.clone(),
@@ -546,6 +572,13 @@ fn cmd_serve_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
     };
     ccfg.router.fan_out = args.get_parse("fan-out", 0usize)?;
     ccfg.router.workers = args.get_parse("router-workers", 4usize)?.max(1);
+    // one knob arms both tiers: the router's full-fanout shadow (the
+    // fan-out knob's cost) and each shard's exact-scan shadow (the
+    // poll knob's cost)
+    let quality: u64 =
+        args.get_parse("quality-sample", cfg.serve.quality_sample)?;
+    ccfg.router.quality_sample = quality;
+    ccfg.coordinator.quality_sample = quality;
     ccfg.trace = build_trace_sink(&cfg.serve, args)?;
 
     let cluster = if let Some(dir) = args.get("plan-dir") {
@@ -641,6 +674,20 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             fanout.get("full_fanouts").and_then(|v| v.as_u64()).unwrap_or(0)
         );
     }
+    // online recall estimate, present iff the server runs with
+    // --quality-sample
+    if let Some(q) = server_stats.get("quality") {
+        println!(
+            "online quality: recall {:.4} over {} shadow samples \
+             ({} dropped, mean rank displacement {:.2})",
+            q.get("recall").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            q.get("samples").and_then(|v| v.as_u64()).unwrap_or(0),
+            q.get("dropped").and_then(|v| v.as_u64()).unwrap_or(0),
+            q.get("mean_rank_displacement")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        );
+    }
     // routing overhead: the gap between what the router's clients saw
     // end-to-end and what the shards spent serving (scatter + gather +
     // queueing in the routing tier)
@@ -720,6 +767,206 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Render a JSON document with indentation for human eyes — the wire
+/// form is single-line (JSON-lines framing), which is unreadable for
+/// the nested EXPLAIN report.
+fn pretty_json(j: &Json, depth: usize, out: &mut String) {
+    let pad = "  ".repeat(depth + 1);
+    match j {
+        Json::Obj(o) if !o.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, v)) in o.iter().enumerate() {
+                out.push_str(&pad);
+                out.push_str(&Json::Str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty_json(v, depth + 1, out);
+                if i + 1 < o.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&"  ".repeat(depth));
+            out.push('}');
+        }
+        Json::Arr(a) if a.iter().any(|v| matches!(v, Json::Obj(_) | Json::Arr(_))) => {
+            out.push_str("[\n");
+            for (i, v) in a.iter().enumerate() {
+                out.push_str(&pad);
+                pretty_json(v, depth + 1, out);
+                if i + 1 < a.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&"  ".repeat(depth));
+            out.push(']');
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:4077").to_string();
+    let timeout = std::time::Duration::from_secs(
+        args.get_parse("connect-timeout-s", 10u64)?,
+    );
+    let mut client = NetClient::connect_retry(&addr, timeout)?;
+    // discover the index dimension the same way loadgen does, then
+    // synthesize one reproducible query from --seed
+    let stats = client.stats()?;
+    let dim = stats
+        .get("dim")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| amsearch::Error::Coordinator("stats missing 'dim'".into()))?;
+    let seed: u64 = args.get_parse("seed", 7u64)?;
+    let mut rng = Rng::new(seed);
+    let vector: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let top_p: u32 = args.get_parse("top-p", 0u32)?;
+    let top_k: u32 = args.get_parse("top-k", 0u32)?;
+    let exact = args.flag("exact");
+    println!(
+        "explaining one query against {addr} (role={}, dim={dim}, \
+         seed={seed}, exact={exact})",
+        stats.get("role").and_then(|v| v.as_str()).unwrap_or("?")
+    );
+    let report = client.explain(&vector, top_p, top_k, exact)?;
+    let mut out = String::new();
+    pretty_json(&report, 0, &mut out);
+    println!("{out}");
+    if let Some(e) = report.get("exact") {
+        println!(
+            "ground truth: recall {:.4}, exact match {}, \
+             mean rank displacement {:.2}, mean distance error {:.3e}",
+            e.get("recall").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            e.get("matches_exactly").and_then(|v| v.as_bool()).unwrap_or(false),
+            e.get("mean_rank_displacement")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            e.get("mean_distance_error")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dash(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:4077").to_string();
+    let timeout = std::time::Duration::from_secs(
+        args.get_parse("connect-timeout-s", 10u64)?,
+    );
+    let interval =
+        std::time::Duration::from_millis(args.get_parse("interval-ms", 1000u64)?.max(100));
+    let iterations: u64 = args.get_parse("iterations", 0u64)?;
+    let mut client = NetClient::connect_retry(&addr, timeout)?;
+    let mut last_requests: Option<u64> = None;
+    let mut last_poll = Instant::now();
+    let mut frame: u64 = 0;
+    loop {
+        let stats = client.stats()?;
+        let now = Instant::now();
+        let requests = stats.get("requests").and_then(|v| v.as_u64()).unwrap_or(0);
+        let qps = match last_requests {
+            Some(prev) => {
+                let dt = now.duration_since(last_poll).as_secs_f64();
+                if dt > 0.0 {
+                    requests.saturating_sub(prev) as f64 / dt
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        };
+        last_requests = Some(requests);
+        last_poll = now;
+        // one frame = clear screen + redraw (plain ANSI, no TTY deps)
+        let mut s = String::from("\x1b[2J\x1b[H");
+        let role = stats.get("role").and_then(|v| v.as_str()).unwrap_or("?");
+        s.push_str(&format!(
+            "amsearch dash — {addr} (role={role})  [frame {frame}]\n\n"
+        ));
+        s.push_str(&format!(
+            "requests {requests}   errors {}   qps {qps:.1}\n",
+            stats.get("errors").and_then(|v| v.as_u64()).unwrap_or(0)
+        ));
+        if let Some(w) = stats.get("window") {
+            let us = |key: &str| {
+                w.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e3
+            };
+            s.push_str(&format!(
+                "latency ({:.0}s window): p50 {:.1}us  p90 {:.1}us  \
+                 p99 {:.1}us  max {:.1}us\n",
+                w.get("window_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                us("p50_ns"),
+                us("p90_ns"),
+                us("p99_ns"),
+                us("max_ns")
+            ));
+        }
+        if let Some(q) = stats.get("quality") {
+            s.push_str(&format!(
+                "quality: recall {:.4} over {} shadow samples \
+                 ({} dropped, rank displacement {:.2})\n",
+                q.get("recall").and_then(|v| v.as_f64()).unwrap_or(1.0),
+                q.get("samples").and_then(|v| v.as_u64()).unwrap_or(0),
+                q.get("dropped").and_then(|v| v.as_u64()).unwrap_or(0),
+                q.get("mean_rank_displacement")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0)
+            ));
+        } else {
+            s.push_str("quality: sampling off (start with --quality-sample N)\n");
+        }
+        if let Some(sel) = stats.get("selectivity") {
+            if let Some(sf) = sel.get("served_from") {
+                s.push_str(&format!(
+                    "served-from: top-ranked source wins {:.1}% of {} answers\n",
+                    sf.get("top1_fraction").and_then(|v| v.as_f64()).unwrap_or(1.0)
+                        * 100.0,
+                    sf.get("total").and_then(|v| v.as_u64()).unwrap_or(0)
+                ));
+            }
+            if let Some(sv) = sel.get("survival") {
+                s.push_str(&format!(
+                    "rerank survival: {:.4} ({} candidates -> {} survivors)\n",
+                    sv.get("ratio").and_then(|v| v.as_f64()).unwrap_or(1.0),
+                    sv.get("candidates").and_then(|v| v.as_u64()).unwrap_or(0),
+                    sv.get("survivors").and_then(|v| v.as_u64()).unwrap_or(0)
+                ));
+            }
+        }
+        if let Some(fe) = stats.get("fanout_effectiveness") {
+            s.push_str(&format!(
+                "fan-out effectiveness: true winner from top-ranked shard \
+                 {:.1}% of {} sampled answers\n",
+                fe.get("top1_fraction").and_then(|v| v.as_f64()).unwrap_or(1.0)
+                    * 100.0,
+                fe.get("total").and_then(|v| v.as_u64()).unwrap_or(0)
+            ));
+        }
+        if let Some(Json::Arr(shards)) = stats.get("shard_quality") {
+            s.push_str("shard capture (full-fanout truth captured at current s):\n");
+            for (si, sq) in shards.iter().enumerate() {
+                s.push_str(&format!(
+                    "  shard {si}: {:.4} ({} of {} truth neighbors)\n",
+                    sq.get("capture_rate").and_then(|v| v.as_f64()).unwrap_or(1.0),
+                    sq.get("captured").and_then(|v| v.as_u64()).unwrap_or(0),
+                    sq.get("truth").and_then(|v| v.as_u64()).unwrap_or(0)
+                ));
+            }
+        }
+        print!("{s}");
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        frame += 1;
+        if iterations > 0 && frame >= iterations {
+            println!();
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
     let manifest = Manifest::load(&dir)?;
@@ -741,7 +988,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["all", "help", "shutdown", "check"]) {
+    let args = match Args::parse(raw, &["all", "help", "shutdown", "check", "exact"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -775,6 +1022,8 @@ fn main() {
         "shard-plan" => cmd_shard_plan(&cfg, &args),
         "serve-cluster" => cmd_serve_cluster(&cfg, &args),
         "metrics" => cmd_metrics(&args),
+        "explain" => cmd_explain(&args),
+        "dash" => cmd_dash(&args),
         "artifacts" => cmd_artifacts(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

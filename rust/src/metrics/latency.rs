@@ -487,6 +487,76 @@ mod tests {
     }
 
     #[test]
+    fn epoch_wrap_at_ring_boundary_evicts_exactly_one_epoch() {
+        let slot = 1_000u64;
+        let n = 4usize;
+        let mut w = WindowedHistogram::with_slots(slot, n);
+        // fill every slot: epochs 0..=3
+        for e in 0..n as u64 {
+            w.record_at(10_000 * (e + 1), mid(slot, e));
+        }
+        assert_eq!(w.windowed_at(mid(slot, 3)).count(), 4);
+        // epoch 4 wraps to slot 0: epoch 0's sample is overwritten, the
+        // other three survive alongside the new one — the wrap evicts
+        // exactly the epoch that aged out, nothing more
+        w.record_at(90_000, mid(slot, 4));
+        let h = w.windowed_at(mid(slot, 4));
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max_ns(), 90_000);
+        // epoch 0's 10us sample is gone (log-bucket resolution ~4%)
+        assert!(h.quantile_ns(0.0) >= 15_000);
+    }
+
+    #[test]
+    fn clock_backwards_write_is_contained() {
+        let slot = 1_000u64;
+        let mut w = WindowedHistogram::with_slots(slot, 4);
+        w.record_at(10_000, mid(slot, 6)); // slot 2 holds epoch 6
+        // a backwards clock reading lands in epoch 2 — the same ring
+        // slot.  Last writer wins: the slot now holds epoch 2.  The
+        // important invariants are no panic, no mixed-epoch slot, and
+        // the stale write staying out of the live view.
+        w.record_at(20_000, mid(slot, 2));
+        assert_eq!(w.windowed_at(mid(slot, 6)).count(), 0);
+        // a backwards *query* sees the epoch-2 write, coherently
+        assert_eq!(w.windowed_at(mid(slot, 2)).count(), 1);
+        // forward progress resumes cleanly after the glitch
+        w.record_at(30_000, mid(slot, 6));
+        let h = w.windowed_at(mid(slot, 6));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_ns(), 30_000);
+    }
+
+    #[test]
+    fn merge_with_epochs_misaligned_beyond_window_length() {
+        let slot = 1_000u64;
+        let n = 4usize;
+        let mut a = WindowedHistogram::with_slots(slot, n);
+        let mut b = WindowedHistogram::with_slots(slot, n);
+        // a's samples live in epochs 0..=3, b's a full window later
+        // (8..=11): same ring indices, disjoint epochs
+        for e in 0..n as u64 {
+            a.record_at(1_000, mid(slot, e));
+            b.record_at(2_000, mid(slot, e + 8));
+        }
+        // merging at b's clock: every a slot is below the floor and
+        // every b slot is adopted — no cross-epoch mixing
+        a.merge_at(&b, mid(slot, 11));
+        let h = a.windowed_at(mid(slot, 11));
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile_ns(0.0) >= 1_500);
+        // the newer epoch wins even when the local clock lags a full
+        // window behind the peer's: epochs, not `now`, decide adoption
+        let mut c = WindowedHistogram::with_slots(slot, n);
+        for e in 0..n as u64 {
+            c.record_at(3_000, mid(slot, e));
+        }
+        c.merge_at(&a, mid(slot, 3));
+        assert_eq!(c.windowed_at(mid(slot, 11)).count(), 4);
+        assert!(c.windowed_at(mid(slot, 11)).max_ns() <= 2_500);
+    }
+
+    #[test]
     fn windowed_json_has_window_span() {
         let slot = 1_000_000_000u64;
         let mut w = WindowedHistogram::with_slots(slot, 10);

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::util::Json;
 
-use super::wire::{self, Frame, WireError, WireRequest, WireResponse};
+use super::wire::{self, Frame, WireError, WireExplain, WireRequest, WireResponse};
 
 /// Bounded reconnect/backoff policy for clients that must survive
 /// server restarts and transient refusals: exponential backoff with
@@ -360,6 +360,35 @@ impl NetClient {
             ));
         };
         Ok(text)
+    }
+
+    /// Replay one query through the server with full introspection (the
+    /// EXPLAIN admin op); `exact` also runs the ground-truth diff.
+    /// `top_p`/`top_k` follow the server-boundary rules (`0` = default).
+    /// Returns the parsed introspection report.
+    pub fn explain(
+        &mut self,
+        vector: &[f32],
+        top_p: u32,
+        top_k: u32,
+        exact: bool,
+    ) -> Result<Json> {
+        let id = self.fresh_id();
+        let req = Frame::Explain(WireExplain {
+            id,
+            exact,
+            top_p,
+            top_k,
+            vector: vector.to_vec(),
+        });
+        let reply =
+            self.admin(req, |f| matches!(f, Frame::ExplainReply { .. }))?;
+        let Frame::ExplainReply { json, .. } = reply else {
+            return Err(Error::Coordinator(
+                "net client: explain reply of unexpected type".into(),
+            ));
+        };
+        Json::parse(&json)
     }
 
     /// Ask the server to shut down gracefully; returns once the server

@@ -85,6 +85,19 @@ pub trait Serveable: Send + Sync {
     /// Must derive from the same snapshot as [`Self::stats_json`] so
     /// the two export surfaces never disagree.
     fn metrics_registry(&self) -> Registry;
+
+    /// Replay one query with full per-stage introspection — the payload
+    /// of the EXPLAIN admin op.  Runs synchronously off the serving
+    /// pipeline (a fresh engine / fresh shard links), so traffic is
+    /// never perturbed.  `exact` additionally runs the tier's
+    /// ground-truth re-execution and reports the diff.
+    fn explain(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        exact: bool,
+    ) -> Result<Json>;
 }
 
 impl Serveable for SearchServer {
@@ -106,6 +119,16 @@ impl Serveable for SearchServer {
 
     fn metrics_registry(&self) -> Registry {
         SearchServer::metrics_registry(self)
+    }
+
+    fn explain(
+        &self,
+        vector: Vec<f32>,
+        top_p: usize,
+        top_k: usize,
+        exact: bool,
+    ) -> Result<Json> {
+        SearchServer::explain(self, vector, top_p, top_k, exact)
     }
 }
 
@@ -557,6 +580,33 @@ fn dispatch(
             dispatch_search(req, shared, out, resp_tx, inflight);
             true
         }
+        Frame::Explain(req) => {
+            // synchronous admin op, like STATS: the backend replays the
+            // query off its serving pipeline and reports per-stage detail
+            let id = req.id;
+            match shared.backend.explain(
+                req.vector,
+                req.top_p as usize,
+                req.top_k as usize,
+                req.exact,
+            ) {
+                Ok(json) => {
+                    out.send(&Frame::ExplainReply { id, json: json.to_string() })
+                }
+                Err(e) => {
+                    let code = match &e {
+                        Error::Shape(_) => ERR_BAD_DIM,
+                        _ => ERR_INTERNAL,
+                    };
+                    out.send(&Frame::Error(WireError {
+                        id,
+                        code,
+                        message: e.to_string(),
+                    }));
+                }
+            }
+            true
+        }
         other => {
             out.send(&Frame::Error(WireError {
                 id: other.id(),
@@ -805,6 +855,16 @@ mod tests {
             );
             reg
         }
+
+        fn explain(
+            &self,
+            _vector: Vec<f32>,
+            _top_p: usize,
+            _top_k: usize,
+            _exact: bool,
+        ) -> Result<Json> {
+            Err(Error::Coordinator("backend is draining".into()))
+        }
     }
 
     #[test]
@@ -822,6 +882,22 @@ mod tests {
         let e = resp.expect_err("refused submit must produce an ERROR frame");
         assert_eq!(e.id, id);
         assert_eq!(e.code, ERR_SHUTTING_DOWN);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn explain_backend_failure_surfaces_as_typed_internal_frame() {
+        let server = NetServer::bind(
+            Arc::new(RefusingBackend),
+            "127.0.0.1:0",
+            NetConfig::default(),
+        )
+        .unwrap();
+        let mut client =
+            crate::net::NetClient::connect(server.local_addr()).unwrap();
+        let err = client.explain(&[0.0, 1.0], 0, 0, true).unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
         drop(client);
         server.shutdown();
     }

@@ -32,6 +32,9 @@
 //! 0x09 SHUTDOWN_OK   (empty)
 //! 0x0A METRICS       (empty)
 //! 0x0B METRICS_REPLY utf-8 Prometheus text exposition
+//! 0x0C EXPLAIN       flags u32 (bit 0 = exact ground-truth diff),
+//!                    top_p u32, top_k u32, dim u32, dim * f32
+//! 0x0D EXPLAIN_REPLY utf-8 JSON document (introspection report)
 //! ```
 //!
 //! Version 2 exists only to carry the optional 8-byte trace id on
@@ -103,6 +106,16 @@ pub const FT_SHUTDOWN_OK: u8 = 0x09;
 pub const FT_METRICS: u8 = 0x0A;
 /// Frame type: Prometheus metrics reply (text exposition payload).
 pub const FT_METRICS_REPLY: u8 = 0x0B;
+/// Frame type: query-introspection request (replay one query with full
+/// per-stage detail).
+pub const FT_EXPLAIN: u8 = 0x0C;
+/// Frame type: query-introspection reply (JSON payload).
+pub const FT_EXPLAIN_REPLY: u8 = 0x0D;
+
+/// EXPLAIN flag bit: also run the exact exhaustive scan and report the
+/// ground-truth diff.  Other bits are reserved and rejected, so a
+/// future flag cannot be silently ignored by an old server.
+pub const EXPLAIN_FLAG_EXACT: u32 = 1;
 
 /// Error code: malformed or zero-length frame payload.
 pub const ERR_BAD_FRAME: u16 = 1;
@@ -155,6 +168,26 @@ pub struct WireResponse {
     pub ops: u64,
     /// Service time attributed to this request.
     pub service_ns: u64,
+}
+
+/// A query-introspection request as it travels on the wire
+/// ([`FT_EXPLAIN`]): one query to replay through the serving pipeline
+/// with full per-stage detail.  Same shape as [`WireRequest`] plus the
+/// flags word; never traced (it is an admin verb, not traffic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireExplain {
+    /// Client-chosen request id (echoed in the reply).
+    pub id: u64,
+    /// Also run the exact exhaustive scan and report the ground-truth
+    /// diff ([`EXPLAIN_FLAG_EXACT`]).
+    pub exact: bool,
+    /// Classes to poll (`0` = index default).
+    pub top_p: u32,
+    /// Neighbors to return (`0` = index default; at most
+    /// [`MAX_WIRE_TOP_K`]).
+    pub top_k: u32,
+    /// Query vector.
+    pub vector: Vec<f32>,
 }
 
 /// An error response: the request id it answers, a stable numeric code
@@ -223,6 +256,15 @@ pub enum Frame {
         /// Text exposition rendered by [`crate::obs::Registry`].
         text: String,
     },
+    /// Query-introspection request.
+    Explain(WireExplain),
+    /// Query-introspection reply.
+    ExplainReply {
+        /// Echo of the request id.
+        id: u64,
+        /// Introspection report as a JSON document.
+        json: String,
+    },
 }
 
 impl Frame {
@@ -239,7 +281,9 @@ impl Frame {
             | Frame::Shutdown { id }
             | Frame::ShutdownOk { id }
             | Frame::Metrics { id }
-            | Frame::MetricsReply { id, .. } => *id,
+            | Frame::MetricsReply { id, .. }
+            | Frame::ExplainReply { id, .. } => *id,
+            Frame::Explain(e) => e.id,
         }
     }
 
@@ -256,6 +300,8 @@ impl Frame {
             Frame::ShutdownOk { .. } => FT_SHUTDOWN_OK,
             Frame::Metrics { .. } => FT_METRICS,
             Frame::MetricsReply { .. } => FT_METRICS_REPLY,
+            Frame::Explain(_) => FT_EXPLAIN,
+            Frame::ExplainReply { .. } => FT_EXPLAIN_REPLY,
         }
     }
 
@@ -294,6 +340,19 @@ impl Frame {
             }
             Frame::StatsReply { json, .. } => payload.extend_from_slice(json.as_bytes()),
             Frame::MetricsReply { text, .. } => payload.extend_from_slice(text.as_bytes()),
+            Frame::Explain(e) => {
+                let flags = if e.exact { EXPLAIN_FLAG_EXACT } else { 0 };
+                payload.extend_from_slice(&flags.to_le_bytes());
+                payload.extend_from_slice(&e.top_p.to_le_bytes());
+                payload.extend_from_slice(&e.top_k.to_le_bytes());
+                payload.extend_from_slice(&(e.vector.len() as u32).to_le_bytes());
+                for &x in &e.vector {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Frame::ExplainReply { json, .. } => {
+                payload.extend_from_slice(json.as_bytes())
+            }
             Frame::Ping { .. }
             | Frame::Pong { .. }
             | Frame::Stats { .. }
@@ -570,6 +629,55 @@ pub fn parse(raw: &RawFrame) -> std::result::Result<Frame, WireError> {
                 .map_err(|_| bad(id, "metrics reply is not utf-8"))?;
             Ok(Frame::MetricsReply { id, text })
         }
+        FT_EXPLAIN => {
+            if raw.payload.is_empty() {
+                return Err(bad(id, "zero-length explain frame"));
+            }
+            let flags = c.u32().ok_or_else(|| bad(id, "explain: truncated flags"))?;
+            if flags & !EXPLAIN_FLAG_EXACT != 0 {
+                return Err(bad(id, format!("explain: unknown flags {flags:#x}")));
+            }
+            let top_p = c.u32().ok_or_else(|| bad(id, "explain: truncated top_p"))?;
+            let top_k = c.u32().ok_or_else(|| bad(id, "explain: truncated top_k"))?;
+            let dim = c.u32().ok_or_else(|| bad(id, "explain: truncated dim"))?;
+            if top_k > MAX_WIRE_TOP_K {
+                return Err(WireError {
+                    id,
+                    code: ERR_BAD_K,
+                    message: format!("top_k {top_k} exceeds wire limit {MAX_WIRE_TOP_K}"),
+                });
+            }
+            if dim == 0 {
+                return Err(WireError {
+                    id,
+                    code: ERR_BAD_DIM,
+                    message: "empty query vector (dim = 0)".into(),
+                });
+            }
+            // same declared-count-vs-bytes-present discipline as SEARCH:
+            // the length must agree before any allocation is sized
+            if c.remaining() as u64 != dim as u64 * 4 {
+                return Err(bad(id, "explain: dim disagrees with payload length"));
+            }
+            let mut vector = Vec::with_capacity(dim as usize);
+            for _ in 0..dim {
+                vector.push(
+                    c.f32().ok_or_else(|| bad(id, "explain: truncated vector"))?,
+                );
+            }
+            Ok(Frame::Explain(WireExplain {
+                id,
+                exact: flags & EXPLAIN_FLAG_EXACT != 0,
+                top_p,
+                top_k,
+                vector,
+            }))
+        }
+        FT_EXPLAIN_REPLY => {
+            let json = String::from_utf8(raw.payload.clone())
+                .map_err(|_| bad(id, "explain reply is not utf-8"))?;
+            Ok(Frame::ExplainReply { id, json })
+        }
         FT_PING | FT_PONG | FT_STATS | FT_SHUTDOWN | FT_SHUTDOWN_OK | FT_METRICS => {
             if !raw.payload.is_empty() {
                 return Err(bad(id, "unexpected payload on admin frame"));
@@ -613,6 +721,8 @@ impl Frame {
             Frame::ShutdownOk { .. } => "shutdown_ok",
             Frame::Metrics { .. } => "metrics",
             Frame::MetricsReply { .. } => "metrics_reply",
+            Frame::Explain(_) => "explain",
+            Frame::ExplainReply { .. } => "explain_reply",
         }
     }
 
@@ -673,6 +783,22 @@ impl Frame {
             Frame::MetricsReply { text, .. } => {
                 // the exposition is plain text, so it stays a string
                 m.insert("text".to_string(), jstr(text));
+            }
+            Frame::Explain(e) => {
+                if e.exact {
+                    m.insert("exact".to_string(), Json::Bool(true));
+                }
+                m.insert("top_p".to_string(), jnum(e.top_p as f64));
+                m.insert("top_k".to_string(), jnum(e.top_k as f64));
+                m.insert(
+                    "vector".to_string(),
+                    Json::Arr(e.vector.iter().map(|&x| jnum(x as f64)).collect()),
+                );
+            }
+            Frame::ExplainReply { json, .. } => {
+                // embed the report itself, like stats_reply
+                let v = Json::parse(json).unwrap_or_else(|_| jstr(json));
+                m.insert("report".to_string(), v);
             }
             _ => {}
         }
@@ -793,6 +919,45 @@ impl Frame {
                     .unwrap_or_default()
                     .to_string(),
             }),
+            "explain" => {
+                let arr = v
+                    .get("vector")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| bad(id, "json explain: missing 'vector'"))?;
+                let mut vector = Vec::with_capacity(arr.len());
+                for x in arr {
+                    vector.push(x.as_f64().ok_or_else(|| {
+                        bad(id, "json explain: non-numeric vector element")
+                    })? as f32);
+                }
+                let top_p =
+                    v.get("top_p").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                let top_k =
+                    v.get("top_k").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                if top_k > MAX_WIRE_TOP_K {
+                    return Err(WireError {
+                        id,
+                        code: ERR_BAD_K,
+                        message: format!(
+                            "top_k {top_k} exceeds wire limit {MAX_WIRE_TOP_K}"
+                        ),
+                    });
+                }
+                if vector.is_empty() {
+                    return Err(WireError {
+                        id,
+                        code: ERR_BAD_DIM,
+                        message: "empty query vector (dim = 0)".into(),
+                    });
+                }
+                let exact =
+                    v.get("exact").and_then(|x| x.as_bool()).unwrap_or(false);
+                Ok(Frame::Explain(WireExplain { id, exact, top_p, top_k, vector }))
+            }
+            "explain_reply" => Ok(Frame::ExplainReply {
+                id,
+                json: v.get("report").map(|s| s.to_string()).unwrap_or_default(),
+            }),
             other => Err(bad(id, format!("json: unknown op '{other}'"))),
         }
     }
@@ -880,6 +1045,21 @@ mod tests {
                 id: 12,
                 text: "# TYPE amsearch_requests_total counter\n".into(),
             },
+            Frame::Explain(WireExplain {
+                id: 13,
+                exact: false,
+                top_p: 2,
+                top_k: 5,
+                vector: vec![0.25, -0.5],
+            }),
+            Frame::Explain(WireExplain {
+                id: 14,
+                exact: true,
+                top_p: 0,
+                top_k: 0,
+                vector: vec![1.0],
+            }),
+            Frame::ExplainReply { id: 15, json: r#"{"poll":{"margin":0.5}}"#.into() },
         ];
         for f in frames {
             assert_eq!(roundtrip(&f), f);
@@ -1078,6 +1258,21 @@ mod tests {
             Frame::Pong { id: 4 },
             Frame::Shutdown { id: 7 },
             Frame::ShutdownOk { id: 8 },
+            Frame::Explain(WireExplain {
+                id: 15,
+                exact: true,
+                top_p: 2,
+                top_k: 3,
+                vector: vec![0.5, -1.5],
+            }),
+            Frame::Explain(WireExplain {
+                id: 16,
+                exact: false,
+                top_p: 0,
+                top_k: 0,
+                vector: vec![1.0],
+            }),
+            Frame::ExplainReply { id: 17, json: r#"{"candidates":16}"#.into() },
         ];
         for f in frames {
             let line = f.to_json_line();
@@ -1116,6 +1311,11 @@ mod tests {
         // v2 added deliberately for the SEARCH trace-id field; untraced
         // frames still encode (and must keep encoding) as v1
         assert_eq!(TRACED_VERSION, 2, "wire version bumps must be deliberate");
+        // frame type ids are wire protocol too: the EXPLAIN pair landed
+        // on the first free ids and must stay there
+        assert_eq!(FT_EXPLAIN, 0x0C);
+        assert_eq!(FT_EXPLAIN_REPLY, 0x0D);
+        assert_eq!(EXPLAIN_FLAG_EXACT, 1);
     }
 
     #[test]
@@ -1200,6 +1400,51 @@ mod tests {
         assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
         // reply must be utf-8
         let raw = RawFrame { ftype: FT_METRICS_REPLY, id: 5, payload: vec![0xFF, 0xFE] };
+        assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
+    }
+
+    #[test]
+    fn explain_validation_mirrors_search() {
+        let encode = |flags: u32, dim: u32, floats: usize, top_k: u32| {
+            let mut payload = Vec::new();
+            payload.extend_from_slice(&flags.to_le_bytes());
+            payload.extend_from_slice(&1u32.to_le_bytes()); // top_p
+            payload.extend_from_slice(&top_k.to_le_bytes());
+            payload.extend_from_slice(&dim.to_le_bytes());
+            for _ in 0..floats {
+                payload.extend_from_slice(&0f32.to_le_bytes());
+            }
+            RawFrame { ftype: FT_EXPLAIN, id: 21, payload }
+        };
+        // zero-length
+        let raw = RawFrame { ftype: FT_EXPLAIN, id: 20, payload: vec![] };
+        assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
+        // unknown flag bits rejected loudly, never silently ignored
+        assert_eq!(parse(&encode(0x2, 1, 1, 1)).unwrap_err().code, ERR_BAD_FRAME);
+        // dim 0 and oversized top_k keep the SEARCH codes
+        assert_eq!(parse(&encode(0, 0, 0, 1)).unwrap_err().code, ERR_BAD_DIM);
+        assert_eq!(
+            parse(&encode(0, 1, 1, MAX_WIRE_TOP_K + 1)).unwrap_err().code,
+            ERR_BAD_K
+        );
+        // declared dim must match the bytes present before allocation
+        assert_eq!(
+            parse(&encode(0, u32::MAX, 1, 1)).unwrap_err().code,
+            ERR_BAD_FRAME
+        );
+        assert_eq!(parse(&encode(0, 2, 3, 1)).unwrap_err().code, ERR_BAD_FRAME);
+        // a well-formed frame parses with the flag decoded
+        let Frame::Explain(e) =
+            parse(&encode(EXPLAIN_FLAG_EXACT, 2, 2, 5)).unwrap()
+        else {
+            panic!("wrong type")
+        };
+        assert!(e.exact);
+        assert_eq!(e.top_k, 5);
+        assert_eq!(e.vector.len(), 2);
+        // reply must be utf-8, like the other document replies
+        let raw =
+            RawFrame { ftype: FT_EXPLAIN_REPLY, id: 22, payload: vec![0xFF, 0xFE] };
         assert_eq!(parse(&raw).unwrap_err().code, ERR_BAD_FRAME);
     }
 }

@@ -18,9 +18,14 @@
 //!   feed the same registry from the same one-lock metrics snapshot
 //!   that backs the STATS JSON, so the two export surfaces cannot
 //!   disagree.
+//! * [`quality`] — the accuracy axis: online recall estimation from
+//!   shadow-executed exact answers, poll-selectivity histograms, and
+//!   candidate-survival funnels, exported through the same snapshot.
 
 pub mod prom;
+pub mod quality;
 pub mod trace;
 
 pub use prom::{Registry, REQUIRED_FAMILIES};
+pub use quality::{sample_hit, QualityStats, RankHistogram, ShadowQueue, SurvivalStats};
 pub use trace::{stitch, Trace, TraceRecord, TraceSink};

@@ -41,6 +41,25 @@ pub const M_NET_REFUSED: &str = "amsearch_net_refused_connections_total";
 /// Searches currently pipelined across all connections (gauge; net
 /// layer).
 pub const M_NET_INFLIGHT: &str = "amsearch_net_inflight";
+/// Shadow comparisons folded into the online recall estimate (counter;
+/// exported whenever `--quality-sample` is configured).
+pub const M_QUALITY_SAMPLES: &str = "amsearch_quality_samples_total";
+/// Sampled requests dropped by the bounded shadow queue (counter).
+pub const M_QUALITY_DROPPED: &str = "amsearch_quality_dropped_total";
+/// Online micro-averaged recall@k estimate (gauge in [0, 1]).
+pub const M_QUALITY_RECALL: &str = "amsearch_quality_recall";
+/// Mean rank displacement of served neighbors vs exact (gauge).
+pub const M_QUALITY_RANK_DISPLACEMENT: &str = "amsearch_quality_rank_displacement";
+/// Mean relative distance error of served neighbors vs exact (gauge).
+pub const M_QUALITY_DISTANCE_ERROR: &str = "amsearch_quality_distance_error";
+/// Fraction of answers won by the top-ranked polled class / contacted
+/// shard (gauge; 1.0 = the fan-out tail never decided an answer).
+pub const M_QUALITY_TOP1_FRACTION: &str = "amsearch_quality_top1_fraction";
+/// Candidate-survival ratio through the scan/rerank funnel (gauge).
+pub const M_QUALITY_SURVIVAL: &str = "amsearch_quality_survival_ratio";
+/// Per-shard capture rate of the full-fanout truth set, `shard` label
+/// (gauge in [0, 1]; router, sampled).
+pub const M_QUALITY_SHARD_CAPTURE: &str = "amsearch_quality_shard_capture_rate";
 
 /// Families every tier's exposition must contain — what the CLI's
 /// `metrics --check` and the CI smoke scrape assert.
@@ -357,6 +376,14 @@ mod tests {
             M_SHARD_WINDOW,
             M_NET_REFUSED,
             M_NET_INFLIGHT,
+            M_QUALITY_SAMPLES,
+            M_QUALITY_DROPPED,
+            M_QUALITY_RECALL,
+            M_QUALITY_RANK_DISPLACEMENT,
+            M_QUALITY_DISTANCE_ERROR,
+            M_QUALITY_TOP1_FRACTION,
+            M_QUALITY_SURVIVAL,
+            M_QUALITY_SHARD_CAPTURE,
         ];
         let unique: std::collections::BTreeSet<&str> = all.iter().copied().collect();
         assert_eq!(unique.len(), all.len());
@@ -367,6 +394,23 @@ mod tests {
         for req in REQUIRED_FAMILIES {
             assert!(all.contains(&req));
         }
+    }
+
+    #[test]
+    fn quality_family_names_are_pinned() {
+        // operators alert on these names; renaming one is a breaking
+        // change that must show up here (and in README) on purpose
+        assert_eq!(M_QUALITY_SAMPLES, "amsearch_quality_samples_total");
+        assert_eq!(M_QUALITY_DROPPED, "amsearch_quality_dropped_total");
+        assert_eq!(M_QUALITY_RECALL, "amsearch_quality_recall");
+        assert_eq!(M_QUALITY_RANK_DISPLACEMENT, "amsearch_quality_rank_displacement");
+        assert_eq!(M_QUALITY_DISTANCE_ERROR, "amsearch_quality_distance_error");
+        assert_eq!(M_QUALITY_TOP1_FRACTION, "amsearch_quality_top1_fraction");
+        assert_eq!(M_QUALITY_SURVIVAL, "amsearch_quality_survival_ratio");
+        assert_eq!(
+            M_QUALITY_SHARD_CAPTURE,
+            "amsearch_quality_shard_capture_rate"
+        );
     }
 
     #[test]

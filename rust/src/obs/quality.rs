@@ -1,0 +1,548 @@
+//! Quality observability: online recall estimation and poll-selectivity
+//! telemetry.
+//!
+//! The paper's serving stack trades accuracy for work (poll `p < q`
+//! classes, contact `s < N` shards); PR 7 made the *latency* side of
+//! that trade observable, this module makes the *accuracy* side
+//! observable:
+//!
+//! * [`QualityStats`] — rolling recall@k / rank-displacement /
+//!   distance-error estimates, fed by shadow-executed exact answers for
+//!   every `quality_sample`-th request.
+//! * [`RankHistogram`] — "where did the winner come from": the rank of
+//!   the polled class (coordinator) or contacted shard (router) that
+//!   produced the final top-1 — the fan-out-effectiveness signal that
+//!   says whether the last ranks of the poll ever matter.
+//! * [`SurvivalStats`] — candidate-survival through the scan: how many
+//!   scanned candidates survive into the returned top-k (the SQ8/PQ
+//!   rerank funnel).
+//! * [`ShadowQueue`] — the bounded drop-oldest handoff between the hot
+//!   serving path and the low-priority shadow worker; under load the
+//!   estimate loses samples, never the serving path.
+//!
+//! All counters live under each tier's existing one-lock metrics
+//! snapshot; nothing here takes extra locks on the hot path.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::search::Neighbor;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
+use crate::util::Json;
+
+/// Rolling quality estimate built from (served, exact) answer pairs.
+///
+/// `recall` is micro-averaged (total overlap over total truth size), so
+/// requests with larger `k` weigh proportionally — the same convention
+/// as the offline [`crate::metrics::RecallAtK`] evaluator it is checked
+/// against in e2e.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QualityStats {
+    /// Shadow comparisons completed.
+    pub samples: u64,
+    /// Sampled requests the bounded queue had to drop under load.
+    pub dropped: u64,
+    /// Σ |served ∩ exact| over samples.
+    pub hit_sum: u64,
+    /// Σ |exact| over samples (the denominator of micro recall@k).
+    pub truth_sum: u64,
+    /// Samples whose served answer matched the exact answer id-for-id.
+    pub exact_matches: u64,
+    /// Σ rank displacement: for the served neighbor at rank `i`, its
+    /// rank in the exact list minus `i`; a served id absent from the
+    /// exact top-k is charged the cap `|exact|`.
+    pub displacement_sum: u64,
+    /// Served positions inspected for displacement.
+    pub displacement_count: u64,
+    /// Σ relative distance error of the served rank-`i` distance vs the
+    /// exact rank-`i` distance (0 when the served answer is exact).
+    pub distance_err_sum: f64,
+    /// Rank pairs inspected for distance error.
+    pub distance_err_count: u64,
+}
+
+impl QualityStats {
+    /// Fold one (served, exact) comparison into the estimate.  `exact`
+    /// must be the ground-truth top-k for the same query, sorted
+    /// ascending by `(distance, id)` like every neighbor list.
+    pub fn record_comparison(&mut self, served: &[Neighbor], exact: &[Neighbor]) {
+        self.samples += 1;
+        self.truth_sum += exact.len() as u64;
+        let mut hits = 0u64;
+        for (i, s) in served.iter().enumerate() {
+            // exact lists are k-bounded (k <= 65536 on the wire), so a
+            // linear membership probe beats building a set per sample
+            match exact.iter().position(|e| e.id == s.id) {
+                Some(j) => {
+                    hits += 1;
+                    self.displacement_sum += (j as i64 - i as i64).unsigned_abs();
+                }
+                None => self.displacement_sum += exact.len() as u64,
+            }
+            self.displacement_count += 1;
+        }
+        self.hit_sum += hits;
+        let ids_match = served.len() == exact.len()
+            && served.iter().zip(exact).all(|(s, e)| s.id == e.id);
+        if ids_match {
+            self.exact_matches += 1;
+        }
+        for (s, e) in served.iter().zip(exact) {
+            let denom = e.distance.abs().max(1e-12) as f64;
+            let err = (s.distance as f64 - e.distance as f64) / denom;
+            // the exact distance at a rank is optimal, so the served
+            // distance can only be >=; clamp fp noise at zero
+            self.distance_err_sum += err.max(0.0);
+            self.distance_err_count += 1;
+        }
+    }
+
+    /// Micro-averaged recall@k over all samples (1.0 before any sample
+    /// arrives, so an untouched gauge reads "no evidence of loss").
+    pub fn recall(&self) -> f64 {
+        if self.truth_sum == 0 {
+            1.0
+        } else {
+            self.hit_sum as f64 / self.truth_sum as f64
+        }
+    }
+
+    /// Mean rank displacement per served position.
+    pub fn mean_displacement(&self) -> f64 {
+        if self.displacement_count == 0 {
+            0.0
+        } else {
+            self.displacement_sum as f64 / self.displacement_count as f64
+        }
+    }
+
+    /// Mean relative distance error per compared rank.
+    pub fn mean_distance_error(&self) -> f64 {
+        if self.distance_err_count == 0 {
+            0.0
+        } else {
+            self.distance_err_sum / self.distance_err_count as f64
+        }
+    }
+
+    /// Fold another estimate in (per-shard → cluster aggregation).
+    pub fn merge(&mut self, other: &QualityStats) {
+        self.samples += other.samples;
+        self.dropped += other.dropped;
+        self.hit_sum += other.hit_sum;
+        self.truth_sum += other.truth_sum;
+        self.exact_matches += other.exact_matches;
+        self.displacement_sum += other.displacement_sum;
+        self.displacement_count += other.displacement_count;
+        self.distance_err_sum += other.distance_err_sum;
+        self.distance_err_count += other.distance_err_count;
+    }
+
+    /// The estimate as the STATS `quality` object.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("samples".to_string(), Json::Num(self.samples as f64));
+        o.insert("dropped".to_string(), Json::Num(self.dropped as f64));
+        o.insert("recall".to_string(), Json::Num(self.recall()));
+        o.insert(
+            "exact_matches".to_string(),
+            Json::Num(self.exact_matches as f64),
+        );
+        o.insert(
+            "mean_rank_displacement".to_string(),
+            Json::Num(self.mean_displacement()),
+        );
+        o.insert(
+            "mean_distance_error".to_string(),
+            Json::Num(self.mean_distance_error()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// "The winner came from rank r": a dense histogram over the rank (in
+/// the polled-class or contacted-shard order, best first) of the source
+/// that produced the final top-1 neighbor.
+///
+/// If `by_rank` is front-loaded the tail of the fan-out never decides
+/// an answer and `p`/`s` can shrink; mass at high ranks means the poll
+/// ordering is weak for this workload and pruning will cost recall.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankHistogram {
+    /// Wins per source rank (index 0 = the top-polled source).
+    pub by_rank: Vec<u64>,
+    /// Requests with no winner at all (empty answer).
+    pub unresolved: u64,
+}
+
+impl RankHistogram {
+    /// Record one request's winning rank (`None` = empty answer).
+    pub fn record(&mut self, winner_rank: Option<usize>) {
+        match winner_rank {
+            Some(r) => {
+                if self.by_rank.len() <= r {
+                    self.by_rank.resize(r + 1, 0);
+                }
+                self.by_rank[r] += 1;
+            }
+            None => self.unresolved += 1,
+        }
+    }
+
+    /// Total recorded requests (wins + unresolved).
+    pub fn total(&self) -> u64 {
+        self.by_rank.iter().sum::<u64>() + self.unresolved
+    }
+
+    /// Fraction of resolved requests won by the top-ranked source —
+    /// 1.0 means fan-out past rank 0 never changed an answer.
+    pub fn top1_fraction(&self) -> f64 {
+        let wins: u64 = self.by_rank.iter().sum();
+        if wins == 0 {
+            return 1.0;
+        }
+        self.by_rank.first().copied().unwrap_or(0) as f64 / wins as f64
+    }
+
+    /// Fold another histogram in.
+    pub fn merge(&mut self, other: &RankHistogram) {
+        if self.by_rank.len() < other.by_rank.len() {
+            self.by_rank.resize(other.by_rank.len(), 0);
+        }
+        for (a, b) in self.by_rank.iter_mut().zip(&other.by_rank) {
+            *a += *b;
+        }
+        self.unresolved += other.unresolved;
+    }
+
+    /// As a STATS object.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("total".to_string(), Json::Num(self.total() as f64));
+        o.insert("unresolved".to_string(), Json::Num(self.unresolved as f64));
+        o.insert("top1_fraction".to_string(), Json::Num(self.top1_fraction()));
+        o.insert(
+            "by_rank".to_string(),
+            Json::Arr(self.by_rank.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Candidate-survival funnel: of the candidates the scan touched, how
+/// many survived into the returned top-k.  Under SQ8/PQ the scan is
+/// approximate and the rerank exact, so a falling survival ratio at
+/// fixed `k` means the compressed distances are ordering candidates
+/// badly — the knob to watch before recall moves.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SurvivalStats {
+    /// Candidates scanned (funnel entry).
+    pub candidates: u64,
+    /// Neighbors returned (funnel exit).
+    pub survivors: u64,
+}
+
+impl SurvivalStats {
+    /// Record one request's funnel.
+    pub fn record(&mut self, candidates: usize, survivors: usize) {
+        self.candidates += candidates as u64;
+        self.survivors += survivors as u64;
+    }
+
+    /// Exit/entry ratio (1.0 when nothing was scanned).
+    pub fn ratio(&self) -> f64 {
+        if self.candidates == 0 {
+            1.0
+        } else {
+            self.survivors as f64 / self.candidates as f64
+        }
+    }
+
+    /// Fold another funnel in.
+    pub fn merge(&mut self, other: &SurvivalStats) {
+        self.candidates += other.candidates;
+        self.survivors += other.survivors;
+    }
+
+    /// As a STATS object.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("candidates".to_string(), Json::Num(self.candidates as f64));
+        o.insert("survivors".to_string(), Json::Num(self.survivors as f64));
+        o.insert("ratio".to_string(), Json::Num(self.ratio()));
+        Json::Obj(o)
+    }
+}
+
+struct ShadowState<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+    dropped: u64,
+}
+
+/// Bounded drop-oldest handoff from the serving path to the shadow
+/// worker.
+///
+/// The hot path calls [`ShadowQueue::push`], which never blocks: when
+/// the queue is full the *oldest* pending sample is dropped (and
+/// counted) so the estimate tracks recent traffic under overload.  The
+/// shadow worker blocks in [`ShadowQueue::pop`], which returns `None`
+/// only once the queue is closed *and* drained — shutdown therefore
+/// finishes every accepted sample deterministically.
+pub struct ShadowQueue<T> {
+    state: Mutex<ShadowState<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl<T> ShadowQueue<T> {
+    /// A queue holding at most `capacity` pending samples (min 1).
+    pub fn new(capacity: usize) -> Self {
+        ShadowQueue {
+            state: Mutex::new(ShadowState {
+                queue: VecDeque::new(),
+                closed: false,
+                dropped: 0,
+            }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue a sample, dropping the oldest pending one when full.
+    /// Never blocks beyond the queue lock; a sample pushed after
+    /// [`ShadowQueue::close`] is counted as dropped.
+    pub fn push(&self, item: T) {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.closed {
+            st.dropped += 1;
+            return;
+        }
+        if st.queue.len() >= self.capacity {
+            st.queue.pop_front();
+            st.dropped += 1;
+        }
+        st.queue.push_back(item);
+        drop(st);
+        self.ready.notify_one();
+    }
+
+    /// Dequeue the next sample, blocking while the queue is open and
+    /// empty; `None` means closed-and-drained (worker exit signal).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            // timed wait so a lost notification can never wedge the
+            // worker (the same defensive idiom as the batcher)
+            let (guard, _timeout) =
+                wait_timeout_unpoisoned(&self.ready, st, Duration::from_millis(50));
+            st = guard;
+        }
+    }
+
+    /// Close the queue: pushes become drops, `pop` drains then returns
+    /// `None`.
+    pub fn close(&self) {
+        let mut st = lock_unpoisoned(&self.state);
+        st.closed = true;
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Samples dropped so far (overload + post-close pushes).
+    pub fn dropped(&self) -> u64 {
+        lock_unpoisoned(&self.state).dropped
+    }
+
+    /// Pending samples.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.state).queue.len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Deterministic 1-in-`every` admission counter for quality sampling,
+/// mirroring the trace sampler: request `n` (1-based) is sampled iff
+/// `n % every == 0`, `every = 0` disables sampling.
+pub fn sample_hit(admitted: u64, every: u64) -> bool {
+    every > 0 && admitted % every == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn nb(id: u32, distance: f32) -> Neighbor {
+        Neighbor { id, distance }
+    }
+
+    #[test]
+    fn identical_answers_score_perfect() {
+        let mut q = QualityStats::default();
+        let answer = vec![nb(3, 0.1), nb(7, 0.2), nb(1, 0.4)];
+        q.record_comparison(&answer, &answer);
+        assert_eq!(q.samples, 1);
+        assert_eq!(q.exact_matches, 1);
+        assert_eq!(q.recall(), 1.0);
+        assert_eq!(q.mean_displacement(), 0.0);
+        assert_eq!(q.mean_distance_error(), 0.0);
+    }
+
+    #[test]
+    fn empty_stats_read_as_no_evidence_of_loss() {
+        let q = QualityStats::default();
+        assert_eq!(q.recall(), 1.0);
+        assert_eq!(q.mean_displacement(), 0.0);
+        assert_eq!(q.mean_distance_error(), 0.0);
+    }
+
+    #[test]
+    fn missing_and_displaced_neighbors_are_charged() {
+        let mut q = QualityStats::default();
+        // exact top-3: 1, 2, 3; served got 2 (displaced by 1), 1
+        // (displaced by 1) and 9 (absent -> charged the cap 3)
+        let served = vec![nb(2, 0.2), nb(1, 0.1), nb(9, 0.9)];
+        let exact = vec![nb(1, 0.1), nb(2, 0.2), nb(3, 0.3)];
+        q.record_comparison(&served, &exact);
+        assert_eq!(q.hit_sum, 2);
+        assert_eq!(q.truth_sum, 3);
+        assert_eq!(q.exact_matches, 0);
+        assert!((q.recall() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(q.displacement_sum, 1 + 1 + 3);
+        assert_eq!(q.displacement_count, 3);
+        // rank 0: 0.2 vs 0.1 -> 1.0; rank 1: 0.1 vs 0.2 -> clamped 0;
+        // rank 2: 0.9 vs 0.3 -> ~2.0 (f32 literals are inexact, so the
+        // ratio lands ~1e-7 off — hence the loose tolerance)
+        assert!((q.mean_distance_error() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_matches_sequential_recording() {
+        let served_a = vec![nb(2, 0.2), nb(9, 0.9)];
+        let served_b = vec![nb(1, 0.1)];
+        let exact = vec![nb(1, 0.1), nb(2, 0.2)];
+        let mut whole = QualityStats::default();
+        whole.record_comparison(&served_a, &exact);
+        whole.record_comparison(&served_b, &exact);
+        let mut left = QualityStats::default();
+        left.record_comparison(&served_a, &exact);
+        let mut right = QualityStats::default();
+        right.record_comparison(&served_b, &exact);
+        left.merge(&right);
+        assert_eq!(left, whole);
+    }
+
+    #[test]
+    fn rank_histogram_counts_and_top1_fraction() {
+        let mut h = RankHistogram::default();
+        h.record(Some(0));
+        h.record(Some(0));
+        h.record(Some(2));
+        h.record(None);
+        assert_eq!(h.by_rank, vec![2, 0, 1]);
+        assert_eq!(h.unresolved, 1);
+        assert_eq!(h.total(), 4);
+        assert!((h.top1_fraction() - 2.0 / 3.0).abs() < 1e-12);
+
+        let mut other = RankHistogram::default();
+        other.record(Some(1));
+        h.merge(&other);
+        assert_eq!(h.by_rank, vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn empty_rank_histogram_is_benign() {
+        let h = RankHistogram::default();
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.top1_fraction(), 1.0);
+    }
+
+    #[test]
+    fn survival_ratio() {
+        let mut s = SurvivalStats::default();
+        s.record(100, 10);
+        s.record(50, 10);
+        assert_eq!(s.candidates, 150);
+        assert_eq!(s.survivors, 20);
+        assert!((s.ratio() - 20.0 / 150.0).abs() < 1e-12);
+        assert_eq!(SurvivalStats::default().ratio(), 1.0);
+    }
+
+    #[test]
+    fn shadow_queue_drops_oldest_when_full() {
+        let q = ShadowQueue::new(2);
+        q.push(1);
+        q.push(2);
+        q.push(3); // drops 1
+        assert_eq!(q.dropped(), 1);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn shadow_queue_close_drains_then_ends() {
+        let q = ShadowQueue::new(8);
+        q.push(10);
+        q.push(20);
+        q.close();
+        // pending samples still come out after close...
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(20));
+        // ...then the worker-exit signal
+        assert_eq!(q.pop(), None);
+        // and a late push is a counted drop, not a revival
+        q.push(30);
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.dropped(), 1);
+    }
+
+    #[test]
+    fn shadow_queue_unblocks_waiting_consumer() {
+        let q = Arc::new(ShadowQueue::<u32>::new(4));
+        let qc = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = qc.pop() {
+                got.push(v);
+            }
+            got
+        });
+        for v in 0..5u32 {
+            q.push(v);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        // capacity 4 with a sleeping producer: normally all 5 arrive,
+        // but the scheduler may batch pushes and drop the oldest —
+        // either way the count plus drops is conserved and order holds
+        assert_eq!(got.len() as u64 + q.dropped(), 5);
+        assert!(got.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_gated() {
+        assert!(!sample_hit(1, 0));
+        assert!(!sample_hit(0x7fff_ffff, 0));
+        assert!(sample_hit(1, 1));
+        assert!(sample_hit(2, 1));
+        assert!(!sample_hit(1, 3));
+        assert!(!sample_hit(2, 3));
+        assert!(sample_hit(3, 3));
+        assert!(sample_hit(6, 3));
+    }
+}

@@ -170,6 +170,11 @@ impl Trace {
 /// Ids are allocated from one process-wide counter starting at 1, so 0
 /// unambiguously means "untraced" everywhere (wire field included).
 /// Write errors are swallowed: observability must never fail serving.
+///
+/// Records are buffered in the underlying writer ([`TraceSink::to_file`]
+/// wraps the file in a `BufWriter`); graceful shutdown calls
+/// [`TraceSink::flush`] so the tail of the log is on disk before the
+/// process exits or a test inspects the file.
 pub struct TraceSink {
     out: Mutex<Box<dyn Write + Send>>,
     sample_every: u64,
@@ -222,7 +227,8 @@ impl TraceSink {
                     path.display()
                 ))
             })?;
-        Ok(Self::new(Box::new(f), sample_every, slow_ns))
+        let buffered = std::io::BufWriter::new(f);
+        Ok(Self::new(Box::new(buffered), sample_every, slow_ns))
     }
 
     /// Admission-time sampling decision: a fresh trace id for every
@@ -258,13 +264,26 @@ impl TraceSink {
         self.emitted.load(Ordering::Relaxed)
     }
 
-    /// Write one record as a JSON line.  IO errors are ignored.
+    /// Write one record as a JSON line.  IO errors are ignored.  The
+    /// line stays in the writer's buffer until it fills or
+    /// [`Self::flush`] runs — per-record fsync-ish flushing measurably
+    /// taxed the trace path for no durability the reader could rely on
+    /// mid-run anyway.
     pub fn emit(&self, rec: &TraceRecord) {
         let line = rec.to_json().to_string();
         let mut out = lock_unpoisoned(&self.out);
         let _ = writeln!(out, "{line}");
-        let _ = out.flush();
         self.emitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Flush buffered records through the underlying writer.  Called by
+    /// graceful shutdown (`SearchServer::shutdown`,
+    /// `ClusterRouter::shutdown`) so no emitted record is lost in the
+    /// buffer when the process drains; IO errors are ignored like
+    /// [`Self::emit`]'s.
+    pub fn flush(&self) {
+        let mut out = lock_unpoisoned(&self.out);
+        let _ = out.flush();
     }
 }
 
@@ -379,5 +398,48 @@ mod tests {
             let j = Json::parse(line).unwrap();
             assert_eq!(TraceRecord::from_json(&j).unwrap(), rec);
         }
+    }
+
+    #[test]
+    fn flush_pushes_buffered_records_through() {
+        use std::sync::{Arc, Mutex};
+        #[derive(Clone)]
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Buf(Arc::new(Mutex::new(Vec::new())));
+        // same buffering as `to_file`: records sit in the BufWriter
+        // until `flush` — the shutdown path must drain them
+        let sink = TraceSink::new(
+            Box::new(std::io::BufWriter::new(buf.clone())),
+            1,
+            0,
+        );
+        let rec = TraceRecord {
+            trace_id: 1,
+            role: "search".into(),
+            req_id: 2,
+            total_ns: 3,
+            spans: vec![("scan".into(), 2)],
+        };
+        sink.emit(&rec);
+        assert_eq!(sink.emitted(), 1);
+        assert!(
+            buf.0.lock().unwrap().is_empty(),
+            "short record stays buffered until flush"
+        );
+        sink.flush();
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(TraceRecord::from_json(&j).unwrap(), rec);
     }
 }

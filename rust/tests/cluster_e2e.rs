@@ -31,6 +31,7 @@ fn fast_cluster_cfg(n_shards: usize, strategy: ShardStrategy) -> ClusterConfig {
             max_wait_us: 200,
             workers: 1,
             queue_depth: 64,
+            quality_sample: 0,
         },
         net: NetConfig { max_connections: 8, poll_ms: 5, ..Default::default() },
         ..Default::default()
@@ -388,6 +389,136 @@ fn cluster_shutdown_drains_in_flight_requests() {
     let m = cluster.router().metrics();
     assert!(m.requests >= 12);
     assert_eq!(m.errors, 0);
+    cluster.shutdown();
+}
+
+/// Router quality pin (acceptance): at full fan-out with per-shard
+/// full poll the shadow's full-fanout re-execution is identical by
+/// construction, so the online estimate must read exactly 1.0 — while
+/// quality-sampled serving stays bitwise-identical to the plain index
+/// answer for the same queries.
+#[test]
+fn router_quality_estimate_is_unity_at_full_fanout() {
+    use amsearch::net::Serveable;
+    use amsearch::util::Json;
+    let mut rng = Rng::new(83);
+    let wl = synthetic::dense_workload(24, 240, 12, QueryModel::Exact, &mut rng);
+    let params =
+        IndexParams { n_classes: 8, top_p: 8, top_k: 3, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let mut cfg = fast_cluster_cfg(3, ShardStrategy::BalancedMembers);
+    cfg.router.quality_sample = 1; // shadow-verify every request
+    let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+    assert_eq!(cluster.router().fan_out(), 3, "full fan-out");
+
+    let mut ops = OpsCounter::new();
+    let total = 12usize;
+    for qi in 0..total {
+        let query = wl.queries.get(qi);
+        let expected = index.query_k(query, 8, 3, &mut ops);
+        let routed = cluster.router().search(query.to_vec(), 8, 3).unwrap();
+        assert_eq!(routed.neighbors.len(), expected.neighbors.len(), "qi={qi}");
+        for (a, b) in routed.neighbors.iter().zip(&expected.neighbors) {
+            assert_eq!(a.id, b.id, "qi={qi}");
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits(), "qi={qi}");
+        }
+    }
+    // the shadow worker runs off the hot path: poll STATS until it has
+    // digested every sample (12 pushes never overflow the queue)
+    let mut samples = 0u64;
+    for _ in 0..1000 {
+        let stats = Serveable::stats_json(&**cluster.router());
+        samples = stats
+            .get("quality")
+            .and_then(|q| q.get("samples"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+        if samples == total as u64 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(samples, total as u64, "every request was shadow-verified");
+    let stats = Serveable::stats_json(&**cluster.router());
+    let q = stats.get("quality").unwrap();
+    assert_eq!(q.get("recall").unwrap().as_f64(), Some(1.0), "exactly 1.0");
+    assert_eq!(q.get("exact_matches").unwrap().as_u64(), Some(total as u64));
+    assert_eq!(q.get("dropped").unwrap().as_u64(), Some(0));
+    // per-shard capture: at s = N every shard's share of the truth set
+    // is in the served answer
+    let Json::Arr(shards) = stats.get("shard_quality").unwrap() else {
+        panic!("shard_quality not an array")
+    };
+    assert_eq!(shards.len(), 3);
+    for sq in shards {
+        assert_eq!(sq.get("capture_rate").unwrap().as_f64(), Some(1.0));
+    }
+    // the fan-out effectiveness histogram saw every sampled answer
+    let fe = stats.get("fanout_effectiveness").unwrap();
+    assert_eq!(fe.get("total").unwrap().as_u64(), Some(total as u64));
+    // pinned Prometheus families ride the same snapshot
+    let text = Serveable::metrics_registry(&**cluster.router()).render();
+    assert!(text.contains("amsearch_quality_recall"), "{text}");
+    assert!(text.contains("amsearch_quality_shard_capture_rate"), "{text}");
+    cluster.shutdown();
+}
+
+/// Router quality pin at s = 1 on a clustered corpus: the online
+/// estimate must fall below 1.0 and agree with the offline recall
+/// measured against exhaustive ground truth — with full per-shard poll
+/// and exact precision, the shadow's full-fanout truth *is* the
+/// exhaustive answer, so the two measure the same quantity.
+#[test]
+fn router_quality_estimate_tracks_offline_recall_at_pruned_fanout() {
+    use amsearch::net::Serveable;
+    let mut rng = Rng::new(84);
+    let spec =
+        ClusteredSpec { dim: 32, n_clusters: 16, ..ClusteredSpec::sift_like() };
+    let wl = clustered_workload(spec, 768, 48, &mut rng);
+    let params = IndexParams { n_classes: 16, top_p: 16, ..Default::default() };
+    let index = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let mut cfg = fast_cluster_cfg(4, ShardStrategy::RoundRobin);
+    cfg.router.quality_sample = 1;
+    cfg.router.fan_out = 1; // prune hard: top-ranked shard only
+    let cluster = ClusterHarness::launch(&index, "127.0.0.1:0", &cfg).unwrap();
+    assert_eq!(cluster.router().fan_out(), 1);
+
+    let total = wl.ground_truth.len();
+    let mut hits = 0usize;
+    for (qi, &gt) in wl.ground_truth.iter().enumerate() {
+        let resp = cluster
+            .router()
+            .search(wl.queries.get(qi).to_vec(), 16, 1)
+            .unwrap();
+        if resp.neighbor() == Some(gt) {
+            hits += 1;
+        }
+    }
+    let offline = hits as f64 / total as f64;
+    assert!(offline < 1.0, "s = 1 on clustered data must lose recall");
+
+    let mut samples = 0u64;
+    for _ in 0..1000 {
+        let stats = Serveable::stats_json(&**cluster.router());
+        samples = stats
+            .get("quality")
+            .and_then(|q| q.get("samples"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+        if samples == total as u64 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(samples, total as u64);
+    let stats = Serveable::stats_json(&**cluster.router());
+    let q = stats.get("quality").unwrap();
+    let online = q.get("recall").unwrap().as_f64().unwrap();
+    assert!(online < 1.0, "the estimate must see the fan-out loss");
+    assert!(
+        (online - offline).abs() < 0.05,
+        "online {online} vs offline {offline}: same quantity, same queries"
+    );
     cluster.shutdown();
 }
 

@@ -32,6 +32,7 @@ fn serves_concurrent_clients_correctly() {
         max_wait_us: 300,
         workers: 3,
         queue_depth: 64,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(native_factory(index), config).unwrap());
 
@@ -89,6 +90,7 @@ fn quantized_server_matches_exact_and_reports_footprint() {
         max_wait_us: 300,
         workers: 2,
         queue_depth: 64,
+        quality_sample: 0,
     };
     let exact =
         SearchServer::start(native_factory(build(ScanPrecision::Exact)), config).unwrap();
@@ -154,6 +156,7 @@ fn batching_actually_groups_requests() {
         max_wait_us: 5_000, // generous window so the batch fills
         workers: 1,
         queue_depth: 256,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(native_factory(index), config).unwrap());
     let total = 64;
@@ -303,6 +306,7 @@ fn searches_racing_shutdown_always_get_a_response() {
         max_wait_us: 2_000,
         workers: 2,
         queue_depth: 64,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(native_factory(index), config).unwrap());
     let outcomes = {
@@ -369,6 +373,7 @@ fn pjrt_backend_serves_if_artifacts_present() {
         max_wait_us: 500,
         workers: 2,
         queue_depth: 64,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(factory, config).unwrap());
     let hits: Vec<bool> = amsearch::util::concurrent_map(24, 8, |i| {

@@ -36,6 +36,7 @@ fn start_stack(
         max_wait_us: 300,
         workers: 2,
         queue_depth: 64,
+        quality_sample: 0,
     };
     let server = Arc::new(SearchServer::start(factory, config).unwrap());
     // small handler pool + fast poll: tests run many stacks in parallel
@@ -459,6 +460,181 @@ fn loadgen_closed_loop_reports_throughput_and_latency() {
     assert!(j.get("window").unwrap().get("window_s").is_some());
     // the server counted exactly the loadgen traffic
     assert_eq!(server.metrics().requests, 100);
+    net.shutdown();
+    server.shutdown();
+}
+
+/// Regression pin for the buffered trace sink: the sink now buffers
+/// through a `BufWriter`, so records would sit in the writer buffer
+/// forever unless the graceful drain flushes them.  A short-lived
+/// traced server must lose nothing: file lines == records emitted.
+#[test]
+fn traced_server_flushes_buffered_records_on_shutdown() {
+    use amsearch::obs::TraceSink;
+    let mut rng = Rng::new(21);
+    let wl = synthetic::dense_workload(16, 128, 8, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 4, top_p: 2, ..Default::default() };
+    let idx = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+    let factory =
+        EngineFactory { index: idx, backend: Backend::Native, artifacts_dir: None };
+    let dir = std::env::temp_dir()
+        .join(format!("amsearch_net_e2e_{}_flush", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    let sink = TraceSink::to_file(&path, 1, 0).unwrap(); // sample everything
+    let config = CoordinatorConfig {
+        max_batch: 4,
+        max_wait_us: 200,
+        workers: 1,
+        queue_depth: 64,
+        quality_sample: 0,
+    };
+    let server = Arc::new(
+        SearchServer::start_traced(factory, config, Some(sink.clone())).unwrap(),
+    );
+    let net_cfg = NetConfig { max_connections: 4, poll_ms: 5, ..Default::default() };
+    let net = NetServer::bind(server.clone(), "127.0.0.1:0", net_cfg).unwrap();
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    for qi in 0..9 {
+        client.search_k(wl.queries.get(qi), 2, 1).unwrap();
+    }
+    net.shutdown();
+    server.shutdown(); // the drain flushes the buffered sink
+    assert!(sink.emitted() >= 9, "every request was sampled");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        text.lines().count() as u64,
+        sink.emitted(),
+        "no trace record may be lost in the writer buffer"
+    );
+    for line in text.lines() {
+        Json::parse(line).unwrap(); // each line is a complete record
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Quality-sampling acceptance pin (single node): with every request
+/// shadow-verified (`quality_sample = 1`), full poll on an exact index,
+/// (a) responses stay bitwise-identical to an unsampled server over the
+/// same index, and (b) the online recall estimate is exactly 1.0 —
+/// the shadow exhaustive scan and the full-poll serving answer see the
+/// same candidate set.
+#[test]
+fn quality_sampled_serving_is_identical_and_estimates_unity_recall() {
+    use amsearch::net::Serveable;
+    let mut rng = Rng::new(23);
+    let wl = synthetic::dense_workload(24, 192, 16, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 6, top_p: 6, ..Default::default() };
+    let idx = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng).unwrap());
+    let mk = |quality_sample: u64| {
+        let factory = EngineFactory {
+            index: idx.clone(),
+            backend: Backend::Native,
+            artifacts_dir: None,
+        };
+        let config = CoordinatorConfig {
+            max_batch: 4,
+            max_wait_us: 200,
+            workers: 2,
+            queue_depth: 64,
+            quality_sample,
+        };
+        Arc::new(SearchServer::start(factory, config).unwrap())
+    };
+    let sampled = mk(1);
+    let plain = mk(0);
+    let total = 32usize;
+    for i in 0..total {
+        let q = wl.queries.get(i % wl.queries.len());
+        let a = sampled.search(q.to_vec(), 6, 3).unwrap();
+        let b = plain.search(q.to_vec(), 6, 3).unwrap();
+        assert_eq!(a.neighbors, b.neighbors, "query {i}");
+        for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(x.distance.to_bits(), y.distance.to_bits(), "query {i}");
+        }
+        assert_eq!(a.polled, b.polled, "query {i}");
+        assert_eq!(a.candidates, b.candidates, "query {i}");
+    }
+    // the shadow worker runs off the hot path: poll STATS until it has
+    // digested every sample (bounded; 32 pushes can never overflow the
+    // 256-slot queue, so nothing is dropped)
+    let mut samples = 0u64;
+    for _ in 0..1000 {
+        let stats = Serveable::stats_json(&*sampled);
+        samples = stats
+            .get("quality")
+            .and_then(|q| q.get("samples"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+        if samples == total as u64 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(samples, total as u64, "every request was shadow-verified");
+    let stats = Serveable::stats_json(&*sampled);
+    let q = stats.get("quality").expect("quality block present");
+    assert_eq!(q.get("recall").unwrap().as_f64(), Some(1.0), "exactly 1.0");
+    assert_eq!(q.get("dropped").unwrap().as_u64(), Some(0));
+    assert_eq!(q.get("exact_matches").unwrap().as_u64(), Some(total as u64));
+    // the pinned Prometheus families follow the same snapshot
+    let text = Serveable::metrics_registry(&*sampled).render();
+    assert!(text.contains("amsearch_quality_samples_total"), "{text}");
+    assert!(text.contains("amsearch_quality_recall"), "{text}");
+    // the unsampled server exports no estimate at all
+    let plain_stats = Serveable::stats_json(&*plain);
+    assert!(plain_stats.get("quality").is_none());
+    sampled.shutdown();
+    plain.shutdown();
+}
+
+/// EXPLAIN over the wire: the introspection report's final neighbors
+/// agree with the served answer for the same query, the poll decision
+/// is visible, and the `exact` section reports unity recall on a
+/// full-poll exact configuration.  Traffic on the same connection is
+/// untouched before and after.
+#[test]
+fn explain_frame_report_matches_serving_answer() {
+    let (server, net, wl) = start_stack(31, 32, 256, 8);
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let q = wl.queries.get(0);
+    let served = client.search_k(q, 8, 5).unwrap();
+    let report = client.explain(q, 8, 5, true).unwrap();
+    // final neighbors mirror the serving answer, id for id
+    let neighbors = report.get("neighbors").unwrap();
+    let Json::Arr(items) = neighbors else { panic!("neighbors not an array") };
+    assert_eq!(items.len(), served.neighbors.len());
+    for (item, n) in items.iter().zip(&served.neighbors) {
+        assert_eq!(item.get("id").unwrap().as_u64(), Some(n.id as u64));
+        assert!(item.get("class").is_some());
+    }
+    // the poll decision is reported per class with the polled cut
+    let poll = report.get("poll").expect("poll block");
+    let Json::Arr(classes) = poll.get("classes").unwrap() else {
+        panic!("classes not an array")
+    };
+    assert_eq!(classes.len(), 8, "every class is scored");
+    assert_eq!(
+        classes
+            .iter()
+            .filter(|c| c.get("polled").and_then(|v| v.as_bool()) == Some(true))
+            .count(),
+        8,
+        "full poll"
+    );
+    // ground truth: full poll on an exact index is exhaustive
+    let exact = report.get("exact").expect("exact section requested");
+    assert_eq!(exact.get("recall").unwrap().as_f64(), Some(1.0));
+    assert_eq!(exact.get("matches_exactly").unwrap().as_bool(), Some(true));
+    // the connection still serves plain traffic, byte-identically
+    let after = client.search_k(q, 8, 5).unwrap();
+    assert_eq!(after.neighbors, served.neighbors);
+    for (a, b) in after.neighbors.iter().zip(&served.neighbors) {
+        assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+    }
     net.shutdown();
     server.shutdown();
 }

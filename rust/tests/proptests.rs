@@ -705,6 +705,7 @@ fn prop_router_full_fanout_matches_single_node() {
                 max_wait_us: 200,
                 workers: 1,
                 queue_depth: 64,
+                quality_sample: 0,
             },
         )
         .unwrap();
@@ -723,6 +724,7 @@ fn prop_router_full_fanout_matches_single_node() {
                 max_wait_us: 200,
                 workers: 1,
                 queue_depth: 64,
+                quality_sample: 0,
             },
             net: NetConfig { max_connections: 4, poll_ms: 5, ..Default::default() },
             ..Default::default()

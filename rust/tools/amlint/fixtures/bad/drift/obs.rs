@@ -1,0 +1,5 @@
+// amlint fixture: rule 3 (drift), observability side.  One family has
+// no README row, and the quality family is not pinned by any test.
+pub const M_REQUESTS: &str = "amsearch_requests_total";
+pub const M_UNDOCUMENTED: &str = "amsearch_undocumented_total";
+pub const M_QUALITY_RECALL: &str = "amsearch_quality_recall";

@@ -1,5 +1,8 @@
 // amlint fixture: rule 3 (drift), wire side. ERR_UNTESTED never shows
-// up in a test assertion, and the codes skip 3.
+// up in a test assertion, and the codes skip 3.  TRACED_VERSION is
+// gone entirely, FT_EXPLAIN is neither asserted nor documented, and
+// the EXPLAIN_REPLY constant was deleted without a trace.
 pub const ERR_BAD_FRAME: u16 = 1;
 pub const ERR_UNTESTED: u16 = 2;
 pub const ERR_GAPPED: u16 = 4;
+pub const FT_EXPLAIN: u8 = 0x0C;

@@ -25,9 +25,16 @@
 //!   `amsearch_`-prefixed, and documented in the README — renaming an
 //!   exported Prometheus family silently breaks dashboards, so names
 //!   only move when the docs move with them;
+//! * the `amsearch_quality_*` families additionally need a test pin:
+//!   the online recall estimator's exported names are what the e2e
+//!   pins and the CI cluster smoke assert against, and at least one
+//!   quality family must exist at all;
 //! * `net/wire.rs` keeps a `TRACED_VERSION` constant for the SEARCH
 //!   layout carrying a trace id, a test asserts its value, and the
-//!   README documents the `trace_id` field.
+//!   README documents the `trace_id` field;
+//! * `net/wire.rs` keeps `FT_EXPLAIN` / `FT_EXPLAIN_REPLY` frame-type
+//!   constants, a test asserts their ids, and the README frame table
+//!   carries a row with the matching `0xNN` id for each.
 
 use std::collections::BTreeSet;
 
@@ -36,6 +43,16 @@ use crate::rules::Finding;
 
 fn code(toks: &[Tok]) -> Vec<&Tok> {
     toks.iter().filter(|t| t.kind != Kind::Comment).collect()
+}
+
+/// Parse an integer literal, decimal or `0x` hex (frame type ids are
+/// conventionally written in hex), with `_` separators stripped.
+fn parse_int(text: &str) -> Option<u64> {
+    let t = text.replace('_', "");
+    match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => t.parse::<u64>().ok(),
+    }
 }
 
 /// `const <name>: <ty> = <int literal>;` declarations whose name starts
@@ -58,7 +75,7 @@ fn int_consts(toks: &[Tok], prefix: &str, ty: &str) -> Vec<(String, u64, usize)>
         if lit.kind != Kind::Lit || c[i + 6].text != ";" {
             continue;
         }
-        if let Ok(v) = lit.text.parse::<u64>() {
+        if let Some(v) = parse_int(&lit.text) {
             out.push((name.text.clone(), v, name.line));
         }
     }
@@ -281,6 +298,34 @@ pub fn check(input: &DriftInput<'_>, out: &mut Vec<Finding>) {
             );
         }
     }
+    // quality families are additionally pinned by tests: the online
+    // recall estimator's exported names are what the e2e quality pins
+    // and the CI cluster smoke assert against
+    let mut quality_seen = false;
+    for (name, value, line) in &metrics {
+        if !value.starts_with("amsearch_quality_") {
+            continue;
+        }
+        quality_seen = true;
+        if !input.test_idents.contains(name) {
+            push(
+                out,
+                obs_file,
+                *line,
+                format!("quality family `{value}` (`{name}`) is not pinned by any test"),
+            );
+        }
+    }
+    if !metrics.is_empty() && !quality_seen {
+        push(
+            out,
+            obs_file,
+            1,
+            "no `amsearch_quality_*` metric families found — the online \
+             recall estimate must stay exported"
+                .into(),
+        );
+    }
     match int_consts(&wire_toks, "TRACED_VERSION", "u8").first() {
         None => push(
             out,
@@ -308,6 +353,51 @@ pub fn check(input: &DriftInput<'_>, out: &mut Vec<Finding>) {
                      documents the `trace_id` field"
                         .into(),
                 );
+            }
+        }
+    }
+
+    // --- explain frame type ids ---------------------------------------
+    // EXPLAIN/EXPLAIN_REPLY are an admin wire contract: the type ids
+    // must stay asserted by a test and documented in the README frame
+    // table, or old peers stop parsing introspection replies
+    for (name, label) in [("FT_EXPLAIN", "EXPLAIN"), ("FT_EXPLAIN_REPLY", "EXPLAIN_REPLY")] {
+        let found = int_consts(&wire_toks, name, "u8");
+        match found.iter().find(|(n, _, _)| n == name) {
+            None => push(
+                out,
+                wire_file,
+                1,
+                format!(
+                    "no `{name}: u8` constant found — the explain frame type \
+                     ids must stay pinned"
+                ),
+            ),
+            Some((_, v, line)) => {
+                if !input.test_idents.contains(name) {
+                    push(
+                        out,
+                        wire_file,
+                        *line,
+                        format!("`{name}` (frame type 0x{v:02X}) is not asserted by any test"),
+                    );
+                }
+                let cell = format!("0x{v:02X}");
+                let documented = input
+                    .readme
+                    .lines()
+                    .any(|l| l.contains(label) && l.contains(&cell));
+                if !documented {
+                    push(
+                        out,
+                        wire_file,
+                        *line,
+                        format!(
+                            "`{name}` has no README frame-table row containing \
+                             both `{label}` and `{cell}`"
+                        ),
+                    );
+                }
             }
         }
     }
@@ -437,11 +527,22 @@ mod tests {
         pub const ERR_A: u16 = 1;
         pub const ERR_B: u16 = 2;
         pub const TRACED_VERSION: u8 = 2;
+        pub const FT_EXPLAIN: u8 = 0x0C;
+        pub const FT_EXPLAIN_REPLY: u8 = 0x0D;
     "#;
     const OBS_OK: &str = r#"
         pub const M_REQUESTS: &str = "amsearch_requests_total";
         pub const M_LATENCY: &str = "amsearch_latency_ns";
+        pub const M_QUALITY_RECALL: &str = "amsearch_quality_recall";
     "#;
+    const TESTS_OK: &[&str] = &[
+        "ERR_A",
+        "ERR_B",
+        "TRACED_VERSION",
+        "FT_EXPLAIN",
+        "FT_EXPLAIN_REPLY",
+        "M_QUALITY_RECALL",
+    ];
     const PERSIST_OK: &str = r#"
         const VERSION: u32 = 4;
         pub(crate) const SHARD_MANIFEST_VERSION: u32 = 3;
@@ -459,6 +560,15 @@ mod tests {
 |---|---|---|
 | 1 | `ERR_A` | a |
 | 2 | `ERR_B` | b |
+
+| id | frame | meaning |
+|---|---|---|
+| `0x0C` | EXPLAIN | replay one query |
+| `0x0D` | EXPLAIN_REPLY | introspection report |
+
+| metric | meaning |
+|---|---|
+| `amsearch_quality_recall` | online recall estimate |
 
 | version | notes |
 |---|---|
@@ -512,18 +622,24 @@ A v2 SEARCH frame appends a `trace_id` trailer.
 
     #[test]
     fn clean_tree_passes() {
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, TESTS_OK);
         assert!(got.is_empty(), "{got:?}");
     }
 
     #[test]
     fn untested_and_undocumented_codes_flagged() {
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "TRACED_VERSION"]);
+        let got = run(
+            WIRE_OK,
+            PERSIST_OK,
+            PLAN_OK,
+            README_OK,
+            &["ERR_A", "TRACED_VERSION", "FT_EXPLAIN", "FT_EXPLAIN_REPLY", "M_QUALITY_RECALL"],
+        );
         assert_eq!(got.len(), 1);
         assert!(got[0].message.contains("ERR_B"));
         assert!(got[0].message.contains("not asserted"));
         let readme_missing = README_OK.replace("| 2 | `ERR_B` | b |\n", "");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme_missing, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme_missing, TESTS_OK);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("error-table row"));
     }
@@ -531,7 +647,7 @@ A v2 SEARCH frame appends a `trace_id` trailer.
     #[test]
     fn stale_readme_constant_flagged() {
         let readme = format!("{README_OK}\nAlso see `ERR_GONE`.\n");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, TESTS_OK);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("ERR_GONE"));
     }
@@ -539,7 +655,7 @@ A v2 SEARCH frame appends a `trace_id` trailer.
     #[test]
     fn duplicate_and_gapped_codes_flagged() {
         let wire = "pub const ERR_A: u16 = 1;\npub const ERR_B: u16 = 1;";
-        let got = run(wire, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(wire, PERSIST_OK, PLAN_OK, README_OK, TESTS_OK);
         assert!(got.iter().any(|f| f.message.contains("reuses")));
         assert!(got.iter().any(|f| f.message.contains("contiguous")));
     }
@@ -547,7 +663,7 @@ A v2 SEARCH frame appends a `trace_id` trailer.
     #[test]
     fn version_bump_without_gate_flagged() {
         let persist = PERSIST_OK.replace("VERSION: u32 = 4", "VERSION: u32 = 5");
-        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, TESTS_OK);
         assert!(
             got.iter().any(|f| f.message.contains("no `version >= 5` feature gate")),
             "{got:?}"
@@ -557,7 +673,7 @@ A v2 SEARCH frame appends a `trace_id` trailer.
     #[test]
     fn gate_beyond_version_flagged() {
         let persist = PERSIST_OK.replace("version >= 4", "version >= 9");
-        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, &persist, PLAN_OK, README_OK, TESTS_OK);
         assert!(got.iter().any(|f| f.message.contains("outside 2..=4")), "{got:?}");
     }
 
@@ -569,12 +685,12 @@ A v2 SEARCH frame appends a `trace_id` trailer.
             PLAN_OK,
             "fn start() {}",
             README_OK,
-            &["ERR_A", "ERR_B", "TRACED_VERSION"],
+            TESTS_OK,
         );
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("kernel_backend"));
         let readme = README_OK.replace("kernel.backend", "kernel backend");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, TESTS_OK);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("kernel.backend"));
     }
@@ -582,17 +698,17 @@ A v2 SEARCH frame appends a `trace_id` trailer.
     #[test]
     fn readme_version_rows_checked() {
         let readme = README_OK.replace("| v4 | quant (current) |", "| v4 | quant |");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, TESTS_OK);
         assert!(got.iter().any(|f| f.message.contains("must say \"current\"")), "{got:?}");
         let readme = README_OK.replace("| v3 | shard manifest |", "| v3 | reserved (current) |");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, TESTS_OK);
         assert!(got.iter().any(|f| f.message.contains("shard")), "{got:?}");
         assert!(got.iter().any(|f| f.message.contains("but VERSION")), "{got:?}");
     }
 
     #[test]
     fn metric_families_checked() {
-        let tests = &["ERR_A", "ERR_B", "TRACED_VERSION"];
+        let tests = TESTS_OK;
         // undocumented family
         let readme = README_OK.replace("| `amsearch_latency_ns` | latency |\n", "");
         let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, tests);
@@ -620,17 +736,77 @@ A v2 SEARCH frame appends a `trace_id` trailer.
     fn traced_wire_version_checked() {
         // constant removed
         let wire = WIRE_OK.replace("pub const TRACED_VERSION: u8 = 2;\n", "");
-        let got = run(&wire, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(&wire, PERSIST_OK, PLAN_OK, README_OK, TESTS_OK);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("TRACED_VERSION"));
         // constant present but no test pins its value
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, README_OK, &["ERR_A", "ERR_B"]);
+        let got = run(
+            WIRE_OK,
+            PERSIST_OK,
+            PLAN_OK,
+            README_OK,
+            &["ERR_A", "ERR_B", "FT_EXPLAIN", "FT_EXPLAIN_REPLY", "M_QUALITY_RECALL"],
+        );
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("not asserted"));
         // README stops documenting the trailer field
         let readme = README_OK.replace("`trace_id` trailer", "an id trailer");
-        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, &["ERR_A", "ERR_B", "TRACED_VERSION"]);
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, TESTS_OK);
         assert_eq!(got.len(), 1, "{got:?}");
         assert!(got[0].message.contains("trace_id"));
+    }
+
+    #[test]
+    fn explain_frame_ids_checked() {
+        // constant removed
+        let wire = WIRE_OK.replace("pub const FT_EXPLAIN_REPLY: u8 = 0x0D;\n", "");
+        let got = run(&wire, PERSIST_OK, PLAN_OK, README_OK, TESTS_OK);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("no `FT_EXPLAIN_REPLY: u8`"));
+        // constant present but no test pins its id
+        let got = run(
+            WIRE_OK,
+            PERSIST_OK,
+            PLAN_OK,
+            README_OK,
+            &["ERR_A", "ERR_B", "TRACED_VERSION", "FT_EXPLAIN_REPLY", "M_QUALITY_RECALL"],
+        );
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("`FT_EXPLAIN` (frame type 0x0C) is not asserted"));
+        // id renumbered without moving the README frame-table row
+        let wire = WIRE_OK.replace("FT_EXPLAIN_REPLY: u8 = 0x0D", "FT_EXPLAIN_REPLY: u8 = 0x0E");
+        let got = run(&wire, PERSIST_OK, PLAN_OK, README_OK, TESTS_OK);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("`EXPLAIN_REPLY` and `0x0E`"), "{got:?}");
+        // README frame row dropped entirely
+        let readme = README_OK.replace("| `0x0C` | EXPLAIN | replay one query |\n", "");
+        let got = run(WIRE_OK, PERSIST_OK, PLAN_OK, &readme, TESTS_OK);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("`EXPLAIN` and `0x0C`"), "{got:?}");
+    }
+
+    #[test]
+    fn quality_families_checked() {
+        // family exists but no test pins its constant
+        let got = run(
+            WIRE_OK,
+            PERSIST_OK,
+            PLAN_OK,
+            README_OK,
+            &["ERR_A", "ERR_B", "TRACED_VERSION", "FT_EXPLAIN", "FT_EXPLAIN_REPLY"],
+        );
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(
+            got[0].message.contains("`amsearch_quality_recall` (`M_QUALITY_RECALL`) is not pinned"),
+            "{got:?}"
+        );
+        // every quality family vanished while other metrics remain
+        let obs = OBS_OK
+            .replace("pub const M_QUALITY_RECALL: &str = \"amsearch_quality_recall\";\n", "");
+        let readme =
+            README_OK.replace("| `amsearch_quality_recall` | online recall estimate |\n", "");
+        let got = run_full(WIRE_OK, PERSIST_OK, PLAN_OK, SERVER_OK, &obs, &readme, TESTS_OK);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("no `amsearch_quality_*`"), "{got:?}");
     }
 }

@@ -45,11 +45,17 @@ pub const LOCK_REGISTRIES: [(&str, &[&str]); 3] = [
     // per-connection writer
     ("net/server.rs", &["accept", "rx", "m", "stream"]),
     // batch funnel receiver, submit sender, batcher handle, worker
-    // handles, metrics
-    ("coordinator/server.rs", &["batch_rx", "tx", "batcher", "workers", "metrics"]),
-    // request receiver, submit sender, worker handles, metrics, cached
-    // index info
-    ("cluster/router.rs", &["req_rx", "tx", "workers", "metrics", "index_info"]),
+    // handles, shadow-worker handle, metrics
+    (
+        "coordinator/server.rs",
+        &["batch_rx", "tx", "batcher", "workers", "shadow_worker", "metrics"],
+    ),
+    // request receiver, submit sender, worker handles, shadow-worker
+    // handle, metrics, cached index info
+    (
+        "cluster/router.rs",
+        &["req_rx", "tx", "workers", "shadow_worker", "metrics", "index_info"],
+    ),
 ];
 
 /// Recursively collect `*.rs` files under `dir`, as paths relative to

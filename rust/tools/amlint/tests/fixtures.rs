@@ -100,9 +100,10 @@ fn drift_fixture_flags_every_planted_inconsistency() {
     let wire = fixture("bad/drift/wire.rs");
     let persist = fixture("bad/drift/persist.rs");
     let plan = fixture("bad/drift/plan.rs");
+    let obs = fixture("bad/drift/obs.rs");
     let readme = fixture("bad/drift/README.md");
-    // ERR_BAD_FRAME is asserted somewhere; ERR_UNTESTED and ERR_GAPPED
-    // are not
+    // ERR_BAD_FRAME is asserted somewhere; ERR_UNTESTED, ERR_GAPPED,
+    // FT_EXPLAIN, and M_QUALITY_RECALL are not
     let test_idents: BTreeSet<String> = ["ERR_BAD_FRAME".to_string()].into();
     let mut findings = Vec::new();
     drift::check(
@@ -112,6 +113,7 @@ fn drift_fixture_flags_every_planted_inconsistency() {
             plan: &plan,
             // a server that never reports its kernel backend
             server: "fn start() {}",
+            obs: &obs,
             readme: &readme,
             test_idents: &test_idents,
         },
@@ -133,6 +135,12 @@ fn drift_fixture_flags_every_planted_inconsistency() {
         "README formats table has no `| v5 |` row",
         "README `| v1 |` row says \"current\" but VERSION is 5",
         "README `| v3 |` row must mention the shard manifest",
+        "no `TRACED_VERSION: u8` constant found",  // traced layout unpinned
+        "`FT_EXPLAIN` (frame type 0x0C) is not asserted", // unpinned frame id
+        "`EXPLAIN` and `0x0C`",                    // no README frame-table row
+        "no `FT_EXPLAIN_REPLY: u8` constant found", // reply constant deleted
+        "`amsearch_undocumented_total` (`M_UNDOCUMENTED`) has no README row",
+        "quality family `amsearch_quality_recall` (`M_QUALITY_RECALL`) is not pinned",
     ];
     for needle in expect_contains {
         assert!(
