@@ -1,0 +1,138 @@
+//! Paged vs resident exact scan: wall-clock and I/O accounting for the
+//! disk-resident store (`store::PagedStore`), sweeping dataset sizes
+//! past a simulated RAM budget so the extent cache goes from
+//! everything-fits to actively evicting.
+//!
+//! Beyond latency rows, this target emits the paged store's byte
+//! accounting as extra measurement rows so `BENCH_store.json` captures
+//! the I/O-pruning claim: for those rows `mean_ns` carries a **byte
+//! count, not a time** (the row name says which; the shared JSON schema
+//! has no units field).  The headline invariant — per-query bytes read
+//! off disk stays far below what a resident store keeps in RAM — is
+//! asserted here, not just reported.
+
+#[path = "harness_common.rs"]
+#[allow(dead_code)] // helpers are shared; each target uses a subset
+mod harness;
+
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::index::persist;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::metrics::OpsCounter;
+use harness::{bench, budget, section, write_json_if_requested, Measurement};
+
+/// The simulated RAM budget for the extent cache: small datasets fit
+/// entirely, the larger sweep points overflow it and must evict.
+const CACHE_BYTES: u64 = 4 * 1024 * 1024;
+
+/// A byte counter disguised as a measurement row (`mean_ns` = bytes).
+fn byte_row(name: String, bytes: f64) -> Measurement {
+    Measurement { name, iters: 1, mean_ns: bytes, p50_ns: bytes, p95_ns: bytes }
+}
+
+fn main() {
+    let mut rng = Rng::new(41);
+    let dir = std::env::temp_dir().join(format!("amsearch_bench_paged_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create bench scratch dir");
+    let mut rows: Vec<Measurement> = Vec::new();
+
+    section("paged vs resident exact scan (d=64, q=64, default fan-out)");
+    for &n in &[8_192usize, 32_768, 65_536] {
+        let d = 64usize;
+        let wl = synthetic::dense_workload(d, n, 16, QueryModel::Exact, &mut rng);
+        let params = IndexParams { n_classes: 64, top_p: 4, top_k: 10, ..Default::default() };
+        let built = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+        let path = dir.join(format!("bench_{n}.amidx"));
+        persist::save(&built, &path).unwrap();
+        let resident = persist::load(&path).unwrap();
+        let paged = persist::load_paged(&path, CACHE_BYTES).unwrap();
+        let data_bytes = (n * d * 4) as f64;
+
+        // the paged full path must be bitwise-equal to the resident scan
+        for qi in 0..8usize {
+            let x = wl.queries.get(qi);
+            let mut ops = OpsCounter::new();
+            let a = resident.query_default(x, &mut ops);
+            let mut ops = OpsCounter::new();
+            let b = paged.query_default(x, &mut ops);
+            assert_eq!(a.neighbors.len(), b.neighbors.len(), "n={n} q{qi}");
+            for (na, nb) in a.neighbors.iter().zip(&b.neighbors) {
+                assert_eq!(na.id, nb.id, "n={n} q{qi}");
+                assert_eq!(
+                    na.distance.to_bits(),
+                    nb.distance.to_bits(),
+                    "n={n} q{qi}: paged rerank must be bitwise-equal"
+                );
+            }
+        }
+        assert!(paged.store_error().is_none(), "paged store poisoned");
+
+        let mut qi = 0usize;
+        let m = bench(&format!("resident query n={n}"), budget(), || {
+            let mut ops = OpsCounter::new();
+            std::hint::black_box(resident.query_default(wl.queries.get(qi % 16), &mut ops));
+            qi += 1;
+        });
+        m.report();
+        rows.push(m);
+
+        let before = paged.store_stats();
+        let mut qj = 0usize;
+        let m = bench(&format!("paged query n={n}"), budget(), || {
+            let mut ops = OpsCounter::new();
+            std::hint::black_box(paged.query_default(wl.queries.get(qj % 16), &mut ops));
+            qj += 1;
+        });
+        m.report();
+        let after = paged.store_stats();
+        let queries = m.iters.max(1) as f64;
+        rows.push(m);
+
+        let read_per_query = after.bytes_read.saturating_sub(before.bytes_read) as f64 / queries;
+        let hits = after.cache_hits.saturating_sub(before.cache_hits) as f64;
+        let misses = after.cache_misses.saturating_sub(before.cache_misses) as f64;
+        let hit_rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+        println!(
+            "  -> store: {:.1} KB read/query of {:.1} MB on disk, cache hit {:.1}%, \
+             {:.1} of {:.1} MB cached, {} evictions",
+            read_per_query / 1e3,
+            after.bytes_disk as f64 / 1e6,
+            hit_rate * 100.0,
+            after.bytes_resident as f64 / 1e6,
+            after.cache_budget as f64 / 1e6,
+            after.cache_evictions
+        );
+        // I/O pruning: a polled-class read pattern must not stream the
+        // whole file per query the way a resident scan streams RAM
+        assert!(
+            read_per_query < data_bytes,
+            "n={n}: paged scan read {read_per_query} bytes/query over a {data_bytes}-byte dataset"
+        );
+        rows.push(byte_row(format!("paged n={n} bytes_read/query [bytes]"), read_per_query));
+        rows.push(byte_row(
+            format!("paged n={n} bytes_resident [bytes]"),
+            after.bytes_resident as f64,
+        ));
+        rows.push(byte_row(format!("paged n={n} bytes_disk [bytes]"), after.bytes_disk as f64));
+        rows.push(byte_row(format!("resident n={n} bytes_resident [bytes]"), data_bytes));
+    }
+
+    section("paged exhaustive reference scan (class-major full read)");
+    {
+        let n = 32_768usize;
+        let path = dir.join(format!("bench_{n}.amidx"));
+        let paged = persist::load_paged(&path, CACHE_BYTES).unwrap();
+        let wl = synthetic::dense_workload(64, 4, 4, QueryModel::Exact, &mut rng);
+        let mut qi = 0usize;
+        let m = bench(&format!("paged exhaustive_exact n={n}"), budget(), || {
+            std::hint::black_box(paged.exhaustive_exact(wl.queries.get(qi % 4), 10));
+            qi += 1;
+        });
+        m.report();
+        rows.push(m);
+    }
+
+    write_json_if_requested(&rows);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -49,6 +49,13 @@ pub struct ClusterConfig {
     pub backend: Backend,
     /// Artifacts directory (PJRT backend only).
     pub artifacts_dir: Option<PathBuf>,
+    /// Vector-store choice for the shard engines: `Resident` (default)
+    /// loads member matrices into RAM; `Paged` keeps each shard's
+    /// `.amdat` extent file on disk behind an LRU cache.  Paged shards
+    /// require a plan directory ([`ClusterHarness::launch_from_dir`]):
+    /// the in-process [`ClusterHarness::launch`] path has no on-disk
+    /// artifacts to page from and rejects the combination.
+    pub store: crate::store::StoreOptions,
     /// Shared trace sink for the whole cluster: the router and every
     /// shard coordinator emit into the same JSON-lines destination, so
     /// one `--trace-out` file carries complete stitched request trees.
@@ -65,6 +72,7 @@ impl Default for ClusterConfig {
             net: NetConfig::default(),
             backend: Backend::Native,
             artifacts_dir: None,
+            store: crate::store::StoreOptions::default(),
             trace: None,
         }
     }
@@ -89,6 +97,13 @@ impl ClusterHarness {
     /// cluster, with the router's front door bound to `listen`
     /// (`"127.0.0.1:0"` for an ephemeral port).
     pub fn launch(index: &AmIndex, listen: &str, cfg: &ClusterConfig) -> Result<Self> {
+        if matches!(cfg.store.mode, crate::store::StoreMode::Paged) {
+            return Err(crate::error::Error::Config(
+                "paged shards need on-disk artifacts: write a plan \
+                 directory with shard-plan and launch from it"
+                    .into(),
+            ));
+        }
         let plan = ShardPlan::for_index(index, cfg.n_shards, cfg.strategy)?;
         let table = routing_table(index, &plan)?;
         let mut factories = Vec::with_capacity(plan.n_shards);
@@ -114,10 +129,11 @@ impl ClusterHarness {
         let loaded = load_cluster(dir)?;
         let mut factories = Vec::with_capacity(loaded.shard_files.len());
         for (si, file) in loaded.shard_files.iter().enumerate() {
-            let factory = EngineFactory::from_index_file(
+            let factory = EngineFactory::from_index_file_with_store(
                 file,
                 cfg.backend,
                 cfg.artifacts_dir.clone(),
+                &cfg.store,
             )?;
             if factory.index.dim() != loaded.table.dim()
                 || factory.index.len() != loaded.table.shard_len(si)

@@ -25,6 +25,7 @@ use crate::partition::Allocation;
 use crate::quant::ScanPrecision;
 use crate::runtime::Backend;
 use crate::search::Metric;
+use crate::store::{StoreMode, StoreOptions, DEFAULT_CACHE_BYTES};
 use crate::util::json::Json;
 
 /// Which workload generator to use.
@@ -221,6 +222,37 @@ impl ServeConfig {
     }
 }
 
+/// Vector-store section: where the exact member matrices of a *loaded*
+/// index live (`serve --index`, `query --index`, `serve-cluster`).
+/// Ignored when the index is built in-process — a fresh build is always
+/// resident.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// resident | paged.
+    pub mode: StoreMode,
+    /// Extent-cache budget in MiB (paged mode only).
+    pub cache_mb: u64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            mode: StoreMode::Resident,
+            cache_mb: DEFAULT_CACHE_BYTES >> 20,
+        }
+    }
+}
+
+impl StoreConfig {
+    /// Convert to the store layer's option struct.
+    pub fn to_options(&self) -> StoreOptions {
+        StoreOptions {
+            mode: self.mode,
+            cache_bytes: self.cache_mb.saturating_mul(1024 * 1024),
+        }
+    }
+}
+
 /// Backend section.
 #[derive(Debug, Clone)]
 pub struct BackendConfig {
@@ -247,6 +279,8 @@ pub struct AppConfig {
     pub serve: ServeConfig,
     /// Scoring backend.
     pub backend: BackendConfig,
+    /// Vector-store selection for loaded indices.
+    pub store: StoreConfig,
 }
 
 fn get_usize(obj: &Json, key: &str, default: usize) -> Result<usize> {
@@ -379,6 +413,27 @@ impl AppConfig {
         cfg.serve.quality_sample =
             get_u64(sv, "quality_sample", cfg.serve.quality_sample)?;
 
+        let st = root.get("store").unwrap_or(&empty);
+        match st.get("mode") {
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| Error::Config("'mode' must be a string".into()))?;
+                cfg.store.mode = StoreMode::parse(s)?;
+                cfg.store.cache_mb = get_u64(st, "cache_mb", cfg.store.cache_mb)?;
+            }
+            // a cache budget means nothing without the paged mode —
+            // reject instead of silently serving resident
+            None if st.get("cache_mb").is_some() => {
+                return Err(Error::Config(
+                    "'cache_mb' requires 'mode' (resident|paged) in the \
+                     store section"
+                        .into(),
+                ));
+            }
+            None => {}
+        }
+
         let be = root.get("backend").unwrap_or(&empty);
         cfg.backend.kind = get_parsed(be, "kind", cfg.backend.kind)?;
         if let Some(v) = be.get("artifacts_dir") {
@@ -489,6 +544,27 @@ mod tests {
         assert!(
             AppConfig::from_json(r#"{"serve": {"quality_sample": -2}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn store_section_parses_and_converts() {
+        let cfg = AppConfig::from_json(
+            r#"{"store": {"mode": "paged", "cache_mb": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.store.mode, StoreMode::Paged);
+        let opts = cfg.store.to_options();
+        assert_eq!(opts.mode, StoreMode::Paged);
+        assert_eq!(opts.cache_bytes, 8 * 1024 * 1024);
+
+        // defaults: resident, 64 MiB budget
+        let cfg = AppConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.store.mode, StoreMode::Resident);
+        assert_eq!(cfg.store.to_options().cache_bytes, DEFAULT_CACHE_BYTES);
+
+        // bad mode and orphan cache knob are rejected
+        assert!(AppConfig::from_json(r#"{"store": {"mode": "mmap"}}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"store": {"cache_mb": 8}}"#).is_err());
     }
 
     #[test]

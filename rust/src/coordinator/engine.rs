@@ -121,9 +121,14 @@ impl Engine {
         let mut class_members = Vec::new();
         // a quantized index scans codes through the two-stage compressed
         // pipeline; the f32 GEMM artifact would bypass it, so the native
-        // scan path is used instead (the scorer still runs on PJRT)
-        let scan_entries =
-            if index.quant().is_none() { manifest.entries() } else { &[] };
+        // scan path is used instead (the scorer still runs on PJRT).
+        // a paged index keeps no member matrices in RAM to precompute
+        // GEMM operands from, so its scan stays native too
+        let scan_entries = if index.quant().is_none() && !index.is_paged() {
+            manifest.entries()
+        } else {
+            &[]
+        };
         for entry in scan_entries {
             if entry.kind == "class_distances" && entry.d == index.dim() {
                 let Some(entry_k) = entry.k.filter(|&k| k >= max_class) else {
@@ -232,19 +237,13 @@ impl Engine {
     /// the exact serving scan, so on an exact-precision index a served
     /// answer that covered the whole database is bitwise-identical to
     /// this one.  This is the shadow worker's reference answer and the
-    /// `explain --exact` baseline — never part of the serving path.
+    /// `explain --exact` baseline — never part of the serving path.  On
+    /// a paged index this streams class extents class-major instead of
+    /// the vid-order dataset walk; the top-`k` is identical either way
+    /// ([`AmIndex::exhaustive_exact`]).
     pub fn exact_scan(&self, x: &[f32], k: usize) -> Vec<Neighbor> {
-        let metric = self.index.params().metric;
-        let kernels = self.index.kernels();
         let k = k.min(self.index.len()).max(1);
-        let d = self.index.dim();
-        let mut acc = TopK::new(k);
-        for (vid, v) in self.index.data().as_flat().chunks_exact(d).enumerate() {
-            if let Some(dist) = kernels.distance_pruned(metric, x, v, acc.bound()) {
-                acc.push(dist, vid as u32);
-            }
-        }
-        acc.into_neighbors()
+        self.index.exhaustive_exact(x, k)
     }
 
     /// Replay one query with full introspection: the class scores and
@@ -263,7 +262,9 @@ impl Engine {
             )));
         }
         let q = self.index.params().n_classes;
+        let store_before = self.index.store_stats();
         let out = self.serve_batch_detailed(&[(x, top_p, top_k)])?;
+        let store_after = self.index.store_stats();
         let Some(resp) = out.responses.first() else {
             return Err(Error::Coordinator("explain: empty batch output".into()));
         };
@@ -365,6 +366,37 @@ impl Engine {
         );
         timings.insert("scan_ns".to_string(), Json::Num(out.timings.scan_ns as f64));
         root.insert("timings".to_string(), Json::Obj(timings));
+
+        // store I/O attributable to this query's scan: counter deltas
+        // across the pipeline call (all zero on a resident store)
+        let mut store = BTreeMap::new();
+        store.insert("kind".to_string(), Json::Str(store_after.kind.to_string()));
+        let delta = |a: u64, b: u64| Json::Num(a.saturating_sub(b) as f64);
+        store.insert(
+            "bytes_read".to_string(),
+            delta(store_after.bytes_read, store_before.bytes_read),
+        );
+        store.insert(
+            "extent_reads".to_string(),
+            delta(store_after.extent_reads, store_before.extent_reads),
+        );
+        store.insert(
+            "cache_hits".to_string(),
+            delta(store_after.cache_hits, store_before.cache_hits),
+        );
+        store.insert(
+            "cache_misses".to_string(),
+            delta(store_after.cache_misses, store_before.cache_misses),
+        );
+        store.insert(
+            "bytes_resident".to_string(),
+            Json::Num(store_after.bytes_resident as f64),
+        );
+        store.insert(
+            "bytes_disk".to_string(),
+            Json::Num(store_after.bytes_disk as f64),
+        );
+        root.insert("store".to_string(), Json::Obj(store));
 
         if exact {
             let truth = self.exact_scan(x, k);
@@ -481,6 +513,13 @@ impl Engine {
             timings.scan_ns = stage.elapsed().as_nanos() as u64;
             r
         };
+        // the scan paths are infallible by design: a paged-store read or
+        // checksum failure poisons the store and the failed class yields
+        // zero candidates.  Check the poison slot here so the batch
+        // fails loudly instead of a silently partial answer escaping
+        if let Some(msg) = self.index.store_error() {
+            return Err(Error::Data(format!("vector store failed: {msg}")));
+        }
         // assemble responses + batch-level accounting
         let mut agg = OpsCounter::new();
         let mut scan = BatchScanStats { batches: 1, ..BatchScanStats::new() };
@@ -534,6 +573,25 @@ impl EngineFactory {
         artifacts_dir: Option<PathBuf>,
     ) -> Result<Self> {
         let index = crate::index::persist::load(path)?;
+        Ok(EngineFactory { index: Arc::new(index), backend, artifacts_dir })
+    }
+
+    /// [`Self::from_index_file`] with an explicit vector-store choice:
+    /// `Resident` loads the member matrices into RAM (the default path
+    /// above), `Paged` keeps them on disk behind the extent cache
+    /// (v5 artifacts only; a v4 file fails with a migration hint).
+    pub fn from_index_file_with_store(
+        path: &std::path::Path,
+        backend: Backend,
+        artifacts_dir: Option<PathBuf>,
+        store: &crate::store::StoreOptions,
+    ) -> Result<Self> {
+        let index = match store.mode {
+            crate::store::StoreMode::Resident => crate::index::persist::load(path)?,
+            crate::store::StoreMode::Paged => {
+                crate::index::persist::load_paged(path, store.cache_bytes)?
+            }
+        };
         Ok(EngineFactory { index: Arc::new(index), backend, artifacts_dir })
     }
 
@@ -753,6 +811,61 @@ mod tests {
         let f = EngineFactory { index: idx, backend: Backend::Native, artifacts_dir: None };
         let e = f.build().unwrap();
         assert_eq!(e.backend(), "native");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn paged_engine_matches_resident_engine_bitwise() {
+        let (idx, wl) = test_index();
+        let path = std::env::temp_dir().join(format!(
+            "amsearch_engine_paged_{}.amidx",
+            std::process::id()
+        ));
+        crate::index::persist::save(&idx, &path).unwrap();
+        let opts = crate::store::StoreOptions {
+            mode: crate::store::StoreMode::Paged,
+            cache_bytes: 1 << 20,
+        };
+        let factory = EngineFactory::from_index_file_with_store(
+            &path,
+            Backend::Native,
+            None,
+            &opts,
+        )
+        .unwrap();
+        assert!(factory.index.is_paged());
+        let paged = factory.build().unwrap();
+        let resident = Engine::native(idx).unwrap();
+        let queries: Vec<(&[f32], usize, usize)> = (0..6)
+            .map(|i| (wl.queries.get(i), [1usize, 2, 8, 8, 4, 3][i], [1usize, 5, 300, 1, 7, 2][i]))
+            .collect();
+        let a = resident.serve_batch(&queries).unwrap();
+        let b = paged.serve_batch(&queries).unwrap();
+        assert_eq!(a, b, "paged serving must be bitwise-identical");
+        // the exhaustive shadow scan agrees bitwise too
+        for i in 0..4 {
+            let ra = resident.exact_scan(wl.queries.get(i), 5);
+            let rb = paged.exact_scan(wl.queries.get(i), 5);
+            assert_eq!(ra.len(), rb.len());
+            for (na, nb) in ra.iter().zip(&rb) {
+                assert_eq!(na.id, nb.id);
+                assert_eq!(na.distance.to_bits(), nb.distance.to_bits());
+            }
+        }
+        // explain surfaces the paged store's I/O accounting
+        let j = paged.explain(wl.queries.get(0), 8, 3, false).unwrap();
+        let st = j.get("store").unwrap();
+        assert_eq!(st.get("kind").and_then(|v| v.as_str()), Some("paged"));
+        let stats = paged.index().store_stats();
+        assert!(stats.bytes_read > 0);
+        assert!(stats.bytes_disk > 0);
+        // on a resident engine the same section reports zero I/O
+        let j = resident.explain(wl.queries.get(0), 8, 3, false).unwrap();
+        let st = j.get("store").unwrap();
+        assert_eq!(st.get("kind").and_then(|v| v.as_str()), Some("resident"));
+        assert_eq!(st.get("bytes_read").and_then(|v| v.as_f64()), Some(0.0));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(crate::index::persist::data_path(&path)).ok();
     }
 
     #[test]

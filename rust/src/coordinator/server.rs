@@ -406,6 +406,10 @@ impl SearchServer {
             quant_json(self.quant_mode, self.quant_rerank),
         );
         o.insert("kernel".to_string(), kernel_json(self.kernel_backend));
+        o.insert(
+            "store".to_string(),
+            store_json(&self.factory.index.store_stats()),
+        );
         o.insert("errors".to_string(), Json::Num(m.errors as f64));
         o.insert("latency".to_string(), m.latency.to_json());
         o.insert("service".to_string(), m.service.to_json());
@@ -453,6 +457,15 @@ impl SearchServer {
         ] {
             reg.counter(prom::M_OPS, &[("role", "search"), ("stage", stage)], v);
         }
+        // vector-store I/O accounting; the counters stay at zero (and
+        // residency equals the index footprint) on a resident store
+        let st = self.factory.index.store_stats();
+        reg.counter(prom::M_STORE_BYTES_READ, &role, st.bytes_read);
+        reg.counter(prom::M_STORE_EXTENT_READS, &role, st.extent_reads);
+        reg.counter(prom::M_STORE_CACHE_HITS, &role, st.cache_hits);
+        reg.counter(prom::M_STORE_CACHE_MISSES, &role, st.cache_misses);
+        reg.counter(prom::M_STORE_CACHE_EVICTIONS, &role, st.cache_evictions);
+        reg.gauge(prom::M_STORE_RESIDENT_BYTES, &role, st.bytes_resident as f64);
         reg.histogram(prom::M_LATENCY, &role, &m.latency);
         reg.histogram(prom::M_SERVICE, &role, &m.service);
         reg.histogram(prom::M_WINDOW_LATENCY, &role, &m.window.windowed());
@@ -571,6 +584,50 @@ pub fn kernel_json(backend: &str) -> crate::util::Json {
     use crate::util::Json;
     let mut o = std::collections::BTreeMap::new();
     o.insert("backend".to_string(), Json::Str(backend.to_string()));
+    Json::Obj(o)
+}
+
+/// The STATS `store` object: where the exact member matrices live
+/// (`resident` = RAM slabs, `paged` = the `.amdat` extent file) and the
+/// I/O the paged path has done — bytes *read* from disk vs bytes held
+/// *resident* in the extent cache, plus the cache hit/miss/eviction
+/// counters behind that split.
+pub fn store_json(st: &crate::store::StoreStats) -> crate::util::Json {
+    use crate::util::Json;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("kind".to_string(), Json::Str(st.kind.to_string()));
+    o.insert(
+        "bytes_resident".to_string(),
+        Json::Num(st.bytes_resident as f64),
+    );
+    o.insert("bytes_disk".to_string(), Json::Num(st.bytes_disk as f64));
+    o.insert("bytes_read".to_string(), Json::Num(st.bytes_read as f64));
+    o.insert(
+        "extent_reads".to_string(),
+        Json::Num(st.extent_reads as f64),
+    );
+    o.insert("cache_hits".to_string(), Json::Num(st.cache_hits as f64));
+    o.insert(
+        "cache_misses".to_string(),
+        Json::Num(st.cache_misses as f64),
+    );
+    o.insert(
+        "cache_evictions".to_string(),
+        Json::Num(st.cache_evictions as f64),
+    );
+    o.insert(
+        "cache_budget".to_string(),
+        Json::Num(st.cache_budget as f64),
+    );
+    let lookups = st.cache_hits + st.cache_misses;
+    o.insert(
+        "cache_hit_rate".to_string(),
+        Json::Num(if lookups == 0 {
+            0.0
+        } else {
+            st.cache_hits as f64 / lookups as f64
+        }),
+    );
     Json::Obj(o)
 }
 

@@ -18,6 +18,7 @@ use crate::metrics::OpsCounter;
 use crate::partition::{greedy_alloc, random_alloc, roundrobin, Allocation, Partition};
 use crate::quant::{effective_rerank, rerank::rerank_exact, IndexFootprint, QuantIndex};
 use crate::search::{invert_polled, top_p_largest, Kernels, Neighbor, TopK};
+use crate::store::{PagedStore, RowReader, Store, StoreStats};
 use crate::util::par::parallel_map;
 
 use super::params::IndexParams;
@@ -76,12 +77,14 @@ pub struct AmIndex {
     /// computes goes through it, and STATS reports it as
     /// `kernel.backend`.
     kernels: Kernels,
-    /// Class-contiguous member slabs for the **exact** scan (empty when
-    /// quantized — the code matrix already is class-addressable):
-    /// `slabs[ci]` holds class `ci`'s member rows in members-list order,
-    /// so the batch scan streams cache-resident tiles instead of chasing
-    /// `data.get(vid)` through the global id order.
-    slabs: Vec<Vec<f32>>,
+    /// Where the exact f32 member rows live ([`crate::store`]): resident
+    /// class-contiguous slabs (`slabs[ci]` = class `ci`'s rows in
+    /// members-list order; empty when quantized — the code matrix
+    /// already is class-addressable), or a paged store reading class
+    /// extents from disk on demand.  Either way the batch scan streams
+    /// class-major rows instead of chasing `data.get(vid)` through the
+    /// global id order.
+    store: Store,
 }
 
 /// Scan-tile budget: member rows are processed in tiles of at most this
@@ -150,8 +153,9 @@ impl AmIndex {
         let binary_sparse = data.is_binary_sparse();
         let quant = QuantIndex::train(&data, params.precision)?;
         let kernels = Kernels::select();
-        let slabs = member_slabs(q, &partition, &data, quant.is_some());
-        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant, kernels, slabs })
+        let store =
+            Store::resident(member_slabs(q, &partition, &data, quant.is_some()));
+        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant, kernels, store })
     }
 
     /// Reassemble an index from persisted parts (see [`super::persist`]).
@@ -202,9 +206,64 @@ impl AmIndex {
         )?;
         let binary_sparse = data.is_binary_sparse();
         let kernels = Kernels::select();
-        let slabs =
-            member_slabs(params.n_classes, &partition, &data, quant.is_some());
-        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant, kernels, slabs })
+        let store = Store::resident(member_slabs(
+            params.n_classes,
+            &partition,
+            &data,
+            quant.is_some(),
+        ));
+        Ok(AmIndex { params, partition, bank, data, binary_sparse, quant, kernels, store })
+    }
+
+    /// Reassemble an index whose exact member rows stay on disk behind
+    /// `paged` (the v5 paged load path, [`super::persist::load_paged`]).
+    /// The in-RAM dataset is empty; every exact row the scan or rerank
+    /// needs streams through the paged store's extent cache.
+    /// `binary_sparse` comes from the artifact's flags byte — it cannot
+    /// be derived from an empty dataset.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts_paged(
+        params: IndexParams,
+        assignments: Vec<u32>,
+        stacked: Vec<f32>,
+        counts: Vec<usize>,
+        dim: usize,
+        binary_sparse: bool,
+        quant: Option<QuantIndex>,
+        paged: PagedStore,
+    ) -> Result<Self> {
+        let n = assignments.len();
+        params.validate(n)?;
+        params.precision.validate_for_dim(dim)?;
+        if let Some(q) = &quant {
+            if q.len() != n {
+                return Err(crate::error::Error::Data(format!(
+                    "{} quant code rows for {n} vectors",
+                    q.len()
+                )));
+            }
+        }
+        if paged.dim() != dim {
+            return Err(crate::error::Error::Shape(format!(
+                "paged store dim {} != index dim {dim}",
+                paged.dim()
+            )));
+        }
+        let partition = Partition::from_assignments(assignments, params.n_classes)?;
+        partition.validate()?;
+        let bank =
+            crate::memory::MemoryBank::from_parts(dim, stacked, counts, params.rule)?;
+        let kernels = Kernels::select();
+        Ok(AmIndex {
+            params,
+            partition,
+            bank,
+            data: Dataset::empty(dim),
+            binary_sparse,
+            quant,
+            kernels,
+            store: Store::Paged(paged),
+        })
     }
 
     /// Online insert: add a vector to the index without rebuilding.
@@ -220,6 +279,13 @@ impl AmIndex {
                 x.len(),
                 self.dim()
             )));
+        }
+        if self.store.is_paged() {
+            return Err(crate::error::Error::Config(
+                "online insert requires a resident store: paged indices are \
+                 read-only (load the index resident, insert, then re-save)"
+                    .into(),
+            ));
         }
         let class = match self.params.allocation {
             Allocation::Greedy => {
@@ -248,10 +314,12 @@ impl AmIndex {
         self.bank.add_to_class(class, x);
         let id = self.partition.push(class as u32)?;
         self.data.push(x)?;
-        if let Some(slab) = self.slabs.get_mut(class) {
-            // the exact scan's slab mirrors the members list, which
-            // appends the new id at the end of its class
-            slab.extend_from_slice(x);
+        if let Store::Resident { slabs } = &mut self.store {
+            if let Some(slab) = slabs.get_mut(class) {
+                // the exact scan's slab mirrors the members list, which
+                // appends the new id at the end of its class
+                slab.extend_from_slice(x);
+            }
         }
         if let Some(q) = &mut self.quant {
             // encode with the existing quantizer (codebooks are not
@@ -267,14 +335,15 @@ impl AmIndex {
         self.data.dim()
     }
 
-    /// Database size `n`.
+    /// Database size `n` (partition-derived, so it holds for paged
+    /// indices whose in-RAM dataset is empty).
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.partition.n_vectors()
     }
 
     /// True when the index holds no vectors.
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
     /// Index parameters.
@@ -292,9 +361,91 @@ impl AmIndex {
         &self.bank
     }
 
-    /// The stored database.
+    /// The stored database.  **Empty (zero rows) for a paged index** —
+    /// exact rows then come from [`Self::store`] /
+    /// [`Self::exhaustive_exact`] instead.
     pub fn data(&self) -> &Dataset {
         &self.data
+    }
+
+    /// The vector store behind the exact scan ([`crate::store`]).
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    /// True when exact member rows are paged from disk.
+    pub fn is_paged(&self) -> bool {
+        self.store.is_paged()
+    }
+
+    /// The first store I/O or integrity failure, if any (always `None`
+    /// for resident indices).  The scan paths stay infallible — a failed
+    /// class yields zero candidates — so `Result`-bearing serving layers
+    /// check this after a scan to fail the request instead of silently
+    /// returning a partial answer.
+    pub fn store_error(&self) -> Option<String> {
+        self.store.error()
+    }
+
+    /// Accounting snapshot of the vector store (the STATS `store`
+    /// object and the `amsearch_store_*` Prometheus families).
+    pub fn store_stats(&self) -> StoreStats {
+        match &self.store {
+            Store::Resident { .. } => StoreStats {
+                kind: "resident",
+                bytes_resident: (self.len() * self.dim() * 4) as u64,
+                ..StoreStats::default()
+            },
+            Store::Paged(p) => p.stats(),
+        }
+    }
+
+    /// Row-granular exact reads for the rerank stage, backed by the
+    /// dataset (resident) or the extent cache (paged).
+    fn rows(&self) -> RowReader<'_> {
+        match &self.store {
+            Store::Resident { .. } => RowReader::Dataset(&self.data),
+            Store::Paged(p) => RowReader::Paged(p),
+        }
+    }
+
+    /// Exhaustive exact top-`k` over the whole database, bypassing the
+    /// poll — the shadow-rerank / `explain --exact` reference path.  A
+    /// resident index streams the dataset in vid order; a paged index
+    /// streams class extents class-major (one sequential read per
+    /// class).  Either order yields the same top-`k`: the `k` smallest
+    /// under the total `(distance, id)` order are invariant to candidate
+    /// order, and early-abandoned candidates provably cannot enter the
+    /// top-`k`.
+    pub fn exhaustive_exact(&self, x: &[f32], k: usize) -> Vec<Neighbor> {
+        let metric = self.params.metric;
+        let d = self.dim();
+        let mut acc = TopK::new(k.max(1));
+        match &self.store {
+            Store::Paged(_) => {
+                for ci in 0..self.params.n_classes {
+                    let members = self.partition.members(ci);
+                    let rows = self.store.class_rows(ci);
+                    for (&vid, v) in members.iter().zip(rows.chunks_exact(d)) {
+                        if let Some(dist) =
+                            self.kernels.distance_pruned(metric, x, v, acc.bound())
+                        {
+                            acc.push(dist, vid);
+                        }
+                    }
+                }
+            }
+            Store::Resident { .. } => {
+                for (vid, v) in self.data.as_flat().chunks_exact(d).enumerate() {
+                    if let Some(dist) =
+                        self.kernels.distance_pruned(metric, x, v, acc.bound())
+                    {
+                        acc.push(dist, vid as u32);
+                    }
+                }
+            }
+        }
+        acc.into_neighbors()
     }
 
     /// True when the sparse (support-based, c²-cost) scoring path is used.
@@ -466,7 +617,12 @@ impl AmIndex {
                 .map(|&bi| (bi, TopK::new(ks[bi as usize].max(1))))
                 .collect();
             let members = self.partition.members(ci);
-            let slab = &self.slabs[ci];
+            // resident: borrow the class slab; paged: one cache hit or
+            // one sequential extent read serving the *whole batch* —
+            // the class-major inversion is what coalesces reads across
+            // every querying batch member
+            let rows = self.store.class_rows(ci);
+            let slab: &[f32] = &rows;
             let tr = tile_rows(d * 4);
             for (tile_members, tile_slab) in
                 members.chunks(tr).zip(slab.chunks(tr * d))
@@ -618,7 +774,7 @@ impl AmIndex {
             let (neighbors, reranked) = rerank_exact(
                 self.params.metric,
                 queries[bi],
-                &self.data,
+                self.rows(),
                 approx.into_sorted(),
                 ks[bi].max(1),
                 self.kernels,
@@ -658,10 +814,12 @@ impl AmIndex {
         };
         let d = self.dim();
         for &ci in classes {
-            // stream the class's contiguous member slab (rows in
-            // ascending member order, same as the members list)
+            // stream the class's contiguous member rows (ascending
+            // member order, same as the members list) — resident slab
+            // borrow or one paged extent fetch
             let members = self.partition.members(ci as usize);
-            let slab = &self.slabs[ci as usize];
+            let rows = self.store.class_rows(ci as usize);
+            let slab: &[f32] = &rows;
             candidates += members.len();
             for (&vid, v) in members.iter().zip(slab.chunks_exact(d)) {
                 if let Some(dist) =
@@ -711,7 +869,7 @@ impl AmIndex {
         let (neighbors, reranked) = rerank_exact(
             self.params.metric,
             x,
-            &self.data,
+            self.rows(),
             approx.into_sorted(),
             k.max(1),
             self.kernels,
@@ -1376,6 +1534,33 @@ mod tests {
         idx.set_scan_rerank(16);
         assert_eq!(idx.params().precision, ScanPrecision::Sq8 { rerank: 16 });
         assert_eq!(idx.quant().unwrap().rerank(), 16);
+    }
+
+    #[test]
+    fn exhaustive_exact_matches_full_poll_query() {
+        let (idx, wl) = dense_index(50, 128, 4);
+        let mut ops = OpsCounter::new();
+        for qi in 0..10 {
+            let x = wl.queries.get(qi);
+            // p = q scans every vector, so the poll result IS the
+            // exhaustive top-k
+            let r = idx.query_k(x, 4, 5, &mut ops);
+            assert_eq!(idx.exhaustive_exact(x, 5), r.neighbors, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn resident_store_stats_report_full_residency() {
+        let (idx, _) = dense_index(51, 128, 4);
+        assert!(!idx.is_paged());
+        assert!(idx.store_error().is_none());
+        assert_eq!(idx.store().kind(), "resident");
+        let s = idx.store_stats();
+        assert_eq!(s.kind, "resident");
+        assert_eq!(s.bytes_resident, 128 * 64 * 4);
+        assert_eq!(s.bytes_disk, 0);
+        assert_eq!(s.bytes_read, 0);
+        assert_eq!(s.cache_hits + s.cache_misses, 0);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!
 //! ```text
 //! magic    8B   "AMSEARCH"
-//! version  u32  (currently 4; v3 is the shard-manifest format)
+//! version  u32  (currently 5; v3 is the shard-manifest format)
 //! dim      u32
 //! n        u64  number of vectors
 //! q        u32  number of classes
@@ -26,10 +26,13 @@
 //! quant    u8   (v4+) 0 = exact, 1 = sq8, 2 = pq
 //!   sq8:   rerank u32
 //!   pq:    m u32, bits u32, rerank u32, n_centroids u32
+//! flags    u8   (v5+) bit 0 = binary sparse scoring
+//! data_len u64  (v5+) byte length of the `.amdat` sibling
+//! table_fnv u64 (v5+) extent-table checksum of the `.amdat` sibling
 //! assignments  n * u32
 //! bank         q * dim * dim * f32
 //! counts       q * u64
-//! data         n * dim * f32
+//! data         n * dim * f32  (v4 and earlier only)
 //! quant payload (v4+, per the quant byte):
 //!   sq8:   min dim * f32, step dim * f32, codes n * dim * u8
 //!   pq:    codebooks m * n_centroids * (dim/m) * f32, codes n * m * u8
@@ -40,9 +43,21 @@
 //! codebooks and codes are persisted (not retrained on load), so a
 //! served index is byte-for-byte the one that was built.  v1/v2 files
 //! keep loading unchanged (no quant section, `ScanPrecision::Exact`).
+//!
+//! **v5 splits the artifact in two.**  The `.amidx` keeps only the hot
+//! state (AM super-memories, assignments, quantizer tables + codes);
+//! the exact f32 member matrices move to a class-extent data file next
+//! to it (`<stem>.amdat`, [`crate::store`], spec in
+//! `docs/STORE_FORMAT.md`).  The header's `data_len`/`table_fnv` bind
+//! the pair, so a stale or swapped data file is rejected at load.
+//! [`load`] rehydrates a fully memory-resident index from both files;
+//! [`load_paged`] keeps the data file on disk and serves exact rows
+//! through the paged store.  v4 files still load resident-only; loading
+//! one paged fails with a migration hint (load + [`save`] rewrites it
+//! as v5).
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
@@ -50,31 +65,24 @@ use crate::memory::StorageRule;
 use crate::partition::Allocation;
 use crate::quant::{PqQuantizer, QuantIndex, Quantizer, ScanPrecision, Sq8Quantizer};
 use crate::search::Metric;
+use crate::store::{write_data_file, DataFile, Fnv, PagedStore};
 
 use super::am_index::AmIndex;
 use super::params::IndexParams;
 
 const MAGIC: &[u8; 8] = b"AMSEARCH";
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 /// Version stamp of the shard manifest format (a member of the shared
 /// index-format family: index v1 = 1-NN, v2 = per-request k, v3 = the
-/// cluster plan / routing table, v4 = quantized index artifacts).
+/// cluster plan / routing table, v4 = quantized index artifacts, v5 =
+/// split hot state / class-extent data file).
 pub(crate) const SHARD_MANIFEST_VERSION: u32 = 3;
 
-/// Incremental FNV-1a 64 (integrity checksum; not cryptographic).
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-    fn update(&mut self, data: &[u8]) {
-        for &b in data {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-    }
+/// The class-extent data file that rides next to a v5 `.amidx`:
+/// `<stem>.amdat` in the same directory.
+pub fn data_path(path: &Path) -> PathBuf {
+    path.with_extension("amdat")
 }
 
 pub(crate) struct CountingWriter<W: Write> {
@@ -95,15 +103,31 @@ impl<W: Write> CountingWriter<W> {
 
     /// Append the checksum of everything written so far and flush.
     pub(crate) fn finish(mut self) -> Result<()> {
-        let checksum = self.hash.0;
+        let checksum = self.hash.value();
         self.inner.write_all(&checksum.to_le_bytes())?;
         self.inner.flush()?;
         Ok(())
     }
 }
 
-/// Save an index to `path`.
+/// Save an index to `path` (v5: `.amidx` hot state plus the
+/// class-extent `.amdat` data file next to it).
+///
+/// Only memory-resident indices can be saved: a paged index has no
+/// in-RAM member matrices to write — its artifacts on disk already
+/// *are* the saved form.
 pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
+    if index.is_paged() {
+        return Err(Error::Config(
+            "cannot re-save a paged index: its .amidx/.amdat artifacts are \
+             already the persisted form (copy the files instead)"
+                .into(),
+        ));
+    }
+    // the data file first: the .amidx header records its length and
+    // table checksum to bind the pair
+    let (data_len, table_fnv) =
+        write_data_file(&data_path(path), index.data(), index.partition())?;
     let file = std::fs::File::create(path)?;
     let mut w = CountingWriter::new(BufWriter::new(file));
     let p = index.params();
@@ -147,6 +171,11 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
             }
         },
     }
+    // v5 trailer of the header: sparse-scoring flag (not derivable from
+    // an on-disk dataset) and the data-file binding
+    w.put(&[if index.uses_sparse_scoring() { 1u8 } else { 0 }])?;
+    w.put(&data_len.to_le_bytes())?;
+    w.put(&table_fnv.to_le_bytes())?;
 
     for v in 0..index.len() {
         w.put(&index.partition().class_of(v).to_le_bytes())?;
@@ -157,9 +186,7 @@ pub fn save(index: &AmIndex, path: &Path) -> Result<()> {
     for i in 0..p.n_classes {
         w.put(&(index.bank().count(i) as u64).to_le_bytes())?;
     }
-    for &x in index.data().as_flat() {
-        w.put(&x.to_le_bytes())?;
-    }
+    // v5 keeps no inline data: exact f32 rows live in the .amdat
     // v4 quant payload: codebooks/tables then the code rows
     if let Some(quant) = index.quant() {
         match quant.quantizer() {
@@ -226,7 +253,7 @@ impl<R: Read> CountingReader<R> {
     }
     /// Read the trailing checksum and compare with everything consumed.
     pub(crate) fn verify_checksum(mut self) -> Result<()> {
-        let computed = self.hash.0;
+        let computed = self.hash.value();
         let mut tail = [0u8; 8];
         self.inner.read_exact(&mut tail)?;
         let stored = u64::from_le_bytes(tail);
@@ -239,8 +266,29 @@ impl<R: Read> CountingReader<R> {
     }
 }
 
-/// Load an index from `path`.
-pub fn load(path: &Path) -> Result<AmIndex> {
+/// Everything a `.amidx` holds, parsed and checksum-verified but not
+/// yet bound to a vector store.
+struct Artifact {
+    version: u32,
+    dim: usize,
+    q: usize,
+    n: usize,
+    params: IndexParams,
+    /// v5 flags bit 0: the index uses binary sparse scoring.
+    sparse: bool,
+    /// v5 binding: byte length of the `.amdat` sibling.
+    data_len: u64,
+    /// v5 binding: extent-table checksum of the `.amdat` sibling.
+    table_fnv: u64,
+    assignments: Vec<u32>,
+    stacked: Vec<f32>,
+    counts: Vec<usize>,
+    /// Inline exact rows (v4 and earlier; empty for v5).
+    flat: Vec<f32>,
+    quant: Option<QuantIndex>,
+}
+
+fn read_artifact(path: &Path) -> Result<Artifact> {
     let file = std::fs::File::open(path)
         .map_err(|e| Error::Data(format!("cannot open {}: {e}", path.display())))?;
     let mut r = CountingReader::new(BufReader::new(file));
@@ -297,6 +345,16 @@ pub fn load(path: &Path) -> Result<AmIndex> {
     } else {
         QuantHeader::Exact
     };
+    // v5 header trailer: flags byte plus the data-file binding
+    let (flags, data_len, table_fnv) = if version >= 5 {
+        let flags = r.u8()?;
+        if flags & !1 != 0 {
+            return Err(Error::Data(format!("bad flags byte {flags:#x}")));
+        }
+        (flags, r.u64()?, r.u64()?)
+    } else {
+        (0u8, 0u64, 0u64)
+    };
     let precision = match quant_header {
         QuantHeader::Exact => ScanPrecision::Exact,
         QuantHeader::Sq8 { rerank } => ScanPrecision::Sq8 { rerank },
@@ -323,7 +381,8 @@ pub fn load(path: &Path) -> Result<AmIndex> {
     for _ in 0..q {
         counts.push(r.u64()? as usize);
     }
-    let flat = r.f32_vec(n * dim)?;
+    // v5 files carry no inline data; exact rows live in the .amdat
+    let flat = if version >= 5 { Vec::new() } else { r.f32_vec(n * dim)? };
     // v4 quant payload: quantizer tables, then one code row per vector
     let quant = match quant_header {
         QuantHeader::Exact => None,
@@ -356,8 +415,98 @@ pub fn load(path: &Path) -> Result<AmIndex> {
     };
     r.verify_checksum()?;
 
-    let data = Dataset::from_flat(dim, flat)?;
-    AmIndex::from_parts_with_quant(params, assignments, stacked, counts, data, quant)
+    Ok(Artifact {
+        version,
+        dim,
+        q,
+        n,
+        params,
+        sparse: flags & 1 != 0,
+        data_len,
+        table_fnv,
+        assignments,
+        stacked,
+        counts,
+        flat,
+        quant,
+    })
+}
+
+/// Load a fully memory-resident index from `path`.  For v5 artifacts
+/// this rehydrates the member matrices from the `.amdat` sibling
+/// (verifying every extent checksum once).
+pub fn load(path: &Path) -> Result<AmIndex> {
+    let a = read_artifact(path)?;
+    let flat = if a.version >= 5 {
+        let mut df = DataFile::open(&data_path(path))?;
+        df.check_binding(a.dim, a.q, a.n, a.data_len, a.table_fnv)?;
+        gather_flat(&mut df, &a.assignments, a.dim, a.q, a.n)?
+    } else {
+        a.flat
+    };
+    let data = Dataset::from_flat(a.dim, flat)?;
+    AmIndex::from_parts_with_quant(a.params, a.assignments, a.stacked, a.counts, data, a.quant)
+}
+
+/// Load an index from `path` with the exact member matrices left on
+/// disk, served through a paged store with an extent-cache budget of
+/// `cache_bytes` (see [`crate::store`]).
+pub fn load_paged(path: &Path, cache_bytes: u64) -> Result<AmIndex> {
+    let a = read_artifact(path)?;
+    if a.version < 5 {
+        return Err(Error::Config(format!(
+            "index version {} predates the paged data file; load it resident \
+             and re-save to migrate it to v5",
+            a.version
+        )));
+    }
+    let df = DataFile::open(&data_path(path))?;
+    df.check_binding(a.dim, a.q, a.n, a.data_len, a.table_fnv)?;
+    let store = PagedStore::from_data_file(df, &a.assignments, cache_bytes)?;
+    AmIndex::from_parts_paged(
+        a.params,
+        a.assignments,
+        a.stacked,
+        a.counts,
+        a.dim,
+        a.sparse,
+        a.quant,
+        store,
+    )
+}
+
+/// Rehydrate the flat `[n × dim]` vid-order dataset from per-class
+/// extents (the extents hold rows in members-list order).
+fn gather_flat(
+    df: &mut DataFile,
+    assignments: &[u32],
+    dim: usize,
+    q: usize,
+    n: usize,
+) -> Result<Vec<f32>> {
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); q];
+    for (vid, &c) in assignments.iter().enumerate() {
+        let Some(m) = members.get_mut(c as usize) else {
+            return Err(Error::Data(format!("assignment to class {c} >= q = {q}")));
+        };
+        m.push(vid);
+    }
+    let mut flat = vec![0f32; n * dim];
+    for (ci, m) in members.iter().enumerate() {
+        let rows = df.read_class(ci)?;
+        if rows.len() != m.len() * dim {
+            return Err(Error::Data(format!(
+                "class {ci}: extent holds {} floats, members need {}",
+                rows.len(),
+                m.len() * dim
+            )));
+        }
+        for (i, &vid) in m.iter().enumerate() {
+            flat[vid * dim..(vid + 1) * dim]
+                .copy_from_slice(&rows[i * dim..(i + 1) * dim]);
+        }
+    }
+    Ok(flat)
 }
 
 /// Parsed v4 quant header (precision + the PQ codebook size the payload
@@ -378,6 +527,12 @@ mod tests {
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("amsearch_persist_{}_{}", std::process::id(), name))
+    }
+
+    /// Remove a test artifact and its `.amdat` sibling.
+    fn cleanup(path: &Path) {
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(data_path(path)).ok();
     }
 
     fn build(seed: u64) -> (AmIndex, crate::data::Workload) {
@@ -406,7 +561,7 @@ mod tests {
             let b = loaded.query(x, 2, &mut ops);
             assert_eq!(a, b, "query {qi}");
         }
-        std::fs::remove_file(&path).ok();
+        cleanup(&path);
     }
 
     fn build_quant(seed: u64, precision: ScanPrecision) -> (AmIndex, crate::data::Workload) {
@@ -443,7 +598,7 @@ mod tests {
                 let b = loaded.query_k(x, 3, 4, &mut ops);
                 assert_eq!(a, b, "{precision} query {qi}");
             }
-            std::fs::remove_file(&path).ok();
+            cleanup(&path);
         }
     }
 
@@ -507,7 +662,173 @@ mod tests {
             let x = wl.queries.get(qi);
             assert_eq!(index.query(x, 2, &mut ops), loaded.query(x, 2, &mut ops));
         }
-        std::fs::remove_file(&path).ok();
+        cleanup(&path);
+    }
+
+    /// Write `index` in the historical v4 layout (inline data, no
+    /// data-file sibling): the migration fixture.
+    fn save_v4(index: &AmIndex, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)?;
+        let mut w = CountingWriter::new(BufWriter::new(file));
+        let p = index.params();
+        w.put(MAGIC)?;
+        w.put(&4u32.to_le_bytes())?;
+        w.put(&(index.dim() as u32).to_le_bytes())?;
+        w.put(&(index.len() as u64).to_le_bytes())?;
+        w.put(&(p.n_classes as u32).to_le_bytes())?;
+        w.put(&(p.top_p as u32).to_le_bytes())?;
+        w.put(&(p.top_k as u32).to_le_bytes())?;
+        w.put(&[match p.rule {
+            StorageRule::Sum => 0u8,
+            StorageRule::Max => 1,
+        }])?;
+        w.put(&[match p.allocation {
+            Allocation::Random => 0u8,
+            Allocation::Greedy => 1,
+            Allocation::RoundRobin => 2,
+        }])?;
+        w.put(&[match p.metric {
+            Metric::SqL2 => 0u8,
+            Metric::NegDot => 1,
+            Metric::Hamming => 2,
+        }])?;
+        w.put(&p.greedy_cap_factor.unwrap_or(f64::NAN).to_le_bytes())?;
+        match index.quant() {
+            None => w.put(&[0u8])?,
+            Some(q) => match q.quantizer() {
+                Quantizer::Sq8(_) => {
+                    w.put(&[1u8])?;
+                    w.put(&(q.rerank() as u32).to_le_bytes())?;
+                }
+                Quantizer::Pq(pq) => {
+                    w.put(&[2u8])?;
+                    w.put(&(pq.m() as u32).to_le_bytes())?;
+                    w.put(&(pq.bits() as u32).to_le_bytes())?;
+                    w.put(&(q.rerank() as u32).to_le_bytes())?;
+                    w.put(&(pq.n_centroids() as u32).to_le_bytes())?;
+                }
+            },
+        }
+        for v in 0..index.len() {
+            w.put(&index.partition().class_of(v).to_le_bytes())?;
+        }
+        for &x in index.bank().stacked() {
+            w.put(&x.to_le_bytes())?;
+        }
+        for i in 0..p.n_classes {
+            w.put(&(index.bank().count(i) as u64).to_le_bytes())?;
+        }
+        for &x in index.data().as_flat() {
+            w.put(&x.to_le_bytes())?;
+        }
+        if let Some(quant) = index.quant() {
+            match quant.quantizer() {
+                Quantizer::Sq8(sq) => {
+                    for &x in sq.min() {
+                        w.put(&x.to_le_bytes())?;
+                    }
+                    for &x in sq.step() {
+                        w.put(&x.to_le_bytes())?;
+                    }
+                }
+                Quantizer::Pq(pq) => {
+                    for &x in pq.codebooks() {
+                        w.put(&x.to_le_bytes())?;
+                    }
+                }
+            }
+            w.put(quant.codes())?;
+        }
+        w.finish()
+    }
+
+    /// The migration property: for seeded exact and quantized indices,
+    /// a v4 artifact, its v5 re-save (the migration path), and the v5
+    /// paged load all answer every query identically.
+    #[test]
+    fn v4_to_v5_migration_preserves_query_results() {
+        for (seed, precision) in [
+            (21, ScanPrecision::Exact),
+            (22, ScanPrecision::Sq8 { rerank: 5 }),
+            (23, ScanPrecision::Pq { m: 4, bits: 4, rerank: 0 }),
+        ] {
+            let (index, wl) = build_quant(seed, precision);
+            let v4 = tmp(&format!("mig_v4_{}.amidx", precision.mode()));
+            let v5 = tmp(&format!("mig_v5_{}.amidx", precision.mode()));
+            save_v4(&index, &v4).unwrap();
+            let from_v4 = load(&v4).unwrap();
+            // migration: load the v4 resident, save → the v5 pair
+            save(&from_v4, &v5).unwrap();
+            let resident = load(&v5).unwrap();
+            assert_eq!(resident.quant(), index.quant());
+            // the hot-state file shed its inline data section
+            let v4_len = std::fs::metadata(&v4).unwrap().len();
+            let v5_len = std::fs::metadata(&v5).unwrap().len();
+            assert!(v5_len < v4_len, "{precision}: v5 {v5_len} vs v4 {v4_len}");
+            let mut loaded = vec![("v4", from_v4), ("v5", resident)];
+            if cfg!(unix) {
+                let paged = load_paged(&v5, 1 << 20).unwrap();
+                assert!(paged.is_paged());
+                loaded.push(("paged", paged));
+            }
+            let mut ops = OpsCounter::new();
+            for qi in 0..wl.queries.len() {
+                let x = wl.queries.get(qi);
+                let want = index.query_k(x, 3, 4, &mut ops);
+                for (name, ix) in &loaded {
+                    assert_eq!(
+                        want,
+                        ix.query_k(x, 3, 4, &mut ops),
+                        "{precision} {name} query {qi}"
+                    );
+                }
+            }
+            for (name, ix) in &loaded {
+                assert!(ix.store_error().is_none(), "{name}");
+            }
+            cleanup(&v4);
+            cleanup(&v5);
+        }
+    }
+
+    #[test]
+    fn load_paged_on_v4_says_how_to_migrate() {
+        let (index, _) = build(12);
+        let path = tmp("v4_paged.amidx");
+        save_v4(&index, &path).unwrap();
+        let err = load_paged(&path, 1 << 20).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("re-save"), "{err}");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn missing_or_stale_data_file_is_rejected() {
+        let (index, _) = build(13);
+        let path = tmp("bind.amidx");
+        save(&index, &path).unwrap();
+        // stale: overwrite the sibling with a different index's data
+        let (other, _) = build(14);
+        write_data_file(&data_path(&path), other.data(), other.partition()).unwrap();
+        assert!(load(&path).is_err(), "stale data file must not load");
+        // missing entirely
+        std::fs::remove_file(data_path(&path)).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("amdat"), "{err}");
+        cleanup(&path);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn paged_indices_cannot_be_resaved() {
+        let (index, _) = build(15);
+        let path = tmp("resave.amidx");
+        save(&index, &path).unwrap();
+        let paged = load_paged(&path, 1 << 20).unwrap();
+        let err = save(&paged, &tmp("resave2.amidx")).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        cleanup(&path);
+        cleanup(&tmp("resave2.amidx"));
     }
 
     #[test]
@@ -520,7 +841,7 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(err.to_string().contains("unsupported index version 3"));
-        std::fs::remove_file(&path).ok();
+        cleanup(&path);
     }
 
     #[test]
@@ -534,7 +855,7 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(err.to_string().contains("corrupt") || err.to_string().contains("bad"));
-        std::fs::remove_file(&path).ok();
+        cleanup(&path);
     }
 
     #[test]
@@ -542,7 +863,7 @@ mod tests {
         let path = tmp("magic.amidx");
         std::fs::write(&path, b"NOTANIDXFILE....").unwrap();
         assert!(load(&path).is_err());
-        std::fs::remove_file(&path).ok();
+        cleanup(&path);
     }
 
     #[test]
@@ -553,6 +874,6 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
         assert!(load(&path).is_err());
-        std::fs::remove_file(&path).ok();
+        cleanup(&path);
     }
 }

@@ -46,6 +46,7 @@ pub mod partition;
 pub mod quant;
 pub mod runtime;
 pub mod search;
+pub mod store;
 pub mod util;
 
 pub use error::{Error, Result};

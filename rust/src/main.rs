@@ -69,15 +69,26 @@ commands:
               (--figure N|knn|quant | --all, --out-dir D, --scale S, --seed S)
   query       build index + run queries  (--config F, --top-p P, --top-k K,
               --index F.amidx to load instead of building)
-  build       build index and save it     (--config F, --out F.amidx)
+  build       build index and save it     (--config F, --out F.amidx;
+              writes F.amidx + the F.amdat class-extent data file)
 
   index-building commands (build, query, serve, shard-plan,
   serve-cluster) also take the scan-precision knobs:
               --precision exact|sq8|pq  compressed candidate scan
               --rerank R                exact-rerank budget (0 = all)
               --pq-m M --pq-bits B      PQ shape (M subspaces, B bits)
+
+  index-loading commands (query --index, serve --index,
+  serve-cluster --plan-dir) also take the vector-store knobs:
+              --store resident|paged    where exact member vectors live:
+                                        RAM slabs (default) or the
+                                        .amdat file, paged in per polled
+                                        class behind an LRU extent cache
+              --store-cache-mb MB       extent-cache budget (paged only)
   serve       serve queries through the coordinator
               (--config F, --workers N, --backend native|pjrt, --repeat R,
+               --index F.amidx to serve a saved index instead of
+               building one,
                --listen ADDR to open the TCP front door instead of
                driving the config workload in-process)
 
@@ -113,7 +124,9 @@ commands:
                0 = all; --listen ADDR, --router-workers W)
   metrics     scrape a running server's Prometheus text exposition
               (--addr HOST:PORT, --check to validate the format and
-               required metric families, exiting non-zero on failure)
+               required metric families, exiting non-zero on failure;
+               --require-store to additionally require the
+               amsearch_store_* families)
   explain     replay one query through a running server with full
               introspection: poll / fan-out decision and margin,
               per-stage candidate counts, final neighbors — and, with
@@ -170,6 +183,27 @@ fn apply_scan_precision_args(
         args.get_parse("pq-m", cfg_m)?,
         args.get_parse("pq-bits", cfg_bits)?,
     )?;
+    Ok(())
+}
+
+/// Apply the vector-store CLI overrides (`--store`,
+/// `--store-cache-mb`) on top of the config file's store section.
+fn apply_store_args(cfg: &mut AppConfig, args: &Args) -> Result<()> {
+    if let Some(mode) = args.get("store") {
+        cfg.store.mode = amsearch::store::StoreMode::parse(mode)?;
+    }
+    if args.get("store-cache-mb").is_some()
+        && cfg.store.mode != amsearch::store::StoreMode::Paged
+    {
+        // a cache budget means nothing on a resident store: reject
+        // instead of silently ignoring the knob
+        return Err(amsearch::Error::Config(
+            "--store-cache-mb requires --store paged (or a paged 'mode' \
+             in the config's store section)"
+                .into(),
+        ));
+    }
+    cfg.store.cache_mb = args.get_parse("store-cache-mb", cfg.store.cache_mb)?;
     Ok(())
 }
 
@@ -315,8 +349,16 @@ fn cmd_query(cfg: &AppConfig, args: &Args) -> Result<()> {
     let mut rng = Rng::new(cfg.dataset.seed ^ 0xA11C);
     let params = cfg.index.to_params();
     let index = if let Some(path) = args.get("index") {
-        println!("loading index from {path}");
-        let index = amsearch::index::persist::load(Path::new(path))?;
+        println!("loading index from {path} (store={})", cfg.store.mode.name());
+        let index = match cfg.store.mode {
+            amsearch::store::StoreMode::Resident => {
+                amsearch::index::persist::load(Path::new(path))?
+            }
+            amsearch::store::StoreMode::Paged => amsearch::index::persist::load_paged(
+                Path::new(path),
+                cfg.store.to_options().cache_bytes,
+            )?,
+        };
         if index.dim() != wl.base.dim() {
             return Err(amsearch::Error::Shape(format!(
                 "index dim {} != workload dim {}",
@@ -377,6 +419,11 @@ fn cmd_query(cfg: &AppConfig, args: &Args) -> Result<()> {
         }
     }
     let elapsed = started.elapsed();
+    // a paged store failure yields zero-candidate classes; fail the run
+    // instead of printing recall computed from partial answers
+    if let Some(e) = index.store_error() {
+        return Err(amsearch::Error::Data(format!("vector store failed: {e}")));
+    }
     let exhaustive_ops = (wl.base.len() * wl.base.dim()) as u64;
     println!(
         "queries={} p={} k={} recall@1={:.4} (+/-{:.4})",
@@ -400,14 +447,23 @@ fn cmd_query(cfg: &AppConfig, args: &Args) -> Result<()> {
         elapsed.as_secs_f64(),
         elapsed.as_micros() as f64 / recall.total().max(1) as f64
     );
+    if index.is_paged() {
+        let st = index.store_stats();
+        let lookups = (st.cache_hits + st.cache_misses).max(1);
+        println!(
+            "store: paged  read {} of {} disk bytes ({} extent reads, \
+             cache hit rate {:.1}%, {} bytes resident)",
+            st.bytes_read,
+            st.bytes_disk,
+            st.extent_reads,
+            st.cache_hits as f64 * 100.0 / lookups as f64,
+            st.bytes_resident
+        );
+    }
     Ok(())
 }
 
 fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
-    let wl = load_workload(cfg)?;
-    let mut rng = Rng::new(cfg.dataset.seed ^ 0x5EED);
-    let params = cfg.index.to_params();
-    let index = Arc::new(AmIndex::build(wl.base.clone(), params, &mut rng)?);
     let mut serve_cfg = cfg.serve.to_coordinator();
     if let Some(w) = args.get("workers") {
         serve_cfg.workers = w
@@ -421,20 +477,63 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     serve_cfg.quality_sample =
         args.get_parse("quality-sample", serve_cfg.quality_sample)?;
     let repeat: usize = args.get_parse("repeat", 1usize)?.max(1);
-    let factory = EngineFactory {
-        index: index.clone(),
-        backend: backend_kind,
-        artifacts_dir: Some(cfg.backend.artifacts_dir.clone()),
+    // the config workload provides the base for a fresh build and the
+    // queries for in-process driving; serving a saved index over TCP
+    // needs neither, so skip the (possibly large) generation entirely
+    let index_arg = args.get("index");
+    let wl = if index_arg.is_some() && args.get("listen").is_some() {
+        None
+    } else {
+        Some(load_workload(cfg)?)
     };
+    let factory = match index_arg {
+        Some(path) => {
+            println!(
+                "loading index from {path} (store={})",
+                cfg.store.mode.name()
+            );
+            EngineFactory::from_index_file_with_store(
+                Path::new(path),
+                backend_kind,
+                Some(cfg.backend.artifacts_dir.clone()),
+                &cfg.store.to_options(),
+            )?
+        }
+        None => {
+            let wl = wl.as_ref().expect("workload loaded when building");
+            let mut rng = Rng::new(cfg.dataset.seed ^ 0x5EED);
+            let index = Arc::new(AmIndex::build(
+                wl.base.clone(),
+                cfg.index.to_params(),
+                &mut rng,
+            )?);
+            EngineFactory {
+                index,
+                backend: backend_kind,
+                artifacts_dir: Some(cfg.backend.artifacts_dir.clone()),
+            }
+        }
+    };
+    let index = factory.index.clone();
+    if let Some(wl) = &wl {
+        if index.dim() != wl.base.dim() {
+            return Err(amsearch::Error::Shape(format!(
+                "index dim {} != workload dim {}",
+                index.dim(),
+                wl.base.dim()
+            )));
+        }
+    }
     println!(
-        "serving: n={} d={} q={} backend={} workers={} batch={} scan={}",
+        "serving: n={} d={} q={} backend={} workers={} batch={} scan={} store={}",
         index.len(),
         index.dim(),
-        params.n_classes,
+        index.params().n_classes,
         backend_kind,
         serve_cfg.workers,
         serve_cfg.max_batch,
-        params.precision
+        index.params().precision,
+        index.store().kind()
     );
     let trace = build_trace_sink(&cfg.serve, args)?;
     let server = Arc::new(SearchServer::start_traced(
@@ -474,6 +573,7 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     }
 
     // load generation: one client thread per concurrent stream
+    let wl = wl.expect("in-process serving keeps the config workload");
     let started = Instant::now();
     let streams = 16usize;
     let total = wl.queries.len() * repeat;
@@ -568,6 +668,7 @@ fn cmd_serve_cluster(cfg: &AppConfig, args: &Args) -> Result<()> {
         coordinator: cfg.serve.to_coordinator(),
         backend: cfg.backend.kind,
         artifacts_dir: Some(cfg.backend.artifacts_dir.clone()),
+        store: cfg.store.to_options(),
         ..Default::default()
     };
     ccfg.router.fan_out = args.get_parse("fan-out", 0usize)?;
@@ -755,13 +856,23 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     let mut client = NetClient::connect_retry(&addr, timeout)?;
     let text = client.metrics_text()?;
     print!("{text}");
+    if args.flag("require-store") && !args.flag("check") {
+        return Err(amsearch::Error::Config(
+            "--require-store only means something with --check".into(),
+        ));
+    }
     if args.flag("check") {
-        obs::prom::validate(&text, &obs::REQUIRED_FAMILIES)
+        let mut required: Vec<&str> = obs::REQUIRED_FAMILIES.to_vec();
+        if args.flag("require-store") {
+            required.extend_from_slice(&obs::prom::STORE_FAMILIES);
+        }
+        obs::prom::validate(&text, &required)
             .map_err(amsearch::Error::Coordinator)?;
         eprintln!(
-            "metrics check: exposition OK ({} lines, required families \
+            "metrics check: exposition OK ({} lines, {} required families \
              present)",
-            text.lines().count()
+            text.lines().count(),
+            required.len()
         );
     }
     Ok(())
@@ -935,6 +1046,30 @@ fn cmd_dash(args: &Args) -> Result<()> {
                 ));
             }
         }
+        if let Some(st) = stats.get("store") {
+            let mb = |key: &str| {
+                st.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e6
+            };
+            if st.get("kind").and_then(|v| v.as_str()) == Some("paged") {
+                s.push_str(&format!(
+                    "store: paged  {:.1} MB read over {} extent reads  \
+                     cache hit {:.1}% ({:.1} of {:.1} MB resident, \
+                     {} evictions)\n",
+                    mb("bytes_read"),
+                    st.get("extent_reads").and_then(|v| v.as_u64()).unwrap_or(0),
+                    st.get("cache_hit_rate").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                        * 100.0,
+                    mb("bytes_resident"),
+                    mb("bytes_disk"),
+                    st.get("cache_evictions").and_then(|v| v.as_u64()).unwrap_or(0)
+                ));
+            } else {
+                s.push_str(&format!(
+                    "store: resident ({:.1} MB of exact vectors in RAM)\n",
+                    mb("bytes_resident")
+                ));
+            }
+        }
         if let Some(fe) = stats.get("fanout_effectiveness") {
             s.push_str(&format!(
                 "fan-out effectiveness: true winner from top-ranked shard \
@@ -988,7 +1123,10 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["all", "help", "shutdown", "check", "exact"]) {
+    let args = match Args::parse(
+        raw,
+        &["all", "help", "shutdown", "check", "exact", "require-store"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -1009,7 +1147,9 @@ fn main() {
         },
         None => AppConfig::default(),
     };
-    if let Err(e) = apply_scan_precision_args(&mut cfg, &args) {
+    if let Err(e) = apply_scan_precision_args(&mut cfg, &args)
+        .and_then(|()| apply_store_args(&mut cfg, &args))
+    {
         eprintln!("error: {e}\n{USAGE}");
         std::process::exit(2);
     }

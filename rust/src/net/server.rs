@@ -336,6 +336,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                     code: ERR_OVERLOADED,
                     message: "connection-handler pool exhausted".into(),
                 });
+                // amlint: allow(store_io, reason = "refusal notice to an overloaded client is best-effort; the socket closes either way")
                 let _ = stream.write_all(&frame.encode());
             }
             Err(TrySendError::Disconnected(_)) => break,
@@ -372,6 +373,7 @@ impl ConnWriter {
         // truncated frame, which only this client observes)
         let mut s = lock_unpoisoned(&self.stream);
         // amlint: allow(lock_blocking, reason = "this mutex exists to serialize whole frames onto the socket; the 30s write timeout bounds the hold")
+        // amlint: allow(store_io, reason = "a vanished client must not abort the drain; see the doc comment above")
         let _ = s.write_all(&bytes);
     }
 }

@@ -60,10 +60,39 @@ pub const M_QUALITY_SURVIVAL: &str = "amsearch_quality_survival_ratio";
 /// Per-shard capture rate of the full-fanout truth set, `shard` label
 /// (gauge in [0, 1]; router, sampled).
 pub const M_QUALITY_SHARD_CAPTURE: &str = "amsearch_quality_shard_capture_rate";
+/// Bytes read from the paged vector store's `.amdat` extent file
+/// (counter; zero on a resident store).
+pub const M_STORE_BYTES_READ: &str = "amsearch_store_bytes_read_total";
+/// Class extents fetched from disk by the paged store (counter).
+pub const M_STORE_EXTENT_READS: &str = "amsearch_store_extent_reads_total";
+/// Class-extent lookups answered by the paged store's LRU cache
+/// (counter).
+pub const M_STORE_CACHE_HITS: &str = "amsearch_store_cache_hits_total";
+/// Class-extent lookups that had to fetch from disk (counter).
+pub const M_STORE_CACHE_MISSES: &str = "amsearch_store_cache_misses_total";
+/// Extents evicted from the paged store's LRU cache (counter).
+pub const M_STORE_CACHE_EVICTIONS: &str = "amsearch_store_cache_evictions_total";
+/// Bytes of exact member vectors currently memory-resident: the full
+/// slab size on a resident store, the cached-extent bytes on a paged
+/// one (gauge).
+pub const M_STORE_RESIDENT_BYTES: &str = "amsearch_store_resident_bytes";
 
 /// Families every tier's exposition must contain — what the CLI's
 /// `metrics --check` and the CI smoke scrape assert.
 pub const REQUIRED_FAMILIES: [&str; 3] = [M_REQUESTS, M_LATENCY, M_WINDOW_LATENCY];
+
+/// Store I/O families, additionally asserted by `metrics --check
+/// --require-store` and the paged CI smoke (the single-node search tier
+/// always exports them; the router tier does not, so they are not in
+/// [`REQUIRED_FAMILIES`]).
+pub const STORE_FAMILIES: [&str; 6] = [
+    M_STORE_BYTES_READ,
+    M_STORE_EXTENT_READS,
+    M_STORE_CACHE_HITS,
+    M_STORE_CACHE_MISSES,
+    M_STORE_CACHE_EVICTIONS,
+    M_STORE_RESIDENT_BYTES,
+];
 
 /// The quantiles a histogram family exports (matches the STATS JSON's
 /// `p50_ns`/`p90_ns`/`p99_ns`, plus `quantile="1"` for the exact max).
@@ -384,6 +413,12 @@ mod tests {
             M_QUALITY_TOP1_FRACTION,
             M_QUALITY_SURVIVAL,
             M_QUALITY_SHARD_CAPTURE,
+            M_STORE_BYTES_READ,
+            M_STORE_EXTENT_READS,
+            M_STORE_CACHE_HITS,
+            M_STORE_CACHE_MISSES,
+            M_STORE_CACHE_EVICTIONS,
+            M_STORE_RESIDENT_BYTES,
         ];
         let unique: std::collections::BTreeSet<&str> = all.iter().copied().collect();
         assert_eq!(unique.len(), all.len());
@@ -411,6 +446,22 @@ mod tests {
             M_QUALITY_SHARD_CAPTURE,
             "amsearch_quality_shard_capture_rate"
         );
+    }
+
+    #[test]
+    fn store_family_names_are_pinned() {
+        assert_eq!(M_STORE_BYTES_READ, "amsearch_store_bytes_read_total");
+        assert_eq!(M_STORE_EXTENT_READS, "amsearch_store_extent_reads_total");
+        assert_eq!(M_STORE_CACHE_HITS, "amsearch_store_cache_hits_total");
+        assert_eq!(M_STORE_CACHE_MISSES, "amsearch_store_cache_misses_total");
+        assert_eq!(
+            M_STORE_CACHE_EVICTIONS,
+            "amsearch_store_cache_evictions_total"
+        );
+        assert_eq!(M_STORE_RESIDENT_BYTES, "amsearch_store_resident_bytes");
+        for f in STORE_FAMILIES {
+            assert!(f.starts_with("amsearch_store_"), "{f}");
+        }
     }
 
     #[test]

@@ -283,6 +283,7 @@ impl TraceSink {
     /// [`Self::emit`]'s.
     pub fn flush(&self) {
         let mut out = lock_unpoisoned(&self.out);
+        // amlint: allow(store_io, reason = "trace output is diagnostic; a full disk must not fail shutdown")
         let _ = out.flush();
     }
 }

@@ -16,17 +16,21 @@
 //! bit-for-bit the exact scan's — and at `rerank = 0` the survivor set
 //! is *all* scanned candidates, which always contains it.
 
-use crate::data::dataset::Dataset;
 use crate::search::{Kernels, Metric, Neighbor, TopK};
+use crate::store::RowReader;
 
 /// Exact-rerank the stage-1 survivors: `survivors` are `(approx_dist,
-/// id)` pairs (any order; stage 1 hands them ascending).  Returns the
-/// final neighbors plus the number of exact distance evaluations (the
-/// `rerank_ops` unit is this count times `d`).
+/// id)` pairs (any order; stage 1 hands them ascending).  Exact rows
+/// come through `rows` — the resident dataset, or the paged extent
+/// cache (survivors of one class share its single fetch; a row a
+/// poisoned paged store cannot produce is skipped, and the serving
+/// layer fails the request from the stored error afterwards).  Returns
+/// the final neighbors plus the number of exact distance evaluations
+/// (the `rerank_ops` unit is this count times `d`).
 pub(crate) fn rerank_exact(
     metric: Metric,
     x: &[f32],
-    data: &Dataset,
+    rows: RowReader<'_>,
     survivors: Vec<(f32, u32)>,
     k: usize,
     kernels: Kernels,
@@ -36,9 +40,9 @@ pub(crate) fn rerank_exact(
     for (_, vid) in survivors {
         // early abandoning against the current exact k-th best: kept
         // distances are bitwise sq_l2, abandoned ones provably lose
-        if let Some(dist) =
-            kernels.distance_pruned(metric, x, data.get(vid as usize), acc.bound())
-        {
+        if let Some(Some(dist)) = rows.with_row(vid as usize, |v| {
+            kernels.distance_pruned(metric, x, v, acc.bound())
+        }) {
             acc.push(dist, vid);
         }
     }
@@ -48,6 +52,7 @@ pub(crate) fn rerank_exact(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::dataset::Dataset;
     use crate::data::rng::Rng;
     use crate::search::distance::sq_l2;
 
@@ -65,8 +70,14 @@ mod tests {
         // garbage approximate keys: the rerank must not care
         let survivors: Vec<(f32, u32)> =
             (0..50).map(|i| ((50 - i) as f32, i as u32)).collect();
-        let (got, reranked) =
-            rerank_exact(Metric::SqL2, &x, &ds, survivors, 3, Kernels::select());
+        let (got, reranked) = rerank_exact(
+            Metric::SqL2,
+            &x,
+            RowReader::Dataset(&ds),
+            survivors,
+            3,
+            Kernels::select(),
+        );
         assert_eq!(reranked, 50);
         let mut want: Vec<(f32, u32)> =
             (0..50).map(|i| (sq_l2(&x, ds.get(i)), i as u32)).collect();
@@ -80,8 +91,14 @@ mod tests {
     #[test]
     fn empty_survivors_give_empty_neighbors() {
         let ds = gaussian(3, 4, 10);
-        let (got, reranked) =
-            rerank_exact(Metric::SqL2, &[0.0; 4], &ds, Vec::new(), 5, Kernels::scalar());
+        let (got, reranked) = rerank_exact(
+            Metric::SqL2,
+            &[0.0; 4],
+            RowReader::Dataset(&ds),
+            Vec::new(),
+            5,
+            Kernels::scalar(),
+        );
         assert!(got.is_empty());
         assert_eq!(reranked, 0);
     }

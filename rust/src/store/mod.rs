@@ -1,0 +1,294 @@
+//! Vector storage behind the candidate scan: where the exact f32
+//! member matrices live.
+//!
+//! The paper's associative-memory poll prunes which *classes* get
+//! exhaustively scanned.  With everything in RAM that pruning only
+//! saves compute; this module turns it into an **I/O pruning** (the
+//! "On Storage" ANN idea): the small hot state — AM super-memories,
+//! quantized codes, codebooks — stays memory-resident, while the exact
+//! f32 member matrices can live in a class-extent data file
+//! (`*.amdat`, see [`paged`] and `docs/STORE_FORMAT.md`) and are read
+//! on demand, one sequential `pread` per polled class.
+//!
+//! Two implementations behind one seam ([`Store`]):
+//!
+//! - [`Store::Resident`] — class-contiguous member slabs in RAM (the
+//!   historical layout, bit-for-bit the previous behavior);
+//! - [`Store::Paged`] — extents on disk, fetched through a bounded
+//!   LRU cache of hot class extents with bytes-read / cache-hit
+//!   accounting ([`PagedStore`]).
+//!
+//! The scan paths stay **infallible**: a read or checksum failure
+//! poisons the paged store ([`PagedStore::error`]) and the affected
+//! class yields no candidates; the `Result`-bearing serving layers
+//! check the poison slot after the scan and fail the request, so a
+//! wrong answer can never escape silently.
+//!
+//! Mode selection ([`StoreMode`]) threads from config/CLI through
+//! [`StoreOptions`]; the paged full-rerank path is bitwise-equal to
+//! the resident exact scan (same bytes, same kernels, same total
+//! `(distance, id)` selection order — see the e2e suite).
+
+mod paged;
+
+pub use paged::PagedStore;
+pub(crate) use paged::{write_data_file, DataFile, DATA_MAGIC};
+
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+
+/// Incremental FNV-1a 64 (integrity checksum; not cryptographic).
+/// Shared by the index artifact writer/reader ([`crate::index::persist`])
+/// and the paged data file's per-extent checksums.
+#[derive(Debug, Clone)]
+pub(crate) struct Fnv(u64);
+
+impl Fnv {
+    pub(crate) fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    pub(crate) fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    pub(crate) fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Where the exact f32 member matrices live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StoreMode {
+    /// Member matrices resident in RAM (the historical layout).
+    #[default]
+    Resident,
+    /// Member matrices in a class-extent data file, paged in on demand.
+    Paged,
+}
+
+impl StoreMode {
+    /// Parse a config/CLI value ("resident" | "paged").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "resident" => Ok(StoreMode::Resident),
+            "paged" => Ok(StoreMode::Paged),
+            other => Err(Error::Config(format!(
+                "unknown store mode {other:?} (expected \"resident\" or \"paged\")"
+            ))),
+        }
+    }
+
+    /// The config/CLI name of this mode.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreMode::Resident => "resident",
+            StoreMode::Paged => "paged",
+        }
+    }
+}
+
+/// How to open an index's vector store (config/CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreOptions {
+    /// Resident or paged.
+    pub mode: StoreMode,
+    /// Extent-cache budget for the paged store, in bytes.  Extents are
+    /// evicted least-recently-used once the cached bytes exceed this.
+    pub cache_bytes: u64,
+}
+
+/// Default extent-cache budget: 64 MiB — a few hot classes of a
+/// billion-scale shard, small against the data file it fronts.
+pub const DEFAULT_CACHE_BYTES: u64 = 64 * 1024 * 1024;
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions { mode: StoreMode::Resident, cache_bytes: DEFAULT_CACHE_BYTES }
+    }
+}
+
+/// One snapshot of a store's accounting, the substrate of the STATS
+/// `store` object and the `amsearch_store_*` Prometheus families.
+/// Counters are cumulative since open; byte gauges are current.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// "resident" | "paged".
+    pub kind: &'static str,
+    /// Exact f32 payload bytes held in RAM *right now* — the full
+    /// member matrices for a resident store, the currently cached
+    /// extents for a paged one.
+    pub bytes_resident: u64,
+    /// Exact f32 payload bytes on disk (0 for a resident store).
+    pub bytes_disk: u64,
+    /// Cumulative bytes fetched from disk (0 for a resident store).
+    /// The headline I/O-pruning figure: at default fan-out this stays
+    /// far below what a resident store keeps in RAM.
+    pub bytes_read: u64,
+    /// Cumulative extent fetches from disk.
+    pub extent_reads: u64,
+    /// Extent-cache hits.
+    pub cache_hits: u64,
+    /// Extent-cache misses (each miss implies one disk fetch).
+    pub cache_misses: u64,
+    /// Extents evicted to stay under the cache budget.
+    pub cache_evictions: u64,
+    /// The configured extent-cache budget in bytes.
+    pub cache_budget: u64,
+}
+
+/// A class's member rows (flat `[rows × d]`, members-list order),
+/// however the store produced them.  Derefs to `&[f32]`; an
+/// [`ClassRows::Unavailable`] result (poisoned paged store) derefs to
+/// an empty slice, so scan loops simply see zero candidates.
+pub enum ClassRows<'a> {
+    /// Borrowed straight from a resident slab.
+    Borrowed(&'a [f32]),
+    /// A shared handle into the paged extent cache.
+    Cached(Arc<Vec<f32>>),
+    /// The paged store failed to produce this extent (see
+    /// [`PagedStore::error`]).
+    Unavailable,
+}
+
+impl std::ops::Deref for ClassRows<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        match self {
+            ClassRows::Borrowed(s) => s,
+            ClassRows::Cached(a) => a.as_slice(),
+            ClassRows::Unavailable => &[],
+        }
+    }
+}
+
+/// The vector store seam: one of the two layouts behind every exact
+/// member-row access the index makes.
+#[derive(Debug, Clone)]
+pub enum Store {
+    /// Class-contiguous member slabs in RAM: `slabs[ci]` holds class
+    /// `ci`'s member rows in members-list order (empty for quantized
+    /// indices, whose scan streams code rows and reranks through the
+    /// dataset instead).
+    Resident { slabs: Vec<Vec<f32>> },
+    /// Class extents on disk behind a bounded LRU cache.
+    Paged(PagedStore),
+}
+
+impl Store {
+    /// Wrap resident slabs.
+    pub fn resident(slabs: Vec<Vec<f32>>) -> Self {
+        Store::Resident { slabs }
+    }
+
+    /// "resident" | "paged" — the STATS `store.kind` field.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Store::Resident { .. } => "resident",
+            Store::Paged(_) => "paged",
+        }
+    }
+
+    /// True when member matrices are paged from disk.
+    pub fn is_paged(&self) -> bool {
+        matches!(self, Store::Paged(_))
+    }
+
+    /// Class `ci`'s member rows.  Resident: a borrow of the slab.
+    /// Paged: a cache hit or one sequential extent read — called once
+    /// per polled class per *batch* by the class-major scan, which is
+    /// exactly the read coalescing the paged layout is built around.
+    pub fn class_rows(&self, ci: usize) -> ClassRows<'_> {
+        match self {
+            Store::Resident { slabs } => match slabs.get(ci) {
+                Some(slab) => ClassRows::Borrowed(slab),
+                None => ClassRows::Borrowed(&[]),
+            },
+            Store::Paged(p) => p.class_rows(ci),
+        }
+    }
+
+    /// The first error the paged store hit, if any (`None` for
+    /// resident stores and healthy paged ones).  Serving layers check
+    /// this after a scan to turn silent zero-candidate classes into a
+    /// failed request.
+    pub fn error(&self) -> Option<String> {
+        match self {
+            Store::Resident { .. } => None,
+            Store::Paged(p) => p.error(),
+        }
+    }
+}
+
+/// Row-granular exact reads for the rerank stage, however the vectors
+/// are stored.  The resident variant borrows the dataset; the paged
+/// variant routes through the extent cache (survivors of one class
+/// share its single fetch).
+pub enum RowReader<'a> {
+    /// Rows come from the resident dataset.
+    Dataset(&'a Dataset),
+    /// Rows come from paged class extents.
+    Paged(&'a PagedStore),
+}
+
+impl RowReader<'_> {
+    /// Run `f` over vector `vid`'s exact f32 row.  Returns `None` only
+    /// when a paged store failed to produce the row (poisoned; see
+    /// [`PagedStore::error`]) — the caller then skips the candidate
+    /// and the serving layer surfaces the stored error.
+    pub fn with_row<R>(&self, vid: usize, f: impl FnOnce(&[f32]) -> R) -> Option<R> {
+        match self {
+            RowReader::Dataset(d) => Some(f(d.get(vid))),
+            RowReader::Paged(p) => p.with_row(vid, f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_mode_parses_and_rejects() {
+        assert_eq!(StoreMode::parse("resident").unwrap(), StoreMode::Resident);
+        assert_eq!(StoreMode::parse("paged").unwrap(), StoreMode::Paged);
+        assert!(StoreMode::parse("mmap").is_err());
+        assert_eq!(StoreMode::Paged.name(), "paged");
+        assert_eq!(StoreMode::default(), StoreMode::Resident);
+    }
+
+    #[test]
+    fn resident_store_serves_slabs_and_never_errors() {
+        let store =
+            Store::resident(vec![vec![1.0, 2.0], Vec::new(), vec![3.0, 4.0]]);
+        assert_eq!(store.kind(), "resident");
+        assert!(!store.is_paged());
+        assert_eq!(&*store.class_rows(0), &[1.0, 2.0][..]);
+        assert!(store.class_rows(1).is_empty());
+        assert_eq!(&*store.class_rows(2), &[3.0, 4.0][..]);
+        // out-of-range class degrades to empty, like an empty class
+        assert!(store.class_rows(9).is_empty());
+        assert!(store.error().is_none());
+    }
+
+    #[test]
+    fn row_reader_over_dataset() {
+        let ds = Dataset::from_flat(2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let rows = RowReader::Dataset(&ds);
+        let got = rows.with_row(1, |r| r.to_vec());
+        assert_eq!(got, Some(vec![3.0, 4.0]));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // FNV-1a 64 of the empty string is the offset basis; "a" is the
+        // published reference value
+        assert_eq!(Fnv::new().value(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv::new();
+        h.update(b"a");
+        assert_eq!(h.value(), 0xaf63_dc4c_8601_ec8c);
+    }
+}

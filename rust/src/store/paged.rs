@@ -1,0 +1,811 @@
+//! The paged vector store: class-extent data files (`*.amdat`) and the
+//! pread-backed, LRU-cached reader that serves the exact scan/rerank
+//! from disk.
+//!
+//! On-disk layout (all integers little-endian; full spec in
+//! `docs/STORE_FORMAT.md`):
+//!
+//! ```text
+//! magic     8B   "AMDATAF1"
+//! dim       u32
+//! q         u32  number of classes
+//! n         u64  number of vectors
+//! table     q × (offset u64, rows u64, fnv u64)
+//! table_fnv u64  FNV-1a of everything before it
+//! ...zero padding to the first 4096-byte boundary...
+//! extent 0  rows(0) * dim * f32, members-list order, 4096-aligned
+//! ...zero padding...
+//! extent 1  ...
+//! ```
+//!
+//! Each extent is one class's member rows, contiguous and
+//! 4096-aligned, so the class-major batch scan turns into **one
+//! sequential positional read per polled class per batch**.  Extents
+//! carry their own FNV-1a checksum, verified on every fetch; the
+//! companion `.amidx` records the file length and `table_fnv`, binding
+//! the pair so a swapped or stale data file is rejected at open.
+//!
+//! I/O is explicit `pread` (`std::os::unix::fs::FileExt::read_exact_at`)
+//! — positional, safe, shareable across threads without seeking.  No
+//! mmap: no `unsafe`, no SIGBUS-on-truncation hazard (and amlint's
+//! `store_io` rule keeps it that way).
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::partition::Partition;
+use crate::util::sync::lock_unpoisoned;
+
+use super::{ClassRows, Fnv, StoreStats};
+
+/// Magic prefix of a class-extent data file.
+pub(crate) const DATA_MAGIC: &[u8; 8] = b"AMDATAF1";
+
+/// Extent alignment: every class's rows start on a 4096-byte boundary
+/// (the common page / logical-block size), so a fetch is one aligned
+/// sequential read.
+pub(crate) const DATA_ALIGN: u64 = 4096;
+
+/// Bytes of the fixed header before the extent table.
+const HEADER_LEN: u64 = 8 + 4 + 4 + 8;
+
+/// Bytes of one extent-table entry.
+const TABLE_ENTRY_LEN: u64 = 8 + 8 + 8;
+
+const PAD: [u8; DATA_ALIGN as usize] = [0u8; DATA_ALIGN as usize];
+
+fn align_up(x: u64, a: u64) -> u64 {
+    (x + a - 1) / a * a
+}
+
+/// One class's extent: where its member rows live in the data file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Extent {
+    /// Byte offset of the first row (4096-aligned when `rows > 0`).
+    pub(crate) offset: u64,
+    /// Number of member rows.
+    pub(crate) rows: u64,
+    /// FNV-1a 64 of the extent's payload bytes.
+    pub(crate) fnv: u64,
+}
+
+/// Write the class-extent data file for `data` partitioned by
+/// `partition`.  Returns `(file_len, table_fnv)` — the values the
+/// companion `.amidx` header records to bind the pair.
+pub(crate) fn write_data_file(
+    path: &Path,
+    data: &Dataset,
+    partition: &Partition,
+) -> Result<(u64, u64)> {
+    let dim = data.dim();
+    let q = partition.n_classes();
+    let n = partition.n_vectors();
+    // pass 1: per-class payload checksums and aligned extent offsets
+    let table_end = HEADER_LEN + q as u64 * TABLE_ENTRY_LEN + 8;
+    let mut cursor = align_up(table_end, DATA_ALIGN);
+    let mut extents = Vec::with_capacity(q);
+    for ci in 0..q {
+        let members = partition.members(ci);
+        let mut h = Fnv::new();
+        for &vid in members {
+            for &x in data.get(vid as usize) {
+                h.update(&x.to_le_bytes());
+            }
+        }
+        extents.push(Extent {
+            offset: cursor,
+            rows: members.len() as u64,
+            fnv: h.value(),
+        });
+        let len = (members.len() * dim * 4) as u64;
+        cursor = align_up(cursor + len, DATA_ALIGN);
+    }
+    let file_len = cursor;
+    // pass 2: stream the file out
+    let file = std::fs::File::create(path)
+        .map_err(|e| Error::Data(format!("cannot create {}: {e}", path.display())))?;
+    let mut out = std::io::BufWriter::new(file);
+    let mut h = Fnv::new();
+    let mut put = |out: &mut std::io::BufWriter<std::fs::File>,
+                   h: &mut Fnv,
+                   b: &[u8]|
+     -> Result<()> {
+        h.update(b);
+        out.write_all(b)?;
+        Ok(())
+    };
+    put(&mut out, &mut h, DATA_MAGIC)?;
+    put(&mut out, &mut h, &(dim as u32).to_le_bytes())?;
+    put(&mut out, &mut h, &(q as u32).to_le_bytes())?;
+    put(&mut out, &mut h, &(n as u64).to_le_bytes())?;
+    for e in &extents {
+        put(&mut out, &mut h, &e.offset.to_le_bytes())?;
+        put(&mut out, &mut h, &e.rows.to_le_bytes())?;
+        put(&mut out, &mut h, &e.fnv.to_le_bytes())?;
+    }
+    let table_fnv = h.value();
+    out.write_all(&table_fnv.to_le_bytes())?;
+    let mut pos = table_end;
+    for (ci, e) in extents.iter().enumerate() {
+        let mut gap = e.offset - pos;
+        while gap > 0 {
+            let chunk = gap.min(DATA_ALIGN) as usize;
+            out.write_all(&PAD[..chunk])?;
+            gap -= chunk as u64;
+        }
+        for &vid in partition.members(ci) {
+            for &x in data.get(vid as usize) {
+                out.write_all(&x.to_le_bytes())?;
+            }
+        }
+        pos = e.offset + e.rows * dim as u64 * 4;
+        let mut tail = align_up(pos, DATA_ALIGN) - pos;
+        while tail > 0 {
+            let chunk = tail.min(DATA_ALIGN) as usize;
+            out.write_all(&PAD[..chunk])?;
+            tail -= chunk as u64;
+        }
+        pos = align_up(pos, DATA_ALIGN);
+    }
+    out.flush()?;
+    debug_assert_eq!(pos, file_len);
+    Ok((file_len, table_fnv))
+}
+
+/// An opened, header-verified class-extent data file.
+#[derive(Debug)]
+pub(crate) struct DataFile {
+    file: std::fs::File,
+    pub(crate) dim: usize,
+    pub(crate) q: usize,
+    pub(crate) n: usize,
+    pub(crate) extents: Vec<Extent>,
+    pub(crate) table_fnv: u64,
+    pub(crate) file_len: u64,
+}
+
+impl DataFile {
+    /// Open and verify the header and extent table (magic, table
+    /// checksum, extent alignment and bounds).
+    pub(crate) fn open(path: &Path) -> Result<Self> {
+        let mut file = std::fs::File::open(path).map_err(|e| {
+            Error::Data(format!(
+                "cannot open data file {}: {e} (paged/v5 indices need their \
+                 .amdat sibling next to the .amidx)",
+                path.display()
+            ))
+        })?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| Error::Data(format!("stat {}: {e}", path.display())))?
+            .len();
+        let mut head = [0u8; HEADER_LEN as usize];
+        file.read_exact(&mut head)?;
+        if &head[..8] != DATA_MAGIC {
+            return Err(Error::Data(format!(
+                "{} is not an amsearch data file",
+                path.display()
+            )));
+        }
+        let dim = u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as usize;
+        let q = u32::from_le_bytes([head[12], head[13], head[14], head[15]]) as usize;
+        let n = u64::from_le_bytes([
+            head[16], head[17], head[18], head[19], head[20], head[21], head[22],
+            head[23],
+        ]) as usize;
+        let table_len = q as u64 * TABLE_ENTRY_LEN;
+        if HEADER_LEN + table_len + 8 > file_len {
+            return Err(Error::Data("data file truncated in extent table".into()));
+        }
+        let mut table = vec![0u8; table_len as usize];
+        file.read_exact(&mut table)?;
+        let mut stored_fnv = [0u8; 8];
+        file.read_exact(&mut stored_fnv)?;
+        let mut h = Fnv::new();
+        h.update(&head);
+        h.update(&table);
+        let table_fnv = h.value();
+        if table_fnv != u64::from_le_bytes(stored_fnv) {
+            return Err(Error::Data(format!(
+                "data file table corrupt: checksum {table_fnv:#x} != stored {:#x}",
+                u64::from_le_bytes(stored_fnv)
+            )));
+        }
+        let mut extents = Vec::with_capacity(q);
+        let mut total_rows = 0u64;
+        for (ci, e) in table.chunks_exact(TABLE_ENTRY_LEN as usize).enumerate() {
+            let offset = u64::from_le_bytes([
+                e[0], e[1], e[2], e[3], e[4], e[5], e[6], e[7],
+            ]);
+            let rows = u64::from_le_bytes([
+                e[8], e[9], e[10], e[11], e[12], e[13], e[14], e[15],
+            ]);
+            let fnv = u64::from_le_bytes([
+                e[16], e[17], e[18], e[19], e[20], e[21], e[22], e[23],
+            ]);
+            let len = rows
+                .checked_mul(dim as u64 * 4)
+                .ok_or_else(|| Error::Data("extent length overflow".into()))?;
+            if rows > 0
+                && (offset % DATA_ALIGN != 0
+                    || offset
+                        .checked_add(len)
+                        .is_none_or(|end| end > file_len))
+            {
+                return Err(Error::Data(format!(
+                    "class {ci} extent out of bounds or misaligned \
+                     (offset {offset}, rows {rows})"
+                )));
+            }
+            total_rows += rows;
+            extents.push(Extent { offset, rows, fnv });
+        }
+        if total_rows != n as u64 {
+            return Err(Error::Data(format!(
+                "extent rows sum to {total_rows}, header says n = {n}"
+            )));
+        }
+        Ok(DataFile { file, dim, q, n, extents, table_fnv, file_len })
+    }
+
+    /// Check this data file against the geometry and binding values the
+    /// companion `.amidx` recorded.
+    pub(crate) fn check_binding(
+        &self,
+        dim: usize,
+        q: usize,
+        n: usize,
+        data_len: u64,
+        table_fnv: u64,
+    ) -> Result<()> {
+        if self.dim != dim || self.q != q || self.n != n {
+            return Err(Error::Data(format!(
+                "data file geometry (dim {}, q {}, n {}) does not match the \
+                 index (dim {dim}, q {q}, n {n})",
+                self.dim, self.q, self.n
+            )));
+        }
+        if self.file_len != data_len || self.table_fnv != table_fnv {
+            return Err(Error::Data(
+                "data file does not match the index artifact (stale or swapped \
+                 .amdat — rebuild or re-save the index)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Read and checksum-verify class `ci`'s rows (seek-based; used by
+    /// the resident v5 load, which walks every extent once).
+    pub(crate) fn read_class(&mut self, ci: usize) -> Result<Vec<f32>> {
+        let Some(ext) = self.extents.get(ci).copied() else {
+            return Err(Error::Data(format!("class {ci} out of range")));
+        };
+        if ext.rows == 0 {
+            return Ok(Vec::new());
+        }
+        let len = ext.rows as usize * self.dim * 4;
+        let mut bytes = vec![0u8; len];
+        self.file.seek(SeekFrom::Start(ext.offset))?;
+        self.file.read_exact(&mut bytes)?;
+        verify_extent(ci, &bytes, ext.fnv)?;
+        Ok(decode_f32(&bytes))
+    }
+}
+
+fn verify_extent(ci: usize, bytes: &[u8], stored: u64) -> Result<()> {
+    let mut h = Fnv::new();
+    h.update(bytes);
+    if h.value() != stored {
+        return Err(Error::Data(format!(
+            "class {ci} extent corrupt: checksum {:#x} != stored {stored:#x}",
+            h.value()
+        )));
+    }
+    Ok(())
+}
+
+fn decode_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Positional read — `pread(2)` through the std `FileExt`: no shared
+/// cursor, so concurrent class fetches never race a seek.
+#[cfg(unix)]
+fn pread_exact(
+    file: &std::fs::File,
+    buf: &mut [u8],
+    offset: u64,
+) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(not(unix))]
+fn pread_exact(
+    _file: &std::fs::File,
+    _buf: &mut [u8],
+    _offset: u64,
+) -> std::io::Result<()> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "positional reads require a unix platform",
+    ))
+}
+
+/// Bounded LRU of decoded hot class extents, keyed by class.
+#[derive(Debug)]
+struct ExtentCache {
+    budget: u64,
+    bytes: u64,
+    stamp: u64,
+    entries: HashMap<usize, (Arc<Vec<f32>>, u64)>,
+}
+
+impl ExtentCache {
+    fn new(budget: u64) -> Self {
+        ExtentCache { budget, bytes: 0, stamp: 0, entries: HashMap::new() }
+    }
+
+    fn get(&mut self, ci: usize) -> Option<Arc<Vec<f32>>> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        self.entries.get_mut(&ci).map(|e| {
+            e.1 = stamp;
+            e.0.clone()
+        })
+    }
+
+    /// Insert (or refresh) an extent, then evict least-recently-used
+    /// entries until the budget holds.  The just-inserted extent is
+    /// never evicted, so a single over-budget extent still serves its
+    /// batch (outstanding `Arc` handles keep evicted data alive until
+    /// their scans finish).  Returns the number of evictions.
+    fn insert(&mut self, ci: usize, rows: Arc<Vec<f32>>) -> u64 {
+        let added = (rows.len() * 4) as u64;
+        self.stamp += 1;
+        if let Some((old, _)) = self.entries.insert(ci, (rows, self.stamp)) {
+            self.bytes = self.bytes.saturating_sub((old.len() * 4) as u64);
+        }
+        self.bytes += added;
+        let mut evicted = 0u64;
+        while self.bytes > self.budget && self.entries.len() > 1 {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(&k, _)| k != ci)
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(&k, _)| k);
+            let Some(k) = victim else { break };
+            if let Some((old, _)) = self.entries.remove(&k) {
+                self.bytes = self.bytes.saturating_sub((old.len() * 4) as u64);
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+}
+
+/// Cumulative I/O and cache accounting, shared by every clone of the
+/// store (one physical store, one set of counters), plus the poison
+/// slot that records the first I/O or integrity failure.
+#[derive(Debug, Default)]
+struct Counters {
+    bytes_read: AtomicU64,
+    extent_reads: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    poisoned: Mutex<Option<String>>,
+}
+
+/// The disk-resident vector store: class extents in an `.amdat` file,
+/// fetched by positional reads through a bounded LRU cache.
+///
+/// Cloning is cheap and shares the file handle, cache, and counters.
+/// All reads verify the extent checksum; the first failure poisons the
+/// store ([`Self::error`]) and subsequent accesses to the failed class
+/// yield no rows — the serving layers convert that into a request
+/// error, never a silently wrong answer.
+#[derive(Debug, Clone)]
+pub struct PagedStore {
+    file: Arc<std::fs::File>,
+    dim: usize,
+    extents: Arc<Vec<Extent>>,
+    /// `vid -> class` (mirrors the partition; kept here so row reads
+    /// need no index back-reference).
+    class_of: Arc<Vec<u32>>,
+    /// `vid -> row index within its class extent` (members-list order).
+    row_of: Arc<Vec<u32>>,
+    /// Total exact f32 payload bytes on disk (`n * dim * 4`).
+    data_bytes: u64,
+    cache: Arc<Mutex<ExtentCache>>,
+    counters: Arc<Counters>,
+}
+
+impl PagedStore {
+    /// Wrap an opened data file as a paged store.  `assignments` is the
+    /// index's `vid -> class` map; per-class extent row counts are
+    /// validated against it.
+    pub(crate) fn from_data_file(
+        df: DataFile,
+        assignments: &[u32],
+        cache_bytes: u64,
+    ) -> Result<Self> {
+        if !cfg!(unix) {
+            return Err(Error::Config(
+                "store mode \"paged\" requires a unix platform (positional \
+                 reads); use \"resident\""
+                    .into(),
+            ));
+        }
+        if assignments.len() != df.n {
+            return Err(Error::Data(format!(
+                "{} assignments for a data file of n = {}",
+                assignments.len(),
+                df.n
+            )));
+        }
+        // row_of: cursor per class over vid order — exactly the
+        // members-list order the writer laid rows out in
+        let mut next = vec![0u64; df.q];
+        let mut row_of = Vec::with_capacity(df.n);
+        for &c in assignments {
+            let Some(slot) = next.get_mut(c as usize) else {
+                return Err(Error::Data(format!("assignment to class {c} >= q")));
+            };
+            row_of.push(*slot as u32);
+            *slot += 1;
+        }
+        for (ci, (&have, ext)) in next.iter().zip(df.extents.iter()).enumerate() {
+            if have != ext.rows {
+                return Err(Error::Data(format!(
+                    "class {ci}: {have} members but extent has {} rows",
+                    ext.rows
+                )));
+            }
+        }
+        let data_bytes = (df.n * df.dim * 4) as u64;
+        Ok(PagedStore {
+            file: Arc::new(df.file),
+            dim: df.dim,
+            extents: Arc::new(df.extents),
+            class_of: Arc::new(assignments.to_vec()),
+            row_of: Arc::new(row_of),
+            data_bytes,
+            cache: Arc::new(Mutex::new(ExtentCache::new(cache_bytes))),
+            counters: Arc::new(Counters::default()),
+        })
+    }
+
+    /// Class `ci`'s member rows: a cache hit, or one sequential
+    /// positional read (verified against the extent checksum).  The
+    /// read runs outside the cache lock, so concurrent fetches of
+    /// *different* classes overlap; concurrent fetches of the *same*
+    /// class may duplicate I/O (counted honestly) but stay correct.
+    pub fn class_rows(&self, ci: usize) -> ClassRows<'_> {
+        let Some(ext) = self.extents.get(ci).copied() else {
+            return ClassRows::Borrowed(&[]);
+        };
+        if ext.rows == 0 {
+            return ClassRows::Borrowed(&[]);
+        }
+        let cached = { lock_unpoisoned(&self.cache).get(ci) };
+        if let Some(rows) = cached {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return ClassRows::Cached(rows);
+        }
+        self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+        match self.fetch(ci, ext) {
+            Ok(rows) => {
+                let rows = Arc::new(rows);
+                let evicted =
+                    { lock_unpoisoned(&self.cache).insert(ci, rows.clone()) };
+                if evicted > 0 {
+                    self.counters
+                        .cache_evictions
+                        .fetch_add(evicted, Ordering::Relaxed);
+                }
+                ClassRows::Cached(rows)
+            }
+            Err(e) => {
+                self.poison(format!("class {ci}: {e}"));
+                ClassRows::Unavailable
+            }
+        }
+    }
+
+    fn fetch(&self, ci: usize, ext: Extent) -> Result<Vec<f32>> {
+        let len = ext.rows as usize * self.dim * 4;
+        let mut bytes = vec![0u8; len];
+        pread_exact(&self.file, &mut bytes, ext.offset)
+            .map_err(|e| Error::Data(format!("extent read failed: {e}")))?;
+        self.counters.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+        self.counters.extent_reads.fetch_add(1, Ordering::Relaxed);
+        verify_extent(ci, &bytes, ext.fnv)?;
+        Ok(decode_f32(&bytes))
+    }
+
+    /// Run `f` over vector `vid`'s exact row (the rerank read path).
+    /// Rows of one class share its cached extent, so reranking `r`
+    /// survivors costs at most one fetch per distinct class.  Returns
+    /// `None` when the store is poisoned or `vid` is out of range
+    /// (which also poisons — it indicates a corrupt id map).
+    pub fn with_row<R>(&self, vid: usize, f: impl FnOnce(&[f32]) -> R) -> Option<R> {
+        let (Some(&ci), Some(&ri)) =
+            (self.class_of.get(vid), self.row_of.get(vid))
+        else {
+            self.poison(format!("row read for out-of-range vid {vid}"));
+            return None;
+        };
+        let rows = self.class_rows(ci as usize);
+        let start = ri as usize * self.dim;
+        let row = rows.get(start..start + self.dim)?;
+        Some(f(row))
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Record the first failure; later failures keep the original.
+    fn poison(&self, msg: String) {
+        let mut slot = lock_unpoisoned(&self.counters.poisoned);
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    /// The first I/O or integrity failure this store hit, if any.
+    pub fn error(&self) -> Option<String> {
+        lock_unpoisoned(&self.counters.poisoned).clone()
+    }
+
+    /// Accounting snapshot (counters are relaxed atomics: the snapshot
+    /// is coherent enough for telemetry, not a linearizable point).
+    pub fn stats(&self) -> StoreStats {
+        let (cached_bytes, budget) = {
+            let c = lock_unpoisoned(&self.cache);
+            (c.bytes, c.budget)
+        };
+        StoreStats {
+            kind: "paged",
+            bytes_resident: cached_bytes,
+            bytes_disk: self.data_bytes,
+            bytes_read: self.counters.bytes_read.load(Ordering::Relaxed),
+            extent_reads: self.counters.extent_reads.load(Ordering::Relaxed),
+            cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.counters.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self
+                .counters
+                .cache_evictions
+                .load(Ordering::Relaxed),
+            cache_budget: budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "amsearch_store_{}_{}",
+            std::process::id(),
+            name
+        ))
+    }
+
+    /// A small partitioned dataset: n vectors of dim d over q classes,
+    /// round-robin assignments.
+    fn fixture(seed: u64, d: usize, n: usize, q: usize) -> (Dataset, Partition) {
+        let mut rng = Rng::new(seed);
+        let flat: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let data = Dataset::from_flat(d, flat).unwrap();
+        let assignments: Vec<u32> = (0..n).map(|i| (i % q) as u32).collect();
+        let partition = Partition::from_assignments(assignments, q).unwrap();
+        (data, partition)
+    }
+
+    fn write_fixture(
+        name: &str,
+        seed: u64,
+        d: usize,
+        n: usize,
+        q: usize,
+    ) -> (std::path::PathBuf, Dataset, Partition, u64, u64) {
+        let (data, partition) = fixture(seed, d, n, q);
+        let path = tmp(name);
+        let (len, fnv) = write_data_file(&path, &data, &partition).unwrap();
+        (path, data, partition, len, fnv)
+    }
+
+    #[test]
+    fn write_then_open_roundtrips_geometry_and_rows() {
+        let (path, data, partition, len, fnv) =
+            write_fixture("rt.amdat", 1, 8, 50, 4);
+        let mut df = DataFile::open(&path).unwrap();
+        assert_eq!((df.dim, df.q, df.n), (8, 4, 50));
+        assert_eq!(df.file_len, len);
+        assert_eq!(df.table_fnv, fnv);
+        df.check_binding(8, 4, 50, len, fnv).unwrap();
+        assert!(df.check_binding(8, 4, 50, len + 1, fnv).is_err());
+        assert!(df.check_binding(8, 4, 49, len, fnv).is_err());
+        // every extent is aligned and holds the class rows in
+        // members-list order
+        for ci in 0..4 {
+            assert_eq!(df.extents[ci].offset % DATA_ALIGN, 0);
+            let rows = df.read_class(ci).unwrap();
+            let members = partition.members(ci);
+            assert_eq!(rows.len(), members.len() * 8);
+            for (i, &vid) in members.iter().enumerate() {
+                assert_eq!(&rows[i * 8..(i + 1) * 8], data.get(vid as usize));
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_classes_get_zero_row_extents() {
+        let d = 4;
+        let data =
+            Dataset::from_flat(d, vec![1.0; 2 * d]).unwrap();
+        // classes 0 and 2 empty
+        let partition = Partition::from_assignments(vec![1, 3], 4).unwrap();
+        let path = tmp("empty.amdat");
+        write_data_file(&path, &data, &partition).unwrap();
+        let mut df = DataFile::open(&path).unwrap();
+        assert_eq!(df.extents[0].rows, 0);
+        assert!(df.read_class(0).unwrap().is_empty());
+        assert_eq!(df.read_class(1).unwrap(), vec![1.0; d]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn paged_store_serves_rows_and_accounts_io() {
+        let (path, data, partition, _, _) =
+            write_fixture("paged.amdat", 2, 8, 60, 3);
+        let assignments: Vec<u32> =
+            (0..60).map(|i| partition.class_of(i)).collect();
+        let df = DataFile::open(&path).unwrap();
+        let store =
+            PagedStore::from_data_file(df, &assignments, 1 << 20).unwrap();
+        // first access: a miss and one sequential read of the extent
+        let rows = store.class_rows(0);
+        let members = partition.members(0);
+        assert_eq!(rows.len(), members.len() * 8);
+        for (i, &vid) in members.iter().enumerate() {
+            assert_eq!(&rows[i * 8..(i + 1) * 8], data.get(vid as usize));
+        }
+        let s = store.stats();
+        assert_eq!(s.kind, "paged");
+        assert_eq!(s.extent_reads, 1);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.bytes_read, (members.len() * 8 * 4) as u64);
+        assert_eq!(s.bytes_disk, 60 * 8 * 4);
+        // second access: pure cache hit, no new I/O
+        drop(rows);
+        let _rows = store.class_rows(0);
+        let s2 = store.stats();
+        assert_eq!(s2.extent_reads, 1);
+        assert_eq!(s2.cache_hits, 1);
+        assert_eq!(s2.bytes_read, s.bytes_read);
+        // row reads agree with the dataset and ride the same cache
+        for vid in [0usize, 7, 59] {
+            let got = store.with_row(vid, |r| r.to_vec()).unwrap();
+            assert_eq!(got.as_slice(), data.get(vid));
+        }
+        assert!(store.with_row(60, |r| r.to_vec()).is_none());
+        assert!(store.error().is_some(), "out-of-range vid poisons");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn tiny_budget_evicts_lru_but_keeps_serving() {
+        let (path, data, partition, _, _) =
+            write_fixture("evict.amdat", 3, 16, 90, 3);
+        let assignments: Vec<u32> =
+            (0..90).map(|i| partition.class_of(i)).collect();
+        let df = DataFile::open(&path).unwrap();
+        // budget below one extent (30 rows * 16 * 4 = 1920 bytes)
+        let store = PagedStore::from_data_file(df, &assignments, 1024).unwrap();
+        for round in 0..2 {
+            for ci in 0..3 {
+                let rows = store.class_rows(ci);
+                let members = partition.members(ci);
+                assert_eq!(rows.len(), members.len() * 16, "round {round}");
+                for (i, &vid) in members.iter().enumerate() {
+                    assert_eq!(
+                        &rows[i * 16..(i + 1) * 16],
+                        data.get(vid as usize)
+                    );
+                }
+            }
+        }
+        let s = store.stats();
+        // nothing fits next to anything else: every access is a miss
+        assert_eq!(s.cache_misses, 6);
+        assert_eq!(s.extent_reads, 6);
+        assert!(s.cache_evictions >= 5, "evictions = {}", s.cache_evictions);
+        assert!(s.bytes_resident <= 1920, "one extent at most stays cached");
+        assert!(store.error().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn corrupt_extent_poisons_instead_of_wrong_rows() {
+        let (path, _, partition, _, _) =
+            write_fixture("corrupt.amdat", 4, 8, 40, 2);
+        let assignments: Vec<u32> =
+            (0..40).map(|i| partition.class_of(i)).collect();
+        // flip one payload byte in extent 0
+        let df = DataFile::open(&path).unwrap();
+        let off = df.extents[0].offset as usize;
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let df = DataFile::open(&path).unwrap();
+        let store =
+            PagedStore::from_data_file(df, &assignments, 1 << 20).unwrap();
+        let rows = store.class_rows(0);
+        assert!(rows.is_empty(), "corrupt extent yields no rows");
+        let err = store.error().unwrap();
+        assert!(err.contains("corrupt"), "{err}");
+        assert!(store.with_row(0, |_| ()).is_none());
+        // other extents still verify and serve
+        assert!(!store.class_rows(1).is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn table_corruption_rejected_at_open() {
+        let (path, _, _, _, _) = write_fixture("table.amdat", 5, 4, 20, 2);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[30] ^= 0x01; // inside the extent table
+        std::fs::write(&path, &bytes).unwrap();
+        let err = DataFile::open(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_and_truncation_rejected() {
+        let path = tmp("magic.amdat");
+        std::fs::write(&path, b"NOTADATAFILE....").unwrap();
+        assert!(DataFile::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        let (path, _, _, _, _) = write_fixture("trunc.amdat", 6, 4, 30, 2);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..40]).unwrap();
+        assert!(DataFile::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mismatched_assignments_rejected() {
+        let (path, _, partition, _, _) =
+            write_fixture("mismatch.amdat", 7, 4, 24, 3);
+        let mut assignments: Vec<u32> =
+            (0..24).map(|i| partition.class_of(i)).collect();
+        assignments[0] = (assignments[0] + 1) % 3; // row counts now off
+        let df = DataFile::open(&path).unwrap();
+        assert!(PagedStore::from_data_file(df, &assignments, 1024).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,168 @@
+//! Disk-resident store end-to-end: a coordinator over a paged index
+//! must answer bitwise-identically to one over the resident index,
+//! surface `store` accounting through STATS / Prometheus / EXPLAIN,
+//! and fail requests loudly (never silently drop candidates) when the
+//! data file is corrupted underneath it.
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use amsearch::coordinator::{CoordinatorConfig, EngineFactory, SearchServer};
+use amsearch::data::rng::Rng;
+use amsearch::data::synthetic::{self, QueryModel};
+use amsearch::data::Workload;
+use amsearch::index::persist;
+use amsearch::index::{AmIndex, IndexParams};
+use amsearch::runtime::Backend;
+use amsearch::store::{StoreMode, StoreOptions};
+
+fn scratch(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("amsearch_store_e2e_{}_{name}.amidx", std::process::id()))
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(persist::data_path(path));
+}
+
+/// Build, save, and reload an index both ways.
+fn saved_pair(seed: u64, name: &str) -> (PathBuf, AmIndex, AmIndex, Workload) {
+    let mut rng = Rng::new(seed);
+    let wl = synthetic::dense_workload(32, 512, 64, QueryModel::Exact, &mut rng);
+    let params = IndexParams { n_classes: 8, top_p: 2, ..Default::default() };
+    let built = AmIndex::build(wl.base.clone(), params, &mut rng).unwrap();
+    let path = scratch(name);
+    persist::save(&built, &path).unwrap();
+    let resident = persist::load(&path).unwrap();
+    let paged = persist::load_paged(&path, 1 << 20).unwrap();
+    (path, resident, paged, wl)
+}
+
+fn server(index: AmIndex) -> Arc<SearchServer> {
+    let factory = EngineFactory {
+        index: Arc::new(index),
+        backend: Backend::Native,
+        artifacts_dir: None,
+    };
+    Arc::new(SearchServer::start(factory, CoordinatorConfig::default()).unwrap())
+}
+
+#[test]
+fn paged_server_is_bitwise_equal_and_observable() {
+    let (path, resident, paged, wl) = saved_pair(71, "bitwise");
+    assert!(paged.is_paged());
+    let rs = server(resident);
+    let ps = server(paged);
+
+    // bitwise equality across mixed fan-outs and k, batched serving path
+    let combos = [(1usize, 1usize), (2, 5), (8, 10), (2, 1)];
+    for qi in 0..32usize {
+        let (p, k) = combos[qi % combos.len()];
+        let x = wl.queries.get(qi % wl.queries.len()).to_vec();
+        let a = rs.search(x.clone(), p, k).unwrap();
+        let b = ps.search(x, p, k).unwrap();
+        assert_eq!(a.polled, b.polled, "query {qi}");
+        assert_eq!(a.candidates, b.candidates, "query {qi}");
+        assert_eq!(a.neighbors.len(), b.neighbors.len(), "query {qi}");
+        for (na, nb) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(na.id, nb.id, "query {qi}");
+            assert_eq!(
+                na.distance.to_bits(),
+                nb.distance.to_bits(),
+                "query {qi}: paged rerank must be bitwise-equal"
+            );
+        }
+    }
+
+    // STATS: the store object distinguishes the two layouts
+    let stats = ps.stats_json();
+    let store = stats.get("store").expect("STATS carry store.*");
+    assert_eq!(store.get("kind").and_then(|v| v.as_str()), Some("paged"));
+    let bytes_read = store.get("bytes_read").and_then(|v| v.as_u64()).unwrap();
+    let bytes_disk = store.get("bytes_disk").and_then(|v| v.as_u64()).unwrap();
+    assert!(bytes_read > 0, "paged serving must have read extents");
+    assert_eq!(bytes_disk, 512 * 32 * 4, "payload bytes on disk");
+    assert!(
+        bytes_read <= bytes_disk,
+        "with a warm cache each extent is fetched at most once \
+         (read {bytes_read} of {bytes_disk})"
+    );
+    let rstats = rs.stats_json();
+    let rstore = rstats.get("store").expect("resident STATS carry store.*");
+    assert_eq!(rstore.get("kind").and_then(|v| v.as_str()), Some("resident"));
+    assert_eq!(rstore.get("bytes_read").and_then(|v| v.as_u64()), Some(0));
+
+    // Prometheus: every store family is present, bytes-read is live
+    let text = ps.metrics_registry().render();
+    for family in amsearch::obs::prom::STORE_FAMILIES {
+        assert!(text.contains(family), "exposition missing {family}:\n{text}");
+    }
+    assert!(
+        text.contains("amsearch_store_bytes_read_total{role=\"search\"}"),
+        "{text}"
+    );
+
+    // EXPLAIN: the store section reports per-request deltas
+    let explain = ps.explain(wl.queries.get(0).to_vec(), 8, 1, false).unwrap();
+    let estore = explain.get("store").expect("explain carries store.*");
+    assert_eq!(estore.get("kind").and_then(|v| v.as_str()), Some("paged"));
+    assert!(estore.get("bytes_read").and_then(|v| v.as_f64()).is_some());
+
+    rs.shutdown();
+    ps.shutdown();
+    cleanup(&path);
+}
+
+#[test]
+fn corrupted_data_file_fails_requests_loudly() {
+    let (path, _resident, paged, wl) = saved_pair(72, "corrupt");
+    // flip the first payload byte (offset 4096, past the checked
+    // header/table) after open: the per-extent checksum must catch it
+    // on first fetch
+    let data = persist::data_path(&path);
+    let mut bytes = std::fs::read(&data).unwrap();
+    bytes[4096] ^= 0xFF;
+    std::fs::write(&data, &bytes).unwrap();
+
+    let ps = server(paged);
+    // a full poll touches every class, so some request must hit the
+    // poisoned extent and the server must fail it, not return a partial
+    // answer
+    let mut failed = None;
+    for qi in 0..8 {
+        if let Err(e) = ps.search(wl.queries.get(qi).to_vec(), 8, 1) {
+            failed = Some(e.to_string());
+            break;
+        }
+    }
+    let msg = failed.expect("corruption must surface as a failed request");
+    assert!(
+        msg.contains("vector store failed"),
+        "unexpected error message: {msg}"
+    );
+    ps.shutdown();
+    cleanup(&path);
+}
+
+#[test]
+fn factory_store_options_select_the_layout() {
+    let (path, _resident, _paged, wl) = saved_pair(73, "factory");
+    let opts = StoreOptions { mode: StoreMode::Paged, cache_bytes: 1 << 20 };
+    let factory =
+        EngineFactory::from_index_file_with_store(&path, Backend::Native, None, &opts)
+            .unwrap();
+    assert!(factory.index.is_paged());
+    let ps = Arc::new(SearchServer::start(factory, CoordinatorConfig::default()).unwrap());
+    let resp = ps.search(wl.queries.get(0).to_vec(), 8, 1).unwrap();
+    assert_eq!(resp.neighbor(), Some(wl.ground_truth[0]));
+    ps.shutdown();
+
+    let opts = StoreOptions { mode: StoreMode::Resident, cache_bytes: 0 };
+    let factory =
+        EngineFactory::from_index_file_with_store(&path, Backend::Native, None, &opts)
+            .unwrap();
+    assert!(!factory.index.is_paged());
+    cleanup(&path);
+}

@@ -1,0 +1,42 @@
+// amlint fixture: rule 6 (storage-I/O hygiene). Not compiled — read as
+// data by tests/fixtures.rs with `in_store = true` (a `store/` file);
+// expected findings come from the `amlint-fixture: expect` markers.
+
+pub fn map_the_file(file: &File) -> Mmap { // amlint-fixture: expect store_io
+    MmapOptions::new().map(file) // amlint-fixture: expect store_io
+}
+
+pub fn patch_in_place(p: *mut f32) {
+    // SAFETY: a justification does not excuse unsafe inside store/
+    unsafe { *p = 1.0 } // amlint-fixture: expect store_io
+}
+
+pub fn fire_and_forget(file: &File, buf: &mut [u8], off: u64) {
+    let _ = file.read_exact_at(buf, off); // amlint-fixture: expect store_io
+}
+
+pub fn flush_best_effort(mut out: BufWriter<File>) {
+    let _ = out.flush(); // amlint-fixture: expect store_io
+}
+
+pub fn multi_line_discard(file: &File) {
+    let _ = file // amlint-fixture: expect store_io
+        .sync_all();
+}
+
+pub fn bound_result_is_fine(file: &File, buf: &mut [u8]) -> io::Result<usize> {
+    file.read_exact_at(buf, 0)?;
+    file.read(buf)
+}
+
+pub fn non_io_discard_is_fine(handle: JoinHandle<()>) {
+    let _ = handle.join();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let _ = file.read_exact(&mut buf);
+    }
+}

@@ -1,0 +1,32 @@
+// amlint fixture: rule 6's escape hatch and the patterns it must not
+// flag. Linted as a `store/` file (`in_store = true`) and must come
+// back clean.
+
+pub fn checked_pread(file: &File, buf: &mut [u8], off: u64) -> io::Result<()> {
+    file.read_exact_at(buf, off)
+}
+
+pub fn durable_write(file: &File, bytes: &[u8]) -> io::Result<()> {
+    file.write_all(bytes)?;
+    file.sync_all()
+}
+
+pub fn best_effort_reply(mut s: TcpStream, frame: &[u8]) {
+    // amlint: allow(store_io, reason = "error reply to a dying peer is best-effort")
+    let _ = s.write_all(frame);
+}
+
+pub fn documented_exception(file: &File) {
+    // amlint: allow(store_io, reason = "fixture: annotated mmap escape hatch")
+    let _m = MmapOptions::new().map(file);
+}
+
+pub fn lookalikes_pass(s: &str) -> bool {
+    // `mmap` in a comment or string literal is data, not code
+    s == "mmap"
+}
+
+pub fn non_io_discards(handle: JoinHandle<()>, stream: &TcpStream) {
+    let _ = handle.join();
+    let _ = stream.set_nodelay(true);
+}

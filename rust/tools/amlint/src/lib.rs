@@ -1,5 +1,5 @@
 //! `amlint` — repo-specific static analysis for the `amsearch` serving
-//! stack.  Four rule classes (see [`rules`] and [`drift`]):
+//! stack.  Six rule classes (see [`rules`] and [`drift`]):
 //!
 //! 1. panic-freedom in the serving path (`panic`),
 //! 2. lock discipline against a declared mutex registry (`lock_order`,
@@ -9,7 +9,9 @@
 //! 4. `// SAFETY:` comments on every `unsafe` (`safety`),
 //! 5. SIMD containment: raw intrinsics only inside
 //!    `rust/src/search/kernels/`, `#[target_feature]` fns `unsafe` with
-//!    a `// SAFETY:` naming the runtime check (`simd`).
+//!    a `// SAFETY:` naming the runtime check (`simd`),
+//! 6. storage-I/O hygiene: no mmap in serving code, no `unsafe` inside
+//!    `store/`, no `let _ =` discards of `io::Result` (`store_io`).
 //!
 //! Zero dependencies, like the rest of the workspace: a hand-rolled
 //! lexer ([`lexer`]) feeds a token-level rule engine.  Findings are
@@ -29,8 +31,8 @@ pub use rules::Finding;
 /// Top-level `rust/src` directories where the panic rule applies (the
 /// serving path: a panicking handler thread breaks the
 /// exactly-one-response guarantee and poisons shared mutexes).
-pub const PANIC_DIRS: [&str; 7] =
-    ["net", "coordinator", "cluster", "search", "index", "quant", "obs"];
+pub const PANIC_DIRS: [&str; 8] =
+    ["net", "coordinator", "cluster", "search", "index", "quant", "obs", "store"];
 
 /// The declared mutex registries: for each file, its mutexes in
 /// acquisition order.  A mutex may only be taken while holding mutexes
@@ -105,6 +107,7 @@ pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
         let top = rel_str.split('/').next().unwrap_or("");
         if PANIC_DIRS.contains(&top) {
             rules::rule_panic(&display, &toks, &mut findings);
+            rules::rule_store_io(&display, &toks, top == "store", &mut findings);
         }
         rules::rule_safety(&display, &toks, &mut findings);
         let in_kernels = rel_str.starts_with("search/kernels/");

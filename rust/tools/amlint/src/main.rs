@@ -16,7 +16,7 @@ fn main() -> ExitCode {
                     "amlint: repo-specific static analysis for amsearch\n\
                      usage: amlint [--root <repo-root>]\n\
                      rules: panic, lock_order, lock_blocking, lock_registry, \
-                     safety, simd, drift\n\
+                     safety, simd, store_io, drift\n\
                      suppress per-site with: // amlint: allow(<rule>, reason = \"...\")"
                 );
                 return ExitCode::SUCCESS;

@@ -1,5 +1,5 @@
-//! The four repo-specific rule classes, implemented over the token
-//! stream from [`crate::lexer`]:
+//! The repo-specific rule classes, implemented over the token stream
+//! from [`crate::lexer`]:
 //!
 //! 1. `panic` — no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/
 //!    `unimplemented!` outside `#[cfg(test)]` code in serving-path
@@ -14,6 +14,11 @@
 //! 5. `simd` — raw `std::arch` intrinsics stay inside
 //!    `rust/src/search/kernels/`, and every `#[target_feature]` fn is
 //!    `unsafe` with a `// SAFETY:` comment naming the runtime check.
+//! 6. `store_io` — storage-I/O hygiene on the serving path: no
+//!    memory-mapped I/O anywhere (paging goes through the checked
+//!    `pread` reader), no `unsafe` at all inside `store/`, and no
+//!    `let _ =` discards of `io::Result`-returning read/write/flush
+//!    calls.
 //!
 //! The lock rules are intra-procedural and textual: a guard is tracked
 //! from its acquisition token to the end of its enclosing block (`let` /
@@ -53,7 +58,7 @@ pub struct Finding {
     /// 1-based line.
     pub line: usize,
     /// Rule name (`panic`, `lock_order`, `lock_blocking`,
-    /// `lock_registry`, `safety`, `drift`).
+    /// `lock_registry`, `safety`, `simd`, `store_io`, `drift`).
     pub rule: &'static str,
     /// Human-readable description.
     pub message: String,
@@ -493,6 +498,135 @@ pub fn rule_simd(file: &str, toks: &[Tok], in_kernels: bool, out: &mut Vec<Findi
                         "`#[target_feature]` needs a `// SAFETY:` comment directly \
                          above naming the `{}` runtime check its callers perform",
                         features.join("`, `")
+                    ),
+                });
+            }
+        }
+        ci = j;
+    }
+}
+
+/// I/O methods whose `io::Result` must not be silently discarded on
+/// the serving path.  `let _ = stream.write_all(..)` defeats rustc's
+/// `#[must_use]` on `Result`; this rule closes that loophole (a bare
+/// `stream.write_all(..);` statement is already an `unused_must_use`
+/// error under the workspace's `-D warnings` CI).
+const IO_CALLS: [&str; 10] = [
+    "write_all",
+    "write",
+    "flush",
+    "read",
+    "read_exact",
+    "read_to_end",
+    "read_exact_at",
+    "read_at",
+    "sync_all",
+    "sync_data",
+];
+
+/// Identifiers that mark memory-mapped I/O (libc `mmap`, the memmap
+/// crates).  The paged store deliberately reads with checked `pread`
+/// calls instead: a memory-mapped file truncated underneath the
+/// process turns every later page fault into SIGBUS, which no Rust
+/// error path can catch.
+const MMAP_IDENTS: [&str; 7] =
+    ["mmap", "mmap64", "munmap", "Mmap", "MmapMut", "MmapOptions", "memmap2"];
+
+/// Rule 6: storage-I/O hygiene on the serving path.  Three checks:
+/// memory-mapped I/O is forbidden in serving code (paging goes through
+/// the checked `pread` reader in `store/paged.rs`); the `store/` tree
+/// itself must stay free of `unsafe` (its whole value is that paging
+/// needs none); and `let _ =` must not discard the `io::Result` of a
+/// read/write/flush call — that pattern turns torn writes and short
+/// reads into silent corruption.  Test regions are exempt; sites are
+/// excused with `// amlint: allow(store_io, reason = "...")`.
+pub fn rule_store_io(file: &str, toks: &[Tok], in_store: bool, out: &mut Vec<Finding>) {
+    let code = code_indices(toks);
+    let regions = test_regions(toks, &code);
+    let allowed = allowed_lines(toks, "store_io");
+    let t = |ci: usize| -> &Tok { &toks[code[ci]] };
+
+    for ci in 0..code.len() {
+        let tok = t(ci);
+        if tok.kind != Kind::Ident
+            || in_regions(ci, &regions)
+            || allowed.contains(&tok.line)
+        {
+            continue;
+        }
+        let name = tok.text.as_str();
+        if in_store && name == "unsafe" {
+            out.push(Finding {
+                file: file.to_string(),
+                line: tok.line,
+                rule: "store_io",
+                message: "`unsafe` inside `store/` — the paged reader is pure \
+                          safe `pread` code by design; move unsafe elsewhere or \
+                          tag `// amlint: allow(store_io, reason = \"...\")`"
+                    .to_string(),
+            });
+        } else if MMAP_IDENTS.contains(&name) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: tok.line,
+                rule: "store_io",
+                message: format!(
+                    "memory-mapped I/O (`{name}`) in the serving path — paging \
+                     goes through the checked `pread` reader in \
+                     `store/paged.rs`, or tag \
+                     `// amlint: allow(store_io, reason = \"...\")`"
+                ),
+            });
+        }
+    }
+
+    // `let _ = <expr containing an io call>;` — walk each discard
+    // statement to its terminating `;` and look for `.call(` receivers
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let is_discard = t(ci).text == "let"
+            && ci + 2 < code.len()
+            && t(ci + 1).text == "_"
+            && t(ci + 2).text == "=";
+        if !is_discard {
+            ci += 1;
+            continue;
+        }
+        let stmt_line = t(ci).line;
+        let exempt = in_regions(ci, &regions) || allowed.contains(&stmt_line);
+        let mut depth = 0isize;
+        let mut j = ci + 3;
+        let mut io_hit: Option<String> = None;
+        while j < code.len() {
+            let tj = t(j);
+            match tj.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                ";" if depth <= 0 => break,
+                _ => {}
+            }
+            if io_hit.is_none()
+                && tj.kind == Kind::Ident
+                && IO_CALLS.contains(&tj.text.as_str())
+                && j > 0
+                && t(j - 1).text == "."
+                && j + 1 < code.len()
+                && t(j + 1).text == "("
+            {
+                io_hit = Some(tj.text.clone());
+            }
+            j += 1;
+        }
+        if let Some(call) = io_hit {
+            if !exempt {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: stmt_line,
+                    rule: "store_io",
+                    message: format!(
+                        "`let _ =` discards the `io::Result` of `.{call}()` — \
+                         handle or propagate it, or tag \
+                         `// amlint: allow(store_io, reason = \"...\")`"
                     ),
                 });
             }
@@ -966,6 +1100,80 @@ mod tests {
         let mut out = Vec::new();
         rule_safety("f.rs", &lex(src), &mut out);
         assert!(out.is_empty(), "{out:?}");
+    }
+
+    fn store_io(src: &str, in_store: bool) -> Vec<Finding> {
+        let mut out = Vec::new();
+        rule_store_io("f.rs", &lex(src), in_store, &mut out);
+        out
+    }
+
+    #[test]
+    fn io_result_discard_flagged_and_allowable() {
+        let src = r#"
+            fn f(mut s: TcpStream) {
+                let _ = s.write_all(&bytes);
+            }
+        "#;
+        let found = store_io(src, false);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "store_io");
+        assert_eq!(found[0].line, 3);
+        assert!(found[0].message.contains("write_all"));
+        let annotated = r#"
+            fn f(mut s: TcpStream) {
+                // amlint: allow(store_io, reason = "best-effort error reply")
+                let _ = s.write_all(&bytes);
+            }
+        "#;
+        assert!(store_io(annotated, false).is_empty());
+    }
+
+    #[test]
+    fn bound_and_propagated_io_pass() {
+        let src = r#"
+            fn f(file: &File, buf: &mut [u8]) -> io::Result<usize> {
+                file.read_exact_at(buf, 0)?;
+                let n = file.read(buf)?;
+                let _ = handle.join();
+                Ok(n)
+            }
+        "#;
+        assert!(store_io(src, false).is_empty());
+        assert!(store_io(src, true).is_empty());
+    }
+
+    #[test]
+    fn io_discard_in_test_code_passes() {
+        let src = r#"
+            #[cfg(test)]
+            mod tests {
+                fn g(mut s: TcpStream) { let _ = s.flush(); }
+            }
+        "#;
+        assert!(store_io(src, false).is_empty());
+    }
+
+    #[test]
+    fn mmap_idents_flagged_in_and_out_of_store() {
+        let src = "fn f() { let m = MmapOptions::new(); }";
+        for in_store in [false, true] {
+            let found = store_io(src, in_store);
+            assert_eq!(found.len(), 1, "{found:?}");
+            assert!(found[0].message.contains("memory-mapped"));
+        }
+        // `mmap` in a comment or string literal is fine
+        let ok = "// mmap would SIGBUS here\nfn f(s: &str) { g(\"mmap\"); }";
+        assert!(store_io(ok, true).is_empty());
+    }
+
+    #[test]
+    fn unsafe_forbidden_inside_store_only() {
+        let src = "// SAFETY: aligned\nfn f(p: *mut f32) { unsafe { *p = 1.0; } }";
+        assert!(store_io(src, false).is_empty());
+        let found = store_io(src, true);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert!(found[0].message.contains("`unsafe` inside `store/`"));
     }
 
     #[test]

@@ -82,6 +82,30 @@ fn good_fixtures_pass_byte_for_byte() {
 }
 
 #[test]
+fn bad_store_io_fixture_flags_exactly_the_marked_lines() {
+    // linted as a `store/` file: the unsafe-in-store check is active
+    let src = fixture("bad/store_io.rs");
+    let toks = lexer::lex(&src);
+    let mut findings = Vec::new();
+    rules::rule_store_io("store/paged.rs", &toks, true, &mut findings);
+    let mut got: Vec<(usize, String)> =
+        findings.into_iter().map(|f| (f.line, f.rule.to_string())).collect();
+    got.sort();
+    assert_eq!(got, expectations(&src));
+}
+
+#[test]
+fn good_store_io_fixture_passes_in_and_out_of_store() {
+    let src = fixture("good/store_io.rs");
+    let toks = lexer::lex(&src);
+    for in_store in [true, false] {
+        let mut findings = Vec::new();
+        rules::rule_store_io("fixture.rs", &toks, in_store, &mut findings);
+        assert!(findings.is_empty(), "in_store={in_store}: {findings:?}");
+    }
+}
+
+#[test]
 fn kernel_simd_fixture_clean_inside_kernels_dir_only() {
     let src = fixture("good/kernels_simd.rs");
     let toks = lexer::lex(&src);
